@@ -1,0 +1,43 @@
+//! Fig. 14: end-to-end decoding throughput (tokens/s), 1024-token prompt +
+//! 128 generated, batch 1, every framework x model x SoC.
+use tman::bench::{banner, Table};
+use tman::coordinator::perf;
+use tman::kernels::baselines::Framework;
+use tman::model::config::EvalModel;
+use tman::npu::config::SocConfig;
+use tman::quant::formats::QuantFormat;
+
+fn main() {
+    for soc in [SocConfig::oneplus12(), SocConfig::oneplus13t()] {
+        banner(&format!("Fig. 14 — decoding throughput (tok/s) on {}", soc.name));
+        let mut t = Table::new(&["model", "T-MAN W4", "T-MAN W2", "QNN", "llm.npu", "llama.cpp", "T-MAC", "bitnet.cpp"]);
+        for model in EvalModel::all() {
+            let (f4, f2) = if model == EvalModel::BitNet2B {
+                (QuantFormat::bitnet(), QuantFormat::bitnet())
+            } else {
+                (QuantFormat::tman_w4a16(), QuantFormat::tman_w2a16())
+            };
+            let cell = |fw: Framework, fmt| {
+                if !perf::fits_in_dram(&soc, fw, model, fmt) {
+                    "OOM".to_string()
+                } else {
+                    format!("{:.1}", perf::decode_tokens_per_s(&soc, fw, model, fmt))
+                }
+            };
+            let bn = if model == EvalModel::BitNet2B { cell(Framework::BitnetCpp, f4) } else { "-".into() };
+            t.row(&[
+                model.name().into(),
+                cell(Framework::TMan, f4),
+                cell(Framework::TMan, f2),
+                cell(Framework::Qnn, f4),
+                cell(Framework::LlmNpu, f4),
+                cell(Framework::LlamaCpp, f4),
+                cell(Framework::TMac, f4),
+                bn,
+            ]);
+        }
+        t.print();
+    }
+    println!("\npaper Fig. 14 checks: T-MAN 1.5-1.8x over QNN, 3.1-3.8x over llm.npu;");
+    println!("BitNet-2B ~49 tok/s on SD8 Gen 3; llm.npu OOM for 8B on the 12 GB OnePlus 13T.");
+}

@@ -1,0 +1,40 @@
+//! Fig. 15: end-to-end prefill throughput (tokens/s), 1024-token prompt in
+//! 128-token chunks, every framework x model x SoC.
+use tman::bench::{banner, Table};
+use tman::coordinator::perf;
+use tman::kernels::baselines::Framework;
+use tman::model::config::EvalModel;
+use tman::npu::config::SocConfig;
+use tman::quant::formats::QuantFormat;
+
+fn main() {
+    for soc in [SocConfig::oneplus12(), SocConfig::oneplus13t()] {
+        banner(&format!("Fig. 15 — prefill throughput (tok/s) on {}", soc.name));
+        let mut t = Table::new(&["model", "T-MAN W4", "T-MAN W2", "QNN", "llm.npu", "llama.cpp"]);
+        for model in EvalModel::all() {
+            let (f4, f2) = if model == EvalModel::BitNet2B {
+                (QuantFormat::bitnet(), QuantFormat::bitnet())
+            } else {
+                (QuantFormat::tman_w4afp16(), QuantFormat::tman_w2afp16())
+            };
+            let cell = |fw: Framework, fmt| {
+                if !perf::fits_in_dram(&soc, fw, model, fmt) {
+                    "OOM".to_string()
+                } else {
+                    format!("{:.0}", perf::prefill_tokens_per_s(&soc, fw, model, fmt))
+                }
+            };
+            t.row(&[
+                model.name().into(),
+                cell(Framework::TMan, f4),
+                cell(Framework::TMan, f2),
+                cell(Framework::Qnn, f4),
+                cell(Framework::LlmNpu, f4),
+                cell(Framework::LlamaCpp, f4),
+            ]);
+        }
+        t.print();
+    }
+    println!("\npaper Fig. 15 checks: T-MAN up to 1.4x over llm.npu; T-MAN-W2 ~ QNN-FP16 on BitNet;");
+    println!("up to 15x over CPU frameworks.");
+}

@@ -1,0 +1,29 @@
+//! Fig. 5: latency breakdown of a W4A16 mpGEMV (4096x4096x1) on NPU
+//! (naive ConvertDQ dequantization) vs CPU — MEM / DQ / CMP segments.
+//! The motivating observation: the NPU loses to the CPU because its
+//! scalar-float dequantization is ~10x slower.
+use tman::bench::{banner, Table};
+use tman::kernels::baselines;
+use tman::kernels::dequant_gemm::{num_tiles_shape, tile_cost_shape, DequantStrategy};
+use tman::kernels::tiling;
+use tman::npu::config::SocConfig;
+use tman::quant::formats::QuantFormat;
+
+fn main() {
+    let soc = SocConfig::oneplus12();
+    let fmt = QuantFormat::tman_w4a16();
+    let (m, k) = (4096, 4096);
+    banner("Fig. 5 — mpGEMV 4096x4096x1 W4A16 latency breakdown (us)");
+
+    let til = tiling::search(&soc.npu, fmt, m, k, 1);
+    let tile = tile_cost_shape(&soc.npu, &til, 1, m, k, fmt, DequantStrategy::ConvertDq, soc.npu.hvx_contexts);
+    let tiles = num_tiles_shape(&til, m, k) as f64;
+    let npu = tile.scaled(tiles);
+    let cpu = baselines::cpu_dequant_gemv(&soc, m, k, fmt);
+
+    let mut t = Table::new(&["target", "MEM", "DQ", "CMP", "total"]);
+    t.row(&["NPU (naive dequant)".into(), format!("{:.0}", npu.mem_us), format!("{:.0}", npu.dq_us), format!("{:.0}", npu.cmp_us), format!("{:.0}", npu.sequential_us())]);
+    t.row(&["CPU (llama.cpp-style)".into(), format!("{:.0}", cpu.mem_us), format!("{:.0}", cpu.dq_us), format!("{:.0}", cpu.cmp_us), format!("{:.0}", cpu.sequential_us())]);
+    t.print();
+    println!("\nNPU/CPU ratio: {:.1}x (paper: 3.8x slower on NPU; DQ dominates)", npu.sequential_us() / cpu.sequential_us());
+}

@@ -1,0 +1,24 @@
+//! Table 1: VLUT16 vs VLUT32 throughput (CPI, lookups/instr, equiv. MADDs).
+//! Paper: VLUT16 wins at both activation widths -> T-MAN uses VLUT16.
+use tman::bench::{banner, Table};
+use tman::npu::config::NpuConfig;
+use tman::npu::hvx;
+
+fn main() {
+    let cfg = NpuConfig::sd8gen3();
+    banner("Table 1 — VLUT16 vs VLUT32 throughput");
+    let mut t = Table::new(&["variant", "act bits", "CPI", "# look-ups", "# equiv. MADDs", "G-MADD/s/core"]);
+    for row in hvx::table1(&cfg) {
+        t.row(&[
+            format!("{:?}", row.variant),
+            row.act_bits.to_string(),
+            format!("{:.1}", row.cpi),
+            row.lookups.to_string(),
+            row.equiv_madds.to_string(),
+            format!("{:.0}", row.variant.gmadds_per_core(&cfg, row.act_bits)),
+        ]);
+    }
+    t.print();
+    println!("\npaper Table 1: VLUT16 = (8b: 256/1024, 16b: 128/512); VLUT32 = (8b: 128/640, 16b: 64/320), CPI 0.5");
+    println!("selection: VLUT16 (higher equiv-MADD throughput at both widths)");
+}

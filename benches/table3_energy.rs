@@ -1,0 +1,33 @@
+//! Table 3: power and energy per token, BitNet-2B on Snapdragon 8 Gen 3,
+//! per framework and phase.
+use tman::bench::{banner, Table};
+use tman::coordinator::perf;
+use tman::kernels::baselines::{Framework, Phase};
+use tman::model::config::EvalModel;
+use tman::npu::config::SocConfig;
+use tman::quant::formats::QuantFormat;
+
+fn main() {
+    let soc = SocConfig::oneplus12();
+    let model = EvalModel::BitNet2B;
+    let fmt = QuantFormat::bitnet();
+    banner("Table 3 — power & energy, BitNet-2B on SD8 Gen 3");
+    let mut t = Table::new(&["framework", "prefill P (W)", "prefill J/tok", "decode P (W)", "decode J/tok"]);
+    for fw in [Framework::Qnn, Framework::LlmNpu, Framework::BitnetCpp, Framework::TMan] {
+        t.row(&[
+            fw.name().into(),
+            format!("{:.2}", perf::phase_power_w(&soc, fw, Phase::Prefill)),
+            format!("{:.4}", perf::energy_j_per_token(&soc, fw, model, fmt, Phase::Prefill)),
+            format!("{:.2}", perf::phase_power_w(&soc, fw, Phase::Decode)),
+            format!("{:.4}", perf::energy_j_per_token(&soc, fw, model, fmt, Phase::Decode)),
+        ]);
+    }
+    t.print();
+    let e = |fw, ph| perf::energy_j_per_token(&soc, fw, model, fmt, ph);
+    println!("\nsavings checks (paper §6.4):");
+    println!("  vs llm.npu decode: {:.0}% (paper: 84%)", 100.0 * (1.0 - e(Framework::TMan, Phase::Decode) / e(Framework::LlmNpu, Phase::Decode)));
+    println!("  vs bitnet.cpp decode: {:.1}x (paper: 4.9x)", e(Framework::BitnetCpp, Phase::Decode) / e(Framework::TMan, Phase::Decode));
+    println!("  vs QNN decode: {:.0}% (paper: 25%)", 100.0 * (1.0 - e(Framework::TMan, Phase::Decode) / e(Framework::Qnn, Phase::Decode)));
+    println!("  paper Table 3: QNN 4.96/0.0073 + 4.72/0.134; llm.npu 8.89/0.0269 + 8.31/0.612;");
+    println!("                 bitnet.cpp 8.22/0.196 + 8.22/0.490; T-MAN 5.01/0.0080 + 4.91/0.101");
+}

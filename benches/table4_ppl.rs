@@ -1,0 +1,61 @@
+//! Table 4: WikiText2-perplexity analogue — per-block vs per-channel
+//! quantization of the trained small model (plus the outlier-structured
+//! variant that carries the 8B-scale mechanism; see DESIGN.md §1).
+use tman::bench::{banner, Table};
+use tman::model::config::ModelConfig;
+use tman::model::{corpus, ppl, weights};
+use tman::quant::formats::{Granularity, WeightDtype};
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    let (model, trained) = weights::load_or_random(dir, &ModelConfig::small(), 7);
+    if !trained {
+        println!("[table4] artifacts/model.tmw missing — run `make artifacts`; using random weights");
+    }
+    let (_, valid) = corpus::split(0.1);
+    let windows = corpus::eval_windows(&valid, 128, 4);
+    let frac: f64 = std::env::var("TMAN_OUTLIER_FRAC").ok().and_then(|s| s.parse().ok()).unwrap_or(0.06);
+    let factor: f32 = std::env::var("TMAN_OUTLIER_FACTOR").ok().and_then(|s| s.parse().ok()).unwrap_or(12.0);
+    let outlier = weights::induce_outlier_channels(&model, frac, factor, 3);
+
+    banner("Table 4 — perplexity (held-out corpus)");
+    let mut t = Table::new(&["weights", "framework", "configuration", "PPL"]);
+    let quant_ppl = |m: &tman::model::transformer::Transformer, dt, gr| {
+        ppl::perplexity(&m.quantized(dt, gr, false), &windows)
+    };
+    // As-trained weights.
+    let fp = ppl::perplexity(&model, &windows);
+    let blk4 = quant_ppl(&model, WeightDtype::Int4, Granularity::PerBlock(64));
+    let blk2 = quant_ppl(&model, WeightDtype::Int2, Granularity::PerBlock(64));
+    let ch4 = quant_ppl(&model, WeightDtype::Int4, Granularity::PerChannel);
+    let ch2 = quant_ppl(&model, WeightDtype::Int2, Granularity::PerChannel);
+    t.row(&["as-trained".into(), "-".into(), "FP32".into(), format!("{fp:.2}")]);
+    t.row(&["as-trained".into(), "T-MAN".into(), "W_INT4 per-block(64)".into(), format!("{blk4:.2}")]);
+    t.row(&["as-trained".into(), "T-MAN".into(), "W_INT2 per-block(64)".into(), format!("{blk2:.2}")]);
+    t.row(&["as-trained".into(), "QNN".into(), "W_INT4 per-channel".into(), format!("{ch4:.2}")]);
+    t.row(&["as-trained".into(), "QNN(hyp)".into(), "W_INT2 per-channel".into(), format!("{ch2:.2}")]);
+    // Outlier-structured (function-identical) weights — the 8B mechanism.
+    let fp_o = ppl::perplexity(&outlier, &windows);
+    let blk4_o = quant_ppl(&outlier, WeightDtype::Int4, Granularity::PerBlock(64));
+    let ch4_o = quant_ppl(&outlier, WeightDtype::Int4, Granularity::PerChannel);
+    let blk2_o = quant_ppl(&outlier, WeightDtype::Int2, Granularity::PerBlock(64));
+    t.row(&["outlier-structured".into(), "-".into(), "FP32 (identical fn)".into(), format!("{fp_o:.2}")]);
+    t.row(&["outlier-structured".into(), "T-MAN".into(), "W_INT4 per-block(64)".into(), format!("{blk4_o:.2}")]);
+    t.row(&["outlier-structured".into(), "T-MAN".into(), "W_INT2 per-block(64)".into(), format!("{blk2_o:.2}")]);
+    t.row(&["outlier-structured".into(), "QNN".into(), "W_INT4 per-channel".into(), format!("{ch4_o:.2}")]);
+    t.print();
+
+    println!("\npaper Table 4 (WikiText2, 8B models): QNN-W4ch 18.62/25.37; T-MAN-W2blk 12.81/13.14");
+    println!("\nclaims:");
+    println!(
+        "  [1] per-channel penalty at equal width (paper §3: 1.45x): W2 {:.2}x as-trained, W4 {:.2}x under outliers — {}",
+        ch2 / blk2,
+        ch4_o / blk4_o,
+        if ch2 > blk2 && ch4_o > blk4_o { "REPRODUCED" } else { "NOT reproduced" }
+    );
+    println!(
+        "  [2] cross-width (per-block W2 {blk2_o:.2} < per-channel W4 {ch4_o:.2}): {} — the 4-level budget",
+        if blk2_o < ch4_o { "REPRODUCED" } else { "NOT reproduced at 3M scale" }
+    );
+    println!("      dominates for a 3M model; the paper's crossing needs 8B-scale redundancy + calibrated GPTQ.");
+}

@@ -1,0 +1,85 @@
+//! Accuracy report: perplexity of the trained small model under every
+//! quantization configuration — the Table 4 experiment (per-block W2 beats
+//! per-channel W4) plus a wider sweep.
+//!
+//! Run: `cargo run --release --example accuracy_report` (after `make artifacts`).
+
+use tman::bench::{banner, Table};
+use tman::model::config::ModelConfig;
+use tman::model::{corpus, ppl, weights};
+use tman::quant::formats::{Granularity, WeightDtype};
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    let (model, trained) = weights::load_or_random(dir, &ModelConfig::small(), 7);
+    if !trained {
+        eprintln!("WARNING: artifacts/model.tmw missing — using random weights (run `make artifacts`)");
+    }
+    let (_, valid) = corpus::split(0.1);
+    let windows = corpus::eval_windows(&valid, 128, 4);
+    println!("model: {} ({} params)", model.cfg.name, model.cfg.param_count());
+    println!("eval: {} windows x 128 tokens of held-out corpus", windows.len());
+
+    banner("Table 4 — perplexity by quantization configuration");
+    let mut t = Table::new(&["configuration", "framework analogue", "PPL"]);
+    let fp = ppl::perplexity(&model, &windows);
+    t.row(&["FP32 (master)".into(), "-".into(), format!("{fp:.2}")]);
+    let cases: Vec<(&str, &str, WeightDtype, Granularity, bool)> = vec![
+        ("W_INT4 per-block(64) rtn", "T-MAN", WeightDtype::Int4, Granularity::PerBlock(64), false),
+        ("W_INT4 per-block(64) gptq", "T-MAN", WeightDtype::Int4, Granularity::PerBlock(64), true),
+        ("W_INT2 per-block(64) rtn", "T-MAN", WeightDtype::Int2, Granularity::PerBlock(64), false),
+        ("W_INT2 per-block(64) gptq", "T-MAN", WeightDtype::Int2, Granularity::PerBlock(64), true),
+        ("W_INT4 per-channel", "QNN", WeightDtype::Int4, Granularity::PerChannel, false),
+        ("W_INT2 per-channel", "QNN(hyp)", WeightDtype::Int2, Granularity::PerChannel, false),
+        ("W_INT4 per-tensor", "llm.npu", WeightDtype::Int4, Granularity::PerTensor, false),
+    ];
+    let mut results = Vec::new();
+    for (name, fw, dtype, gran, gptq) in cases {
+        let q = model.quantized(dtype, gran, gptq);
+        let p = ppl::perplexity(&q, &windows);
+        results.push((name.to_string(), p));
+        t.row(&[name.into(), fw.into(), format!("{p:.2}")]);
+    }
+    t.print();
+
+    let blk2 = results.iter().find(|(n, _)| n.starts_with("W_INT2 per-block(64) rtn")).unwrap().1;
+    let ch4 = results.iter().find(|(n, _)| n.starts_with("W_INT4 per-channel")).unwrap().1;
+    println!(
+        "\n[as-trained weights] per-block W2 ({blk2:.2}) vs per-channel W4 ({ch4:.2}): {}",
+        if blk2 < ch4 { "per-block W2 wins" } else { "per-channel W4 wins (tiny model lacks outlier channels)" }
+    );
+
+    // The paper's models are 8B-class and have outlier weight channels that
+    // per-channel scales cannot capture. Install that structure by a
+    // function-identical rescaling (DESIGN.md §1) and rerun Table 4.
+    banner("Table 4 on outlier-structured weights (function-identical rescaling)");
+    let frac: f64 = std::env::var("TMAN_OUTLIER_FRAC").ok().and_then(|s| s.parse().ok()).unwrap_or(0.06);
+    let factor: f32 = std::env::var("TMAN_OUTLIER_FACTOR").ok().and_then(|s| s.parse().ok()).unwrap_or(12.0);
+    let outlier = weights::induce_outlier_channels(&model, frac, factor, 3);
+    let fp_o = ppl::perplexity(&outlier, &windows);
+    let mut t = Table::new(&["configuration", "framework analogue", "PPL"]);
+    t.row(&["FP32 (identical function)".into(), "-".into(), format!("{fp_o:.2}")]);
+    let mut res2 = Vec::new();
+    for (name, fw, dtype, gran) in [
+        ("W_INT4 per-block(64)", "T-MAN", WeightDtype::Int4, Granularity::PerBlock(64)),
+        ("W_INT2 per-block(64)", "T-MAN", WeightDtype::Int2, Granularity::PerBlock(64)),
+        ("W_INT4 per-channel", "QNN", WeightDtype::Int4, Granularity::PerChannel),
+    ] {
+        let q = outlier.quantized(dtype, gran, false);
+        let p = ppl::perplexity(&q, &windows);
+        res2.push((name, p));
+        t.row(&[name.into(), fw.into(), format!("{p:.2}")]);
+    }
+    t.print();
+    let blk2o = res2.iter().find(|(n, _)| *n == "W_INT2 per-block(64)").unwrap().1;
+    let blk4o = res2.iter().find(|(n, _)| *n == "W_INT4 per-block(64)").unwrap().1;
+    let ch4o = res2.iter().find(|(n, _)| *n == "W_INT4 per-channel").unwrap().1;
+    println!(
+        "\npaper's Table 4 claim — per-block W2 ({blk2o:.2}) vs per-channel W4 ({ch4o:.2}): {}",
+        if blk2o < ch4o { "REPRODUCED (lower is better)" } else { "NOT reproduced" }
+    );
+    println!(
+        "per-channel/per-block W4 PPL ratio: {:.2}x (paper: 1.45x worse for per-channel)",
+        ch4o / blk4o
+    );
+}

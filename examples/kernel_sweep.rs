@@ -1,0 +1,83 @@
+//! Kernel sweep: mpGEMV (decode) and mpGEMM (prefill) latency across the
+//! paper's model shapes, quantization formats, and frameworks — the
+//! interactive version of Figs. 12–13.
+//!
+//! Run: `cargo run --release --example kernel_sweep [oneplus13t]`
+
+use tman::bench::{banner, Table};
+use tman::kernels::baselines::{self, Framework};
+use tman::kernels::dequant_gemm::tman_gemm_latency_us;
+use tman::kernels::lut_gemv::tman_gemv_latency_us;
+use tman::model::config::EvalModel;
+use tman::npu::config::SocConfig;
+use tman::quant::formats::QuantFormat;
+
+fn gemv_us(soc: &SocConfig, fw: Framework, m: usize, k: usize, fmt: QuantFormat) -> f64 {
+    match fw {
+        Framework::TMan => tman_gemv_latency_us(&soc.npu, m, k, fmt),
+        Framework::LlamaCpp => baselines::cpu_dequant_gemv(soc, m, k, fmt).sequential_us(),
+        Framework::TMac => baselines::cpu_lut_gemv(soc, m, k, fmt).sequential_us(),
+        Framework::BitnetCpp => baselines::bitnet_cpu_gemv(soc, m, k).sequential_us(),
+        Framework::LlmNpu => baselines::llmnpu_gemv(soc, m, k).sequential_us(),
+        Framework::Qnn => {
+            baselines::qnn_latency_us(&baselines::qnn_gemv(soc, m, k, QuantFormat::qnn_w4a16()))
+        }
+    }
+}
+
+fn main() {
+    let soc = if std::env::args().any(|a| a == "oneplus13t") {
+        SocConfig::oneplus13t()
+    } else {
+        SocConfig::oneplus12()
+    };
+    println!("SoC: {}", soc.name);
+
+    for model in EvalModel::all() {
+        banner(&format!("{} — mpGEMV latency (us), decode shapes", model.name()));
+        let fmt = if model == EvalModel::BitNet2B {
+            QuantFormat::bitnet()
+        } else {
+            QuantFormat::tman_w4a16()
+        };
+        let fmt2 = QuantFormat::tman_w2a16();
+        let mut t = Table::new(&[
+            "shape (MxK)", "T-MAN W4", "T-MAN W2", "QNN W4ch", "llama.cpp", "T-MAC", "llm.npu",
+        ]);
+        for s in model.shapes() {
+            t.row(&[
+                format!("{}x{} ({})", s.m, s.k, s.name),
+                format!("{:.0}", gemv_us(&soc, Framework::TMan, s.m, s.k, fmt)),
+                format!("{:.0}", gemv_us(&soc, Framework::TMan, s.m, s.k, fmt2)),
+                format!("{:.0}", gemv_us(&soc, Framework::Qnn, s.m, s.k, fmt)),
+                format!("{:.0}", gemv_us(&soc, Framework::LlamaCpp, s.m, s.k, fmt)),
+                format!("{:.0}", gemv_us(&soc, Framework::TMac, s.m, s.k, fmt)),
+                format!("{:.0}", gemv_us(&soc, Framework::LlmNpu, s.m, s.k, fmt)),
+            ]);
+        }
+        t.print();
+
+        banner(&format!("{} — mpGEMM latency (us), prefill chunk N=128", model.name()));
+        let mut t = Table::new(&["shape (MxK)", "T-MAN W4", "QNN fp16", "llm.npu", "llama.cpp"]);
+        for s in model.shapes() {
+            let tman = tman_gemm_latency_us(&soc.npu, 128, s.m, s.k, QuantFormat::tman_w4afp16());
+            let qnn = baselines::qnn_latency_us(&baselines::qnn_gemm(
+                &soc,
+                128,
+                s.m,
+                s.k,
+                QuantFormat::qnn_fp16(),
+            ));
+            let llm = baselines::llmnpu_gemm(&soc, 128, s.m, s.k).sequential_us();
+            let cpu = baselines::cpu_gemm(&soc, 128, s.m, s.k, fmt).sequential_us();
+            t.row(&[
+                format!("{}x{} ({})", s.m, s.k, s.name),
+                format!("{tman:.0}"),
+                format!("{qnn:.0}"),
+                format!("{llm:.0}"),
+                format!("{cpu:.0}"),
+            ]);
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,31 @@
+//! Quickstart: load the AOT artifacts, run a prefill + a few decode steps,
+//! print the generated text and metrics.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+use tman::coordinator::engine::{Engine, GenerateOpts};
+use tman::npu::config::SocConfig;
+
+fn main() -> Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()),
+    );
+    println!("loading artifacts from {} ...", artifacts.display());
+    let mut engine = Engine::load(&artifacts, SocConfig::oneplus12())?;
+    println!(
+        "model: {} layers, d_model {}, W_INT{} per-block({})",
+        engine.runtime.meta.n_layers,
+        engine.runtime.meta.d_model,
+        engine.runtime.meta.bits,
+        engine.runtime.meta.block
+    );
+
+    let prompt = "The inference of a language model consists of";
+    let opts = GenerateOpts { max_new_tokens: 48, temperature: 0.0, ..Default::default() };
+    println!("prompt: {prompt:?}");
+    let (text, metrics) = engine.generate(prompt, &opts)?;
+    println!("output: {text:?}");
+    println!("{}", metrics.report());
+    Ok(())
+}

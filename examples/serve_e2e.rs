@@ -1,0 +1,74 @@
+//! End-to-end serving driver (the DESIGN.md end-to-end validation
+//! deliverable): load the small trained model through the PJRT artifacts,
+//! serve a batch of real requests (long prompt -> chunked prefill on the
+//! matrix path; generation on the LUT decode path), and report latency,
+//! throughput and simulated on-device energy. Also prints the simulated
+//! 8B-model comparison the paper's Figs. 14-15 make.
+//!
+//! Run: `cargo run --release --example serve_e2e` (after `make artifacts`).
+
+use tman::bench::{banner, Table};
+use tman::coordinator::engine::{Engine, GenerateOpts};
+use tman::coordinator::perf;
+use tman::kernels::baselines::{Framework, Phase};
+use tman::model::config::EvalModel;
+use tman::model::corpus;
+use tman::npu::config::SocConfig;
+use tman::quant::formats::QuantFormat;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let soc = SocConfig::oneplus12();
+    banner("serving the trained small model through the PJRT artifacts");
+    let mut engine = Engine::load(dir, soc.clone())?;
+    println!(
+        "model: {} layers, d_model {}, W_INT{} per-block({}), chunk {}",
+        engine.runtime.meta.n_layers,
+        engine.runtime.meta.d_model,
+        engine.runtime.meta.bits,
+        engine.runtime.meta.block,
+        engine.runtime.meta.chunk
+    );
+
+    // Long prompt from the corpus -> exercises chunked prefill (matrix path).
+    let text = corpus::TEXT;
+    let prompt = &text[..text.len().min(520)];
+    let requests = 3usize;
+    let mut agg_prefill_tps = 0.0;
+    let mut agg_decode_tps = 0.0;
+    for r in 0..requests {
+        let opts = GenerateOpts { max_new_tokens: 48, temperature: 0.7, seed: r as u64, ..Default::default() };
+        let (out, m) = engine.generate(prompt, &opts)?;
+        println!("\n[request {r}] generated: {:?}", &out[..out.len().min(72)]);
+        println!("{}", m.report());
+        agg_prefill_tps += m.wall_prefill_tps();
+        agg_decode_tps += m.wall_decode_tps();
+    }
+    println!(
+        "\nmean host throughput over {requests} requests: prefill {:.1} tok/s, decode {:.1} tok/s",
+        agg_prefill_tps / requests as f64,
+        agg_decode_tps / requests as f64
+    );
+
+    // The paper-scale projection: simulated 8B/2B end-to-end throughput.
+    banner("simulated on-device end-to-end (1024-token prompt + 128 generated), Fig. 14-15 view");
+    let mut t = Table::new(&["model", "framework", "prefill tok/s", "decode tok/s", "decode J/tok"]);
+    for model in EvalModel::all() {
+        let fmt = if model == EvalModel::BitNet2B { QuantFormat::bitnet() } else { QuantFormat::tman_w4a16() };
+        for fw in [Framework::TMan, Framework::Qnn, Framework::LlmNpu, Framework::LlamaCpp] {
+            if !perf::fits_in_dram(&soc, fw, model, fmt) {
+                t.row(&[model.name().into(), fw.name().into(), "OOM".into(), "OOM".into(), "-".into()]);
+                continue;
+            }
+            t.row(&[
+                model.name().into(),
+                fw.name().into(),
+                format!("{:.0}", perf::prefill_tokens_per_s(&soc, fw, model, fmt)),
+                format!("{:.1}", perf::decode_tokens_per_s(&soc, fw, model, fmt)),
+                format!("{:.3}", perf::energy_j_per_token(&soc, fw, model, fmt, Phase::Decode)),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

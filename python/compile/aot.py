@@ -1,0 +1,267 @@
+"""AOT lowering: quantize the trained model, lower the decode-step and
+prefill-chunk graphs (Pallas kernels inlined, interpret mode) to HLO TEXT,
+and dump the runtime parameter pack for the Rust coordinator.
+
+HLO *text* — NOT `lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()`
+— is the interchange format: jax >= 0.5 emits 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Outputs in artifacts/:
+  decode.hlo.txt    one decode step: (params..., cache_k, cache_v, token, pos)
+                    -> (logits, cache_k, cache_v)
+  prefill.hlo.txt   one 128-token chunk: (params..., cache_k, cache_v,
+                    tokens, pos_base) -> (logits_last, cache_k, cache_v)
+  params.bin        flat little-endian concatenation of all parameter arrays
+  meta.json         parameter order/shapes/dtypes + model config + seq sizes
+
+Usage: python -m compile.aot [--bits 4] [--block 64] [--seq 1280] [--chunk 128]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import struct
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import quantize
+from compile.model import decode_step, make_cfg, prefill_chunk
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def load_tmw(path: Path):
+    """Read the shared .tmw fp32 weight format (see rust weights.rs)."""
+    raw = path.read_bytes()
+    assert raw[:4] == b"TMW1", "bad magic"
+    vocab, d, nl, nh, nkv, dff = struct.unpack_from("<6I", raw, 4)
+    off = 4 + 24
+    dkv = nkv * (d // nh)
+
+    def take(*shape):
+        nonlocal off
+        n = int(np.prod(shape))
+        a = np.frombuffer(raw, dtype="<f4", count=n, offset=off).reshape(shape).copy()
+        off += n * 4
+        return a
+
+    embed = take(vocab, d)
+    layers = []
+    for _ in range(nl):
+        layers.append(
+            dict(
+                attn_norm=take(d),
+                wq=take(d, d),
+                wk=take(dkv, d),
+                wv=take(dkv, d),
+                wo=take(d, d),
+                mlp_norm=take(d),
+                w_gate=take(dff, d),
+                w_up=take(dff, d),
+                w_down=take(d, dff),
+            )
+        )
+    final_norm = take(d)
+    lm_head = take(vocab, d)
+    assert off == len(raw), f"trailing bytes: {len(raw) - off}"
+    cfg = make_cfg(vocab=vocab, d_model=d, n_layers=nl, n_heads=nh, n_kv_heads=nkv, d_ff=dff)
+    return dict(embed=embed, layers=layers, final_norm=final_norm, lm_head=lm_head), cfg
+
+
+def quantize_params(fw, bits, block):
+    """fp32 weights -> quantized params pytree (nibbles + scales/zeros)."""
+
+    def qlin(w):
+        q = quantize.quantize_linear(w, bits, block)
+        return dict(
+            nib=jnp.asarray(q["nib"], jnp.int32),
+            scales=jnp.asarray(q["scales"]),
+            zeros=jnp.asarray(q["zeros"]),
+            bits=bits,
+            block=block,
+        )
+
+    layers = [
+        dict(
+            attn_norm=jnp.asarray(lw["attn_norm"]),
+            wq=qlin(lw["wq"]),
+            wk=qlin(lw["wk"]),
+            wv=qlin(lw["wv"]),
+            wo=qlin(lw["wo"]),
+            mlp_norm=jnp.asarray(lw["mlp_norm"]),
+            w_gate=qlin(lw["w_gate"]),
+            w_up=qlin(lw["w_up"]),
+            w_down=qlin(lw["w_down"]),
+        )
+        for lw in fw["layers"]
+    ]
+    return dict(
+        embed=jnp.asarray(fw["embed"]),
+        layers=layers,
+        final_norm=jnp.asarray(fw["final_norm"]),
+        lm_head=qlin(fw["lm_head"]),
+    )
+
+
+def flatten_params(params):
+    """Deterministic flat (name, array) list — the runtime ABI.
+
+    Static ints (bits/block) are excluded; they are baked into the traced
+    function and recorded in meta.json.
+    """
+    out = [("embed", params["embed"])]
+    for li, lw in enumerate(params["layers"]):
+        out.append((f"l{li}.attn_norm", lw["attn_norm"]))
+        for name in ["wq", "wk", "wv", "wo"]:
+            for field in ["nib", "scales", "zeros"]:
+                out.append((f"l{li}.{name}.{field}", lw[name][field]))
+        out.append((f"l{li}.mlp_norm", lw["mlp_norm"]))
+        for name in ["w_gate", "w_up", "w_down"]:
+            for field in ["nib", "scales", "zeros"]:
+                out.append((f"l{li}.{name}.{field}", lw[name][field]))
+    out.append(("final_norm", params["final_norm"]))
+    for field in ["nib", "scales", "zeros"]:
+        out.append((f"lm_head.{field}", params["lm_head"][field]))
+    return out
+
+
+def unflatten_params(flat_arrays, params_template):
+    """Rebuild the pytree from flat arrays inside a traced function."""
+    it = iter(flat_arrays)
+
+    def qlin(t):
+        return dict(
+            nib=next(it), scales=next(it), zeros=next(it), bits=t["bits"], block=t["block"]
+        )
+
+    embed = next(it)
+    layers = []
+    for lt in params_template["layers"]:
+        attn_norm = next(it)
+        wq, wk, wv, wo = qlin(lt["wq"]), qlin(lt["wk"]), qlin(lt["wv"]), qlin(lt["wo"])
+        mlp_norm = next(it)
+        w_gate, w_up, w_down = qlin(lt["w_gate"]), qlin(lt["w_up"]), qlin(lt["w_down"])
+        layers.append(
+            dict(
+                attn_norm=attn_norm,
+                wq=wq,
+                wk=wk,
+                wv=wv,
+                wo=wo,
+                mlp_norm=mlp_norm,
+                w_gate=w_gate,
+                w_up=w_up,
+                w_down=w_down,
+            )
+        )
+    final_norm = next(it)
+    lm_head = qlin(params_template["lm_head"])
+    return dict(embed=embed, layers=layers, final_norm=final_norm, lm_head=lm_head)
+
+
+def to_hlo_text(lowered, return_tuple=False) -> str:
+    """return_tuple=False lets PJRT hand back one buffer per output leaf, so
+    the Rust runtime can keep the KV caches device-resident between steps
+    (EXPERIMENTS.md §Perf)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    global ART
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bits", type=int, default=4, choices=[2, 4])
+    ap.add_argument("--block", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=1280)
+    ap.add_argument("--chunk", type=int, default=128)
+    ap.add_argument("--model", default=str(ART / "model.tmw"))
+    ap.add_argument("--out", default=None, help="output dir (default: artifacts/)")
+    args = ap.parse_args()
+
+    if args.out:
+        ART = Path(args.out)
+    ART.mkdir(parents=True, exist_ok=True)
+    model_path = Path(args.model)
+    if not model_path.exists():
+        raise SystemExit(f"{model_path} missing — run `python -m compile.train` first (make artifacts does)")
+
+    fw, cfg = load_tmw(model_path)
+    params = quantize_params(fw, args.bits, args.block)
+    flat = flatten_params(params)
+    dkv = cfg["n_kv_heads"] * (cfg["d_model"] // cfg["n_heads"])
+    cache_shape = (cfg["n_layers"], args.seq, dkv)
+
+    # --- traced entry points over the flat ABI ---
+    def decode_fn(*flat_and_state):
+        n = len(flat)
+        p = unflatten_params(flat_and_state[:n], params)
+        cache_k, cache_v, token, pos = flat_and_state[n:]
+        return decode_step(p, token, pos, cache_k, cache_v, cfg)
+
+    def prefill_fn(*flat_and_state):
+        n = len(flat)
+        p = unflatten_params(flat_and_state[:n], params)
+        cache_k, cache_v, tokens, pos_base = flat_and_state[n:]
+        return prefill_chunk(p, tokens, pos_base, cache_k, cache_v, cfg)
+
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in flat]
+    cache_spec = jax.ShapeDtypeStruct(cache_shape, jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    chunk_spec = jax.ShapeDtypeStruct((args.chunk,), jnp.int32)
+
+    print("lowering decode step...", flush=True)
+    dec = jax.jit(decode_fn).lower(*specs, cache_spec, cache_spec, tok_spec, tok_spec)
+    (ART / "decode.hlo.txt").write_text(to_hlo_text(dec))
+    print("lowering prefill chunk...", flush=True)
+    pre = jax.jit(prefill_fn).lower(*specs, cache_spec, cache_spec, chunk_spec, tok_spec)
+    (ART / "prefill.hlo.txt").write_text(to_hlo_text(pre))
+
+    # --- runtime parameter pack ---
+    meta_params = []
+    with open(ART / "params.bin", "wb") as f:
+        for name, a in flat:
+            arr = np.asarray(a)
+            if arr.dtype == np.int32:
+                dt = "i32"
+                f.write(arr.astype("<i4").tobytes())
+            else:
+                dt = "f32"
+                f.write(arr.astype("<f4").tobytes())
+            meta_params.append(dict(name=name, dtype=dt, shape=list(arr.shape)))
+    meta = dict(
+        model=dict(**cfg),
+        bits=args.bits,
+        block=args.block,
+        seq=args.seq,
+        chunk=args.chunk,
+        cache_shape=list(cache_shape),
+        params=meta_params,
+    )
+    (ART / "meta.json").write_text(json.dumps(meta, indent=1))
+    # Line-based twin of meta.json for the dependency-free Rust parser.
+    lines = [
+        f"model vocab={cfg['vocab']} d_model={cfg['d_model']} n_layers={cfg['n_layers']}"
+        f" n_heads={cfg['n_heads']} n_kv_heads={cfg['n_kv_heads']} d_ff={cfg['d_ff']}",
+        f"bits {args.bits}",
+        f"block {args.block}",
+        f"seq {args.seq}",
+        f"chunk {args.chunk}",
+    ]
+    for p in meta_params:
+        lines.append(f"param {p['name']} {p['dtype']} {','.join(map(str, p['shape']))}")
+    (ART / "meta.txt").write_text("\n".join(lines) + "\n")
+    sizes = {p.name: p.stat().st_size for p in ART.iterdir()}
+    print("artifacts:", {k: f"{v/1e6:.1f}MB" for k, v in sorted(sizes.items())})
+
+
+if __name__ == "__main__":
+    main()

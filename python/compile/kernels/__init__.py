@@ -1,0 +1,2 @@
+"""Layer-1 Pallas kernels: LUT GEMV (decode), fused two-level LUT
+dequantization, and quantized GEMM (prefill)."""

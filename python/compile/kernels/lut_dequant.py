@@ -1,0 +1,88 @@
+"""Layer-1 Pallas kernel: fused two-level LUT dequantization (paper Fig. 7).
+
+Turns the bit-serial single-copy weights back into fp16 values for the
+matrix unit, in two table lookups per step:
+
+  level 1 (repack): the 4-bit nibble of each bit-plane indexes a 16-entry
+  table whose entries place that bit into the bit-parallel position —
+  implemented as the shift-or reconstruction the table encodes;
+
+  level 2 (convert + affine): the reconstructed 4-bit code indexes a
+  16-entry conversion table whose entries hold ``(code - zero) * scale``
+  pre-baked per quantization block — a real gather in the kernel body.
+
+The TPU mapping (DESIGN.md §2): both tables live in VMEM; the conversion
+gather is the VLUT16 analogue. Output is rounded through fp16, exactly what
+lands in the TCM tile on the Hexagon.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lut_dequant_kernel(nib_ref, scale_ref, zero_ref, o_ref, *, bits, block):
+    """One M-tile: (bits, TM, G) nibbles -> (TM, 4G) fp16-rounded weights."""
+    nib = nib_ref[...].astype(jnp.int32)  # (bits, TM, G)
+    _, tm, g = nib.shape
+    # Level 1 — repack: reconstruct 4 codes per nibble group. The repack
+    # LUT's entry for (bit b, nibble n) has bit (j*bits+b) set for each set
+    # bit j of n; OR-ing entries == this shift-or, evaluated vectorized.
+    j = jnp.arange(4)
+    nib_bits = (nib[..., None] >> j) & 1  # (bits, TM, G, 4)
+    codes = (nib_bits * (2 ** jnp.arange(bits))[:, None, None, None]).sum(axis=0)  # (TM, G, 4)
+    codes = codes.reshape(tm, g * 4)  # (TM, K_tile)
+    # Level 2 — conversion LUT with baked affine, one 2^bits-entry table per
+    # quantization block: entries[c] = (c - zero) * scale.
+    levels = 2**bits
+    nb = (g * 4) // block
+    scales = scale_ref[...]  # (TM, NB)
+    zeros = zero_ref[...]  # (TM, NB)
+    entries = (jnp.arange(levels, dtype=jnp.float32)[None, None, :] - zeros[..., None]) * scales[
+        ..., None
+    ]  # (TM, NB, levels)
+    codes_b = codes.reshape(tm, nb, block)
+    looked = jnp.take_along_axis(entries, codes_b, axis=-1)  # gather: (TM, NB, block)
+    w = looked.reshape(tm, g * 4)
+    # fp16 landing in TCM.
+    o_ref[...] = w.astype(jnp.float16).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "m_tile"))
+def lut_dequant(nib, scales, zeros, *, bits, block, m_tile=128):
+    """Dequantize bit-serial weights to fp16-rounded f32.
+
+    Args:
+      nib: (bits, M, K//4) nibbles.
+      scales, zeros: (M, K//block).
+    Returns:
+      (M, K) f32 (fp16-representable values).
+    """
+    _, m, g4 = nib.shape
+    k = g4 * 4
+    nb = k // block
+    mt = _pick_tile(m, m_tile)
+    return pl.pallas_call(
+        functools.partial(_lut_dequant_kernel, bits=bits, block=block),
+        grid=(m // mt,),
+        in_specs=[
+            pl.BlockSpec((bits, mt, g4), lambda i: (0, i, 0)),
+            pl.BlockSpec((mt, nb), lambda i: (i, 0)),
+            pl.BlockSpec((mt, nb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((mt, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,
+    )(nib.astype(jnp.int32), scales, zeros)
+
+
+def _pick_tile(m, want):
+    """Largest tile <= want that divides m (grid tiles must cover M exactly)."""
+    t = min(want, m)
+    while m % t != 0:
+        t -= 1
+    return t

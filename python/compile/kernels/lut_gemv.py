@@ -1,0 +1,143 @@
+"""Layer-1 Pallas kernel: T-MAN LUT-based mpGEMV (decode path).
+
+Mirrors rust/src/kernels/lut_gemv.rs: activations are precomputed into
+16-entry tables (one per 4 K-positions); each 4-bit nibble of a weight
+bit-plane selects a partial dot product; per-plane results are
+shift-accumulated, and the per-block affine applies
+``scale * (lookup_sum - zero * block_act_sum)``.
+
+HARDWARE ADAPTATION (DESIGN.md §2): the paper's HVX ``VLUT16`` instruction
+becomes a vectorized gather over a VMEM-resident (G, 16) table. The M axis
+is the vectorized lookup axis (the paper's ``M_lookups``); the grid over M
+tiles is the outer tile; the tables stay resident in VMEM across the whole
+tile — the Pallas analogue of holding ``K_lut`` tables in vector registers.
+Pallas runs with ``interpret=True`` (CPU PJRT; see /opt/xla-example
+README) — the structure, not the wallclock, is the TPU story.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def precompute_tables(act):
+    """Precomputation kernel (split from lookup per the §5 graph pass).
+
+    act: (k,) -> tables (k//4, 16) f32, block-reusable across every
+    projection that consumes the same activation (Q/K/V, gate/up).
+    """
+    k = act.shape[0]
+    a4 = act.reshape(k // 4, 4).astype(jnp.float32)
+    idx = jnp.arange(16)
+    sel = ((idx[:, None] >> jnp.arange(4)[None, :]) & 1).astype(jnp.float32)
+    return a4 @ sel.T
+
+
+def _lut_gemv_kernel(nib_ref, tab_ref, scale_ref, zero_ref, asum_ref, o_ref, *, bits, block):
+    """One M-tile: (bits, TM, G) nibbles x (G, 16) tables -> (TM,) outputs."""
+    nib = nib_ref[...]  # (bits, TM, G) int32 in [0, 16)
+    tab = tab_ref[...]  # (G, 16) f32
+    _, tm, g = nib.shape
+    # VLUT16 as a flat gather: entry (g, n) lives at g*16 + n. This avoids
+    # materializing a (bits, TM, G, 16) broadcast of the table per issue —
+    # a 16x traffic reduction on the kernel's hot loop (EXPERIMENTS.md
+    # §Perf L1).
+    flat = tab.reshape(-1)
+    gidx = jnp.arange(g, dtype=jnp.int32)[None, None, :]
+    looked = jnp.take(flat, gidx * 16 + nib.astype(jnp.int32), axis=0)
+    # Inner tile = quantization block: aggregate lookups per block.
+    gpb = block // 4  # table groups per block
+    nb = g // gpb
+    per_block = looked.reshape(bits, tm, nb, gpb).sum(axis=-1)  # (bits, TM, NB)
+    # Shift-accumulate bit planes: sum_b 2^b * plane.
+    weights = (2.0 ** jnp.arange(bits, dtype=jnp.float32))[:, None, None]
+    lookup_sum = (per_block * weights).sum(axis=0)  # (TM, NB)
+    # Per-block affine with the zero-point correction.
+    scales = scale_ref[...]  # (TM, NB)
+    zeros = zero_ref[...]  # (TM, NB)
+    asum = asum_ref[...]  # (1, NB)
+    y = (scales * (lookup_sum - zeros * asum)).sum(axis=1)  # (TM,)
+    o_ref[...] = y
+
+
+def lut_gemv_lookup(nib, scales, zeros, tables, asum, *, bits, block, m_tile=128):
+    """The table-lookup kernel alone, taking precomputed activation tables.
+
+    This is the unfused form the §5 graph-optimization pass produces: one
+    `precompute_tables` feeding several `lut_gemv_lookup` calls that share
+    the same input activation (Q/K/V, gate/up).
+    """
+    _, m, g4 = nib.shape
+    k = g4 * 4
+    assert k % block == 0 and block % 4 == 0
+    nb = k // block
+    mt = _pick_tile(m, m_tile)
+    grid = (m // mt,)
+    return pl.pallas_call(
+        functools.partial(_lut_gemv_kernel, bits=bits, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bits, mt, g4), lambda i: (0, i, 0)),
+            pl.BlockSpec((g4, 16), lambda i: (0, 0)),
+            pl.BlockSpec((mt, nb), lambda i: (i, 0)),
+            pl.BlockSpec((mt, nb), lambda i: (i, 0)),
+            pl.BlockSpec((1, nb), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((mt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(nib.astype(jnp.int32), tables, scales, zeros, asum)
+
+
+def block_act_sums(act, block):
+    """Per-quant-block activation sums for the zero-point correction."""
+    k = act.shape[0]
+    nb = k // block
+    return act.reshape(nb, block).sum(axis=1).astype(jnp.float32)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "m_tile"))
+def lut_gemv(nib, scales, zeros, act, *, bits, block, m_tile=128):
+    """T-MAN LUT GEMV (fused precompute + lookup).
+
+    Args:
+      nib: (bits, M, K//4) uint8/int32 bit-serial nibbles.
+      scales, zeros: (M, K//block) f32 per-block quantization params.
+      act: (K,) activations.
+    Returns:
+      (M,) f32 outputs.
+    """
+    _, m, g4 = nib.shape
+    k = g4 * 4
+    assert k % block == 0 and block % 4 == 0
+    nb = k // block
+    tables = precompute_tables(act)  # (K//4, 16)
+    asum = block_act_sums(act, block)  # (1, NB)
+    mt = _pick_tile(m, m_tile)
+    grid = (m // mt,)
+    return pl.pallas_call(
+        functools.partial(_lut_gemv_kernel, bits=bits, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bits, mt, g4), lambda i: (0, i, 0)),
+            pl.BlockSpec((g4, 16), lambda i: (0, 0)),
+            pl.BlockSpec((mt, nb), lambda i: (i, 0)),
+            pl.BlockSpec((mt, nb), lambda i: (i, 0)),
+            pl.BlockSpec((1, nb), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((mt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(nib.astype(jnp.int32), tables, scales, zeros, asum)
+
+
+def _pick_tile(m, want):
+    """Largest tile <= want that divides m (grid tiles must cover M exactly)."""
+    t = min(want, m)
+    while m % t != 0:
+        t -= 1
+    return t

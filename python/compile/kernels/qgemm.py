@@ -1,0 +1,90 @@
+"""Layer-1 Pallas kernel: T-MAN prefill mpGEMM (dequantize-then-matmul).
+
+The kernel body fuses the two-level LUT dequantization of one weight tile
+(vector-unit work) with the matmul against the activation chunk (MXU work);
+the Pallas grid over (M, K) tiles supplies the HBM→VMEM double-buffering the
+paper builds by hand as the DMA stage of its DMA-Vector-Matrix pipeline
+(Fig. 9). Accumulation across K tiles goes through the output ref — the
+VMEM-resident accumulator standing in for the paper's TCM spill buffer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qgemm_kernel(act_ref, nib_ref, scale_ref, zero_ref, o_ref, *, bits, block):
+    """Grid step (i=M tile, j=K tile): o[i] += act[j] @ dequant(W[i, j])^T."""
+    kt_idx = pl.program_id(1)
+    nib = nib_ref[...].astype(jnp.int32)  # (bits, TM, Gt)
+    _, tm, g = nib.shape
+    # --- vector-unit stage: two-level LUT dequant of the weight tile ---
+    jbits = jnp.arange(4)
+    nib_bits = (nib[..., None] >> jbits) & 1
+    codes = (nib_bits * (2 ** jnp.arange(bits))[:, None, None, None]).sum(axis=0)
+    codes = codes.reshape(tm, g * 4)
+    levels = 2**bits
+    nb = (g * 4) // block
+    scales = scale_ref[...]
+    zeros = zero_ref[...]
+    entries = (jnp.arange(levels, dtype=jnp.float32)[None, None, :] - zeros[..., None]) * scales[
+        ..., None
+    ]
+    w = jnp.take_along_axis(entries, codes.reshape(tm, nb, block), axis=-1).reshape(tm, g * 4)
+    w = w.astype(jnp.float16).astype(jnp.float32)
+    # --- matrix-unit stage: fp16 tile matmul, f32 accumulate ---
+    a = act_ref[...]  # (N, K_tile)
+    a = a.astype(jnp.float16).astype(jnp.float32)
+    partial = jnp.dot(a, w.T)  # (N, TM)
+
+    @pl.when(kt_idx == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(kt_idx != 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "m_tile", "k_tile"))
+def qgemm(act, nib, scales, zeros, *, bits, block, m_tile=128, k_tile=None):
+    """Prefill mpGEMM: C (N, M) = act (N, K) @ dequant(W (M, K))^T.
+
+    Args:
+      act: (N, K) activation chunk.
+      nib: (bits, M, K//4) bit-serial nibbles.
+      scales, zeros: (M, K//block).
+    """
+    n, k = act.shape
+    _, m, g4 = nib.shape
+    assert g4 * 4 == k
+    kt = k_tile or k
+    assert k % kt == 0 and kt % block == 0
+    mt = _pick_tile(m, m_tile)
+    nb_t = kt // block
+    grid = (m // mt, k // kt)
+    return pl.pallas_call(
+        functools.partial(_qgemm_kernel, bits=bits, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, kt), lambda i, j: (0, j)),
+            pl.BlockSpec((bits, mt, kt // 4), lambda i, j: (0, i, j)),
+            pl.BlockSpec((mt, nb_t), lambda i, j: (i, j)),
+            pl.BlockSpec((mt, nb_t), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((n, mt), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(act, nib.astype(jnp.int32), scales, zeros)
+
+
+def _pick_tile(m, want):
+    """Largest tile <= want that divides m (grid tiles must cover M exactly)."""
+    t = min(want, m)
+    while m % t != 0:
+        t -= 1
+    return t

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Everything here is straight-line dequantize-then-multiply math — the ground
+truth the LUT kernels are verified against at build time (pytest), mirroring
+rust/src/kernels/reference.rs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_dequant(codes, scales, zeros):
+    """(m, k) codes + per-block (m, B) scale/zero -> (m, k) f32 weights."""
+    m, k = codes.shape
+    nb = scales.shape[1]
+    block = k // nb
+    g = codes.reshape(m, nb, block).astype(jnp.float32)
+    return ((g - zeros[:, :, None]) * scales[:, :, None]).reshape(m, k)
+
+
+def ref_gemv(codes, scales, zeros, act):
+    """y[i] = sum_j dequant(W)[i, j] * act[j]."""
+    w = ref_dequant(codes, scales, zeros)
+    return w @ act.astype(jnp.float32)
+
+
+def ref_gemm(codes, scales, zeros, act):
+    """C[n, m] = act (n, k) @ dequant(W)^T (k, m)."""
+    w = ref_dequant(codes, scales, zeros)
+    return act.astype(jnp.float32) @ w.T
+
+
+def ref_precompute_tables(act):
+    """Activation tables: tables[g, idx] = sum of act[4g+j] over set bits j.
+
+    act: (k,) with k % 4 == 0. Returns (k//4, 16) f32.
+    """
+    k = act.shape[0]
+    a4 = act.reshape(k // 4, 4).astype(jnp.float32)
+    idx = jnp.arange(16)
+    sel = ((idx[:, None] >> jnp.arange(4)[None, :]) & 1).astype(jnp.float32)  # (16, 4)
+    return a4 @ sel.T  # (k//4, 16)

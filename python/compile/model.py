@@ -1,0 +1,258 @@
+"""Layer-2: the JAX transformer graph (decode step + prefill chunk),
+built on the Layer-1 Pallas kernels, quantized weights end to end.
+
+Mirrors rust/src/model/transformer.rs operator-for-operator (RMSNorm, RoPE
+on (even, odd) pairs, GQA, SwiGLU) so the Rust reference model is a direct
+numeric cross-check for the AOT artifacts this module lowers to.
+
+Graph optimization (paper §5, Fig. 11): every LUT projection is *unfused*
+into a precomputation kernel (activation tables) and a table-lookup kernel;
+projections sharing an input activation — Q/K/V in attention, gate/up in
+the MLP — reuse one precomputation. This file IS that optimized graph: the
+sharing is structural, so it lowers into the HLO artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.lut_gemv import block_act_sums, lut_gemv_lookup, precompute_tables
+from compile.kernels.qgemm import qgemm
+
+# ---------------------------------------------------------------------------
+# building blocks (must match rust/src/model/transformer.rs)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, g, eps=1e-5):
+    """x: (..., d)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope(x, pos, theta=10000.0):
+    """Rotate (even, odd) pairs of each head vector.
+
+    x: (..., d_head); pos: scalar or (...,) broadcastable position index.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / theta ** (2.0 * jnp.arange(half, dtype=jnp.float32) / d)
+    ang = jnp.asarray(pos, dtype=jnp.float32)[..., None] * freqs  # (..., half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    a = x[..., 0::2]
+    b = x[..., 1::2]
+    ra = a * cos - b * sin
+    rb = a * sin + b * cos
+    return jnp.stack([ra, rb], axis=-1).reshape(x.shape)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# quantized projections
+# ---------------------------------------------------------------------------
+
+
+def lut_proj(tables, asum, q):
+    """Decode-path projection through the lookup kernel (tables shared)."""
+    return lut_gemv_lookup(
+        q["nib"], q["scales"], q["zeros"], tables, asum, bits=q["bits"], block=q["block"]
+    )
+
+
+def gemm_proj(x, q, k_tile=None):
+    """Prefill-path projection through the dequant-GEMM kernel. x: (T, K)."""
+    return qgemm(x, q["nib"], q["scales"], q["zeros"], bits=q["bits"], block=q["block"], k_tile=k_tile)
+
+
+# ---------------------------------------------------------------------------
+# decode step (token-by-token, LUT path on the vector units)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, token, pos, cache_k, cache_v, cfg):
+    """One decode step.
+
+    Args:
+      params: pytree from aot.build_params.
+      token: i32 scalar; pos: i32 scalar (0-based absolute position).
+      cache_k/cache_v: (L, S, dkv) f32.
+      cfg: dict(d_model, n_heads, n_kv_heads, d_ff, vocab, rope_theta, eps).
+    Returns:
+      (logits (vocab,), new_cache_k, new_cache_v)
+    """
+    d = cfg["d_model"]
+    nh, nkv = cfg["n_heads"], cfg["n_kv_heads"]
+    dh = d // nh
+    groups = nh // nkv
+    seq = cache_k.shape[1]
+    block = params["layers"][0]["wq"]["block"]
+
+    h = params["embed"][token]
+    for li, lp in enumerate(params["layers"]):
+        # --- attention ---
+        x = rmsnorm(h, lp["attn_norm"], cfg["eps"])
+        tables = precompute_tables(x)  # shared precompute (graph opt)
+        asum = block_act_sums(x, block)
+        q = lut_proj(tables, asum, lp["wq"])
+        k = lut_proj(tables, asum, lp["wk"])
+        v = lut_proj(tables, asum, lp["wv"])
+        q = rope(q.reshape(nh, dh), pos, cfg["rope_theta"]).reshape(nh, dh)
+        k = rope(k.reshape(nkv, dh), pos, cfg["rope_theta"]).reshape(nkv * dh)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k.reshape(1, 1, -1), (li, pos, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v.reshape(1, 1, -1), (li, pos, 0))
+
+        kc = cache_k[li].reshape(seq, nkv, dh)  # (S, nkv, dh)
+        vc = cache_v[li].reshape(seq, nkv, dh)
+        qh = q.reshape(nh, dh)
+        kvh = jnp.arange(nh) // groups
+        scores = jnp.einsum("hd,shd->hs", qh, kc[:, kvh, :]) / jnp.sqrt(jnp.float32(dh))  # (H, S)
+        mask = jnp.arange(seq) <= pos
+        scores = jnp.where(mask[None, :], scores, -jnp.inf)
+        attn = jax.nn.softmax(scores, axis=-1)  # (H, S)
+        ctx = jnp.einsum("hs,shd->hd", attn, vc[:, kvh, :])  # (H, dh)
+        ctx = ctx.reshape(d)
+        tables_o = precompute_tables(ctx)
+        asum_o = block_act_sums(ctx, block)
+        h = h + lut_proj(tables_o, asum_o, lp["wo"])
+
+        # --- MLP (gate/up share one precompute) ---
+        x = rmsnorm(h, lp["mlp_norm"], cfg["eps"])
+        tables_m = precompute_tables(x)
+        asum_m = block_act_sums(x, block)
+        gate = lut_proj(tables_m, asum_m, lp["w_gate"])
+        up = lut_proj(tables_m, asum_m, lp["w_up"])
+        act = silu(gate) * up
+        tables_d = precompute_tables(act)
+        asum_d = block_act_sums(act, params["layers"][li]["w_down"]["block"])
+        h = h + lut_proj(tables_d, asum_d, lp["w_down"])
+
+    h = rmsnorm(h, params["final_norm"], cfg["eps"])
+    tables_f = precompute_tables(h)
+    asum_f = block_act_sums(h, block)
+    logits = lut_proj(tables_f, asum_f, params["lm_head"])
+    return logits, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# prefill chunk (T tokens in parallel, dequant-GEMM path on the matrix unit)
+# ---------------------------------------------------------------------------
+
+
+def prefill_chunk(params, tokens, pos_base, cache_k, cache_v, cfg):
+    """Process a chunk of T tokens starting at absolute position pos_base.
+
+    Returns (logits_of_last_token, new_cache_k, new_cache_v).
+    """
+    d = cfg["d_model"]
+    nh, nkv = cfg["n_heads"], cfg["n_kv_heads"]
+    dh = d // nh
+    groups = nh // nkv
+    t = tokens.shape[0]
+    seq = cache_k.shape[1]
+
+    h = params["embed"][tokens]  # (T, d)
+    pos = pos_base + jnp.arange(t)  # (T,)
+    for li, lp in enumerate(params["layers"]):
+        x = rmsnorm(h, lp["attn_norm"], cfg["eps"])
+        q = gemm_proj(x, lp["wq"])  # (T, d)
+        k = gemm_proj(x, lp["wk"])  # (T, dkv)
+        v = gemm_proj(x, lp["wv"])
+        q = rope(q.reshape(t, nh, dh), pos[:, None], cfg["rope_theta"])
+        k = rope(k.reshape(t, nkv, dh), pos[:, None], cfg["rope_theta"])
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.reshape(1, t, nkv * dh), (li, pos_base, 0)
+        )
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v.reshape(1, t, nkv * dh), (li, pos_base, 0))
+
+        kc = cache_k[li].reshape(seq, nkv, dh)
+        vc = cache_v[li].reshape(seq, nkv, dh)
+        kvh = jnp.arange(nh) // groups
+        scores = jnp.einsum("thd,shd->hts", q, kc[:, kvh, :]) / jnp.sqrt(jnp.float32(dh))
+        causal = jnp.arange(seq)[None, :] <= pos[:, None]  # (T, S)
+        scores = jnp.where(causal[None, :, :], scores, -jnp.inf)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("hts,shd->thd", attn, vc[:, kvh, :]).reshape(t, d)
+        h = h + gemm_proj(ctx, lp["wo"])
+
+        x = rmsnorm(h, lp["mlp_norm"], cfg["eps"])
+        gate = gemm_proj(x, lp["w_gate"])
+        up = gemm_proj(x, lp["w_up"])
+        act = silu(gate) * up
+        h = h + gemm_proj(act, lp["w_down"])
+
+    h_last = rmsnorm(h[-1], params["final_norm"], cfg["eps"])
+    block = params["lm_head"]["block"]
+    tables = precompute_tables(h_last)
+    asum = block_act_sums(h_last, block)
+    logits = lut_gemv_lookup(
+        params["lm_head"]["nib"],
+        params["lm_head"]["scales"],
+        params["lm_head"]["zeros"],
+        tables,
+        asum,
+        bits=params["lm_head"]["bits"],
+        block=block,
+    )
+    return logits, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp fp32 forward (training / oracle; no Pallas, no quantization)
+# ---------------------------------------------------------------------------
+
+
+def fp_forward(weights, tokens, cfg):
+    """Teacher-forced fp32 logits over a (B, T) token batch.
+
+    weights: dict of fp32 arrays (see train.py init_weights).
+    Returns (B, T, vocab).
+    """
+    d = cfg["d_model"]
+    nh, nkv = cfg["n_heads"], cfg["n_kv_heads"]
+    dh = d // nh
+    groups = nh // nkv
+    b, t = tokens.shape
+    h = weights["embed"][tokens]  # (B, T, d)
+    pos = jnp.arange(t)
+    causal = pos[None, :] <= pos[:, None]  # (T, S=T)
+    for lw in weights["layers"]:
+        x = rmsnorm(h, lw["attn_norm"], cfg["eps"])
+        q = x @ lw["wq"].T
+        k = x @ lw["wk"].T
+        v = x @ lw["wv"].T
+        q = rope(q.reshape(b, t, nh, dh), pos[None, :, None], cfg["rope_theta"])
+        k = rope(k.reshape(b, t, nkv, dh), pos[None, :, None], cfg["rope_theta"])
+        v = v.reshape(b, t, nkv, dh)
+        kvh = jnp.arange(nh) // groups
+        kf = k[:, :, kvh, :]  # (B, T, H, dh)
+        vf = v[:, :, kvh, :]
+        scores = jnp.einsum("bthd,bshd->bhts", q, kf) / jnp.sqrt(jnp.float32(dh))
+        scores = jnp.where(causal[None, None, :, :], scores, -jnp.inf)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhts,bshd->bthd", attn, vf).reshape(b, t, d)
+        h = h + ctx @ lw["wo"].T
+        x = rmsnorm(h, lw["mlp_norm"], cfg["eps"])
+        act = silu(x @ lw["w_gate"].T) * (x @ lw["w_up"].T)
+        h = h + act @ lw["w_down"].T
+    h = rmsnorm(h, weights["final_norm"], cfg["eps"])
+    return h @ weights["lm_head"].T
+
+
+def make_cfg(vocab, d_model, n_layers, n_heads, n_kv_heads, d_ff, rope_theta=10000.0, eps=1e-5):
+    return dict(
+        vocab=vocab,
+        d_model=d_model,
+        n_layers=n_layers,
+        n_heads=n_heads,
+        n_kv_heads=n_kv_heads,
+        d_ff=d_ff,
+        rope_theta=rope_theta,
+        eps=eps,
+    )

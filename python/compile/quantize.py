@@ -1,0 +1,102 @@
+"""Quantizer + bit-serial packing, mirroring rust/src/quant exactly.
+
+The Rust side is the canonical implementation; this module reproduces its
+semantics so that weights quantized at build time (here) and weights
+quantized by the Rust coordinator agree bit-for-bit:
+
+- asymmetric RTN: range [min(w,0), max(w,0)] onto [0, 2^bits-1],
+  scale = f16(range/qmax), zero = f16(round(-lo/scale));
+- scales/zeros rounded through IEEE fp16 (the on-device metadata width);
+- bit-serial layout exposed as per-plane *nibbles*: nib[b, i, g] packs bit
+  `b` of codes at K positions 4g..4g+4 of row i (LSB = first position) —
+  the exact VLUT16 index unit.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def f16_round(x: np.ndarray) -> np.ndarray:
+    """Round f32 values to the nearest fp16-representable value."""
+    return np.asarray(x, dtype=np.float32).astype(np.float16).astype(np.float32)
+
+
+def rtn_quantize(w: np.ndarray, bits: int, block: int | None):
+    """Asymmetric round-to-nearest quantization.
+
+    Args:
+      w: (m, k) float32 weights.
+      bits: 2 or 4.
+      block: group size along K; ``None`` means per-channel.
+
+    Returns:
+      codes (m, k) uint8, scales (m, B) f32, zeros (m, B) f32 where B is the
+      number of blocks per row (1 for per-channel).
+    """
+    w = np.asarray(w, dtype=np.float32)
+    m, k = w.shape
+    if block is None:
+        block = k
+    assert k % block == 0, "K must be divisible by the block size"
+    nb = k // block
+    qmax = float(2**bits - 1)
+    g = w.reshape(m, nb, block)
+    lo = np.minimum(g.min(axis=2), 0.0)
+    hi = np.maximum(g.max(axis=2), 0.0)
+    rng = hi - lo
+    degenerate = rng < 1e-12
+    scales = f16_round(np.where(degenerate, 1.0, rng / qmax))
+    zeros = f16_round(np.round(np.where(degenerate, 0.0, -lo / np.where(scales == 0, 1, scales))))
+    q = np.round(g / scales[:, :, None] + zeros[:, :, None])
+    codes = np.clip(q, 0, qmax).astype(np.uint8).reshape(m, k)
+    return codes, scales.astype(np.float32), zeros.astype(np.float32)
+
+
+def dequantize(codes: np.ndarray, scales: np.ndarray, zeros: np.ndarray) -> np.ndarray:
+    """Reference dequantization to f32: (code - zero) * scale."""
+    m, k = codes.shape
+    nb = scales.shape[1]
+    block = k // nb
+    g = codes.reshape(m, nb, block).astype(np.float32)
+    return ((g - zeros[:, :, None]) * scales[:, :, None]).reshape(m, k)
+
+
+def pack_nibbles(codes: np.ndarray, bits: int) -> np.ndarray:
+    """Bit-serial nibble layout: nib[b, i, g] = 4 bits (K positions
+    4g..4g+4, LSB-first) of bit-plane ``b`` of row ``i``.
+    """
+    m, k = codes.shape
+    assert k % 4 == 0, "K must be a multiple of 4"
+    g = codes.reshape(m, k // 4, 4)
+    out = np.zeros((bits, m, k // 4), dtype=np.uint8)
+    for b in range(bits):
+        bitp = (g >> b) & 1
+        out[b] = (bitp[..., 0] | (bitp[..., 1] << 1) | (bitp[..., 2] << 2) | (bitp[..., 3] << 3)).astype(
+            np.uint8
+        )
+    return out
+
+
+def unpack_nibbles(nib: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`pack_nibbles` -> codes (m, k) uint8."""
+    bits, m, gg = nib.shape
+    codes = np.zeros((m, gg * 4), dtype=np.uint8)
+    for b in range(bits):
+        for j in range(4):
+            codes[:, j::4] |= (((nib[b] >> j) & 1) << b).astype(np.uint8)
+    return codes
+
+
+def quantize_linear(w: np.ndarray, bits: int, block: int | None):
+    """Full pipeline for one projection: quantize + pack.
+
+    Returns dict with nib (bits, m, k/4) u8, scales (m, B), zeros (m, B).
+    """
+    codes, scales, zeros = rtn_quantize(w, bits, block)
+    return {
+        "nib": pack_nibbles(codes, bits),
+        "scales": scales,
+        "zeros": zeros,
+        "codes": codes,
+    }

@@ -1,0 +1,173 @@
+"""Train the small byte-level transformer on the embedded corpus (JAX fwd/bwd)
+and write the fp32 master weights in the shared `.tmw` format.
+
+This is the build-time half of the Table 4 accuracy experiment: a real
+(tiny) trained model whose per-block-vs-per-channel quantization gap is then
+measured by the Rust side. Also logs the loss curve to
+artifacts/train_log.txt (end-to-end validation deliverable).
+
+Usage: python -m compile.train [--steps 600] [--out ../artifacts/model.tmw]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import struct
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import fp_forward, make_cfg
+
+CORPUS = Path(__file__).resolve().parents[2] / "data" / "corpus.txt"
+
+# Must match rust ModelConfig::small().
+CFG = make_cfg(vocab=256, d_model=192, n_layers=6, n_heads=6, n_kv_heads=2, d_ff=512)
+
+
+def init_weights(key, cfg):
+    d, dff, v = cfg["d_model"], cfg["d_ff"], cfg["vocab"]
+    dkv = cfg["n_kv_heads"] * (d // cfg["n_heads"])
+
+    def lin(key, m, k):
+        std = (2.0 / (m + k)) ** 0.5
+        return jax.random.normal(key, (m, k), jnp.float32) * std
+
+    keys = jax.random.split(key, 2 + cfg["n_layers"] * 7)
+    layers = []
+    ki = 2
+    for _ in range(cfg["n_layers"]):
+        layers.append(
+            dict(
+                attn_norm=jnp.ones(d),
+                wq=lin(keys[ki], d, d),
+                wk=lin(keys[ki + 1], dkv, d),
+                wv=lin(keys[ki + 2], dkv, d),
+                wo=lin(keys[ki + 3], d, d),
+                mlp_norm=jnp.ones(d),
+                w_gate=lin(keys[ki + 4], dff, d),
+                w_up=lin(keys[ki + 5], dff, d),
+                w_down=lin(keys[ki + 6], d, dff),
+            )
+        )
+        ki += 7
+    return dict(
+        embed=jax.random.normal(keys[0], (v, d), jnp.float32) * 0.02,
+        layers=layers,
+        final_norm=jnp.ones(d),
+        lm_head=lin(keys[1], v, d),
+    )
+
+
+def loss_fn(weights, tokens, cfg):
+    logits = fp_forward(weights, tokens[:, :-1], cfg)  # (B, T-1, V)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "wd", "b1", "b2"))
+def adamw_step(weights, m, v, step, tokens, lr=3e-3, wd=0.01, b1=0.9, b2=0.99):
+    loss, grads = jax.value_and_grad(loss_fn)(weights, tokens, CFG)
+
+    def upd(w, g, m_, v_):
+        m2 = b1 * m_ + (1 - b1) * g
+        v2 = b2 * v_ + (1 - b2) * g * g
+        mhat = m2 / (1 - b1**step)
+        vhat = v2 / (1 - b2**step)
+        w2 = w - lr * (mhat / (jnp.sqrt(vhat) + 1e-8) + wd * w)
+        return w2, m2, v2
+
+    flat = jax.tree_util.tree_map(upd, weights, grads, m, v)
+    new_w = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_w, new_m, new_v, loss
+
+
+def batches(tokens: np.ndarray, batch, seqlen, rng):
+    n = len(tokens) - seqlen - 1
+    idx = rng.integers(0, n, size=batch)
+    return np.stack([tokens[i : i + seqlen + 1] for i in idx])
+
+
+def save_tmw(weights, cfg, path: Path):
+    with open(path, "wb") as f:
+        f.write(b"TMW1")
+        for v in [
+            cfg["vocab"],
+            cfg["d_model"],
+            cfg["n_layers"],
+            cfg["n_heads"],
+            cfg["n_kv_heads"],
+            cfg["d_ff"],
+        ]:
+            f.write(struct.pack("<I", v))
+
+        def dump(a):
+            f.write(np.asarray(a, dtype="<f4").tobytes())
+
+        dump(weights["embed"])
+        for lw in weights["layers"]:
+            dump(lw["attn_norm"])
+            for name in ["wq", "wk", "wv", "wo"]:
+                dump(lw[name])
+            dump(lw["mlp_norm"])
+            for name in ["w_gate", "w_up", "w_down"]:
+                dump(lw[name])
+        dump(weights["final_norm"])
+        dump(weights["lm_head"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seqlen", type=int, default=128)
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[2] / "artifacts/model.tmw"))
+    args = ap.parse_args()
+
+    text = CORPUS.read_text()
+    tokens = np.frombuffer(text.encode(), dtype=np.uint8).astype(np.int32)
+    cut = int(len(tokens) * 0.9)
+    train_toks, valid_toks = tokens[:cut], tokens[cut:]
+    print(f"corpus: {len(tokens)} tokens ({cut} train / {len(tokens) - cut} valid)")
+
+    weights = init_weights(jax.random.PRNGKey(0), CFG)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, weights)
+    m, v = zeros, jax.tree_util.tree_map(jnp.zeros_like, weights)
+    rng = np.random.default_rng(0)
+
+    log_lines = []
+    t0 = time.time()
+    best = (float("inf"), weights)  # early stopping on the tiny corpus
+    for step in range(1, args.steps + 1):
+        tb = jnp.asarray(batches(train_toks, args.batch, args.seqlen, rng))
+        weights, m, v, loss = adamw_step(weights, m, v, step, tb)
+        if step % 25 == 0 or step == 1:
+            vb = jnp.asarray(batches(valid_toks, 8, args.seqlen, rng))
+            vloss = float(loss_fn(weights, vb, CFG))
+            star = ""
+            if vloss < best[0]:
+                best = (vloss, jax.tree_util.tree_map(lambda x: x, weights))
+                star = " *best"
+            line = f"step {step:4d}  train_loss {float(loss):.4f}  valid_loss {vloss:.4f}  ppl {np.exp(vloss):.2f}  elapsed {time.time() - t0:.1f}s{star}"
+            print(line, flush=True)
+            log_lines.append(line)
+    weights = best[1]
+    log_lines.append(f"saved best checkpoint: valid_loss {best[0]:.4f} ppl {np.exp(best[0]):.2f}")
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    save_tmw(weights, CFG, out)
+    (out.parent / "train_log.txt").write_text("\n".join(log_lines) + "\n")
+    print(f"wrote {out} ({out.stat().st_size / 1e6:.1f} MB) and train_log.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, bit widths and block sizes; assert_allclose
+against ref.py (tolerances cover the deliberate fp16 rounding in the
+dequant/GEMM kernels).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.lut_dequant import lut_dequant
+from compile.kernels.lut_gemv import block_act_sums, lut_gemv, lut_gemv_lookup, precompute_tables
+from compile.kernels.qgemm import qgemm
+from compile.kernels.ref import ref_dequant, ref_gemm, ref_gemv, ref_precompute_tables
+from compile.quantize import quantize_linear
+
+
+def make_case(m, k, bits, block, seed, n=None):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.08, (m, k)).astype(np.float32)
+    q = quantize_linear(w, bits, block)
+    if n is None:
+        act = rng.normal(0, 0.5, (k,)).astype(np.float32)
+    else:
+        act = rng.normal(0, 0.5, (n, k)).astype(np.float32)
+    return q, jnp.asarray(act)
+
+
+# ---------------------------------------------------------------------------
+# precompute tables
+# ---------------------------------------------------------------------------
+
+
+def test_precompute_tables_subset_sums():
+    act = jnp.array([1.0, 2.0, 4.0, 8.0, -1.0, 0.5, 0.0, 3.0])
+    t = precompute_tables(act)
+    assert t.shape == (2, 16)
+    for idx in range(16):
+        want0 = sum(float(act[j]) for j in range(4) if idx >> j & 1)
+        want1 = sum(float(act[4 + j]) for j in range(4) if idx >> j & 1)
+        assert abs(float(t[0, idx]) - want0) < 1e-6
+        assert abs(float(t[1, idx]) - want1) < 1e-6
+
+
+def test_precompute_matches_ref():
+    rng = np.random.default_rng(0)
+    act = jnp.asarray(rng.normal(0, 1, (64,)).astype(np.float32))
+    assert_allclose(np.asarray(precompute_tables(act)), np.asarray(ref_precompute_tables(act)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# LUT GEMV
+# ---------------------------------------------------------------------------
+
+
+def test_lut_gemv_basic():
+    q, act = make_case(128, 256, 4, 64, 1)
+    y = lut_gemv(jnp.asarray(q["nib"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]), act, bits=4, block=64)
+    yref = ref_gemv(jnp.asarray(q["codes"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]), act)
+    assert_allclose(np.asarray(y), np.asarray(yref), rtol=2e-4, atol=2e-4)
+
+
+def test_lut_gemv_lookup_shares_tables():
+    """Unfused precompute + two lookups == two fused calls (graph opt)."""
+    q1, act = make_case(64, 128, 4, 64, 2)
+    q2, _ = make_case(64, 128, 4, 64, 3)
+    tables = precompute_tables(act)
+    asum = block_act_sums(act, 64)
+    args1 = (jnp.asarray(q1["nib"]), jnp.asarray(q1["scales"]), jnp.asarray(q1["zeros"]))
+    args2 = (jnp.asarray(q2["nib"]), jnp.asarray(q2["scales"]), jnp.asarray(q2["zeros"]))
+    y1 = lut_gemv_lookup(*args1, tables, asum, bits=4, block=64)
+    y2 = lut_gemv_lookup(*args2, tables, asum, bits=4, block=64)
+    f1 = lut_gemv(*args1, act, bits=4, block=64)
+    f2 = lut_gemv(*args2, act, bits=4, block=64)
+    assert_allclose(np.asarray(y1), np.asarray(f1), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(y2), np.asarray(f2), rtol=1e-5, atol=1e-6)
+
+
+def test_lut_gemv_zero_act_gives_zero():
+    q, _ = make_case(32, 64, 4, 64, 4)
+    y = lut_gemv(
+        jnp.asarray(q["nib"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]),
+        jnp.zeros(64), bits=4, block=64,
+    )
+    assert np.all(np.asarray(y) == 0.0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mb=st.integers(1, 4),
+    kb=st.integers(1, 4),
+    bits=st.sampled_from([2, 4]),
+    block=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**20),
+)
+def test_lut_gemv_property(mb, kb, bits, block, seed):
+    m, k = mb * 32, kb * block
+    q, act = make_case(m, k, bits, block, seed)
+    y = lut_gemv(jnp.asarray(q["nib"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]), act, bits=bits, block=block)
+    yref = ref_gemv(jnp.asarray(q["codes"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]), act)
+    assert_allclose(np.asarray(y), np.asarray(yref), rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# LUT dequant
+# ---------------------------------------------------------------------------
+
+
+def test_lut_dequant_matches_ref_up_to_fp16():
+    q, _ = make_case(64, 128, 4, 64, 5)
+    w = lut_dequant(jnp.asarray(q["nib"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]), bits=4, block=64)
+    wref = ref_dequant(jnp.asarray(q["codes"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]))
+    # Kernel output is fp16-rounded; the oracle is f32.
+    assert_allclose(np.asarray(w), np.asarray(wref), rtol=2e-3, atol=2e-4)
+    # And it must be exactly fp16-representable.
+    w_np = np.asarray(w)
+    np.testing.assert_array_equal(w_np, w_np.astype(np.float16).astype(np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mb=st.integers(1, 3),
+    kb=st.integers(1, 3),
+    bits=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**20),
+)
+def test_lut_dequant_property(mb, kb, bits, seed):
+    m, k, block = mb * 16, kb * 64, 64
+    q, _ = make_case(m, k, bits, block, seed)
+    w = lut_dequant(jnp.asarray(q["nib"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]), bits=bits, block=block)
+    wref = ref_dequant(jnp.asarray(q["codes"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]))
+    assert_allclose(np.asarray(w), np.asarray(wref), rtol=2e-3, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# quantized GEMM (prefill)
+# ---------------------------------------------------------------------------
+
+
+def test_qgemm_matches_ref():
+    q, act = make_case(128, 256, 4, 64, 6, n=16)
+    c = qgemm(act, jnp.asarray(q["nib"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]), bits=4, block=64)
+    cref = ref_gemm(jnp.asarray(q["codes"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]), act)
+    assert_allclose(np.asarray(c), np.asarray(cref), rtol=3e-3, atol=3e-3)
+
+
+def test_qgemm_k_tiling_invariant():
+    """Grid-pipelined K accumulation == single-tile result."""
+    q, act = make_case(64, 256, 4, 64, 7, n=8)
+    args = (act, jnp.asarray(q["nib"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]))
+    c_full = qgemm(*args, bits=4, block=64, k_tile=256)
+    c_tiled = qgemm(*args, bits=4, block=64, k_tile=64)
+    assert_allclose(np.asarray(c_tiled), np.asarray(c_full), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.sampled_from([1, 4, 16]),
+    bits=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**20),
+)
+def test_qgemm_property(n, bits, seed):
+    m, k, block = 64, 128, 64
+    q, act = make_case(m, k, bits, block, seed, n=n)
+    c = qgemm(act, jnp.asarray(q["nib"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]), bits=bits, block=block)
+    cref = ref_gemm(jnp.asarray(q["codes"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]), act)
+    assert_allclose(np.asarray(c), np.asarray(cref), rtol=3e-3, atol=3e-3)
+
+
+def test_gemv_consistent_with_gemm_row():
+    """Decode path (LUT GEMV) and prefill path (qgemm) agree on n=1."""
+    q, act = make_case(64, 128, 4, 64, 8)
+    y = lut_gemv(jnp.asarray(q["nib"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]), act, bits=4, block=64)
+    c = qgemm(act[None, :], jnp.asarray(q["nib"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]), bits=4, block=64)
+    assert_allclose(np.asarray(y), np.asarray(c)[0], rtol=3e-3, atol=3e-3)

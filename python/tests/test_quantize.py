@@ -1,0 +1,125 @@
+"""Quantizer + packing tests (mirrors rust/src/quant semantics)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.quantize import (
+    dequantize,
+    f16_round,
+    pack_nibbles,
+    quantize_linear,
+    rtn_quantize,
+    unpack_nibbles,
+)
+
+
+def test_codes_in_range():
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.1, (8, 128)).astype(np.float32)
+    for bits in (2, 4):
+        codes, scales, zeros = rtn_quantize(w, bits, 64)
+        assert codes.max() < 2**bits
+        assert scales.shape == (8, 2)
+        assert np.all(scales > 0)
+
+
+def test_grid_weights_reconstruct_exactly():
+    scale = 0.5
+    w = ((np.arange(16) - 8) * scale).astype(np.float32)[None, :]
+    codes, scales, zeros = rtn_quantize(w, 4, None)
+    rec = dequantize(codes, scales, zeros)
+    np.testing.assert_allclose(rec, w, atol=1e-3)
+
+
+def test_zero_is_exact():
+    rng = np.random.default_rng(1)
+    w = rng.normal(0, 0.1, (4, 64)).astype(np.float32)
+    w[0, 5] = 0.0
+    codes, scales, zeros = rtn_quantize(w, 4, 64)
+    rec = dequantize(codes, scales, zeros)
+    assert rec[0, 5] == 0.0
+
+
+def test_per_block_beats_per_channel():
+    rng = np.random.default_rng(2)
+    m, k = 16, 256
+    w = rng.normal(0, 0.05, (m, k)).astype(np.float32)
+    # Block-structured outliers that a per-channel scale cannot capture.
+    w[:, 64:128] *= 6.0
+    mse = {}
+    for name, block in [("blk", 64), ("ch", None)]:
+        codes, scales, zeros = rtn_quantize(w, 4, block)
+        mse[name] = float(((dequantize(codes, scales, zeros) - w) ** 2).mean())
+    assert mse["blk"] < mse["ch"]
+
+
+def test_nibble_pack_round_trip():
+    rng = np.random.default_rng(3)
+    for bits in (2, 4):
+        codes = rng.integers(0, 2**bits, (8, 64)).astype(np.uint8)
+        nib = pack_nibbles(codes, bits)
+        assert nib.shape == (bits, 8, 16)
+        np.testing.assert_array_equal(unpack_nibbles(nib), codes)
+
+
+def test_paper_repack_example():
+    """Nibble 0b0011 at the MSB plane = MSB set on the first two weights."""
+    codes = np.array([[0b1000, 0b1000, 0b0000, 0b0000]], dtype=np.uint8)
+    nib = pack_nibbles(codes, 4)
+    assert nib[3, 0, 0] == 0b0011
+    assert nib[0, 0, 0] == 0 and nib[1, 0, 0] == 0 and nib[2, 0, 0] == 0
+
+
+def test_f16_round_matches_numpy():
+    xs = np.array([0.1, 1.0, 65504.0, 1e-5, -0.3], dtype=np.float32)
+    np.testing.assert_array_equal(f16_round(xs), xs.astype(np.float16).astype(np.float32))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 12),
+    kb=st.integers(1, 6),
+    bits=st.sampled_from([2, 4]),
+    block=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**20),
+)
+def test_quantize_dequantize_error_bound(m, kb, bits, block, seed):
+    """Property: reconstruction error per element <= scale/2 + f16 slack."""
+    k = kb * block
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.1, (m, k)).astype(np.float32)
+    codes, scales, zeros = rtn_quantize(w, bits, block)
+    rec = dequantize(codes, scales, zeros)
+    err = np.abs(rec - w).reshape(m, k // block, block)
+    bound = scales[:, :, None] * 0.5 + np.abs(w).reshape(m, k // block, block) * 2e-3 + 1e-6
+    assert np.all(err <= bound + scales[:, :, None] * 0.01)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    g=st.integers(1, 32),
+    bits=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**20),
+)
+def test_pack_unpack_property(m, g, bits, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2**bits, (m, g * 4)).astype(np.uint8)
+    np.testing.assert_array_equal(unpack_nibbles(pack_nibbles(codes, bits)), codes)
+
+
+def test_quantize_linear_bundle():
+    rng = np.random.default_rng(4)
+    w = rng.normal(0, 0.1, (16, 128)).astype(np.float32)
+    q = quantize_linear(w, 4, 64)
+    assert set(q) == {"nib", "scales", "zeros", "codes"}
+    assert q["nib"].shape == (4, 16, 32)
+    np.testing.assert_array_equal(unpack_nibbles(q["nib"]), q["codes"])
+
+
+def test_indivisible_block_rejected():
+    w = np.zeros((2, 100), dtype=np.float32)
+    with pytest.raises(AssertionError):
+        rtn_quantize(w, 4, 64)

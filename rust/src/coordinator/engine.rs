@@ -1,0 +1,175 @@
+//! The T-MAN inference engine: the Layer-3 coordinator that owns the
+//! request loop and drives the two execution paths of the unified weight
+//! layout — chunked prefill through the matrix-path artifact, token-by-token
+//! decoding through the LUT-path artifact — with Python nowhere on the path.
+//!
+//! Numerics come from the PJRT executables (AOT-lowered JAX + Pallas);
+//! on-device latency/energy come from the NPU simulator applied to the
+//! model's projection shapes (DESIGN.md §1 explains the substitution).
+
+use crate::coordinator::metrics::{sim_energy_j, PhaseTimer, RequestMetrics};
+use crate::kernels::dequant_gemm::tman_gemm_latency_us;
+use crate::kernels::lut_gemv::tman_gemv_latency_us;
+use crate::model::sampler;
+use crate::model::tokenizer;
+use crate::npu::config::SocConfig;
+use crate::npu::energy::Placement;
+use crate::npu::memory::LoadMethod;
+use crate::quant::formats::{ActDtype, Granularity, QuantFormat, WeightDtype};
+use crate::runtime::artifacts::ArtifactMeta;
+use crate::runtime::executor::NpuModelRuntime;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Decoding configuration for one request.
+#[derive(Debug, Clone)]
+pub struct GenerateOpts {
+    pub max_new_tokens: usize,
+    /// 0.0 => greedy.
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+    /// Stop generation at this byte (e.g. b'\n' ends a line). None = run to
+    /// max_new_tokens.
+    pub stop_byte: Option<u8>,
+}
+
+impl Default for GenerateOpts {
+    fn default() -> Self {
+        Self { max_new_tokens: 64, temperature: 0.8, top_k: 40, seed: 0, stop_byte: None }
+    }
+}
+
+/// The serving engine.
+pub struct Engine {
+    pub runtime: NpuModelRuntime,
+    pub soc: SocConfig,
+    pub fmt: QuantFormat,
+    /// Simulated µs per decode token (projection kernels; context-free part).
+    sim_decode_proj_us: f64,
+    /// Simulated µs per 128-token prefill chunk (projection kernels).
+    sim_prefill_chunk_us: f64,
+}
+
+impl Engine {
+    /// Load artifacts and prepare the simulator against `soc`.
+    pub fn load(artifacts: &Path, soc: SocConfig) -> Result<Self> {
+        let runtime = NpuModelRuntime::load(artifacts)
+            .with_context(|| format!("loading artifacts from {}", artifacts.display()))?;
+        let meta = runtime.meta.clone();
+        let fmt = QuantFormat::new(
+            if meta.bits == 2 { WeightDtype::Int2 } else { WeightDtype::Int4 },
+            ActDtype::Fp16,
+            Granularity::PerBlock(meta.block),
+        );
+        let shapes = Self::proj_shapes(&meta);
+        let npu = &soc.npu;
+        let mut dec = 0.0;
+        let mut pre = 0.0;
+        for &(m, k) in &shapes {
+            dec += tman_gemv_latency_us(npu, m, k, fmt);
+            pre += tman_gemm_latency_us(npu, meta.chunk, m, k, fmt);
+        }
+        // lm head runs once per token in both phases.
+        let head = (meta.vocab, meta.d_model);
+        dec += tman_gemv_latency_us(npu, head.0, head.1, fmt);
+        pre += tman_gemv_latency_us(npu, head.0, head.1, fmt);
+        Ok(Self { runtime, soc, fmt, sim_decode_proj_us: dec, sim_prefill_chunk_us: pre })
+    }
+
+    /// All per-layer projection shapes × layers for the loaded model.
+    fn proj_shapes(meta: &ArtifactMeta) -> Vec<(usize, usize)> {
+        let d = meta.d_model;
+        let dkv = meta.d_kv();
+        let per_layer =
+            [(d, d), (dkv, d), (dkv, d), (d, d), (meta.d_ff, d), (meta.d_ff, d), (d, meta.d_ff)];
+        let mut all = Vec::new();
+        for _ in 0..meta.n_layers {
+            all.extend_from_slice(&per_layer);
+        }
+        all
+    }
+
+    /// Simulated on-device time for one decode step at context length `ctx`.
+    pub fn sim_decode_us(&self, ctx: usize) -> f64 {
+        let meta = &self.runtime.meta;
+        let kv_bytes = 2 * meta.n_layers * ctx * meta.d_kv() * 2;
+        self.sim_decode_proj_us + LoadMethod::Dma.transfer_us(&self.soc.npu, kv_bytes, 1)
+    }
+
+    /// Simulated on-device time for one prefill chunk ending at `ctx`.
+    pub fn sim_prefill_chunk_us(&self, ctx: usize) -> f64 {
+        let meta = &self.runtime.meta;
+        // Chunk attention ~ chunk x ctx MACs on HMX; small at these sizes.
+        let macs = 2.0 * (meta.n_layers * meta.chunk * ctx * meta.d_model) as f64;
+        self.sim_prefill_chunk_us + macs / (self.soc.npu.hmx_tops_fp16 * 1e6)
+    }
+
+    /// Serve one request end to end.
+    pub fn generate(&mut self, prompt: &str, opts: &GenerateOpts) -> Result<(String, RequestMetrics)> {
+        let meta = self.runtime.meta.clone();
+        let prompt_tokens = tokenizer::encode(prompt);
+        anyhow::ensure!(!prompt_tokens.is_empty(), "empty prompt");
+        let budget = meta.seq.saturating_sub(prompt_tokens.len());
+        let max_new = opts.max_new_tokens.min(budget.saturating_sub(1));
+        self.runtime.reset()?;
+
+        // ---- prefill: whole chunks through the matrix-path artifact,
+        // remainder through the decode path (teacher forcing) ----
+        let chunk = meta.chunk;
+        let timer = PhaseTimer::start();
+        let mut sim_prefill_us = 0.0;
+        let mut pos = 0usize;
+        let mut logits: Vec<f32> = Vec::new();
+        if self.runtime.has_prefill() {
+            while prompt_tokens.len() - pos >= chunk {
+                let toks: Vec<i32> =
+                    prompt_tokens[pos..pos + chunk].iter().map(|&t| t as i32).collect();
+                logits = self.runtime.prefill_chunk(&toks, pos as i32)?;
+                pos += chunk;
+                sim_prefill_us += self.sim_prefill_chunk_us(pos);
+            }
+        }
+        while pos < prompt_tokens.len() {
+            logits = self.runtime.decode_step(prompt_tokens[pos] as i32, pos as i32)?;
+            sim_prefill_us += self.sim_decode_us(pos + 1);
+            pos += 1;
+        }
+        let wall_prefill_s = timer.stop();
+
+        // ---- decode loop ----
+        let timer = PhaseTimer::start();
+        let mut sim_decode_us = 0.0;
+        let mut rng = Rng::new(opts.seed);
+        let mut out_tokens: Vec<usize> = Vec::new();
+        for _ in 0..max_new {
+            let next = if opts.temperature <= 0.0 {
+                sampler::greedy(&logits)
+            } else {
+                sampler::top_k(&logits, opts.top_k, opts.temperature, &mut rng)
+            };
+            out_tokens.push(next);
+            if Some(next as u8) == opts.stop_byte {
+                break;
+            }
+            logits = self.runtime.decode_step(next as i32, pos as i32)?;
+            sim_decode_us += self.sim_decode_us(pos + 1);
+            pos += 1;
+        }
+        let wall_decode_s = timer.stop();
+
+        let pm = &self.soc.power;
+        let metrics = RequestMetrics {
+            prompt_tokens: prompt_tokens.len(),
+            generated_tokens: out_tokens.len(),
+            wall_prefill_s,
+            wall_decode_s,
+            sim_prefill_s: sim_prefill_us / 1e6,
+            sim_decode_s: sim_decode_us / 1e6,
+            sim_prefill_j: sim_energy_j(pm, Placement::NpuOnly, sim_prefill_us / 1e6, prompt_tokens.len()),
+            sim_decode_j: sim_energy_j(pm, Placement::NpuOnly, sim_decode_us / 1e6, out_tokens.len()),
+        };
+        Ok((tokenizer::decode(&out_tokens), metrics))
+    }
+}

@@ -1,0 +1,109 @@
+//! Request metrics: latency, throughput, energy — what the serving examples
+//! and the end-to-end benches report.
+
+use crate::npu::config::PowerModel;
+use crate::npu::energy::{EnergyMeter, Placement};
+use std::time::Instant;
+
+/// Metrics for one served request.
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    /// Host wall-clock (this machine, PJRT CPU execution).
+    pub wall_prefill_s: f64,
+    pub wall_decode_s: f64,
+    /// Simulated on-device time (NPU model).
+    pub sim_prefill_s: f64,
+    pub sim_decode_s: f64,
+    /// Simulated energy.
+    pub sim_prefill_j: f64,
+    pub sim_decode_j: f64,
+}
+
+impl RequestMetrics {
+    pub fn wall_prefill_tps(&self) -> f64 {
+        self.prompt_tokens as f64 / self.wall_prefill_s.max(1e-12)
+    }
+
+    pub fn wall_decode_tps(&self) -> f64 {
+        self.generated_tokens as f64 / self.wall_decode_s.max(1e-12)
+    }
+
+    pub fn sim_prefill_tps(&self) -> f64 {
+        self.prompt_tokens as f64 / self.sim_prefill_s.max(1e-12)
+    }
+
+    pub fn sim_decode_tps(&self) -> f64 {
+        self.generated_tokens as f64 / self.sim_decode_s.max(1e-12)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "prompt {} tok, generated {} tok\n\
+             host wallclock : prefill {:.1} tok/s, decode {:.1} tok/s\n\
+             simulated NPU  : prefill {:.1} tok/s, decode {:.1} tok/s\n\
+             simulated energy: prefill {:.4} J/tok, decode {:.4} J/tok",
+            self.prompt_tokens,
+            self.generated_tokens,
+            self.wall_prefill_tps(),
+            self.wall_decode_tps(),
+            self.sim_prefill_tps(),
+            self.sim_decode_tps(),
+            self.sim_prefill_j / self.prompt_tokens.max(1) as f64,
+            self.sim_decode_j / self.generated_tokens.max(1) as f64,
+        )
+    }
+}
+
+/// Stopwatch + energy accumulation helper used by the engine.
+pub struct PhaseTimer {
+    start: Instant,
+}
+
+impl PhaseTimer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn stop(self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Convert simulated phase seconds into joules on a placement.
+pub fn sim_energy_j(pm: &PowerModel, placement: Placement, sim_seconds: f64, tokens: usize) -> f64 {
+    let mut m = EnergyMeter::new();
+    m.record(placement, sim_seconds, tokens);
+    m.total_joules(pm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::npu::config::PowerModel;
+
+    #[test]
+    fn tps_math() {
+        let m = RequestMetrics {
+            prompt_tokens: 100,
+            generated_tokens: 50,
+            wall_prefill_s: 2.0,
+            wall_decode_s: 5.0,
+            sim_prefill_s: 0.1,
+            sim_decode_s: 1.0,
+            sim_prefill_j: 0.49,
+            sim_decode_j: 4.9,
+        };
+        assert!((m.wall_prefill_tps() - 50.0).abs() < 1e-9);
+        assert!((m.sim_decode_tps() - 50.0).abs() < 1e-9);
+        assert!(m.report().contains("prompt 100 tok"));
+    }
+
+    #[test]
+    fn energy_helper() {
+        let pm = PowerModel::sd8gen3();
+        let j = sim_energy_j(&pm, Placement::NpuOnly, 2.0, 10);
+        assert!((j - 2.0 * pm.npu_active_w).abs() < 1e-9);
+    }
+}

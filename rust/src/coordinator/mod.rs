@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! - [`engine`] — the serving engine: chunked prefill (matrix path) +
+//!   LUT decoding (vector path) over the PJRT artifacts, one weight copy.
+//! - [`graph`] — the §5 graph-optimization pass (precompute dedup).
+//! - [`pipeline`] — the §4.2 DMA–Vector–Matrix pipeline simulation.
+//! - [`perf`] — end-to-end phase performance/energy model (Figs. 14–15,
+//!   Table 3).
+//! - [`metrics`] — request metrics and energy accounting.
+
+pub mod engine;
+pub mod graph;
+pub mod metrics;
+pub mod perf;
+pub mod pipeline;
+pub mod scheduler;
+
+pub use engine::{Engine, GenerateOpts};
+pub use graph::{build_block_graph, Graph, OpKind};
+pub use metrics::RequestMetrics;
+pub use pipeline::{run_pipelined, run_sequential, PipelineRun};

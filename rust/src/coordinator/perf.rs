@@ -1,0 +1,235 @@
+//! End-to-end phase performance model: per-token decode latency and
+//! prefill throughput for every (framework × model × format × SoC)
+//! combination — the engine behind Figs. 14–15 and Table 3.
+//!
+//! A phase is the sum of its per-layer projection kernels (using the same
+//! kernel cost models the kernel-level benches use) plus the attention
+//! memory cost (KV-cache streaming — the paper's noted bottleneck, §7) and
+//! per-phase framework overheads (NPU↔CPU syncs for llm.npu).
+
+use crate::kernels::baselines::{self, Framework, Phase};
+use crate::kernels::dequant_gemm::tman_gemm_latency_us;
+use crate::kernels::lut_gemv::tman_gemv_latency_us;
+use crate::model::config::EvalModel;
+use crate::npu::config::SocConfig;
+use crate::npu::energy::{joules_per_token, Placement};
+use crate::npu::memory::LoadMethod;
+use crate::quant::formats::QuantFormat;
+
+/// One projection-kernel latency under a framework.
+fn proj_gemv_us(soc: &SocConfig, fw: Framework, m: usize, k: usize, fmt: QuantFormat) -> f64 {
+    match fw {
+        Framework::TMan => tman_gemv_latency_us(&soc.npu, m, k, fmt),
+        Framework::LlamaCpp => baselines::cpu_dequant_gemv(soc, m, k, fmt).sequential_us(),
+        Framework::TMac => baselines::cpu_lut_gemv(soc, m, k, fmt).sequential_us(),
+        Framework::BitnetCpp => baselines::bitnet_cpu_gemv(soc, m, k).sequential_us(),
+        Framework::LlmNpu => baselines::llmnpu_gemv(soc, m, k).sequential_us(),
+        Framework::Qnn => baselines::qnn_latency_us(&baselines::qnn_gemv(
+            soc,
+            m,
+            k,
+            qnn_fmt(fmt),
+        )),
+    }
+}
+
+fn proj_gemm_us(soc: &SocConfig, fw: Framework, n: usize, m: usize, k: usize, fmt: QuantFormat) -> f64 {
+    match fw {
+        Framework::TMan => tman_gemm_latency_us(&soc.npu, n, m, k, fmt),
+        Framework::LlamaCpp | Framework::TMac | Framework::BitnetCpp => {
+            baselines::cpu_gemm(soc, n, m, k, fmt).sequential_us()
+        }
+        Framework::LlmNpu => baselines::llmnpu_gemm(soc, n, m, k).sequential_us(),
+        Framework::Qnn => baselines::qnn_latency_us(&baselines::qnn_gemm(soc, n, m, k, qnn_fmt(fmt))),
+    }
+}
+
+/// QNN can only express per-channel/per-tensor (§6.1): per-block requests
+/// are mapped to its nearest native format for comparison plots.
+fn qnn_fmt(fmt: QuantFormat) -> QuantFormat {
+    if fmt.weight.is_quantized() {
+        QuantFormat::qnn_w4a16()
+    } else {
+        QuantFormat::qnn_fp16()
+    }
+}
+
+/// Attention cost per decode step at context length `ctx`: stream the KV
+/// cache (2 × layers × ctx × d_kv × 2 bytes) over the placement's memory
+/// path plus score/weighted-sum vector work (memory dominates).
+fn attention_decode_us(soc: &SocConfig, fw: Framework, model: EvalModel, ctx: usize) -> f64 {
+    let d_kv = model.d_model() / 4; // GQA 4:1, typical for these models
+    let bytes = 2 * model.n_layers() * ctx * d_kv * 2;
+    match fw.placement(Phase::Decode) {
+        Placement::CpuOnly => bytes as f64 / (soc.cpu.mem_gbps * 1e3),
+        _ => LoadMethod::Dma.transfer_us(&soc.npu, bytes, 1),
+    }
+}
+
+/// Attention cost for one prefill chunk (flash-style tiles on whichever
+/// unit): O(chunk * ctx) MACs; modeled at the phase placement's GEMM rate.
+fn attention_prefill_us(soc: &SocConfig, fw: Framework, model: EvalModel, chunk: usize, ctx: usize) -> f64 {
+    let macs = 2.0 * (model.n_layers() * chunk * ctx * model.d_model()) as f64 * 2.0;
+    match fw.placement(Phase::Prefill) {
+        Placement::CpuOnly => macs / (soc.cpu.gemm_gops * 1e3),
+        _ => macs / (soc.npu.hmx_tops_fp16 * 1e6),
+    }
+}
+
+/// Per-token decode latency (µs) at context length `ctx`.
+pub fn decode_token_us(soc: &SocConfig, fw: Framework, model: EvalModel, fmt: QuantFormat, ctx: usize) -> f64 {
+    let mut us = 0.0;
+    for &(m, k) in &model.layer_projections() {
+        us += proj_gemv_us(soc, fw, m, k, fmt);
+    }
+    us *= model.n_layers() as f64;
+    us += attention_decode_us(soc, fw, model, ctx);
+    // LM head: one more quantized GEMV at (vocab, d_model).
+    let (hv, hd) = model.lm_head_shape();
+    us += proj_gemv_us(soc, fw, hv, hd, fmt);
+    us
+}
+
+/// Decode throughput in tokens/s for the paper's 1024+128 workload.
+pub fn decode_tokens_per_s(soc: &SocConfig, fw: Framework, model: EvalModel, fmt: QuantFormat) -> f64 {
+    // Average context over the 128 generated tokens after a 1024 prompt.
+    let ctx = 1024 + 64;
+    1e6 / decode_token_us(soc, fw, model, fmt, ctx)
+}
+
+/// Prefill throughput in tokens/s for a 1024-token prompt processed in
+/// 128-token chunks (the chunked-prefill setting of §6.2).
+pub fn prefill_tokens_per_s(soc: &SocConfig, fw: Framework, model: EvalModel, fmt: QuantFormat) -> f64 {
+    let chunk = 128;
+    let prompt = 1024;
+    let mut total_us = 0.0;
+    let mut ctx = 0usize;
+    while ctx < prompt {
+        let mut us = 0.0;
+        for &(m, k) in &model.layer_projections() {
+            us += proj_gemm_us(soc, fw, chunk, m, k, fmt);
+        }
+        us *= model.n_layers() as f64;
+        us += attention_prefill_us(soc, fw, model, chunk, ctx + chunk);
+        total_us += us;
+        ctx += chunk;
+    }
+    prompt as f64 / (total_us / 1e6)
+}
+
+/// Energy per token for a phase (Table 3): placement power / throughput.
+pub fn energy_j_per_token(soc: &SocConfig, fw: Framework, model: EvalModel, fmt: QuantFormat, phase: Phase) -> f64 {
+    let tps = match phase {
+        Phase::Decode => decode_tokens_per_s(soc, fw, model, fmt),
+        Phase::Prefill => prefill_tokens_per_s(soc, fw, model, fmt),
+    };
+    joules_per_token(&soc.power, fw.placement(phase), tps)
+}
+
+/// Average power draw for a phase (Table 3, "Power (W)").
+pub fn phase_power_w(soc: &SocConfig, fw: Framework, phase: Phase) -> f64 {
+    fw.placement(phase).power_w(&soc.power)
+}
+
+/// Whether the framework can even hold the model in DRAM (§6.3: llm.npu
+/// OOMs 8B models on 12 GB).
+pub fn fits_in_dram(soc: &SocConfig, fw: Framework, model: EvalModel, fmt: QuantFormat) -> bool {
+    let (hv, hd) = model.lm_head_shape();
+    let params: usize = model
+        .layer_projections()
+        .iter()
+        .map(|&(m, k)| fw.resident_weight_bytes(m, k, fmt))
+        .sum::<usize>()
+        * model.n_layers()
+        + fw.resident_weight_bytes(hv, hd, fmt);
+    // Embeddings + KV + activations + OS headroom ~ 3 GB.
+    params + (3usize << 30) < soc.dram_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn soc() -> SocConfig {
+        SocConfig::oneplus12()
+    }
+
+    #[test]
+    fn fig14_decode_ordering() {
+        // §6.3: T-MAN 1.5-1.8x over QNN, 3.1-3.8x over llm.npu.
+        let s = soc();
+        let fmt = QuantFormat::tman_w4a16();
+        let m = EvalModel::Llama31_8B;
+        let tman = decode_tokens_per_s(&s, Framework::TMan, m, fmt);
+        let qnn = decode_tokens_per_s(&s, Framework::Qnn, m, fmt);
+        let llm = decode_tokens_per_s(&s, Framework::LlmNpu, m, fmt);
+        let lcpp = decode_tokens_per_s(&s, Framework::LlamaCpp, m, fmt);
+        assert!(tman / qnn > 1.05 && tman / qnn < 2.5, "T-MAN/QNN {}", tman / qnn);
+        assert!(tman / llm > 2.5, "T-MAN/llm.npu {}", tman / llm);
+        assert!(tman > lcpp, "T-MAN {tman} !> llama.cpp {lcpp}");
+    }
+
+    #[test]
+    fn bitnet_decode_speed_magnitude() {
+        // §6.3: "49.1 tokens/s on BitNet-2B for Snapdragon 8 Gen 3".
+        let s = soc();
+        let tps = decode_tokens_per_s(&s, Framework::TMan, EvalModel::BitNet2B, QuantFormat::bitnet());
+        assert!(tps > 25.0 && tps < 90.0, "BitNet decode {tps} tok/s (paper: 49.1)");
+    }
+
+    #[test]
+    fn fig15_prefill_ordering() {
+        // §6.3: up to 1.4x over llm.npu; up to 15x over CPU frameworks.
+        let s = soc();
+        let fmt = QuantFormat::tman_w4afp16();
+        let m = EvalModel::Llama31_8B;
+        let tman = prefill_tokens_per_s(&s, Framework::TMan, m, fmt);
+        let llm = prefill_tokens_per_s(&s, Framework::LlmNpu, m, fmt);
+        let lcpp = prefill_tokens_per_s(&s, Framework::LlamaCpp, m, fmt);
+        assert!(tman / llm > 0.9 && tman / llm < 2.0, "T-MAN/llm.npu prefill {}", tman / llm);
+        assert!(tman / lcpp > 6.0, "T-MAN/llama.cpp prefill {}", tman / lcpp);
+    }
+
+    #[test]
+    fn table3_energy_ordering() {
+        // §6.4: decoding energy savings of 84% vs llm.npu, ~25% vs QNN.
+        let s = soc();
+        let m = EvalModel::BitNet2B;
+        let fmt = QuantFormat::bitnet();
+        let e_tman = energy_j_per_token(&s, Framework::TMan, m, fmt, Phase::Decode);
+        let e_llm = energy_j_per_token(&s, Framework::LlmNpu, m, fmt, Phase::Decode);
+        let e_qnn = energy_j_per_token(&s, Framework::Qnn, m, fmt, Phase::Decode);
+        let e_bit = energy_j_per_token(&s, Framework::BitnetCpp, m, fmt, Phase::Decode);
+        assert!(e_tman < e_qnn, "T-MAN {e_tman} !< QNN {e_qnn}");
+        assert!(1.0 - e_tman / e_llm > 0.6, "savings vs llm.npu {}", 1.0 - e_tman / e_llm);
+        assert!(e_tman < e_bit * 0.5, "vs bitnet.cpp: {e_tman} vs {e_bit}");
+    }
+
+    #[test]
+    fn oom_reproduction() {
+        // §6.3: llm.npu OOMs 8B models on OnePlus 13T (12 GB); T-MAN fits.
+        let op13 = SocConfig::oneplus13t();
+        let fmt = QuantFormat::tman_w4a16();
+        assert!(!fits_in_dram(&op13, Framework::LlmNpu, EvalModel::Llama31_8B, fmt));
+        assert!(fits_in_dram(&op13, Framework::TMan, EvalModel::Llama31_8B, fmt));
+        // Both fit on the 24 GB OnePlus 12.
+        assert!(fits_in_dram(&soc(), Framework::LlmNpu, EvalModel::Llama31_8B, fmt));
+    }
+
+    #[test]
+    fn elite_faster_than_gen3() {
+        let fmt = QuantFormat::tman_w4a16();
+        let g3 = decode_tokens_per_s(&soc(), Framework::TMan, EvalModel::Llama31_8B, fmt);
+        let el = decode_tokens_per_s(&SocConfig::oneplus13t(), Framework::TMan, EvalModel::Llama31_8B, fmt);
+        assert!(el > g3);
+    }
+
+    #[test]
+    fn w2_decodes_faster_than_w4() {
+        let s = soc();
+        let m = EvalModel::Llama31_8B;
+        let t4 = decode_tokens_per_s(&s, Framework::TMan, m, QuantFormat::tman_w4a16());
+        let t2 = decode_tokens_per_s(&s, Framework::TMan, m, QuantFormat::tman_w2a16());
+        assert!(t2 / t4 > 1.4, "W2/W4 decode {}", t2 / t4);
+    }
+}

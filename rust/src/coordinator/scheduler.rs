@@ -1,0 +1,264 @@
+//! Request scheduler: FIFO admission with chunked prefill interleaved
+//! against decode steps — the on-device serving policy the coordinator
+//! applies when several requests share the NPU (vLLM-router-style, scaled
+//! to the paper's single-batch-decode device scenario).
+//!
+//! Policy: at most one request holds the KV cache at a time (batch 1 on
+//! device, §2.1); within a request, prefill runs in `chunk`-token slices so
+//! a long prompt cannot monopolize the NPU — between slices the scheduler
+//! may preempt in favor of a *higher-priority* queued request (e.g. a short
+//! interactive prompt behind a long document). Decode steps are never
+//! preempted (token latency SLO).
+
+use std::collections::VecDeque;
+
+/// A queued generation request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    pub max_new_tokens: usize,
+    /// Smaller = more urgent. FIFO within a priority class.
+    pub priority: u8,
+}
+
+/// Scheduler state of the active request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PhaseState {
+    Prefilling { done: usize },
+    Decoding { generated: usize },
+    Finished,
+}
+
+/// One unit of NPU work the scheduler emits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkItem {
+    /// Run one prefill slice `[start, start+len)` of request `id`.
+    PrefillChunk { id: u64, start: usize, len: usize },
+    /// Run one decode step of request `id` at position `pos`.
+    DecodeStep { id: u64, pos: usize },
+    /// Request finished; KV cache can be released.
+    Finish { id: u64 },
+}
+
+/// The scheduler.
+#[derive(Debug, Default)]
+pub struct Scheduler {
+    queue: VecDeque<Request>,
+    active: Option<(Request, PhaseState)>,
+    chunk: usize,
+    /// Completed request ids in finish order.
+    pub finished: Vec<u64>,
+}
+
+impl Scheduler {
+    pub fn new(chunk: usize) -> Self {
+        assert!(chunk > 0);
+        Self { queue: VecDeque::new(), active: None, chunk, finished: Vec::new() }
+    }
+
+    pub fn submit(&mut self, r: Request) {
+        assert!(r.prompt_tokens > 0, "empty prompt");
+        // Insert before the first strictly-lower-priority entry (stable
+        // within a class).
+        let idx = self.queue.iter().position(|q| q.priority > r.priority).unwrap_or(self.queue.len());
+        self.queue.insert(idx, r);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.active.is_some() || !self.queue.is_empty()
+    }
+
+    fn admit(&mut self) {
+        if self.active.is_none() {
+            if let Some(r) = self.queue.pop_front() {
+                self.active = Some((r, PhaseState::Prefilling { done: 0 }));
+            }
+        }
+    }
+
+    /// Whether a queued request should preempt the active one at a prefill
+    /// slice boundary: strictly higher priority only.
+    fn should_preempt(&self) -> bool {
+        match (&self.active, self.queue.front()) {
+            (Some((active, PhaseState::Prefilling { done })), Some(front)) => {
+                // Restarting prefill is wasteful; only preempt early.
+                front.priority < active.priority && *done < active.prompt_tokens / 2
+            }
+            _ => false,
+        }
+    }
+
+    /// Produce the next unit of work (None when idle).
+    pub fn next(&mut self) -> Option<WorkItem> {
+        self.admit();
+        if self.should_preempt() {
+            // Swap the active request back into the queue (front of its
+            // class); its prefill restarts later (cache released).
+            let (active, _) = self.active.take().unwrap();
+            self.submit(active);
+            self.admit();
+        }
+        let (req, state) = self.active.as_mut()?;
+        let item = match state {
+            PhaseState::Prefilling { done } => {
+                let len = self.chunk.min(req.prompt_tokens - *done);
+                let start = *done;
+                *done += len;
+                if *done >= req.prompt_tokens {
+                    let w = WorkItem::PrefillChunk { id: req.id, start, len };
+                    *state = PhaseState::Decoding { generated: 0 };
+                    return Some(w);
+                }
+                WorkItem::PrefillChunk { id: req.id, start, len }
+            }
+            PhaseState::Decoding { generated } => {
+                let pos = req.prompt_tokens + *generated;
+                *generated += 1;
+                if *generated >= req.max_new_tokens {
+                    *state = PhaseState::Finished;
+                }
+                WorkItem::DecodeStep { id: req.id, pos }
+            }
+            PhaseState::Finished => {
+                let id = req.id;
+                self.finished.push(id);
+                self.active = None;
+                return Some(WorkItem::Finish { id });
+            }
+        };
+        Some(item)
+    }
+
+    /// Drain the full schedule (for tests/simulation).
+    pub fn drain(&mut self) -> Vec<WorkItem> {
+        let mut out = Vec::new();
+        while self.has_work() {
+            match self.next() {
+                Some(w) => out.push(w),
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize, new: usize, prio: u8) -> Request {
+        Request { id, prompt_tokens: prompt, max_new_tokens: new, priority: prio }
+    }
+
+    #[test]
+    fn single_request_schedule_shape() {
+        let mut s = Scheduler::new(128);
+        s.submit(req(1, 300, 3, 1));
+        let items = s.drain();
+        // 3 prefill chunks (128+128+44), 3 decode steps, 1 finish.
+        assert_eq!(
+            items[..3],
+            [
+                WorkItem::PrefillChunk { id: 1, start: 0, len: 128 },
+                WorkItem::PrefillChunk { id: 1, start: 128, len: 128 },
+                WorkItem::PrefillChunk { id: 1, start: 256, len: 44 },
+            ]
+        );
+        assert_eq!(items[3], WorkItem::DecodeStep { id: 1, pos: 300 });
+        assert_eq!(items[5], WorkItem::DecodeStep { id: 1, pos: 302 });
+        assert_eq!(items[6], WorkItem::Finish { id: 1 });
+        assert_eq!(items.len(), 7);
+        assert_eq!(s.finished, vec![1]);
+    }
+
+    #[test]
+    fn fifo_within_priority_class() {
+        let mut s = Scheduler::new(64);
+        s.submit(req(1, 64, 1, 1));
+        s.submit(req(2, 64, 1, 1));
+        let items = s.drain();
+        let order: Vec<u64> = items
+            .iter()
+            .filter_map(|w| match w {
+                WorkItem::Finish { id } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2]);
+    }
+
+    #[test]
+    fn high_priority_preempts_early_prefill() {
+        let mut s = Scheduler::new(64);
+        s.submit(req(1, 640, 1, 5)); // long, low priority
+        // First slice of the long prompt goes through.
+        assert_eq!(s.next(), Some(WorkItem::PrefillChunk { id: 1, start: 0, len: 64 }));
+        // An urgent short request arrives.
+        s.submit(req(2, 64, 1, 0));
+        // Preemption at the slice boundary: request 2 runs to completion.
+        assert_eq!(s.next(), Some(WorkItem::PrefillChunk { id: 2, start: 0, len: 64 }));
+        assert_eq!(s.next(), Some(WorkItem::DecodeStep { id: 2, pos: 64 }));
+        assert_eq!(s.next(), Some(WorkItem::Finish { id: 2 }));
+        // The long request restarts its prefill from 0 (cache released).
+        assert_eq!(s.next(), Some(WorkItem::PrefillChunk { id: 1, start: 0, len: 64 }));
+    }
+
+    #[test]
+    fn decode_is_never_preempted() {
+        let mut s = Scheduler::new(64);
+        s.submit(req(1, 64, 4, 5));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        assert!(matches!(s.next(), Some(WorkItem::DecodeStep { id: 1, .. })));
+        // Urgent arrival mid-decode does not preempt.
+        s.submit(req(2, 64, 1, 0));
+        for _ in 0..3 {
+            assert!(matches!(s.next(), Some(WorkItem::DecodeStep { id: 1, .. })));
+        }
+        assert_eq!(s.next(), Some(WorkItem::Finish { id: 1 }));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 2, .. })));
+    }
+
+    #[test]
+    fn late_prefill_is_not_preempted() {
+        let mut s = Scheduler::new(64);
+        s.submit(req(1, 256, 1, 5));
+        // Run 3 of 4 slices (past the half-way no-preempt threshold).
+        for _ in 0..3 {
+            assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        }
+        s.submit(req(2, 64, 1, 0));
+        // Request 1 finishes its prefill + decode before 2 starts.
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, start: 192, .. })));
+        assert!(matches!(s.next(), Some(WorkItem::DecodeStep { id: 1, .. })));
+    }
+
+    #[test]
+    fn prompt_positions_are_contiguous_and_complete() {
+        // Property: for any (prompt, chunk) the prefill slices tile the
+        // prompt exactly once, in order.
+        for (prompt, chunk) in [(1usize, 128usize), (128, 128), (129, 128), (1000, 64), (77, 13)] {
+            let mut s = Scheduler::new(chunk);
+            s.submit(req(9, prompt, 1, 1));
+            let items = s.drain();
+            let mut covered = 0usize;
+            for w in &items {
+                if let WorkItem::PrefillChunk { start, len, .. } = w {
+                    assert_eq!(*start, covered, "prompt {prompt} chunk {chunk}");
+                    covered += len;
+                }
+            }
+            assert_eq!(covered, prompt);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_rejected() {
+        Scheduler::new(64).submit(req(1, 0, 1, 1));
+    }
+}

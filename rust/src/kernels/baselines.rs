@@ -1,0 +1,377 @@
+//! Baseline framework models — the five systems the paper compares against
+//! (§6.1): llama.cpp, T-MAC, bitnet.cpp (CPU-only), QNN (NPU, hardware
+//! formats only), and llm.npu (hybrid NPU prefill + CPU decode).
+//!
+//! Each baseline is an analytical kernel-latency model on the same SoC
+//! description the T-MAN kernels use, calibrated to the paper's own
+//! measurements (Fig. 5 breakdown, Table 2 bandwidths, §6.2–6.3 relative
+//! results). Functional correctness paths reuse `kernels::reference`.
+
+use crate::npu::config::SocConfig;
+use crate::npu::cost::Breakdown;
+use crate::npu::energy::Placement;
+use crate::npu::hmx::{self, HmxPrecision};
+use crate::npu::memory::LoadMethod;
+use crate::quant::formats::{ActDtype, Granularity, QuantFormat, WeightDtype};
+
+/// Every framework the evaluation sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Framework {
+    TMan,
+    LlamaCpp,
+    TMac,
+    BitnetCpp,
+    LlmNpu,
+    Qnn,
+}
+
+impl Framework {
+    pub fn name(self) -> &'static str {
+        match self {
+            Framework::TMan => "T-MAN",
+            Framework::LlamaCpp => "llama.cpp",
+            Framework::TMac => "T-MAC",
+            Framework::BitnetCpp => "bitnet.cpp",
+            Framework::LlmNpu => "llm.npu",
+            Framework::Qnn => "QNN",
+        }
+    }
+
+    pub fn all() -> [Framework; 6] {
+        [
+            Framework::TMan,
+            Framework::LlamaCpp,
+            Framework::TMac,
+            Framework::BitnetCpp,
+            Framework::LlmNpu,
+            Framework::Qnn,
+        ]
+    }
+
+    /// Where each phase runs (drives the Table 3 energy model).
+    pub fn placement(self, phase: Phase) -> Placement {
+        match (self, phase) {
+            (Framework::TMan, _) | (Framework::Qnn, _) => Placement::NpuOnly,
+            (Framework::LlamaCpp, _) | (Framework::TMac, _) | (Framework::BitnetCpp, _) => {
+                Placement::CpuOnly
+            }
+            // llm.npu: NPU prefill with CPU outlier cores hot; CPU decode.
+            (Framework::LlmNpu, Phase::Prefill) => Placement::Hybrid,
+            (Framework::LlmNpu, Phase::Decode) => Placement::Hybrid,
+        }
+    }
+
+    /// Which quantization formats the framework can express (§6.1).
+    pub fn supports(self, fmt: QuantFormat) -> bool {
+        match self {
+            // T-MAN: per-group, per-channel, per-tensor; 1.58/2/4-bit.
+            Framework::TMan => fmt.weight.is_quantized() && fmt.weight != WeightDtype::Int8,
+            // llama.cpp / T-MAC: per-group CPU kernels (and coarser).
+            Framework::LlamaCpp | Framework::TMac => {
+                matches!(fmt.weight, WeightDtype::Int4 | WeightDtype::Int2 | WeightDtype::Ternary)
+            }
+            // bitnet.cpp: ternary per-tensor only.
+            Framework::BitnetCpp => {
+                fmt.weight == WeightDtype::Ternary && fmt.gran == Granularity::PerTensor
+            }
+            // llm.npu: per-tensor INT8 prefill / INT4 decode.
+            Framework::LlmNpu => {
+                fmt.gran == Granularity::PerTensor
+                    && matches!(fmt.weight, WeightDtype::Int8 | WeightDtype::Int4 | WeightDtype::Ternary)
+            }
+            // QNN: per-channel / per-tensor only — per-group is the gap
+            // T-MAN fills (§6, Table 4).
+            Framework::Qnn => {
+                matches!(fmt.gran, Granularity::PerChannel | Granularity::PerTensor)
+            }
+        }
+    }
+
+    /// Bytes of weight storage the framework keeps resident for one (m, k)
+    /// projection — llm.npu stores TWO copies (INT8 prefill + INT4 decode),
+    /// which is what OOMs 8B models on 12 GB devices (§6.3).
+    pub fn resident_weight_bytes(self, m: usize, k: usize, fmt: QuantFormat) -> usize {
+        match self {
+            Framework::LlmNpu => {
+                QuantFormat::llmnpu_prefill().weight_footprint(m, k)
+                    + QuantFormat::llmnpu_decode().weight_footprint(m, k)
+            }
+            Framework::Qnn => {
+                // Per-channel INT4 (or FP16 when unquantized).
+                let f = if fmt.weight.is_quantized() { QuantFormat::qnn_w4a16() } else { fmt };
+                f.weight_footprint(m, k)
+            }
+            _ => fmt.weight_footprint(m, k),
+        }
+    }
+}
+
+/// Inference phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+// --------------------------------------------------------------------------
+// CPU baselines
+// --------------------------------------------------------------------------
+
+/// llama.cpp-style CPU mpGEMV: stream packed weights, dequantize on NEON,
+/// dot-product. MEM / DQ / CMP decomposition per Fig. 5 (right bar).
+pub fn cpu_dequant_gemv(soc: &SocConfig, m: usize, k: usize, fmt: QuantFormat) -> Breakdown {
+    let cpu = &soc.cpu;
+    let bits = fmt.weight.bits() as usize;
+    let bytes = (m * k * bits).div_ceil(8) + fmt.gran.num_groups(m, k) * 4;
+    let mem_us = bytes as f64 / (cpu.mem_gbps * 1e3);
+    let elems = (m * k) as f64;
+    // Dequant: ~1 op per element at the CPU's elementwise-float rate.
+    let dq_us = elems / (cpu.dequant_gops * 1e3);
+    // MACs at the SIMD fma rate.
+    let cmp_us = 2.0 * elems / (cpu.gemm_gops * 1e3);
+    // CPU overlaps loads with compute imperfectly; keep stages additive as
+    // the paper's Fig. 5 does.
+    Breakdown { mem_us, dq_us, cmp_us, overhead_us: 1.0 }
+}
+
+/// T-MAC-style CPU LUT GEMV: no dequantization; TBL lookups at the NEON
+/// table-lookup rate; memory traffic identical to llama.cpp's packed bytes.
+pub fn cpu_lut_gemv(soc: &SocConfig, m: usize, k: usize, fmt: QuantFormat) -> Breakdown {
+    let cpu = &soc.cpu;
+    let bits = fmt.weight.bits() as usize;
+    let bytes = (m * k * bits).div_ceil(8) + fmt.gran.num_groups(m, k) * 4;
+    let mem_us = bytes as f64 / (cpu.mem_gbps * 1e3);
+    // One lookup per 4 one-bit weights per plane.
+    let lookups = (m * k * bits) as f64 / 4.0;
+    let cmp_us = lookups / (cpu.tbl_glookups * 1e3);
+    // Table precompute: 15 adds per 4 activations (vectorized) — small.
+    let dq_us = (k as f64 / 4.0 * 15.0) / (cpu.gemm_gops * 1e3);
+    Breakdown { mem_us, dq_us, cmp_us, overhead_us: 1.0 }
+}
+
+/// bitnet.cpp ternary CPU GEMV: specialized 2-bit kernel, modeled as the
+/// T-MAC LUT path at 2 bits (its kernels share the TL lineage).
+pub fn bitnet_cpu_gemv(soc: &SocConfig, m: usize, k: usize) -> Breakdown {
+    cpu_lut_gemv(soc, m, k, QuantFormat::new(WeightDtype::Ternary, ActDtype::Int8, Granularity::PerTensor))
+}
+
+/// CPU mpGEMM (prefill on CPU for the CPU-only frameworks): dequant once,
+/// then dense GEMM at the CPU rate — dominated by compute at n=128.
+pub fn cpu_gemm(soc: &SocConfig, n: usize, m: usize, k: usize, fmt: QuantFormat) -> Breakdown {
+    let cpu = &soc.cpu;
+    let bits = fmt.weight.bits() as usize;
+    let bytes = (m * k * bits).div_ceil(8);
+    let mem_us = bytes as f64 / (cpu.mem_gbps * 1e3);
+    let dq_us = (m * k) as f64 / (cpu.dequant_gops * 1e3);
+    let cmp_us = 2.0 * (n * m * k) as f64 / (cpu.gemm_gops * 1e3);
+    Breakdown { mem_us, dq_us, cmp_us, overhead_us: 1.0 }
+}
+
+// --------------------------------------------------------------------------
+// QNN (NPU, hardware formats)
+// --------------------------------------------------------------------------
+
+/// QNN NPU GEMV. Per-channel INT4 / per-tensor formats run natively (no
+/// dequant stage); FP16 streams 16-bit weights. Decode is bandwidth-bound,
+/// and QNN's generic graph executor loads weights through the l2fetch path
+/// (26–32 GB/s) rather than the hand-tuned DDR→TCM DMA (59 GB/s) that
+/// T-MAN's custom kernels use — the Table 2 analysis is exactly the
+/// optimization QNN's closed kernels leave on the table, and the source of
+/// the paper's 1.5–1.8× end-to-end decode gap at equal bit width (§6.3).
+pub fn qnn_gemv(soc: &SocConfig, m: usize, k: usize, fmt: QuantFormat) -> Breakdown {
+    let npu = &soc.npu;
+    let wbits = if fmt.weight.is_quantized() { fmt.weight.bits() as usize } else { 16 };
+    // Per-channel scales: m pairs — negligible vs per-block.
+    let bytes = (m * k * wbits).div_ceil(8) + m * 4;
+    let mem_us = LoadMethod::L2Fetch.transfer_us(npu, bytes, npu.hvx_contexts);
+    // Native-format MAC on the vector cores (HMX idle at n=1): INT8-class
+    // vector MACs, 2 bytes/lane.
+    let lanes = npu.hvx_vector_bytes / 2;
+    let instrs = (m * k).div_ceil(lanes);
+    let cmp_us = instrs as f64 * npu.valu_cpi / npu.hvx_contexts as f64 * npu.cycle_us();
+    Breakdown { mem_us, dq_us: 0.0, cmp_us, overhead_us: 2.0 }
+}
+
+/// QNN NPU GEMM (prefill): native INT8/FP16 HMX, weights streamed by DMA,
+/// no dequant stage; DMA and HMX overlap (QNN pipelines internally).
+pub fn qnn_gemm(soc: &SocConfig, n: usize, m: usize, k: usize, fmt: QuantFormat) -> Breakdown {
+    let npu = &soc.npu;
+    let (wbits, prec) = if fmt.weight.is_quantized() {
+        (fmt.weight.bits() as usize, HmxPrecision::Int8)
+    } else {
+        (16, HmxPrecision::Fp16)
+    };
+    let bytes = (m * k * wbits).div_ceil(8) + m * 4;
+    let mem_us = LoadMethod::Dma.transfer_us(npu, bytes, 1);
+    let cmp_us = hmx::hmx_gemm_time_us(npu, n, m, k, prec);
+    Breakdown { mem_us, dq_us: 0.0, cmp_us, overhead_us: 2.0 }
+}
+
+/// QNN decode/prefill latency (overlapped mem/compute).
+pub fn qnn_latency_us(b: &Breakdown) -> f64 {
+    b.mem_us.max(b.cmp_us) + b.dq_us + b.overhead_us
+}
+
+// --------------------------------------------------------------------------
+// llm.npu (hybrid)
+// --------------------------------------------------------------------------
+
+/// llm.npu decode: INT4 weights dequantized to INT8 on the **CPU** (it
+/// cannot keep GEMV on the NPU), plus a per-kernel NPU↔CPU handoff that
+/// makes it "fail to accelerate the decoding kernel" (§6.2).
+pub fn llmnpu_gemv(soc: &SocConfig, m: usize, k: usize) -> Breakdown {
+    let mut b = cpu_dequant_gemv(soc, m, k, QuantFormat::llmnpu_decode());
+    b.overhead_us += soc.npu_cpu_sync_us; // outlier-offload communication
+    b
+}
+
+/// llm.npu prefill: per-tensor INT8 GEMM on the HMX plus parallel CPU
+/// outlier GEMV and a synchronization per chunk.
+pub fn llmnpu_gemm(soc: &SocConfig, n: usize, m: usize, k: usize) -> Breakdown {
+    let npu = &soc.npu;
+    let bytes = m * k; // INT8 copy
+    let mem_us = LoadMethod::Dma.transfer_us(npu, bytes, 1);
+    let cmp_us = hmx::hmx_gemm_time_us(npu, n, m, k, HmxPrecision::Int8);
+    // Outlier channels (~1%) on CPU, overlapped but joined per chunk.
+    let outlier_us = 2.0 * (n * m * k / 100) as f64 / (soc.cpu.gemm_gops * 1e3);
+    let join = soc.npu_cpu_sync_us / 4.0; // chunk-level sync amortized
+    Breakdown { mem_us, dq_us: 0.0, cmp_us: cmp_us.max(outlier_us), overhead_us: 2.0 + join }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dequant_gemm::tman_gemm_latency_us;
+    use crate::kernels::lut_gemv::tman_gemv_latency_us;
+
+    fn soc() -> SocConfig {
+        SocConfig::oneplus12()
+    }
+
+    #[test]
+    fn fig5_npu_convertdq_slower_than_cpu() {
+        // Fig. 5: W4A16 4096x4096 GEMV runs ~3.8x slower on the NPU (naive
+        // dequant) than on the CPU; the DQ stage dominates on the NPU.
+        use crate::kernels::dequant_gemm::{tile_cost_shape, DequantStrategy};
+        use crate::kernels::tiling;
+        let s = soc();
+        let fmt = QuantFormat::tman_w4a16();
+        let cpu = cpu_dequant_gemv(&s, 4096, 4096, fmt);
+        let t = tiling::search(&s.npu, fmt, 4096, 4096, 1);
+        let tile = tile_cost_shape(&s.npu, &t, 1, 4096, 4096, fmt, DequantStrategy::ConvertDq, s.npu.hvx_contexts);
+        let tiles = crate::kernels::dequant_gemm::num_tiles_shape(&t, 4096, 4096) as f64;
+        let npu_total = tile.sequential_us() * tiles;
+        let cpu_total = cpu.sequential_us();
+        let ratio = npu_total / cpu_total;
+        assert!(ratio > 2.0 && ratio < 8.0, "NPU/CPU naive-dequant GEMV ratio {ratio} (paper: 3.8x)");
+        // DQ dominates the NPU bar.
+        assert!(tile.dq_us > tile.mem_us && tile.dq_us > tile.cmp_us);
+    }
+
+    #[test]
+    fn tmac_beats_llamacpp_on_cpu() {
+        let s = soc();
+        let fmt = QuantFormat::tman_w4a16();
+        let lc = cpu_dequant_gemv(&s, 4096, 4096, fmt).sequential_us();
+        let tm = cpu_lut_gemv(&s, 4096, 4096, fmt).sequential_us();
+        assert!(tm < lc, "T-MAC {tm} !< llama.cpp {lc}");
+    }
+
+    #[test]
+    fn tman_decode_beats_qnn_fp16_by_large_factor() {
+        // §6.2: up to 8x vs QNN-FP16 (weights are 8x smaller at 2 bits).
+        let s = soc();
+        let tman2 = tman_gemv_latency_us(&s.npu, 4096, 4096, QuantFormat::tman_w2a16());
+        let qnn16 = qnn_latency_us(&qnn_gemv(&s, 4096, 4096, QuantFormat::qnn_fp16()));
+        let ratio = qnn16 / tman2;
+        assert!(ratio > 4.0 && ratio < 13.0, "T-MAN W2 vs QNN FP16 {ratio} (paper: up to 8x; ours overshoots slightly)");
+    }
+
+    #[test]
+    fn tman_decode_vs_qnn_w4_comparable_and_w2_faster() {
+        // §6.2: ~parity on 4-bit despite finer granularity; 1.8-2.5x on 2-bit.
+        let s = soc();
+        let tman4 = tman_gemv_latency_us(&s.npu, 4096, 4096, QuantFormat::tman_w4a16());
+        let tman2 = tman_gemv_latency_us(&s.npu, 4096, 4096, QuantFormat::tman_w2a16());
+        let qnn4 = qnn_latency_us(&qnn_gemv(&s, 4096, 4096, QuantFormat::qnn_w4a16()));
+        let parity = tman4 / qnn4;
+        assert!(parity < 1.3, "T-MAN W4 vs QNN W4 ratio {parity} (paper: similar)");
+        let w2_speedup = qnn4 / tman2;
+        assert!(w2_speedup > 1.5 && w2_speedup < 3.0, "QNN-W4/T-MAN-W2 {w2_speedup} (paper: 1.8-2.5x)");
+    }
+
+    #[test]
+    fn llmnpu_decode_fails_to_accelerate() {
+        // §6.2: llm.npu falls back to CPU + sync for decode; worse than
+        // plain CPU and far worse than T-MAN.
+        let s = soc();
+        let llm = llmnpu_gemv(&s, 4096, 4096).sequential_us();
+        let cpu = cpu_dequant_gemv(&s, 4096, 4096, QuantFormat::llmnpu_decode()).sequential_us();
+        let tman = tman_gemv_latency_us(&s.npu, 4096, 4096, QuantFormat::tman_w4a16());
+        assert!(llm > cpu);
+        assert!(llm / tman > 3.0, "llm.npu/T-MAN decode {}", llm / tman);
+    }
+
+    #[test]
+    fn tman_prefill_up_to_30x_over_cpu() {
+        // §6.2 mpGEMM: "T-MAN delivers a speedup of up to 30x over CPU-only
+        // frameworks like llama.cpp and T-MAC".
+        let s = soc();
+        let fmt = QuantFormat::tman_w4afp16();
+        let tman = tman_gemm_latency_us(&s.npu, 128, 4096, 4096, fmt);
+        let cpu = cpu_gemm(&s, 128, 4096, 4096, fmt).sequential_us();
+        let ratio = cpu / tman;
+        assert!(ratio > 8.0 && ratio < 40.0, "prefill CPU/T-MAN {ratio} (paper: up to 30x)");
+    }
+
+    #[test]
+    fn tman_prefill_comparable_to_qnn_fp16() {
+        // §6.2: "comparable to QNN's native W_FP16A_FP16 kernel".
+        let s = soc();
+        let tman = tman_gemm_latency_us(&s.npu, 128, 4096, 4096, QuantFormat::tman_w4afp16());
+        let qnn = qnn_latency_us(&qnn_gemm(&s, 128, 4096, 4096, QuantFormat::qnn_fp16()));
+        let ratio = tman / qnn;
+        assert!(ratio < 1.5 && ratio > 0.4, "T-MAN/QNN prefill ratio {ratio}");
+    }
+
+    #[test]
+    fn tman_beats_llmnpu_on_small_prefill_shapes() {
+        // §6.2: "considerably faster than llm.npu on smaller matrix shapes
+        // (e.g., 2560x2560x128), as it avoids the NPU-CPU synchronization".
+        let s = soc();
+        let tman = tman_gemm_latency_us(&s.npu, 128, 2560, 2560, QuantFormat::tman_w2a16());
+        let llm = llmnpu_gemm(&s, 128, 2560, 2560).sequential_us();
+        assert!(llm / tman > 1.2, "llm.npu/T-MAN small-shape prefill {}", llm / tman);
+    }
+
+    #[test]
+    fn llmnpu_double_copy_oom_on_12gb() {
+        // §6.3: llm.npu OOMs 8B models on the 12 GB OnePlus 13T.
+        // 8B params: INT8 copy (8 GB) + INT4 copy (4 GB) > 12 GB with
+        // activations; T-MAN's single INT4 copy fits easily.
+        let params: usize = 8_000_000_000;
+        let llm_bytes = params + params / 2;
+        let tman_bytes = QuantFormat::tman_w4a16().weight_footprint(params / 4096, 4096);
+        let dram = SocConfig::oneplus13t().dram_bytes;
+        assert!(llm_bytes > dram * 9 / 10, "llm.npu resident {llm_bytes} should exhaust 12GB");
+        assert!(tman_bytes < dram / 2);
+    }
+
+    #[test]
+    fn format_support_matrix() {
+        assert!(Framework::TMan.supports(QuantFormat::tman_w4a16()));
+        assert!(Framework::TMan.supports(QuantFormat::bitnet()));
+        assert!(!Framework::Qnn.supports(QuantFormat::tman_w4a16())); // per-block
+        assert!(Framework::Qnn.supports(QuantFormat::qnn_w4a16()));
+        assert!(Framework::BitnetCpp.supports(QuantFormat::bitnet()));
+        assert!(!Framework::BitnetCpp.supports(QuantFormat::tman_w4a16()));
+        assert!(Framework::LlamaCpp.supports(QuantFormat::tman_w4a16()));
+    }
+
+    #[test]
+    fn placements() {
+        assert_eq!(Framework::TMan.placement(Phase::Decode), Placement::NpuOnly);
+        assert_eq!(Framework::LlamaCpp.placement(Phase::Decode), Placement::CpuOnly);
+        assert_eq!(Framework::LlmNpu.placement(Phase::Prefill), Placement::Hybrid);
+    }
+}

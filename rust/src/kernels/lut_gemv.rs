@@ -1,0 +1,397 @@
+//! T-MAN decoding kernel: LUT-based mixed-precision GEMV on the HVX vector
+//! cores (paper §4.3).
+//!
+//! Instead of dequantizing weights, the *activations* are precomputed into
+//! 16-entry tables (one per group of 4 K-positions): entry `idx` holds the
+//! partial dot product `Σ_{j: idx_j=1} a[4g+j]`. Each 4-bit nibble of a
+//! weight bit-plane then selects its partial sum with a single VLUT16
+//! lookup, and the per-plane results are shift-accumulated:
+//!
+//! `y[i] = Σ_blocks s_g · ( Σ_b 2^b · Σ_groups table_g[nib_b(i,g)] − z_g · Σ_{k∈g} a[k] )`
+//!
+//! Unlike dot-product kernels (vectorized along K), lookups vectorize along
+//! the *output* channel axis M, producing vectors of partials that cannot be
+//! reduced immediately — the intermediates problem §4.3 describes. T-MAN's
+//! two-level tiling holds `K_lut` tables in registers (outer tile, K span up
+//! to 256) while aggregating at quantization-block granularity (inner tile),
+//! and spills excess fp32 accumulators to a software-managed **TCM spill
+//! buffer** instead of letting the compiler spill to the slow L2. The
+//! `SpillPolicy` knob reproduces that ablation.
+
+use crate::kernels::tiling::{self, UnifiedTiling};
+use crate::npu::config::NpuConfig;
+use crate::npu::cost::{Breakdown, KernelCost, OpCounts};
+use crate::npu::hvx::{self, VlutVariant};
+use crate::npu::memory::LoadMethod;
+use crate::quant::bitserial::BitSerialWeights;
+use crate::quant::formats::QuantFormat;
+use crate::util::f16_round;
+
+/// Where intermediate fp32 accumulators live when the outer tile exceeds
+/// the register file (§4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillPolicy {
+    /// T-MAN: software-managed spill buffer in TCM.
+    TcmBuffer,
+    /// Naive: compiler spills to L2 (the "severely degrading" default).
+    L2,
+}
+
+/// Result of one simulated GEMV: bit-exact output + modeled cost.
+#[derive(Debug, Clone)]
+pub struct GemvResult {
+    pub y: Vec<f32>,
+    pub cost: KernelCost,
+}
+
+/// Activation tables for one GEMV call: `tables[g][idx]` = partial sum of
+/// activations `4g..4g+4` selected by `idx`; plus per-K prefix data for the
+/// zero-point correction.
+#[derive(Debug, Clone)]
+pub struct ActTables {
+    pub tables: Vec<[f32; 16]>,
+    /// `block_sums[i]` = Σ of activations in quant block `i` (for per-block
+    /// zero correction), for the canonical block size used by the weights.
+    pub block_sums: Vec<f32>,
+    pub block_len: usize,
+    pub k: usize,
+}
+
+/// Precompute the activation tables (the "precomputation kernel" that the
+/// graph-optimization pass of §5 deduplicates across Q/K/V and up/gate).
+/// Entries are rounded to fp16 — they are stored in 16-bit VLUT entries.
+pub fn precompute_tables(act: &[f32], block_len: usize) -> ActTables {
+    let k = act.len();
+    let ngroups = k.div_ceil(4);
+    let mut tables = vec![[0.0f32; 16]; ngroups];
+    for g in 0..ngroups {
+        let mut vals = [0.0f32; 4];
+        for j in 0..4 {
+            vals[j] = act.get(4 * g + j).copied().unwrap_or(0.0);
+        }
+        let t = &mut tables[g];
+        for idx in 1usize..16 {
+            // Incremental construction: t[idx] = t[idx without lowest set
+            // bit] + a[lowest set bit] — 1 add per entry, as on hardware.
+            let low = idx.trailing_zeros() as usize;
+            t[idx] = f16_round(t[idx & (idx - 1)] + vals[low]);
+        }
+    }
+    let nblocks = k.div_ceil(block_len);
+    let mut block_sums = vec![0.0f32; nblocks];
+    for (j, &a) in act.iter().enumerate() {
+        block_sums[j / block_len] += a;
+    }
+    ActTables { tables, block_sums, block_len, k }
+}
+
+/// The T-MAN LUT-GEMV kernel over bit-serial weights.
+pub struct LutGemv<'a> {
+    pub weights: &'a BitSerialWeights,
+    pub fmt: QuantFormat,
+    pub tiling: UnifiedTiling,
+    pub variant: VlutVariant,
+    pub spill: SpillPolicy,
+    /// HVX threads used.
+    pub threads: usize,
+}
+
+impl<'a> LutGemv<'a> {
+    pub fn new(cfg: &NpuConfig, weights: &'a BitSerialWeights, fmt: QuantFormat) -> Self {
+        let tiling = tiling::search(cfg, fmt, weights.m, weights.k, 1);
+        Self {
+            weights,
+            fmt,
+            tiling,
+            variant: VlutVariant::Vlut16,
+            spill: SpillPolicy::TcmBuffer,
+            threads: cfg.hvx_contexts,
+        }
+    }
+
+    /// Execute functionally (bit-exact w.r.t. the table semantics) and
+    /// produce the modeled cost for `cfg`.
+    pub fn run(&self, cfg: &NpuConfig, act: &[f32], tables: &ActTables) -> GemvResult {
+        let w = self.weights;
+        assert_eq!(act.len(), w.k);
+        assert_eq!(tables.k, w.k);
+        let bits = w.dtype.bits() as usize;
+        let block = tables.block_len;
+        let nblocks = w.k.div_ceil(block);
+        let groups_per_block = block / 4;
+
+        // ---- functional execution -------------------------------------
+        let mut y = vec![0.0f32; w.m];
+        for i in 0..w.m {
+            let mut row_acc = 0.0f64;
+            for blk in 0..nblocks {
+                let grp0 = blk * groups_per_block;
+                let grp1 = (grp0 + groups_per_block).min(w.k.div_ceil(4));
+                // Accumulate lookups per bit plane over the block.
+                let mut block_acc = 0.0f32;
+                for b in 0..bits {
+                    let mut plane_acc = 0.0f32;
+                    for g in grp0..grp1 {
+                        let nib = w.nibble(b, i, g);
+                        plane_acc += tables.tables[g][nib as usize];
+                    }
+                    block_acc += (1u32 << b) as f32 * plane_acc;
+                }
+                // Per-block affine: scale * (lookup_sum - zero * Σa_block).
+                let gidx = w.group_of(i, blk * block);
+                let s = w.scales[gidx];
+                let z = w.zeros[gidx];
+                row_acc += (s * (block_acc - z * tables.block_sums[blk])) as f64;
+            }
+            y[i] = row_acc as f32;
+        }
+
+        // ---- cost model -------------------------------------------------
+        let cost = self.cost(cfg, act.len());
+        GemvResult { y, cost }
+    }
+
+    /// Pure cost model (no functional execution) — used by the end-to-end
+    /// engine, which gets its numerics from the PJRT artifacts instead.
+    pub fn cost(&self, cfg: &NpuConfig, k: usize) -> KernelCost {
+        debug_assert_eq!(k, self.weights.k);
+        gemv_cost(cfg, self.weights.m, self.weights.k, self.fmt, &self.tiling, self.variant, self.spill, self.threads)
+    }
+
+    /// Decode-path latency: DMA weight streaming overlaps the vector-core
+    /// lookups (the decode analogue of the prefill pipeline), so the total
+    /// is the max of the two plus precompute + launch.
+    pub fn latency_us(&self, cfg: &NpuConfig, k: usize) -> f64 {
+        let c = self.cost(cfg, k);
+        c.breakdown.mem_us.max(c.breakdown.cmp_us) + c.breakdown.dq_us + c.breakdown.overhead_us
+    }
+}
+
+/// Shape-only cost model for the T-MAN LUT GEMV — shared by the kernel
+/// struct above and the benchmark harness (which sweeps paper shapes
+/// without materializing multi-GB weight tensors).
+#[allow(clippy::too_many_arguments)]
+pub fn gemv_cost(
+    cfg: &NpuConfig,
+    m: usize,
+    k: usize,
+    fmt: QuantFormat,
+    tiling: &UnifiedTiling,
+    variant: VlutVariant,
+    spill: SpillPolicy,
+    threads: usize,
+) -> KernelCost {
+    let bits = fmt.weight.bits() as usize;
+    let act_bits = match fmt.act.bytes() {
+        1 => 8,
+        _ => 16,
+    };
+    let ngroups = k.div_ceil(4);
+    let m_lookup_rows = tiling.m_lookups_d;
+    let block_len = fmt.gran.group_len(k).max(4);
+
+    let mut ops = OpCounts::default();
+
+    // Weights stream DDR->TCM over DMA; activations + scales are small.
+    let weight_bytes = (m * k * bits).div_ceil(8);
+    let scale_bytes = fmt.gran.num_groups(m, k) * 4;
+    ops.ddr_bytes = weight_bytes + scale_bytes + k * fmt.act.bytes();
+    let mem_us = LoadMethod::Dma.transfer_us(cfg, ops.ddr_bytes, threads);
+
+    // Precompute: 15 adds per 16-entry table, vectorized across tables
+    // along the register lanes (act_bytes-wide lanes).
+    let lanes = cfg.hvx_vector_bytes / fmt.act.bytes().max(2);
+    ops.valu_instrs += (ngroups * 15).div_ceil(lanes);
+    // Block sums: one add per activation, vectorized.
+    ops.valu_instrs += k.div_ceil(lanes);
+    let dq_us = hvx::valu_time_us(cfg, ops.valu_instrs, threads);
+
+    // Lookups: one VLUT per (bit-plane x table x M-vector) — each issue
+    // covers `lookups_per_instr` lookups = m_lookup_rows rows x
+    // tables-per-issue tables.
+    let lookups_total = bits * m * ngroups;
+    let per_instr = variant.lookups_per_instr(act_bits);
+    ops.vlut_instrs = lookups_total.div_ceil(per_instr);
+    // Shift-accumulate: ~1 vector op per VLUT issue; per-block affine:
+    // 2 ops per (row-vector x block).
+    let nblocks = k.div_ceil(block_len);
+    let agg_instrs = ops.vlut_instrs + 2 * m.div_ceil(m_lookup_rows) * nblocks;
+    ops.valu_instrs += agg_instrs;
+    let lookup_us = hvx::vlut_time_us(cfg, variant, ops.vlut_instrs, threads)
+        + hvx::valu_time_us(cfg, agg_instrs, threads);
+
+    // Spill traffic: fp32 accumulators for the outer tile exceed the
+    // register file; every outer-tile pass writes/reads M_tile fp32
+    // per K-span.
+    let k_span = tiling.k_span_of_luts(cfg, fmt.act.bytes().max(2));
+    let outer_passes = k.div_ceil(k_span);
+    let spill_bytes = 2 * m * 4 * outer_passes.saturating_sub(1);
+    let spill_us = match spill {
+        SpillPolicy::TcmBuffer => {
+            ops.tcm_spill_bytes = spill_bytes;
+            (spill_bytes.div_ceil(cfg.hvx_vector_bytes)) as f64
+                * cfg.tcm_access_cycles
+                * cfg.cycle_us()
+                / threads as f64
+        }
+        SpillPolicy::L2 => {
+            ops.l2_spill_bytes = spill_bytes;
+            (spill_bytes.div_ceil(cfg.l2_access_bytes)) as f64
+                * cfg.l2_spill_cycles_per_line
+                * cfg.cycle_us()
+                / threads as f64
+        }
+    };
+
+    let breakdown = Breakdown {
+        mem_us,
+        dq_us,
+        cmp_us: lookup_us + spill_us,
+        overhead_us: 2.0, // kernel launch on the NPU
+    };
+    KernelCost { breakdown, ops, label: format!("tman-lut-gemv {m}x{k} {fmt}") }
+}
+
+/// Shape-only decode latency for T-MAN (DMA overlaps lookups).
+pub fn tman_gemv_latency_us(cfg: &NpuConfig, m: usize, k: usize, fmt: QuantFormat) -> f64 {
+    let tiling = tiling::search(cfg, fmt, m, k, 1);
+    let c = gemv_cost(cfg, m, k, fmt, &tiling, VlutVariant::Vlut16, SpillPolicy::TcmBuffer, cfg.hvx_contexts);
+    c.breakdown.mem_us.max(c.breakdown.cmp_us) + c.breakdown.dq_us + c.breakdown.overhead_us
+}
+
+fn tables_block_len(w: &BitSerialWeights) -> usize {
+    w.gran.group_len(w.k).min(w.k).max(4)
+}
+
+/// Convenience: full T-MAN decode GEMV with default tiling, returning
+/// bit-exact output + cost.
+pub fn lut_gemv(
+    cfg: &NpuConfig,
+    weights: &BitSerialWeights,
+    fmt: QuantFormat,
+    act: &[f32],
+) -> GemvResult {
+    let kern = LutGemv::new(cfg, weights, fmt);
+    let tables = precompute_tables(act, tables_block_len(weights));
+    kern.run(cfg, act, &tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::reference::ref_gemv;
+    use crate::quant::formats::{ActDtype, Granularity, WeightDtype};
+    use crate::quant::quantize::rtn;
+    use crate::util::{rel_l2, Rng};
+
+    fn cfg() -> NpuConfig {
+        NpuConfig::sd8gen3()
+    }
+
+    fn check_matches_ref(m: usize, k: usize, dtype: WeightDtype, gran: Granularity, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let w = rng.normal_vec(m * k, 0.08);
+        let a = rng.normal_vec(k, 0.5);
+        let q = rtn(&w, m, k, dtype, gran);
+        let bs = BitSerialWeights::from_qmatrix(&q);
+        let fmt = QuantFormat::new(dtype, ActDtype::Fp16, gran);
+        let got = lut_gemv(&cfg(), &bs, fmt, &a);
+        let want = ref_gemv(&q, &a);
+        let err = rel_l2(&got.y, &want);
+        assert!(err < 2e-3, "{dtype} {gran} {m}x{k}: rel_l2 {err}");
+    }
+
+    #[test]
+    fn matches_reference_w4_per_block() {
+        check_matches_ref(64, 256, WeightDtype::Int4, Granularity::PerBlock(64), 1);
+    }
+
+    #[test]
+    fn matches_reference_w2_per_block() {
+        check_matches_ref(64, 256, WeightDtype::Int2, Granularity::PerBlock(64), 2);
+    }
+
+    #[test]
+    fn matches_reference_ternary_per_tensor() {
+        check_matches_ref(32, 128, WeightDtype::Ternary, Granularity::PerTensor, 3);
+    }
+
+    #[test]
+    fn matches_reference_w4_per_channel() {
+        check_matches_ref(16, 512, WeightDtype::Int4, Granularity::PerChannel, 4);
+    }
+
+    #[test]
+    fn table_entries_are_subset_sums() {
+        let a = [1.0f32, 2.0, 4.0, 8.0];
+        let t = precompute_tables(&a, 4);
+        assert_eq!(t.tables.len(), 1);
+        for idx in 0..16usize {
+            let want: f32 = (0..4).filter(|j| idx >> j & 1 == 1).map(|j| a[j]).sum();
+            assert_eq!(t.tables[0][idx], want, "idx {idx}");
+        }
+        assert_eq!(t.block_sums, vec![15.0]);
+    }
+
+    #[test]
+    fn decode_is_memory_bound_at_paper_shape() {
+        // W4A16 4096x4096 GEMV: the paper's whole design assumes decode is
+        // bandwidth-limited — compute must hide under the DMA stream.
+        let c = cfg();
+        let mut rng = Rng::new(5);
+        let w = rng.normal_vec(4096 * 4096, 0.05);
+        let q = rtn(&w, 4096, 4096, WeightDtype::Int4, Granularity::PerBlock(64));
+        let bs = BitSerialWeights::from_qmatrix(&q);
+        let kern = LutGemv::new(&c, &bs, QuantFormat::tman_w4a16());
+        let cost = kern.cost(&c, 4096);
+        assert!(
+            cost.breakdown.mem_us > cost.breakdown.cmp_us,
+            "mem {} !> cmp {}",
+            cost.breakdown.mem_us,
+            cost.breakdown.cmp_us
+        );
+        // ~9.05 MB over DMA at 59 GB/s ≈ 157 µs.
+        assert!((cost.breakdown.mem_us - 157.0).abs() < 15.0, "mem {}", cost.breakdown.mem_us);
+    }
+
+    #[test]
+    fn w2_is_about_2x_faster_than_w4() {
+        let c = cfg();
+        let mut rng = Rng::new(6);
+        let w = rng.normal_vec(4096 * 4096, 0.05);
+        let lat = |dtype, fmt| {
+            let q = rtn(&w, 4096, 4096, dtype, Granularity::PerBlock(64));
+            let bs = BitSerialWeights::from_qmatrix(&q);
+            LutGemv::new(&c, &bs, fmt).latency_us(&c, 4096)
+        };
+        let t4 = lat(WeightDtype::Int4, QuantFormat::tman_w4a16());
+        let t2 = lat(WeightDtype::Int2, QuantFormat::tman_w2a16());
+        let ratio = t4 / t2;
+        assert!(ratio > 1.6 && ratio < 2.4, "W4/W2 latency ratio {ratio}");
+    }
+
+    #[test]
+    fn tcm_spill_beats_l2_spill() {
+        let c = cfg();
+        let mut rng = Rng::new(7);
+        let w = rng.normal_vec(4096 * 4096, 0.05);
+        let q = rtn(&w, 4096, 4096, WeightDtype::Int4, Granularity::PerBlock(64));
+        let bs = BitSerialWeights::from_qmatrix(&q);
+        let mut kern = LutGemv::new(&c, &bs, QuantFormat::tman_w4a16());
+        let t_tcm = kern.cost(&c, 4096).breakdown.cmp_us;
+        kern.spill = SpillPolicy::L2;
+        let t_l2 = kern.cost(&c, 4096).breakdown.cmp_us;
+        assert!(t_l2 > t_tcm * 1.2, "L2 spill {t_l2} not clearly worse than TCM {t_tcm}");
+    }
+
+    #[test]
+    fn zero_activations_give_zero_output() {
+        let c = cfg();
+        let mut rng = Rng::new(8);
+        let w = rng.normal_vec(32 * 64, 0.1);
+        let q = rtn(&w, 32, 64, WeightDtype::Int4, Granularity::PerBlock(64));
+        let bs = BitSerialWeights::from_qmatrix(&q);
+        let r = lut_gemv(&c, &bs, QuantFormat::tman_w4a16(), &vec![0.0; 64]);
+        assert!(r.y.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,14 @@
+//! Kernel layer: T-MAN's two execution paths (LUT-GEMV decode,
+//! LUT-dequant GEMM prefill), the unified tiling search that binds them to
+//! one weight layout, the baseline frameworks, and the reference oracles.
+
+pub mod baselines;
+pub mod dequant_gemm;
+pub mod lut_gemv;
+pub mod reference;
+pub mod tiling;
+
+pub use baselines::{Framework, Phase};
+pub use dequant_gemm::{DequantGemm, DequantStrategy, GemmResult};
+pub use lut_gemv::{lut_gemv, precompute_tables, ActTables, GemvResult, LutGemv, SpillPolicy};
+pub use tiling::UnifiedTiling;

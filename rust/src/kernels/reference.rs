@@ -1,0 +1,93 @@
+//! Pure-Rust reference oracles for every kernel: straightforward
+//! dequantize-then-multiply at f32 precision. These are the ground truth
+//! the simulated NPU kernels (and, through the shared test vectors, the
+//! Pallas kernels) are checked against.
+
+use crate::quant::qmatrix::QuantizedMatrix;
+
+/// Reference mixed-precision GEMV: `y[i] = Σ_j dequant(W[i,j]) · a[j]`.
+pub fn ref_gemv(q: &QuantizedMatrix, act: &[f32]) -> Vec<f32> {
+    assert_eq!(act.len(), q.k);
+    let mut y = vec![0.0f32; q.m];
+    for i in 0..q.m {
+        let mut acc = 0.0f64;
+        for j in 0..q.k {
+            acc += q.dequant(i, j) as f64 * act[j] as f64;
+        }
+        y[i] = acc as f32;
+    }
+    y
+}
+
+/// Reference mixed-precision GEMM: `C[n_i, m_j] = Σ_k dequant(W[m_j, k]) · A[n_i, k]`.
+/// Activations are (n, k) row-major; output is (n, m) row-major.
+pub fn ref_gemm(q: &QuantizedMatrix, act: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(act.len(), n * q.k);
+    let mut c = vec![0.0f32; n * q.m];
+    for i in 0..n {
+        for j in 0..q.m {
+            let mut acc = 0.0f64;
+            for t in 0..q.k {
+                acc += q.dequant(j, t) as f64 * act[i * q.k + t] as f64;
+            }
+            c[i * q.m + j] = acc as f32;
+        }
+    }
+    c
+}
+
+/// Plain f32 GEMV against an unquantized weight matrix (for end-to-end
+/// accuracy comparisons of quantized vs full-precision models).
+pub fn ref_gemv_f32(w: &[f32], m: usize, k: usize, act: &[f32]) -> Vec<f32> {
+    assert_eq!(w.len(), m * k);
+    assert_eq!(act.len(), k);
+    let mut y = vec![0.0f32; m];
+    for i in 0..m {
+        let mut acc = 0.0f64;
+        for j in 0..k {
+            acc += w[i * k + j] as f64 * act[j] as f64;
+        }
+        y[i] = acc as f32;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::formats::{Granularity, WeightDtype};
+    use crate::quant::quantize::rtn;
+    use crate::util::Rng;
+
+    #[test]
+    fn gemv_matches_gemm_row() {
+        let mut rng = Rng::new(3);
+        let w = rng.normal_vec(8 * 64, 0.1);
+        let q = rtn(&w, 8, 64, WeightDtype::Int4, Granularity::PerBlock(32));
+        let a = rng.normal_vec(64, 1.0);
+        let y = ref_gemv(&q, &a);
+        let c = ref_gemm(&q, &a, 1);
+        assert_eq!(y, c);
+    }
+
+    #[test]
+    fn gemv_on_exact_grid_is_exact() {
+        // Identity-ish check: weights on the grid, activations one-hot.
+        let w: Vec<f32> = (0..32).map(|i| (i % 16) as f32 * 0.5 - 4.0).collect();
+        let q = rtn(&w, 2, 16, WeightDtype::Int4, Granularity::PerChannel);
+        for j in 0..16 {
+            let mut a = vec![0.0f32; 16];
+            a[j] = 1.0;
+            let y = ref_gemv(&q, &a);
+            assert!((y[0] - w[j]).abs() < 1e-3);
+            assert!((y[1] - w[16 + j]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn f32_gemv() {
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        let y = ref_gemv_f32(&w, 2, 2, &[10.0, 1.0]);
+        assert_eq!(y, vec![12.0, 34.0]);
+    }
+}

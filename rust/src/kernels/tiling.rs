@@ -1,0 +1,283 @@
+//! Concurrency-hierarchy-guided unified tiling (paper §4.1).
+//!
+//! Prefill (matrix core) and decoding (vector cores) want different
+//! thread-level tilings and loop orders (Fig. 8):
+//!
+//! - prefill: `(N_iter^p, M_iter^p, K_iter^p, N_mma, K_mma, M_mma)` with the
+//!   `*_mma` dimensions fixed by the HMX MMA tile (32);
+//! - decoding: `(K_iter^d, M_iter^d, K_lut^d, M_lookups^d)` with
+//!   `M_lookups^d` fixed by the HVX vector length.
+//!
+//! Weights are fetched by DMA in contiguous blocks, so a *single*
+//! pre-permuted layout must serve both tilings. The search space is bounded
+//! by the constraints (Eqns. 1–4):
+//!
+//! 1. `K_lut^d < N_REG` — lookup tables must fit the reserved registers;
+//! 2. `M_iter^p · M_mma = M_iter^d · M_lookups^d` — M tile extents match;
+//! 3. `K_iter^p · K_mma = K_iter^d · K_span(K_lut^d)` — K tile extents match,
+//!    where one LUT register covers `luts_per_reg × 4` K positions
+//!    (a 16-entry × act-width table is 32 B, so a 128 B register holds 4 —
+//!    16 registers span exactly the paper's K=256 example);
+//! 4. `N_STAGE · N_THREAD · S_tile < S_TCM` — all pipeline stages × threads
+//!    fit in on-chip memory.
+//!
+//! Heuristics (§4.1): maximize `K_lut^d` (fewer intermediate write-backs),
+//! then `M_iter^d` (table reuse), then `K_iter^p` (matrix-core throughput).
+
+use crate::npu::config::NpuConfig;
+use crate::npu::hvx::VlutVariant;
+use crate::quant::formats::QuantFormat;
+
+/// Number of pipeline stages resident in TCM (DMA / dequant / matmul).
+pub const N_STAGE: usize = 3;
+
+/// A complete unified tiling decision for one (M, K) weight matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UnifiedTiling {
+    // --- prefill (matrix core) ---
+    pub n_iter_p: usize,
+    pub m_iter_p: usize,
+    pub k_iter_p: usize,
+    /// MMA tile edge (HMX: 32).
+    pub mma: usize,
+    // --- decoding (vector cores) ---
+    pub k_iter_d: usize,
+    pub m_iter_d: usize,
+    /// Vector registers holding lookup tables (Eqn. 1: < N_REG).
+    pub k_lut_d: usize,
+    /// Outputs produced per VLUT issue group (vector length / act bytes).
+    pub m_lookups_d: usize,
+    // --- shared ---
+    /// Thread count the tiling was sized for.
+    pub n_thread: usize,
+    /// Weight bits (tile bytes depend on it).
+    pub bits: u32,
+}
+
+impl UnifiedTiling {
+    /// Thread-tile extent along M (identical for both phases — Eqn. 2).
+    pub fn m_tile(&self) -> usize {
+        self.m_iter_p * self.mma
+    }
+
+    /// Thread-tile extent along K (identical for both phases — Eqn. 3).
+    pub fn k_tile(&self) -> usize {
+        self.k_iter_p * self.mma
+    }
+
+    /// K positions covered by the LUTs resident in registers (the decode
+    /// kernel's outer-tile K span).
+    pub fn k_span_of_luts(&self, cfg: &NpuConfig, act_bytes: usize) -> usize {
+        self.k_lut_d * luts_per_reg(cfg, act_bytes) * 4
+    }
+
+    /// Dequantized fp16 tile bytes (the prefill pipeline's working set).
+    pub fn tile_bytes_fp16(&self) -> usize {
+        self.m_tile() * self.k_tile() * 2
+    }
+
+    /// Quantized source-tile bytes.
+    pub fn tile_bytes_quant(&self) -> usize {
+        (self.m_tile() * self.k_tile() * self.bits as usize).div_ceil(8)
+    }
+
+    /// Total TCM footprint: N_STAGE stages × threads × (dequantized tile +
+    /// quantized source tile) + activation tile.
+    pub fn tcm_footprint(&self, act_bytes: usize) -> usize {
+        let per_stage = self.tile_bytes_fp16() + self.tile_bytes_quant();
+        let act_tile = self.n_iter_p * self.mma * self.k_tile() * act_bytes;
+        N_STAGE * self.n_thread * per_stage + act_tile
+    }
+
+    /// Check all four constraints.
+    pub fn satisfies(&self, cfg: &NpuConfig, act_bytes: usize) -> bool {
+        // Eqn. 1.
+        if self.k_lut_d >= cfg.n_reg_for_lut + 1 {
+            return false;
+        }
+        if self.k_lut_d > cfg.n_reg_for_lut {
+            return false;
+        }
+        // Eqn. 2.
+        if self.m_iter_p * self.mma != self.m_iter_d * self.m_lookups_d {
+            return false;
+        }
+        // Eqn. 3.
+        if self.k_iter_p * self.mma != self.k_iter_d * self.k_span_of_luts(cfg, act_bytes) {
+            return false;
+        }
+        // Eqn. 4.
+        self.tcm_footprint(act_bytes) < cfg.tcm_bytes
+    }
+}
+
+/// Tables per 1024-bit vector register: a 16-entry table of `act_bytes`-wide
+/// entries occupies `16 * act_bytes` bytes.
+pub fn luts_per_reg(cfg: &NpuConfig, act_bytes: usize) -> usize {
+    cfg.hvx_vector_bytes / (VlutVariant::Vlut16.entries() * act_bytes)
+}
+
+/// Outputs per lookup group: one result vector of `act_bytes` lanes.
+pub fn m_lookups(cfg: &NpuConfig, act_bytes: usize) -> usize {
+    cfg.hvx_vector_bytes / act_bytes
+}
+
+/// Search the constrained space and return the best tiling under the
+/// paper's heuristics. `m`/`k` are the weight matrix dims, `n` the
+/// activation rows of the prefill GEMM (chunk size).
+pub fn search(cfg: &NpuConfig, fmt: QuantFormat, m: usize, k: usize, n: usize) -> UnifiedTiling {
+    let act_bytes = fmt.act.bytes().max(2); // LUT entries are >= 16-bit (VLUT16)
+    let mma = cfg.hmx_tile;
+    let ml = m_lookups(cfg, act_bytes);
+    let n_thread = cfg.hvx_contexts;
+    let bits = fmt.weight.bits();
+
+    let mut best: Option<(UnifiedTiling, (usize, usize, usize))> = None;
+    // Enumerate decode-side tunables; derive the prefill side from
+    // Eqns. 2–3 so every candidate is consistent by construction.
+    for k_lut_d in 1..=cfg.n_reg_for_lut {
+        let k_span = k_lut_d * luts_per_reg(cfg, act_bytes) * 4;
+        for k_iter_d in [1usize, 2, 4, 8, 16, 32] {
+            let k_tile = k_iter_d * k_span;
+            if k_tile % mma != 0 || k_tile > k {
+                continue;
+            }
+            let k_iter_p = k_tile / mma;
+            for m_iter_d in [1usize, 2, 4, 8, 16, 32, 64] {
+                let m_tile = m_iter_d * ml;
+                if m_tile % mma != 0 || m_tile > m {
+                    continue;
+                }
+                let m_iter_p = m_tile / mma;
+                // Prefill N tiling: cover the chunk, at least one MMA tile.
+                let n_iter_p = n.div_ceil(mma).min(4).max(1);
+                let t = UnifiedTiling {
+                    n_iter_p,
+                    m_iter_p,
+                    k_iter_p,
+                    mma,
+                    k_iter_d,
+                    m_iter_d,
+                    k_lut_d,
+                    m_lookups_d: ml,
+                    n_thread,
+                    bits,
+                };
+                if !t.satisfies(cfg, act_bytes) {
+                    continue;
+                }
+                // Heuristic score, lexicographic:
+                // maximize K_lut, then M_iter^d, then K_iter^p.
+                let score = (k_lut_d, m_iter_d, k_iter_p);
+                if best.as_ref().map(|(_, s)| score > *s).unwrap_or(true) {
+                    best = Some((t, score));
+                }
+            }
+        }
+    }
+    best.map(|(t, _)| t).unwrap_or_else(|| fallback(cfg, fmt, m, k, n))
+}
+
+/// Minimal legal tiling for tiny matrices (below one full tile).
+fn fallback(cfg: &NpuConfig, fmt: QuantFormat, _m: usize, _k: usize, n: usize) -> UnifiedTiling {
+    let act_bytes = fmt.act.bytes().max(2);
+    let ml = m_lookups(cfg, act_bytes);
+    let mma = cfg.hmx_tile;
+    UnifiedTiling {
+        n_iter_p: n.div_ceil(mma).max(1).min(4),
+        m_iter_p: ml.div_ceil(mma),
+        k_iter_p: luts_per_reg(cfg, act_bytes) * 4 / mma.min(luts_per_reg(cfg, act_bytes) * 4).max(1),
+        mma,
+        k_iter_d: 1,
+        m_iter_d: 1,
+        k_lut_d: 1,
+        m_lookups_d: ml,
+        n_thread: cfg.hvx_contexts,
+        bits: fmt.weight.bits(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::npu::config::NpuConfig;
+
+    fn cfg() -> NpuConfig {
+        NpuConfig::sd8gen3()
+    }
+
+    #[test]
+    fn paper_k256_example() {
+        // §4.3: "to optimally use 16 registers reserved for LUTs ... the
+        // tile size on the k-axis needs to be 256" (16-bit activations).
+        let c = cfg();
+        assert_eq!(luts_per_reg(&c, 2), 4);
+        let span = 16 * luts_per_reg(&c, 2) * 4;
+        assert_eq!(span, 256);
+        assert_eq!(m_lookups(&c, 2), 64);
+    }
+
+    #[test]
+    fn search_finds_constraint_satisfying_tiling() {
+        let c = cfg();
+        let t = search(&c, QuantFormat::tman_w4a16(), 4096, 4096, 128);
+        assert!(t.satisfies(&c, 2), "{t:?}");
+        // Heuristic 1: K_lut maximized to the full register budget.
+        assert_eq!(t.k_lut_d, c.n_reg_for_lut, "{t:?}");
+    }
+
+    #[test]
+    fn tile_extents_match_between_phases() {
+        let c = cfg();
+        let t = search(&c, QuantFormat::tman_w2a16(), 4096, 4096, 128);
+        // Eqn. 2 / Eqn. 3 as equalities.
+        assert_eq!(t.m_iter_p * t.mma, t.m_iter_d * t.m_lookups_d);
+        assert_eq!(t.k_iter_p * t.mma, t.k_iter_d * t.k_span_of_luts(&c, 2));
+    }
+
+    #[test]
+    fn tcm_budget_respected() {
+        let c = cfg();
+        for fmt in [QuantFormat::tman_w4a16(), QuantFormat::tman_w2a16(), QuantFormat::bitnet()] {
+            let t = search(&c, fmt, 14336, 4096, 128);
+            assert!(t.tcm_footprint(2) < c.tcm_bytes, "{fmt}: {}", t.tcm_footprint(2));
+        }
+    }
+
+    #[test]
+    fn search_handles_small_matrices() {
+        let c = cfg();
+        // K smaller than one LUT span.
+        let t = search(&c, QuantFormat::tman_w4a16(), 256, 256, 1);
+        assert!(t.k_lut_d >= 1);
+        assert!(t.m_lookups_d > 0);
+    }
+
+    #[test]
+    fn bits_affect_tile_bytes_not_extents() {
+        let c = cfg();
+        let t4 = search(&c, QuantFormat::tman_w4a16(), 4096, 4096, 128);
+        let t2 = search(&c, QuantFormat::tman_w2a16(), 4096, 4096, 128);
+        assert_eq!(t4.tile_bytes_fp16(), t2.tile_bytes_fp16());
+        assert!(t4.tile_bytes_quant() > t2.tile_bytes_quant());
+    }
+
+    #[test]
+    fn paper_shapes_all_find_tilings() {
+        let c = cfg();
+        // Every mpGEMV/mpGEMM shape from Fig. 12/13 (Qwen3-8B, Llama-3.1-8B,
+        // BitNet-2B projections).
+        for (m, k) in [
+            (4096, 4096),
+            (12288, 4096),
+            (4096, 14336),
+            (14336, 4096),
+            (2560, 2560),
+            (6912, 2560),
+            (2560, 6912),
+        ] {
+            let t = search(&c, QuantFormat::tman_w4a16(), m, k, 128);
+            assert!(t.satisfies(&c, 2), "shape {m}x{k}: {t:?}");
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! # T-MAN — End-to-End Low-Bit LLM Inference on NPUs via Unified Table Lookup
+//!
+//! A reproduction of the T-MAN system (Wei et al., 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: inference engine, phase
+//!   scheduler (prefill → matrix path, decode → vector path), the
+//!   DMA–Vector–Matrix pipeline, the graph-optimization pass, and the
+//!   cycle-approximate NPU simulator every performance experiment runs on.
+//! - **Layer 2** — `python/compile/model.py`: the JAX transformer graph,
+//!   AOT-lowered to HLO text in `artifacts/`, loaded and executed from Rust
+//!   via PJRT ([`runtime`]).
+//! - **Layer 1** — `python/compile/kernels/`: Pallas kernels (LUT GEMV,
+//!   fused two-level LUT dequantization, quantized GEMM), numerically
+//!   mirrored by the Rust kernels in [`kernels`].
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod coordinator;
+pub mod kernels;
+pub mod model;
+pub mod npu;
+pub mod quant;
+pub mod util;
+pub mod runtime;

@@ -1,0 +1,126 @@
+//! T-MAN coordinator CLI.
+//!
+//! Subcommands (args hand-parsed; clap is unavailable offline):
+//!   generate --prompt "..." [--max-new N] [--temp T] [--artifacts DIR]
+//!            [--soc oneplus12|oneplus13t] [--greedy]
+//!   serve    [--requests N] ...       batch of requests + summary metrics
+//!   info     [--artifacts DIR]        print artifact manifest + sim config
+
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+use tman::coordinator::engine::{Engine, GenerateOpts};
+use tman::npu::config::SocConfig;
+
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = std::collections::HashMap::new();
+    let mut key: Option<String> = None;
+    for a in it {
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some(k) = key.take() {
+                flags.insert(k, "true".to_string()); // boolean flag
+            }
+            key = Some(stripped.to_string());
+        } else if let Some(k) = key.take() {
+            flags.insert(k, a);
+        }
+    }
+    if let Some(k) = key.take() {
+        flags.insert(k, "true".to_string());
+    }
+    Args { cmd, flags }
+}
+
+fn soc_from(args: &Args) -> Result<SocConfig> {
+    match args.flags.get("soc").map(|s| s.as_str()).unwrap_or("oneplus12") {
+        "oneplus12" => Ok(SocConfig::oneplus12()),
+        "oneplus13t" => Ok(SocConfig::oneplus13t()),
+        other => bail!("unknown soc {other} (oneplus12 | oneplus13t)"),
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.flags.get("artifacts").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    match args.cmd.as_str() {
+        "generate" => {
+            let mut engine = Engine::load(&artifacts_dir(&args), soc_from(&args)?)?;
+            let prompt = args
+                .flags
+                .get("prompt")
+                .cloned()
+                .unwrap_or_else(|| "The table layout wanted by the prefill".to_string());
+            let opts = GenerateOpts {
+                max_new_tokens: args
+                    .flags
+                    .get("max-new")
+                    .map(|s| s.parse())
+                    .transpose()?
+                    .unwrap_or(64),
+                temperature: if args.flags.contains_key("greedy") {
+                    0.0
+                } else {
+                    args.flags.get("temp").map(|s| s.parse()).transpose()?.unwrap_or(0.8)
+                },
+                ..Default::default()
+            };
+            println!("prompt: {prompt:?}");
+            let (text, metrics) = engine.generate(&prompt, &opts)?;
+            println!("output: {text:?}");
+            println!("{}", metrics.report());
+        }
+        "serve" => {
+            let mut engine = Engine::load(&artifacts_dir(&args), soc_from(&args)?)?;
+            let n: usize = args.flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(4);
+            let prompts = [
+                "The inference of a language model consists of",
+                "A lookup table can subsume operations",
+                "During decoding, the lookup based kernel",
+                "Energy matters as much as speed",
+            ];
+            let mut total_decode_tps = 0.0;
+            for i in 0..n {
+                let p = prompts[i % prompts.len()];
+                let (text, m) = engine.generate(p, &GenerateOpts::default())?;
+                println!("[req {i}] {} -> {:?}", p, &text[..text.len().min(60)]);
+                println!("[req {i}] {}", m.report());
+                total_decode_tps += m.wall_decode_tps();
+            }
+            println!("\nmean host decode throughput: {:.1} tok/s", total_decode_tps / n as f64);
+        }
+        "info" => {
+            let meta = tman::runtime::artifacts::ArtifactMeta::load(&artifacts_dir(&args))?;
+            println!(
+                "model: vocab={} d_model={} layers={} heads={} kv_heads={} d_ff={}",
+                meta.vocab, meta.d_model, meta.n_layers, meta.n_heads, meta.n_kv_heads, meta.d_ff
+            );
+            println!(
+                "quant: W_INT{} per-block({}); seq={} chunk={}; {} params ({:.1} MB)",
+                meta.bits,
+                meta.block,
+                meta.seq,
+                meta.chunk,
+                meta.params.len(),
+                meta.params_bytes() as f64 / 1e6
+            );
+            let soc = soc_from(&args)?;
+            println!("soc: {} (NPU {} @ {} TOPS int8)", soc.name, soc.npu.name, soc.npu.hmx_tops_int8);
+        }
+        _ => {
+            println!(
+                "t-man coordinator\nusage: tman <generate|serve|info> [--prompt S] [--max-new N] \
+                 [--temp T] [--greedy] [--requests N] [--artifacts DIR] [--soc oneplus12|oneplus13t]"
+            );
+        }
+    }
+    Ok(())
+}

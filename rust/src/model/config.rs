@@ -1,0 +1,227 @@
+//! Model architecture configurations.
+//!
+//! Two roles: (1) runnable small transformers (Llama-family architecture:
+//! RMSNorm, RoPE, GQA, SwiGLU) for the end-to-end engine and the Table 4
+//! accuracy experiment; (2) *shape descriptors* of the paper's evaluation
+//! models (Qwen3-8B, Llama-3.1-8B, BitNet-2B) whose projection matrices
+//! drive the kernel-level benchmarks (Figs. 12–13) without materializing
+//! 8B parameters.
+
+/// Architecture hyperparameters (Llama-family decoder-only transformer).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+}
+
+impl ModelConfig {
+    /// Head dimension.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// KV projection output width (GQA).
+    pub fn d_kv(&self) -> usize {
+        self.n_kv_heads * self.d_head()
+    }
+
+    /// Total parameter count (embeddings + blocks + head).
+    pub fn param_count(&self) -> usize {
+        let emb = self.vocab * self.d_model;
+        let attn = self.d_model * self.d_model  // q
+            + 2 * self.d_model * self.d_kv()    // k, v
+            + self.d_model * self.d_model; // o
+        let mlp = 3 * self.d_model * self.d_ff; // gate, up, down
+        let norms = self.n_layers * 2 * self.d_model + self.d_model;
+        emb + self.n_layers * (attn + mlp) + norms + self.vocab * self.d_model
+    }
+
+    /// Byte-level test model: fast enough for unit tests.
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny-test",
+            vocab: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 128,
+            max_seq: 256,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// The byte-level model trained on the embedded corpus (~3M params) —
+    /// the workload of the Table 4 PPL experiment and the e2e examples.
+    pub fn small() -> Self {
+        Self {
+            name: "tman-small-3m",
+            vocab: 256,
+            d_model: 192,
+            n_layers: 6,
+            n_heads: 6,
+            n_kv_heads: 2,
+            d_ff: 512,
+            max_seq: 2048,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// A ~100M-class config for scale tests of the serving stack (random
+    /// weights; exercises memory/tiling paths, not accuracy).
+    pub fn base_100m() -> Self {
+        Self {
+            name: "tman-base-100m",
+            vocab: 4096,
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            n_kv_heads: 4,
+            d_ff: 2048,
+            max_seq: 2048,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+}
+
+/// Shape descriptor of one projection (weight matrix is (m, k) = (out, in)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProjShape {
+    pub name: &'static str,
+    pub m: usize,
+    pub k: usize,
+}
+
+/// Evaluation-model shape sets (§6.1–6.2). These are the mpGEMV/mpGEMM
+/// kernel shapes of Figs. 12–13.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalModel {
+    Qwen3_8B,
+    Llama31_8B,
+    BitNet2B,
+}
+
+impl EvalModel {
+    pub fn name(self) -> &'static str {
+        match self {
+            EvalModel::Qwen3_8B => "Qwen3-8B",
+            EvalModel::Llama31_8B => "Llama-3.1-8B",
+            EvalModel::BitNet2B => "BitNet-2B",
+        }
+    }
+
+    /// Projection shapes (m = output channels, k = input channels).
+    pub fn shapes(self) -> Vec<ProjShape> {
+        match self {
+            // Llama-3.1-8B: d=4096, d_ff=14336, kv 1024.
+            EvalModel::Llama31_8B => vec![
+                ProjShape { name: "qkv", m: 6144, k: 4096 },
+                ProjShape { name: "o", m: 4096, k: 4096 },
+                ProjShape { name: "gate/up", m: 14336, k: 4096 },
+                ProjShape { name: "down", m: 4096, k: 14336 },
+            ],
+            // Qwen3-8B: d=4096, d_ff=12288, kv 1024.
+            EvalModel::Qwen3_8B => vec![
+                ProjShape { name: "qkv", m: 6144, k: 4096 },
+                ProjShape { name: "o", m: 4096, k: 4096 },
+                ProjShape { name: "gate/up", m: 12288, k: 4096 },
+                ProjShape { name: "down", m: 4096, k: 12288 },
+            ],
+            // BitNet-2B: d=2560, d_ff=6912 (paper quotes shapes
+            // {2560,6912}x{2560,6912}).
+            EvalModel::BitNet2B => vec![
+                ProjShape { name: "attn", m: 2560, k: 2560 },
+                ProjShape { name: "gate/up", m: 6912, k: 2560 },
+                ProjShape { name: "down", m: 2560, k: 6912 },
+            ],
+        }
+    }
+
+    /// Full per-layer projection multiset (m, k) — unlike [`shapes`], this
+    /// counts gate AND up separately; it is the unit of end-to-end
+    /// extrapolation (decode streams every one of these per layer).
+    pub fn layer_projections(self) -> Vec<(usize, usize)> {
+        match self {
+            EvalModel::Llama31_8B => {
+                vec![(6144, 4096), (4096, 4096), (14336, 4096), (14336, 4096), (4096, 14336)]
+            }
+            EvalModel::Qwen3_8B => {
+                vec![(6144, 4096), (4096, 4096), (12288, 4096), (12288, 4096), (4096, 12288)]
+            }
+            EvalModel::BitNet2B => {
+                vec![(7680, 2560), (2560, 2560), (6912, 2560), (6912, 2560), (2560, 6912)]
+            }
+        }
+    }
+
+    /// LM head (vocab, d_model).
+    pub fn lm_head_shape(self) -> (usize, usize) {
+        match self {
+            EvalModel::Llama31_8B => (128_256, 4096),
+            EvalModel::Qwen3_8B => (151_936, 4096),
+            EvalModel::BitNet2B => (128_256, 2560),
+        }
+    }
+
+    /// Number of decoder layers (for end-to-end extrapolation).
+    pub fn n_layers(self) -> usize {
+        match self {
+            EvalModel::Qwen3_8B => 36,
+            EvalModel::Llama31_8B => 32,
+            EvalModel::BitNet2B => 30,
+        }
+    }
+
+    /// d_model (attention path width).
+    pub fn d_model(self) -> usize {
+        match self {
+            EvalModel::BitNet2B => 2560,
+            _ => 4096,
+        }
+    }
+
+    pub fn all() -> [EvalModel; 3] {
+        [EvalModel::Qwen3_8B, EvalModel::Llama31_8B, EvalModel::BitNet2B]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_dims_divide() {
+        for c in [ModelConfig::tiny(), ModelConfig::small(), ModelConfig::base_100m()] {
+            assert_eq!(c.d_model % c.n_heads, 0, "{}", c.name);
+            assert_eq!(c.n_heads % c.n_kv_heads, 0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn param_counts_in_expected_range() {
+        let small = ModelConfig::small().param_count();
+        assert!(small > 2_000_000 && small < 6_000_000, "small {small}");
+        let base = ModelConfig::base_100m().param_count();
+        assert!(base > 80_000_000 && base < 150_000_000, "base {base}");
+    }
+
+    #[test]
+    fn eval_shapes_match_paper() {
+        let bn = EvalModel::BitNet2B.shapes();
+        assert!(bn.iter().any(|s| s.m == 6912 && s.k == 2560));
+        assert!(bn.iter().any(|s| s.m == 2560 && s.k == 6912));
+        let ll = EvalModel::Llama31_8B.shapes();
+        assert!(ll.iter().any(|s| s.m == 14336));
+    }
+}

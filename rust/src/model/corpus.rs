@@ -1,0 +1,63 @@
+//! The embedded tiny corpus (shared with `python/compile/train.py` via
+//! `data/corpus.txt`) and train/validation split helpers.
+//!
+//! The Table 4 substitution (DESIGN.md §1): WikiText2 perplexity on 8B
+//! models becomes tiny-corpus perplexity on the small trained model. The
+//! *direction* of the claim — per-block quantization beats per-channel even
+//! at lower bit width — is granularity-driven and survives the change of
+//! scale.
+
+use crate::model::tokenizer;
+
+/// The corpus text, embedded at compile time.
+pub const TEXT: &str = include_str!("../../../data/corpus.txt");
+
+/// Tokenized corpus.
+pub fn tokens() -> Vec<usize> {
+    tokenizer::encode(TEXT)
+}
+
+/// Deterministic train/validation split: the last `frac` of the stream is
+/// held out (same convention as train.py).
+pub fn split(valid_frac: f64) -> (Vec<usize>, Vec<usize>) {
+    let t = tokens();
+    let cut = ((t.len() as f64) * (1.0 - valid_frac)) as usize;
+    (t[..cut].to_vec(), t[cut..].to_vec())
+}
+
+/// Fixed-length evaluation windows over the validation stream.
+pub fn eval_windows(valid: &[usize], window: usize, max_windows: usize) -> Vec<Vec<usize>> {
+    valid
+        .chunks(window)
+        .filter(|c| c.len() == window)
+        .take(max_windows)
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_substantial() {
+        let t = tokens();
+        assert!(t.len() > 5000, "corpus too small: {}", t.len());
+        assert!(t.iter().all(|&x| x < 256));
+    }
+
+    #[test]
+    fn split_is_disjoint_and_total() {
+        let (tr, va) = split(0.1);
+        assert_eq!(tr.len() + va.len(), tokens().len());
+        assert!(va.len() >= tokens().len() / 20);
+    }
+
+    #[test]
+    fn windows_are_fixed_length() {
+        let (_, va) = split(0.1);
+        let ws = eval_windows(&va, 128, 4);
+        assert!(!ws.is_empty());
+        assert!(ws.iter().all(|w| w.len() == 128));
+    }
+}

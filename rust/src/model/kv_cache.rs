@@ -1,0 +1,113 @@
+//! KV cache for autoregressive decoding: per layer, (seq, kv_heads, d_head)
+//! for K and V. Single-request (batch 1), matching the paper's on-device
+//! decoding scenario (§2.1).
+
+use crate::model::config::ModelConfig;
+
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub dkv: usize,
+    /// Highest position written + 1.
+    pub len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig, max_seq: usize) -> Self {
+        let dkv = cfg.d_kv();
+        Self {
+            n_layers: cfg.n_layers,
+            max_seq,
+            dkv,
+            len: 0,
+            k: vec![0.0; cfg.n_layers * max_seq * dkv],
+            v: vec![0.0; cfg.n_layers * max_seq * dkv],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, layer: usize, pos: usize) -> usize {
+        debug_assert!(layer < self.n_layers && pos < self.max_seq);
+        (layer * self.max_seq + pos) * self.dkv
+    }
+
+    /// Store K/V rows for (layer, pos).
+    pub fn append(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert!(pos < self.max_seq, "kv cache overflow at pos {pos}");
+        assert_eq!(k.len(), self.dkv);
+        assert_eq!(v.len(), self.dkv);
+        let i = self.idx(layer, pos);
+        self.k[i..i + self.dkv].copy_from_slice(k);
+        self.v[i..i + self.dkv].copy_from_slice(v);
+        self.len = self.len.max(pos + 1);
+    }
+
+    /// K vector for (layer, pos, kv_head).
+    #[inline]
+    pub fn k(&self, layer: usize, pos: usize, kv_head: usize, d_head: usize) -> &[f32] {
+        let i = self.idx(layer, pos) + kv_head * d_head;
+        &self.k[i..i + d_head]
+    }
+
+    /// V vector for (layer, pos, kv_head).
+    #[inline]
+    pub fn v(&self, layer: usize, pos: usize, kv_head: usize, d_head: usize) -> &[f32] {
+        let i = self.idx(layer, pos) + kv_head * d_head;
+        &self.v[i..i + d_head]
+    }
+
+    /// Reset for a new request without reallocating.
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Cache memory footprint in bytes (fp32 here; fp16 on device).
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn append_and_read_back() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::new(&cfg, 16);
+        let dkv = cfg.d_kv();
+        let k: Vec<f32> = (0..dkv).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..dkv).map(|i| -(i as f32)).collect();
+        c.append(1, 3, &k, &v);
+        assert_eq!(c.len, 4);
+        let dh = cfg.d_head();
+        assert_eq!(c.k(1, 3, 0, dh), &k[..dh]);
+        assert_eq!(c.k(1, 3, 1, dh), &k[dh..2 * dh]);
+        assert_eq!(c.v(1, 3, 1, dh), &v[dh..2 * dh]);
+        // Other slots untouched.
+        assert!(c.k(0, 3, 0, dh).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::new(&cfg, 4);
+        let dkv = cfg.d_kv();
+        c.append(0, 4, &vec![0.0; dkv], &vec![0.0; dkv]);
+    }
+
+    #[test]
+    fn clear_resets_len() {
+        let cfg = ModelConfig::tiny();
+        let mut c = KvCache::new(&cfg, 4);
+        let dkv = cfg.d_kv();
+        c.append(0, 0, &vec![1.0; dkv], &vec![1.0; dkv]);
+        c.clear();
+        assert_eq!(c.len, 0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Model substrate: the Llama-family small transformer the end-to-end
+//! experiments run on, plus tokenizer, corpus, sampling and perplexity.
+
+pub mod config;
+pub mod corpus;
+pub mod kv_cache;
+pub mod ppl;
+pub mod sampler;
+pub mod tokenizer;
+pub mod transformer;
+pub mod weights;
+
+pub use config::{EvalModel, ModelConfig, ProjShape};
+pub use kv_cache::KvCache;
+pub use transformer::{LayerWeights, Linear, Transformer};

@@ -1,0 +1,82 @@
+//! Token samplers for the decode loop.
+
+use crate::util::Rng;
+
+/// Greedy argmax.
+pub fn greedy(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Temperature + top-k sampling with a deterministic RNG.
+pub fn top_k(logits: &[f32], k: usize, temperature: f32, rng: &mut Rng) -> usize {
+    assert!(k >= 1);
+    if temperature <= 0.0 {
+        return greedy(logits);
+    }
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.truncate(k.min(logits.len()));
+    let mx = logits[idx[0]];
+    let probs: Vec<f32> = idx.iter().map(|&i| ((logits[i] - mx) / temperature).exp()).collect();
+    let sum: f32 = probs.iter().sum();
+    let mut r = rng.next_f32() * sum;
+    for (j, &p) in probs.iter().enumerate() {
+        if r < p {
+            return idx[j];
+        }
+        r -= p;
+    }
+    idx[idx.len() - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(greedy(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(greedy(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn top1_equals_greedy() {
+        let l = [0.5f32, 2.0, 1.0];
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(top_k(&l, 1, 1.0, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let l = [0.5f32, 2.0, 1.0];
+        let mut rng = Rng::new(2);
+        assert_eq!(top_k(&l, 3, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_stays_in_top_k() {
+        let l = [10.0f32, 9.0, 8.0, -100.0, -100.0];
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let t = top_k(&l, 3, 1.0, &mut rng);
+            assert!(t < 3, "sampled outside top-3: {t}");
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let l: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..32 {
+            assert_eq!(top_k(&l, 5, 0.8, &mut a), top_k(&l, 5, 0.8, &mut b));
+        }
+    }
+}

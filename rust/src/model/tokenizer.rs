@@ -1,0 +1,38 @@
+//! Byte-level tokenizer: every byte is a token (vocab 256). Simple,
+//! loss-free, and exactly what the small trained model uses — the paper's
+//! tokenization layer is orthogonal to its contribution.
+
+/// Encode UTF-8 text to byte tokens.
+pub fn encode(text: &str) -> Vec<usize> {
+    text.as_bytes().iter().map(|&b| b as usize).collect()
+}
+
+/// Decode byte tokens back to text (lossy on invalid UTF-8 boundaries).
+pub fn decode(tokens: &[usize]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| t as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+pub const VOCAB: usize = 256;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_ascii() {
+        let s = "Hello, NPU world! 123";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn round_trip_utf8() {
+        let s = "表查找 → tables";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        assert!(encode("любой текст").iter().all(|&t| t < VOCAB));
+    }
+}

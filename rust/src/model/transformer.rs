@@ -1,0 +1,378 @@
+//! Decoder-only transformer (Llama family: RMSNorm → GQA attention with
+//! RoPE → SwiGLU MLP), in plain Rust f32.
+//!
+//! This is the *reference* model used for accuracy experiments (Table 4 PPL)
+//! and as the numeric cross-check for the JAX/PJRT serving path. Every
+//! linear projection goes through [`Linear`], which is either full-precision
+//! or a quantized matrix — flipping a model between FP32, per-block W4/W2
+//! and per-channel W4 is a weight-transformation, not an architecture
+//! change, exactly as on device.
+
+use crate::model::config::ModelConfig;
+use crate::model::kv_cache::KvCache;
+use crate::quant::formats::{Granularity, WeightDtype};
+use crate::quant::qmatrix::QuantizedMatrix;
+use crate::quant::quantize;
+
+/// A linear projection y = W·x, W stored full-precision or quantized.
+#[derive(Debug, Clone)]
+pub enum Linear {
+    F32 { w: Vec<f32>, m: usize, k: usize },
+    Quant(QuantizedMatrix),
+}
+
+impl Linear {
+    pub fn out_dim(&self) -> usize {
+        match self {
+            Linear::F32 { m, .. } => *m,
+            Linear::Quant(q) => q.m,
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        match self {
+            Linear::F32 { k, .. } => *k,
+            Linear::Quant(q) => q.k,
+        }
+    }
+
+    /// y = W·x (GEMV).
+    pub fn forward(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            Linear::F32 { w, m, k } => {
+                assert_eq!(x.len(), *k);
+                assert_eq!(y.len(), *m);
+                for i in 0..*m {
+                    let row = &w[i * k..(i + 1) * k];
+                    let mut acc = 0.0f32;
+                    for (a, b) in row.iter().zip(x) {
+                        acc += a * b;
+                    }
+                    y[i] = acc;
+                }
+            }
+            Linear::Quant(q) => {
+                assert_eq!(x.len(), q.k);
+                assert_eq!(y.len(), q.m);
+                for i in 0..q.m {
+                    let mut acc = 0.0f32;
+                    for j in 0..q.k {
+                        acc += q.dequant(i, j) * x[j];
+                    }
+                    y[i] = acc;
+                }
+            }
+        }
+    }
+
+    /// Quantize an F32 linear in place (no-op if already quantized).
+    pub fn quantized(&self, dtype: WeightDtype, gran: Granularity, use_gptq: bool) -> Linear {
+        match self {
+            Linear::F32 { w, m, k } => {
+                let q = if use_gptq {
+                    quantize::gptq(w, *m, *k, dtype, gran)
+                } else {
+                    quantize::rtn(w, *m, *k, dtype, gran)
+                };
+                Linear::Quant(q)
+            }
+            other => other.clone(),
+        }
+    }
+}
+
+/// One decoder layer's weights.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    pub mlp_norm: Vec<f32>,
+    pub w_gate: Linear,
+    pub w_up: Linear,
+    pub w_down: Linear,
+}
+
+/// Full model weights.
+#[derive(Debug, Clone)]
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    /// Token embedding table (vocab, d_model) row-major.
+    pub embed: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    /// LM head (vocab, d_model).
+    pub lm_head: Linear,
+}
+
+pub fn rmsnorm(x: &[f32], g: &[f32], eps: f32, out: &mut [f32]) {
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for ((o, &v), &w) in out.iter_mut().zip(x).zip(g) {
+        *o = v * inv * w;
+    }
+}
+
+/// Rotary position embedding applied in place to one head vector.
+pub fn rope(x: &mut [f32], pos: usize, theta: f32) {
+    let d = x.len();
+    for i in 0..d / 2 {
+        let freq = 1.0 / theta.powf(2.0 * i as f32 / d as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (x[2 * i], x[2 * i + 1]);
+        x[2 * i] = a * cos - b * sin;
+        x[2 * i + 1] = a * sin + b * cos;
+    }
+}
+
+fn softmax_inplace(x: &mut [f32]) {
+    let mx = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    for v in x.iter_mut() {
+        *v /= sum;
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+impl Transformer {
+    /// Forward one token at position `pos`, updating `cache`; returns logits.
+    pub fn forward_token(&self, token: usize, pos: usize, cache: &mut KvCache) -> Vec<f32> {
+        let c = &self.cfg;
+        let d = c.d_model;
+        let dh = c.d_head();
+        let dkv = c.d_kv();
+        let groups = c.n_heads / c.n_kv_heads;
+        assert!(token < c.vocab, "token {token} out of vocab");
+        assert!(pos < c.max_seq, "pos {pos} exceeds max_seq");
+
+        let mut h: Vec<f32> = self.embed[token * d..(token + 1) * d].to_vec();
+        let mut normed = vec![0.0f32; d];
+        let mut q = vec![0.0f32; d];
+        let mut k = vec![0.0f32; dkv];
+        let mut v = vec![0.0f32; dkv];
+        let mut attn_out = vec![0.0f32; d];
+        let mut proj = vec![0.0f32; d];
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // --- attention ---
+            rmsnorm(&h, &layer.attn_norm, c.norm_eps, &mut normed);
+            layer.wq.forward(&normed, &mut q);
+            layer.wk.forward(&normed, &mut k);
+            layer.wv.forward(&normed, &mut v);
+            for head in 0..c.n_heads {
+                rope(&mut q[head * dh..(head + 1) * dh], pos, c.rope_theta);
+            }
+            for kvh in 0..c.n_kv_heads {
+                rope(&mut k[kvh * dh..(kvh + 1) * dh], pos, c.rope_theta);
+            }
+            cache.append(li, pos, &k, &v);
+
+            attn_out.fill(0.0);
+            let scale = 1.0 / (dh as f32).sqrt();
+            for head in 0..c.n_heads {
+                let kvh = head / groups;
+                let qh = &q[head * dh..(head + 1) * dh];
+                let mut scores = vec![0.0f32; pos + 1];
+                for (t, s) in scores.iter_mut().enumerate() {
+                    let kt = cache.k(li, t, kvh, dh);
+                    *s = qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale;
+                }
+                softmax_inplace(&mut scores);
+                let out = &mut attn_out[head * dh..(head + 1) * dh];
+                for (t, &s) in scores.iter().enumerate() {
+                    let vt = cache.v(li, t, kvh, dh);
+                    for (o, &vv) in out.iter_mut().zip(vt) {
+                        *o += s * vv;
+                    }
+                }
+            }
+            layer.wo.forward(&attn_out, &mut proj);
+            for (hv, p) in h.iter_mut().zip(&proj) {
+                *hv += p;
+            }
+
+            // --- MLP ---
+            rmsnorm(&h, &layer.mlp_norm, c.norm_eps, &mut normed);
+            let mut gate = vec![0.0f32; c.d_ff];
+            let mut up = vec![0.0f32; c.d_ff];
+            layer.w_gate.forward(&normed, &mut gate);
+            layer.w_up.forward(&normed, &mut up);
+            for (g, u) in gate.iter_mut().zip(&up) {
+                *g = silu(*g) * u;
+            }
+            let mut down = vec![0.0f32; d];
+            layer.w_down.forward(&gate, &mut down);
+            for (hv, dn) in h.iter_mut().zip(&down) {
+                *hv += dn;
+            }
+        }
+
+        rmsnorm(&h.clone(), &self.final_norm, c.norm_eps, &mut h);
+        let mut logits = vec![0.0f32; c.vocab];
+        self.lm_head.forward(&h, &mut logits);
+        logits
+    }
+
+    /// Teacher-forced logits over a whole sequence: `logits[t]` predicts
+    /// `tokens[t+1]`. Used for perplexity.
+    pub fn forward_seq(&self, tokens: &[usize]) -> Vec<Vec<f32>> {
+        let mut cache = KvCache::new(&self.cfg, tokens.len());
+        tokens
+            .iter()
+            .enumerate()
+            .map(|(pos, &t)| self.forward_token(t, pos, &mut cache))
+            .collect()
+    }
+
+    /// Return a copy with every projection quantized (embeddings and norms
+    /// stay fp32, standard practice).
+    pub fn quantized(&self, dtype: WeightDtype, gran: Granularity, use_gptq: bool) -> Transformer {
+        let mut out = self.clone();
+        for l in out.layers.iter_mut() {
+            for lin in [
+                &mut l.wq, &mut l.wk, &mut l.wv, &mut l.wo, &mut l.w_gate, &mut l.w_up,
+                &mut l.w_down,
+            ] {
+                *lin = lin.quantized(dtype, gran, use_gptq);
+            }
+        }
+        out.lm_head = out.lm_head.quantized(dtype, gran, use_gptq);
+        out
+    }
+
+    /// Total bytes of projection weights under the current representation.
+    pub fn projection_bytes(&self) -> usize {
+        let lin_bytes = |l: &Linear| match l {
+            Linear::F32 { w, .. } => w.len() * 4,
+            Linear::Quant(q) => q.footprint_bytes(),
+        };
+        let mut total = lin_bytes(&self.lm_head);
+        for l in &self.layers {
+            for lin in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_gate, &l.w_up, &l.w_down] {
+                total += lin_bytes(lin);
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::random_transformer;
+    use crate::util::Rng;
+
+    #[test]
+    fn rmsnorm_unit_gain() {
+        let x = vec![3.0f32, -4.0];
+        let g = vec![1.0f32, 1.0];
+        let mut out = vec![0.0f32; 2];
+        rmsnorm(&x, &g, 0.0, &mut out);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((out[1] + 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_pos0_identity() {
+        let mut x = vec![1.0f32, 2.0, -0.5, 0.3];
+        let orig = x.clone();
+        rope(&mut x, 0, 10000.0);
+        assert_eq!(x, orig, "pos 0 must be identity");
+        rope(&mut x, 7, 10000.0);
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-4, "rotation must preserve norm");
+        assert!(x != orig);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![1.0f32, 2.0, 3.0, -100.0];
+        softmax_inplace(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x[2] > x[1] && x[1] > x[0] && x[0] > x[3]);
+    }
+
+    #[test]
+    fn forward_token_deterministic_and_shaped() {
+        let model = random_transformer(&ModelConfig::tiny(), 42);
+        let mut c1 = KvCache::new(&model.cfg, 8);
+        let mut c2 = KvCache::new(&model.cfg, 8);
+        let l1 = model.forward_token(65, 0, &mut c1);
+        let l2 = model.forward_token(65, 0, &mut c2);
+        assert_eq!(l1.len(), 256);
+        assert_eq!(l1, l2);
+        assert!(l1.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn context_changes_predictions() {
+        let model = random_transformer(&ModelConfig::tiny(), 42);
+        let mut cache = KvCache::new(&model.cfg, 8);
+        let a = model.forward_token(65, 0, &mut cache);
+        let b = model.forward_token(65, 1, &mut cache);
+        // Same token, different position/context -> different logits.
+        assert!(a != b);
+    }
+
+    #[test]
+    fn forward_seq_matches_incremental() {
+        let model = random_transformer(&ModelConfig::tiny(), 7);
+        let tokens = vec![10usize, 20, 30, 40];
+        let seq = model.forward_seq(&tokens);
+        let mut cache = KvCache::new(&model.cfg, 4);
+        for (pos, &t) in tokens.iter().enumerate() {
+            let inc = model.forward_token(t, pos, &mut cache);
+            assert_eq!(seq[pos], inc, "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn quantized_model_stays_close_w4() {
+        let model = random_transformer(&ModelConfig::tiny(), 9);
+        let q = model.quantized(WeightDtype::Int4, Granularity::PerBlock(64), false);
+        let tokens = vec![1usize, 2, 3];
+        let lf = model.forward_seq(&tokens);
+        let lq = q.forward_seq(&tokens);
+        let err = crate::util::rel_l2(&lq[2], &lf[2]);
+        assert!(err < 0.35, "W4 logits rel err {err}");
+        assert!(q.projection_bytes() < model.projection_bytes() / 6);
+    }
+
+    #[test]
+    fn linear_quant_matches_f32_forward_on_grid() {
+        // Weights exactly on the quant grid: quantized forward == f32.
+        let mut rng = Rng::new(3);
+        let (m, k) = (8, 32);
+        let mut w: Vec<f32> = (0..m * k).map(|_| (rng.below(16) as f32 - 8.0) * 0.25).collect();
+        // Pin each row's extremes so the per-channel grid is exactly the
+        // 0.25-spaced lattice the weights live on.
+        for i in 0..m {
+            w[i * k] = -2.0;
+            w[i * k + 1] = 1.75;
+        }
+        let lin = Linear::F32 { w: w.clone(), m, k };
+        let qlin = lin.quantized(WeightDtype::Int4, Granularity::PerChannel, false);
+        let x = rng.normal_vec(k, 1.0);
+        let mut y1 = vec![0.0f32; m];
+        let mut y2 = vec![0.0f32; m];
+        lin.forward(&x, &mut y1);
+        qlin.forward(&x, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 2e-2, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! SoC hardware descriptions for the cycle-approximate NPU simulator.
+//!
+//! The paper's testbeds are the Qualcomm Snapdragon 8 Gen 3 (OnePlus 12) and
+//! Snapdragon 8 Elite (OnePlus 13T). Both share the Hexagon NPU architecture
+//! of Fig. 3: one HMX matrix core (32×32 tiles), 4–6 HVX vector cores
+//! (1024-bit), scalar units, an 8 MB software-managed TCM with a 2 KB burst
+//! path to HMX, a 1 MB L2 (128 B access), and a DMA path from DDR.
+//!
+//! Bandwidth numbers are calibrated to the paper's own microbenchmark
+//! (Table 2) and the vendor-claimed peak TOPS (§2.3); the mobile-CPU model
+//! is calibrated to the paper's Fig. 5 breakdown (CPU ~10× faster than the
+//! NPU at element-wise dequantization, far slower at dense GEMM).
+
+/// Hexagon-style NPU description.
+#[derive(Debug, Clone)]
+pub struct NpuConfig {
+    pub name: &'static str,
+    /// NPU core clock in GHz (both HVX and HMX issue at this rate here).
+    pub clock_ghz: f64,
+    /// Number of HVX vector cores.
+    pub hvx_cores: usize,
+    /// HVX vector register width in bytes (1024-bit = 128 B).
+    pub hvx_vector_bytes: usize,
+    /// Hardware thread contexts on the vector/scalar units (§2.3: 4–6).
+    pub hvx_contexts: usize,
+    /// Total HVX vector registers per context; `n_reg_for_lut` of them can
+    /// hold lookup tables in the decode kernel (constraint Eqn. 1).
+    pub hvx_vector_regs: usize,
+    pub n_reg_for_lut: usize,
+    /// HMX matrix-multiply tile (32×32).
+    pub hmx_tile: usize,
+    /// Peak INT8 matrix throughput in TOPS (2 ops per MAC).
+    pub hmx_tops_int8: f64,
+    /// FP16 matrix throughput in TOPS (half of INT8 on Hexagon).
+    pub hmx_tops_fp16: f64,
+    /// TCM capacity in bytes (8 MB) and burst width to HMX (2 KB).
+    pub tcm_bytes: usize,
+    pub tcm_burst_bytes: usize,
+    /// L2 capacity (1 MB) and access width (128 B).
+    pub l2_bytes: usize,
+    pub l2_access_bytes: usize,
+    /// DDR→TCM DMA bandwidth, GB/s (Table 2: 59, thread-independent).
+    pub dma_gbps: f64,
+    /// DMA setup latency per descriptor, µs.
+    pub dma_setup_us: f64,
+    /// l2fetch bandwidth at 1 / 4 HVX threads (Table 2: 26 / 32 GB/s).
+    pub l2fetch_gbps_1t: f64,
+    pub l2fetch_gbps_4t: f64,
+    /// Implicit vectorized-load bandwidth at 1 / 4 threads (5 / 20 GB/s).
+    pub vload_gbps_1t: f64,
+    pub vload_gbps_4t: f64,
+    /// VLUT cycles-per-instruction (Table 1: 0.5 — two issue per cycle).
+    pub vlut_cpi: f64,
+    /// Plain HVX vector-ALU CPI.
+    pub valu_cpi: f64,
+    /// Scalar float op throughput, ops/cycle — NPUs are "primarily designed
+    /// for low power and fast integer operations" (§4.1): float conversion
+    /// and math are an order of magnitude slower than on the CPU.
+    pub scalar_float_ops_per_cycle: f64,
+    /// L2 register-spill round-trip penalty in cycles per 128 B line — the
+    /// cost the TCM spill buffer (§4.3) avoids.
+    pub l2_spill_cycles_per_line: f64,
+    /// TCM access cycles per vector (the spill buffer's cost).
+    pub tcm_access_cycles: f64,
+}
+
+impl NpuConfig {
+    /// OnePlus 12 — Snapdragon 8 Gen 3 (Table 2 numbers were measured on
+    /// this device).
+    pub fn sd8gen3() -> Self {
+        Self {
+            name: "SD8Gen3",
+            clock_ghz: 1.0,
+            hvx_cores: 4,
+            hvx_vector_bytes: 128,
+            hvx_contexts: 4,
+            hvx_vector_regs: 32,
+            n_reg_for_lut: 16,
+            hmx_tile: 32,
+            hmx_tops_int8: 34.0,
+            hmx_tops_fp16: 17.0,
+            tcm_bytes: 8 << 20,
+            tcm_burst_bytes: 2048,
+            l2_bytes: 1 << 20,
+            l2_access_bytes: 128,
+            dma_gbps: 59.0,
+            dma_setup_us: 0.2,
+            l2fetch_gbps_1t: 26.0,
+            l2fetch_gbps_4t: 32.0,
+            vload_gbps_1t: 5.0,
+            vload_gbps_4t: 20.0,
+            vlut_cpi: 0.5,
+            valu_cpi: 0.5,
+            scalar_float_ops_per_cycle: 5.0,
+            l2_spill_cycles_per_line: 40.0,
+            tcm_access_cycles: 4.0,
+        }
+    }
+
+    /// OnePlus 13T — Snapdragon 8 Elite (45 TOPS claim, §2.3; 6 HVX cores,
+    /// higher clock).
+    pub fn sd8elite() -> Self {
+        Self {
+            name: "SD8Elite",
+            clock_ghz: 1.2,
+            hvx_cores: 6,
+            hvx_contexts: 6,
+            hmx_tops_int8: 45.0,
+            hmx_tops_fp16: 22.5,
+            dma_gbps: 64.0,
+            l2fetch_gbps_1t: 28.0,
+            l2fetch_gbps_4t: 35.0,
+            vload_gbps_1t: 6.0,
+            vload_gbps_4t: 24.0,
+            ..Self::sd8gen3()
+        }
+    }
+
+    /// NPU cycle time in microseconds.
+    #[inline]
+    pub fn cycle_us(&self) -> f64 {
+        1e-3 / self.clock_ghz
+    }
+
+    /// Effective l2fetch bandwidth for a given thread count (linear
+    /// interpolation between the two measured points, clamped).
+    pub fn l2fetch_gbps(&self, threads: usize) -> f64 {
+        interp_threads(threads, self.l2fetch_gbps_1t, self.l2fetch_gbps_4t)
+    }
+
+    /// Effective vectorized-load bandwidth for a given thread count.
+    pub fn vload_gbps(&self, threads: usize) -> f64 {
+        interp_threads(threads, self.vload_gbps_1t, self.vload_gbps_4t)
+    }
+}
+
+fn interp_threads(threads: usize, bw1: f64, bw4: f64) -> f64 {
+    let t = threads.clamp(1, 4) as f64;
+    bw1 + (bw4 - bw1) * (t - 1.0) / 3.0
+}
+
+/// Mobile big-core CPU cluster model, for the llama.cpp / T-MAC /
+/// bitnet.cpp / llm.npu-decode baselines.
+#[derive(Debug, Clone)]
+pub struct CpuConfig {
+    pub name: &'static str,
+    pub cores: usize,
+    pub clock_ghz: f64,
+    /// SIMD width in bytes (NEON 128-bit).
+    pub simd_bytes: usize,
+    /// Dense GEMM throughput, GOPS (all cores) — <1 TOPS per §2.3.
+    pub gemm_gops: f64,
+    /// Element-wise dequantization throughput, Gops/s — the CPU is ~10×
+    /// faster than the NPU's scalar float path here (Fig. 5).
+    pub dequant_gops: f64,
+    /// Table-lookup (TBL) throughput for the T-MAC baseline, G-lookups/s.
+    pub tbl_glookups: f64,
+    /// Memory bandwidth from DDR, GB/s.
+    pub mem_gbps: f64,
+}
+
+impl CpuConfig {
+    /// Snapdragon 8 Gen 3 Kryo big cores (values consistent with the
+    /// paper's Fig. 5 CPU-vs-NPU mpGEMV breakdown and llama.cpp-class
+    /// decode throughput on this SoC).
+    pub fn sd8gen3_cpu() -> Self {
+        Self {
+            name: "SD8Gen3-CPU",
+            cores: 6,
+            clock_ghz: 3.0,
+            simd_bytes: 16,
+            gemm_gops: 500.0,
+            dequant_gops: 40.0,
+            tbl_glookups: 48.0,
+            mem_gbps: 30.0,
+        }
+    }
+
+    pub fn sd8elite_cpu() -> Self {
+        Self {
+            name: "SD8Elite-CPU",
+            cores: 8,
+            clock_ghz: 3.5,
+            gemm_gops: 620.0,
+            dequant_gops: 50.0,
+            tbl_glookups: 60.0,
+            mem_gbps: 34.0,
+            ..Self::sd8gen3_cpu()
+        }
+    }
+}
+
+/// Power states for the energy model (calibrated to Table 3).
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    /// Whole-SoC power with the NPU active and CPUs idle, W (QNN/T-MAN
+    /// measure 4.7–5.0 W).
+    pub npu_active_w: f64,
+    /// Whole-SoC power with big CPU cores busy, W (bitnet.cpp: 8.22 W).
+    pub cpu_active_w: f64,
+    /// Hybrid NPU+CPU power (llm.npu prefill: 8.89 W — NPU plus the CPU
+    /// cores kept hot for outlier computation).
+    pub hybrid_active_w: f64,
+    /// Idle floor, W.
+    pub idle_w: f64,
+}
+
+impl PowerModel {
+    pub fn sd8gen3() -> Self {
+        Self { npu_active_w: 4.9, cpu_active_w: 8.2, hybrid_active_w: 8.9, idle_w: 0.8 }
+    }
+}
+
+/// A full SoC: NPU + CPU + DDR + power.
+#[derive(Debug, Clone)]
+pub struct SocConfig {
+    pub name: &'static str,
+    pub npu: NpuConfig,
+    pub cpu: CpuConfig,
+    pub power: PowerModel,
+    /// DDR bandwidth available to the CPU cluster, GB/s.
+    pub ddr_gbps: f64,
+    /// NPU↔CPU synchronization cost per kernel handoff, µs (the overhead
+    /// that sinks llm.npu's decode path, §6.2).
+    pub npu_cpu_sync_us: f64,
+    /// Device DRAM size in bytes (OnePlus 12: 24 GB, OnePlus 13T: 12 GB) —
+    /// used to reproduce llm.npu's OOM on 8B models (§6.3).
+    pub dram_bytes: usize,
+}
+
+impl SocConfig {
+    /// OnePlus 12: Snapdragon 8 Gen 3, 24 GB RAM.
+    pub fn oneplus12() -> Self {
+        Self {
+            name: "OnePlus12-SD8Gen3",
+            npu: NpuConfig::sd8gen3(),
+            cpu: CpuConfig::sd8gen3_cpu(),
+            power: PowerModel::sd8gen3(),
+            ddr_gbps: 30.0,
+            npu_cpu_sync_us: 120.0,
+            dram_bytes: 24 << 30,
+        }
+    }
+
+    /// OnePlus 13T: Snapdragon 8 Elite, 12 GB RAM.
+    pub fn oneplus13t() -> Self {
+        Self {
+            name: "OnePlus13T-SD8Elite",
+            npu: NpuConfig::sd8elite(),
+            cpu: CpuConfig::sd8elite_cpu(),
+            power: PowerModel::sd8gen3(),
+            ddr_gbps: 34.0,
+            npu_cpu_sync_us: 110.0,
+            dram_bytes: 12 << 30,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elite_is_faster_than_gen3() {
+        let g3 = NpuConfig::sd8gen3();
+        let el = NpuConfig::sd8elite();
+        assert!(el.hmx_tops_int8 > g3.hmx_tops_int8);
+        assert!(el.hvx_cores > g3.hvx_cores);
+        assert_eq!(el.hmx_tops_int8, 45.0, "§2.3: Elite claims 45 TOPS");
+    }
+
+    #[test]
+    fn table2_anchor_points() {
+        let n = NpuConfig::sd8gen3();
+        assert_eq!(n.vload_gbps(1), 5.0);
+        assert_eq!(n.vload_gbps(4), 20.0);
+        assert_eq!(n.l2fetch_gbps(1), 26.0);
+        assert_eq!(n.l2fetch_gbps(4), 32.0);
+        // DMA is thread-independent and the fastest path.
+        assert!(n.dma_gbps > n.l2fetch_gbps(4));
+    }
+
+    #[test]
+    fn thread_interp_monotone_and_clamped() {
+        let n = NpuConfig::sd8gen3();
+        assert!(n.vload_gbps(2) > n.vload_gbps(1));
+        assert!(n.vload_gbps(3) < n.vload_gbps(4));
+        assert_eq!(n.vload_gbps(8), n.vload_gbps(4));
+        assert_eq!(n.vload_gbps(0), n.vload_gbps(1));
+    }
+
+    #[test]
+    fn npu_floats_are_slow_vs_cpu() {
+        // Fig. 5's premise: NPU scalar-float dequant is ~10x slower than CPU.
+        let n = NpuConfig::sd8gen3();
+        let c = CpuConfig::sd8gen3_cpu();
+        let npu_float_gops = n.scalar_float_ops_per_cycle * n.clock_ghz * n.hvx_contexts as f64;
+        assert!(c.dequant_gops / npu_float_gops >= 1.5);
+    }
+
+    #[test]
+    fn power_ordering_matches_table3() {
+        let p = PowerModel::sd8gen3();
+        assert!(p.npu_active_w < p.cpu_active_w);
+        assert!(p.cpu_active_w < p.hybrid_active_w);
+    }
+
+    #[test]
+    fn oneplus13t_has_less_ram() {
+        assert!(SocConfig::oneplus13t().dram_bytes < SocConfig::oneplus12().dram_bytes);
+    }
+}

@@ -1,0 +1,139 @@
+//! Kernel cost accounting: the latency-breakdown structure every simulated
+//! kernel reports, in the MEM / DQ / CMP decomposition of Fig. 5.
+//!
+//! Kernels compute per-stage times from the hardware model (`config`,
+//! `memory`, `hvx`, `hmx`); this module combines them under sequential or
+//! overlapped execution and keeps the op counters used for roofline
+//! analysis in EXPERIMENTS.md §Perf.
+
+/// Latency breakdown of one kernel invocation, µs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Breakdown {
+    /// Memory loading (weights from DDR, whatever the path).
+    pub mem_us: f64,
+    /// Dequantization / table precomputation on the vector cores.
+    pub dq_us: f64,
+    /// Computation (matrix core GEMM or vector-core lookups + reduction).
+    pub cmp_us: f64,
+    /// Fixed overhead not in any of the three (kernel launch, NPU↔CPU sync).
+    pub overhead_us: f64,
+}
+
+impl Breakdown {
+    /// Total when the stages run back to back (non-pipelined kernels, and
+    /// the "Sequential" arm of Fig. 17).
+    pub fn sequential_us(&self) -> f64 {
+        self.mem_us + self.dq_us + self.cmp_us + self.overhead_us
+    }
+
+    /// Total under perfect three-stage software pipelining (Fig. 9): the
+    /// steady state is dominated by the slowest stage; the other stages
+    /// contribute one tile of fill/drain each, approximated by `fill_us`.
+    pub fn pipelined_us(&self, fill_us: f64) -> f64 {
+        self.mem_us.max(self.dq_us).max(self.cmp_us) + fill_us + self.overhead_us
+    }
+
+    pub fn scaled(&self, f: f64) -> Breakdown {
+        Breakdown {
+            mem_us: self.mem_us * f,
+            dq_us: self.dq_us * f,
+            cmp_us: self.cmp_us * f,
+            overhead_us: self.overhead_us * f,
+        }
+    }
+
+    pub fn add(&self, other: &Breakdown) -> Breakdown {
+        Breakdown {
+            mem_us: self.mem_us + other.mem_us,
+            dq_us: self.dq_us + other.dq_us,
+            cmp_us: self.cmp_us + other.cmp_us,
+            overhead_us: self.overhead_us + other.overhead_us,
+        }
+    }
+}
+
+/// Operation counters a kernel accumulates while executing functionally —
+/// the bridge between the bit-exact implementation and the cost model, and
+/// the input to the roofline estimates.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    /// VLUT instructions issued.
+    pub vlut_instrs: usize,
+    /// Plain vector-ALU instructions (adds, shifts, packs).
+    pub valu_instrs: usize,
+    /// Matrix-core MACs.
+    pub hmx_macs: usize,
+    /// Scalar float operations (the slow path LUT dequant avoids).
+    pub scalar_float_ops: usize,
+    /// Int→float conversion ops (ConvertDQ baseline).
+    pub convert_ops: usize,
+    /// Bytes moved DDR→on-chip.
+    pub ddr_bytes: usize,
+    /// Bytes spilled to / reloaded from L2 (what the TCM spill buffer kills).
+    pub l2_spill_bytes: usize,
+    /// Bytes staged through the TCM spill buffer.
+    pub tcm_spill_bytes: usize,
+}
+
+impl OpCounts {
+    pub fn add(&mut self, o: &OpCounts) {
+        self.vlut_instrs += o.vlut_instrs;
+        self.valu_instrs += o.valu_instrs;
+        self.hmx_macs += o.hmx_macs;
+        self.scalar_float_ops += o.scalar_float_ops;
+        self.convert_ops += o.convert_ops;
+        self.ddr_bytes += o.ddr_bytes;
+        self.l2_spill_bytes += o.l2_spill_bytes;
+        self.tcm_spill_bytes += o.tcm_spill_bytes;
+    }
+}
+
+/// A kernel's simulated result: latency breakdown + counters + where it ran.
+#[derive(Debug, Clone)]
+pub struct KernelCost {
+    pub breakdown: Breakdown,
+    pub ops: OpCounts,
+    /// Human-readable kernel id for reports.
+    pub label: String,
+}
+
+impl KernelCost {
+    pub fn total_us(&self) -> f64 {
+        self.breakdown.sequential_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_sums_pipelined_maxes() {
+        let b = Breakdown { mem_us: 10.0, dq_us: 4.0, cmp_us: 8.0, overhead_us: 1.0 };
+        assert_eq!(b.sequential_us(), 23.0);
+        // Steady state = max stage (10) + fill + overhead.
+        assert_eq!(b.pipelined_us(2.0), 13.0);
+        // Pipelining can never be slower than sequential for zero fill.
+        assert!(b.pipelined_us(0.0) <= b.sequential_us());
+    }
+
+    #[test]
+    fn scale_and_add() {
+        let b = Breakdown { mem_us: 1.0, dq_us: 2.0, cmp_us: 3.0, overhead_us: 0.5 };
+        let s = b.scaled(2.0);
+        assert_eq!(s.dq_us, 4.0);
+        let sum = b.add(&s);
+        assert_eq!(sum.cmp_us, 9.0);
+        assert_eq!(sum.sequential_us(), 3.0 * b.sequential_us());
+    }
+
+    #[test]
+    fn opcounts_accumulate() {
+        let mut a = OpCounts { vlut_instrs: 1, ddr_bytes: 100, ..Default::default() };
+        let b = OpCounts { vlut_instrs: 2, hmx_macs: 50, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.vlut_instrs, 3);
+        assert_eq!(a.hmx_macs, 50);
+        assert_eq!(a.ddr_bytes, 100);
+    }
+}

@@ -1,0 +1,164 @@
+//! Energy model (Table 3): power states per execution placement, sampled
+//! the way the paper measures (average power × phase duration → J/token).
+//!
+//! The paper's claim decomposes cleanly: NPU-only execution draws ~5 W,
+//! CPU execution ~8.2 W, hybrid NPU+CPU ~8.9 W; energy per token is
+//! power × (1 / throughput). T-MAN wins on both factors during decoding.
+
+use crate::npu::config::PowerModel;
+
+/// Which silicon a phase runs on — decides the power state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Placement {
+    /// Everything on the NPU (T-MAN, QNN).
+    NpuOnly,
+    /// Everything on the CPU cluster (llama.cpp, T-MAC, bitnet.cpp).
+    CpuOnly,
+    /// NPU plus CPU cores kept hot (llm.npu prefill / outlier offload).
+    Hybrid,
+}
+
+impl Placement {
+    pub fn power_w(self, pm: &PowerModel) -> f64 {
+        match self {
+            Placement::NpuOnly => pm.npu_active_w,
+            Placement::CpuOnly => pm.cpu_active_w,
+            Placement::Hybrid => pm.hybrid_active_w,
+        }
+    }
+}
+
+/// Accumulates phase timings into an energy report.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyMeter {
+    /// (placement, seconds, tokens) per recorded phase.
+    phases: Vec<(Placement, f64, usize)>,
+}
+
+/// Per-phase energy summary (one Table 3 cell pair).
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    pub power_w: f64,
+    pub seconds: f64,
+    pub tokens: usize,
+    pub joules: f64,
+    pub joules_per_token: f64,
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a phase: `seconds` of execution on `placement` producing
+    /// (or consuming) `tokens` tokens.
+    pub fn record(&mut self, placement: Placement, seconds: f64, tokens: usize) {
+        assert!(seconds >= 0.0);
+        self.phases.push((placement, seconds, tokens));
+    }
+
+    /// Report for all recorded phases on one placement.
+    pub fn report(&self, pm: &PowerModel, placement: Placement) -> EnergyReport {
+        let mut seconds = 0.0;
+        let mut tokens = 0usize;
+        for &(p, s, t) in &self.phases {
+            if p == placement {
+                seconds += s;
+                tokens += t;
+            }
+        }
+        let power_w = placement.power_w(pm);
+        let joules = power_w * seconds;
+        EnergyReport {
+            power_w,
+            seconds,
+            tokens,
+            joules,
+            joules_per_token: if tokens > 0 { joules / tokens as f64 } else { 0.0 },
+        }
+    }
+
+    /// Total energy across all phases (time-weighted power mix).
+    pub fn total_joules(&self, pm: &PowerModel) -> f64 {
+        self.phases.iter().map(|&(p, s, _)| p.power_w(pm) * s).sum()
+    }
+
+    /// Time-weighted average power across all phases, W.
+    pub fn avg_power_w(&self, pm: &PowerModel) -> f64 {
+        let total_s: f64 = self.phases.iter().map(|&(_, s, _)| s).sum();
+        if total_s == 0.0 {
+            return 0.0;
+        }
+        self.total_joules(pm) / total_s
+    }
+}
+
+/// Convenience: J/token for a phase given throughput and placement —
+/// the formula behind every Table 3 cell.
+pub fn joules_per_token(pm: &PowerModel, placement: Placement, tokens_per_s: f64) -> f64 {
+    assert!(tokens_per_s > 0.0);
+    placement.power_w(pm) / tokens_per_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::npu::config::PowerModel;
+
+    #[test]
+    fn placement_power_ordering() {
+        let pm = PowerModel::sd8gen3();
+        assert!(Placement::NpuOnly.power_w(&pm) < Placement::CpuOnly.power_w(&pm));
+        assert!(Placement::CpuOnly.power_w(&pm) < Placement::Hybrid.power_w(&pm));
+    }
+
+    #[test]
+    fn meter_accumulates() {
+        let pm = PowerModel::sd8gen3();
+        let mut m = EnergyMeter::new();
+        m.record(Placement::NpuOnly, 2.0, 100);
+        m.record(Placement::NpuOnly, 1.0, 28);
+        m.record(Placement::CpuOnly, 0.5, 10);
+        let r = m.report(&pm, Placement::NpuOnly);
+        assert_eq!(r.tokens, 128);
+        assert!((r.seconds - 3.0).abs() < 1e-12);
+        assert!((r.joules - 3.0 * pm.npu_active_w).abs() < 1e-9);
+        assert!((r.joules_per_token - 3.0 * pm.npu_active_w / 128.0).abs() < 1e-9);
+        // Total mixes both placements.
+        let total = m.total_joules(&pm);
+        assert!((total - (3.0 * pm.npu_active_w + 0.5 * pm.cpu_active_w)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table3_shape_decoding() {
+        // At equal decode throughput, NPU-only beats CPU-only by the power
+        // ratio (~40% reduction, §6.4); T-MAN also decodes faster, so the
+        // J/token gap widens.
+        let pm = PowerModel::sd8gen3();
+        let cpu = joules_per_token(&pm, Placement::CpuOnly, 16.0);
+        let npu_same = joules_per_token(&pm, Placement::NpuOnly, 16.0);
+        let npu_faster = joules_per_token(&pm, Placement::NpuOnly, 49.0);
+        assert!(npu_same / cpu < 0.62);
+        assert!(npu_faster < 0.25 * cpu);
+    }
+
+    #[test]
+    fn avg_power_is_time_weighted() {
+        let pm = PowerModel::sd8gen3();
+        let mut m = EnergyMeter::new();
+        m.record(Placement::NpuOnly, 3.0, 1);
+        m.record(Placement::Hybrid, 1.0, 1);
+        let avg = m.avg_power_w(&pm);
+        let want = (3.0 * pm.npu_active_w + 1.0 * pm.hybrid_active_w) / 4.0;
+        assert!((avg - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_meter_is_zero() {
+        let pm = PowerModel::sd8gen3();
+        let m = EnergyMeter::new();
+        assert_eq!(m.total_joules(&pm), 0.0);
+        assert_eq!(m.avg_power_w(&pm), 0.0);
+        assert_eq!(m.report(&pm, Placement::NpuOnly).joules_per_token, 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! HMX matrix-core model: functional tile GEMM plus the throughput model
+//! used by the prefill path.
+//!
+//! The HMX operates on 32×32 tiles fed from TCM over the 2 KB burst path
+//! (§2.3). It only speaks dense GEMM at fixed precisions (INT8, FP16) —
+//! which is exactly why arbitrary low-bit formats need dequantization (or
+//! T-MAN's LUT repacking) before they can touch it.
+
+use crate::npu::config::NpuConfig;
+use crate::util::f16_round;
+
+/// Precision the matrix core executes at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HmxPrecision {
+    Int8,
+    Fp16,
+}
+
+impl HmxPrecision {
+    pub fn tops(self, cfg: &NpuConfig) -> f64 {
+        match self {
+            HmxPrecision::Int8 => cfg.hmx_tops_int8,
+            HmxPrecision::Fp16 => cfg.hmx_tops_fp16,
+        }
+    }
+}
+
+/// Functional FP16 tile GEMM: C += A(f16) × B(f16)^T with f32 accumulate.
+/// `a` is (n, k) activations, `b` is (m, k) weights (row-major, transposed
+/// layout as the kernels store them), `c` is (n, m).
+/// All inputs are assumed already rounded to fp16-representable values; the
+/// accumulator is f32 as on hardware.
+pub fn gemm_fp16(a: &[f32], b: &[f32], c: &mut [f32], n: usize, m: usize, k: usize) {
+    assert_eq!(a.len(), n * k);
+    assert_eq!(b.len(), m * k);
+    assert_eq!(c.len(), n * m);
+    for i in 0..n {
+        for j in 0..m {
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += a[i * k + t] * b[j * k + t];
+            }
+            c[i * m + j] += acc;
+        }
+    }
+}
+
+/// Functional INT8 tile GEMM with i32 accumulate: C += A(i8) × B(i8)^T.
+pub fn gemm_int8(a: &[i8], b: &[i8], c: &mut [i32], n: usize, m: usize, k: usize) {
+    assert_eq!(a.len(), n * k);
+    assert_eq!(b.len(), m * k);
+    assert_eq!(c.len(), n * m);
+    for i in 0..n {
+        for j in 0..m {
+            let mut acc = 0i32;
+            for t in 0..k {
+                acc += a[i * k + t] as i32 * b[j * k + t] as i32;
+            }
+            c[i * m + j] += acc;
+        }
+    }
+}
+
+/// Round a full matrix to fp16-representable values (what landing in an
+/// fp16 TCM buffer does to dequantized weights / activations).
+pub fn round_matrix_f16(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = f16_round(*v);
+    }
+}
+
+/// Time for an (n × m × k) GEMM on the matrix core, µs, assuming operands
+/// are already staged in TCM. Small matrices cannot saturate the systolic
+/// array: each dimension is padded up to the 32-wide tile.
+pub fn hmx_gemm_time_us(cfg: &NpuConfig, n: usize, m: usize, k: usize, prec: HmxPrecision) -> f64 {
+    let t = cfg.hmx_tile;
+    let pad = |x: usize| x.div_ceil(t) * t;
+    let macs = pad(n) as f64 * pad(m) as f64 * pad(k) as f64;
+    let ops = 2.0 * macs;
+    ops / (prec.tops(cfg) * 1e12) * 1e6
+}
+
+/// Effective MXU/HMX utilization of a GEMM at the given shape: the ratio of
+/// useful MACs to padded-tile MACs. Drives the "matrix core is idle during
+/// GEMV" observation (§3) — at n=1 utilization is 1/32.
+pub fn hmx_utilization(cfg: &NpuConfig, n: usize, m: usize, k: usize) -> f64 {
+    let t = cfg.hmx_tile;
+    let pad = |x: usize| x.div_ceil(t) * t;
+    (n * m * k) as f64 / (pad(n) as f64 * pad(m) as f64 * pad(k) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fp16_gemm_matches_naive() {
+        let (n, m, k) = (3, 5, 8);
+        let mut rng = Rng::new(2);
+        let mut a = rng.normal_vec(n * k, 1.0);
+        let mut b = rng.normal_vec(m * k, 1.0);
+        round_matrix_f16(&mut a);
+        round_matrix_f16(&mut b);
+        let mut c = vec![0.0f32; n * m];
+        gemm_fp16(&a, &b, &mut c, n, m, k);
+        for i in 0..n {
+            for j in 0..m {
+                let want: f32 = (0..k).map(|t| a[i * k + t] * b[j * k + t]).sum();
+                assert!((c[i * m + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn int8_gemm_exact() {
+        let a: Vec<i8> = vec![1, -2, 3, 4, 5, -6];
+        let b: Vec<i8> = vec![1, 0, -1, 2, 2, 2];
+        let mut c = vec![0i32; 4];
+        gemm_int8(&a, &b, &mut c, 2, 2, 3);
+        // c[i][j] = a_row_i . b_row_j
+        assert_eq!(c, vec![1 - 3, 2 - 4 + 6, 4 + 6, 8 + 10 - 12]);
+    }
+
+    #[test]
+    fn gemm_accumulates_into_c() {
+        let a = vec![1.0f32];
+        let b = vec![2.0f32];
+        let mut c = vec![10.0f32];
+        gemm_fp16(&a, &b, &mut c, 1, 1, 1);
+        assert_eq!(c[0], 12.0);
+    }
+
+    #[test]
+    fn gemv_wastes_the_matrix_core() {
+        let cfg = NpuConfig::sd8gen3();
+        // n=1 GEMV only uses 1/32 of the tile rows.
+        let u = hmx_utilization(&cfg, 1, 4096, 4096);
+        assert!((u - 1.0 / 32.0).abs() < 1e-9);
+        assert_eq!(hmx_utilization(&cfg, 128, 4096, 4096), 1.0);
+    }
+
+    #[test]
+    fn hmx_time_scales_with_precision_and_shape() {
+        let cfg = NpuConfig::sd8gen3();
+        let t_int8 = hmx_gemm_time_us(&cfg, 128, 4096, 4096, HmxPrecision::Int8);
+        let t_fp16 = hmx_gemm_time_us(&cfg, 128, 4096, 4096, HmxPrecision::Fp16);
+        assert!((t_fp16 / t_int8 - 2.0).abs() < 1e-9);
+        // 128*4096*4096*2 ops at 34 TOPS ~ 126 us.
+        assert!((t_int8 - 126.3).abs() < 5.0, "t_int8={t_int8}");
+    }
+}

@@ -1,0 +1,228 @@
+//! HVX vector-core model: functional VLUT16/VLUT32 semantics plus the
+//! throughput analysis behind Table 1.
+//!
+//! The decode kernel's entire inner loop is the HVX `VLUT` instruction:
+//! a vector of 8-bit indices performs parallel lookups into a small table
+//! held in vector registers. Two variants exist (§5):
+//!   - **VLUT16**: 16 entries × 16 bit — our pick (higher equiv-MADD
+//!     throughput for both 8- and 16-bit activations);
+//!   - **VLUT32**: 32 entries × 8 bit.
+//!
+//! One lookup into a 2^g-entry table of precomputed partial dot products
+//! subsumes `g` multiply-adds (the index encodes g one-bit weights), which
+//! is where the "# Equiv. MADDs" column of Table 1 comes from.
+
+use crate::npu::config::NpuConfig;
+
+/// Which VLUT variant a kernel uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VlutVariant {
+    /// 16 entries, 16-bit each.
+    Vlut16,
+    /// 32 entries, 8-bit each.
+    Vlut32,
+}
+
+impl VlutVariant {
+    pub fn entries(self) -> usize {
+        match self {
+            VlutVariant::Vlut16 => 16,
+            VlutVariant::Vlut32 => 32,
+        }
+    }
+
+    pub fn entry_bits(self) -> usize {
+        match self {
+            VlutVariant::Vlut16 => 16,
+            VlutVariant::Vlut32 => 8,
+        }
+    }
+
+    /// Index bits one lookup consumes (log2 of table size) — the number of
+    /// one-bit weights, hence MADDs, a single lookup subsumes.
+    pub fn madds_per_lookup(self) -> usize {
+        match self {
+            VlutVariant::Vlut16 => 4,
+            VlutVariant::Vlut32 => 5,
+        }
+    }
+
+    /// Parallel lookups per instruction for a given activation bit width
+    /// (Table 1): the 1024-bit result vector holds `1024 / act_bits` looked
+    /// up values for VLUT16; VLUT32 produces half as many per issue because
+    /// the wider table occupies two register banks.
+    pub fn lookups_per_instr(self, act_bits: usize) -> usize {
+        assert!(act_bits == 8 || act_bits == 16, "activation bits must be 8 or 16");
+        match self {
+            VlutVariant::Vlut16 => 2048 / act_bits, // 256 @8b, 128 @16b
+            VlutVariant::Vlut32 => 1024 / act_bits, // 128 @8b, 64 @16b
+        }
+    }
+
+    /// Equivalent multiply-adds per instruction (Table 1, last column).
+    pub fn equiv_madds_per_instr(self, act_bits: usize) -> usize {
+        self.lookups_per_instr(act_bits) * self.madds_per_lookup()
+    }
+
+    /// Cycles per instruction (Table 1: both variants dual-issue at 0.5).
+    pub fn cpi(self, cfg: &NpuConfig) -> f64 {
+        cfg.vlut_cpi
+    }
+
+    /// Equivalent-MADD throughput per core in G-MADDs/s.
+    pub fn gmadds_per_core(self, cfg: &NpuConfig, act_bits: usize) -> f64 {
+        self.equiv_madds_per_instr(act_bits) as f64 * cfg.clock_ghz / self.cpi(cfg)
+    }
+}
+
+/// One row of Table 1 for reporting.
+#[derive(Debug, Clone)]
+pub struct VlutRow {
+    pub variant: VlutVariant,
+    pub act_bits: usize,
+    pub cpi: f64,
+    pub lookups: usize,
+    pub equiv_madds: usize,
+}
+
+/// Regenerate Table 1.
+pub fn table1(cfg: &NpuConfig) -> Vec<VlutRow> {
+    let mut rows = Vec::new();
+    for variant in [VlutVariant::Vlut16, VlutVariant::Vlut32] {
+        for act_bits in [8usize, 16] {
+            rows.push(VlutRow {
+                variant,
+                act_bits,
+                cpi: variant.cpi(cfg),
+                lookups: variant.lookups_per_instr(act_bits),
+                equiv_madds: variant.equiv_madds_per_instr(act_bits),
+            });
+        }
+    }
+    rows
+}
+
+/// Functional VLUT16: each 8-bit index selects a 16-bit entry from a
+/// 16-entry table (upper index bits ignored, as on hardware where the
+/// kernel masks indices to 4 bits).
+pub fn vlut16(table: &[i16; 16], indices: &[u8], out: &mut [i16]) {
+    assert_eq!(indices.len(), out.len());
+    for (o, &i) in out.iter_mut().zip(indices) {
+        *o = table[(i & 0x0F) as usize];
+    }
+}
+
+/// Functional VLUT16 over fp16 entries (stored as f32 values that are
+/// exactly fp16-representable) — the decode kernel's A_FP16 path.
+pub fn vlut16_f16(table: &[f32; 16], indices: &[u8], out: &mut [f32]) {
+    assert_eq!(indices.len(), out.len());
+    for (o, &i) in out.iter_mut().zip(indices) {
+        *o = table[(i & 0x0F) as usize];
+    }
+}
+
+/// Functional VLUT32: each index selects an 8-bit entry from a 32-entry
+/// table (indices masked to 5 bits).
+pub fn vlut32(table: &[i8; 32], indices: &[u8], out: &mut [i8]) {
+    assert_eq!(indices.len(), out.len());
+    for (o, &i) in out.iter_mut().zip(indices) {
+        *o = table[(i & 0x1F) as usize];
+    }
+}
+
+/// Time for `n_instr` VLUT issues across `threads` HVX threads, µs.
+pub fn vlut_time_us(cfg: &NpuConfig, variant: VlutVariant, n_instr: usize, threads: usize) -> f64 {
+    let threads = threads.clamp(1, cfg.hvx_contexts) as f64;
+    let cycles = n_instr as f64 * variant.cpi(cfg) / threads;
+    cycles * cfg.cycle_us()
+}
+
+/// Time for `n_instr` plain vector-ALU ops (adds, shifts, min/max) across
+/// `threads` HVX threads, µs.
+pub fn valu_time_us(cfg: &NpuConfig, n_instr: usize, threads: usize) -> f64 {
+    let threads = threads.clamp(1, cfg.hvx_contexts) as f64;
+    n_instr as f64 * cfg.valu_cpi / threads * cfg.cycle_us()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let cfg = NpuConfig::sd8gen3();
+        let rows = table1(&cfg);
+        // Paper Table 1:
+        //   VLUT16: 8b -> 256 lookups / 1024 MADDs; 16b -> 128 / 512.
+        //   VLUT32: 8b -> 128 / 640;  16b -> 64 / 320. CPI 0.5 everywhere.
+        let expect = [
+            (VlutVariant::Vlut16, 8, 256, 1024),
+            (VlutVariant::Vlut16, 16, 128, 512),
+            (VlutVariant::Vlut32, 8, 128, 640),
+            (VlutVariant::Vlut32, 16, 64, 320),
+        ];
+        for (row, (v, b, l, m)) in rows.iter().zip(expect) {
+            assert_eq!(row.variant, v);
+            assert_eq!(row.act_bits, b);
+            assert_eq!(row.lookups, l, "{v:?}@{b}");
+            assert_eq!(row.equiv_madds, m, "{v:?}@{b}");
+            assert_eq!(row.cpi, 0.5);
+        }
+    }
+
+    #[test]
+    fn vlut16_wins_both_widths() {
+        // §5: "VLUT16 achieves higher throughput for both 8-bit and 16-bit
+        // activations. We thus select VLUT16."
+        for bits in [8, 16] {
+            assert!(
+                VlutVariant::Vlut16.equiv_madds_per_instr(bits)
+                    > VlutVariant::Vlut32.equiv_madds_per_instr(bits)
+            );
+        }
+    }
+
+    #[test]
+    fn functional_vlut16() {
+        let mut table = [0i16; 16];
+        for (i, t) in table.iter_mut().enumerate() {
+            *t = (i as i16) * 3 - 7;
+        }
+        let idx = [0u8, 5, 15, 16, 255]; // upper bits ignored
+        let mut out = [0i16; 5];
+        vlut16(&table, &idx, &mut out);
+        assert_eq!(out, [-7, 8, 38, -7, 38]);
+    }
+
+    #[test]
+    fn functional_vlut32_masks_to_5_bits() {
+        let mut table = [0i8; 32];
+        for (i, t) in table.iter_mut().enumerate() {
+            *t = i as i8;
+        }
+        let idx = [31u8, 32, 63];
+        let mut out = [0i8; 3];
+        vlut32(&table, &idx, &mut out);
+        assert_eq!(out, [31, 0, 31]);
+    }
+
+    #[test]
+    fn vlut_time_scales_with_threads() {
+        let cfg = NpuConfig::sd8gen3();
+        let t1 = vlut_time_us(&cfg, VlutVariant::Vlut16, 10_000, 1);
+        let t4 = vlut_time_us(&cfg, VlutVariant::Vlut16, 10_000, 4);
+        assert!((t1 / t4 - 4.0).abs() < 1e-9);
+        // Clamped at hardware contexts.
+        let t16 = vlut_time_us(&cfg, VlutVariant::Vlut16, 10_000, 16);
+        assert_eq!(t4, t16);
+    }
+
+    #[test]
+    fn vlut_throughput_sanity() {
+        // 4 cores * 1024 MADDs/instr * 2 instr/cycle * 1 GHz ~ 8 G-MADD/s
+        // per core scale — far below HMX TOPS but far above scalar float.
+        let cfg = NpuConfig::sd8gen3();
+        let g = VlutVariant::Vlut16.gmadds_per_core(&cfg, 8);
+        assert!((g - 2048.0).abs() < 1.0, "per-core G-MADDs {g}");
+    }
+}

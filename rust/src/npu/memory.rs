@@ -1,0 +1,238 @@
+//! Memory-hierarchy model: DDR, TCM, L2 and the three load paths the paper
+//! microbenchmarks in Table 2 (vectorized load, l2fetch, DMA).
+//!
+//! The decode phase is memory-bound, so which DDR path a kernel uses
+//! decides its latency. The paper measures (OnePlus 12):
+//!
+//! | method          | 1 thread | 4 threads |
+//! |-----------------|----------|-----------|
+//! | vectorized load | 5 GB/s   | 20 GB/s   |
+//! | l2fetch         | 26 GB/s  | 32 GB/s   |
+//! | DMA (DDR→TCM)   | 59 GB/s  | 59 GB/s   |
+//!
+//! and concludes: weights go over DMA, small scalar-side data over l2fetch
+//! (§5 "Asynchronous DMA").
+
+use crate::npu::config::NpuConfig;
+
+/// Where data lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemLevel {
+    /// Off-chip DRAM.
+    Ddr,
+    /// 8 MB software-managed on-chip memory.
+    Tcm,
+    /// 1 MB general cache shared by vector/scalar units.
+    L2,
+    /// Vector/scalar register files.
+    Reg,
+}
+
+/// The three DDR load paths of Table 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadMethod {
+    /// Plain vector loads; implicitly through L2; stalls on DDR latency.
+    VectorizedLoad,
+    /// Explicit `l2fetch` prefetch into L2, then vector loads hit.
+    L2Fetch,
+    /// Asynchronous DMA directly into TCM.
+    Dma,
+}
+
+impl LoadMethod {
+    pub fn name(self) -> &'static str {
+        match self {
+            LoadMethod::VectorizedLoad => "Vectorized Load",
+            LoadMethod::L2Fetch => "L2fetch",
+            LoadMethod::Dma => "DMA",
+        }
+    }
+
+    /// Sustained bandwidth for this path at a given HVX thread count, GB/s.
+    pub fn bandwidth_gbps(self, cfg: &NpuConfig, threads: usize) -> f64 {
+        match self {
+            LoadMethod::VectorizedLoad => cfg.vload_gbps(threads),
+            LoadMethod::L2Fetch => cfg.l2fetch_gbps(threads),
+            // DMA bandwidth is independent of HVX threads — the engine runs
+            // asynchronously (Table 2 shows 59 GB/s for both columns).
+            LoadMethod::Dma => cfg.dma_gbps,
+        }
+    }
+
+    /// Time to move `bytes` from DDR on-chip, µs.
+    pub fn transfer_us(self, cfg: &NpuConfig, bytes: usize, threads: usize) -> f64 {
+        let bw = self.bandwidth_gbps(cfg, threads); // GB/s == bytes/ns
+        let base = bytes as f64 / (bw * 1e3); // µs
+        match self {
+            LoadMethod::Dma => base + cfg.dma_setup_us,
+            _ => base,
+        }
+    }
+}
+
+/// A DMA transfer descriptor for the pipeline model.
+#[derive(Debug, Clone)]
+pub struct DmaTransfer {
+    pub bytes: usize,
+    pub dst: MemLevel,
+}
+
+/// Asynchronous DMA engine: transfers complete in the background while the
+/// vector and matrix cores work — the first stage of the three-stage
+/// prefill pipeline (Fig. 9).
+#[derive(Debug, Clone)]
+pub struct DmaEngine {
+    cfg: NpuConfig,
+    /// Absolute µs at which the engine becomes free.
+    free_at_us: f64,
+    pub total_bytes: usize,
+    pub total_transfers: usize,
+}
+
+impl DmaEngine {
+    pub fn new(cfg: &NpuConfig) -> Self {
+        Self { cfg: cfg.clone(), free_at_us: 0.0, total_bytes: 0, total_transfers: 0 }
+    }
+
+    /// Issue a transfer at absolute time `now_us`; returns its completion
+    /// time. Transfers queue FIFO on the single engine.
+    pub fn issue(&mut self, now_us: f64, t: &DmaTransfer) -> f64 {
+        assert_eq!(t.dst, MemLevel::Tcm, "model only supports DDR->TCM DMA");
+        let start = now_us.max(self.free_at_us);
+        let done = start + LoadMethod::Dma.transfer_us(&self.cfg, t.bytes, 1);
+        self.free_at_us = done;
+        self.total_bytes += t.bytes;
+        self.total_transfers += 1;
+        done
+    }
+
+    pub fn reset(&mut self) {
+        self.free_at_us = 0.0;
+        self.total_bytes = 0;
+        self.total_transfers = 0;
+    }
+}
+
+/// TCM allocator: tracks the on-chip budget (Eqn. 4: the footprint of all
+/// pipeline stages × threads must fit in 8 MB).
+#[derive(Debug, Clone)]
+pub struct TcmBudget {
+    pub capacity: usize,
+    pub used: usize,
+}
+
+impl TcmBudget {
+    pub fn new(cfg: &NpuConfig) -> Self {
+        Self { capacity: cfg.tcm_bytes, used: 0 }
+    }
+
+    /// Try to reserve `bytes`; Err if the tile layout exceeds TCM.
+    pub fn reserve(&mut self, bytes: usize) -> Result<(), String> {
+        if self.used + bytes > self.capacity {
+            return Err(format!(
+                "TCM overflow: {} + {} > {}",
+                self.used, bytes, self.capacity
+            ));
+        }
+        self.used += bytes;
+        Ok(())
+    }
+
+    pub fn release(&mut self, bytes: usize) {
+        assert!(bytes <= self.used, "releasing more than reserved");
+        self.used -= bytes;
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.used
+    }
+}
+
+/// One row of Table 2 produced by the simulated microbenchmark: stream
+/// `bytes` and report achieved GB/s.
+#[derive(Debug, Clone)]
+pub struct MemBwRow {
+    pub method: LoadMethod,
+    pub threads: usize,
+    pub gbps: f64,
+}
+
+/// Regenerate Table 2 by timing a simulated 64 MB stream through each path.
+pub fn table2(cfg: &NpuConfig, stream_bytes: usize) -> Vec<MemBwRow> {
+    let mut rows = Vec::new();
+    for method in [LoadMethod::VectorizedLoad, LoadMethod::L2Fetch, LoadMethod::Dma] {
+        for threads in [1usize, 4] {
+            let us = method.transfer_us(cfg, stream_bytes, threads);
+            rows.push(MemBwRow { method, threads, gbps: stream_bytes as f64 / (us * 1e3) });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_reproduces_measurements() {
+        let cfg = NpuConfig::sd8gen3();
+        let rows = table2(&cfg, 64 << 20);
+        let get = |m: LoadMethod, t: usize| {
+            rows.iter().find(|r| r.method == m && r.threads == t).unwrap().gbps
+        };
+        // Within 5% of the paper's Table 2 (setup overheads eat a little).
+        let close = |got: f64, want: f64| (got - want).abs() / want < 0.05;
+        assert!(close(get(LoadMethod::VectorizedLoad, 1), 5.0));
+        assert!(close(get(LoadMethod::VectorizedLoad, 4), 20.0));
+        assert!(close(get(LoadMethod::L2Fetch, 1), 26.0));
+        assert!(close(get(LoadMethod::L2Fetch, 4), 32.0));
+        assert!(close(get(LoadMethod::Dma, 1), 59.0));
+        assert!(close(get(LoadMethod::Dma, 4), 59.0));
+    }
+
+    #[test]
+    fn dma_is_fastest_and_thread_independent() {
+        let cfg = NpuConfig::sd8gen3();
+        let sz = 8 << 20;
+        let dma = LoadMethod::Dma.transfer_us(&cfg, sz, 1);
+        assert_eq!(dma, LoadMethod::Dma.transfer_us(&cfg, sz, 4));
+        assert!(dma < LoadMethod::L2Fetch.transfer_us(&cfg, sz, 4));
+        assert!(dma < LoadMethod::VectorizedLoad.transfer_us(&cfg, sz, 4));
+    }
+
+    #[test]
+    fn dma_engine_serializes_transfers() {
+        let cfg = NpuConfig::sd8gen3();
+        let mut dma = DmaEngine::new(&cfg);
+        let t = DmaTransfer { bytes: 1 << 20, dst: MemLevel::Tcm };
+        let d1 = dma.issue(0.0, &t);
+        let d2 = dma.issue(0.0, &t); // queues behind the first
+        assert!(d2 > d1);
+        assert!((d2 - 2.0 * d1).abs() < 1.0 + 1e-6); // ~2x (setup once each)
+        assert_eq!(dma.total_transfers, 2);
+        assert_eq!(dma.total_bytes, 2 << 20);
+    }
+
+    #[test]
+    fn dma_engine_idle_gap() {
+        let cfg = NpuConfig::sd8gen3();
+        let mut dma = DmaEngine::new(&cfg);
+        let t = DmaTransfer { bytes: 1024, dst: MemLevel::Tcm };
+        let d1 = dma.issue(0.0, &t);
+        // Issue long after the first completes: starts at `now`.
+        let d2 = dma.issue(d1 + 100.0, &t);
+        assert!(d2 > d1 + 100.0);
+    }
+
+    #[test]
+    fn tcm_budget_enforced() {
+        let cfg = NpuConfig::sd8gen3();
+        let mut tcm = TcmBudget::new(&cfg);
+        assert_eq!(tcm.capacity, 8 << 20);
+        tcm.reserve(6 << 20).unwrap();
+        assert!(tcm.reserve(4 << 20).is_err());
+        tcm.release(2 << 20);
+        tcm.reserve(4 << 20).unwrap();
+        assert_eq!(tcm.remaining(), 0);
+    }
+}

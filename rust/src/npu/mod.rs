@@ -1,0 +1,24 @@
+//! Cycle-approximate NPU simulator — the hardware substrate every
+//! performance experiment runs on (see DESIGN.md §1 for the substitution
+//! rationale: the paper's Hexagon NPU is closed hardware, so we model its
+//! unit inventory and calibrate to the paper's own microbenchmarks).
+//!
+//! - [`config`] — SoC descriptions (SD8 Gen 3 / SD8 Elite / mobile CPU).
+//! - [`hvx`] — vector cores: functional + timed VLUT16/VLUT32 (Table 1).
+//! - [`hmx`] — matrix core: functional tile GEMM + TOPS model.
+//! - [`memory`] — DDR/TCM/L2, the three load paths (Table 2), DMA engine.
+//! - [`cost`] — MEM/DQ/CMP latency breakdowns and op counters (Fig. 5).
+//! - [`energy`] — placement power states and J/token (Table 3).
+
+pub mod config;
+pub mod cost;
+pub mod energy;
+pub mod hmx;
+pub mod hvx;
+pub mod memory;
+
+pub use config::{CpuConfig, NpuConfig, PowerModel, SocConfig};
+pub use cost::{Breakdown, KernelCost, OpCounts};
+pub use energy::{joules_per_token, EnergyMeter, EnergyReport, Placement};
+pub use hvx::VlutVariant;
+pub use memory::{DmaEngine, LoadMethod, MemLevel, TcmBudget};

@@ -1,0 +1,267 @@
+//! Bit-serial weight layout — T-MAN's *unified* on-device storage format.
+//!
+//! The paper stores exactly one copy of the model weights, in the layout the
+//! decoding phase needs (§4.1: "we prioritize the layout required for
+//! decoding by using bit-serial packing"), and repacks on the fly during
+//! prefill via the two-level LUT of `lut.rs`.
+//!
+//! A `bits`-bit (M, K) code matrix is decomposed into `bits` one-bit planes.
+//! Plane `b` holds bit `b` of every code, packed LSB-first along K, 8 bits
+//! per byte, row-major. The decode kernel consumes a plane 4 K-positions at
+//! a time: those 4 bits form the index into a 16-entry activation table
+//! (Fig. 2), which is exactly a nibble of the packed plane.
+
+use crate::quant::formats::{Granularity, WeightDtype};
+use crate::quant::qmatrix::QuantizedMatrix;
+
+/// Bit-plane-decomposed weights. The canonical single-copy on-device format.
+#[derive(Debug, Clone)]
+pub struct BitSerialWeights {
+    pub m: usize,
+    pub k: usize,
+    pub dtype: WeightDtype,
+    pub gran: Granularity,
+    /// `planes[b]` = bit `b` of every code; `m * ceil(k/8)` bytes, row-major,
+    /// LSB-first within a byte along K.
+    pub planes: Vec<Vec<u8>>,
+    /// fp16-rounded scales, one per group (shared with the prefill path).
+    pub scales: Vec<f32>,
+    /// fp16-rounded zero-points in code space, one per group.
+    pub zeros: Vec<f32>,
+}
+
+impl BitSerialWeights {
+    /// Bytes per plane row (K bits rounded up to whole bytes).
+    #[inline]
+    pub fn row_bytes(&self) -> usize {
+        self.k.div_ceil(8)
+    }
+
+    /// Decompose a canonical quantized matrix into bit planes.
+    pub fn from_qmatrix(q: &QuantizedMatrix) -> Self {
+        let bits = q.dtype.bits() as usize;
+        let row_bytes = q.k.div_ceil(8);
+        let mut planes = vec![vec![0u8; q.m * row_bytes]; bits];
+        for i in 0..q.m {
+            for j in 0..q.k {
+                let code = q.code(i, j);
+                for (b, plane) in planes.iter_mut().enumerate() {
+                    if (code >> b) & 1 == 1 {
+                        plane[i * row_bytes + j / 8] |= 1 << (j % 8);
+                    }
+                }
+            }
+        }
+        Self {
+            m: q.m,
+            k: q.k,
+            dtype: q.dtype,
+            gran: q.gran,
+            planes,
+            scales: q.scales.clone(),
+            zeros: q.zeros.clone(),
+        }
+    }
+
+    /// Bit `b` of code (row, col).
+    #[inline]
+    pub fn bit(&self, b: usize, row: usize, col: usize) -> u8 {
+        let rb = self.row_bytes();
+        (self.planes[b][row * rb + col / 8] >> (col % 8)) & 1
+    }
+
+    /// 4-bit LUT index: bits of plane `b` at K-positions
+    /// `4*nib .. 4*nib+4` of row `row` (zero-padded past K). This is the
+    /// unit the VLUT decode kernel consumes.
+    #[inline]
+    pub fn nibble(&self, b: usize, row: usize, nib: usize) -> u8 {
+        let rb = self.row_bytes();
+        let byte = self.planes[b][row * rb + nib / 2];
+        if nib % 2 == 0 {
+            byte & 0x0F
+        } else {
+            byte >> 4
+        }
+    }
+
+    /// Number of 4-bit nibbles per row (K positions / 4, rounded up).
+    #[inline]
+    pub fn nibbles_per_row(&self) -> usize {
+        self.k.div_ceil(4)
+    }
+
+    /// Reconstruct the canonical code matrix (round-trip check; also the
+    /// semantic spec the two-level repack LUT must match).
+    pub fn to_codes(&self) -> Vec<u8> {
+        let mut codes = vec![0u8; self.m * self.k];
+        for i in 0..self.m {
+            for j in 0..self.k {
+                let mut c = 0u8;
+                for b in 0..self.planes.len() {
+                    c |= self.bit(b, i, j) << b;
+                }
+                codes[i * self.k + j] = c;
+            }
+        }
+        codes
+    }
+
+    /// Packed weight bytes (all planes; excludes scales).
+    pub fn weight_bytes(&self) -> usize {
+        self.planes.len() * self.m * self.row_bytes()
+    }
+
+    /// Group index for element (row, col) — shared with the canonical form.
+    #[inline]
+    pub fn group_of(&self, row: usize, col: usize) -> usize {
+        self.gran.group_of(row, col, self.k)
+    }
+}
+
+/// Bit-parallel packed weights (codes packed contiguously, e.g. two INT4
+/// codes per byte) — the layout dequantization-based GEMM wants, and what
+/// the repack step of the fused LUT dequantization produces on the fly.
+#[derive(Debug, Clone)]
+pub struct BitParallelWeights {
+    pub m: usize,
+    pub k: usize,
+    pub dtype: WeightDtype,
+    /// Codes packed along K, LSB-first: `8/bits` codes per byte.
+    pub packed: Vec<u8>,
+}
+
+impl BitParallelWeights {
+    pub fn from_codes(codes: &[u8], m: usize, k: usize, dtype: WeightDtype) -> Self {
+        assert_eq!(codes.len(), m * k);
+        let bits = dtype.bits() as usize;
+        assert!(bits <= 8 && 8 % bits == 0, "bit-parallel packing needs bits in {{1,2,4,8}}");
+        let per_byte = 8 / bits;
+        let row_bytes = k.div_ceil(per_byte);
+        let mut packed = vec![0u8; m * row_bytes];
+        for i in 0..m {
+            for j in 0..k {
+                let c = codes[i * k + j] & ((1u16 << bits) - 1) as u8;
+                packed[i * row_bytes + j / per_byte] |= c << ((j % per_byte) * bits);
+            }
+        }
+        Self { m, k, dtype, packed }
+    }
+
+    #[inline]
+    pub fn row_bytes(&self) -> usize {
+        let per_byte = 8 / self.dtype.bits() as usize;
+        self.k.div_ceil(per_byte)
+    }
+
+    #[inline]
+    pub fn code(&self, row: usize, col: usize) -> u8 {
+        let bits = self.dtype.bits() as usize;
+        let per_byte = 8 / bits;
+        let byte = self.packed[row * self.row_bytes() + col / per_byte];
+        (byte >> ((col % per_byte) * bits)) & ((1u16 << bits) - 1) as u8
+    }
+
+    pub fn to_codes(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.m * self.k];
+        for i in 0..self.m {
+            for j in 0..self.k {
+                out[i * self.k + j] = self.code(i, j);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::formats::Granularity;
+    use crate::quant::quantize::rtn;
+    use crate::util::Rng;
+
+    fn sample_q(m: usize, k: usize, dtype: WeightDtype, seed: u64) -> QuantizedMatrix {
+        let w = Rng::new(seed).normal_vec(m * k, 0.1);
+        rtn(&w, m, k, dtype, Granularity::PerBlock(64))
+    }
+
+    #[test]
+    fn bitserial_round_trip_int4() {
+        let q = sample_q(8, 128, WeightDtype::Int4, 1);
+        let bs = BitSerialWeights::from_qmatrix(&q);
+        assert_eq!(bs.planes.len(), 4);
+        assert_eq!(bs.to_codes(), q.codes);
+    }
+
+    #[test]
+    fn bitserial_round_trip_int2_and_ternary() {
+        for dtype in [WeightDtype::Int2, WeightDtype::Ternary] {
+            let w = Rng::new(5).normal_vec(4 * 64, 0.1);
+            let q = rtn(&w, 4, 64, dtype, Granularity::PerTensor);
+            let bs = BitSerialWeights::from_qmatrix(&q);
+            assert_eq!(bs.planes.len(), 2);
+            assert_eq!(bs.to_codes(), q.codes);
+        }
+    }
+
+    #[test]
+    fn nibble_matches_bits() {
+        let q = sample_q(3, 64, WeightDtype::Int4, 7);
+        let bs = BitSerialWeights::from_qmatrix(&q);
+        for b in 0..4 {
+            for row in 0..3 {
+                for nib in 0..bs.nibbles_per_row() {
+                    let expect = (0..4)
+                        .map(|t| bs.bit(b, row, nib * 4 + t) << t)
+                        .fold(0u8, |a, x| a | x);
+                    assert_eq!(bs.nibble(b, row, nib), expect, "b={b} row={row} nib={nib}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_multiple_of_8_k_is_zero_padded() {
+        let w = Rng::new(9).normal_vec(2 * 13, 0.1);
+        let q = rtn(&w, 2, 13, WeightDtype::Int4, Granularity::PerChannel);
+        let bs = BitSerialWeights::from_qmatrix(&q);
+        assert_eq!(bs.to_codes(), q.codes);
+        // Padding bits beyond K are zero.
+        for b in 0..4 {
+            for row in 0..2 {
+                for col in 13..16 {
+                    assert_eq!(bs.bit(b, row, col), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bitparallel_round_trip() {
+        for dtype in [WeightDtype::Int2, WeightDtype::Int4, WeightDtype::Int8] {
+            let q = sample_q(5, 96, dtype, 11);
+            let bp = BitParallelWeights::from_codes(&q.codes, 5, 96, dtype);
+            assert_eq!(bp.to_codes(), q.codes, "{dtype}");
+        }
+    }
+
+    #[test]
+    fn storage_is_bits_proportional() {
+        let q4 = sample_q(16, 256, WeightDtype::Int4, 13);
+        let q2 = sample_q(16, 256, WeightDtype::Int2, 13);
+        let b4 = BitSerialWeights::from_qmatrix(&q4).weight_bytes();
+        let b2 = BitSerialWeights::from_qmatrix(&q2).weight_bytes();
+        assert_eq!(b4, 16 * 32 * 4);
+        assert_eq!(b2, 16 * 32 * 2);
+        assert_eq!(b4, 2 * b2);
+    }
+
+    #[test]
+    fn single_copy_serves_both_paths() {
+        // The unified-layout property: bit-serial planes reconstruct the
+        // exact codes the bit-parallel prefill path needs — no second copy.
+        let q = sample_q(4, 64, WeightDtype::Int4, 21);
+        let bs = BitSerialWeights::from_qmatrix(&q);
+        let bp = BitParallelWeights::from_codes(&bs.to_codes(), 4, 64, WeightDtype::Int4);
+        assert_eq!(bp.to_codes(), q.codes);
+    }
+}

@@ -1,0 +1,288 @@
+//! Quantization format descriptions.
+//!
+//! T-MAN's premise is that no single quantization format dominates on-device
+//! LLM deployment (§2.2 of the paper): formats differ in bit width (4-, 2-,
+//! 1.58-bit), numerical representation, and granularity (per-block with
+//! group sizes 32/64/128, per-channel, per-tensor). The NPU natively
+//! supports only a narrow subset (per-channel/per-tensor INT), so everything
+//! else must go through dequantization or table lookup.
+//!
+//! This module is the vocabulary shared by the quantizers, the packed weight
+//! layouts, the kernels, and the benchmark harness.
+
+use std::fmt;
+
+/// Weight element type. `bits()` is the storage width of one element in the
+/// bit-serial layout; BitNet's ternary weights are stored as 2-bit codes
+/// following the paper ("we treat its ternary weights as 2-bit for
+/// inference", §6.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WeightDtype {
+    /// 4-bit unsigned codes with asymmetric (scale, zero-point) per group.
+    Int4,
+    /// 2-bit unsigned codes with asymmetric (scale, zero-point) per group.
+    Int2,
+    /// BitNet b1.58 ternary {-1, 0, +1}; stored as 2-bit codes {0,1,2} with a
+    /// single per-tensor scale.
+    Ternary,
+    /// 8-bit (used by the llm.npu baseline's prefill weights).
+    Int8,
+    /// Full/half precision (QNN FP16 baseline; LoadFull ablation).
+    Fp16,
+}
+
+impl WeightDtype {
+    /// Storage bits per element in the packed layout.
+    pub fn bits(self) -> u32 {
+        match self {
+            WeightDtype::Int4 => 4,
+            WeightDtype::Int2 | WeightDtype::Ternary => 2,
+            WeightDtype::Int8 => 8,
+            WeightDtype::Fp16 => 16,
+        }
+    }
+
+    /// Number of distinct code values (`2^bits`, 3 used of 4 for ternary).
+    pub fn levels(self) -> u32 {
+        match self {
+            WeightDtype::Ternary => 3,
+            other => 1 << other.bits(),
+        }
+    }
+
+    pub fn is_quantized(self) -> bool {
+        !matches!(self, WeightDtype::Fp16)
+    }
+}
+
+impl fmt::Display for WeightDtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            WeightDtype::Int4 => "W_INT4",
+            WeightDtype::Int2 => "W_INT2",
+            WeightDtype::Ternary => "W_INT1.58",
+            WeightDtype::Int8 => "W_INT8",
+            WeightDtype::Fp16 => "W_FP16",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Activation element type used by a kernel configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActDtype {
+    /// 16-bit integer activations (QNN-style per-tensor INT16).
+    Int16,
+    /// 8-bit integer activations (llm.npu, bitnet.cpp style).
+    Int8,
+    /// Half precision.
+    Fp16,
+    /// Full precision (reference).
+    Fp32,
+}
+
+impl ActDtype {
+    pub fn bytes(self) -> usize {
+        match self {
+            ActDtype::Int8 => 1,
+            ActDtype::Int16 | ActDtype::Fp16 => 2,
+            ActDtype::Fp32 => 4,
+        }
+    }
+}
+
+impl fmt::Display for ActDtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            ActDtype::Int16 => "A_INT16",
+            ActDtype::Int8 => "A_INT8",
+            ActDtype::Fp16 => "A_FP16",
+            ActDtype::Fp32 => "A_FP32",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Quantization granularity: how many weight elements share one
+/// (scale, zero-point) pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Granularity {
+    /// Group-wise along K with the given block size (paper evaluates 64; 32
+    /// and 128 are also common). This is the format QNN *cannot* express and
+    /// the one T-MAN makes fast.
+    PerBlock(usize),
+    /// One (scale, zero) per output channel (row of the (M,K) weight
+    /// matrix). This is the NPU-native format QNN uses.
+    PerChannel,
+    /// A single (scale, zero) for the whole tensor (BitNet; llm.npu).
+    PerTensor,
+}
+
+impl Granularity {
+    /// Number of scale groups for an (m, k) weight matrix.
+    pub fn num_groups(self, m: usize, k: usize) -> usize {
+        match self {
+            Granularity::PerBlock(b) => {
+                assert!(b > 0, "block size must be positive");
+                m * k.div_ceil(b)
+            }
+            Granularity::PerChannel => m,
+            Granularity::PerTensor => 1,
+        }
+    }
+
+    /// Group index of element (row, col).
+    pub fn group_of(self, row: usize, col: usize, k: usize) -> usize {
+        match self {
+            Granularity::PerBlock(b) => row * k.div_ceil(b) + col / b,
+            Granularity::PerChannel => row,
+            Granularity::PerTensor => 0,
+        }
+    }
+
+    /// Elements sharing one scale (along K, within one row).
+    pub fn group_len(self, k: usize) -> usize {
+        match self {
+            Granularity::PerBlock(b) => b.min(k),
+            Granularity::PerChannel | Granularity::PerTensor => k,
+        }
+    }
+}
+
+impl fmt::Display for Granularity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Granularity::PerBlock(b) => write!(f, "per-block({b})"),
+            Granularity::PerChannel => f.write_str("per-channel"),
+            Granularity::PerTensor => f.write_str("per-tensor"),
+        }
+    }
+}
+
+/// A complete kernel format: weight dtype × activation dtype × granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QuantFormat {
+    pub weight: WeightDtype,
+    pub act: ActDtype,
+    pub gran: Granularity,
+}
+
+impl QuantFormat {
+    pub const fn new(weight: WeightDtype, act: ActDtype, gran: Granularity) -> Self {
+        Self { weight, act, gran }
+    }
+
+    /// The paper's headline T-MAN formats (§6.1).
+    pub fn tman_w4a16() -> Self {
+        Self::new(WeightDtype::Int4, ActDtype::Int16, Granularity::PerBlock(64))
+    }
+    pub fn tman_w2a16() -> Self {
+        Self::new(WeightDtype::Int2, ActDtype::Int16, Granularity::PerBlock(64))
+    }
+    pub fn tman_w4afp16() -> Self {
+        Self::new(WeightDtype::Int4, ActDtype::Fp16, Granularity::PerBlock(64))
+    }
+    pub fn tman_w2afp16() -> Self {
+        Self::new(WeightDtype::Int2, ActDtype::Fp16, Granularity::PerBlock(64))
+    }
+    /// BitNet: ternary per-tensor, INT16 activations.
+    pub fn bitnet() -> Self {
+        Self::new(WeightDtype::Ternary, ActDtype::Int16, Granularity::PerTensor)
+    }
+    /// QNN baseline: per-channel INT4, per-tensor INT16 activations.
+    pub fn qnn_w4a16() -> Self {
+        Self::new(WeightDtype::Int4, ActDtype::Int16, Granularity::PerChannel)
+    }
+    /// QNN FP16 reference.
+    pub fn qnn_fp16() -> Self {
+        Self::new(WeightDtype::Fp16, ActDtype::Fp16, Granularity::PerTensor)
+    }
+    /// llm.npu prefill (per-tensor INT8 weights + INT8 activations).
+    pub fn llmnpu_prefill() -> Self {
+        Self::new(WeightDtype::Int8, ActDtype::Int8, Granularity::PerTensor)
+    }
+    /// llm.npu decoding (INT4 weights dequantized to INT8 on CPU).
+    pub fn llmnpu_decode() -> Self {
+        Self::new(WeightDtype::Int4, ActDtype::Int8, Granularity::PerTensor)
+    }
+
+    /// Bytes of packed weight storage for an (m, k) matrix, excluding scales.
+    pub fn packed_weight_bytes(&self, m: usize, k: usize) -> usize {
+        (m * k * self.weight.bits() as usize).div_ceil(8)
+    }
+
+    /// Bytes of scale/zero metadata (fp16 scale + fp16 zero per group;
+    /// symmetric formats still store the zero slot for layout uniformity).
+    pub fn scale_bytes(&self, m: usize, k: usize) -> usize {
+        self.gran.num_groups(m, k) * 4
+    }
+
+    /// Total model-weight bytes for one (m, k) projection.
+    pub fn weight_footprint(&self, m: usize, k: usize) -> usize {
+        self.packed_weight_bytes(m, k) + self.scale_bytes(m, k)
+    }
+}
+
+impl fmt::Display for QuantFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{} {}", self.weight, self.act, self.gran)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_and_levels() {
+        assert_eq!(WeightDtype::Int4.bits(), 4);
+        assert_eq!(WeightDtype::Int4.levels(), 16);
+        assert_eq!(WeightDtype::Int2.bits(), 2);
+        assert_eq!(WeightDtype::Int2.levels(), 4);
+        assert_eq!(WeightDtype::Ternary.bits(), 2);
+        assert_eq!(WeightDtype::Ternary.levels(), 3);
+        assert_eq!(WeightDtype::Fp16.bits(), 16);
+        assert!(!WeightDtype::Fp16.is_quantized());
+    }
+
+    #[test]
+    fn group_counts() {
+        // 4 rows x 128 cols, block 64 -> 2 groups per row.
+        assert_eq!(Granularity::PerBlock(64).num_groups(4, 128), 8);
+        assert_eq!(Granularity::PerChannel.num_groups(4, 128), 4);
+        assert_eq!(Granularity::PerTensor.num_groups(4, 128), 1);
+        // Non-divisible K rounds up.
+        assert_eq!(Granularity::PerBlock(64).num_groups(1, 100), 2);
+    }
+
+    #[test]
+    fn group_indexing() {
+        let g = Granularity::PerBlock(64);
+        assert_eq!(g.group_of(0, 0, 128), 0);
+        assert_eq!(g.group_of(0, 63, 128), 0);
+        assert_eq!(g.group_of(0, 64, 128), 1);
+        assert_eq!(g.group_of(1, 0, 128), 2);
+        assert_eq!(Granularity::PerChannel.group_of(3, 99, 128), 3);
+        assert_eq!(Granularity::PerTensor.group_of(3, 99, 128), 0);
+    }
+
+    #[test]
+    fn footprints() {
+        let f = QuantFormat::tman_w4a16();
+        // 4096x4096 W4: 8 MiB of codes.
+        assert_eq!(f.packed_weight_bytes(4096, 4096), 4096 * 4096 / 2);
+        // block 64 -> 64 groups per row -> 4096*64 groups, 4 bytes each.
+        assert_eq!(f.scale_bytes(4096, 4096), 4096 * 64 * 4);
+        // llm.npu stores 2 copies (INT8 + INT4); T-MAN stores one (INT4).
+        let llmnpu = QuantFormat::llmnpu_prefill().weight_footprint(4096, 4096)
+            + QuantFormat::llmnpu_decode().weight_footprint(4096, 4096);
+        let tman = f.weight_footprint(4096, 4096);
+        assert!(llmnpu > 2 * tman);
+    }
+
+    #[test]
+    fn display_strings() {
+        assert_eq!(QuantFormat::tman_w4a16().to_string(), "W_INT4A_INT16 per-block(64)");
+        assert_eq!(QuantFormat::bitnet().to_string(), "W_INT1.58A_INT16 per-tensor");
+    }
+}

@@ -1,0 +1,20 @@
+//! Quantization substrate: formats, quantizers, packed layouts, and the
+//! fused two-level LUT dequantization at the heart of T-MAN's unified
+//! weight representation.
+//!
+//! Flow: f32 weights → [`quantize`] → [`qmatrix::QuantizedMatrix`] (canonical
+//! codes + scales) → [`bitserial::BitSerialWeights`] (the single on-device
+//! copy) → consumed bit-serially by the decode LUT-GEMV, or repacked on the
+//! fly by [`lut::TwoLevelDequant`] for the prefill GEMM.
+
+pub mod bitserial;
+pub mod formats;
+pub mod lut;
+pub mod qmatrix;
+pub mod quantize;
+
+pub use bitserial::{BitParallelWeights, BitSerialWeights};
+pub use formats::{ActDtype, Granularity, QuantFormat, WeightDtype};
+pub use lut::{ConvLut, RepackLut, TwoLevelDequant};
+pub use qmatrix::QuantizedMatrix;
+pub use quantize::{gptq, reconstruction_mse, rtn, ternary_absmean};

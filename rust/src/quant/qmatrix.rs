@@ -1,0 +1,156 @@
+//! Canonical (unpacked) quantized weight matrix.
+//!
+//! `QuantizedMatrix` is the logical form every quantizer produces and every
+//! packed layout (bit-serial, bit-parallel) is derived from. Codes are kept
+//! one-per-element in `u8` here; the wire formats in `bitserial.rs` /
+//! `bitparallel.rs` pack them for the kernels.
+
+use crate::quant::formats::{Granularity, WeightDtype};
+use crate::util::f16_round;
+
+/// A quantized (M, K) weight matrix: M output channels, K input channels.
+///
+/// Dequantization of element (i, j):
+/// `w = (code(i,j) as f32 - zero(g)) * scale(g)` with `g = gran.group_of(i,j)`.
+/// Scales/zeros are stored rounded to fp16, matching on-device metadata.
+#[derive(Debug, Clone)]
+pub struct QuantizedMatrix {
+    pub m: usize,
+    pub k: usize,
+    pub dtype: WeightDtype,
+    pub gran: Granularity,
+    /// Unsigned codes, row-major, one per element, in `[0, levels)`.
+    pub codes: Vec<u8>,
+    /// One scale per group (fp16-rounded).
+    pub scales: Vec<f32>,
+    /// One zero-point per group, in code space (fp16-rounded; e.g. 8.0 for
+    /// symmetric INT4, arbitrary for asymmetric GPTQ-style blocks).
+    pub zeros: Vec<f32>,
+}
+
+impl QuantizedMatrix {
+    pub fn new(
+        m: usize,
+        k: usize,
+        dtype: WeightDtype,
+        gran: Granularity,
+        codes: Vec<u8>,
+        scales: Vec<f32>,
+        zeros: Vec<f32>,
+    ) -> Self {
+        assert_eq!(codes.len(), m * k, "codes length");
+        let groups = gran.num_groups(m, k);
+        assert_eq!(scales.len(), groups, "scales length");
+        assert_eq!(zeros.len(), groups, "zeros length");
+        let max = dtype.levels();
+        debug_assert!(codes.iter().all(|&c| (c as u32) < max), "code out of range for {dtype}");
+        let scales = scales.into_iter().map(f16_round).collect();
+        let zeros = zeros.into_iter().map(f16_round).collect();
+        Self { m, k, dtype, gran, codes, scales, zeros }
+    }
+
+    #[inline]
+    pub fn code(&self, row: usize, col: usize) -> u8 {
+        self.codes[row * self.k + col]
+    }
+
+    #[inline]
+    pub fn group(&self, row: usize, col: usize) -> usize {
+        self.gran.group_of(row, col, self.k)
+    }
+
+    /// Dequantize a single element to f32 (reference path; kernels use the
+    /// packed layouts + LUTs instead).
+    #[inline]
+    pub fn dequant(&self, row: usize, col: usize) -> f32 {
+        let g = self.group(row, col);
+        (self.code(row, col) as f32 - self.zeros[g]) * self.scales[g]
+    }
+
+    /// Full dequantized matrix, row-major (M, K). Reference/oracle path.
+    pub fn dequant_all(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.m * self.k];
+        for i in 0..self.m {
+            for j in 0..self.k {
+                out[i * self.k + j] = self.dequant(i, j);
+            }
+        }
+        out
+    }
+
+    /// Dequantize one row (output channel) into `dst`.
+    pub fn dequant_row(&self, row: usize, dst: &mut [f32]) {
+        assert_eq!(dst.len(), self.k);
+        for (j, d) in dst.iter_mut().enumerate() {
+            *d = self.dequant(row, j);
+        }
+    }
+
+    /// Packed storage footprint in bytes (codes + fp16 scale/zero pairs).
+    pub fn footprint_bytes(&self) -> usize {
+        (self.m * self.k * self.dtype.bits() as usize).div_ceil(8) + self.scales.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> QuantizedMatrix {
+        // 2x4, INT4, per-block(2): groups per row = 2.
+        QuantizedMatrix::new(
+            2,
+            4,
+            WeightDtype::Int4,
+            Granularity::PerBlock(2),
+            vec![0, 15, 8, 8, 1, 2, 3, 4],
+            vec![0.5, 1.0, 0.25, 2.0],
+            vec![8.0, 8.0, 0.0, 2.0],
+        )
+    }
+
+    #[test]
+    fn element_dequant() {
+        let q = tiny();
+        assert_eq!(q.dequant(0, 0), (0.0 - 8.0) * 0.5);
+        assert_eq!(q.dequant(0, 1), (15.0 - 8.0) * 0.5);
+        assert_eq!(q.dequant(0, 2), 0.0);
+        assert_eq!(q.dequant(1, 0), 1.0 * 0.25);
+        assert_eq!(q.dequant(1, 3), (4.0 - 2.0) * 2.0);
+    }
+
+    #[test]
+    fn dequant_all_matches_elementwise() {
+        let q = tiny();
+        let all = q.dequant_all();
+        for i in 0..2 {
+            for j in 0..4 {
+                assert_eq!(all[i * 4 + j], q.dequant(i, j));
+            }
+        }
+        let mut row = vec![0.0; 4];
+        q.dequant_row(1, &mut row);
+        assert_eq!(row, &all[4..8]);
+    }
+
+    #[test]
+    fn footprint() {
+        let q = tiny();
+        // 8 codes * 4 bits = 4 bytes, 4 groups * 4 bytes = 16.
+        assert_eq!(q.footprint_bytes(), 4 + 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "scales length")]
+    fn wrong_scale_count_panics() {
+        QuantizedMatrix::new(
+            1,
+            4,
+            WeightDtype::Int4,
+            Granularity::PerBlock(2),
+            vec![0; 4],
+            vec![1.0],
+            vec![0.0],
+        );
+    }
+}

@@ -1,0 +1,182 @@
+//! Artifact manifest parsing (`artifacts/meta.txt`) and the parameter pack
+//! (`artifacts/params.bin`).
+//!
+//! The manifest is the ABI between `python/compile/aot.py` and this runtime:
+//! an ordered list of named arrays whose concatenation (little-endian) is
+//! `params.bin`, followed at call time by the dynamic inputs
+//! (cache_k, cache_v, token(s), pos).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One parameter array in ABI order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    /// "f32" or "i32".
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * 4
+    }
+}
+
+/// Parsed `meta.txt`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub bits: u32,
+    pub block: usize,
+    pub seq: usize,
+    pub chunk: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+impl ArtifactMeta {
+    pub fn d_kv(&self) -> usize {
+        self.n_kv_heads * (self.d_model / self.n_heads)
+    }
+
+    pub fn cache_shape(&self) -> [usize; 3] {
+        [self.n_layers, self.seq, self.d_kv()]
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut vocab = 0;
+        let mut d_model = 0;
+        let mut n_layers = 0;
+        let mut n_heads = 0;
+        let mut n_kv_heads = 0;
+        let mut d_ff = 0;
+        let (mut bits, mut block, mut seq, mut chunk) = (0u32, 0usize, 0usize, 0usize);
+        let mut params = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            match it.next().unwrap() {
+                "model" => {
+                    for kv in it {
+                        let (k, v) = kv.split_once('=').with_context(|| format!("line {ln}: bad kv {kv}"))?;
+                        let v: usize = v.parse()?;
+                        match k {
+                            "vocab" => vocab = v,
+                            "d_model" => d_model = v,
+                            "n_layers" => n_layers = v,
+                            "n_heads" => n_heads = v,
+                            "n_kv_heads" => n_kv_heads = v,
+                            "d_ff" => d_ff = v,
+                            other => bail!("line {ln}: unknown model key {other}"),
+                        }
+                    }
+                }
+                "bits" => bits = it.next().context("bits")?.parse()?,
+                "block" => block = it.next().context("block")?.parse()?,
+                "seq" => seq = it.next().context("seq")?.parse()?,
+                "chunk" => chunk = it.next().context("chunk")?.parse()?,
+                "param" => {
+                    let name = it.next().context("param name")?.to_string();
+                    let dtype = it.next().context("param dtype")?.to_string();
+                    if dtype != "f32" && dtype != "i32" {
+                        bail!("line {ln}: unsupported dtype {dtype}");
+                    }
+                    let shape = it
+                        .next()
+                        .context("param shape")?
+                        .split(',')
+                        .map(|s| s.parse::<usize>())
+                        .collect::<std::result::Result<Vec<_>, _>>()?;
+                    params.push(ParamSpec { name, dtype, shape });
+                }
+                other => bail!("line {ln}: unknown directive {other}"),
+            }
+        }
+        if vocab == 0 || params.is_empty() {
+            bail!("incomplete meta.txt");
+        }
+        Ok(Self { vocab, d_model, n_layers, n_heads, n_kv_heads, d_ff, bits, block, seq, chunk, params })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("meta.txt"))
+            .with_context(|| format!("reading {}/meta.txt — run `make artifacts`", dir.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Total bytes params.bin must have.
+    pub fn params_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.bytes()).sum()
+    }
+}
+
+/// Read params.bin and split it into per-parameter raw byte vectors
+/// (still little-endian, ready for literal construction).
+pub fn read_param_pack(dir: &Path, meta: &ArtifactMeta) -> Result<Vec<Vec<u8>>> {
+    let raw = std::fs::read(dir.join("params.bin"))
+        .with_context(|| format!("reading {}/params.bin", dir.display()))?;
+    if raw.len() != meta.params_bytes() {
+        bail!("params.bin size {} != manifest total {}", raw.len(), meta.params_bytes());
+    }
+    let mut out = Vec::with_capacity(meta.params.len());
+    let mut off = 0usize;
+    for p in &meta.params {
+        out.push(raw[off..off + p.bytes()].to_vec());
+        off += p.bytes();
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+model vocab=256 d_model=64 n_layers=2 n_heads=4 n_kv_heads=2 d_ff=128
+bits 4
+block 32
+seq 128
+chunk 16
+param embed f32 256,64
+param l0.wq.nib i32 4,64,16
+param l0.wq.scales f32 64,2
+";
+
+    #[test]
+    fn parse_sample() {
+        let m = ArtifactMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.bits, 4);
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.params[1].dtype, "i32");
+        assert_eq!(m.params[1].shape, vec![4, 64, 16]);
+        assert_eq!(m.params[1].elems(), 4 * 64 * 16);
+        assert_eq!(m.d_kv(), 32);
+        assert_eq!(m.cache_shape(), [2, 128, 32]);
+        assert_eq!(m.params_bytes(), (256 * 64 + 4 * 64 * 16 + 128) * 4);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("f32 256,64", "f64 256,64");
+        assert!(ArtifactMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(ArtifactMeta::parse("").is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! The PJRT executor: compile the AOT HLO once, keep the quantized weights
+//! resident on the device as `PjRtBuffer`s (the single-copy property at the
+//! runtime level), and serve decode/prefill calls from the coordinator's
+//! hot path.
+//!
+//! Adapted from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+
+use crate::runtime::artifacts::{read_param_pack, ArtifactMeta};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Loaded model runtime: one compiled executable per phase, weights
+/// uploaded once.
+pub struct NpuModelRuntime {
+    pub client: PjRtClient,
+    pub meta: ArtifactMeta,
+    decode: PjRtLoadedExecutable,
+    prefill: Option<PjRtLoadedExecutable>,
+    /// Quantized weights + norms, device-resident, in ABI order.
+    param_bufs: Vec<PjRtBuffer>,
+    /// KV caches, device-resident, threaded through calls.
+    cache_k: Option<PjRtBuffer>,
+    cache_v: Option<PjRtBuffer>,
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+}
+
+impl NpuModelRuntime {
+    /// Load artifacts from `dir` (`meta.txt`, `params.bin`, `decode.hlo.txt`,
+    /// optionally `prefill.hlo.txt`) and compile.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta = ArtifactMeta::load(dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let decode = compile(&client, &dir.join("decode.hlo.txt"))?;
+        let prefill_path = dir.join("prefill.hlo.txt");
+        let prefill =
+            if prefill_path.exists() { Some(compile(&client, &prefill_path)?) } else { None };
+
+        // Upload the parameter pack once. NOTE: we deliberately use the
+        // typed `buffer_from_host_buffer` — the crate's
+        // `buffer_from_host_raw_bytes` passes `ElementType as i32` where the
+        // C API expects `PrimitiveType`, which is off by one (F32 becomes
+        // F16) in xla 0.1.6.
+        let packs = read_param_pack(dir, &meta)?;
+        let mut param_bufs = Vec::with_capacity(packs.len());
+        for (spec, bytes) in meta.params.iter().zip(&packs) {
+            let buf = match spec.dtype.as_str() {
+                "f32" => {
+                    let v: Vec<f32> = bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    client.buffer_from_host_buffer(&v, &spec.shape, None)
+                }
+                "i32" => {
+                    let v: Vec<i32> = bytes
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    client.buffer_from_host_buffer(&v, &spec.shape, None)
+                }
+                other => bail!("dtype {other}"),
+            }
+            .with_context(|| format!("uploading {}", spec.name))?;
+            param_bufs.push(buf);
+        }
+        let mut rt =
+            Self { client, meta, decode, prefill, param_bufs, cache_k: None, cache_v: None };
+        rt.reset()?;
+        Ok(rt)
+    }
+
+    /// Clear the KV cache for a new request.
+    pub fn reset(&mut self) -> Result<()> {
+        let shape = self.meta.cache_shape();
+        let n: usize = shape.iter().product();
+        let zeros = vec![0f32; n];
+        self.cache_k = Some(self.client.buffer_from_host_buffer(&zeros, &shape, None)?);
+        self.cache_v = Some(self.client.buffer_from_host_buffer(&zeros, &shape, None)?);
+        Ok(())
+    }
+
+    pub fn has_prefill(&self) -> bool {
+        self.prefill.is_some()
+    }
+
+    /// Chunk length the prefill executable was lowered for.
+    pub fn chunk_len(&self) -> usize {
+        self.meta.chunk
+    }
+
+    fn run(
+        &mut self,
+        exe_is_prefill: bool,
+        extra: Vec<PjRtBuffer>,
+    ) -> Result<Vec<f32>> {
+        let exe = if exe_is_prefill {
+            self.prefill.as_ref().context("no prefill executable in artifacts")?
+        } else {
+            &self.decode
+        };
+        let mut args: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
+        let ck = self.cache_k.take().context("cache_k missing")?;
+        let cv = self.cache_v.take().context("cache_v missing")?;
+        args.push(&ck);
+        args.push(&cv);
+        for b in &extra {
+            args.push(b);
+        }
+        let outs = exe.execute_b(&args)?;
+        let mut leaves = outs.into_iter().next().context("no output")?;
+        if leaves.len() == 3 {
+            // Untupled outputs (aot.py lowers with return_tuple=False):
+            // (logits, cache_k, cache_v) as separate device buffers. Keep
+            // the caches ON DEVICE — zero host traffic on the hot path.
+            let cv = leaves.pop().unwrap();
+            let ck = leaves.pop().unwrap();
+            let logits = leaves.pop().unwrap();
+            self.cache_k = Some(ck);
+            self.cache_v = Some(cv);
+            return Ok(logits.to_literal_sync()?.to_vec::<f32>()?);
+        }
+        // Legacy path: single tuple output -> decompose on the host.
+        let tuple = leaves[0].to_literal_sync()?;
+        let mut parts = tuple.to_tuple()?;
+        if parts.len() != 3 {
+            bail!("expected 3-tuple output, got {}", parts.len());
+        }
+        let cv_lit = parts.pop().unwrap();
+        let ck_lit = parts.pop().unwrap();
+        let logits_lit = parts.pop().unwrap();
+        // NOTE: upload via the synchronous-copy `buffer_from_host_buffer`;
+        // the crate's `buffer_from_host_literal` does not await the async
+        // DMA, so the temporary literal can be freed mid-transfer
+        // (nondeterministic corruption + segfaults on xla 0.1.6).
+        let shape = self.meta.cache_shape();
+        self.cache_k = Some(self.client.buffer_from_host_buffer(
+            &ck_lit.to_vec::<f32>()?,
+            &shape,
+            None,
+        )?);
+        self.cache_v = Some(self.client.buffer_from_host_buffer(
+            &cv_lit.to_vec::<f32>()?,
+            &shape,
+            None,
+        )?);
+        Ok(logits_lit.to_vec::<f32>()?)
+    }
+
+    /// One decode step: returns logits over the vocab.
+    pub fn decode_step(&mut self, token: i32, pos: i32) -> Result<Vec<f32>> {
+        let t = self.client.buffer_from_host_buffer(&[token], &[], None)?;
+        let p = self.client.buffer_from_host_buffer(&[pos], &[], None)?;
+        self.run(false, vec![t, p])
+    }
+
+    /// One prefill chunk (must be exactly `chunk_len()` tokens; pad with the
+    /// repetition of the last token and adjust `pos_base` upstream if the
+    /// prompt is shorter). Returns logits of the final chunk position.
+    pub fn prefill_chunk(&mut self, tokens: &[i32], pos_base: i32) -> Result<Vec<f32>> {
+        if tokens.len() != self.meta.chunk {
+            bail!("prefill chunk must have {} tokens, got {}", self.meta.chunk, tokens.len());
+        }
+        let t = self.client.buffer_from_host_buffer(tokens, &[tokens.len()], None)?;
+        let p = self.client.buffer_from_host_buffer(&[pos_base], &[], None)?;
+        self.run(true, vec![t, p])
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` + parameter
+//! pack) and execute them from the Layer-3 hot path. Python never runs at
+//! inference time — the HLO text was produced once by `make artifacts`.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactMeta, ParamSpec};
+pub use executor::NpuModelRuntime;

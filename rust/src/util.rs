@@ -1,0 +1,242 @@
+//! Small shared utilities: deterministic RNG, fp16 conversion, statistics.
+//!
+//! We deliberately avoid external crates here: the RNG must be reproducible
+//! across runs (benchmarks regenerate the paper's tables from fixed seeds),
+//! and fp16 is needed only for value conversion, not arithmetic — every
+//! kernel accumulates in f32 and rounds through f16 exactly where the NPU
+//! datapath would.
+
+/// SplitMix64 — tiny, high-quality deterministic PRNG used for all synthetic
+/// weights/activations in tests and benchmarks.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Standard normal via Box-Muller (one value per call; simple and
+    /// deterministic).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.next_f32().max(1e-12);
+        let u2 = self.next_f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Vector of standard-normal values scaled by `std`.
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * std).collect()
+    }
+}
+
+/// Round an f32 to the nearest representable f16 value, returned as f32.
+/// This models the precision the NPU's FP16 datapath actually delivers
+/// (conversion-LUT entries, dequantized weights, fp16 accumulator spills).
+pub fn f16_round(x: f32) -> f32 {
+    f16_to_f32(f32_to_f16(x))
+}
+
+/// IEEE 754 binary32 -> binary16 (round-to-nearest-even), as raw u16 bits.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // Re-bias: f32 exp-127, f16 exp-15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal f16.
+        let exp16 = (unbiased + 15) as u32;
+        let mant16 = mant >> 13;
+        let round_bit = (mant >> 12) & 1;
+        let sticky = mant & 0x0FFF;
+        let mut h = ((exp16 << 10) | mant16) as u16;
+        if round_bit == 1 && (sticky != 0 || (mant16 & 1) == 1) {
+            h = h.wrapping_add(1); // may carry into exponent: correct behavior
+        }
+        return sign | h;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16.
+        let full_mant = mant | 0x0080_0000;
+        let shift = (-14 - unbiased + 13) as u32;
+        let mant16 = full_mant >> shift;
+        let round_bit = (full_mant >> (shift - 1)) & 1;
+        let sticky = full_mant & ((1 << (shift - 1)) - 1);
+        let mut h = mant16 as u16;
+        if round_bit == 1 && (sticky != 0 || (mant16 & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        return sign | h;
+    }
+    sign // underflow -> signed zero
+}
+
+/// IEEE 754 binary16 (raw bits) -> binary32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: value = mant * 2^-24. Normalize: top set bit at
+            // position p gives 1.x * 2^(p-24).
+            let p = 31 - mant.leading_zeros(); // 0..=9
+            let exp32 = 127 - 24 + p;
+            let mant32 = (mant << (10 - p)) & 0x03FF;
+            sign | (exp32 << 23) | (mant32 << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Max |a-b| over two equal-length slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Relative L2 error ||a-b|| / (||b|| + eps).
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    let den: f32 = b.iter().map(|y| y * y).sum();
+    (num / (den + 1e-20)).sqrt()
+}
+
+/// Pretty duration for report rows.
+pub fn fmt_us(us: f64) -> String {
+    if us >= 1e6 {
+        format!("{:.2} s", us / 1e6)
+    } else if us >= 1e3 {
+        format!("{:.2} ms", us / 1e3)
+    } else {
+        format!("{us:.2} us")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_uniform_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.uniform(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn rng_normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / n as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn f16_round_trip_exact_values() {
+        // Values exactly representable in f16 must round-trip.
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25, 1.5] {
+            assert_eq!(f16_round(v), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn f16_rounding_is_nearest() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16; RNE -> 1.0.
+        let x = 1.0 + (2.0f32).powi(-11);
+        assert_eq!(f16_round(x), 1.0);
+        // Slightly above halfway rounds up.
+        let y = 1.0 + (2.0f32).powi(-11) + (2.0f32).powi(-20);
+        assert_eq!(f16_round(y), 1.0 + (2.0f32).powi(-10));
+    }
+
+    #[test]
+    fn f16_overflow_and_subnormals() {
+        assert!(f16_to_f32(f32_to_f16(1e6)).is_infinite());
+        // Smallest f16 subnormal = 2^-24.
+        let tiny = (2.0f32).powi(-24);
+        assert_eq!(f16_round(tiny), tiny);
+        // Below half the smallest subnormal flushes to zero.
+        assert_eq!(f16_round((2.0f32).powi(-26)), 0.0);
+        // Negative zero keeps sign.
+        assert_eq!(f32_to_f16(-0.0) & 0x8000, 0x8000);
+    }
+
+    #[test]
+    fn f16_against_known_bit_patterns() {
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.0), 0xC000);
+        assert_eq!(f32_to_f16(0.5), 0x3800);
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0x7BFF), 65504.0);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [1.0, 2.5, 3.0];
+        assert_eq!(max_abs_diff(&a, &b), 0.5);
+        assert!(rel_l2(&a, &a) < 1e-9);
+    }
+}

@@ -1,0 +1,148 @@
+//! Cross-layer integration tests: the PJRT-executed AOT artifacts
+//! (JAX + Pallas, quantized) must agree with the pure-Rust reference
+//! transformer quantized by the Rust quantizer from the same `.tmw` master.
+//!
+//! These tests require `make artifacts` to have produced `artifacts/`; they
+//! skip (with a notice) otherwise so `cargo test` stays green on a cold
+//! clone.
+
+use std::path::Path;
+use tman::coordinator::engine::{Engine, GenerateOpts};
+use tman::model::config::ModelConfig;
+use tman::model::kv_cache::KvCache;
+use tman::model::{tokenizer, weights};
+use tman::npu::config::SocConfig;
+use tman::quant::formats::{Granularity, WeightDtype};
+use tman::runtime::executor::NpuModelRuntime;
+use tman::util::rel_l2;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("meta.txt").exists() && p.join("model.tmw").exists() {
+        Some(p)
+    } else {
+        eprintln!("[skip] artifacts/ not built — run `make artifacts`");
+        None
+    }
+}
+
+/// The full three-layer numerics chain: Rust reference transformer
+/// (quantized with the Rust RTN quantizer) vs the PJRT-executed decode
+/// artifact (quantized with the Python quantizer, lowered through Pallas).
+#[test]
+fn decode_artifact_matches_rust_reference() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = NpuModelRuntime::load(dir).expect("load artifacts");
+    let meta = rt.meta.clone();
+    let (fp_model, trained) = weights::load_or_random(dir, &ModelConfig::small(), 0);
+    assert!(trained, "model.tmw must exist");
+    let qm = fp_model.quantized(
+        if meta.bits == 2 { WeightDtype::Int2 } else { WeightDtype::Int4 },
+        Granularity::PerBlock(meta.block),
+        false,
+    );
+
+    let prompt = tokenizer::encode("The quick brown fox");
+    let mut cache = KvCache::new(&qm.cfg, prompt.len());
+    for (pos, &t) in prompt.iter().enumerate() {
+        let want = qm.forward_token(t, pos, &mut cache);
+        let got = rt.decode_step(t as i32, pos as i32).expect("decode step");
+        let err = rel_l2(&got, &want);
+        assert!(err < 0.05, "pos {pos}: PJRT vs Rust reference rel_l2 {err}");
+    }
+}
+
+/// Prefill (matrix path, qgemm Pallas kernel) and decode (vector path, LUT
+/// Pallas kernel) must agree through the runtime — the unified-layout
+/// contract at the artifact level.
+#[test]
+fn prefill_artifact_matches_decode_artifact() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = NpuModelRuntime::load(dir).expect("load artifacts");
+    let chunk = rt.meta.chunk;
+    // A deterministic chunk-sized prompt from the corpus alphabet.
+    let tokens: Vec<i32> = (0..chunk).map(|i| 97 + (i % 24) as i32).collect();
+
+    let last_prefill = rt.prefill_chunk(&tokens, 0).expect("prefill chunk");
+
+    rt.reset().expect("reset");
+    let mut last_decode = Vec::new();
+    for (pos, &t) in tokens.iter().enumerate() {
+        last_decode = rt.decode_step(t, pos as i32).expect("decode step");
+    }
+    let err = rel_l2(&last_prefill, &last_decode);
+    assert!(err < 0.02, "prefill vs decode path rel_l2 {err}");
+}
+
+/// Prefill must leave the KV cache in a state decoding can continue from.
+#[test]
+fn prefill_then_decode_continues_correctly() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = NpuModelRuntime::load(dir).expect("load artifacts");
+    let chunk = rt.meta.chunk;
+    let tokens: Vec<i32> = (0..chunk).map(|i| 32 + (i % 90) as i32).collect();
+
+    // Path A: prefill the chunk, then decode one more token.
+    rt.prefill_chunk(&tokens, 0).expect("prefill");
+    let a = rt.decode_step(65, chunk as i32).expect("decode after prefill");
+
+    // Path B: decode everything.
+    rt.reset().expect("reset");
+    for (pos, &t) in tokens.iter().enumerate() {
+        rt.decode_step(t, pos as i32).expect("decode");
+    }
+    let b = rt.decode_step(65, chunk as i32).expect("decode");
+    let err = rel_l2(&a, &b);
+    assert!(err < 0.02, "continuation rel_l2 {err}");
+}
+
+/// The engine is deterministic under greedy decoding and produces text.
+#[test]
+fn engine_greedy_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::load(dir, SocConfig::oneplus12()).expect("engine");
+    let opts = GenerateOpts { max_new_tokens: 12, temperature: 0.0, ..Default::default() };
+    let (t1, m1) = engine.generate("A lookup table can", &opts).expect("gen 1");
+    let (t2, _) = engine.generate("A lookup table can", &opts).expect("gen 2");
+    assert_eq!(t1, t2, "greedy decoding must be deterministic");
+    assert_eq!(m1.generated_tokens, 12);
+    assert!(m1.sim_decode_s > 0.0 && m1.sim_decode_j > 0.0);
+}
+
+/// Energy/latency accounting is self-consistent on a served request.
+#[test]
+fn engine_metrics_are_consistent() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::load(dir, SocConfig::oneplus12()).expect("engine");
+    let opts = GenerateOpts { max_new_tokens: 8, temperature: 0.0, ..Default::default() };
+    let (_, m) = engine.generate("Energy matters", &opts).expect("gen");
+    // Simulated J = P * t with NPU-only placement.
+    let p = SocConfig::oneplus12().power.npu_active_w;
+    let expect = p * m.sim_decode_s;
+    assert!((m.sim_decode_j - expect).abs() < 1e-9);
+    assert!(m.wall_decode_s > 0.0);
+}
+
+/// W2 artifacts (built with `python -m compile.aot --bits 2 --out
+/// artifacts_w2`): the 2-bit decode path must also agree with the Rust
+/// reference — the paper's W_INT2 configuration end to end.
+#[test]
+fn w2_decode_artifact_matches_rust_reference() {
+    let dir = Path::new("artifacts_w2");
+    if !dir.join("meta.txt").exists() || !dir.join("model.tmw").exists() {
+        eprintln!("[skip] artifacts_w2/ not built");
+        return;
+    }
+    let mut rt = NpuModelRuntime::load(dir).expect("load W2 artifacts");
+    assert_eq!(rt.meta.bits, 2, "artifacts_w2 must be the W2 build");
+    let (fp_model, _) = weights::load_or_random(dir, &ModelConfig::small(), 0);
+    let qm = fp_model.quantized(WeightDtype::Int2, Granularity::PerBlock(rt.meta.block), false);
+    let prompt = tokenizer::encode("table lookup");
+    let mut cache = KvCache::new(&qm.cfg, prompt.len());
+    for (pos, &t) in prompt.iter().enumerate() {
+        let want = qm.forward_token(t, pos, &mut cache);
+        let got = rt.decode_step(t as i32, pos as i32).expect("decode step");
+        let err = rel_l2(&got, &want);
+        assert!(err < 0.05, "W2 pos {pos}: rel_l2 {err}");
+    }
+}

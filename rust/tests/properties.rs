@@ -1,0 +1,157 @@
+//! Randomized property tests over the coordinator's invariants (proptest is
+//! unavailable offline; these use the deterministic in-repo RNG with many
+//! iterations — failures print the seed for reproduction).
+
+use std::collections::HashMap;
+use tman::coordinator::graph::{Graph, OpKind};
+use tman::coordinator::pipeline::{run_pipelined, run_sequential};
+use tman::kernels::tiling;
+use tman::npu::config::NpuConfig;
+use tman::npu::cost::Breakdown;
+use tman::quant::bitserial::BitSerialWeights;
+use tman::quant::formats::{ActDtype, Granularity, QuantFormat, WeightDtype};
+use tman::quant::lut::TwoLevelDequant;
+use tman::quant::quantize::rtn;
+use tman::util::Rng;
+
+/// Property: the unified-tiling search always returns a tiling satisfying
+/// Eqns. 1-4 and matching phase extents, for random shapes and formats.
+#[test]
+fn prop_tiling_search_satisfies_constraints() {
+    let cfg = NpuConfig::sd8gen3();
+    let mut rng = Rng::new(0x7111);
+    for case in 0..200 {
+        let m = 32 * (1 + rng.below(512));
+        let k = 64 * (1 + rng.below(256));
+        let n = [1usize, 32, 128, 256][rng.below(4)];
+        let fmt = [
+            QuantFormat::tman_w4a16(),
+            QuantFormat::tman_w2a16(),
+            QuantFormat::bitnet(),
+            QuantFormat::new(WeightDtype::Int4, ActDtype::Fp16, Granularity::PerChannel),
+        ][rng.below(4)];
+        let t = tiling::search(&cfg, fmt, m, k, n);
+        let act_bytes = fmt.act.bytes().max(2);
+        // Eqn. 1
+        assert!(t.k_lut_d <= cfg.n_reg_for_lut, "case {case}: {t:?}");
+        // Eqn. 4
+        assert!(t.tcm_footprint(act_bytes) < cfg.tcm_bytes, "case {case}: {t:?}");
+        // Phase extents positive and tile covers matrix by iteration.
+        assert!(t.m_tile() > 0 && t.k_tile() > 0, "case {case}: {t:?}");
+    }
+}
+
+/// Property: pipelined makespan is never worse than sequential and never
+/// better than the theoretical bound (bottleneck-stage work).
+#[test]
+fn prop_pipeline_bounds() {
+    let cfg = NpuConfig::sd8gen3();
+    let mut rng = Rng::new(42);
+    for case in 0..500 {
+        let tile = Breakdown {
+            mem_us: rng.uniform(0.01, 20.0) as f64,
+            dq_us: rng.uniform(0.01, 20.0) as f64,
+            cmp_us: rng.uniform(0.01, 20.0) as f64,
+            overhead_us: 0.0,
+        };
+        let tiles = 1 + rng.below(64);
+        let p = run_pipelined(&cfg, &tile, tiles, 1024).unwrap();
+        let s = run_sequential(&tile, tiles, 1024);
+        let bottleneck = tile.mem_us.max(tile.dq_us).max(tile.cmp_us) * tiles as f64;
+        assert!(p.total_us <= s.total_us + 1e-9, "case {case}: pipeline slower");
+        assert!(p.total_us >= bottleneck - 1e-9, "case {case}: beat the bottleneck bound");
+        // Work conservation.
+        assert!((p.busy_us[0] - tile.mem_us * tiles as f64).abs() < 1e-6);
+    }
+}
+
+/// Property: the graph-optimization pass preserves evaluation semantics and
+/// never duplicates precompute for the same activation, on random DAGs.
+#[test]
+fn prop_graph_pass_preserves_semantics() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let d = 4;
+        let mut g = Graph::default();
+        let mut values = vec![g.add(OpKind::Source { name: "x".into() }, vec![])];
+        let mut weights = HashMap::new();
+        let mut feeds = HashMap::new();
+        feeds.insert("x".to_string(), rng.normal_vec(d, 1.0));
+        let n_ops = 3 + rng.below(12);
+        for i in 0..n_ops {
+            let input = values[rng.below(values.len())];
+            if rng.below(3) == 0 {
+                values.push(g.add(OpKind::Opaque { name: format!("op{i}") }, vec![input]));
+            } else {
+                let wname = format!("w{i}");
+                weights.insert(wname.clone(), (rng.normal_vec(d * d, 0.4), d, d));
+                values.push(g.add(OpKind::FusedLutGemv { weight: wname }, vec![input]));
+            }
+        }
+        let opt = g.optimize();
+        let v0 = g.eval(&feeds, &weights);
+        let v1 = opt.eval(&feeds, &weights);
+        let a = v0.last().unwrap();
+        let b = v1.last().unwrap();
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-5, "seed {seed}: {x} vs {y}");
+        }
+        // Precompute count == number of distinct activation producers that
+        // feed at least one lookup.
+        let lookups = opt.count(|k| matches!(k, OpKind::Lookup { .. }));
+        let pres = opt.count(|k| matches!(k, OpKind::Precompute));
+        assert!(pres <= lookups, "seed {seed}: more precomputes than lookups");
+        assert_eq!(
+            g.count(|k| matches!(k, OpKind::FusedLutGemv { .. })),
+            lookups,
+            "seed {seed}: lookup count changed"
+        );
+    }
+}
+
+/// Property: two-level LUT dequantization matches reference dequantization
+/// for random shapes/bits/granularities (fp16 tolerance).
+#[test]
+fn prop_two_level_dequant_matches_reference() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let m = 1 + rng.below(12);
+        let k = 4 * (1 + rng.below(64));
+        let dtype = [WeightDtype::Int4, WeightDtype::Int2][rng.below(2)];
+        let gran = match rng.below(3) {
+            0 => Granularity::PerBlock(32),
+            1 => Granularity::PerChannel,
+            _ => Granularity::PerTensor,
+        };
+        let w = rng.normal_vec(m * k, 0.1);
+        let q = rtn(&w, m, k, dtype, gran);
+        let bs = BitSerialWeights::from_qmatrix(&q);
+        assert_eq!(bs.to_codes(), q.codes, "seed {seed}: bit-serial round trip");
+        let dq = TwoLevelDequant::new(&bs);
+        let got = dq.dequant_all();
+        let want = q.dequant_all();
+        for (idx, (a, b)) in got.iter().zip(&want).enumerate() {
+            let tol = b.abs().max(1e-3) * 2e-3;
+            assert!((a - b).abs() <= tol, "seed {seed} idx {idx}: {a} vs {b}");
+        }
+    }
+}
+
+/// Property: decode latency is monotone in matrix size and weight bits.
+#[test]
+fn prop_gemv_cost_monotonicity() {
+    use tman::kernels::lut_gemv::tman_gemv_latency_us;
+    let cfg = NpuConfig::sd8gen3();
+    let mut rng = Rng::new(7);
+    for _ in 0..100 {
+        let m = 64 * (1 + rng.below(64));
+        let k = 64 * (1 + rng.below(64));
+        let f2 = QuantFormat::tman_w2a16();
+        let f4 = QuantFormat::tman_w4a16();
+        let t2 = tman_gemv_latency_us(&cfg, m, k, f2);
+        let t4 = tman_gemv_latency_us(&cfg, m, k, f4);
+        assert!(t2 <= t4, "{m}x{k}: W2 {t2} > W4 {t4}");
+        let t4_bigger = tman_gemv_latency_us(&cfg, m * 2, k, f4);
+        assert!(t4_bigger > t4, "{m}x{k}: doubling M did not increase latency");
+    }
+}
