@@ -1,0 +1,52 @@
+//! Serving-load bench: sustained throughput and tail TTFT of the
+//! multi-request serving loop across prefill chunk sizes — the chunking
+//! trade-off (small chunks = preemption points and better tail TTFT; large
+//! chunks = matrix-path efficiency and better sustained throughput).
+//!
+//! Run: `cargo bench --bench serving_load` (plain main, no harness).
+
+use tman::bench::{banner, Table};
+use tman::coordinator::engine::Engine;
+use tman::coordinator::server::{synthetic_trace, ServeOpts, Server, TraceProfile};
+use tman::model::config::ModelConfig;
+use tman::model::weights::random_transformer;
+use tman::npu::config::SocConfig;
+
+fn main() {
+    let requests = 48usize;
+    banner("serving load — 48 mixed requests (3:1 interactive:document), reference backend");
+    let trace = synthetic_trace(requests, 0xBEEF, &TraceProfile::tiny());
+    let mut t = Table::new(&[
+        "chunk",
+        "tok/s",
+        "decode tok/s",
+        "TTFT p50 ms",
+        "TTFT p99 ms",
+        "wait p99 ms",
+        "preempts",
+        "J/tok",
+    ]);
+    for chunk in [8usize, 16, 32, 64] {
+        let model = random_transformer(&ModelConfig::tiny(), 7);
+        let engine =
+            Engine::reference(model, SocConfig::oneplus12(), chunk, 4, 2).expect("engine");
+        let mut server = Server::new(engine, ServeOpts::default());
+        let fleet = server.run(&trace).expect("serve");
+        assert_eq!(fleet.completions.len(), requests, "every request must complete");
+        t.row(&[
+            format!("{chunk}"),
+            format!("{:.0}", fleet.throughput_tps()),
+            format!("{:.0}", fleet.decode_throughput_tps()),
+            format!("{:.3}", fleet.ttft_p50_ms()),
+            format!("{:.3}", fleet.ttft_p99_ms()),
+            format!("{:.3}", fleet.queue_wait_p99_ms()),
+            format!("{}", fleet.preemptions),
+            format!("{:.6}", fleet.energy_per_token_j()),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nnote: times are on the simulated on-device clock (NPU cost model); \
+         numerics run on the host reference backend."
+    );
+}

@@ -13,12 +13,10 @@ fn main() -> Result<()> {
     );
     println!("loading artifacts from {} ...", artifacts.display());
     let mut engine = Engine::load(&artifacts, SocConfig::oneplus12())?;
+    let shape = engine.shape().clone();
     println!(
         "model: {} layers, d_model {}, W_INT{} per-block({})",
-        engine.runtime.meta.n_layers,
-        engine.runtime.meta.d_model,
-        engine.runtime.meta.bits,
-        engine.runtime.meta.block
+        shape.n_layers, shape.d_model, shape.bits, shape.block
     );
 
     let prompt = "The inference of a language model consists of";

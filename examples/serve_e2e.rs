@@ -21,13 +21,10 @@ fn main() -> anyhow::Result<()> {
     let soc = SocConfig::oneplus12();
     banner("serving the trained small model through the PJRT artifacts");
     let mut engine = Engine::load(dir, soc.clone())?;
+    let shape = engine.shape().clone();
     println!(
         "model: {} layers, d_model {}, W_INT{} per-block({}), chunk {}",
-        engine.runtime.meta.n_layers,
-        engine.runtime.meta.d_model,
-        engine.runtime.meta.bits,
-        engine.runtime.meta.block,
-        engine.runtime.meta.chunk
+        shape.n_layers, shape.d_model, shape.bits, shape.block, shape.chunk
     );
 
     // Long prompt from the corpus -> exercises chunked prefill (matrix path).

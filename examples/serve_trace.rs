@@ -1,0 +1,30 @@
+//! Multi-request serving demo on the always-available reference backend:
+//! generate a synthetic mixed trace (short interactive prompts vs long
+//! documents), run it through the scheduler-driven serving loop, and print
+//! per-request and fleet metrics.
+//!
+//! Run: `cargo run --release --example serve_trace [n_requests]`
+
+use tman::coordinator::engine::Engine;
+use tman::coordinator::server::{synthetic_trace, ServeOpts, Server, TraceProfile};
+use tman::model::config::ModelConfig;
+use tman::model::weights::random_transformer;
+use tman::npu::config::SocConfig;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let model = random_transformer(&ModelConfig::tiny(), 42);
+    let engine = Engine::reference(model, SocConfig::oneplus12(), 16, 4, 2)?;
+    println!(
+        "serving {n} synthetic requests on {} (chunk {}, {} tok max ctx)\n",
+        engine.soc.name,
+        engine.chunk(),
+        engine.max_seq()
+    );
+    let trace = synthetic_trace(n, 1, &TraceProfile::tiny());
+    let opts = ServeOpts { verbose: true, ..Default::default() };
+    let mut server = Server::new(engine, opts);
+    let fleet = server.run(&trace)?;
+    println!("\n{}", fleet.report());
+    Ok(())
+}

@@ -1,25 +1,40 @@
-//! The T-MAN inference engine: the Layer-3 coordinator that owns the
-//! request loop and drives the two execution paths of the unified weight
-//! layout — chunked prefill through the matrix-path artifact, token-by-token
-//! decoding through the LUT-path artifact — with Python nowhere on the path.
+//! The T-MAN inference engine: the Layer-3 coordinator that drives the two
+//! execution paths of the unified weight layout — chunked prefill through
+//! the matrix path, token-by-token decoding through the LUT vector path.
 //!
-//! Numerics come from the PJRT executables (AOT-lowered JAX + Pallas);
-//! on-device latency/energy come from the NPU simulator applied to the
-//! model's projection shapes (DESIGN.md §1 explains the substitution).
+//! Numerics come from a pluggable [`Backend`] (pure-Rust reference
+//! transformer by default; PJRT-executed artifacts behind the `pjrt`
+//! feature). On-device latency/energy always come from the NPU simulator
+//! applied to the model's projection shapes (DESIGN.md §1 explains the
+//! substitution), so the performance model is backend-independent.
+//!
+//! Two entry levels:
+//! - [`Engine::generate`] serves one request end to end (the original
+//!   single-shot path).
+//! - [`Engine::begin_request`] / [`Engine::prefill_slice`] /
+//!   [`Engine::decode_token`] / [`Engine::end_request`] expose the same
+//!   machinery one scheduler work-item at a time — this is what the
+//!   multi-request serving loop in [`crate::coordinator::server`] drives.
 
 use crate::coordinator::metrics::{sim_energy_j, PhaseTimer, RequestMetrics};
 use crate::kernels::dequant_gemm::tman_gemm_latency_us;
 use crate::kernels::lut_gemv::tman_gemv_latency_us;
 use crate::model::sampler;
 use crate::model::tokenizer;
+use crate::model::transformer::Transformer;
 use crate::npu::config::SocConfig;
 use crate::npu::energy::Placement;
 use crate::npu::memory::LoadMethod;
 use crate::quant::formats::{ActDtype, Granularity, QuantFormat, WeightDtype};
-use crate::runtime::artifacts::ArtifactMeta;
-use crate::runtime::executor::NpuModelRuntime;
+use crate::runtime::backend::{Backend, ModelShape, ReferenceBackend};
 use crate::util::Rng;
-use anyhow::{Context, Result};
+use anyhow::Result;
+
+#[cfg(feature = "pjrt")]
+use crate::runtime::executor::NpuModelRuntime;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 /// Decoding configuration for one request.
@@ -31,7 +46,7 @@ pub struct GenerateOpts {
     pub top_k: usize,
     pub seed: u64,
     /// Stop generation at this byte (e.g. b'\n' ends a line). None = run to
-    /// max_new_tokens.
+    /// max_new_tokens. The stop byte itself is never emitted.
     pub stop_byte: Option<u8>,
 }
 
@@ -41,100 +56,181 @@ impl Default for GenerateOpts {
     }
 }
 
+/// Request id [`Engine::generate`] binds internally for its single request.
+const GENERATE_REQ_ID: u64 = u64::MAX;
+
+fn quant_format(bits: u32, block: usize) -> QuantFormat {
+    QuantFormat::new(
+        if bits == 2 { WeightDtype::Int2 } else { WeightDtype::Int4 },
+        ActDtype::Fp16,
+        Granularity::PerBlock(block),
+    )
+}
+
 /// The serving engine.
 pub struct Engine {
-    pub runtime: NpuModelRuntime,
+    backend: Backend,
     pub soc: SocConfig,
     pub fmt: QuantFormat,
+    shape: ModelShape,
     /// Simulated µs per decode token (projection kernels; context-free part).
     sim_decode_proj_us: f64,
-    /// Simulated µs per 128-token prefill chunk (projection kernels).
+    /// Simulated µs per prefill chunk (projection kernels).
     sim_prefill_chunk_us: f64,
 }
 
 impl Engine {
-    /// Load artifacts and prepare the simulator against `soc`.
+    /// Load AOT artifacts and prepare the simulator against `soc`.
+    #[cfg(feature = "pjrt")]
     pub fn load(artifacts: &Path, soc: SocConfig) -> Result<Self> {
         let runtime = NpuModelRuntime::load(artifacts)
             .with_context(|| format!("loading artifacts from {}", artifacts.display()))?;
-        let meta = runtime.meta.clone();
-        let fmt = QuantFormat::new(
-            if meta.bits == 2 { WeightDtype::Int2 } else { WeightDtype::Int4 },
-            ActDtype::Fp16,
-            Granularity::PerBlock(meta.block),
-        );
-        let shapes = Self::proj_shapes(&meta);
-        let npu = &soc.npu;
-        let mut dec = 0.0;
-        let mut pre = 0.0;
-        for &(m, k) in &shapes {
-            dec += tman_gemv_latency_us(npu, m, k, fmt);
-            pre += tman_gemm_latency_us(npu, meta.chunk, m, k, fmt);
-        }
-        // lm head runs once per token in both phases.
-        let head = (meta.vocab, meta.d_model);
-        dec += tman_gemv_latency_us(npu, head.0, head.1, fmt);
-        pre += tman_gemv_latency_us(npu, head.0, head.1, fmt);
-        Ok(Self { runtime, soc, fmt, sim_decode_proj_us: dec, sim_prefill_chunk_us: pre })
+        let shape = ModelShape::from_meta(&runtime.meta);
+        Ok(Self::assemble(Backend::Pjrt(runtime), soc, shape))
     }
 
-    /// All per-layer projection shapes × layers for the loaded model.
-    fn proj_shapes(meta: &ArtifactMeta) -> Vec<(usize, usize)> {
-        let d = meta.d_model;
-        let dkv = meta.d_kv();
-        let per_layer =
-            [(d, d), (dkv, d), (dkv, d), (d, d), (meta.d_ff, d), (meta.d_ff, d), (d, meta.d_ff)];
-        let mut all = Vec::new();
-        for _ in 0..meta.n_layers {
-            all.extend_from_slice(&per_layer);
+    /// Build an engine over the pure-Rust reference backend: `model` runs
+    /// the numerics, the NPU simulator provides on-device latency/energy
+    /// for a W_INT`bits` per-block deployment with `chunk`-token prefill
+    /// slices and `kv_slots` per-request KV-cache slots.
+    pub fn reference(
+        model: Transformer,
+        soc: SocConfig,
+        chunk: usize,
+        bits: u32,
+        kv_slots: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(chunk > 0, "prefill chunk must be positive");
+        anyhow::ensure!(kv_slots > 0, "need at least one KV slot");
+        anyhow::ensure!(bits == 2 || bits == 4, "bits must be 2 or 4, got {bits}");
+        let shape = ModelShape::from_config(&model.cfg, chunk, bits, 64);
+        let backend = Backend::Reference(ReferenceBackend::new(model, kv_slots));
+        Ok(Self::assemble(backend, soc, shape))
+    }
+
+    fn assemble(backend: Backend, soc: SocConfig, shape: ModelShape) -> Self {
+        let fmt = quant_format(shape.bits, shape.block);
+        let npu = &soc.npu;
+        let chunk = shape.chunk.max(1);
+        let mut dec = 0.0;
+        let mut pre = 0.0;
+        for (m, k) in shape.proj_shapes() {
+            dec += tman_gemv_latency_us(npu, m, k, fmt);
+            pre += tman_gemm_latency_us(npu, chunk, m, k, fmt);
         }
-        all
+        // lm head runs once per token in both phases.
+        dec += tman_gemv_latency_us(npu, shape.vocab, shape.d_model, fmt);
+        pre += tman_gemv_latency_us(npu, shape.vocab, shape.d_model, fmt);
+        Self { backend, soc, fmt, shape, sim_decode_proj_us: dec, sim_prefill_chunk_us: pre }
+    }
+
+    pub fn shape(&self) -> &ModelShape {
+        &self.shape
+    }
+
+    /// Prefill chunk length (0 = artifacts without a prefill executable).
+    pub fn chunk(&self) -> usize {
+        self.shape.chunk
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.shape.seq
     }
 
     /// Simulated on-device time for one decode step at context length `ctx`.
     pub fn sim_decode_us(&self, ctx: usize) -> f64 {
-        let meta = &self.runtime.meta;
-        let kv_bytes = 2 * meta.n_layers * ctx * meta.d_kv() * 2;
+        let kv_bytes = 2 * self.shape.n_layers * ctx * self.shape.d_kv() * 2;
         self.sim_decode_proj_us + LoadMethod::Dma.transfer_us(&self.soc.npu, kv_bytes, 1)
     }
 
     /// Simulated on-device time for one prefill chunk ending at `ctx`.
     pub fn sim_prefill_chunk_us(&self, ctx: usize) -> f64 {
-        let meta = &self.runtime.meta;
         // Chunk attention ~ chunk x ctx MACs on HMX; small at these sizes.
-        let macs = 2.0 * (meta.n_layers * meta.chunk * ctx * meta.d_model) as f64;
+        let macs = 2.0 * (self.shape.n_layers * self.shape.chunk * ctx * self.shape.d_model) as f64;
         self.sim_prefill_chunk_us + macs / (self.soc.npu.hmx_tops_fp16 * 1e6)
     }
 
-    /// Serve one request end to end.
-    pub fn generate(&mut self, prompt: &str, opts: &GenerateOpts) -> Result<(String, RequestMetrics)> {
-        let meta = self.runtime.meta.clone();
+    // ---- step-level API (driven by the multi-request serving loop) ----
+
+    /// Bind a request: acquire (and clear) a KV-cache slot for `id`.
+    pub fn begin_request(&mut self, id: u64) -> Result<()> {
+        self.backend.begin_request(id)
+    }
+
+    /// Unbind a request and release its KV-cache slot.
+    pub fn end_request(&mut self, id: u64) {
+        self.backend.end_request(id)
+    }
+
+    /// KV-cache slots currently held by admitted requests.
+    pub fn kv_slots_in_use(&self) -> usize {
+        self.backend.kv_slots_in_use()
+    }
+
+    /// Run one prefill slice `[start, start + slice.len())` of the bound
+    /// request. Exactly-`chunk`-sized slices go through the matrix path;
+    /// the ragged tail is teacher-forced through the decode path (same
+    /// numerics, per-token cost). Returns the logits at the last position
+    /// and the simulated on-device µs.
+    pub fn prefill_slice(&mut self, slice: &[usize], start: usize) -> Result<(Vec<f32>, f64)> {
+        anyhow::ensure!(!slice.is_empty(), "empty prefill slice");
+        anyhow::ensure!(start + slice.len() <= self.shape.seq, "prefill past max_seq");
+        if slice.len() == self.shape.chunk && self.backend.has_prefill() {
+            let toks: Vec<i32> = slice.iter().map(|&t| t as i32).collect();
+            let logits = self.backend.prefill_chunk(&toks, start as i32)?;
+            let us = self.sim_prefill_chunk_us(start + slice.len());
+            return Ok((logits, us));
+        }
+        let mut us = 0.0;
+        let mut logits = Vec::new();
+        let mut pos = start;
+        for &t in slice {
+            logits = self.backend.decode_step(t as i32, pos as i32)?;
+            us += self.sim_decode_us(pos + 1);
+            pos += 1;
+        }
+        Ok((logits, us))
+    }
+
+    /// Feed one generated token at `pos`; returns the next-token logits and
+    /// the simulated on-device µs for the step.
+    pub fn decode_token(&mut self, token: usize, pos: usize) -> Result<(Vec<f32>, f64)> {
+        anyhow::ensure!(pos < self.shape.seq, "decode past max_seq");
+        let logits = self.backend.decode_step(token as i32, pos as i32)?;
+        let us = self.sim_decode_us(pos + 1);
+        Ok((logits, us))
+    }
+
+    /// Serve one request end to end (single-shot path; the serving loop in
+    /// [`crate::coordinator::server`] drives the step API instead).
+    pub fn generate(
+        &mut self,
+        prompt: &str,
+        opts: &GenerateOpts,
+    ) -> Result<(String, RequestMetrics)> {
         let prompt_tokens = tokenizer::encode(prompt);
         anyhow::ensure!(!prompt_tokens.is_empty(), "empty prompt");
-        let budget = meta.seq.saturating_sub(prompt_tokens.len());
-        let max_new = opts.max_new_tokens.min(budget.saturating_sub(1));
-        self.runtime.reset()?;
+        anyhow::ensure!(prompt_tokens.len() < self.shape.seq, "prompt exceeds max_seq");
+        // Same budget rule as the serving loop: N generated tokens need
+        // N - 1 decode forwards, so up to `seq - prompt` tokens fit.
+        let budget = self.shape.seq.saturating_sub(prompt_tokens.len());
+        let max_new = opts.max_new_tokens.min(budget);
+        self.begin_request(GENERATE_REQ_ID)?;
+        let chunk = self.shape.chunk;
 
-        // ---- prefill: whole chunks through the matrix-path artifact,
-        // remainder through the decode path (teacher forcing) ----
-        let chunk = meta.chunk;
+        // ---- prefill: whole chunks through the matrix path, remainder
+        // through the decode path (teacher forcing) ----
         let timer = PhaseTimer::start();
         let mut sim_prefill_us = 0.0;
         let mut pos = 0usize;
         let mut logits: Vec<f32> = Vec::new();
-        if self.runtime.has_prefill() {
-            while prompt_tokens.len() - pos >= chunk {
-                let toks: Vec<i32> =
-                    prompt_tokens[pos..pos + chunk].iter().map(|&t| t as i32).collect();
-                logits = self.runtime.prefill_chunk(&toks, pos as i32)?;
-                pos += chunk;
-                sim_prefill_us += self.sim_prefill_chunk_us(pos);
-            }
-        }
         while pos < prompt_tokens.len() {
-            logits = self.runtime.decode_step(prompt_tokens[pos] as i32, pos as i32)?;
-            sim_prefill_us += self.sim_decode_us(pos + 1);
-            pos += 1;
+            let rem = prompt_tokens.len() - pos;
+            let len = if chunk == 0 { rem } else { chunk.min(rem) };
+            let (l, us) = self.prefill_slice(&prompt_tokens[pos..pos + len], pos)?;
+            logits = l;
+            sim_prefill_us += us;
+            pos += len;
         }
         let wall_prefill_s = timer.stop();
 
@@ -143,21 +239,27 @@ impl Engine {
         let mut sim_decode_us = 0.0;
         let mut rng = Rng::new(opts.seed);
         let mut out_tokens: Vec<usize> = Vec::new();
-        for _ in 0..max_new {
-            let next = if opts.temperature <= 0.0 {
-                sampler::greedy(&logits)
-            } else {
-                sampler::top_k(&logits, opts.top_k, opts.temperature, &mut rng)
-            };
-            out_tokens.push(next);
-            if Some(next as u8) == opts.stop_byte {
+        for i in 0..max_new {
+            let next = sampler::sample(&logits, opts.temperature, opts.top_k, &mut rng);
+            // Check *before* emitting: the stop byte must not leak into the
+            // decoded output. Compare in token space so vocabularies larger
+            // than 256 (e.g. base-100m) cannot alias onto a stop byte.
+            if opts.stop_byte.map(usize::from) == Some(next) {
                 break;
             }
-            logits = self.runtime.decode_step(next as i32, pos as i32)?;
-            sim_decode_us += self.sim_decode_us(pos + 1);
+            out_tokens.push(next);
+            // The last budgeted token needs no further forward: its logits
+            // would never be sampled.
+            if i + 1 == max_new {
+                break;
+            }
+            let (l, us) = self.decode_token(next, pos)?;
+            logits = l;
+            sim_decode_us += us;
             pos += 1;
         }
         let wall_decode_s = timer.stop();
+        self.end_request(GENERATE_REQ_ID);
 
         let pm = &self.soc.power;
         let metrics = RequestMetrics {
@@ -167,9 +269,115 @@ impl Engine {
             wall_decode_s,
             sim_prefill_s: sim_prefill_us / 1e6,
             sim_decode_s: sim_decode_us / 1e6,
-            sim_prefill_j: sim_energy_j(pm, Placement::NpuOnly, sim_prefill_us / 1e6, prompt_tokens.len()),
-            sim_decode_j: sim_energy_j(pm, Placement::NpuOnly, sim_decode_us / 1e6, out_tokens.len()),
+            sim_prefill_j: sim_energy_j(
+                pm,
+                Placement::NpuOnly,
+                sim_prefill_us / 1e6,
+                prompt_tokens.len(),
+            ),
+            sim_decode_j: sim_energy_j(
+                pm,
+                Placement::NpuOnly,
+                sim_decode_us / 1e6,
+                out_tokens.len(),
+            ),
         };
         Ok((tokenizer::decode(&out_tokens), metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::kv_cache::KvCache;
+    use crate::model::weights::random_transformer;
+    use crate::npu::config::SocConfig;
+
+    fn engine(seed: u64) -> Engine {
+        let model = random_transformer(&ModelConfig::tiny(), seed);
+        Engine::reference(model, SocConfig::oneplus12(), 16, 4, 2).expect("engine")
+    }
+
+    #[test]
+    fn reference_generate_is_deterministic_under_greedy() {
+        let mut a = engine(3);
+        let mut b = engine(3);
+        let opts = GenerateOpts { max_new_tokens: 6, temperature: 0.0, ..Default::default() };
+        let (ta, ma) = a.generate("lookup tables", &opts).expect("gen a");
+        let (tb, _) = b.generate("lookup tables", &opts).expect("gen b");
+        assert_eq!(ta, tb);
+        assert_eq!(ma.generated_tokens, 6);
+        assert!(ma.sim_prefill_s > 0.0 && ma.sim_decode_s > 0.0);
+        assert!(ma.sim_prefill_j > 0.0 && ma.sim_decode_j > 0.0);
+    }
+
+    #[test]
+    fn stop_byte_does_not_leak_into_output() {
+        // Predict the first greedy token with the same weights, then ask the
+        // engine to stop on exactly that byte: the output must be empty.
+        let model = random_transformer(&ModelConfig::tiny(), 9);
+        let prompt = tokenizer::encode("ab");
+        let mut cache = KvCache::new(&model.cfg, 32);
+        let mut logits = Vec::new();
+        for (pos, &t) in prompt.iter().enumerate() {
+            logits = model.forward_token(t, pos, &mut cache);
+        }
+        let first = sampler::greedy(&logits);
+
+        let mut eng = engine(9);
+        let opts = GenerateOpts {
+            max_new_tokens: 8,
+            temperature: 0.0,
+            stop_byte: Some(first as u8),
+            ..Default::default()
+        };
+        let (text, m) = eng.generate("ab", &opts).expect("gen");
+        assert_eq!(m.generated_tokens, 0, "stop byte must not be emitted");
+        assert!(text.is_empty());
+        // The same engine without the stop byte generates normally.
+        let opts = GenerateOpts { max_new_tokens: 8, temperature: 0.0, ..Default::default() };
+        let (_, m) = eng.generate("ab", &opts).expect("gen");
+        assert_eq!(m.generated_tokens, 8);
+    }
+
+    #[test]
+    fn generation_respects_the_sequence_budget() {
+        let mut eng = engine(5);
+        let prompt: String = std::iter::repeat('x').take(250).collect();
+        let opts = GenerateOpts { max_new_tokens: 20, temperature: 0.0, ..Default::default() };
+        let (_, m) = eng.generate(&prompt, &opts).expect("gen");
+        // tiny max_seq = 256: 250 prompt + at most 6 generated (the 6th
+        // token needs no forward of its own).
+        assert_eq!(m.prompt_tokens, 250);
+        assert_eq!(m.generated_tokens, 6);
+    }
+
+    #[test]
+    fn step_api_matches_generate_numerics() {
+        // prefill_slice over chunk-sized + ragged slices must land on the
+        // same logits as a fresh stepwise pass.
+        let mut eng = engine(7);
+        let toks = tokenizer::encode("the lookup table subsumes dequantization");
+        eng.begin_request(1).expect("begin");
+        let mut a = Vec::new();
+        let mut pos = 0usize;
+        while pos < toks.len() {
+            let len = 16usize.min(toks.len() - pos);
+            let (l, us) = eng.prefill_slice(&toks[pos..pos + len], pos).expect("slice");
+            assert!(us > 0.0);
+            a = l;
+            pos += len;
+        }
+        eng.end_request(1);
+
+        eng.begin_request(2).expect("begin");
+        let mut b = Vec::new();
+        for (p, &t) in toks.iter().enumerate() {
+            let (l, _) = eng.decode_token(t, p).expect("step");
+            b = l;
+        }
+        eng.end_request(2);
+        assert_eq!(a, b);
     }
 }

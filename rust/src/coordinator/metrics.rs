@@ -1,5 +1,8 @@
 //! Request metrics: latency, throughput, energy — what the serving examples
-//! and the end-to-end benches report.
+//! and the end-to-end benches report. [`RequestMetrics`] covers one
+//! single-shot generation; [`FleetMetrics`] aggregates a multi-request
+//! serving run (queue wait, TTFT percentiles, sustained throughput,
+//! simulated energy).
 
 use crate::npu::config::PowerModel;
 use crate::npu::energy::{EnergyMeter, Placement};
@@ -78,6 +81,134 @@ pub fn sim_energy_j(pm: &PowerModel, placement: Placement, sim_seconds: f64, tok
     m.total_joules(pm)
 }
 
+/// Nearest-rank percentile (`q` in [0, 100]) over an unsorted sample.
+/// Returns 0.0 for an empty sample.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((q / 100.0) * s.len() as f64).ceil() as usize;
+    s[rank.clamp(1, s.len()) - 1]
+}
+
+/// One completed request in a multi-request serving run. All `_us` fields
+/// are on the *simulated* on-device clock.
+#[derive(Debug, Clone)]
+pub struct RequestCompletion {
+    pub id: u64,
+    pub priority: u8,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub arrival_us: f64,
+    /// Arrival → first scheduled work unit.
+    pub queue_wait_us: f64,
+    /// Arrival → first generated token.
+    pub ttft_us: f64,
+    /// Simulated clock when the request finished.
+    pub finish_us: f64,
+    pub sim_prefill_us: f64,
+    pub sim_decode_us: f64,
+    pub energy_j: f64,
+    /// Prefill restarts caused by priority preemption.
+    pub restarts: usize,
+    pub text: String,
+}
+
+/// Aggregate metrics for one serving run, in finish order.
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    pub completions: Vec<RequestCompletion>,
+    /// Simulated end-to-end makespan (µs, including idle gaps between
+    /// arrivals).
+    pub makespan_us: f64,
+    /// Host wall-clock of the run, seconds.
+    pub wall_s: f64,
+    /// Scheduler preemptions over the run.
+    pub preemptions: usize,
+}
+
+impl FleetMetrics {
+    pub fn prompt_tokens(&self) -> usize {
+        self.completions.iter().map(|c| c.prompt_tokens).sum()
+    }
+
+    pub fn generated_tokens(&self) -> usize {
+        self.completions.iter().map(|c| c.generated_tokens).sum()
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.completions.iter().map(|c| c.energy_j).sum()
+    }
+
+    /// Sustained throughput: every processed token (prompt + generated)
+    /// over the simulated makespan.
+    pub fn throughput_tps(&self) -> f64 {
+        (self.prompt_tokens() + self.generated_tokens()) as f64
+            / (self.makespan_us / 1e6).max(1e-12)
+    }
+
+    /// Generated tokens over the simulated makespan.
+    pub fn decode_throughput_tps(&self) -> f64 {
+        self.generated_tokens() as f64 / (self.makespan_us / 1e6).max(1e-12)
+    }
+
+    pub fn ttft_us(&self) -> Vec<f64> {
+        self.completions.iter().map(|c| c.ttft_us).collect()
+    }
+
+    pub fn queue_wait_us(&self) -> Vec<f64> {
+        self.completions.iter().map(|c| c.queue_wait_us).collect()
+    }
+
+    pub fn ttft_p50_ms(&self) -> f64 {
+        percentile(&self.ttft_us(), 50.0) / 1e3
+    }
+
+    pub fn ttft_p99_ms(&self) -> f64 {
+        percentile(&self.ttft_us(), 99.0) / 1e3
+    }
+
+    pub fn queue_wait_p50_ms(&self) -> f64 {
+        percentile(&self.queue_wait_us(), 50.0) / 1e3
+    }
+
+    pub fn queue_wait_p99_ms(&self) -> f64 {
+        percentile(&self.queue_wait_us(), 99.0) / 1e3
+    }
+
+    pub fn energy_per_token_j(&self) -> f64 {
+        let tokens = self.prompt_tokens() + self.generated_tokens();
+        self.total_energy_j() / tokens.max(1) as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests        : {} completed, {} preemption(s)\n\
+             tokens          : {} prompt + {} generated\n\
+             sim makespan    : {:.2} ms ({:.1} tok/s sustained, {:.1} decode tok/s)\n\
+             TTFT            : p50 {:.3} ms, p99 {:.3} ms\n\
+             queue wait      : p50 {:.3} ms, p99 {:.3} ms\n\
+             sim energy      : {:.4} J total ({:.6} J/tok)\n\
+             host wall-clock : {:.2} s",
+            self.completions.len(),
+            self.preemptions,
+            self.prompt_tokens(),
+            self.generated_tokens(),
+            self.makespan_us / 1e3,
+            self.throughput_tps(),
+            self.decode_throughput_tps(),
+            self.ttft_p50_ms(),
+            self.ttft_p99_ms(),
+            self.queue_wait_p50_ms(),
+            self.queue_wait_p99_ms(),
+            self.total_energy_j(),
+            self.energy_per_token_j(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,5 +236,54 @@ mod tests {
         let pm = PowerModel::sd8gen3();
         let j = sim_energy_j(&pm, Placement::NpuOnly, 2.0, 10);
         assert!((j - 2.0 * pm.npu_active_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 99.0), 5.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.5], 99.0), 7.5);
+    }
+
+    fn completion(id: u64, ttft_us: f64) -> RequestCompletion {
+        RequestCompletion {
+            id,
+            priority: 0,
+            prompt_tokens: 10,
+            generated_tokens: 5,
+            arrival_us: 0.0,
+            queue_wait_us: 100.0,
+            ttft_us,
+            finish_us: 10_000.0,
+            sim_prefill_us: 500.0,
+            sim_decode_us: 1_000.0,
+            energy_j: 0.015,
+            restarts: 0,
+            text: String::new(),
+        }
+    }
+
+    #[test]
+    fn fleet_aggregates() {
+        let fleet = FleetMetrics {
+            completions: vec![completion(1, 1_000.0), completion(2, 3_000.0)],
+            makespan_us: 30_000.0,
+            wall_s: 0.5,
+            preemptions: 1,
+        };
+        assert_eq!(fleet.prompt_tokens(), 20);
+        assert_eq!(fleet.generated_tokens(), 10);
+        // 30 tokens over 30 ms => 1000 tok/s.
+        assert!((fleet.throughput_tps() - 1000.0).abs() < 1e-6);
+        assert!((fleet.ttft_p50_ms() - 1.0).abs() < 1e-9);
+        assert!((fleet.ttft_p99_ms() - 3.0).abs() < 1e-9);
+        assert!((fleet.total_energy_j() - 0.03).abs() < 1e-12);
+        let r = fleet.report();
+        assert!(r.contains("2 completed"));
+        assert!(r.contains("1 preemption"));
     }
 }

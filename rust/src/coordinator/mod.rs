@@ -1,12 +1,16 @@
 //! Layer-3 coordinator: the paper's system contribution.
 //!
 //! - [`engine`] — the serving engine: chunked prefill (matrix path) +
-//!   LUT decoding (vector path) over the PJRT artifacts, one weight copy.
+//!   LUT decoding (vector path), one weight copy, pluggable backend.
+//! - [`scheduler`] — priority admission queue with chunked-prefill
+//!   preemption (never mid-decode).
+//! - [`server`] — the multi-request serving loop: drives the scheduler
+//!   against the engine's step API under a simulated on-device clock.
 //! - [`graph`] — the §5 graph-optimization pass (precompute dedup).
 //! - [`pipeline`] — the §4.2 DMA–Vector–Matrix pipeline simulation.
 //! - [`perf`] — end-to-end phase performance/energy model (Figs. 14–15,
 //!   Table 3).
-//! - [`metrics`] — request metrics and energy accounting.
+//! - [`metrics`] — per-request and fleet metrics, energy accounting.
 
 pub mod engine;
 pub mod graph;
@@ -14,8 +18,11 @@ pub mod metrics;
 pub mod perf;
 pub mod pipeline;
 pub mod scheduler;
+pub mod server;
 
 pub use engine::{Engine, GenerateOpts};
 pub use graph::{build_block_graph, Graph, OpKind};
-pub use metrics::RequestMetrics;
+pub use metrics::{FleetMetrics, RequestCompletion, RequestMetrics};
 pub use pipeline::{run_pipelined, run_sequential, PipelineRun};
+pub use scheduler::{Request, Scheduler, WorkItem};
+pub use server::{synthetic_trace, ServeOpts, Server, TraceProfile, TraceRequest};

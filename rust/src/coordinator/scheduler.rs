@@ -49,19 +49,37 @@ pub struct Scheduler {
     chunk: usize,
     /// Completed request ids in finish order.
     pub finished: Vec<u64>,
+    /// Prefill preemptions performed so far.
+    pub preemptions: usize,
 }
 
 impl Scheduler {
     pub fn new(chunk: usize) -> Self {
         assert!(chunk > 0);
-        Self { queue: VecDeque::new(), active: None, chunk, finished: Vec::new() }
+        Self {
+            queue: VecDeque::new(),
+            active: None,
+            chunk,
+            finished: Vec::new(),
+            preemptions: 0,
+        }
     }
 
     pub fn submit(&mut self, r: Request) {
         assert!(r.prompt_tokens > 0, "empty prompt");
         // Insert before the first strictly-lower-priority entry (stable
         // within a class).
-        let idx = self.queue.iter().position(|q| q.priority > r.priority).unwrap_or(self.queue.len());
+        let idx =
+            self.queue.iter().position(|q| q.priority > r.priority).unwrap_or(self.queue.len());
+        self.queue.insert(idx, r);
+    }
+
+    /// Re-queue a preempted request at the *front* of its priority class:
+    /// it arrived before its same-priority peers and has already burned
+    /// prefill work, so it must not fall behind them.
+    fn resubmit_front(&mut self, r: Request) {
+        let idx =
+            self.queue.iter().position(|q| q.priority >= r.priority).unwrap_or(self.queue.len());
         self.queue.insert(idx, r);
     }
 
@@ -93,6 +111,20 @@ impl Scheduler {
         }
     }
 
+    /// Finish the active request early — e.g. the serving loop's sampler hit
+    /// a stop byte mid-decode. The next [`Scheduler::next`] call emits
+    /// `Finish` and frees the NPU for the queue. Returns false (no-op) when
+    /// `id` is not the active request.
+    pub fn complete_active(&mut self, id: u64) -> bool {
+        match self.active.as_mut() {
+            Some((req, state)) if req.id == id => {
+                *state = PhaseState::Finished;
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Produce the next unit of work (None when idle).
     pub fn next(&mut self) -> Option<WorkItem> {
         self.admit();
@@ -100,7 +132,8 @@ impl Scheduler {
             // Swap the active request back into the queue (front of its
             // class); its prefill restarts later (cache released).
             let (active, _) = self.active.take().unwrap();
-            self.submit(active);
+            self.resubmit_front(active);
+            self.preemptions += 1;
             self.admit();
         }
         let (req, state) = self.active.as_mut()?;
@@ -260,5 +293,64 @@ mod tests {
     #[should_panic(expected = "empty prompt")]
     fn empty_prompt_rejected() {
         Scheduler::new(64).submit(req(1, 0, 1, 1));
+    }
+
+    #[test]
+    fn complete_active_finishes_early_mid_decode() {
+        let mut s = Scheduler::new(64);
+        s.submit(req(1, 64, 100, 1));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        assert!(matches!(s.next(), Some(WorkItem::DecodeStep { id: 1, .. })));
+        // The serving loop saw a stop byte: cut the remaining 99 steps.
+        assert!(s.complete_active(1));
+        assert_eq!(s.next(), Some(WorkItem::Finish { id: 1 }));
+        assert_eq!(s.finished, vec![1]);
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    fn complete_active_ignores_non_active_ids() {
+        let mut s = Scheduler::new(64);
+        s.submit(req(1, 64, 2, 1));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        assert!(!s.complete_active(99), "unknown id must be a no-op");
+        assert!(matches!(s.next(), Some(WorkItem::DecodeStep { id: 1, .. })));
+    }
+
+    #[test]
+    fn preempted_request_resumes_ahead_of_its_class() {
+        // A (prio 5) is mid-prefill with C (prio 5) queued; urgent B
+        // (prio 0) preempts A. A must restart *before* C — it arrived
+        // first and already burned prefill work.
+        let mut s = Scheduler::new(64);
+        s.submit(req(1, 640, 1, 5)); // A
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        s.submit(req(3, 64, 1, 5)); // C, same class as A
+        s.submit(req(2, 64, 1, 0)); // B, urgent
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 2, .. })));
+        let order: Vec<u64> = s
+            .drain()
+            .iter()
+            .filter_map(|w| match w {
+                WorkItem::Finish { id } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(order, vec![2, 1, 3], "A must finish before C");
+    }
+
+    #[test]
+    fn preemption_counter_tracks_restarts() {
+        let mut s = Scheduler::new(64);
+        s.submit(req(1, 640, 1, 5));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        assert_eq!(s.preemptions, 0);
+        s.submit(req(2, 64, 1, 0));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 2, .. })));
+        assert_eq!(s.preemptions, 1);
+        // Equal priority never preempts.
+        s.submit(req(3, 64, 1, 0));
+        assert!(matches!(s.next(), Some(WorkItem::DecodeStep { id: 2, .. })));
+        assert_eq!(s.preemptions, 1);
     }
 }

@@ -3,8 +3,9 @@
 //! A reproduction of the T-MAN system (Wei et al., 2025) as a three-layer
 //! Rust + JAX + Pallas stack:
 //!
-//! - **Layer 3 (this crate)** — the coordinator: inference engine, phase
-//!   scheduler (prefill → matrix path, decode → vector path), the
+//! - **Layer 3 (this crate)** — the coordinator: inference engine, the
+//!   multi-request serving loop (priority scheduler, chunked prefill
+//!   interleaved with decode, preemption, per-request KV slots), the
 //!   DMA–Vector–Matrix pipeline, the graph-optimization pass, and the
 //!   cycle-approximate NPU simulator every performance experiment runs on.
 //! - **Layer 2** — `python/compile/model.py`: the JAX transformer graph,

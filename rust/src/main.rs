@@ -1,14 +1,24 @@
 //! T-MAN coordinator CLI.
 //!
 //! Subcommands (args hand-parsed; clap is unavailable offline):
-//!   generate --prompt "..." [--max-new N] [--temp T] [--artifacts DIR]
-//!            [--soc oneplus12|oneplus13t] [--greedy]
-//!   serve    [--requests N] ...       batch of requests + summary metrics
+//!   generate --prompt "..." [--max-new N] [--temp T] [--greedy]
+//!            [--model tiny|small|base] [--artifacts DIR]
+//!            [--soc oneplus12|oneplus13t]
+//!   serve    [--trace synthetic] [--requests N] [--seed S] [--verbose]
+//!            [--model tiny|small|base] [--chunk C] [--kv-slots N]
+//!            [--bits 2|4] [--temp T] [--artifacts DIR] [--soc ...]
 //!   info     [--artifacts DIR]        print artifact manifest + sim config
+//!
+//! Without the `pjrt` feature (or without built artifacts) the engine runs
+//! the pure-Rust reference backend; trained weights are picked up from
+//! `artifacts/model.tmw` when present, random weights otherwise.
 
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 use tman::coordinator::engine::{Engine, GenerateOpts};
+use tman::coordinator::server::{synthetic_trace, ServeOpts, Server, TraceProfile};
+use tman::model::config::ModelConfig;
+use tman::model::weights;
 use tman::npu::config::SocConfig;
 
 struct Args {
@@ -49,11 +59,43 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     args.flags.get("artifacts").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
+/// Prefer the PJRT artifact engine when the feature is on and artifacts
+/// exist; otherwise run the pure-Rust reference backend.
+fn build_engine(args: &Args) -> Result<Engine> {
+    let soc = soc_from(args)?;
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = artifacts_dir(args);
+        if dir.join("meta.txt").exists() {
+            return Engine::load(&dir, soc);
+        }
+        eprintln!("[engine] no artifacts at {} — using the reference backend", dir.display());
+    }
+    let cfg = match args.flags.get("model").map(|s| s.as_str()).unwrap_or("small") {
+        "tiny" => ModelConfig::tiny(),
+        "small" => ModelConfig::small(),
+        "base" | "base-100m" => ModelConfig::base_100m(),
+        other => bail!("unknown model {other} (tiny | small | base)"),
+    };
+    let chunk: usize = args.flags.get("chunk").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let bits: u32 = args.flags.get("bits").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let kv_slots: usize =
+        args.flags.get("kv-slots").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let seed: u64 = args.flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let (model, trained) = weights::load_or_random(&artifacts_dir(args), &cfg, seed);
+    if trained {
+        eprintln!("[engine] reference backend with trained weights (artifacts/model.tmw)");
+    } else {
+        eprintln!("[engine] reference backend with random weights ({})", cfg.name);
+    }
+    Engine::reference(model, soc, chunk, bits, kv_slots)
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     match args.cmd.as_str() {
         "generate" => {
-            let mut engine = Engine::load(&artifacts_dir(&args), soc_from(&args)?)?;
+            let mut engine = build_engine(&args)?;
             let prompt = args
                 .flags
                 .get("prompt")
@@ -79,23 +121,36 @@ fn main() -> Result<()> {
             println!("{}", metrics.report());
         }
         "serve" => {
-            let mut engine = Engine::load(&artifacts_dir(&args), soc_from(&args)?)?;
-            let n: usize = args.flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(4);
-            let prompts = [
-                "The inference of a language model consists of",
-                "A lookup table can subsume operations",
-                "During decoding, the lookup based kernel",
-                "Energy matters as much as speed",
-            ];
-            let mut total_decode_tps = 0.0;
-            for i in 0..n {
-                let p = prompts[i % prompts.len()];
-                let (text, m) = engine.generate(p, &GenerateOpts::default())?;
-                println!("[req {i}] {} -> {:?}", p, &text[..text.len().min(60)]);
-                println!("[req {i}] {}", m.report());
-                total_decode_tps += m.wall_decode_tps();
+            match args.flags.get("trace").map(|s| s.as_str()).unwrap_or("synthetic") {
+                "synthetic" => {}
+                other => bail!("unknown trace kind {other} (synthetic)"),
             }
-            println!("\nmean host decode throughput: {:.1} tok/s", total_decode_tps / n as f64);
+            let engine = build_engine(&args)?;
+            let n: usize =
+                args.flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(8);
+            let seed: u64 = args.flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+            // Pick the workload mix the model's context window can hold.
+            let profile = if engine.max_seq() <= 512 {
+                TraceProfile::tiny()
+            } else {
+                TraceProfile::standard()
+            };
+            let trace = synthetic_trace(n, seed, &profile);
+            let opts = ServeOpts {
+                temperature: args.flags.get("temp").map(|s| s.parse()).transpose()?.unwrap_or(0.0),
+                verbose: args.flags.contains_key("verbose"),
+                seed,
+                ..Default::default()
+            };
+            println!(
+                "serving {n} synthetic requests (chunk {}, {} KV slots, soc {}) ...",
+                engine.chunk(),
+                args.flags.get("kv-slots").map(|s| s.as_str()).unwrap_or("2"),
+                engine.soc.name
+            );
+            let mut server = Server::new(engine, opts);
+            let fleet = server.run(&trace)?;
+            println!("{}", fleet.report());
         }
         "info" => {
             let meta = tman::runtime::artifacts::ArtifactMeta::load(&artifacts_dir(&args))?;
@@ -113,12 +168,19 @@ fn main() -> Result<()> {
                 meta.params_bytes() as f64 / 1e6
             );
             let soc = soc_from(&args)?;
-            println!("soc: {} (NPU {} @ {} TOPS int8)", soc.name, soc.npu.name, soc.npu.hmx_tops_int8);
+            println!(
+                "soc: {} (NPU {} @ {} TOPS int8)",
+                soc.name, soc.npu.name, soc.npu.hmx_tops_int8
+            );
         }
         _ => {
             println!(
-                "t-man coordinator\nusage: tman <generate|serve|info> [--prompt S] [--max-new N] \
-                 [--temp T] [--greedy] [--requests N] [--artifacts DIR] [--soc oneplus12|oneplus13t]"
+                "t-man coordinator\n\
+                 usage: tman <generate|serve|info> [flags]\n\
+                 generate: --prompt S --max-new N --temp T --greedy\n\
+                 serve:    --trace synthetic --requests N --seed S --verbose --temp T\n\
+                 shared:   --model tiny|small|base --chunk C --kv-slots N --bits 2|4\n\
+                 \x20         --artifacts DIR --soc oneplus12|oneplus13t"
             );
         }
     }

@@ -1,6 +1,11 @@
 //! KV cache for autoregressive decoding: per layer, (seq, kv_heads, d_head)
-//! for K and V. Single-request (batch 1), matching the paper's on-device
-//! decoding scenario (§2.1).
+//! for K and V — plus [`KvSlotPool`], the fixed-capacity pool of
+//! per-request cache slots the multi-request serving loop allocates from.
+//! The device scenario stays batch 1 (§2.1): one slot is bound to the
+//! compute path at a time, and a preempted request's slot is released (its
+//! prefill restarts from zero), so today the pool is the capacity
+//! *bookkeeping* substrate — batched decode and resumable preemption
+//! (ROADMAP) are what make capacity > 1 load-bearing.
 
 use crate::model::config::ModelConfig;
 
@@ -70,6 +75,88 @@ impl KvCache {
     }
 }
 
+/// Fixed-capacity pool of per-request KV-cache slots.
+///
+/// Requests own slots by id: [`KvSlotPool::acquire`] binds (or re-binds) a
+/// cleared slot, [`KvSlotPool::release`] returns it. Under today's
+/// restart-on-preempt serving policy at most one slot is owned at a time
+/// (see the module doc above); capacity > 1 becomes load-bearing with
+/// batched decode / resumable preemption.
+#[derive(Debug, Clone)]
+pub struct KvSlotPool {
+    slots: Vec<KvCache>,
+    owners: Vec<Option<u64>>,
+    high_water: usize,
+}
+
+impl KvSlotPool {
+    pub fn new(cfg: &ModelConfig, max_seq: usize, n_slots: usize) -> Self {
+        assert!(n_slots > 0, "pool needs at least one slot");
+        Self {
+            slots: (0..n_slots).map(|_| KvCache::new(cfg, max_seq)).collect(),
+            owners: vec![None; n_slots],
+            high_water: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Slots currently owned by a request.
+    pub fn in_use(&self) -> usize {
+        self.owners.iter().filter(|o| o.is_some()).count()
+    }
+
+    /// Most slots simultaneously owned over the pool's lifetime.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn slot_of(&self, id: u64) -> Option<usize> {
+        self.owners.iter().position(|o| *o == Some(id))
+    }
+
+    /// Acquire a cleared slot for `id`. Idempotent: if `id` already owns a
+    /// slot it is cleared and returned. None when every slot is owned by
+    /// another request.
+    pub fn acquire(&mut self, id: u64) -> Option<usize> {
+        if let Some(i) = self.slot_of(id) {
+            self.slots[i].clear();
+            return Some(i);
+        }
+        let free = self.owners.iter().position(|o| o.is_none())?;
+        self.owners[free] = Some(id);
+        self.slots[free].clear();
+        self.high_water = self.high_water.max(self.in_use());
+        Some(free)
+    }
+
+    /// Release `id`'s slot. Returns whether a slot was held.
+    pub fn release(&mut self, id: u64) -> bool {
+        match self.slot_of(id) {
+            Some(i) => {
+                self.owners[i] = None;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn get(&self, slot: usize) -> &KvCache {
+        &self.slots[slot]
+    }
+
+    pub fn get_mut(&mut self, slot: usize) -> &mut KvCache {
+        &mut self.slots[slot]
+    }
+
+    /// Total pool footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.slots.iter().map(|c| c.bytes()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,5 +196,47 @@ mod tests {
         c.append(0, 0, &vec![1.0; dkv], &vec![1.0; dkv]);
         c.clear();
         assert_eq!(c.len, 0);
+    }
+
+    #[test]
+    fn pool_acquire_release_lifecycle() {
+        let cfg = ModelConfig::tiny();
+        let mut p = KvSlotPool::new(&cfg, 8, 2);
+        assert_eq!(p.capacity(), 2);
+        assert_eq!(p.in_use(), 0);
+        let a = p.acquire(10).expect("slot for 10");
+        let b = p.acquire(20).expect("slot for 20");
+        assert_ne!(a, b);
+        assert_eq!(p.in_use(), 2);
+        assert_eq!(p.high_water(), 2);
+        assert!(p.acquire(30).is_none(), "pool is full");
+        assert!(p.release(10));
+        assert!(!p.release(10), "double release is a no-op");
+        let c = p.acquire(30).expect("freed slot is reusable");
+        assert_eq!(c, a);
+        assert_eq!(p.slot_of(30), Some(a));
+        assert_eq!(p.high_water(), 2);
+    }
+
+    #[test]
+    fn pool_reacquire_clears_the_slot() {
+        let cfg = ModelConfig::tiny();
+        let dkv = cfg.d_kv();
+        let mut p = KvSlotPool::new(&cfg, 8, 1);
+        let s = p.acquire(1).unwrap();
+        p.get_mut(s).append(0, 0, &vec![1.0; dkv], &vec![1.0; dkv]);
+        assert_eq!(p.get(s).len, 1);
+        // Same id re-acquires the same slot, now cleared.
+        assert_eq!(p.acquire(1), Some(s));
+        assert_eq!(p.get(s).len, 0);
+    }
+
+    #[test]
+    fn pool_bytes_scale_with_slots() {
+        let cfg = ModelConfig::tiny();
+        let one = KvSlotPool::new(&cfg, 16, 1).bytes();
+        let four = KvSlotPool::new(&cfg, 16, 4).bytes();
+        assert_eq!(four, 4 * one);
+        assert_eq!(one, KvCache::new(&cfg, 16).bytes());
     }
 }

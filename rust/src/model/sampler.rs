@@ -12,6 +12,16 @@ pub fn greedy(logits: &[f32]) -> usize {
         .unwrap_or(0)
 }
 
+/// The decode-loop sampling policy shared by `Engine::generate` and the
+/// serving loop: greedy at temperature <= 0, otherwise temperature + top-k.
+pub fn sample(logits: &[f32], temperature: f32, k: usize, rng: &mut Rng) -> usize {
+    if temperature <= 0.0 {
+        greedy(logits)
+    } else {
+        top_k(logits, k, temperature, rng)
+    }
+}
+
 /// Temperature + top-k sampling with a deterministic RNG.
 pub fn top_k(logits: &[f32], k: usize, temperature: f32, rng: &mut Rng) -> usize {
     assert!(k >= 1);
@@ -58,6 +68,18 @@ mod tests {
         let l = [0.5f32, 2.0, 1.0];
         let mut rng = Rng::new(2);
         assert_eq!(top_k(&l, 3, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sample_dispatches_on_temperature() {
+        let l = [0.5f32, 2.0, 1.0];
+        let mut rng = Rng::new(4);
+        assert_eq!(sample(&l, 0.0, 3, &mut rng), 1);
+        assert_eq!(sample(&l, -1.0, 3, &mut rng), 1);
+        // Positive temperature stays within the top-k set.
+        for _ in 0..20 {
+            assert!(sample(&l, 1.0, 2, &mut rng) < 3);
+        }
     }
 
     #[test]

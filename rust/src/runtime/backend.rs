@@ -1,0 +1,313 @@
+//! Execution backends for the serving engine.
+//!
+//! The engine's hot path needs exactly two operations — "run one decode
+//! step" and "run one prefill chunk" — plus per-request KV-cache lifecycle.
+//! Two implementations provide them:
+//!
+//! - [`ReferenceBackend`]: the pure-Rust reference transformer over a
+//!   [`KvSlotPool`] of per-request caches. Always available; this is what
+//!   the multi-request serving loop and the CLI run by default.
+//! - `Pjrt` (behind the `pjrt` feature): the AOT artifacts executed through
+//!   PJRT, single device-resident KV cache (batch 1 on device).
+//!
+//! Latency/energy numbers never come from the backend — the engine applies
+//! the NPU simulator to the model's [`ModelShape`] either way, so swapping
+//! backends changes numerics fidelity, not the performance model.
+
+use crate::model::config::ModelConfig;
+use crate::model::kv_cache::KvSlotPool;
+use crate::model::transformer::Transformer;
+use crate::runtime::artifacts::ArtifactMeta;
+use anyhow::{Context, Result};
+
+/// The architecture/quantization shape the engine's performance model runs
+/// on — the backend-independent subset of [`ArtifactMeta`].
+#[derive(Debug, Clone)]
+pub struct ModelShape {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    /// Maximum sequence length (prompt + generated).
+    pub seq: usize,
+    /// Prefill chunk length the matrix path runs at (0 = decode path only).
+    pub chunk: usize,
+    /// Weight bit width (2 or 4).
+    pub bits: u32,
+    /// Per-block quantization group size.
+    pub block: usize,
+}
+
+impl ModelShape {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn d_kv(&self) -> usize {
+        self.n_kv_heads * self.d_head()
+    }
+
+    pub fn from_config(cfg: &ModelConfig, chunk: usize, bits: u32, block: usize) -> Self {
+        Self {
+            vocab: cfg.vocab,
+            d_model: cfg.d_model,
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            n_kv_heads: cfg.n_kv_heads,
+            d_ff: cfg.d_ff,
+            seq: cfg.max_seq,
+            chunk,
+            bits,
+            block,
+        }
+    }
+
+    pub fn from_meta(meta: &ArtifactMeta) -> Self {
+        Self {
+            vocab: meta.vocab,
+            d_model: meta.d_model,
+            n_layers: meta.n_layers,
+            n_heads: meta.n_heads,
+            n_kv_heads: meta.n_kv_heads,
+            d_ff: meta.d_ff,
+            seq: meta.seq,
+            chunk: meta.chunk,
+            bits: meta.bits,
+            block: meta.block,
+        }
+    }
+
+    /// All per-layer projection (m, k) shapes × layers, in execution order
+    /// (q, k, v, o, gate, up, down) — the unit the kernel cost model sums.
+    pub fn proj_shapes(&self) -> Vec<(usize, usize)> {
+        let d = self.d_model;
+        let dkv = self.d_kv();
+        let per_layer = [
+            (d, d),
+            (dkv, d),
+            (dkv, d),
+            (d, d),
+            (self.d_ff, d),
+            (self.d_ff, d),
+            (d, self.d_ff),
+        ];
+        let mut all = Vec::with_capacity(per_layer.len() * self.n_layers);
+        for _ in 0..self.n_layers {
+            all.extend_from_slice(&per_layer);
+        }
+        all
+    }
+}
+
+/// Pure-Rust backend: the reference transformer + a pool of per-request
+/// KV-cache slots. One request is *bound* at a time (batch 1, matching the
+/// device scenario) and the serving loop releases a preempted request's
+/// slot (restart-from-zero policy), so the pool currently tracks capacity
+/// rather than constraining it — it is the substrate later batching /
+/// resumable-preemption PRs build on.
+#[derive(Debug, Clone)]
+pub struct ReferenceBackend {
+    pub model: Transformer,
+    pool: KvSlotPool,
+    /// (request id, slot) currently bound to the compute path.
+    active: Option<(u64, usize)>,
+}
+
+impl ReferenceBackend {
+    pub fn new(model: Transformer, kv_slots: usize) -> Self {
+        let pool = KvSlotPool::new(&model.cfg, model.cfg.max_seq, kv_slots);
+        Self { model, pool, active: None }
+    }
+
+    /// Acquire (or re-acquire) a KV slot for `id`, clear it, and bind the
+    /// request to the compute path.
+    pub fn begin_request(&mut self, id: u64) -> Result<()> {
+        let slot = self
+            .pool
+            .acquire(id)
+            .with_context(|| format!("KV slot pool exhausted ({} slots)", self.pool.capacity()))?;
+        self.active = Some((id, slot));
+        Ok(())
+    }
+
+    /// Release `id`'s KV slot and unbind it if it was active.
+    pub fn end_request(&mut self, id: u64) {
+        if let Some((active_id, _)) = self.active {
+            if active_id == id {
+                self.active = None;
+            }
+        }
+        self.pool.release(id);
+    }
+
+    fn active_slot(&self) -> Result<usize> {
+        self.active
+            .map(|(_, slot)| slot)
+            .context("no active request bound to the reference backend")
+    }
+
+    pub fn decode_step(&mut self, token: i32, pos: i32) -> Result<Vec<f32>> {
+        let slot = self.active_slot()?;
+        let vocab = self.model.cfg.vocab;
+        anyhow::ensure!(token >= 0 && (token as usize) < vocab, "token {token} out of vocab");
+        anyhow::ensure!(pos >= 0, "negative position {pos}");
+        let cache = self.pool.get_mut(slot);
+        Ok(self.model.forward_token(token as usize, pos as usize, cache))
+    }
+
+    pub fn prefill_chunk(&mut self, tokens: &[i32], pos_base: i32) -> Result<Vec<f32>> {
+        anyhow::ensure!(!tokens.is_empty(), "empty prefill chunk");
+        let mut logits = Vec::new();
+        let mut pos = pos_base;
+        for &t in tokens {
+            logits = self.decode_step(t, pos)?;
+            pos += 1;
+        }
+        Ok(logits)
+    }
+
+    pub fn slots_in_use(&self) -> usize {
+        self.pool.in_use()
+    }
+
+    pub fn slot_capacity(&self) -> usize {
+        self.pool.capacity()
+    }
+}
+
+/// The engine's execution backend.
+pub enum Backend {
+    /// Pure-Rust reference transformer (always available).
+    Reference(ReferenceBackend),
+    /// PJRT-executed AOT artifacts (requires the `pjrt` feature and a real
+    /// xla-rs; the vendored stub errors at runtime).
+    #[cfg(feature = "pjrt")]
+    Pjrt(crate::runtime::executor::NpuModelRuntime),
+}
+
+impl Backend {
+    pub fn begin_request(&mut self, id: u64) -> Result<()> {
+        match self {
+            Backend::Reference(b) => b.begin_request(id),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.reset(),
+        }
+    }
+
+    pub fn end_request(&mut self, id: u64) {
+        match self {
+            Backend::Reference(b) => b.end_request(id),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => {
+                let _ = id;
+            }
+        }
+    }
+
+    /// Whether a full-chunk matrix-path prefill is available.
+    pub fn has_prefill(&self) -> bool {
+        match self {
+            Backend::Reference(_) => true,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.has_prefill(),
+        }
+    }
+
+    pub fn decode_step(&mut self, token: i32, pos: i32) -> Result<Vec<f32>> {
+        match self {
+            Backend::Reference(b) => b.decode_step(token, pos),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.decode_step(token, pos),
+        }
+    }
+
+    pub fn prefill_chunk(&mut self, tokens: &[i32], pos_base: i32) -> Result<Vec<f32>> {
+        match self {
+            Backend::Reference(b) => b.prefill_chunk(tokens, pos_base),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.prefill_chunk(tokens, pos_base),
+        }
+    }
+
+    /// KV slots currently owned by admitted requests (1 for the PJRT
+    /// backend's single device cache).
+    pub fn kv_slots_in_use(&self) -> usize {
+        match self {
+            Backend::Reference(b) => b.slots_in_use(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::random_transformer;
+
+    fn backend(kv_slots: usize) -> ReferenceBackend {
+        ReferenceBackend::new(random_transformer(&ModelConfig::tiny(), 11), kv_slots)
+    }
+
+    #[test]
+    fn shape_from_config_matches_dims() {
+        let cfg = ModelConfig::tiny();
+        let s = ModelShape::from_config(&cfg, 16, 4, 64);
+        assert_eq!(s.d_kv(), cfg.d_kv());
+        assert_eq!(s.d_head(), cfg.d_head());
+        assert_eq!(s.seq, cfg.max_seq);
+        assert_eq!(s.proj_shapes().len(), 7 * cfg.n_layers);
+        assert!(s.proj_shapes().contains(&(cfg.d_ff, cfg.d_model)));
+    }
+
+    #[test]
+    fn decode_requires_bound_request() {
+        let mut b = backend(1);
+        assert!(b.decode_step(65, 0).is_err());
+        b.begin_request(1).unwrap();
+        let logits = b.decode_step(65, 0).unwrap();
+        assert_eq!(logits.len(), b.model.cfg.vocab);
+    }
+
+    #[test]
+    fn pool_exhaustion_is_an_error_and_release_recovers() {
+        let mut b = backend(1);
+        b.begin_request(1).unwrap();
+        assert!(b.begin_request(2).is_err(), "second request must not fit in one slot");
+        b.end_request(1);
+        b.begin_request(2).unwrap();
+        assert_eq!(b.slots_in_use(), 1);
+    }
+
+    #[test]
+    fn rebinding_clears_the_cache() {
+        let mut b = backend(2);
+        b.begin_request(7).unwrap();
+        b.decode_step(65, 0).unwrap();
+        b.decode_step(66, 1).unwrap();
+        // Re-begin the same request: positions restart from 0.
+        b.begin_request(7).unwrap();
+        let a = b.decode_step(65, 0).unwrap();
+        // Fresh request in a fresh slot sees identical logits at pos 0.
+        b.begin_request(8).unwrap();
+        let c = b.decode_step(65, 0).unwrap();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn prefill_chunk_matches_stepwise_decode() {
+        let mut b = backend(2);
+        b.begin_request(1).unwrap();
+        let toks = [72i32, 101, 108, 108, 111];
+        let chunked = b.prefill_chunk(&toks, 0).unwrap();
+        b.begin_request(2).unwrap();
+        let mut step = Vec::new();
+        for (pos, &t) in toks.iter().enumerate() {
+            step = b.decode_step(t, pos as i32).unwrap();
+        }
+        assert_eq!(chunked, step);
+    }
+}

@@ -1,9 +1,14 @@
-//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` + parameter
-//! pack) and execute them from the Layer-3 hot path. Python never runs at
-//! inference time — the HLO text was produced once by `make artifacts`.
+//! Runtime layer: artifact manifests, execution backends, and (behind the
+//! `pjrt` feature) the PJRT executor that runs the AOT artifacts. Python
+//! never runs at inference time — the HLO text was produced once by
+//! `make artifacts`.
 
 pub mod artifacts;
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 
 pub use artifacts::{ArtifactMeta, ParamSpec};
+pub use backend::{Backend, ModelShape, ReferenceBackend};
+#[cfg(feature = "pjrt")]
 pub use executor::NpuModelRuntime;

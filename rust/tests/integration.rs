@@ -4,7 +4,10 @@
 //!
 //! These tests require `make artifacts` to have produced `artifacts/`; they
 //! skip (with a notice) otherwise so `cargo test` stays green on a cold
-//! clone.
+//! clone. The whole file is gated on the `pjrt` feature — without it the
+//! executor (and these cross-layer checks) do not exist; the serving-loop
+//! integration tests in `serving.rs` cover the reference backend instead.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 use tman::coordinator::engine::{Engine, GenerateOpts};

@@ -1,0 +1,117 @@
+//! Stub of the `xla` (xla-rs) API surface used by `tman::runtime::executor`.
+//!
+//! The real crate links the XLA/PJRT C++ toolchain, which is unavailable in
+//! offline build environments. This stub keeps the `pjrt` feature
+//! *compilable* everywhere: every entry point returns a descriptive error at
+//! runtime. To execute real artifacts, replace this path dependency with an
+//! xla-rs checkout (same module paths, superset API):
+//!
+//! ```toml
+//! [dependencies]
+//! xla = { git = "https://github.com/LaurentMazare/xla-rs", ... }
+//! ```
+
+use std::fmt;
+
+/// Error returned by every stub entry point.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "XLA/PJRT backend unavailable: {what} requires the real xla-rs crate \
+         (this build uses the offline stub; see rust/vendor/xla)"
+    ))
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Host-side literal value (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Device-resident buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("unavailable"));
+    }
+}
