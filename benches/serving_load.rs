@@ -1,7 +1,9 @@
 //! Serving-load bench: sustained throughput and tail TTFT of the
-//! multi-request serving loop across prefill chunk sizes — the chunking
-//! trade-off (small chunks = preemption points and better tail TTFT; large
-//! chunks = matrix-path efficiency and better sustained throughput).
+//! multi-request serving loop across prefill chunk sizes and decode batch
+//! widths — the chunking trade-off (small chunks = preemption points and
+//! better tail TTFT; large chunks = matrix-path efficiency) and the
+//! batching trade-off (wider decode batches amortize the shared weight
+//! pass, at the cost of KV slots).
 //!
 //! Run: `cargo bench --bench serving_load` (plain main, no harness).
 
@@ -16,6 +18,7 @@ fn main() {
     let requests = 48usize;
     banner("serving load — 48 mixed requests (3:1 interactive:document), reference backend");
     let trace = synthetic_trace(requests, 0xBEEF, &TraceProfile::tiny());
+
     let mut t = Table::new(&[
         "chunk",
         "tok/s",
@@ -45,6 +48,43 @@ fn main() {
         ]);
     }
     t.print();
+
+    banner("decode-batch sweep — chunk 16, kv slots = max_batch + 2");
+    let mut t = Table::new(&[
+        "max_batch",
+        "occupancy",
+        "tok/s",
+        "decode tok/s",
+        "TTFT p99 ms",
+        "preempts",
+        "resumed",
+        "J/tok",
+    ]);
+    for max_batch in [1usize, 2, 4, 8] {
+        let model = random_transformer(&ModelConfig::tiny(), 7);
+        let engine = Engine::reference(model, SocConfig::oneplus12(), 16, 4, max_batch + 2)
+            .expect("engine");
+        let opts = ServeOpts { max_batch, ..Default::default() };
+        let mut server = Server::new(engine, opts);
+        let fleet = server.run(&trace).expect("serve");
+        assert_eq!(fleet.completions.len(), requests, "every request must complete");
+        assert!(
+            fleet.decode_batch_occupancy() >= 1.0,
+            "decode batches cannot run below one request"
+        );
+        t.row(&[
+            format!("{max_batch}"),
+            format!("{:.2}", fleet.decode_batch_occupancy()),
+            format!("{:.0}", fleet.throughput_tps()),
+            format!("{:.0}", fleet.decode_throughput_tps()),
+            format!("{:.3}", fleet.ttft_p99_ms()),
+            format!("{}", fleet.preemptions),
+            format!("{}", fleet.resumed),
+            format!("{:.6}", fleet.energy_per_token_j()),
+        ]);
+    }
+    t.print();
+
     println!(
         "\nnote: times are on the simulated on-device clock (NPU cost model); \
          numerics run on the host reference backend."

@@ -3,7 +3,7 @@
 //! documents), run it through the scheduler-driven serving loop, and print
 //! per-request and fleet metrics.
 //!
-//! Run: `cargo run --release --example serve_trace [n_requests]`
+//! Run: `cargo run --release --example serve_trace [n_requests] [max_batch]`
 
 use tman::coordinator::engine::Engine;
 use tman::coordinator::server::{synthetic_trace, ServeOpts, Server, TraceProfile};
@@ -13,16 +13,18 @@ use tman::npu::config::SocConfig;
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let max_batch: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(4);
     let model = random_transformer(&ModelConfig::tiny(), 42);
-    let engine = Engine::reference(model, SocConfig::oneplus12(), 16, 4, 2)?;
+    let engine = Engine::reference(model, SocConfig::oneplus12(), 16, 4, max_batch + 2)?;
     println!(
-        "serving {n} synthetic requests on {} (chunk {}, {} tok max ctx)\n",
+        "serving {n} synthetic requests on {} (chunk {}, decode batch {}, {} tok max ctx)\n",
         engine.soc.name,
         engine.chunk(),
+        max_batch,
         engine.max_seq()
     );
     let trace = synthetic_trace(n, 1, &TraceProfile::tiny());
-    let opts = ServeOpts { verbose: true, ..Default::default() };
+    let opts = ServeOpts { verbose: true, max_batch, ..Default::default() };
     let mut server = Server::new(engine, opts);
     let fleet = server.run(&trace)?;
     println!("\n{}", fleet.report());

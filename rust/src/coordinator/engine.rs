@@ -11,10 +11,15 @@
 //! Two entry levels:
 //! - [`Engine::generate`] serves one request end to end (the original
 //!   single-shot path).
-//! - [`Engine::begin_request`] / [`Engine::prefill_slice`] /
-//!   [`Engine::decode_token`] / [`Engine::end_request`] expose the same
-//!   machinery one scheduler work-item at a time — this is what the
-//!   multi-request serving loop in [`crate::coordinator::server`] drives.
+//! - [`Engine::begin_request`] / [`Engine::resume_request`] /
+//!   [`Engine::prefill_slice`] / [`Engine::decode_token`] /
+//!   [`Engine::decode_batch`] / [`Engine::end_request`] expose the same
+//!   machinery one scheduler work-item at a time, addressed by request id —
+//!   this is what the multi-request serving loop in
+//!   [`crate::coordinator::server`] drives. `decode_batch` runs one forward
+//!   per batched request against its own KV slot and prices the batch with
+//!   a shared-weight-pass cost model (table-lookup GEMV is weight-traffic
+//!   bound, so one pass over the quantized weights serves every request).
 
 use crate::coordinator::metrics::{sim_energy_j, PhaseTimer, RequestMetrics};
 use crate::kernels::dequant_gemm::tman_gemm_latency_us;
@@ -26,7 +31,7 @@ use crate::npu::config::SocConfig;
 use crate::npu::energy::Placement;
 use crate::npu::memory::LoadMethod;
 use crate::quant::formats::{ActDtype, Granularity, QuantFormat, WeightDtype};
-use crate::runtime::backend::{Backend, ModelShape, ReferenceBackend};
+use crate::runtime::backend::{Backend, DecodeStep, ModelShape, ReferenceBackend};
 use crate::util::Rng;
 use anyhow::Result;
 
@@ -58,6 +63,13 @@ impl Default for GenerateOpts {
 
 /// Request id [`Engine::generate`] binds internally for its single request.
 const GENERATE_REQ_ID: u64 = u64::MAX;
+
+/// Marginal projection cost of each extra request in a decode batch,
+/// relative to one solo GEMV pass. Table-lookup GEMV is weight-traffic
+/// bound (§2), so the quantized-weight pass is shared across the batch and
+/// each extra request adds only its LUT probes and accumulator traffic in
+/// the vector datapath.
+pub const DECODE_BATCH_MARGINAL: f64 = 0.15;
 
 fn quant_format(bits: u32, block: usize) -> QuantFormat {
     QuantFormat::new(
@@ -137,10 +149,31 @@ impl Engine {
         self.shape.seq
     }
 
+    /// DMA time to stream one request's KV cache at context length `ctx`.
+    fn kv_transfer_us(&self, ctx: usize) -> f64 {
+        let kv_bytes = 2 * self.shape.n_layers * ctx * self.shape.d_kv() * 2;
+        LoadMethod::Dma.transfer_us(&self.soc.npu, kv_bytes, 1)
+    }
+
     /// Simulated on-device time for one decode step at context length `ctx`.
     pub fn sim_decode_us(&self, ctx: usize) -> f64 {
-        let kv_bytes = 2 * self.shape.n_layers * ctx * self.shape.d_kv() * 2;
-        self.sim_decode_proj_us + LoadMethod::Dma.transfer_us(&self.soc.npu, kv_bytes, 1)
+        self.sim_decode_proj_us + self.kv_transfer_us(ctx)
+    }
+
+    /// Simulated on-device time for one *batched* decode step over requests
+    /// at context lengths `ctxs`. One pass over the quantized weights
+    /// serves the whole batch (each extra request adds only the
+    /// [`DECODE_BATCH_MARGINAL`] vector-path fraction); per-request KV
+    /// attention traffic is not shared. For a single request this equals
+    /// [`Engine::sim_decode_us`] exactly.
+    pub fn sim_decode_batch_us(&self, ctxs: &[usize]) -> f64 {
+        if ctxs.is_empty() {
+            return 0.0;
+        }
+        let extra = DECODE_BATCH_MARGINAL * (ctxs.len() as f64 - 1.0);
+        let proj = self.sim_decode_proj_us * (1.0 + extra);
+        let kv: f64 = ctxs.iter().map(|&c| self.kv_transfer_us(c)).sum();
+        proj + kv
     }
 
     /// Simulated on-device time for one prefill chunk ending at `ctx`.
@@ -152,12 +185,18 @@ impl Engine {
 
     // ---- step-level API (driven by the multi-request serving loop) ----
 
-    /// Bind a request: acquire (and clear) a KV-cache slot for `id`.
+    /// Admit a request: acquire (and clear) a KV-cache slot for `id`.
     pub fn begin_request(&mut self, id: u64) -> Result<()> {
         self.backend.begin_request(id)
     }
 
-    /// Unbind a request and release its KV-cache slot.
+    /// Re-attach a preempted request's KV slot, contents intact, so its
+    /// prefill resumes where it stopped. Errors when `id` holds no slot.
+    pub fn resume_request(&mut self, id: u64) -> Result<()> {
+        self.backend.resume_request(id)
+    }
+
+    /// Release a finished request's KV-cache slot.
     pub fn end_request(&mut self, id: u64) {
         self.backend.end_request(id)
     }
@@ -167,17 +206,27 @@ impl Engine {
         self.backend.kv_slots_in_use()
     }
 
-    /// Run one prefill slice `[start, start + slice.len())` of the bound
-    /// request. Exactly-`chunk`-sized slices go through the matrix path;
-    /// the ragged tail is teacher-forced through the decode path (same
+    /// Total KV-cache slots the backend can bind simultaneously.
+    pub fn kv_slot_capacity(&self) -> usize {
+        self.backend.kv_slot_capacity()
+    }
+
+    /// Run one prefill slice `[start, start + slice.len())` of request
+    /// `id`. Exactly-`chunk`-sized slices go through the matrix path; the
+    /// ragged tail is teacher-forced through the decode path (same
     /// numerics, per-token cost). Returns the logits at the last position
     /// and the simulated on-device µs.
-    pub fn prefill_slice(&mut self, slice: &[usize], start: usize) -> Result<(Vec<f32>, f64)> {
+    pub fn prefill_slice(
+        &mut self,
+        id: u64,
+        slice: &[usize],
+        start: usize,
+    ) -> Result<(Vec<f32>, f64)> {
         anyhow::ensure!(!slice.is_empty(), "empty prefill slice");
         anyhow::ensure!(start + slice.len() <= self.shape.seq, "prefill past max_seq");
         if slice.len() == self.shape.chunk && self.backend.has_prefill() {
             let toks: Vec<i32> = slice.iter().map(|&t| t as i32).collect();
-            let logits = self.backend.prefill_chunk(&toks, start as i32)?;
+            let logits = self.backend.prefill_chunk(id, &toks, start as i32)?;
             let us = self.sim_prefill_chunk_us(start + slice.len());
             return Ok((logits, us));
         }
@@ -185,20 +234,46 @@ impl Engine {
         let mut logits = Vec::new();
         let mut pos = start;
         for &t in slice {
-            logits = self.backend.decode_step(t as i32, pos as i32)?;
+            logits = self.backend.decode_step(id, t as i32, pos as i32)?;
             us += self.sim_decode_us(pos + 1);
             pos += 1;
         }
         Ok((logits, us))
     }
 
-    /// Feed one generated token at `pos`; returns the next-token logits and
-    /// the simulated on-device µs for the step.
-    pub fn decode_token(&mut self, token: usize, pos: usize) -> Result<(Vec<f32>, f64)> {
+    /// Feed one generated token of request `id` at `pos`; returns the
+    /// next-token logits and the simulated on-device µs for the step.
+    pub fn decode_token(&mut self, id: u64, token: usize, pos: usize) -> Result<(Vec<f32>, f64)> {
         anyhow::ensure!(pos < self.shape.seq, "decode past max_seq");
-        let logits = self.backend.decode_step(token as i32, pos as i32)?;
+        let logits = self.backend.decode_step(id, token as i32, pos as i32)?;
         let us = self.sim_decode_us(pos + 1);
         Ok((logits, us))
+    }
+
+    /// Run one decode step for every `(id, token, pos)` in the batch — one
+    /// forward per request against its own KV slot. Returns per-request
+    /// logits (batch order) and per-request simulated µs: the
+    /// shared-weight-pass batch cost ([`Engine::sim_decode_batch_us`])
+    /// attributed proportionally to each request's solo cost, so the
+    /// attributions sum exactly to the batch total.
+    pub fn decode_batch(
+        &mut self,
+        steps: &[(u64, usize, usize)],
+    ) -> Result<(Vec<Vec<f32>>, Vec<f64>)> {
+        anyhow::ensure!(!steps.is_empty(), "empty decode batch");
+        let mut raw: Vec<DecodeStep> = Vec::with_capacity(steps.len());
+        for &(id, token, pos) in steps {
+            anyhow::ensure!(pos < self.shape.seq, "decode past max_seq for request {id}");
+            raw.push((id, token as i32, pos as i32));
+        }
+        let logits = self.backend.decode_batch(&raw)?;
+        let solo: Vec<f64> =
+            steps.iter().map(|&(_, _, pos)| self.sim_decode_us(pos + 1)).collect();
+        let ctxs: Vec<usize> = steps.iter().map(|&(_, _, pos)| pos + 1).collect();
+        let total = self.sim_decode_batch_us(&ctxs);
+        let solo_sum: f64 = solo.iter().sum();
+        let per: Vec<f64> = solo.iter().map(|s| total * s / solo_sum).collect();
+        Ok((logits, per))
     }
 
     /// Serve one request end to end (single-shot path; the serving loop in
@@ -227,7 +302,7 @@ impl Engine {
         while pos < prompt_tokens.len() {
             let rem = prompt_tokens.len() - pos;
             let len = if chunk == 0 { rem } else { chunk.min(rem) };
-            let (l, us) = self.prefill_slice(&prompt_tokens[pos..pos + len], pos)?;
+            let (l, us) = self.prefill_slice(GENERATE_REQ_ID, &prompt_tokens[pos..pos + len], pos)?;
             logits = l;
             sim_prefill_us += us;
             pos += len;
@@ -253,7 +328,7 @@ impl Engine {
             if i + 1 == max_new {
                 break;
             }
-            let (l, us) = self.decode_token(next, pos)?;
+            let (l, us) = self.decode_token(GENERATE_REQ_ID, next, pos)?;
             logits = l;
             sim_decode_us += us;
             pos += 1;
@@ -364,7 +439,7 @@ mod tests {
         let mut pos = 0usize;
         while pos < toks.len() {
             let len = 16usize.min(toks.len() - pos);
-            let (l, us) = eng.prefill_slice(&toks[pos..pos + len], pos).expect("slice");
+            let (l, us) = eng.prefill_slice(1, &toks[pos..pos + len], pos).expect("slice");
             assert!(us > 0.0);
             a = l;
             pos += len;
@@ -374,10 +449,41 @@ mod tests {
         eng.begin_request(2).expect("begin");
         let mut b = Vec::new();
         for (p, &t) in toks.iter().enumerate() {
-            let (l, _) = eng.decode_token(t, p).expect("step");
+            let (l, _) = eng.decode_token(2, t, p).expect("step");
             b = l;
         }
         eng.end_request(2);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn decode_batch_matches_singles_and_shares_the_weight_pass() {
+        // Batched decode must be numerically identical to per-request
+        // single steps, cost less simulated time than the solo sum (one
+        // weight pass amortized), and attribute exactly the batch total.
+        let mut batched = engine(13);
+        let mut solo = engine(13);
+        for id in 1..=2u64 {
+            batched.begin_request(id).expect("begin");
+            solo.begin_request(id).expect("begin");
+            let t = 64 + id as usize;
+            batched.decode_token(id, t, 0).expect("ctx");
+            solo.decode_token(id, t, 0).expect("ctx");
+        }
+        let steps = [(1u64, 97usize, 1usize), (2u64, 98, 1)];
+        let (logits, per_us) = batched.decode_batch(&steps).expect("batch");
+        let mut solo_sum = 0.0;
+        for (i, &(id, tok, pos)) in steps.iter().enumerate() {
+            let (l, us) = solo.decode_token(id, tok, pos).expect("single");
+            assert_eq!(logits[i], l, "request {id}");
+            solo_sum += us;
+        }
+        let total: f64 = per_us.iter().sum();
+        assert!(total < solo_sum, "batch {total} must beat solo sum {solo_sum}");
+        let want = batched.sim_decode_batch_us(&[2, 2]);
+        assert!((total - want).abs() < 1e-9, "attribution must sum to the batch cost");
+        // A singleton batch prices exactly like a solo step.
+        let one = batched.sim_decode_batch_us(&[5]);
+        assert!((one - batched.sim_decode_us(5)).abs() < 1e-12);
     }
 }

@@ -111,8 +111,13 @@ pub struct RequestCompletion {
     pub sim_prefill_us: f64,
     pub sim_decode_us: f64,
     pub energy_j: f64,
-    /// Prefill restarts caused by priority preemption.
-    pub restarts: usize,
+    /// Times this request's prefill was preempted (each time it later
+    /// resumed in place — preemption never restarts work).
+    pub preempted: usize,
+    /// Prompt tokens actually processed by prefill slices over the
+    /// request's lifetime. Equal to `prompt_tokens` when no work was
+    /// redone — the resumable-preemption invariant.
+    pub prefilled_tokens: usize,
     pub text: String,
 }
 
@@ -127,6 +132,12 @@ pub struct FleetMetrics {
     pub wall_s: f64,
     /// Scheduler preemptions over the run.
     pub preemptions: usize,
+    /// Preempted prefills later resumed with their progress intact.
+    pub resumed: usize,
+    /// Decode batches executed.
+    pub decode_batches: usize,
+    /// Total per-request decode steps across all batches.
+    pub decode_batched_steps: usize,
 }
 
 impl FleetMetrics {
@@ -183,10 +194,21 @@ impl FleetMetrics {
         self.total_energy_j() / tokens.max(1) as f64
     }
 
+    /// Mean decode-batch occupancy: requests advanced per decode batch
+    /// (1.0 = unbatched; up to `max_batch` when the vector path stays
+    /// saturated). 0.0 when the run had no decode batches.
+    pub fn decode_batch_occupancy(&self) -> f64 {
+        if self.decode_batches == 0 {
+            return 0.0;
+        }
+        self.decode_batched_steps as f64 / self.decode_batches as f64
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests        : {} completed, {} preemption(s)\n\
+            "requests        : {} completed, {} preemption(s), {} resumed\n\
              tokens          : {} prompt + {} generated\n\
+             decode batching : {} batches, {:.2} mean occupancy\n\
              sim makespan    : {:.2} ms ({:.1} tok/s sustained, {:.1} decode tok/s)\n\
              TTFT            : p50 {:.3} ms, p99 {:.3} ms\n\
              queue wait      : p50 {:.3} ms, p99 {:.3} ms\n\
@@ -194,8 +216,11 @@ impl FleetMetrics {
              host wall-clock : {:.2} s",
             self.completions.len(),
             self.preemptions,
+            self.resumed,
             self.prompt_tokens(),
             self.generated_tokens(),
+            self.decode_batches,
+            self.decode_batch_occupancy(),
             self.makespan_us / 1e3,
             self.throughput_tps(),
             self.decode_throughput_tps(),
@@ -262,7 +287,8 @@ mod tests {
             sim_prefill_us: 500.0,
             sim_decode_us: 1_000.0,
             energy_j: 0.015,
-            restarts: 0,
+            preempted: 0,
+            prefilled_tokens: 10,
             text: String::new(),
         }
     }
@@ -274,6 +300,9 @@ mod tests {
             makespan_us: 30_000.0,
             wall_s: 0.5,
             preemptions: 1,
+            resumed: 1,
+            decode_batches: 4,
+            decode_batched_steps: 10,
         };
         assert_eq!(fleet.prompt_tokens(), 20);
         assert_eq!(fleet.generated_tokens(), 10);
@@ -282,8 +311,25 @@ mod tests {
         assert!((fleet.ttft_p50_ms() - 1.0).abs() < 1e-9);
         assert!((fleet.ttft_p99_ms() - 3.0).abs() < 1e-9);
         assert!((fleet.total_energy_j() - 0.03).abs() < 1e-12);
+        // 10 batched steps over 4 batches => 2.5 mean occupancy.
+        assert!((fleet.decode_batch_occupancy() - 2.5).abs() < 1e-12);
         let r = fleet.report();
         assert!(r.contains("2 completed"));
         assert!(r.contains("1 preemption"));
+        assert!(r.contains("2.50 mean occupancy"));
+    }
+
+    #[test]
+    fn occupancy_of_an_empty_run_is_zero() {
+        let fleet = FleetMetrics {
+            completions: vec![],
+            makespan_us: 0.0,
+            wall_s: 0.0,
+            preemptions: 0,
+            resumed: 0,
+            decode_batches: 0,
+            decode_batched_steps: 0,
+        };
+        assert_eq!(fleet.decode_batch_occupancy(), 0.0);
     }
 }

@@ -2,8 +2,9 @@
 //!
 //! - [`engine`] — the serving engine: chunked prefill (matrix path) +
 //!   LUT decoding (vector path), one weight copy, pluggable backend.
-//! - [`scheduler`] — priority admission queue with chunked-prefill
-//!   preemption (never mid-decode).
+//! - [`scheduler`] — priority admission queue with batched decode
+//!   (`DecodeBatch`), resumable chunked-prefill preemption (explicit
+//!   `Preempt`, never mid-decode) and KV-slot accounting.
 //! - [`server`] — the multi-request serving loop: drives the scheduler
 //!   against the engine's step API under a simulated on-device clock.
 //! - [`graph`] — the §5 graph-optimization pass (precompute dedup).

@@ -1,14 +1,31 @@
-//! Request scheduler: FIFO admission with chunked prefill interleaved
-//! against decode steps — the on-device serving policy the coordinator
-//! applies when several requests share the NPU (vLLM-router-style, scaled
-//! to the paper's single-batch-decode device scenario).
+//! Request scheduler: priority admission with chunked prefill interleaved
+//! against *batched* decode steps — the on-device serving policy the
+//! coordinator applies when several requests share the NPU.
 //!
-//! Policy: at most one request holds the KV cache at a time (batch 1 on
-//! device, §2.1); within a request, prefill runs in `chunk`-token slices so
-//! a long prompt cannot monopolize the NPU — between slices the scheduler
-//! may preempt in favor of a *higher-priority* queued request (e.g. a short
-//! interactive prompt behind a long document). Decode steps are never
-//! preempted (token latency SLO).
+//! Policy (continuous batching, scaled to the paper's device scenario):
+//!
+//! - **Prefill** runs one request at a time through the matrix path, in
+//!   `chunk`-token slices, so a long prompt cannot monopolize the NPU.
+//! - **Decode** runs up to `max_batch` requests simultaneously: every bound
+//!   decode-phase request advances one token per [`WorkItem::DecodeBatch`]
+//!   through the LUT vector path. When both phases have work the scheduler
+//!   alternates one prefill slice with one decode batch.
+//! - **Preemption** is *resumable*: between prefill slices a strictly
+//!   higher-priority queued request may preempt the active prefill — the
+//!   scheduler emits an explicit [`WorkItem::Preempt`], the preempted
+//!   request keeps its KV slot and its `done` counter, and its prefill later
+//!   resumes from where it stopped (never from zero). Because both the
+//!   preempted and the preempting request need a KV slot, preemption only
+//!   fires when a spare slot exists — with `kv_slots == 1` the scheduler
+//!   never preempts. Decode steps are never preempted (token latency SLO).
+//!
+//! The scheduler owns KV-slot *accounting* (the engine's [`KvSlotPool`]
+//! owns the memory): a request occupies a slot from its first prefill slice
+//! until its [`WorkItem::Finish`] is emitted, across preemptions. Admission
+//! is gated on a free slot, so [`Scheduler::slots_held`] always matches the
+//! engine pool's `in_use` — the serving loop cross-checks this.
+//!
+//! [`KvSlotPool`]: crate::model::kv_cache::KvSlotPool
 
 use std::collections::VecDeque;
 
@@ -22,46 +39,85 @@ pub struct Request {
     pub priority: u8,
 }
 
-/// Scheduler state of the active request.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum PhaseState {
-    Prefilling { done: usize },
-    Decoding { generated: usize },
-    Finished,
-}
-
 /// One unit of NPU work the scheduler emits.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum WorkItem {
-    /// Run one prefill slice `[start, start+len)` of request `id`.
+    /// Run one prefill slice `[start, start+len)` of request `id`. A
+    /// resumed request continues at its old `start` — the serving loop must
+    /// never see a position reprocessed.
     PrefillChunk { id: u64, start: usize, len: usize },
-    /// Run one decode step of request `id` at position `pos`.
-    DecodeStep { id: u64, pos: usize },
-    /// Request finished; KV cache can be released.
+    /// Run one decode step for every request in `ids` (at most `max_batch`,
+    /// all in decode phase, each against its own KV slot).
+    DecodeBatch { ids: Vec<u64> },
+    /// The active prefill of `id` was preempted by a higher-priority
+    /// request. Its KV slot and prefill progress stay alive; the serving
+    /// loop must keep the slot bound until `Finish { id }`.
+    Preempt { id: u64 },
+    /// Request finished; its KV slot can be released.
     Finish { id: u64 },
 }
 
+/// A waiting request plus the prefill progress it keeps across preemption.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Queued {
+    req: Request,
+    /// Prompt tokens already prefilled (0 = never started, no slot held;
+    /// > 0 = preempted, KV slot still owned).
+    done: usize,
+}
+
 /// The scheduler.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Scheduler {
-    queue: VecDeque<Request>,
-    active: Option<(Request, PhaseState)>,
+    queue: VecDeque<Queued>,
+    /// The request currently on the matrix path (at most one prefill).
+    prefilling: Option<(Request, usize)>,
+    /// Prefill-complete requests waiting for room in the decode batch
+    /// (slot held).
+    ready: VecDeque<Request>,
+    /// Decode-phase requests bound to the vector path: (request, generated).
+    decoding: Vec<(Request, usize)>,
+    /// Requests whose `Finish` item is pending emission (slot still held).
+    finishing: VecDeque<u64>,
     chunk: usize,
+    max_batch: usize,
+    kv_slots: usize,
+    /// Alternation flag: emit a prefill slice next when both phases have
+    /// work.
+    prefer_prefill: bool,
     /// Completed request ids in finish order.
     pub finished: Vec<u64>,
-    /// Prefill preemptions performed so far.
+    /// Prefill preemptions performed so far (each emitted a `Preempt`).
     pub preemptions: usize,
+    /// Preempted prefills resumed with their progress intact.
+    pub resumed: usize,
+    /// Decode batches emitted.
+    pub decode_batches: usize,
+    /// Total per-request decode steps across all batches (occupancy
+    /// numerator).
+    pub decode_batched_steps: usize,
 }
 
 impl Scheduler {
-    pub fn new(chunk: usize) -> Self {
-        assert!(chunk > 0);
+    pub fn new(chunk: usize, max_batch: usize, kv_slots: usize) -> Self {
+        assert!(chunk > 0, "prefill chunk must be positive");
+        assert!(max_batch > 0, "decode batch must hold at least one request");
+        assert!(kv_slots > 0, "need at least one KV slot");
         Self {
             queue: VecDeque::new(),
-            active: None,
+            prefilling: None,
+            ready: VecDeque::new(),
+            decoding: Vec::new(),
+            finishing: VecDeque::new(),
             chunk,
+            max_batch,
+            kv_slots,
+            prefer_prefill: true,
             finished: Vec::new(),
             preemptions: 0,
+            resumed: 0,
+            decode_batches: 0,
+            decode_batched_steps: 0,
         }
     }
 
@@ -69,18 +125,24 @@ impl Scheduler {
         assert!(r.prompt_tokens > 0, "empty prompt");
         // Insert before the first strictly-lower-priority entry (stable
         // within a class).
-        let idx =
-            self.queue.iter().position(|q| q.priority > r.priority).unwrap_or(self.queue.len());
-        self.queue.insert(idx, r);
+        let idx = self
+            .queue
+            .iter()
+            .position(|q| q.req.priority > r.priority)
+            .unwrap_or(self.queue.len());
+        self.queue.insert(idx, Queued { req: r, done: 0 });
     }
 
     /// Re-queue a preempted request at the *front* of its priority class:
-    /// it arrived before its same-priority peers and has already burned
-    /// prefill work, so it must not fall behind them.
-    fn resubmit_front(&mut self, r: Request) {
-        let idx =
-            self.queue.iter().position(|q| q.priority >= r.priority).unwrap_or(self.queue.len());
-        self.queue.insert(idx, r);
+    /// it arrived before its same-priority peers and already holds a KV
+    /// slot with real prefill progress, so it must not fall behind them.
+    fn requeue_front(&mut self, entry: Queued) {
+        let idx = self
+            .queue
+            .iter()
+            .position(|q| q.req.priority >= entry.req.priority)
+            .unwrap_or(self.queue.len());
+        self.queue.insert(idx, entry);
     }
 
     pub fn queue_len(&self) -> usize {
@@ -88,83 +150,167 @@ impl Scheduler {
     }
 
     pub fn has_work(&self) -> bool {
-        self.active.is_some() || !self.queue.is_empty()
+        !self.queue.is_empty()
+            || self.prefilling.is_some()
+            || !self.ready.is_empty()
+            || !self.decoding.is_empty()
+            || !self.finishing.is_empty()
     }
 
-    fn admit(&mut self) {
-        if self.active.is_none() {
-            if let Some(r) = self.queue.pop_front() {
-                self.active = Some((r, PhaseState::Prefilling { done: 0 }));
-            }
+    /// KV slots the schedule currently has bound: the active prefill, every
+    /// ready/decoding/finishing request, and preempted requests keeping
+    /// their slot in the queue. Matches the engine pool's `in_use` after
+    /// every emitted work item is applied.
+    pub fn slots_held(&self) -> usize {
+        usize::from(self.prefilling.is_some())
+            + self.ready.len()
+            + self.decoding.len()
+            + self.finishing.len()
+            + self.queue.iter().filter(|q| q.done > 0).count()
+    }
+
+    /// Whether the queue front could start (or resume) a prefill right now.
+    fn can_admit(&self) -> bool {
+        match self.queue.front() {
+            Some(front) => front.done > 0 || self.slots_held() < self.kv_slots,
+            None => false,
         }
     }
 
-    /// Whether a queued request should preempt the active one at a prefill
-    /// slice boundary: strictly higher priority only.
+    /// Whether a queued request should preempt the active prefill at a
+    /// slice boundary: strictly higher priority, the active prefill still
+    /// early (resuming late prefill wastes the near-finished matrix-path
+    /// work), and a KV slot available for the preemptor.
     fn should_preempt(&self) -> bool {
-        match (&self.active, self.queue.front()) {
-            (Some((active, PhaseState::Prefilling { done })), Some(front)) => {
-                // Restarting prefill is wasteful; only preempt early.
-                front.priority < active.priority && *done < active.prompt_tokens / 2
+        match (&self.prefilling, self.queue.front()) {
+            (Some((active, done)), Some(front)) => {
+                front.req.priority < active.priority
+                    && *done < active.prompt_tokens / 2
+                    && (front.done > 0 || self.slots_held() < self.kv_slots)
             }
             _ => false,
         }
     }
 
-    /// Finish the active request early — e.g. the serving loop's sampler hit
-    /// a stop byte mid-decode. The next [`Scheduler::next`] call emits
-    /// `Finish` and frees the NPU for the queue. Returns false (no-op) when
-    /// `id` is not the active request.
-    pub fn complete_active(&mut self, id: u64) -> bool {
-        match self.active.as_mut() {
-            Some((req, state)) if req.id == id => {
-                *state = PhaseState::Finished;
-                true
-            }
-            _ => false,
+    /// Move prefill-complete requests into the decode batch while it has
+    /// room, highest priority first (FIFO within a class).
+    fn promote_ready(&mut self) {
+        while !self.ready.is_empty() && self.decoding.len() < self.max_batch {
+            let best = self
+                .ready
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, r)| (r.priority, *i))
+                .map(|(i, _)| i)
+                .expect("ready is non-empty");
+            let req = self.ready.remove(best).expect("index in range");
+            self.decoding.push((req, 0));
         }
+    }
+
+    /// Finish a request early — e.g. the serving loop's sampler hit a stop
+    /// byte mid-decode. The request leaves its phase immediately and a
+    /// [`WorkItem::Finish`] is emitted on the next [`Scheduler::next`]
+    /// call. Returns false (no-op) when `id` is not in an active phase.
+    pub fn complete(&mut self, id: u64) -> bool {
+        if let Some(i) = self.decoding.iter().position(|(r, _)| r.id == id) {
+            self.decoding.remove(i);
+            self.finishing.push_back(id);
+            return true;
+        }
+        if let Some((r, _)) = &self.prefilling {
+            if r.id == id {
+                self.prefilling = None;
+                self.finishing.push_back(id);
+                return true;
+            }
+        }
+        if let Some(i) = self.ready.iter().position(|r| r.id == id) {
+            self.ready.remove(i);
+            self.finishing.push_back(id);
+            return true;
+        }
+        false
+    }
+
+    fn emit_prefill(&mut self) -> Option<WorkItem> {
+        if self.prefilling.is_none() {
+            let q = self.queue.pop_front()?;
+            if q.done > 0 {
+                self.resumed += 1;
+            }
+            self.prefilling = Some((q.req, q.done));
+        }
+        let (req, done) = self.prefilling.as_mut().expect("just admitted");
+        let len = self.chunk.min(req.prompt_tokens - *done);
+        let start = *done;
+        *done += len;
+        let id = req.id;
+        let complete = *done >= req.prompt_tokens;
+        if complete {
+            let (req, _) = self.prefilling.take().expect("still active");
+            if req.max_new_tokens == 0 {
+                self.finishing.push_back(req.id);
+            } else if self.decoding.len() < self.max_batch {
+                self.decoding.push((req, 0));
+            } else {
+                self.ready.push_back(req);
+            }
+        }
+        Some(WorkItem::PrefillChunk { id, start, len })
+    }
+
+    fn emit_decode_batch(&mut self) -> WorkItem {
+        let ids: Vec<u64> = self.decoding.iter().map(|(r, _)| r.id).collect();
+        self.decode_batches += 1;
+        self.decode_batched_steps += ids.len();
+        // Advance every batched request; budget-exhausted ones drain to
+        // `finishing` (their sampled token needs no further forward).
+        let mut i = 0;
+        while i < self.decoding.len() {
+            self.decoding[i].1 += 1;
+            if self.decoding[i].1 >= self.decoding[i].0.max_new_tokens {
+                let (req, _) = self.decoding.remove(i);
+                self.finishing.push_back(req.id);
+            } else {
+                i += 1;
+            }
+        }
+        WorkItem::DecodeBatch { ids }
     }
 
     /// Produce the next unit of work (None when idle).
     pub fn next(&mut self) -> Option<WorkItem> {
-        self.admit();
-        if self.should_preempt() {
-            // Swap the active request back into the queue (front of its
-            // class); its prefill restarts later (cache released).
-            let (active, _) = self.active.take().unwrap();
-            self.resubmit_front(active);
-            self.preemptions += 1;
-            self.admit();
+        // Pending finishes drain first: they release KV slots.
+        if let Some(id) = self.finishing.pop_front() {
+            self.finished.push(id);
+            return Some(WorkItem::Finish { id });
         }
-        let (req, state) = self.active.as_mut()?;
-        let item = match state {
-            PhaseState::Prefilling { done } => {
-                let len = self.chunk.min(req.prompt_tokens - *done);
-                let start = *done;
-                *done += len;
-                if *done >= req.prompt_tokens {
-                    let w = WorkItem::PrefillChunk { id: req.id, start, len };
-                    *state = PhaseState::Decoding { generated: 0 };
-                    return Some(w);
-                }
-                WorkItem::PrefillChunk { id: req.id, start, len }
-            }
-            PhaseState::Decoding { generated } => {
-                let pos = req.prompt_tokens + *generated;
-                *generated += 1;
-                if *generated >= req.max_new_tokens {
-                    *state = PhaseState::Finished;
-                }
-                WorkItem::DecodeStep { id: req.id, pos }
-            }
-            PhaseState::Finished => {
-                let id = req.id;
-                self.finished.push(id);
-                self.active = None;
-                return Some(WorkItem::Finish { id });
+        self.promote_ready();
+        if self.should_preempt() {
+            let (req, done) = self.prefilling.take().expect("preempt needs an active prefill");
+            let id = req.id;
+            self.preemptions += 1;
+            self.requeue_front(Queued { req, done });
+            return Some(WorkItem::Preempt { id });
+        }
+        let can_prefill = self.prefilling.is_some() || self.can_admit();
+        let can_decode = !self.decoding.is_empty();
+        let pick_prefill = match (can_prefill, can_decode) {
+            (false, false) => return None,
+            (true, false) => true,
+            (false, true) => false,
+            (true, true) => {
+                let p = self.prefer_prefill;
+                self.prefer_prefill = !p;
+                p
             }
         };
-        Some(item)
+        if pick_prefill {
+            self.emit_prefill()
+        } else {
+            Some(self.emit_decode_batch())
+        }
     }
 
     /// Drain the full schedule (for tests/simulation).
@@ -188,12 +334,22 @@ mod tests {
         Request { id, prompt_tokens: prompt, max_new_tokens: new, priority: prio }
     }
 
+    fn finish_order(items: &[WorkItem]) -> Vec<u64> {
+        items
+            .iter()
+            .filter_map(|w| match w {
+                WorkItem::Finish { id } => Some(*id),
+                _ => None,
+            })
+            .collect()
+    }
+
     #[test]
     fn single_request_schedule_shape() {
-        let mut s = Scheduler::new(128);
+        let mut s = Scheduler::new(128, 1, 2);
         s.submit(req(1, 300, 3, 1));
         let items = s.drain();
-        // 3 prefill chunks (128+128+44), 3 decode steps, 1 finish.
+        // 3 prefill chunks (128+128+44), 3 decode batches, 1 finish.
         assert_eq!(
             items[..3],
             [
@@ -202,72 +358,131 @@ mod tests {
                 WorkItem::PrefillChunk { id: 1, start: 256, len: 44 },
             ]
         );
-        assert_eq!(items[3], WorkItem::DecodeStep { id: 1, pos: 300 });
-        assert_eq!(items[5], WorkItem::DecodeStep { id: 1, pos: 302 });
+        assert_eq!(items[3], WorkItem::DecodeBatch { ids: vec![1] });
+        assert_eq!(items[5], WorkItem::DecodeBatch { ids: vec![1] });
         assert_eq!(items[6], WorkItem::Finish { id: 1 });
         assert_eq!(items.len(), 7);
         assert_eq!(s.finished, vec![1]);
+        assert_eq!(s.decode_batches, 3);
+        assert_eq!(s.decode_batched_steps, 3);
+        assert_eq!(s.slots_held(), 0);
     }
 
     #[test]
     fn fifo_within_priority_class() {
-        let mut s = Scheduler::new(64);
+        let mut s = Scheduler::new(64, 1, 2);
         s.submit(req(1, 64, 1, 1));
         s.submit(req(2, 64, 1, 1));
         let items = s.drain();
-        let order: Vec<u64> = items
-            .iter()
-            .filter_map(|w| match w {
-                WorkItem::Finish { id } => Some(*id),
-                _ => None,
-            })
-            .collect();
-        assert_eq!(order, vec![1, 2]);
+        assert_eq!(finish_order(&items), vec![1, 2]);
     }
 
     #[test]
-    fn high_priority_preempts_early_prefill() {
-        let mut s = Scheduler::new(64);
+    fn preemption_emits_explicit_event_and_resumes_in_place() {
+        let mut s = Scheduler::new(64, 1, 2);
         s.submit(req(1, 640, 1, 5)); // long, low priority
         // First slice of the long prompt goes through.
         assert_eq!(s.next(), Some(WorkItem::PrefillChunk { id: 1, start: 0, len: 64 }));
-        // An urgent short request arrives.
+        // An urgent short request arrives: explicit preemption event, then
+        // the short request runs to completion.
         s.submit(req(2, 64, 1, 0));
-        // Preemption at the slice boundary: request 2 runs to completion.
+        assert_eq!(s.next(), Some(WorkItem::Preempt { id: 1 }));
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.slots_held(), 1, "preempted request keeps its slot");
         assert_eq!(s.next(), Some(WorkItem::PrefillChunk { id: 2, start: 0, len: 64 }));
-        assert_eq!(s.next(), Some(WorkItem::DecodeStep { id: 2, pos: 64 }));
-        assert_eq!(s.next(), Some(WorkItem::Finish { id: 2 }));
-        // The long request restarts its prefill from 0 (cache released).
+        // The long request RESUMES at 64 — not from zero — interleaved with
+        // the short request's decode.
+        let items = s.drain();
+        let resume = items
+            .iter()
+            .find_map(|w| match w {
+                WorkItem::PrefillChunk { id: 1, start, .. } => Some(*start),
+                _ => None,
+            })
+            .expect("request 1 must resume");
+        assert_eq!(resume, 64, "prefill must resume where it stopped");
+        assert_eq!(s.resumed, 1);
+        assert_eq!(finish_order(&items), vec![2, 1]);
+    }
+
+    #[test]
+    fn no_preemption_without_a_spare_kv_slot() {
+        // Resumable preemption needs a slot for the preemptor while the
+        // preempted request keeps its own; with one slot it never fires.
+        let mut s = Scheduler::new(64, 1, 1);
+        s.submit(req(1, 640, 1, 5));
         assert_eq!(s.next(), Some(WorkItem::PrefillChunk { id: 1, start: 0, len: 64 }));
+        s.submit(req(2, 64, 1, 0));
+        let items = s.drain();
+        assert!(
+            !items.iter().any(|w| matches!(w, WorkItem::Preempt { .. })),
+            "one slot must disable preemption"
+        );
+        assert_eq!(s.preemptions, 0);
+        assert_eq!(finish_order(&items), vec![1, 2]);
     }
 
     #[test]
     fn decode_is_never_preempted() {
-        let mut s = Scheduler::new(64);
+        let mut s = Scheduler::new(64, 1, 2);
         s.submit(req(1, 64, 4, 5));
         assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
-        assert!(matches!(s.next(), Some(WorkItem::DecodeStep { id: 1, .. })));
-        // Urgent arrival mid-decode does not preempt.
+        assert_eq!(s.next(), Some(WorkItem::DecodeBatch { ids: vec![1] }));
+        // Urgent arrival mid-decode: request 1 keeps decoding (interleaved
+        // with request 2's prefill) and is never preempted.
         s.submit(req(2, 64, 1, 0));
-        for _ in 0..3 {
-            assert!(matches!(s.next(), Some(WorkItem::DecodeStep { id: 1, .. })));
-        }
-        assert_eq!(s.next(), Some(WorkItem::Finish { id: 1 }));
-        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 2, .. })));
+        let items = s.drain();
+        assert!(!items.iter().any(|w| matches!(w, WorkItem::Preempt { .. })));
+        let batches = items.iter().filter(|w| matches!(w, WorkItem::DecodeBatch { .. })).count();
+        assert!(batches >= 3, "request 1 must keep decoding");
     }
 
     #[test]
     fn late_prefill_is_not_preempted() {
-        let mut s = Scheduler::new(64);
+        let mut s = Scheduler::new(64, 1, 2);
         s.submit(req(1, 256, 1, 5));
         // Run 3 of 4 slices (past the half-way no-preempt threshold).
         for _ in 0..3 {
             assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
         }
         s.submit(req(2, 64, 1, 0));
-        // Request 1 finishes its prefill + decode before 2 starts.
+        // Request 1 finishes its prefill before request 2 starts.
         assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, start: 192, .. })));
-        assert!(matches!(s.next(), Some(WorkItem::DecodeStep { id: 1, .. })));
+        assert_eq!(s.preemptions, 0);
+    }
+
+    #[test]
+    fn two_requests_share_a_decode_batch() {
+        let mut s = Scheduler::new(64, 2, 3);
+        s.submit(req(1, 64, 4, 1));
+        s.submit(req(2, 64, 4, 1));
+        let items = s.drain();
+        assert!(
+            items.contains(&WorkItem::DecodeBatch { ids: vec![1, 2] }),
+            "both requests must decode in one batch: {items:?}"
+        );
+        assert!(s.decode_batched_steps > s.decode_batches, "occupancy must exceed 1");
+        assert_eq!(finish_order(&items).len(), 2);
+    }
+
+    #[test]
+    fn decode_batch_respects_max_batch_and_slots() {
+        let mut s = Scheduler::new(16, 2, 4);
+        for id in 1..=4 {
+            s.submit(req(id, 16, 8, 1));
+        }
+        let items = s.drain();
+        for w in &items {
+            if let WorkItem::DecodeBatch { ids } = w {
+                assert!(!ids.is_empty() && ids.len() <= 2, "batch over max_batch: {ids:?}");
+                let mut sorted = ids.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), ids.len(), "duplicate id in a batch");
+            }
+        }
+        assert_eq!(finish_order(&items).len(), 4);
+        assert_eq!(s.slots_held(), 0);
     }
 
     #[test]
@@ -275,7 +490,7 @@ mod tests {
         // Property: for any (prompt, chunk) the prefill slices tile the
         // prompt exactly once, in order.
         for (prompt, chunk) in [(1usize, 128usize), (128, 128), (129, 128), (1000, 64), (77, 13)] {
-            let mut s = Scheduler::new(chunk);
+            let mut s = Scheduler::new(chunk, 2, 2);
             s.submit(req(9, prompt, 1, 1));
             let items = s.drain();
             let mut covered = 0usize;
@@ -292,65 +507,62 @@ mod tests {
     #[test]
     #[should_panic(expected = "empty prompt")]
     fn empty_prompt_rejected() {
-        Scheduler::new(64).submit(req(1, 0, 1, 1));
+        Scheduler::new(64, 1, 1).submit(req(1, 0, 1, 1));
     }
 
     #[test]
-    fn complete_active_finishes_early_mid_decode() {
-        let mut s = Scheduler::new(64);
+    fn complete_finishes_early_mid_decode() {
+        let mut s = Scheduler::new(64, 1, 2);
         s.submit(req(1, 64, 100, 1));
         assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
-        assert!(matches!(s.next(), Some(WorkItem::DecodeStep { id: 1, .. })));
+        assert!(matches!(s.next(), Some(WorkItem::DecodeBatch { .. })));
         // The serving loop saw a stop byte: cut the remaining 99 steps.
-        assert!(s.complete_active(1));
+        assert!(s.complete(1));
         assert_eq!(s.next(), Some(WorkItem::Finish { id: 1 }));
         assert_eq!(s.finished, vec![1]);
         assert!(!s.has_work());
+        assert_eq!(s.slots_held(), 0);
     }
 
     #[test]
-    fn complete_active_ignores_non_active_ids() {
-        let mut s = Scheduler::new(64);
+    fn complete_ignores_unknown_ids() {
+        let mut s = Scheduler::new(64, 1, 2);
         s.submit(req(1, 64, 2, 1));
         assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
-        assert!(!s.complete_active(99), "unknown id must be a no-op");
-        assert!(matches!(s.next(), Some(WorkItem::DecodeStep { id: 1, .. })));
+        assert!(!s.complete(99), "unknown id must be a no-op");
+        assert!(matches!(s.next(), Some(WorkItem::DecodeBatch { .. })));
     }
 
     #[test]
     fn preempted_request_resumes_ahead_of_its_class() {
         // A (prio 5) is mid-prefill with C (prio 5) queued; urgent B
-        // (prio 0) preempts A. A must restart *before* C — it arrived
-        // first and already burned prefill work.
-        let mut s = Scheduler::new(64);
+        // (prio 0) preempts A. A must resume *before* C — it arrived first
+        // and already holds prefill progress.
+        let mut s = Scheduler::new(64, 1, 2);
         s.submit(req(1, 640, 1, 5)); // A
         assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
         s.submit(req(3, 64, 1, 5)); // C, same class as A
         s.submit(req(2, 64, 1, 0)); // B, urgent
-        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 2, .. })));
-        let order: Vec<u64> = s
-            .drain()
-            .iter()
-            .filter_map(|w| match w {
-                WorkItem::Finish { id } => Some(*id),
-                _ => None,
-            })
-            .collect();
-        assert_eq!(order, vec![2, 1, 3], "A must finish before C");
+        assert_eq!(s.next(), Some(WorkItem::Preempt { id: 1 }));
+        let items = s.drain();
+        assert_eq!(finish_order(&items), vec![2, 1, 3], "A must finish before C");
     }
 
     #[test]
-    fn preemption_counter_tracks_restarts() {
-        let mut s = Scheduler::new(64);
+    fn preemption_and_resume_counters_track_events() {
+        let mut s = Scheduler::new(64, 1, 3);
         s.submit(req(1, 640, 1, 5));
         assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
         assert_eq!(s.preemptions, 0);
         s.submit(req(2, 64, 1, 0));
-        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 2, .. })));
+        assert_eq!(s.next(), Some(WorkItem::Preempt { id: 1 }));
         assert_eq!(s.preemptions, 1);
+        assert_eq!(s.resumed, 0, "not resumed yet");
         // Equal priority never preempts.
         s.submit(req(3, 64, 1, 0));
-        assert!(matches!(s.next(), Some(WorkItem::DecodeStep { id: 2, .. })));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 2, .. })));
         assert_eq!(s.preemptions, 1);
+        s.drain();
+        assert_eq!(s.resumed, 1, "request 1 resumed exactly once");
     }
 }

@@ -4,17 +4,23 @@
 //! The loop is an event simulation of the paper's device scenario scaled to
 //! fleet traffic: requests arrive on an open-loop trace, are admitted into
 //! the scheduler's priority queue, and the scheduler interleaves
-//! `chunk`-token prefill slices with decode steps — a higher-priority short
-//! prompt preempts a long document's prefill at a slice boundary (never
-//! mid-decode), exactly as the scheduler's `PhaseState` machine dictates.
-//! Every work item advances the simulated clock by the NPU model's cost for
-//! that item, so queue wait, TTFT and sustained throughput are the numbers
-//! the device would see, while the numerics run on the host backend.
+//! `chunk`-token prefill slices with *batched* decode steps
+//! ([`WorkItem::DecodeBatch`] advances up to `max_batch` requests per step,
+//! each against its own KV slot). Every work item advances the simulated
+//! clock by the NPU model's cost for that item — a decode batch is priced
+//! with the shared-weight-pass model — so queue wait, TTFT and sustained
+//! throughput are the numbers the device would see, while the numerics run
+//! on the host backend.
 //!
-//! KV-cache capacity comes from the engine's [`KvSlotPool`]: a request owns
-//! a slot from its first prefill slice until it finishes; a preempted
-//! request's slot is released immediately (its prefill restarts from zero,
-//! matching the scheduler's release-on-preempt policy).
+//! Preemption is explicit and resumable: the scheduler emits
+//! [`WorkItem::Preempt`] when a higher-priority request takes the prefill
+//! path, the preempted request's KV slot and progress survive (the engine's
+//! `resume_request` re-attaches the slot *without clearing it*), and its
+//! next [`WorkItem::PrefillChunk`] continues at the old position — no
+//! prompt token is ever processed twice. A request owns a slot from its
+//! first prefill slice until its [`WorkItem::Finish`], which is the only
+//! place the loop releases slots; the loop cross-checks the scheduler's
+//! slot accounting against the engine pool after every item.
 //!
 //! [`KvSlotPool`]: crate::model::kv_cache::KvSlotPool
 
@@ -146,13 +152,16 @@ pub struct ServeOpts {
     /// Early-finish byte: a request whose sampler produces it completes
     /// immediately (the byte is not emitted).
     pub stop_byte: Option<u8>,
+    /// Decode-phase requests advanced per [`WorkItem::DecodeBatch`]
+    /// (capped by the engine's KV-slot capacity; 1 = unbatched decode).
+    pub max_batch: usize,
     /// Print a line per completed request while running.
     pub verbose: bool,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        Self { temperature: 0.0, top_k: 40, seed: 0, stop_byte: None, verbose: false }
+        Self { temperature: 0.0, top_k: 40, seed: 0, stop_byte: None, max_batch: 1, verbose: false }
     }
 }
 
@@ -167,11 +176,17 @@ struct ReqState {
     rng: Rng,
     logits: Vec<f32>,
     out_tokens: Vec<usize>,
-    /// Prompt tokens prefilled in the current attempt.
+    /// Prompt tokens prefilled so far (survives preemption — the next
+    /// slice resumes here).
     covered: usize,
-    /// Whether a prefill attempt has started (restart detection).
-    attempted: bool,
-    restarts: usize,
+    /// Total prompt tokens processed by prefill slices; equals `covered`
+    /// because resumable preemption never redoes work.
+    prefilled_total: usize,
+    /// Times this request's prefill was preempted.
+    preempted: usize,
+    /// Set by `Preempt`, cleared when the next slice resumes — the resume
+    /// path re-attaches the KV slot instead of clearing it.
+    suspended: bool,
     first_work_us: Option<f64>,
     first_token_us: Option<f64>,
     sim_prefill_us: f64,
@@ -203,13 +218,17 @@ impl Server {
         });
 
         let seq = self.engine.max_seq();
-        let mut sched = Scheduler::new(self.engine.chunk().max(1));
+        // The decode batch cannot outgrow the KV slots backing it.
+        let max_batch = self.opts.max_batch.max(1).min(self.engine.kv_slot_capacity());
+        let mut sched = Scheduler::new(
+            self.engine.chunk().max(1),
+            max_batch,
+            self.engine.kv_slot_capacity(),
+        );
         let mut states: HashMap<u64, ReqState> = HashMap::new();
         let mut completions: Vec<RequestCompletion> = Vec::new();
         let mut next_arrival = 0usize;
         let mut clock_us = 0.0f64;
-        // Request currently bound to the engine's compute path.
-        let mut bound: Option<u64> = None;
 
         loop {
             // Admit every request that has arrived by now.
@@ -237,8 +256,9 @@ impl Server {
                             logits: Vec::new(),
                             out_tokens: Vec::new(),
                             covered: 0,
-                            attempted: false,
-                            restarts: 0,
+                            prefilled_total: 0,
+                            preempted: 0,
+                            suspended: false,
                             first_work_us: None,
                             first_token_us: None,
                             sim_prefill_us: 0.0,
@@ -269,74 +289,100 @@ impl Server {
             let item = sched.next().context("scheduler had work but yielded none")?;
             match item {
                 WorkItem::PrefillChunk { id, start, len } => {
-                    if start == 0 {
-                        // A fresh attempt: if another unfinished request was
-                        // bound, it was just preempted — its cache restarts
-                        // from zero later, so release the slot now.
-                        if let Some(prev) = bound {
-                            if prev != id && states.contains_key(&prev) {
-                                self.engine.end_request(prev);
-                            }
-                        }
-                    }
                     let st = states.get_mut(&id).context("unknown request id")?;
-                    if start == 0 {
-                        if st.attempted {
-                            st.restarts += 1;
-                        }
-                        st.attempted = true;
-                        st.covered = 0;
-                        self.engine.begin_request(id)?;
-                        bound = Some(id);
-                    }
-                    anyhow::ensure!(bound == Some(id), "prefill for an unbound request");
                     anyhow::ensure!(
                         start == st.covered,
                         "non-monotone prefill for request {id}: start {start}, covered {}",
                         st.covered
                     );
+                    if start == 0 {
+                        // First slice of the request: acquire a cleared slot.
+                        self.engine.begin_request(id)?;
+                    } else if st.suspended {
+                        // Resuming after preemption: re-attach the surviving
+                        // slot — its contents are the prefix already
+                        // prefilled, so no token is processed twice.
+                        self.engine.resume_request(id)?;
+                        st.suspended = false;
+                    }
                     if st.first_work_us.is_none() {
                         st.first_work_us = Some(clock_us);
                     }
                     let (logits, us) =
-                        self.engine.prefill_slice(&st.prompt[start..start + len], start)?;
+                        self.engine.prefill_slice(id, &st.prompt[start..start + len], start)?;
                     st.logits = logits;
                     st.covered += len;
+                    st.prefilled_total += len;
                     st.sim_prefill_us += us;
                     clock_us += us;
                 }
-                WorkItem::DecodeStep { id, pos } => {
-                    anyhow::ensure!(bound == Some(id), "decode for an unbound request");
+                WorkItem::Preempt { id } => {
+                    // Explicit preemption event: the request keeps its KV
+                    // slot and its progress; nothing is released here. The
+                    // old serving loop *inferred* preemption from "next
+                    // prefill starts at 0" and released the slot — both the
+                    // inference and the release are gone.
                     let st = states.get_mut(&id).context("unknown request id")?;
+                    anyhow::ensure!(!st.suspended, "request {id} preempted twice");
                     anyhow::ensure!(
-                        pos == st.prompt.len() + st.out_tokens.len(),
-                        "non-monotone decode for request {id}: pos {pos}, expected {}",
-                        st.prompt.len() + st.out_tokens.len()
+                        st.covered > 0 && st.covered < st.prompt.len(),
+                        "request {id} preempted outside mid-prefill (covered {})",
+                        st.covered
                     );
-                    let next = sampler::sample(
-                        &st.logits,
-                        self.opts.temperature,
-                        self.opts.top_k,
-                        &mut st.rng,
+                    st.suspended = true;
+                    st.preempted += 1;
+                }
+                WorkItem::DecodeBatch { ids } => {
+                    anyhow::ensure!(
+                        !ids.is_empty() && ids.len() <= max_batch,
+                        "decode batch of {} exceeds max_batch {max_batch}",
+                        ids.len()
                     );
-                    // Token-space comparison: vocabularies larger than 256
-                    // must not alias onto a stop byte.
-                    if self.opts.stop_byte.map(usize::from) == Some(next) {
-                        // Early finish: the stop byte is never emitted and
-                        // the scheduler cuts the remaining decode budget.
-                        sched.complete_active(id);
-                    } else {
+                    // Sample every batched request from its previous logits;
+                    // collect the forwards still owed a next-token
+                    // distribution.
+                    let mut forwards: Vec<(u64, usize, usize)> = Vec::with_capacity(ids.len());
+                    for &id in &ids {
+                        let st = states.get_mut(&id).context("unknown request id")?;
+                        anyhow::ensure!(
+                            st.covered == st.prompt.len(),
+                            "request {id} decoding before its prefill completed"
+                        );
+                        let next = sampler::sample(
+                            &st.logits,
+                            self.opts.temperature,
+                            self.opts.top_k,
+                            &mut st.rng,
+                        );
+                        // Token-space comparison: vocabularies larger than
+                        // 256 must not alias onto a stop byte.
+                        if self.opts.stop_byte.map(usize::from) == Some(next) {
+                            // Early finish: the stop byte is never emitted
+                            // and the scheduler cuts the remaining budget.
+                            sched.complete(id);
+                            continue;
+                        }
                         if st.first_token_us.is_none() {
                             // The token exists the moment it is sampled from
-                            // the previous logits; the forward below computes
-                            // the *next* token, so TTFT excludes its cost.
+                            // the previous logits; the batch forward below
+                            // computes the *next* token, so TTFT excludes
+                            // its cost.
                             st.first_token_us = Some(clock_us);
                         }
                         st.out_tokens.push(next);
                         // The last budgeted token needs no further forward:
                         // its logits would never be sampled.
                         if st.out_tokens.len() < st.max_new {
-                            let (logits, us) = self.engine.decode_token(next, pos)?;
+                            let pos = st.prompt.len() + st.out_tokens.len() - 1;
+                            forwards.push((id, next, pos));
+                        }
+                    }
+                    if !forwards.is_empty() {
+                        let (all_logits, per_us) = self.engine.decode_batch(&forwards)?;
+                        for ((&(id, _, _), logits), us) in
+                            forwards.iter().zip(all_logits).zip(per_us)
+                        {
+                            let st = states.get_mut(&id).expect("state exists");
                             st.logits = logits;
                             st.sim_decode_us += us;
                             clock_us += us;
@@ -344,10 +390,8 @@ impl Server {
                     }
                 }
                 WorkItem::Finish { id } => {
+                    // The single place a KV slot is released.
                     self.engine.end_request(id);
-                    if bound == Some(id) {
-                        bound = None;
-                    }
                     let st = states.remove(&id).context("unknown request id")?;
                     let pm = &self.engine.soc.power;
                     let total_us = st.sim_prefill_us + st.sim_decode_us;
@@ -364,25 +408,34 @@ impl Server {
                         sim_prefill_us: st.sim_prefill_us,
                         sim_decode_us: st.sim_decode_us,
                         energy_j: sim_energy_j(pm, Placement::NpuOnly, total_us / 1e6, tokens),
-                        restarts: st.restarts,
+                        preempted: st.preempted,
+                        prefilled_tokens: st.prefilled_total,
                         text: tokenizer::decode(&st.out_tokens),
                     };
                     if self.opts.verbose {
                         eprintln!(
                             "[req {:>3}] prio {} | {:>4} prompt + {:>3} gen tok | \
-                             wait {:>9.3} ms | ttft {:>9.3} ms | {} restart(s)",
+                             wait {:>9.3} ms | ttft {:>9.3} ms | preempted {}x",
                             completion.id,
                             completion.priority,
                             completion.prompt_tokens,
                             completion.generated_tokens,
                             completion.queue_wait_us / 1e3,
                             completion.ttft_us / 1e3,
-                            completion.restarts,
+                            completion.preempted,
                         );
                     }
                     completions.push(completion);
                 }
             }
+            // The scheduler's slot accounting and the engine's pool must
+            // agree after every applied work item.
+            anyhow::ensure!(
+                sched.slots_held() == self.engine.kv_slots_in_use(),
+                "KV slot accounting diverged: scheduler {} vs engine {}",
+                sched.slots_held(),
+                self.engine.kv_slots_in_use()
+            );
         }
 
         anyhow::ensure!(states.is_empty(), "{} request(s) never finished", states.len());
@@ -391,6 +444,9 @@ impl Server {
             makespan_us: clock_us,
             wall_s: wall.stop(),
             preemptions: sched.preemptions,
+            resumed: sched.resumed,
+            decode_batches: sched.decode_batches,
+            decode_batched_steps: sched.decode_batched_steps,
         })
     }
 }

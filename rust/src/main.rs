@@ -5,8 +5,9 @@
 //!            [--model tiny|small|base] [--artifacts DIR]
 //!            [--soc oneplus12|oneplus13t]
 //!   serve    [--trace synthetic] [--requests N] [--seed S] [--verbose]
-//!            [--model tiny|small|base] [--chunk C] [--kv-slots N]
-//!            [--bits 2|4] [--temp T] [--artifacts DIR] [--soc ...]
+//!            [--max-batch B] [--model tiny|small|base] [--chunk C]
+//!            [--kv-slots N] [--bits 2|4] [--temp T] [--artifacts DIR]
+//!            [--soc ...]
 //!   info     [--artifacts DIR]        print artifact manifest + sim config
 //!
 //! Without the `pjrt` feature (or without built artifacts) the engine runs
@@ -59,6 +60,11 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     args.flags.get("artifacts").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
+/// Decode-batch width for `serve` (1 = unbatched decode).
+fn max_batch_from(args: &Args) -> Result<usize> {
+    Ok(args.flags.get("max-batch").map(|s| s.parse()).transpose()?.unwrap_or(1))
+}
+
 /// Prefer the PJRT artifact engine when the feature is on and artifacts
 /// exist; otherwise run the pure-Rust reference backend.
 fn build_engine(args: &Args) -> Result<Engine> {
@@ -79,8 +85,14 @@ fn build_engine(args: &Args) -> Result<Engine> {
     };
     let chunk: usize = args.flags.get("chunk").map(|s| s.parse()).transpose()?.unwrap_or(32);
     let bits: u32 = args.flags.get("bits").map(|s| s.parse()).transpose()?.unwrap_or(4);
-    let kv_slots: usize =
-        args.flags.get("kv-slots").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    // Default KV capacity: the decode batch, plus the active prefill, plus
+    // one spare so a preempted prefill can keep its slot while resuming.
+    let kv_slots: usize = args
+        .flags
+        .get("kv-slots")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(max_batch_from(args)? + 2);
     let seed: u64 = args.flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let (model, trained) = weights::load_or_random(&artifacts_dir(args), &cfg, seed);
     if trained {
@@ -136,16 +148,20 @@ fn main() -> Result<()> {
                 TraceProfile::standard()
             };
             let trace = synthetic_trace(n, seed, &profile);
+            let max_batch = max_batch_from(&args)?;
             let opts = ServeOpts {
                 temperature: args.flags.get("temp").map(|s| s.parse()).transpose()?.unwrap_or(0.0),
                 verbose: args.flags.contains_key("verbose"),
                 seed,
+                max_batch,
                 ..Default::default()
             };
             println!(
-                "serving {n} synthetic requests (chunk {}, {} KV slots, soc {}) ...",
+                "serving {n} synthetic requests (chunk {}, {} KV slots, decode batch {}, \
+                 soc {}) ...",
                 engine.chunk(),
-                args.flags.get("kv-slots").map(|s| s.as_str()).unwrap_or("2"),
+                engine.kv_slot_capacity(),
+                max_batch,
                 engine.soc.name
             );
             let mut server = Server::new(engine, opts);
@@ -179,8 +195,10 @@ fn main() -> Result<()> {
                  usage: tman <generate|serve|info> [flags]\n\
                  generate: --prompt S --max-new N --temp T --greedy\n\
                  serve:    --trace synthetic --requests N --seed S --verbose --temp T\n\
-                 shared:   --model tiny|small|base --chunk C --kv-slots N --bits 2|4\n\
-                 \x20         --artifacts DIR --soc oneplus12|oneplus13t"
+                 \x20         --max-batch B (decode-batch width, default 1)\n\
+                 shared:   --model tiny|small|base --chunk C --kv-slots N (default\n\
+                 \x20         max-batch + 2) --bits 2|4 --artifacts DIR\n\
+                 \x20         --soc oneplus12|oneplus13t"
             );
         }
     }

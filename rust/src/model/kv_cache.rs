@@ -1,11 +1,11 @@
 //! KV cache for autoregressive decoding: per layer, (seq, kv_heads, d_head)
 //! for K and V — plus [`KvSlotPool`], the fixed-capacity pool of
 //! per-request cache slots the multi-request serving loop allocates from.
-//! The device scenario stays batch 1 (§2.1): one slot is bound to the
-//! compute path at a time, and a preempted request's slot is released (its
-//! prefill restarts from zero), so today the pool is the capacity
-//! *bookkeeping* substrate — batched decode and resumable preemption
-//! (ROADMAP) are what make capacity > 1 load-bearing.
+//! Capacity is load-bearing: batched decode binds one slot per decode-phase
+//! request, and a preempted prefill keeps its slot (with its contents)
+//! until the request finishes, so its prefill can resume where it stopped —
+//! [`KvSlotPool::acquire`] starts a request fresh (clears),
+//! [`KvSlotPool::resume`] re-binds the surviving contents.
 
 use crate::model::config::ModelConfig;
 
@@ -78,10 +78,11 @@ impl KvCache {
 /// Fixed-capacity pool of per-request KV-cache slots.
 ///
 /// Requests own slots by id: [`KvSlotPool::acquire`] binds (or re-binds) a
-/// cleared slot, [`KvSlotPool::release`] returns it. Under today's
-/// restart-on-preempt serving policy at most one slot is owned at a time
-/// (see the module doc above); capacity > 1 becomes load-bearing with
-/// batched decode / resumable preemption.
+/// *cleared* slot, [`KvSlotPool::resume`] returns an owned slot with its
+/// contents intact (resumable preemption), [`KvSlotPool::release`] frees
+/// it. The serving loop owns one slot per admitted request — decode-batch
+/// members, the active prefill, and preempted prefills all hold theirs
+/// until they finish.
 #[derive(Debug, Clone)]
 pub struct KvSlotPool {
     slots: Vec<KvCache>,
@@ -130,6 +131,14 @@ impl KvSlotPool {
         self.slots[free].clear();
         self.high_water = self.high_water.max(self.in_use());
         Some(free)
+    }
+
+    /// Re-bind `id`'s existing slot *without clearing it* — the resumable
+    /// preemption path: a preempted request's cache survives suspension, so
+    /// its prefill continues from where it stopped. None when `id` holds no
+    /// slot (it was never admitted, or already released).
+    pub fn resume(&self, id: u64) -> Option<usize> {
+        self.slot_of(id)
     }
 
     /// Release `id`'s slot. Returns whether a slot was held.
@@ -229,6 +238,80 @@ mod tests {
         // Same id re-acquires the same slot, now cleared.
         assert_eq!(p.acquire(1), Some(s));
         assert_eq!(p.get(s).len, 0);
+    }
+
+    #[test]
+    fn pool_resume_keeps_slot_contents() {
+        // A preempted request must get back the *same* slot contents it
+        // left; acquire (fresh start) clears, resume does not.
+        let cfg = ModelConfig::tiny();
+        let dkv = cfg.d_kv();
+        let mut p = KvSlotPool::new(&cfg, 8, 2);
+        let s = p.acquire(1).unwrap();
+        p.get_mut(s).append(0, 0, &vec![3.0; dkv], &vec![-3.0; dkv]);
+        p.get_mut(s).append(0, 1, &vec![5.0; dkv], &vec![-5.0; dkv]);
+        // Another request churns through the pool in between.
+        let other = p.acquire(2).unwrap();
+        assert_ne!(other, s);
+        assert!(p.release(2));
+        // Resume: same slot, contents intact.
+        assert_eq!(p.resume(1), Some(s));
+        assert_eq!(p.get(s).len, 2);
+        let dh = cfg.d_head();
+        assert_eq!(p.get(s).k(0, 1, 0, dh), &vec![5.0; dh][..]);
+        assert_eq!(p.get(s).v(0, 0, 0, dh), &vec![-3.0; dh][..]);
+        // A fresh acquire of the same id clears instead.
+        assert_eq!(p.acquire(1), Some(s));
+        assert_eq!(p.get(s).len, 0);
+    }
+
+    #[test]
+    fn pool_resume_requires_ownership() {
+        let cfg = ModelConfig::tiny();
+        let mut p = KvSlotPool::new(&cfg, 8, 1);
+        assert_eq!(p.resume(7), None, "never-admitted id cannot resume");
+        let s = p.acquire(7).unwrap();
+        assert_eq!(p.resume(7), Some(s));
+        assert!(p.release(7));
+        assert_eq!(p.resume(7), None, "released id cannot resume");
+    }
+
+    #[test]
+    fn pool_churn_keeps_accounting_exact() {
+        // Interleaved acquire/release with capacity, in_use and high_water
+        // checked at every step; double-release and acquire-when-full paths
+        // included.
+        let cfg = ModelConfig::tiny();
+        let mut p = KvSlotPool::new(&cfg, 4, 3);
+        let mut held: Vec<u64> = Vec::new();
+        let mut high = 0usize;
+        let mut rng = crate::util::Rng::new(0xC0DE);
+        for step in 0..500u64 {
+            if !held.is_empty() && rng.below(2) == 0 {
+                let id = held.remove(rng.below(held.len()));
+                assert!(p.release(id), "step {step}: release of held id {id}");
+                assert!(!p.release(id), "step {step}: double release must be a no-op");
+            } else {
+                let id = 1000 + step;
+                if held.len() == p.capacity() {
+                    assert!(p.acquire(id).is_none(), "step {step}: full pool must refuse");
+                } else {
+                    let slot = p.acquire(id).expect("free slot");
+                    assert!(slot < p.capacity());
+                    held.push(id);
+                }
+            }
+            high = high.max(held.len());
+            assert_eq!(p.in_use(), held.len(), "step {step}");
+            assert_eq!(p.high_water(), high, "step {step}");
+            for &id in &held {
+                assert!(p.slot_of(id).is_some(), "step {step}: id {id} lost its slot");
+            }
+        }
+        for id in held {
+            assert!(p.release(id));
+        }
+        assert_eq!(p.in_use(), 0);
     }
 
     #[test]

@@ -1,14 +1,19 @@
 //! Execution backends for the serving engine.
 //!
-//! The engine's hot path needs exactly two operations — "run one decode
-//! step" and "run one prefill chunk" — plus per-request KV-cache lifecycle.
-//! Two implementations provide them:
+//! The engine's hot path needs exactly three operations — "run one decode
+//! step", "run one decode step for every request in a batch" and "run one
+//! prefill chunk" — plus per-request KV-cache lifecycle (begin / resume /
+//! end). Two implementations provide them:
 //!
 //! - [`ReferenceBackend`]: the pure-Rust reference transformer over a
-//!   [`KvSlotPool`] of per-request caches. Always available; this is what
-//!   the multi-request serving loop and the CLI run by default.
+//!   [`KvSlotPool`] of per-request caches, addressed by request id on every
+//!   call. Always available; this is what the multi-request serving loop
+//!   and the CLI run by default. `decode_batch` loops one forward per
+//!   request against its own slot — the API leaves room for a true batched
+//!   kernel (one weight pass serving the whole batch) without changing the
+//!   engine above it.
 //! - `Pjrt` (behind the `pjrt` feature): the AOT artifacts executed through
-//!   PJRT, single device-resident KV cache (batch 1 on device).
+//!   PJRT, single device-resident KV cache (batch 1 on device, no resume).
 //!
 //! Latency/energy numbers never come from the backend — the engine applies
 //! the NPU simulator to the model's [`ModelShape`] either way, so swapping
@@ -101,55 +106,58 @@ impl ModelShape {
     }
 }
 
+/// One decode step of a batch: (request id, input token, position).
+pub type DecodeStep = (u64, i32, i32);
+
 /// Pure-Rust backend: the reference transformer + a pool of per-request
-/// KV-cache slots. One request is *bound* at a time (batch 1, matching the
-/// device scenario) and the serving loop releases a preempted request's
-/// slot (restart-from-zero policy), so the pool currently tracks capacity
-/// rather than constraining it — it is the substrate later batching /
-/// resumable-preemption PRs build on.
+/// KV-cache slots. Every compute call is addressed by request id — there is
+/// no single "bound" request, which is what lets a decode batch interleave
+/// several requests and a preempted prefill resume against its surviving
+/// slot.
 #[derive(Debug, Clone)]
 pub struct ReferenceBackend {
     pub model: Transformer,
     pool: KvSlotPool,
-    /// (request id, slot) currently bound to the compute path.
-    active: Option<(u64, usize)>,
 }
 
 impl ReferenceBackend {
     pub fn new(model: Transformer, kv_slots: usize) -> Self {
         let pool = KvSlotPool::new(&model.cfg, model.cfg.max_seq, kv_slots);
-        Self { model, pool, active: None }
+        Self { model, pool }
     }
 
-    /// Acquire (or re-acquire) a KV slot for `id`, clear it, and bind the
-    /// request to the compute path.
+    /// Acquire (or re-acquire) a *cleared* KV slot for `id` — the start of
+    /// a fresh prefill attempt.
     pub fn begin_request(&mut self, id: u64) -> Result<()> {
-        let slot = self
-            .pool
+        self.pool
             .acquire(id)
             .with_context(|| format!("KV slot pool exhausted ({} slots)", self.pool.capacity()))?;
-        self.active = Some((id, slot));
         Ok(())
     }
 
-    /// Release `id`'s KV slot and unbind it if it was active.
+    /// Re-attach `id`'s surviving KV slot after a preemption, contents
+    /// intact. Errors if `id` holds no slot (it was never admitted or was
+    /// released — resuming would silently recompute from nothing).
+    pub fn resume_request(&mut self, id: u64) -> Result<()> {
+        self.pool
+            .resume(id)
+            .with_context(|| format!("request {id} holds no KV slot to resume"))?;
+        Ok(())
+    }
+
+    /// Release `id`'s KV slot.
     pub fn end_request(&mut self, id: u64) {
-        if let Some((active_id, _)) = self.active {
-            if active_id == id {
-                self.active = None;
-            }
-        }
         self.pool.release(id);
     }
 
-    fn active_slot(&self) -> Result<usize> {
-        self.active
-            .map(|(_, slot)| slot)
-            .context("no active request bound to the reference backend")
+    fn slot_for(&self, id: u64) -> Result<usize> {
+        self.pool
+            .slot_of(id)
+            .with_context(|| format!("request {id} holds no KV slot (begin_request missing?)"))
     }
 
-    pub fn decode_step(&mut self, token: i32, pos: i32) -> Result<Vec<f32>> {
-        let slot = self.active_slot()?;
+    pub fn decode_step(&mut self, id: u64, token: i32, pos: i32) -> Result<Vec<f32>> {
+        let slot = self.slot_for(id)?;
         let vocab = self.model.cfg.vocab;
         anyhow::ensure!(token >= 0 && (token as usize) < vocab, "token {token} out of vocab");
         anyhow::ensure!(pos >= 0, "negative position {pos}");
@@ -157,12 +165,24 @@ impl ReferenceBackend {
         Ok(self.model.forward_token(token as usize, pos as usize, cache))
     }
 
-    pub fn prefill_chunk(&mut self, tokens: &[i32], pos_base: i32) -> Result<Vec<f32>> {
+    /// One decode step per batch entry, each against its own KV slot. A
+    /// plain per-request loop today; a true batched kernel would share one
+    /// pass over the quantized weights across the batch.
+    pub fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(!steps.is_empty(), "empty decode batch");
+        let mut logits = Vec::with_capacity(steps.len());
+        for &(id, token, pos) in steps {
+            logits.push(self.decode_step(id, token, pos)?);
+        }
+        Ok(logits)
+    }
+
+    pub fn prefill_chunk(&mut self, id: u64, tokens: &[i32], pos_base: i32) -> Result<Vec<f32>> {
         anyhow::ensure!(!tokens.is_empty(), "empty prefill chunk");
         let mut logits = Vec::new();
         let mut pos = pos_base;
         for &t in tokens {
-            logits = self.decode_step(t, pos)?;
+            logits = self.decode_step(id, t, pos)?;
             pos += 1;
         }
         Ok(logits)
@@ -192,7 +212,24 @@ impl Backend {
         match self {
             Backend::Reference(b) => b.begin_request(id),
             #[cfg(feature = "pjrt")]
-            Backend::Pjrt(rt) => rt.reset(),
+            Backend::Pjrt(rt) => {
+                let _ = id;
+                rt.reset()
+            }
+        }
+    }
+
+    /// Re-attach a preempted request's KV state without clearing it. The
+    /// PJRT backend's single device cache cannot suspend one request while
+    /// serving another, so it cannot resume.
+    pub fn resume_request(&mut self, id: u64) -> Result<()> {
+        match self {
+            Backend::Reference(b) => b.resume_request(id),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => anyhow::bail!(
+                "request {id}: resumable preemption needs per-request KV slots \
+                 (reference backend); the PJRT backend has one device cache"
+            ),
         }
     }
 
@@ -215,19 +252,41 @@ impl Backend {
         }
     }
 
-    pub fn decode_step(&mut self, token: i32, pos: i32) -> Result<Vec<f32>> {
+    pub fn decode_step(&mut self, id: u64, token: i32, pos: i32) -> Result<Vec<f32>> {
         match self {
-            Backend::Reference(b) => b.decode_step(token, pos),
+            Backend::Reference(b) => b.decode_step(id, token, pos),
             #[cfg(feature = "pjrt")]
-            Backend::Pjrt(rt) => rt.decode_step(token, pos),
+            Backend::Pjrt(rt) => {
+                let _ = id;
+                rt.decode_step(token, pos)
+            }
         }
     }
 
-    pub fn prefill_chunk(&mut self, tokens: &[i32], pos_base: i32) -> Result<Vec<f32>> {
+    /// One decode step per batch entry, each against its own KV slot.
+    pub fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<Vec<Vec<f32>>> {
         match self {
-            Backend::Reference(b) => b.prefill_chunk(tokens, pos_base),
+            Backend::Reference(b) => b.decode_batch(steps),
             #[cfg(feature = "pjrt")]
-            Backend::Pjrt(rt) => rt.prefill_chunk(tokens, pos_base),
+            Backend::Pjrt(rt) => {
+                anyhow::ensure!(
+                    steps.len() == 1,
+                    "the PJRT backend decodes one request at a time ({} batched)",
+                    steps.len()
+                );
+                Ok(vec![rt.decode_step(steps[0].1, steps[0].2)?])
+            }
+        }
+    }
+
+    pub fn prefill_chunk(&mut self, id: u64, tokens: &[i32], pos_base: i32) -> Result<Vec<f32>> {
+        match self {
+            Backend::Reference(b) => b.prefill_chunk(id, tokens, pos_base),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => {
+                let _ = id;
+                rt.prefill_chunk(tokens, pos_base)
+            }
         }
     }
 
@@ -236,6 +295,15 @@ impl Backend {
     pub fn kv_slots_in_use(&self) -> usize {
         match self {
             Backend::Reference(b) => b.slots_in_use(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => 1,
+        }
+    }
+
+    /// Total KV slots the backend can bind simultaneously.
+    pub fn kv_slot_capacity(&self) -> usize {
+        match self {
+            Backend::Reference(b) => b.slot_capacity(),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => 1,
         }
@@ -264,11 +332,11 @@ mod tests {
     }
 
     #[test]
-    fn decode_requires_bound_request() {
+    fn decode_requires_an_admitted_request() {
         let mut b = backend(1);
-        assert!(b.decode_step(65, 0).is_err());
+        assert!(b.decode_step(1, 65, 0).is_err());
         b.begin_request(1).unwrap();
-        let logits = b.decode_step(65, 0).unwrap();
+        let logits = b.decode_step(1, 65, 0).unwrap();
         assert_eq!(logits.len(), b.model.cfg.vocab);
     }
 
@@ -286,15 +354,74 @@ mod tests {
     fn rebinding_clears_the_cache() {
         let mut b = backend(2);
         b.begin_request(7).unwrap();
-        b.decode_step(65, 0).unwrap();
-        b.decode_step(66, 1).unwrap();
+        b.decode_step(7, 65, 0).unwrap();
+        b.decode_step(7, 66, 1).unwrap();
         // Re-begin the same request: positions restart from 0.
         b.begin_request(7).unwrap();
-        let a = b.decode_step(65, 0).unwrap();
+        let a = b.decode_step(7, 65, 0).unwrap();
         // Fresh request in a fresh slot sees identical logits at pos 0.
         b.begin_request(8).unwrap();
-        let c = b.decode_step(65, 0).unwrap();
+        let c = b.decode_step(8, 65, 0).unwrap();
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn resumed_request_continues_where_it_left_off() {
+        // Interrupt a request mid-sequence, serve another request, resume:
+        // the continuation must match an uninterrupted run token for token.
+        let toks = [72i32, 101, 108, 108, 111, 32, 119];
+        let mut uninterrupted = backend(2);
+        uninterrupted.begin_request(1).unwrap();
+        let mut want = Vec::new();
+        for (pos, &t) in toks.iter().enumerate() {
+            want = uninterrupted.decode_step(1, t, pos as i32).unwrap();
+        }
+
+        let mut b = backend(2);
+        b.begin_request(1).unwrap();
+        for (pos, &t) in toks[..3].iter().enumerate() {
+            b.decode_step(1, t, pos as i32).unwrap();
+        }
+        // Another request churns a different slot while 1 is suspended.
+        b.begin_request(2).unwrap();
+        b.decode_step(2, 90, 0).unwrap();
+        b.end_request(2);
+        // Resume does not clear; positions continue at 3.
+        b.resume_request(1).unwrap();
+        let mut got = Vec::new();
+        for (pos, &t) in toks.iter().enumerate().skip(3) {
+            got = b.decode_step(1, t, pos as i32).unwrap();
+        }
+        assert_eq!(got, want, "resumed continuation must match the uninterrupted run");
+    }
+
+    #[test]
+    fn resume_without_a_slot_is_an_error() {
+        let mut b = backend(1);
+        assert!(b.resume_request(5).is_err(), "never-admitted id must not resume");
+        b.begin_request(5).unwrap();
+        b.resume_request(5).unwrap();
+        b.end_request(5);
+        assert!(b.resume_request(5).is_err(), "released id must not resume");
+    }
+
+    #[test]
+    fn decode_batch_matches_sequential_singles() {
+        let mut a = backend(3);
+        let mut b = backend(3);
+        for id in 1..=3u64 {
+            a.begin_request(id).unwrap();
+            b.begin_request(id).unwrap();
+            // Distinct context per request.
+            a.decode_step(id, 64 + id as i32, 0).unwrap();
+            b.decode_step(id, 64 + id as i32, 0).unwrap();
+        }
+        let steps: Vec<DecodeStep> = (1..=3u64).map(|id| (id, 70 + id as i32, 1)).collect();
+        let batched = a.decode_batch(&steps).unwrap();
+        for (i, &(id, tok, pos)) in steps.iter().enumerate() {
+            let solo = b.decode_step(id, tok, pos).unwrap();
+            assert_eq!(batched[i], solo, "request {id}");
+        }
     }
 
     #[test]
@@ -302,11 +429,11 @@ mod tests {
         let mut b = backend(2);
         b.begin_request(1).unwrap();
         let toks = [72i32, 101, 108, 108, 111];
-        let chunked = b.prefill_chunk(&toks, 0).unwrap();
+        let chunked = b.prefill_chunk(1, &toks, 0).unwrap();
         b.begin_request(2).unwrap();
         let mut step = Vec::new();
         for (pos, &t) in toks.iter().enumerate() {
-            step = b.decode_step(t, pos as i32).unwrap();
+            step = b.decode_step(2, t, pos as i32).unwrap();
         }
         assert_eq!(chunked, step);
     }

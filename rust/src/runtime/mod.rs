@@ -9,6 +9,6 @@ pub mod backend;
 pub mod executor;
 
 pub use artifacts::{ArtifactMeta, ParamSpec};
-pub use backend::{Backend, ModelShape, ReferenceBackend};
+pub use backend::{Backend, DecodeStep, ModelShape, ReferenceBackend};
 #[cfg(feature = "pjrt")]
 pub use executor::NpuModelRuntime;

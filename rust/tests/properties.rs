@@ -2,9 +2,10 @@
 //! unavailable offline; these use the deterministic in-repo RNG with many
 //! iterations — failures print the seed for reproduction).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use tman::coordinator::graph::{Graph, OpKind};
 use tman::coordinator::pipeline::{run_pipelined, run_sequential};
+use tman::coordinator::scheduler::{Request, Scheduler, WorkItem};
 use tman::kernels::tiling;
 use tman::npu::config::NpuConfig;
 use tman::npu::cost::Breakdown;
@@ -13,6 +14,200 @@ use tman::quant::formats::{ActDtype, Granularity, QuantFormat, WeightDtype};
 use tman::quant::lut::TwoLevelDequant;
 use tman::quant::quantize::rtn;
 use tman::util::Rng;
+
+/// Property: randomized submit / next / complete sequences against the
+/// serving scheduler (batched decode + resumable preemption) preserve its
+/// invariants. A parallel "engine pool" model tracks, per request, the
+/// prefill progress and KV-slot ownership implied by the emitted work
+/// items, and after *every* step asserts:
+///
+/// - no request is lost or duplicated (every submitted id finishes exactly
+///   once, every prompt is prefilled exactly once, tile by tile);
+/// - a preempted request resumes with its `done` count intact — a prefill
+///   slice never starts anywhere but the current `covered` position, so no
+///   token is ever reprocessed;
+/// - decode batches stay within `max_batch`, contain no duplicates, and
+///   only requests whose prefill completed;
+/// - KV slots never leak: the scheduler's accounting equals the model
+///   pool's `in_use` after every step and returns to zero at the end;
+/// - priority order is respected within a class (first-prefill-start order
+///   equals submission order per class);
+/// - the scheduler never stalls (`has_work()` implies `next()` is Some).
+///
+/// 8 seeds × 1200+ randomized steps ≫ the 1000-step floor; failures print
+/// the seed.
+#[test]
+fn prop_scheduler_randomized_invariants() {
+    #[derive(Debug, Default)]
+    struct ReqModel {
+        prompt: usize,
+        max_new: usize,
+        priority: u8,
+        covered: usize,
+        decoded: usize,
+        holds_slot: bool,
+        suspended: bool,
+        early: bool,
+        finished: bool,
+    }
+
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0x5EED_0000 ^ seed);
+        let chunk = [1usize, 3, 8, 16, 64][rng.below(5)];
+        let max_batch = [1usize, 2, 4, 8][rng.below(4)];
+        let kv_slots = [1usize, 2, 4, 8][rng.below(4)];
+        let mut s = Scheduler::new(chunk, max_batch, kv_slots);
+        let mut m: BTreeMap<u64, ReqModel> = BTreeMap::new();
+        let mut submit_order: Vec<(u8, u64)> = Vec::new();
+        let mut first_start: Vec<u64> = Vec::new();
+        let mut next_id = 1u64;
+        let mut step = 0usize;
+        const DRIVE: usize = 1200;
+
+        while step < DRIVE || s.has_work() {
+            step += 1;
+            assert!(step < 100_000, "seed {seed}: no forward progress");
+            let op = rng.below(100);
+            if step < DRIVE && (op < 25 || !s.has_work()) {
+                for _ in 0..1 + rng.below(3) {
+                    let id = next_id;
+                    next_id += 1;
+                    let model = ReqModel {
+                        prompt: 1 + rng.below(40),
+                        max_new: rng.below(7),
+                        priority: rng.below(4) as u8,
+                        ..Default::default()
+                    };
+                    s.submit(Request {
+                        id,
+                        prompt_tokens: model.prompt,
+                        max_new_tokens: model.max_new,
+                        priority: model.priority,
+                    });
+                    submit_order.push((model.priority, id));
+                    m.insert(id, model);
+                }
+                continue;
+            }
+            if op < 32 {
+                // Early-complete a random decode-phase request (the serving
+                // loop's stop-byte path).
+                let candidates: Vec<u64> = m
+                    .iter()
+                    .filter(|(_, st)| {
+                        !st.finished
+                            && !st.early
+                            && st.max_new > 0
+                            && st.covered == st.prompt
+                            && st.decoded < st.max_new
+                    })
+                    .map(|(id, _)| *id)
+                    .collect();
+                if !candidates.is_empty() {
+                    let id = candidates[rng.below(candidates.len())];
+                    assert!(s.complete(id), "seed {seed}: complete({id}) refused");
+                    m.get_mut(&id).unwrap().early = true;
+                    continue;
+                }
+            }
+            let Some(item) = s.next() else {
+                assert!(!s.has_work(), "seed {seed}: scheduler stalled with pending work");
+                continue;
+            };
+            match item {
+                WorkItem::PrefillChunk { id, start, len } => {
+                    let st = m.get_mut(&id).expect("known id");
+                    assert!(!st.finished, "seed {seed}: prefill after finish");
+                    assert!(len > 0 && len <= chunk, "seed {seed}: bad slice len {len}");
+                    assert_eq!(
+                        start, st.covered,
+                        "seed {seed} req {id}: slice at {start}, covered {} (reprocess!)",
+                        st.covered
+                    );
+                    if start == 0 {
+                        assert!(!st.holds_slot, "seed {seed}: fresh start while holding a slot");
+                        st.holds_slot = true;
+                        first_start.push(id);
+                    } else {
+                        assert!(st.holds_slot, "seed {seed}: resume without a slot");
+                    }
+                    st.suspended = false;
+                    st.covered += len;
+                    assert!(st.covered <= st.prompt, "seed {seed}: prefill past the prompt");
+                }
+                WorkItem::DecodeBatch { ids } => {
+                    assert!(
+                        !ids.is_empty() && ids.len() <= max_batch,
+                        "seed {seed}: batch of {} vs max_batch {max_batch}",
+                        ids.len()
+                    );
+                    let mut sorted = ids.clone();
+                    sorted.sort_unstable();
+                    sorted.dedup();
+                    assert_eq!(sorted.len(), ids.len(), "seed {seed}: duplicate id in batch");
+                    for id in ids {
+                        let st = m.get_mut(&id).expect("known id");
+                        assert!(!st.finished && !st.early, "seed {seed}: dead id {id} decoding");
+                        assert_eq!(st.covered, st.prompt, "seed {seed}: decode before prefill");
+                        assert!(st.holds_slot, "seed {seed}: decode without a slot");
+                        st.decoded += 1;
+                        assert!(st.decoded <= st.max_new, "seed {seed}: decode past budget");
+                    }
+                }
+                WorkItem::Preempt { id } => {
+                    let st = m.get_mut(&id).expect("known id");
+                    assert!(!st.suspended, "seed {seed}: double preempt of {id}");
+                    assert!(
+                        st.covered > 0 && st.covered < st.prompt,
+                        "seed {seed}: preempt outside mid-prefill (covered {})",
+                        st.covered
+                    );
+                    assert!(st.holds_slot, "seed {seed}: preempted request must keep its slot");
+                    st.suspended = true;
+                }
+                WorkItem::Finish { id } => {
+                    let st = m.get_mut(&id).expect("known id");
+                    assert!(!st.finished, "seed {seed}: request {id} finished twice");
+                    assert!(st.holds_slot, "seed {seed}: finish without a slot");
+                    st.finished = true;
+                    st.holds_slot = false;
+                }
+            }
+            let in_use = m.values().filter(|st| st.holds_slot).count();
+            assert!(in_use <= kv_slots, "seed {seed}: {in_use} slots vs capacity {kv_slots}");
+            assert_eq!(
+                s.slots_held(),
+                in_use,
+                "seed {seed}: scheduler slot accounting diverged from the pool model"
+            );
+        }
+
+        // Completeness: every submitted request finished exactly once, fully
+        // prefilled, with every slot returned.
+        for (id, st) in &m {
+            assert!(st.finished, "seed {seed}: request {id} lost");
+            assert_eq!(st.covered, st.prompt, "seed {seed}: request {id} prefill incomplete");
+            assert!(!st.holds_slot, "seed {seed}: request {id} leaked its slot");
+        }
+        let mut done = s.finished.clone();
+        done.sort_unstable();
+        let all: Vec<u64> = m.keys().copied().collect();
+        assert_eq!(done, all, "seed {seed}: finish log mismatch");
+        assert_eq!(s.slots_held(), 0, "seed {seed}: scheduler still holds slots");
+
+        // Per-class FIFO: first-prefill-start order == submission order.
+        for class in 0u8..4 {
+            let started: Vec<u64> =
+                first_start.iter().copied().filter(|id| m[id].priority == class).collect();
+            let submitted: Vec<u64> = submit_order
+                .iter()
+                .filter(|(p, _)| *p == class)
+                .map(|(_, id)| *id)
+                .collect();
+            assert_eq!(started, submitted, "seed {seed}: class {class} start order");
+        }
+    }
+}
 
 /// Property: the unified-tiling search always returns a tiling satisfying
 /// Eqns. 1-4 and matching phase extents, for random shapes and formats.

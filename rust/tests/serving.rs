@@ -1,7 +1,9 @@
 //! Integration tests for the multi-request serving loop over the reference
 //! backend: a mixed synthetic trace completes every request with monotone
-//! positions, and a high-priority short prompt preempts a long document's
-//! prefill and finishes first.
+//! positions, a high-priority short prompt preempts a long document's
+//! prefill (which then *resumes* without reprocessing a single token), and
+//! batched decode produces byte-identical outputs to an unbatched run of
+//! the same trace.
 
 use tman::coordinator::engine::Engine;
 use tman::coordinator::server::{synthetic_trace, ServeOpts, Server, TraceProfile, TraceRequest};
@@ -13,63 +15,19 @@ use tman::npu::config::SocConfig;
 
 const MODEL_SEED: u64 = 42;
 
-fn tiny_engine(chunk: usize) -> Engine {
+fn engine_with(chunk: usize, kv_slots: usize) -> Engine {
     let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
-    Engine::reference(model, SocConfig::oneplus12(), chunk, 4, 2).expect("engine")
+    Engine::reference(model, SocConfig::oneplus12(), chunk, 4, kv_slots).expect("engine")
 }
 
-#[test]
-fn mixed_trace_completes_every_request() {
-    let mut server = Server::new(tiny_engine(16), ServeOpts::default());
-    let trace = synthetic_trace(12, 7, &TraceProfile::tiny());
-    let fleet = server.run(&trace).expect("serve");
-
-    assert_eq!(fleet.completions.len(), 12, "every request must complete");
-    let mut ids: Vec<u64> = fleet.completions.iter().map(|c| c.id).collect();
-    ids.sort_unstable();
-    assert_eq!(ids, (1..=12).collect::<Vec<u64>>());
-
-    // The server enforces monotone per-request positions internally (any
-    // violation fails the run); check the per-request accounting here.
-    for c in &fleet.completions {
-        let submitted = trace.iter().find(|t| t.id == c.id).unwrap();
-        assert_eq!(c.prompt_tokens, submitted.prompt.len());
-        assert!(c.generated_tokens > 0, "req {} generated nothing", c.id);
-        assert!(c.generated_tokens <= submitted.max_new_tokens);
-        assert!(c.queue_wait_us >= 0.0);
-        assert!(c.ttft_us >= c.queue_wait_us);
-        assert!(c.finish_us >= c.arrival_us);
-        assert!(c.sim_prefill_us > 0.0 && c.sim_decode_us > 0.0);
-        assert!(c.energy_j > 0.0);
-    }
-    assert!(fleet.makespan_us > 0.0);
-    assert!(fleet.throughput_tps() > 0.0);
-    assert!(fleet.ttft_p99_ms() >= fleet.ttft_p50_ms());
+fn tiny_engine(chunk: usize) -> Engine {
+    engine_with(chunk, 2)
 }
 
-#[test]
-fn serving_is_deterministic_for_a_fixed_seed() {
-    let trace = synthetic_trace(8, 3, &TraceProfile::tiny());
-    let a = Server::new(tiny_engine(16), ServeOpts::default()).run(&trace).expect("run a");
-    let b = Server::new(tiny_engine(16), ServeOpts::default()).run(&trace).expect("run b");
-    assert_eq!(a.completions.len(), b.completions.len());
-    for (x, y) in a.completions.iter().zip(&b.completions) {
-        assert_eq!(x.id, y.id);
-        assert_eq!(x.text, y.text);
-        assert_eq!(x.generated_tokens, y.generated_tokens);
-        assert_eq!(x.restarts, y.restarts);
-    }
-    assert_eq!(a.preemptions, b.preemptions);
-}
-
-#[test]
-fn short_interactive_preempts_long_prefill_and_finishes_first() {
-    // A long low-priority document arrives first; an urgent short prompt
-    // lands just after its first prefill slice. The scheduler must preempt
-    // the document between slices, serve the short request to completion,
-    // then restart the document's prefill from zero.
-    let mut server = Server::new(tiny_engine(16), ServeOpts::default());
-    let trace = vec![
+/// A long low-priority document followed closely by an urgent short prompt
+/// — the canonical preemption trace.
+fn preemption_trace() -> Vec<TraceRequest> {
+    vec![
         TraceRequest {
             id: 1,
             arrival_us: 0.0,
@@ -84,19 +42,148 @@ fn short_interactive_preempts_long_prefill_and_finishes_first() {
             prompt: "hi there".to_string(),
             max_new_tokens: 4,
         },
-    ];
+    ]
+}
+
+#[test]
+fn mixed_trace_completes_every_request() {
+    let mut server = Server::new(tiny_engine(16), ServeOpts::default());
+    let trace = synthetic_trace(12, 7, &TraceProfile::tiny());
     let fleet = server.run(&trace).expect("serve");
+
+    assert_eq!(fleet.completions.len(), 12, "every request must complete");
+    let mut ids: Vec<u64> = fleet.completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (1..=12).collect::<Vec<u64>>());
+
+    // The server enforces monotone per-request positions and exact KV-slot
+    // accounting internally (any violation fails the run); check the
+    // per-request accounting here.
+    for c in &fleet.completions {
+        let submitted = trace.iter().find(|t| t.id == c.id).unwrap();
+        assert_eq!(c.prompt_tokens, submitted.prompt.len());
+        assert_eq!(
+            c.prefilled_tokens, c.prompt_tokens,
+            "req {}: prefill work must equal the prompt exactly (no redo, no skip)",
+            c.id
+        );
+        assert!(c.generated_tokens > 0, "req {} generated nothing", c.id);
+        assert!(c.generated_tokens <= submitted.max_new_tokens);
+        assert!(c.queue_wait_us >= 0.0);
+        assert!(c.ttft_us >= c.queue_wait_us);
+        assert!(c.finish_us >= c.arrival_us);
+        assert!(c.sim_prefill_us > 0.0 && c.sim_decode_us > 0.0);
+        assert!(c.energy_j > 0.0);
+    }
+    assert!(fleet.makespan_us > 0.0);
+    assert!(fleet.throughput_tps() > 0.0);
+    assert!(fleet.ttft_p99_ms() >= fleet.ttft_p50_ms());
+    assert!(fleet.decode_batches > 0);
+    assert!(
+        (fleet.decode_batch_occupancy() - 1.0).abs() < 1e-12,
+        "max_batch 1 runs exactly one request per decode batch"
+    );
+}
+
+#[test]
+fn serving_is_deterministic_for_a_fixed_seed() {
+    let trace = synthetic_trace(8, 3, &TraceProfile::tiny());
+    let a = Server::new(tiny_engine(16), ServeOpts::default()).run(&trace).expect("run a");
+    let b = Server::new(tiny_engine(16), ServeOpts::default()).run(&trace).expect("run b");
+    assert_eq!(a.completions.len(), b.completions.len());
+    for (x, y) in a.completions.iter().zip(&b.completions) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.text, y.text);
+        assert_eq!(x.generated_tokens, y.generated_tokens);
+        assert_eq!(x.preempted, y.preempted);
+    }
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.resumed, b.resumed);
+    assert_eq!(a.decode_batches, b.decode_batches);
+}
+
+#[test]
+fn preempted_prefill_resumes_without_reprocessing() {
+    // The explicit-Preempt regression (the old loop *inferred* preemption
+    // from "next prefill starts at 0" and released the slot, restarting the
+    // document from scratch): the preempted document must keep its KV slot,
+    // resume in place, and process every prompt token exactly once.
+    let mut server = Server::new(tiny_engine(16), ServeOpts::default());
+    let fleet = server.run(&preemption_trace()).expect("serve");
     assert_eq!(fleet.completions.len(), 2);
     assert_eq!(fleet.completions[0].id, 2, "the short request must finish first");
     assert_eq!(fleet.completions[1].id, 1);
     assert!(fleet.preemptions >= 1, "the long prefill must have been preempted");
+    assert_eq!(fleet.resumed, fleet.preemptions, "every preemption must resume in place");
 
     let long = &fleet.completions[1];
     let short = &fleet.completions[0];
-    assert!(long.restarts >= 1, "preemption restarts the long prefill");
-    assert_eq!(short.restarts, 0);
+    assert!(long.preempted >= 1, "the document must record its preemption");
+    assert_eq!(
+        long.prefilled_tokens, long.prompt_tokens,
+        "resumed prefill must process the prompt exactly once — not more"
+    );
+    assert_eq!(short.preempted, 0);
+    assert_eq!(short.prefilled_tokens, short.prompt_tokens);
     assert!(short.ttft_us < long.ttft_us, "priority must win on TTFT");
     assert!(short.finish_us < long.finish_us);
+    assert_eq!(server.engine().kv_slots_in_use(), 0);
+}
+
+#[test]
+fn preemption_requires_a_spare_kv_slot() {
+    // With a single KV slot resumable preemption is impossible (both sides
+    // need one), so the scheduler must not preempt at all.
+    let mut server = Server::new(engine_with(16, 1), ServeOpts::default());
+    let fleet = server.run(&preemption_trace()).expect("serve");
+    assert_eq!(fleet.preemptions, 0);
+    assert_eq!(fleet.completions[0].id, 1, "without preemption the document finishes first");
+}
+
+#[test]
+fn batched_decode_matches_unbatched_byte_for_byte() {
+    // The same trace at max_batch 4 and max_batch 1 (same engine shape)
+    // must produce identical per-request outputs: batching reorders work,
+    // never numerics.
+    let trace = synthetic_trace(12, 7, &TraceProfile::tiny());
+    let batched = Server::new(engine_with(16, 6), ServeOpts { max_batch: 4, ..Default::default() })
+        .run(&trace)
+        .expect("batched run");
+    let solo = Server::new(engine_with(16, 6), ServeOpts { max_batch: 1, ..Default::default() })
+        .run(&trace)
+        .expect("solo run");
+    assert_eq!(batched.completions.len(), solo.completions.len());
+    for c in &batched.completions {
+        let s = solo.completions.iter().find(|s| s.id == c.id).expect("same ids");
+        assert_eq!(c.text, s.text, "req {}: batched output diverged", c.id);
+        assert_eq!(c.generated_tokens, s.generated_tokens);
+        assert_eq!(c.prefilled_tokens, s.prefilled_tokens);
+    }
+    assert!(batched.decode_batch_occupancy() >= 1.0);
+}
+
+#[test]
+fn saturated_decode_batches_report_occupancy_above_one() {
+    // Six near-simultaneous short requests with real decode budgets: the
+    // decode pool must hold several requests at once.
+    let trace: Vec<TraceRequest> = (0..6)
+        .map(|i| TraceRequest {
+            id: i + 1,
+            arrival_us: 0.0,
+            priority: 0,
+            prompt: "a short interactive prompt".to_string(),
+            max_new_tokens: 12,
+        })
+        .collect();
+    let opts = ServeOpts { max_batch: 4, ..Default::default() };
+    let fleet = Server::new(engine_with(16, 6), opts).run(&trace).expect("serve");
+    assert_eq!(fleet.completions.len(), 6);
+    assert!(fleet.decode_batches > 0);
+    assert!(
+        fleet.decode_batch_occupancy() > 1.0,
+        "occupancy {} must exceed 1 under simultaneous load",
+        fleet.decode_batch_occupancy()
+    );
 }
 
 #[test]
