@@ -49,15 +49,19 @@ fn main() {
     }
     t.print();
 
-    banner("decode-batch sweep — chunk 16, kv slots = max_batch + 2");
+    banner(
+        "decode-batch sweep — chunk 16, kv slots = max_batch + 2 \
+         (µs/batch = shared-weight-pass kernel cost + per-request KV transfer)",
+    );
     let mut t = Table::new(&[
         "max_batch",
         "occupancy",
+        "µs/batch",
         "tok/s",
         "decode tok/s",
         "TTFT p99 ms",
         "preempts",
-        "resumed",
+        "evicted",
         "J/tok",
     ]);
     for max_batch in [1usize, 2, 4, 8] {
@@ -75,11 +79,12 @@ fn main() {
         t.row(&[
             format!("{max_batch}"),
             format!("{:.2}", fleet.decode_batch_occupancy()),
+            format!("{:.1}", fleet.decode_batch_mean_us()),
             format!("{:.0}", fleet.throughput_tps()),
             format!("{:.0}", fleet.decode_throughput_tps()),
             format!("{:.3}", fleet.ttft_p99_ms()),
             format!("{}", fleet.preemptions),
-            format!("{}", fleet.resumed),
+            format!("{}", fleet.decode_evictions),
             format!("{:.6}", fleet.energy_per_token_j()),
         ]);
     }

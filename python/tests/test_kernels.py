@@ -79,6 +79,58 @@ def test_lut_gemv_lookup_shares_tables():
     assert_allclose(np.asarray(y2), np.asarray(f2), rtol=1e-5, atol=1e-6)
 
 
+def test_lut_gemv_batched_shared_weight_pass():
+    """Batched LUT GEMV reference case (mirrors Rust `lut_gemm_batched`).
+
+    The batched kernel's contract: per-request activation tables in the
+    layout `tables[lane, g, idx] = sum_{j: idx_j=1} act[lane, 4g+j]`, a
+    *single* pass over the bit-serial nibbles shared by every lane, and
+    per-lane results identical to solo `lut_gemv` calls. This NumPy
+    prototype reads each nibble exactly once and applies it to all lanes.
+    """
+    rng = np.random.default_rng(7)
+    m, k, bits, block, lanes = 32, 64, 4, 32, 3
+    w = rng.normal(0, 0.08, (m, k)).astype(np.float32)
+    q = quantize_linear(w, bits, block)
+    acts = rng.normal(0, 0.5, (lanes, k)).astype(np.float32)
+
+    # Table layout cross-check: stacked per-lane tables follow the
+    # subset-sum contract the Rust kernel's `precompute_tables` produces.
+    tables = np.stack([np.asarray(precompute_tables(jnp.asarray(a))) for a in acts])
+    assert tables.shape == (lanes, k // 4, 16)
+    for lane in range(lanes):
+        for g in range(k // 4):
+            for idx in range(16):
+                want = sum(float(acts[lane, 4 * g + j]) for j in range(4) if idx >> j & 1)
+                assert abs(float(tables[lane, g, idx]) - want) < 1e-5, (lane, g, idx)
+
+    # One shared pass over the nibbles serves every lane.
+    nib = np.asarray(q["nib"])  # (bits, m, k//4)
+    scales = np.asarray(q["scales"])
+    zeros = np.asarray(q["zeros"])
+    asums = acts.reshape(lanes, k // block, block).sum(axis=2)  # (lanes, NB)
+    ys = np.zeros((lanes, m), dtype=np.float64)
+    gpb = block // 4
+    for i in range(m):
+        for blk in range(k // block):
+            block_acc = np.zeros(lanes, dtype=np.float64)
+            for b in range(bits):
+                plane_acc = np.zeros(lanes, dtype=np.float64)
+                for g in range(blk * gpb, (blk + 1) * gpb):
+                    idx = int(nib[b, i, g])  # the one read of this nibble
+                    plane_acc += tables[:, g, idx]
+                block_acc += float(1 << b) * plane_acc
+            ys[:, i] += scales[i, blk] * (block_acc - zeros[i, blk] * asums[:, blk])
+
+    # Per-lane parity with the solo kernel.
+    for lane in range(lanes):
+        solo = lut_gemv(
+            jnp.asarray(q["nib"]), jnp.asarray(q["scales"]), jnp.asarray(q["zeros"]),
+            jnp.asarray(acts[lane]), bits=bits, block=block,
+        )
+        assert_allclose(ys[lane], np.asarray(solo), rtol=2e-4, atol=2e-4)
+
+
 def test_lut_gemv_zero_act_gives_zero():
     q, _ = make_case(32, 64, 4, 64, 4)
     y = lut_gemv(

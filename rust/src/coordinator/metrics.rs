@@ -138,6 +138,17 @@ pub struct FleetMetrics {
     pub decode_batches: usize,
     /// Total per-request decode steps across all batches.
     pub decode_batched_steps: usize,
+    /// Decode lanes evicted from a full batch by a higher-priority request
+    /// (each kept its KV slot and progress, and resumed later).
+    pub decode_evictions: usize,
+    /// Decode batches that actually ran a batched forward (a scheduler
+    /// batch whose every member sampled its final budgeted token — or a
+    /// stop byte — needs no forward and costs nothing).
+    pub decode_batches_executed: usize,
+    /// Total simulated µs spent in executed decode batches: the
+    /// kernel-derived shared-weight-pass projection cost *plus* each
+    /// request's KV-cache transfer, summed over the run.
+    pub decode_batch_sim_us: f64,
 }
 
 impl FleetMetrics {
@@ -204,11 +215,23 @@ impl FleetMetrics {
         self.decode_batched_steps as f64 / self.decode_batches as f64
     }
 
+    /// Mean kernel-derived cost of one *executed* decode batch, µs (0.0
+    /// when no batch ran a forward). Under the shared weight pass this
+    /// grows sub-linearly with occupancy — the number the old hand-tuned
+    /// marginal constant used to fake.
+    pub fn decode_batch_mean_us(&self) -> f64 {
+        if self.decode_batches_executed == 0 {
+            return 0.0;
+        }
+        self.decode_batch_sim_us / self.decode_batches_executed as f64
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests        : {} completed, {} preemption(s), {} resumed\n\
              tokens          : {} prompt + {} generated\n\
-             decode batching : {} batches, {:.2} mean occupancy\n\
+             decode batching : {} batches, {:.2} mean occupancy, {} eviction(s), \
+             {:.1} µs/batch\n\
              sim makespan    : {:.2} ms ({:.1} tok/s sustained, {:.1} decode tok/s)\n\
              TTFT            : p50 {:.3} ms, p99 {:.3} ms\n\
              queue wait      : p50 {:.3} ms, p99 {:.3} ms\n\
@@ -221,6 +244,8 @@ impl FleetMetrics {
             self.generated_tokens(),
             self.decode_batches,
             self.decode_batch_occupancy(),
+            self.decode_evictions,
+            self.decode_batch_mean_us(),
             self.makespan_us / 1e3,
             self.throughput_tps(),
             self.decode_throughput_tps(),
@@ -303,6 +328,9 @@ mod tests {
             resumed: 1,
             decode_batches: 4,
             decode_batched_steps: 10,
+            decode_evictions: 2,
+            decode_batches_executed: 3,
+            decode_batch_sim_us: 1_800.0,
         };
         assert_eq!(fleet.prompt_tokens(), 20);
         assert_eq!(fleet.generated_tokens(), 10);
@@ -313,10 +341,15 @@ mod tests {
         assert!((fleet.total_energy_j() - 0.03).abs() < 1e-12);
         // 10 batched steps over 4 batches => 2.5 mean occupancy.
         assert!((fleet.decode_batch_occupancy() - 2.5).abs() < 1e-12);
+        // 1800 µs over 3 *executed* batches => 600 µs mean batch cost (the
+        // 4th scheduler batch ran no forward and must not dilute the mean).
+        assert!((fleet.decode_batch_mean_us() - 600.0).abs() < 1e-12);
         let r = fleet.report();
         assert!(r.contains("2 completed"));
         assert!(r.contains("1 preemption"));
         assert!(r.contains("2.50 mean occupancy"));
+        assert!(r.contains("2 eviction(s)"));
+        assert!(r.contains("600.0 µs/batch"));
     }
 
     #[test]
@@ -329,7 +362,11 @@ mod tests {
             resumed: 0,
             decode_batches: 0,
             decode_batched_steps: 0,
+            decode_evictions: 0,
+            decode_batches_executed: 0,
+            decode_batch_sim_us: 0.0,
         };
         assert_eq!(fleet.decode_batch_occupancy(), 0.0);
+        assert_eq!(fleet.decode_batch_mean_us(), 0.0);
     }
 }

@@ -10,6 +10,15 @@
 //!   decode-phase request advances one token per [`WorkItem::DecodeBatch`]
 //!   through the LUT vector path. When both phases have work the scheduler
 //!   alternates one prefill slice with one decode batch.
+//! - **Decode-batch admission is preemption-aware**: when a request whose
+//!   prefill just completed outranks the decode batch and the batch is
+//!   full, the *lowest-priority* decode lane is evicted at the batch
+//!   boundary (never mid-token) instead of making the urgent request stall.
+//!   The evicted lane keeps its KV slot and its generated-token count,
+//!   parks *ahead of its priority class* (it arrived before its waiting
+//!   peers — the decode analogue of `requeue_front`), and re-enters the
+//!   batch as soon as a lane frees up or a lower-priority lane appears —
+//!   no token is ever redone or lost.
 //! - **Preemption** is *resumable*: between prefill slices a strictly
 //!   higher-priority queued request may preempt the active prefill — the
 //!   scheduler emits an explicit [`WorkItem::Preempt`], the preempted
@@ -73,8 +82,9 @@ pub struct Scheduler {
     /// The request currently on the matrix path (at most one prefill).
     prefilling: Option<(Request, usize)>,
     /// Prefill-complete requests waiting for room in the decode batch
-    /// (slot held).
-    ready: VecDeque<Request>,
+    /// (slot held), each with the tokens it already generated — an evicted
+    /// lane parks here with its progress intact.
+    ready: VecDeque<(Request, usize)>,
     /// Decode-phase requests bound to the vector path: (request, generated).
     decoding: Vec<(Request, usize)>,
     /// Requests whose `Finish` item is pending emission (slot still held).
@@ -96,6 +106,9 @@ pub struct Scheduler {
     /// Total per-request decode steps across all batches (occupancy
     /// numerator).
     pub decode_batched_steps: usize,
+    /// Decode lanes evicted from a full batch by a higher-priority request
+    /// (each kept its slot and progress, and resumed later).
+    pub decode_evictions: usize,
 }
 
 impl Scheduler {
@@ -118,6 +131,7 @@ impl Scheduler {
             resumed: 0,
             decode_batches: 0,
             decode_batched_steps: 0,
+            decode_evictions: 0,
         }
     }
 
@@ -192,19 +206,52 @@ impl Scheduler {
         }
     }
 
+    /// Index of the highest-priority waiter in `ready` (FIFO within a
+    /// class) — the one selection rule both admission paths share.
+    fn best_ready_index(&self) -> Option<usize> {
+        self.ready.iter().enumerate().min_by_key(|(i, (r, _))| (r.priority, *i)).map(|(i, _)| i)
+    }
+
     /// Move prefill-complete requests into the decode batch while it has
-    /// room, highest priority first (FIFO within a class).
+    /// room, highest priority first (FIFO within a class) — then apply
+    /// preemption-aware admission: while the batch is full and a waiting
+    /// request strictly outranks its lowest-priority lane, evict that lane
+    /// (at the batch boundary, never mid-token) and admit the waiter. The
+    /// evicted lane keeps its KV slot and generated-token count in `ready`
+    /// and resumes as soon as the batch has room for it again.
     fn promote_ready(&mut self) {
-        while !self.ready.is_empty() && self.decoding.len() < self.max_batch {
-            let best = self
-                .ready
+        while self.decoding.len() < self.max_batch {
+            let Some(best) = self.best_ready_index() else { break };
+            let entry = self.ready.remove(best).expect("index in range");
+            self.decoding.push(entry);
+        }
+        while self.decoding.len() >= self.max_batch {
+            let Some(best) = self.best_ready_index() else { break };
+            let worst = self
+                .decoding
                 .iter()
                 .enumerate()
-                .min_by_key(|(i, r)| (r.priority, *i))
+                .max_by_key(|(i, (r, _))| (r.priority, *i))
                 .map(|(i, _)| i)
-                .expect("ready is non-empty");
-            let req = self.ready.remove(best).expect("index in range");
-            self.decoding.push((req, 0));
+                .expect("a full batch is non-empty");
+            // Strictly-higher priority only — equal classes never churn.
+            if self.ready[best].0.priority >= self.decoding[worst].0.priority {
+                break;
+            }
+            let promoted = self.ready.remove(best).expect("index in range");
+            let evicted = self.decoding.remove(worst);
+            // Park the evicted lane *ahead* of its priority class: it
+            // arrived before its waiting peers and holds a KV slot with
+            // real generated progress — the decode analogue of
+            // `requeue_front` for preempted prefills.
+            let idx = self
+                .ready
+                .iter()
+                .position(|(r, _)| r.priority >= evicted.0.priority)
+                .unwrap_or(self.ready.len());
+            self.ready.insert(idx, evicted);
+            self.decoding.push(promoted);
+            self.decode_evictions += 1;
         }
     }
 
@@ -225,7 +272,7 @@ impl Scheduler {
                 return true;
             }
         }
-        if let Some(i) = self.ready.iter().position(|r| r.id == id) {
+        if let Some(i) = self.ready.iter().position(|(r, _)| r.id == id) {
             self.ready.remove(i);
             self.finishing.push_back(id);
             return true;
@@ -254,7 +301,7 @@ impl Scheduler {
             } else if self.decoding.len() < self.max_batch {
                 self.decoding.push((req, 0));
             } else {
-                self.ready.push_back(req);
+                self.ready.push_back((req, 0));
             }
         }
         Some(WorkItem::PrefillChunk { id, start, len })
@@ -546,6 +593,101 @@ mod tests {
         assert_eq!(s.next(), Some(WorkItem::Preempt { id: 1 }));
         let items = s.drain();
         assert_eq!(finish_order(&items), vec![2, 1, 3], "A must finish before C");
+    }
+
+    #[test]
+    fn urgent_arrival_evicts_the_lowest_priority_decode_lane() {
+        // A low-priority lane fills the batch mid-decode; an urgent request
+        // completes its prefill and must not stall behind it. The lane is
+        // evicted *between* batches (never mid-token), keeps its KV slot
+        // and its generated-token count, and resumes once the urgent
+        // request drains.
+        let mut s = Scheduler::new(64, 1, 3);
+        s.submit(req(1, 64, 6, 5));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        assert_eq!(s.next(), Some(WorkItem::DecodeBatch { ids: vec![1] })); // token 1 of 6
+        s.submit(req(2, 64, 2, 0));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 2, .. })));
+        // Request 2's prefill is done, the batch is full with prio-5 work:
+        // the next call evicts lane 1 and decodes request 2 instead.
+        assert_eq!(s.next(), Some(WorkItem::DecodeBatch { ids: vec![2] }));
+        assert_eq!(s.decode_evictions, 1);
+        assert_eq!(s.slots_held(), 2, "the evicted lane must keep its KV slot");
+        // Lane 1 never outranks lane 2, so it waits for the batch to free.
+        assert_eq!(s.next(), Some(WorkItem::DecodeBatch { ids: vec![2] }));
+        assert_eq!(s.next(), Some(WorkItem::Finish { id: 2 }));
+        // Lane 1 resumes with its counter intact: exactly 5 more batches
+        // (6 budgeted, 1 already decoded — a reset counter would give 6).
+        let items = s.drain();
+        let ones = items
+            .iter()
+            .filter(|w| matches!(w, WorkItem::DecodeBatch { ids } if ids[..] == [1]))
+            .count();
+        assert_eq!(ones, 5, "eviction must preserve the generated-token count");
+        assert_eq!(finish_order(&items), vec![1]);
+        assert_eq!(s.decode_evictions, 1, "resuming is not another eviction");
+        assert_eq!(s.slots_held(), 0);
+    }
+
+    #[test]
+    fn evicted_lane_resumes_ahead_of_its_class() {
+        // E (prio 1) is mid-generation when W (prio 1) finishes prefill and
+        // parks in ready; urgent U (prio 0) evicts E. When U drains, E —
+        // older, with real progress — must re-enter the batch before W
+        // (the decode analogue of `requeue_front`).
+        let mut s = Scheduler::new(64, 1, 4);
+        s.submit(req(1, 64, 4, 1)); // E
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        assert_eq!(s.next(), Some(WorkItem::DecodeBatch { ids: vec![1] }));
+        s.submit(req(2, 64, 4, 1)); // W, same class
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 2, .. })));
+        assert_eq!(s.next(), Some(WorkItem::DecodeBatch { ids: vec![1] }), "equal prio: no evict");
+        s.submit(req(3, 64, 1, 0)); // U, urgent
+        assert_eq!(s.next(), Some(WorkItem::DecodeBatch { ids: vec![1] }), "alternation: decode");
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 3, .. })));
+        assert_eq!(s.next(), Some(WorkItem::DecodeBatch { ids: vec![3] }));
+        assert_eq!(s.decode_evictions, 1);
+        let items = s.drain();
+        assert_eq!(finish_order(&items), vec![3, 1, 2], "E must resume before W");
+    }
+
+    #[test]
+    fn equal_priority_never_evicts() {
+        // Same class: the resident lane keeps the batch, FIFO order holds.
+        let mut s = Scheduler::new(64, 1, 3);
+        s.submit(req(1, 64, 4, 1));
+        s.submit(req(2, 64, 4, 1));
+        let items = s.drain();
+        assert_eq!(s.decode_evictions, 0);
+        assert_eq!(finish_order(&items), vec![1, 2]);
+    }
+
+    #[test]
+    fn eviction_picks_the_lowest_priority_lane_only() {
+        // Batch of two lanes (prio 1 and prio 5); an urgent prio-0 request
+        // must evict the prio-5 lane and leave the prio-1 lane in place.
+        let mut s = Scheduler::new(64, 2, 4);
+        s.submit(req(1, 64, 8, 1));
+        s.submit(req(2, 64, 8, 5));
+        // Prefill both into the decode batch.
+        while s.decode_batched_steps == 0 {
+            s.next().expect("work remains");
+        }
+        s.submit(req(3, 64, 1, 0));
+        let items = s.drain();
+        assert!(s.decode_evictions >= 1, "the urgent request must not stall");
+        // After request 3's prefill, every full batch it joins pairs it
+        // with the prio-1 lane — the prio-5 lane is the one displaced.
+        let joint = items.iter().any(
+            |w| matches!(w, WorkItem::DecodeBatch { ids } if ids.contains(&3) && ids.contains(&1)),
+        );
+        let wrong = items.iter().any(
+            |w| matches!(w, WorkItem::DecodeBatch { ids } if ids.contains(&3) && ids.contains(&2)),
+        );
+        assert!(joint, "urgent request must decode alongside the prio-1 lane");
+        assert!(!wrong, "the prio-5 lane must be the evicted one");
+        assert_eq!(finish_order(&items).len(), 3);
+        assert_eq!(s.slots_held(), 0);
     }
 
     #[test]

@@ -5,12 +5,18 @@
 //! fleet traffic: requests arrive on an open-loop trace, are admitted into
 //! the scheduler's priority queue, and the scheduler interleaves
 //! `chunk`-token prefill slices with *batched* decode steps
-//! ([`WorkItem::DecodeBatch`] advances up to `max_batch` requests per step,
-//! each against its own KV slot). Every work item advances the simulated
-//! clock by the NPU model's cost for that item — a decode batch is priced
-//! with the shared-weight-pass model — so queue wait, TTFT and sustained
-//! throughput are the numbers the device would see, while the numerics run
-//! on the host backend.
+//! ([`WorkItem::DecodeBatch`] advances up to `max_batch` requests per step
+//! through one shared-weight-pass batched forward, each against its own KV
+//! slot). Every work item advances the simulated clock by the NPU model's
+//! cost for that item — a decode batch is priced by the batched LUT
+//! kernel's own cost model (one bit-serial weight stream + per-lane VLUT
+//! issue) — so queue wait, TTFT and sustained throughput are the numbers
+//! the device would see, while the numerics run on the host backend.
+//! Decode-batch admission is preemption-aware: a prefill-complete request
+//! that outranks a full batch evicts its lowest-priority lane at the batch
+//! boundary (the lane keeps its slot and progress and resumes later);
+//! evictions and the kernel-derived batch time are surfaced in
+//! [`FleetMetrics`].
 //!
 //! Preemption is explicit and resumable: the scheduler emits
 //! [`WorkItem::Preempt`] when a higher-priority request takes the prefill
@@ -229,6 +235,8 @@ impl Server {
         let mut completions: Vec<RequestCompletion> = Vec::new();
         let mut next_arrival = 0usize;
         let mut clock_us = 0.0f64;
+        let mut decode_batch_sim_us = 0.0f64;
+        let mut decode_batches_executed = 0usize;
 
         loop {
             // Admit every request that has arrived by now.
@@ -378,6 +386,7 @@ impl Server {
                         }
                     }
                     if !forwards.is_empty() {
+                        decode_batches_executed += 1;
                         let (all_logits, per_us) = self.engine.decode_batch(&forwards)?;
                         for ((&(id, _, _), logits), us) in
                             forwards.iter().zip(all_logits).zip(per_us)
@@ -385,6 +394,7 @@ impl Server {
                             let st = states.get_mut(&id).expect("state exists");
                             st.logits = logits;
                             st.sim_decode_us += us;
+                            decode_batch_sim_us += us;
                             clock_us += us;
                         }
                     }
@@ -447,6 +457,9 @@ impl Server {
             resumed: sched.resumed,
             decode_batches: sched.decode_batches,
             decode_batched_steps: sched.decode_batched_steps,
+            decode_evictions: sched.decode_evictions,
+            decode_batches_executed,
+            decode_batch_sim_us,
         })
     }
 }

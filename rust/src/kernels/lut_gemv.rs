@@ -17,6 +17,15 @@
 //! and spills excess fp32 accumulators to a software-managed **TCM spill
 //! buffer** instead of letting the compiler spill to the slow L2. The
 //! `SpillPolicy` knob reproduces that ablation.
+//!
+//! The **batched** variant ([`lut_gemm_batched`] / [`LutGemv::run_batched`])
+//! serves B decode requests from *one* pass over the bit-serial weight
+//! stream: each request brings its own precomputed activation tables, every
+//! streamed nibble is looked up in all B tables (per-lane VLUT issues), and
+//! the weight/scale DMA plus the kernel launch are paid once. Its cost model
+//! ([`gemv_batched_cost`]) is what the serving engine prices decode batches
+//! with — batching amortizes the dominant weight traffic, never the
+//! numerics.
 
 use crate::kernels::tiling::{self, UnifiedTiling};
 use crate::npu::config::NpuConfig;
@@ -41,6 +50,16 @@ pub enum SpillPolicy {
 #[derive(Debug, Clone)]
 pub struct GemvResult {
     pub y: Vec<f32>,
+    pub cost: KernelCost,
+}
+
+/// Result of one simulated *batched* GEMV (`lut_gemm_batched`): per-lane
+/// bit-exact outputs + the modeled cost of the whole batch, in which the
+/// bit-serial weight stream is read exactly once.
+#[derive(Debug, Clone)]
+pub struct BatchedGemvResult {
+    /// `ys[lane]` — identical to the solo kernel's output for that lane.
+    pub ys: Vec<Vec<f32>>,
     pub cost: KernelCost,
 }
 
@@ -110,45 +129,76 @@ impl<'a> LutGemv<'a> {
     }
 
     /// Execute functionally (bit-exact w.r.t. the table semantics) and
-    /// produce the modeled cost for `cfg`.
+    /// produce the modeled cost for `cfg`. A one-lane batch: the solo
+    /// kernel *is* [`LutGemv::run_batched`] with a single lane, so the two
+    /// paths cannot drift apart numerically.
     pub fn run(&self, cfg: &NpuConfig, act: &[f32], tables: &ActTables) -> GemvResult {
+        assert_eq!(act.len(), self.weights.k);
+        let mut batched = self.run_batched(cfg, std::slice::from_ref(tables));
+        GemvResult { y: batched.ys.pop().expect("one lane in, one output out"), cost: batched.cost }
+    }
+
+    /// The batched kernel (`lut_gemm_batched` semantics): one decode step
+    /// for B requests against one weight matrix. Each lane brings its own
+    /// activation tables; the bit-serial weight stream is read **once** —
+    /// every nibble is fetched a single time and looked up in all B lanes'
+    /// tables before the next nibble is touched — which is exactly the
+    /// weight-traffic amortization that makes batched decode pay on an NPU.
+    /// Per-lane arithmetic runs in the same order as [`LutGemv::run`], so
+    /// each lane's output is bit-identical to a solo call.
+    pub fn run_batched(&self, cfg: &NpuConfig, tables: &[ActTables]) -> BatchedGemvResult {
         let w = self.weights;
-        assert_eq!(act.len(), w.k);
-        assert_eq!(tables.k, w.k);
+        let lanes = tables.len();
+        assert!(lanes > 0, "empty batch");
+        for t in tables {
+            assert_eq!(t.k, w.k, "lane table K mismatch");
+            assert_eq!(t.block_len, tables[0].block_len, "lane block mismatch");
+        }
         let bits = w.dtype.bits() as usize;
-        let block = tables.block_len;
+        let block = tables[0].block_len;
         let nblocks = w.k.div_ceil(block);
         let groups_per_block = block / 4;
 
-        // ---- functional execution -------------------------------------
-        let mut y = vec![0.0f32; w.m];
+        // ---- functional execution (single shared weight pass) ----------
+        let mut ys = vec![vec![0.0f32; w.m]; lanes];
+        let mut row_acc = vec![0.0f64; lanes];
+        let mut block_acc = vec![0.0f32; lanes];
+        let mut plane_acc = vec![0.0f32; lanes];
         for i in 0..w.m {
-            let mut row_acc = 0.0f64;
+            row_acc.fill(0.0);
             for blk in 0..nblocks {
                 let grp0 = blk * groups_per_block;
                 let grp1 = (grp0 + groups_per_block).min(w.k.div_ceil(4));
-                // Accumulate lookups per bit plane over the block.
-                let mut block_acc = 0.0f32;
+                block_acc.fill(0.0);
                 for b in 0..bits {
-                    let mut plane_acc = 0.0f32;
+                    plane_acc.fill(0.0);
                     for g in grp0..grp1 {
-                        let nib = w.nibble(b, i, g);
-                        plane_acc += tables.tables[g][nib as usize];
+                        // The one read of this weight nibble, applied to
+                        // every lane's table (per-lane VLUT issue).
+                        let nib = w.nibble(b, i, g) as usize;
+                        for (acc, t) in plane_acc.iter_mut().zip(tables) {
+                            *acc += t.tables[g][nib];
+                        }
                     }
-                    block_acc += (1u32 << b) as f32 * plane_acc;
+                    let shift = (1u32 << b) as f32;
+                    for (acc, p) in block_acc.iter_mut().zip(&plane_acc) {
+                        *acc += shift * p;
+                    }
                 }
-                // Per-block affine: scale * (lookup_sum - zero * Σa_block).
                 let gidx = w.group_of(i, blk * block);
                 let s = w.scales[gidx];
                 let z = w.zeros[gidx];
-                row_acc += (s * (block_acc - z * tables.block_sums[blk])) as f64;
+                for ((acc, blk_acc), t) in row_acc.iter_mut().zip(&block_acc).zip(tables) {
+                    *acc += (s * (blk_acc - z * t.block_sums[blk])) as f64;
+                }
             }
-            y[i] = row_acc as f32;
+            for (y, acc) in ys.iter_mut().zip(&row_acc) {
+                y[i] = *acc as f32;
+            }
         }
 
-        // ---- cost model -------------------------------------------------
-        let cost = self.cost(cfg, act.len());
-        GemvResult { y, cost }
+        let cost = self.batched_cost(cfg, lanes);
+        BatchedGemvResult { ys, cost }
     }
 
     /// Pure cost model (no functional execution) — used by the end-to-end
@@ -158,6 +208,21 @@ impl<'a> LutGemv<'a> {
         gemv_cost(cfg, self.weights.m, self.weights.k, self.fmt, &self.tiling, self.variant, self.spill, self.threads)
     }
 
+    /// Batch cost for `batch` lanes: shared weight DMA + per-lane tables.
+    pub fn batched_cost(&self, cfg: &NpuConfig, batch: usize) -> KernelCost {
+        gemv_batched_cost(
+            cfg,
+            self.weights.m,
+            self.weights.k,
+            self.fmt,
+            &self.tiling,
+            self.variant,
+            self.spill,
+            self.threads,
+            batch,
+        )
+    }
+
     /// Decode-path latency: DMA weight streaming overlaps the vector-core
     /// lookups (the decode analogue of the prefill pipeline), so the total
     /// is the max of the two plus precompute + launch.
@@ -165,11 +230,18 @@ impl<'a> LutGemv<'a> {
         let c = self.cost(cfg, k);
         c.breakdown.mem_us.max(c.breakdown.cmp_us) + c.breakdown.dq_us + c.breakdown.overhead_us
     }
+
+    /// Batched decode latency for `batch` lanes (same overlap rule).
+    pub fn batched_latency_us(&self, cfg: &NpuConfig, batch: usize) -> f64 {
+        let c = self.batched_cost(cfg, batch);
+        c.breakdown.mem_us.max(c.breakdown.cmp_us) + c.breakdown.dq_us + c.breakdown.overhead_us
+    }
 }
 
 /// Shape-only cost model for the T-MAN LUT GEMV — shared by the kernel
 /// struct above and the benchmark harness (which sweeps paper shapes
-/// without materializing multi-GB weight tensors).
+/// without materializing multi-GB weight tensors). Equivalent to
+/// [`gemv_batched_cost`] with one lane.
 #[allow(clippy::too_many_arguments)]
 pub fn gemv_cost(
     cfg: &NpuConfig,
@@ -181,6 +253,33 @@ pub fn gemv_cost(
     spill: SpillPolicy,
     threads: usize,
 ) -> KernelCost {
+    gemv_batched_cost(cfg, m, k, fmt, tiling, variant, spill, threads, 1)
+}
+
+/// Shape-only cost model for the batched T-MAN LUT GEMV (`batch` lanes
+/// sharing one weight matrix). Because table-lookup GEMV is weight-traffic
+/// bound, the batch streams the bit-serial weights (and scales) over DMA
+/// **once**; what scales with the batch is only
+///
+/// - the per-lane activation transfer,
+/// - the per-lane table precompute on the vector ALUs,
+/// - the per-lane VLUT issues + shift-accumulate + spill traffic,
+///
+/// while the kernel-launch overhead is paid once. With `batch == 1` this
+/// is exactly [`gemv_cost`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemv_batched_cost(
+    cfg: &NpuConfig,
+    m: usize,
+    k: usize,
+    fmt: QuantFormat,
+    tiling: &UnifiedTiling,
+    variant: VlutVariant,
+    spill: SpillPolicy,
+    threads: usize,
+    batch: usize,
+) -> KernelCost {
+    assert!(batch > 0, "batch must hold at least one lane");
     let bits = fmt.weight.bits() as usize;
     let act_bits = match fmt.act.bytes() {
         1 => 8,
@@ -192,40 +291,43 @@ pub fn gemv_cost(
 
     let mut ops = OpCounts::default();
 
-    // Weights stream DDR->TCM over DMA; activations + scales are small.
+    // Weights + scales stream DDR->TCM over DMA exactly once for the whole
+    // batch (the shared weight pass); only the activations are per-lane.
     let weight_bytes = (m * k * bits).div_ceil(8);
     let scale_bytes = fmt.gran.num_groups(m, k) * 4;
-    ops.ddr_bytes = weight_bytes + scale_bytes + k * fmt.act.bytes();
+    ops.ddr_bytes = weight_bytes + scale_bytes + batch * k * fmt.act.bytes();
     let mem_us = LoadMethod::Dma.transfer_us(cfg, ops.ddr_bytes, threads);
 
     // Precompute: 15 adds per 16-entry table, vectorized across tables
-    // along the register lanes (act_bytes-wide lanes).
-    let lanes = cfg.hvx_vector_bytes / fmt.act.bytes().max(2);
-    ops.valu_instrs += (ngroups * 15).div_ceil(lanes);
-    // Block sums: one add per activation, vectorized.
-    ops.valu_instrs += k.div_ceil(lanes);
+    // along the register lanes (act_bytes-wide lanes), once per batch lane.
+    let vec_lanes = cfg.hvx_vector_bytes / fmt.act.bytes().max(2);
+    ops.valu_instrs += batch * (ngroups * 15).div_ceil(vec_lanes);
+    // Block sums: one add per activation, vectorized, per lane.
+    ops.valu_instrs += batch * k.div_ceil(vec_lanes);
     let dq_us = hvx::valu_time_us(cfg, ops.valu_instrs, threads);
 
     // Lookups: one VLUT per (bit-plane x table x M-vector) — each issue
     // covers `lookups_per_instr` lookups = m_lookup_rows rows x
-    // tables-per-issue tables.
+    // tables-per-issue tables. Every lane holds its own tables, so each
+    // streamed nibble vector costs one VLUT issue *per lane*.
     let lookups_total = bits * m * ngroups;
     let per_instr = variant.lookups_per_instr(act_bits);
-    ops.vlut_instrs = lookups_total.div_ceil(per_instr);
+    let vlut_per_lane = lookups_total.div_ceil(per_instr);
+    ops.vlut_instrs = batch * vlut_per_lane;
     // Shift-accumulate: ~1 vector op per VLUT issue; per-block affine:
-    // 2 ops per (row-vector x block).
+    // 2 ops per (row-vector x block) — per lane.
     let nblocks = k.div_ceil(block_len);
-    let agg_instrs = ops.vlut_instrs + 2 * m.div_ceil(m_lookup_rows) * nblocks;
+    let agg_instrs = batch * (vlut_per_lane + 2 * m.div_ceil(m_lookup_rows) * nblocks);
     ops.valu_instrs += agg_instrs;
     let lookup_us = hvx::vlut_time_us(cfg, variant, ops.vlut_instrs, threads)
         + hvx::valu_time_us(cfg, agg_instrs, threads);
 
     // Spill traffic: fp32 accumulators for the outer tile exceed the
     // register file; every outer-tile pass writes/reads M_tile fp32
-    // per K-span.
+    // per K-span, for every lane's accumulators.
     let k_span = tiling.k_span_of_luts(cfg, fmt.act.bytes().max(2));
     let outer_passes = k.div_ceil(k_span);
-    let spill_bytes = 2 * m * 4 * outer_passes.saturating_sub(1);
+    let spill_bytes = batch * 2 * m * 4 * outer_passes.saturating_sub(1);
     let spill_us = match spill {
         SpillPolicy::TcmBuffer => {
             ops.tcm_spill_bytes = spill_bytes;
@@ -247,15 +349,72 @@ pub fn gemv_cost(
         mem_us,
         dq_us,
         cmp_us: lookup_us + spill_us,
-        overhead_us: 2.0, // kernel launch on the NPU
+        overhead_us: 2.0, // one kernel launch serves the whole batch
     };
-    KernelCost { breakdown, ops, label: format!("tman-lut-gemv {m}x{k} {fmt}") }
+    let label = if batch == 1 {
+        format!("tman-lut-gemv {m}x{k} {fmt}")
+    } else {
+        format!("tman-lut-gemv-b{batch} {m}x{k} {fmt}")
+    };
+    KernelCost { breakdown, ops, label }
 }
 
 /// Shape-only decode latency for T-MAN (DMA overlaps lookups).
 pub fn tman_gemv_latency_us(cfg: &NpuConfig, m: usize, k: usize, fmt: QuantFormat) -> f64 {
+    tman_gemv_batched_latency_us(cfg, m, k, fmt, 1)
+}
+
+/// Shape-only *batched* decode latency: `batch` lanes served by one pass
+/// over the bit-serial weights (DMA overlaps lookups, as in the solo
+/// kernel). Non-decreasing in `batch` and strictly below `batch ×` the
+/// solo latency — the shared weight stream and the one-shot launch
+/// overhead are what batching amortizes.
+pub fn tman_gemv_batched_latency_us(
+    cfg: &NpuConfig,
+    m: usize,
+    k: usize,
+    fmt: QuantFormat,
+    batch: usize,
+) -> f64 {
     let tiling = tiling::search(cfg, fmt, m, k, 1);
-    let c = gemv_cost(cfg, m, k, fmt, &tiling, VlutVariant::Vlut16, SpillPolicy::TcmBuffer, cfg.hvx_contexts);
+    batched_latency_with(cfg, m, k, fmt, &tiling, batch)
+}
+
+/// Batched decode latencies for every width `1..=max_batch` of one shape,
+/// sharing a single tiling search (the tiling does not depend on the batch
+/// width) — what the engine uses to precompute its per-width decode cost.
+pub fn tman_gemv_batched_latency_curve(
+    cfg: &NpuConfig,
+    m: usize,
+    k: usize,
+    fmt: QuantFormat,
+    max_batch: usize,
+) -> Vec<f64> {
+    let tiling = tiling::search(cfg, fmt, m, k, 1);
+    (1..=max_batch).map(|batch| batched_latency_with(cfg, m, k, fmt, &tiling, batch)).collect()
+}
+
+/// Decode latency of one batch width under an already-searched tiling
+/// (DMA overlaps lookups, launch paid once).
+fn batched_latency_with(
+    cfg: &NpuConfig,
+    m: usize,
+    k: usize,
+    fmt: QuantFormat,
+    tiling: &UnifiedTiling,
+    batch: usize,
+) -> f64 {
+    let c = gemv_batched_cost(
+        cfg,
+        m,
+        k,
+        fmt,
+        tiling,
+        VlutVariant::Vlut16,
+        SpillPolicy::TcmBuffer,
+        cfg.hvx_contexts,
+        batch,
+    );
     c.breakdown.mem_us.max(c.breakdown.cmp_us) + c.breakdown.dq_us + c.breakdown.overhead_us
 }
 
@@ -274,6 +433,24 @@ pub fn lut_gemv(
     let kern = LutGemv::new(cfg, weights, fmt);
     let tables = precompute_tables(act, tables_block_len(weights));
     kern.run(cfg, act, &tables)
+}
+
+/// Convenience: the batched T-MAN decode GEMV (`lut_gemm_batched`) with
+/// default tiling. `acts[lane]` is one request's activation vector; each
+/// lane gets its own precomputed tables, the bit-serial weight stream is
+/// read once for the whole batch, and `ys[lane]` is bit-identical to
+/// [`lut_gemv`] on that lane alone.
+pub fn lut_gemm_batched(
+    cfg: &NpuConfig,
+    weights: &BitSerialWeights,
+    fmt: QuantFormat,
+    acts: &[&[f32]],
+) -> BatchedGemvResult {
+    let kern = LutGemv::new(cfg, weights, fmt);
+    let block_len = tables_block_len(weights);
+    let tables: Vec<ActTables> =
+        acts.iter().map(|a| precompute_tables(a, block_len)).collect();
+    kern.run_batched(cfg, &tables)
 }
 
 #[cfg(test)]
@@ -391,7 +568,75 @@ mod tests {
         let w = rng.normal_vec(32 * 64, 0.1);
         let q = rtn(&w, 32, 64, WeightDtype::Int4, Granularity::PerBlock(64));
         let bs = BitSerialWeights::from_qmatrix(&q);
-        let r = lut_gemv(&c, &bs, QuantFormat::tman_w4a16(), &vec![0.0; 64]);
+        let r = lut_gemv(&c, &bs, QuantFormat::tman_w4a16(), &[0.0f32; 64]);
         assert!(r.y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn batched_lanes_are_bit_identical_to_solo_runs() {
+        // The whole point of the batched kernel: per-lane outputs must be
+        // *bit*-identical to B independent solo GEMVs over the same
+        // weights — batching shares the weight stream, never the numerics.
+        let c = cfg();
+        for (dtype, gran, seed) in [
+            (WeightDtype::Int4, Granularity::PerBlock(64), 31u64),
+            (WeightDtype::Int2, Granularity::PerTensor, 32),
+            (WeightDtype::Int4, Granularity::PerChannel, 33),
+        ] {
+            let mut rng = Rng::new(seed);
+            let (m, k) = (48, 192);
+            let w = rng.normal_vec(m * k, 0.08);
+            let q = rtn(&w, m, k, dtype, gran);
+            let bs = BitSerialWeights::from_qmatrix(&q);
+            let fmt = QuantFormat::new(dtype, ActDtype::Fp16, gran);
+            let acts: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(k, 0.5)).collect();
+            let refs: Vec<&[f32]> = acts.iter().map(|a| a.as_slice()).collect();
+            let batched = lut_gemm_batched(&c, &bs, fmt, &refs);
+            assert_eq!(batched.ys.len(), 4);
+            for (lane, a) in refs.iter().enumerate() {
+                let solo = lut_gemv(&c, &bs, fmt, a);
+                assert_eq!(batched.ys[lane], solo.y, "{dtype} {gran} lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_cost_shares_the_weight_stream() {
+        // DDR traffic: weights + scales counted once, activations per lane;
+        // VLUT issues and precompute scale with the batch.
+        let c = cfg();
+        let mut rng = Rng::new(41);
+        let w = rng.normal_vec(256 * 512, 0.05);
+        let q = rtn(&w, 256, 512, WeightDtype::Int4, Granularity::PerBlock(64));
+        let bs = BitSerialWeights::from_qmatrix(&q);
+        let kern = LutGemv::new(&c, &bs, QuantFormat::tman_w4a16());
+        let solo = kern.batched_cost(&c, 1);
+        let four = kern.batched_cost(&c, 4);
+        let act_bytes = 512 * QuantFormat::tman_w4a16().act.bytes();
+        assert_eq!(four.ops.ddr_bytes, solo.ops.ddr_bytes + 3 * act_bytes);
+        assert_eq!(four.ops.vlut_instrs, 4 * solo.ops.vlut_instrs);
+        assert_eq!(four.ops.valu_instrs, 4 * solo.ops.valu_instrs);
+        // Batch 1 is exactly the solo cost model.
+        let plain = kern.cost(&c, 512);
+        assert_eq!(solo.breakdown, plain.breakdown);
+        assert_eq!(solo.ops, plain.ops);
+    }
+
+    #[test]
+    fn batched_latency_is_monotone_and_sublinear() {
+        let c = cfg();
+        let fmt = QuantFormat::tman_w4a16();
+        let solo = tman_gemv_batched_latency_us(&c, 4096, 4096, fmt, 1);
+        assert_eq!(solo, tman_gemv_latency_us(&c, 4096, 4096, fmt));
+        let mut prev = solo;
+        for b in 2..=8usize {
+            let t = tman_gemv_batched_latency_us(&c, 4096, 4096, fmt, b);
+            assert!(t >= prev, "batch {b}: {t} < {prev} (must be non-decreasing)");
+            assert!(
+                t < b as f64 * solo,
+                "batch {b}: {t} !< {b} x solo {solo} (weight pass not amortized)"
+            );
+            prev = t;
+        }
     }
 }

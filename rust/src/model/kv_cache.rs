@@ -160,6 +160,26 @@ impl KvSlotPool {
         &mut self.slots[slot]
     }
 
+    /// Mutable references to several *distinct* slots at once, in the order
+    /// requested — what the batched decode path needs to advance every
+    /// request of a batch in one shared-weight-pass forward. Panics on an
+    /// out-of-range or duplicated slot index.
+    pub fn get_disjoint_mut(&mut self, want: &[usize]) -> Vec<&mut KvCache> {
+        let mut order = vec![usize::MAX; self.slots.len()];
+        for (pos, &s) in want.iter().enumerate() {
+            assert!(s < self.slots.len(), "slot {s} out of range");
+            assert_eq!(order[s], usize::MAX, "slot {s} requested twice");
+            order[s] = pos;
+        }
+        let mut out: Vec<Option<&mut KvCache>> = want.iter().map(|_| None).collect();
+        for (i, cache) in self.slots.iter_mut().enumerate() {
+            if order[i] != usize::MAX {
+                out[order[i]] = Some(cache);
+            }
+        }
+        out.into_iter().map(|c| c.expect("every requested slot collected")).collect()
+    }
+
     /// Total pool footprint in bytes.
     pub fn bytes(&self) -> usize {
         self.slots.iter().map(|c| c.bytes()).sum()
@@ -312,6 +332,35 @@ mod tests {
             assert!(p.release(id));
         }
         assert_eq!(p.in_use(), 0);
+    }
+
+    #[test]
+    fn disjoint_mut_returns_requested_order() {
+        let cfg = ModelConfig::tiny();
+        let dkv = cfg.d_kv();
+        let mut p = KvSlotPool::new(&cfg, 8, 3);
+        for id in 0..3u64 {
+            let s = p.acquire(id).unwrap();
+            // Tag each slot with its id so the mapping is observable.
+            p.get_mut(s).append(0, 0, &vec![id as f32; dkv], &vec![0.0; dkv]);
+        }
+        let s2 = p.slot_of(2).unwrap();
+        let s0 = p.slot_of(0).unwrap();
+        let caches = p.get_disjoint_mut(&[s2, s0]);
+        assert_eq!(caches.len(), 2);
+        let dh = cfg.d_head();
+        assert_eq!(caches[0].k(0, 0, 0, dh)[0], 2.0);
+        assert_eq!(caches[1].k(0, 0, 0, dh)[0], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "requested twice")]
+    fn disjoint_mut_rejects_duplicates() {
+        let cfg = ModelConfig::tiny();
+        let mut p = KvSlotPool::new(&cfg, 8, 2);
+        p.acquire(1).unwrap();
+        let s = p.slot_of(1).unwrap();
+        p.get_disjoint_mut(&[s, s]);
     }
 
     #[test]

@@ -36,30 +36,61 @@ impl Linear {
         }
     }
 
-    /// y = W·x (GEMV).
+    /// y = W·x (GEMV) — a one-lane call into the shared-pass implementation.
     pub fn forward(&self, x: &[f32], y: &mut [f32]) {
+        self.forward_lanes(&[x], &mut [y]);
+    }
+
+    /// Batched GEMV: `ys[lane] = W·xs[lane]` for every lane, streaming each
+    /// weight row **once** for the whole batch — the reference-numerics
+    /// mirror of the batched LUT kernel's shared weight pass.
+    pub fn forward_batch(&self, xs: &[Vec<f32>], ys: &mut [Vec<f32>]) {
+        let xr: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mut yr: Vec<&mut [f32]> = ys.iter_mut().map(|v| v.as_mut_slice()).collect();
+        self.forward_lanes(&xr, &mut yr);
+    }
+
+    /// The single GEMV implementation both entry points share (so solo and
+    /// batched can never diverge numerically): each weight row is read —
+    /// and, for quantized matrices, decoded — once, then applied to every
+    /// lane in turn.
+    fn forward_lanes(&self, xs: &[&[f32]], ys: &mut [&mut [f32]]) {
+        assert_eq!(xs.len(), ys.len());
         match self {
             Linear::F32 { w, m, k } => {
-                assert_eq!(x.len(), *k);
-                assert_eq!(y.len(), *m);
+                for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                    assert_eq!(x.len(), *k);
+                    assert_eq!(y.len(), *m);
+                }
                 for i in 0..*m {
                     let row = &w[i * k..(i + 1) * k];
-                    let mut acc = 0.0f32;
-                    for (a, b) in row.iter().zip(x) {
-                        acc += a * b;
+                    for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                        let mut acc = 0.0f32;
+                        for (a, b) in row.iter().zip(x.iter()) {
+                            acc += a * b;
+                        }
+                        y[i] = acc;
                     }
-                    y[i] = acc;
                 }
             }
             Linear::Quant(q) => {
-                assert_eq!(x.len(), q.k);
-                assert_eq!(y.len(), q.m);
+                for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                    assert_eq!(x.len(), q.k);
+                    assert_eq!(y.len(), q.m);
+                }
+                // Decode each quantized row once, apply it to every lane.
+                let mut row = vec![0.0f32; q.k];
                 for i in 0..q.m {
-                    let mut acc = 0.0f32;
-                    for j in 0..q.k {
-                        acc += q.dequant(i, j) * x[j];
+                    for (j, r) in row.iter_mut().enumerate() {
+                        *r = q.dequant(i, j);
                     }
-                    y[i] = acc;
+                    for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                        let mut acc = 0.0f32;
+                        for (a, b) in row.iter().zip(x.iter()) {
+                            acc += a * b;
+                        }
+                        y[i] = acc;
+                    }
                 }
             }
         }
@@ -145,81 +176,124 @@ fn silu(x: f32) -> f32 {
 }
 
 impl Transformer {
-    /// Forward one token at position `pos`, updating `cache`; returns logits.
+    /// Forward one token at position `pos`, updating `cache`; returns
+    /// logits. A one-lane batch: the solo step *is*
+    /// [`Transformer::forward_batch`] with a single lane, so the two paths
+    /// cannot diverge numerically.
     pub fn forward_token(&self, token: usize, pos: usize, cache: &mut KvCache) -> Vec<f32> {
+        self.forward_batch(&[(token, pos)], &mut [cache])
+            .pop()
+            .expect("one lane in, one logits vector out")
+    }
+
+    /// Forward one decode step for a *batch* of independent requests:
+    /// `steps[lane] = (token, pos)` against `caches[lane]`. Every linear
+    /// projection streams its weights once for the whole batch
+    /// ([`Linear::forward_batch`] — the reference-numerics mirror of the
+    /// batched LUT kernel's shared weight pass); attention and the
+    /// element-wise ops run per lane against that lane's own KV cache.
+    /// Each lane's logits are bit-identical to a solo
+    /// [`Transformer::forward_token`] call.
+    pub fn forward_batch(
+        &self,
+        steps: &[(usize, usize)],
+        caches: &mut [&mut KvCache],
+    ) -> Vec<Vec<f32>> {
         let c = &self.cfg;
+        let lanes = steps.len();
+        assert!(lanes > 0, "empty decode batch");
+        assert_eq!(caches.len(), lanes, "one KV cache per batched request");
         let d = c.d_model;
         let dh = c.d_head();
         let dkv = c.d_kv();
         let groups = c.n_heads / c.n_kv_heads;
-        assert!(token < c.vocab, "token {token} out of vocab");
-        assert!(pos < c.max_seq, "pos {pos} exceeds max_seq");
+        for &(token, pos) in steps {
+            assert!(token < c.vocab, "token {token} out of vocab");
+            assert!(pos < c.max_seq, "pos {pos} exceeds max_seq");
+        }
 
-        let mut h: Vec<f32> = self.embed[token * d..(token + 1) * d].to_vec();
-        let mut normed = vec![0.0f32; d];
-        let mut q = vec![0.0f32; d];
-        let mut k = vec![0.0f32; dkv];
-        let mut v = vec![0.0f32; dkv];
-        let mut attn_out = vec![0.0f32; d];
-        let mut proj = vec![0.0f32; d];
+        let mut h: Vec<Vec<f32>> =
+            steps.iter().map(|&(t, _)| self.embed[t * d..(t + 1) * d].to_vec()).collect();
+        let mut normed = vec![vec![0.0f32; d]; lanes];
+        let mut q = vec![vec![0.0f32; d]; lanes];
+        let mut k = vec![vec![0.0f32; dkv]; lanes];
+        let mut v = vec![vec![0.0f32; dkv]; lanes];
+        let mut attn_out = vec![vec![0.0f32; d]; lanes];
+        let mut proj = vec![vec![0.0f32; d]; lanes];
+        let mut gate = vec![vec![0.0f32; c.d_ff]; lanes];
+        let mut up = vec![vec![0.0f32; c.d_ff]; lanes];
+        let mut down = vec![vec![0.0f32; d]; lanes];
 
         for (li, layer) in self.layers.iter().enumerate() {
             // --- attention ---
-            rmsnorm(&h, &layer.attn_norm, c.norm_eps, &mut normed);
-            layer.wq.forward(&normed, &mut q);
-            layer.wk.forward(&normed, &mut k);
-            layer.wv.forward(&normed, &mut v);
-            for head in 0..c.n_heads {
-                rope(&mut q[head * dh..(head + 1) * dh], pos, c.rope_theta);
+            for lane in 0..lanes {
+                rmsnorm(&h[lane], &layer.attn_norm, c.norm_eps, &mut normed[lane]);
             }
-            for kvh in 0..c.n_kv_heads {
-                rope(&mut k[kvh * dh..(kvh + 1) * dh], pos, c.rope_theta);
-            }
-            cache.append(li, pos, &k, &v);
-
-            attn_out.fill(0.0);
-            let scale = 1.0 / (dh as f32).sqrt();
-            for head in 0..c.n_heads {
-                let kvh = head / groups;
-                let qh = &q[head * dh..(head + 1) * dh];
-                let mut scores = vec![0.0f32; pos + 1];
-                for (t, s) in scores.iter_mut().enumerate() {
-                    let kt = cache.k(li, t, kvh, dh);
-                    *s = qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale;
+            // One pass over each projection's weights serves every lane.
+            layer.wq.forward_batch(&normed, &mut q);
+            layer.wk.forward_batch(&normed, &mut k);
+            layer.wv.forward_batch(&normed, &mut v);
+            for (lane, &(_, pos)) in steps.iter().enumerate() {
+                for head in 0..c.n_heads {
+                    rope(&mut q[lane][head * dh..(head + 1) * dh], pos, c.rope_theta);
                 }
-                softmax_inplace(&mut scores);
-                let out = &mut attn_out[head * dh..(head + 1) * dh];
-                for (t, &s) in scores.iter().enumerate() {
-                    let vt = cache.v(li, t, kvh, dh);
-                    for (o, &vv) in out.iter_mut().zip(vt) {
-                        *o += s * vv;
+                for kvh in 0..c.n_kv_heads {
+                    rope(&mut k[lane][kvh * dh..(kvh + 1) * dh], pos, c.rope_theta);
+                }
+                caches[lane].append(li, pos, &k[lane], &v[lane]);
+
+                attn_out[lane].fill(0.0);
+                let scale = 1.0 / (dh as f32).sqrt();
+                for head in 0..c.n_heads {
+                    let kvh = head / groups;
+                    let qh = &q[lane][head * dh..(head + 1) * dh];
+                    let mut scores = vec![0.0f32; pos + 1];
+                    for (t, s) in scores.iter_mut().enumerate() {
+                        let kt = caches[lane].k(li, t, kvh, dh);
+                        *s = qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale;
+                    }
+                    softmax_inplace(&mut scores);
+                    let out = &mut attn_out[lane][head * dh..(head + 1) * dh];
+                    for (t, &s) in scores.iter().enumerate() {
+                        let vt = caches[lane].v(li, t, kvh, dh);
+                        for (o, &vv) in out.iter_mut().zip(vt) {
+                            *o += s * vv;
+                        }
                     }
                 }
             }
-            layer.wo.forward(&attn_out, &mut proj);
-            for (hv, p) in h.iter_mut().zip(&proj) {
-                *hv += p;
+            layer.wo.forward_batch(&attn_out, &mut proj);
+            for lane in 0..lanes {
+                for (hv, p) in h[lane].iter_mut().zip(&proj[lane]) {
+                    *hv += p;
+                }
             }
 
             // --- MLP ---
-            rmsnorm(&h, &layer.mlp_norm, c.norm_eps, &mut normed);
-            let mut gate = vec![0.0f32; c.d_ff];
-            let mut up = vec![0.0f32; c.d_ff];
-            layer.w_gate.forward(&normed, &mut gate);
-            layer.w_up.forward(&normed, &mut up);
-            for (g, u) in gate.iter_mut().zip(&up) {
-                *g = silu(*g) * u;
+            for lane in 0..lanes {
+                rmsnorm(&h[lane], &layer.mlp_norm, c.norm_eps, &mut normed[lane]);
             }
-            let mut down = vec![0.0f32; d];
-            layer.w_down.forward(&gate, &mut down);
-            for (hv, dn) in h.iter_mut().zip(&down) {
-                *hv += dn;
+            layer.w_gate.forward_batch(&normed, &mut gate);
+            layer.w_up.forward_batch(&normed, &mut up);
+            for lane in 0..lanes {
+                for (g, u) in gate[lane].iter_mut().zip(&up[lane]) {
+                    *g = silu(*g) * u;
+                }
+            }
+            layer.w_down.forward_batch(&gate, &mut down);
+            for lane in 0..lanes {
+                for (hv, dn) in h[lane].iter_mut().zip(&down[lane]) {
+                    *hv += dn;
+                }
             }
         }
 
-        rmsnorm(&h.clone(), &self.final_norm, c.norm_eps, &mut h);
-        let mut logits = vec![0.0f32; c.vocab];
-        self.lm_head.forward(&h, &mut logits);
+        for lane in 0..lanes {
+            let hc = h[lane].clone();
+            rmsnorm(&hc, &self.final_norm, c.norm_eps, &mut h[lane]);
+        }
+        let mut logits = vec![vec![0.0f32; c.vocab]; lanes];
+        self.lm_head.forward_batch(&h, &mut logits);
         logits
     }
 
@@ -337,6 +411,75 @@ mod tests {
         for (pos, &t) in tokens.iter().enumerate() {
             let inc = model.forward_token(t, pos, &mut cache);
             assert_eq!(seq[pos], inc, "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn forward_batch_is_bit_identical_to_solo_forwards() {
+        // The shared-weight-pass batched forward must not perturb numerics:
+        // each lane's logits are byte-identical to forward_token against
+        // the same cache — for fp32 and quantized projections alike.
+        for quantize in [false, true] {
+            let mut model = random_transformer(&ModelConfig::tiny(), 17);
+            if quantize {
+                model = model.quantized(WeightDtype::Int4, Granularity::PerBlock(64), false);
+            }
+            // Lanes at different positions with different histories.
+            let histories: [&[usize]; 3] = [&[65, 66], &[90], &[12, 34, 56]];
+            let mut caches: Vec<KvCache> =
+                (0..3).map(|_| KvCache::new(&model.cfg, 16)).collect();
+            let mut solo_caches: Vec<KvCache> =
+                (0..3).map(|_| KvCache::new(&model.cfg, 16)).collect();
+            for (lane, hist) in histories.iter().enumerate() {
+                for (pos, &t) in hist.iter().enumerate() {
+                    model.forward_token(t, pos, &mut caches[lane]);
+                    model.forward_token(t, pos, &mut solo_caches[lane]);
+                }
+            }
+            let steps: Vec<(usize, usize)> = histories
+                .iter()
+                .enumerate()
+                .map(|(lane, h)| (100 + lane, h.len()))
+                .collect();
+            let mut cache_refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            let batched = model.forward_batch(&steps, &mut cache_refs);
+            for (lane, &(tok, pos)) in steps.iter().enumerate() {
+                let solo = model.forward_token(tok, pos, &mut solo_caches[lane]);
+                assert_eq!(batched[lane], solo, "quantize={quantize} lane {lane}");
+            }
+            // The batched step advanced the caches exactly like solo steps.
+            for (a, b) in caches.iter().zip(&solo_caches) {
+                assert_eq!(a.len, b.len);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_of_one_matches_forward_token() {
+        let model = random_transformer(&ModelConfig::tiny(), 23);
+        let mut c1 = KvCache::new(&model.cfg, 8);
+        let mut c2 = KvCache::new(&model.cfg, 8);
+        let mut refs: Vec<&mut KvCache> = vec![&mut c1];
+        let batched = model.forward_batch(&[(65, 0)], &mut refs);
+        let solo = model.forward_token(65, 0, &mut c2);
+        assert_eq!(batched[0], solo);
+    }
+
+    #[test]
+    fn linear_forward_batch_matches_forward() {
+        let mut rng = Rng::new(5);
+        let (m, k) = (12, 40);
+        let lin = Linear::F32 { w: rng.normal_vec(m * k, 0.3), m, k };
+        let qlin = lin.quantized(WeightDtype::Int4, Granularity::PerChannel, false);
+        let xs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(k, 1.0)).collect();
+        for l in [&lin, &qlin] {
+            let mut ys = vec![vec![0.0f32; m]; 3];
+            l.forward_batch(&xs, &mut ys);
+            for (x, y) in xs.iter().zip(&ys) {
+                let mut want = vec![0.0f32; m];
+                l.forward(x, &mut want);
+                assert_eq!(*y, want);
+            }
         }
     }
 

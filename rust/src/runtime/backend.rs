@@ -8,10 +8,11 @@
 //! - [`ReferenceBackend`]: the pure-Rust reference transformer over a
 //!   [`KvSlotPool`] of per-request caches, addressed by request id on every
 //!   call. Always available; this is what the multi-request serving loop
-//!   and the CLI run by default. `decode_batch` loops one forward per
-//!   request against its own slot — the API leaves room for a true batched
-//!   kernel (one weight pass serving the whole batch) without changing the
-//!   engine above it.
+//!   and the CLI run by default. `decode_batch` is a *real* batched step:
+//!   one shared pass over every projection's weights advances all requests
+//!   of the batch together (`Transformer::forward_batch`), each against its
+//!   own KV slot, with per-request logits bit-identical to sequential
+//!   single steps.
 //! - `Pjrt` (behind the `pjrt` feature): the AOT artifacts executed through
 //!   PJRT, single device-resident KV cache (batch 1 on device, no resume).
 //!
@@ -165,16 +166,29 @@ impl ReferenceBackend {
         Ok(self.model.forward_token(token as usize, pos as usize, cache))
     }
 
-    /// One decode step per batch entry, each against its own KV slot. A
-    /// plain per-request loop today; a true batched kernel would share one
-    /// pass over the quantized weights across the batch.
+    /// One decode step for the whole batch through the *batched* forward:
+    /// every linear projection streams its weights once and applies them to
+    /// all requests' activations ([`Transformer::forward_batch`], the
+    /// numerics mirror of the batched LUT kernel), while each request's
+    /// attention runs against its own KV slot. Per-request logits are
+    /// bit-identical to sequential [`ReferenceBackend::decode_step`] calls.
     pub fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<Vec<Vec<f32>>> {
         anyhow::ensure!(!steps.is_empty(), "empty decode batch");
-        let mut logits = Vec::with_capacity(steps.len());
-        for &(id, token, pos) in steps {
-            logits.push(self.decode_step(id, token, pos)?);
+        let vocab = self.model.cfg.vocab;
+        let mut slots = Vec::with_capacity(steps.len());
+        let mut lanes = Vec::with_capacity(steps.len());
+        for (i, &(id, token, pos)) in steps.iter().enumerate() {
+            anyhow::ensure!(
+                steps[..i].iter().all(|&(prev, _, _)| prev != id),
+                "request {id} appears twice in one decode batch"
+            );
+            anyhow::ensure!(token >= 0 && (token as usize) < vocab, "token {token} out of vocab");
+            anyhow::ensure!(pos >= 0, "negative position {pos}");
+            slots.push(self.slot_for(id)?);
+            lanes.push((token as usize, pos as usize));
         }
-        Ok(logits)
+        let mut caches = self.pool.get_disjoint_mut(&slots);
+        Ok(self.model.forward_batch(&lanes, &mut caches))
     }
 
     pub fn prefill_chunk(&mut self, id: u64, tokens: &[i32], pos_base: i32) -> Result<Vec<f32>> {
@@ -263,7 +277,8 @@ impl Backend {
         }
     }
 
-    /// One decode step per batch entry, each against its own KV slot.
+    /// One *batched* decode step: a single shared weight pass advances
+    /// every `(id, token, pos)` entry, each against its own KV slot.
     pub fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<Vec<Vec<f32>>> {
         match self {
             Backend::Reference(b) => b.decode_batch(steps),
@@ -422,6 +437,17 @@ mod tests {
             let solo = b.decode_step(id, tok, pos).unwrap();
             assert_eq!(batched[i], solo, "request {id}");
         }
+    }
+
+    #[test]
+    fn decode_batch_rejects_duplicate_ids() {
+        // Two lanes over one KV slot would corrupt the cache; the batched
+        // forward must refuse before touching anything.
+        let mut b = backend(2);
+        b.begin_request(1).unwrap();
+        assert!(b.decode_batch(&[(1, 65, 0), (1, 66, 0)]).is_err());
+        // The slot is still usable afterwards.
+        assert_eq!(b.decode_batch(&[(1, 65, 0)]).unwrap().len(), 1);
     }
 
     #[test]

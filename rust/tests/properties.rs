@@ -209,6 +209,118 @@ fn prop_scheduler_randomized_invariants() {
     }
 }
 
+/// Property: batched decode through the shared-weight-pass kernel is
+/// *byte-identical* to sequential single steps, and the kernel-derived
+/// batch cost amortizes the weight stream. Over 8 seeds and B ∈ {2, 4, 8},
+/// with random tokens, random per-request context lengths (so positions
+/// differ across lanes) and random KV-slot churn (transient requests
+/// scramble the id→slot mapping between rounds):
+///
+/// - `decode_batch` logits equal B sequential `decode_step` calls exactly
+///   (bit-for-bit), round after round;
+/// - modeled batch latency is non-decreasing in B but strictly below B×
+///   the single-step latency — the shared weight pass is what batching
+///   buys, and it never comes at the price of numerics.
+#[test]
+fn prop_batched_decode_parity_and_sublinear_cost() {
+    use tman::coordinator::engine::Engine;
+    use tman::model::config::ModelConfig;
+    use tman::model::weights::random_transformer;
+    use tman::npu::config::SocConfig;
+
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0xBA7C_0000 ^ seed);
+        let model = random_transformer(&ModelConfig::tiny(), 40 + seed);
+        let vocab = model.cfg.vocab;
+        // Capacity 12: room for the widest batch (8) plus churn ids.
+        let mut batched =
+            Engine::reference(model.clone(), SocConfig::oneplus12(), 16, 4, 12).expect("engine");
+        let mut solo =
+            Engine::reference(model, SocConfig::oneplus12(), 16, 4, 12).expect("engine");
+
+        for (round, &b) in [2usize, 4, 8].iter().enumerate() {
+            let ids: Vec<u64> = (0..b as u64).map(|l| 100 * (round as u64 + 1) + l).collect();
+            let mut positions: Vec<usize> = Vec::with_capacity(b);
+            for &id in &ids {
+                // Slot churn on the batched engine only: a transient
+                // request holds the next free slot *while* the lane is
+                // admitted, then releases it — so the lane lands on a
+                // different slot than in the solo engine and the id→slot
+                // mapping is scrambled across lanes.
+                let churn = if rng.below(2) == 0 {
+                    let t = 90_000 + id;
+                    batched.begin_request(t).expect("churn slot");
+                    Some(t)
+                } else {
+                    None
+                };
+                batched.begin_request(id).expect("begin");
+                solo.begin_request(id).expect("begin");
+                if let Some(t) = churn {
+                    batched.end_request(t);
+                }
+                // Random-length context: lanes decode at different positions.
+                let ctx = 1 + rng.below(4);
+                for pos in 0..ctx {
+                    let t = rng.below(vocab);
+                    let (a, _) = batched.decode_token(id, t, pos).expect("ctx");
+                    let (c, _) = solo.decode_token(id, t, pos).expect("ctx");
+                    assert_eq!(a, c, "seed {seed}: context diverged before batching");
+                }
+                positions.push(ctx);
+            }
+            for _ in 0..3 {
+                let steps: Vec<(u64, usize, usize)> = ids
+                    .iter()
+                    .zip(&positions)
+                    .map(|(&id, &pos)| (id, rng.below(vocab), pos))
+                    .collect();
+                let (batch_logits, per_us) = batched.decode_batch(&steps).expect("batch");
+                assert_eq!(batch_logits.len(), b);
+                let mut solo_us_sum = 0.0;
+                for (i, &(id, tok, pos)) in steps.iter().enumerate() {
+                    let (want, us) = solo.decode_token(id, tok, pos).expect("single");
+                    assert_eq!(
+                        batch_logits[i], want,
+                        "seed {seed} B={b} req {id}: batched logits diverged"
+                    );
+                    solo_us_sum += us;
+                }
+                let batch_us: f64 = per_us.iter().sum();
+                assert!(
+                    batch_us < solo_us_sum,
+                    "seed {seed} B={b}: batch {batch_us} !< solo sum {solo_us_sum}"
+                );
+                for p in positions.iter_mut() {
+                    *p += 1;
+                }
+            }
+            for &id in &ids {
+                batched.end_request(id);
+                solo.end_request(id);
+            }
+        }
+
+        // Modeled batch latency: non-decreasing in B, strictly sub-linear.
+        let ctx = 2 + rng.below(6);
+        let single = batched.sim_decode_us(ctx);
+        let mut prev = 0.0;
+        for b in 1..=8usize {
+            let us = batched.sim_decode_batch_us(&vec![ctx; b]);
+            assert!(us >= prev, "seed {seed} B={b}: batch latency decreased");
+            if b == 1 {
+                assert!((us - single).abs() < 1e-12, "seed {seed}: B=1 must equal solo");
+            } else {
+                assert!(
+                    us < b as f64 * single,
+                    "seed {seed} B={b}: {us} !< {b}x solo {single}"
+                );
+            }
+            prev = us;
+        }
+    }
+}
+
 /// Property: the unified-tiling search always returns a tiling satisfying
 /// Eqns. 1-4 and matching phase extents, for random shapes and formats.
 #[test]

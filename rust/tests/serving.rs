@@ -187,6 +187,94 @@ fn saturated_decode_batches_report_occupancy_above_one() {
 }
 
 #[test]
+fn urgent_request_evicts_a_low_priority_decode_lane() {
+    // An urgent arrival finds the (width-1) decode batch occupied by a
+    // low-priority request: preemption-aware admission must evict that
+    // lane between batches rather than stall the urgent request until the
+    // lane drains. The evicted request keeps its KV slot and its progress,
+    // resumes once the urgent request finishes, and still generates its
+    // full budget. The server cross-checks scheduler-vs-engine slot
+    // accounting after every work item, so any slot leak fails the run.
+    let eviction_trace = vec![
+        TraceRequest {
+            id: 1,
+            arrival_us: 0.0,
+            priority: 4,
+            prompt: "the lookup table".to_string(),
+            max_new_tokens: 12,
+        },
+        TraceRequest {
+            id: 2,
+            arrival_us: 1.0,
+            priority: 0,
+            prompt: "hi there".to_string(),
+            max_new_tokens: 3,
+        },
+    ];
+    let mut server = Server::new(engine_with(16, 3), ServeOpts::default());
+    let fleet = server.run(&eviction_trace).expect("serve");
+    assert!(fleet.decode_evictions >= 1, "the urgent request must evict, not stall");
+    assert_eq!(fleet.completions.len(), 2);
+    assert_eq!(fleet.completions[0].id, 2, "the urgent request must finish first");
+    let evicted = &fleet.completions[1];
+    assert_eq!(evicted.id, 1);
+    assert_eq!(
+        evicted.generated_tokens, 12,
+        "eviction must preserve the generated-token count (full budget)"
+    );
+    assert_eq!(evicted.prefilled_tokens, evicted.prompt_tokens);
+    assert_eq!(server.engine().kv_slots_in_use(), 0, "no slot may leak across eviction");
+
+    // The evicted request's output is byte-identical to serving it alone —
+    // eviction reorders work, never numerics or sampling state.
+    let alone = vec![eviction_trace[0].clone()];
+    let solo = Server::new(engine_with(16, 3), ServeOpts::default()).run(&alone).expect("solo");
+    assert_eq!(solo.decode_evictions, 0);
+    assert_eq!(solo.completions[0].text, evicted.text, "evicted output diverged");
+}
+
+#[test]
+fn decode_batches_report_kernel_derived_cost() {
+    // The fleet metrics must carry the batched kernel's cost: per-request
+    // attribution sums exactly to the accumulated batch cost, and the same
+    // decode work costs strictly less total simulated time at width 4 than
+    // at width 1 (the shared weight pass, visible end to end).
+    let trace: Vec<TraceRequest> = (0..6)
+        .map(|i| TraceRequest {
+            id: i + 1,
+            arrival_us: 0.0,
+            priority: 0,
+            prompt: "a short interactive prompt".to_string(),
+            max_new_tokens: 12,
+        })
+        .collect();
+    let wide = Server::new(engine_with(16, 6), ServeOpts { max_batch: 4, ..Default::default() })
+        .run(&trace)
+        .expect("wide");
+    let narrow = Server::new(engine_with(16, 6), ServeOpts { max_batch: 1, ..Default::default() })
+        .run(&trace)
+        .expect("narrow");
+    assert!(wide.decode_batch_mean_us() > 0.0);
+    assert!(wide.decode_batches_executed > 0);
+    assert!(wide.decode_batches_executed <= wide.decode_batches);
+    let per_request_decode: f64 = wide.completions.iter().map(|c| c.sim_decode_us).sum();
+    assert!(
+        (wide.decode_batch_sim_us - per_request_decode).abs() < 1e-6,
+        "batch cost attribution must sum to per-request decode time"
+    );
+    assert!(wide.decode_batch_occupancy() > 1.0);
+    // Identical decode work (byte-identical outputs => identical forwards
+    // and contexts), strictly cheaper in total when batched: the weight
+    // stream is shared instead of replayed per request.
+    assert!(
+        wide.decode_batch_sim_us < narrow.decode_batch_sim_us,
+        "a wider batch must amortize the weight pass: {} !< {}",
+        wide.decode_batch_sim_us,
+        narrow.decode_batch_sim_us
+    );
+}
+
+#[test]
 fn stop_byte_finishes_a_request_early_without_leaking() {
     // Predict the first greedy token of the prompt with the same weights,
     // then serve with that byte as the stop byte: the request completes
