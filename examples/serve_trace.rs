@@ -1,12 +1,19 @@
 //! Multi-request serving demo on the always-available reference backend:
-//! generate a synthetic mixed trace (short interactive prompts vs long
+//! generate a synthetic mixed workload (short interactive prompts vs long
 //! documents), run it through the scheduler-driven serving loop, and print
 //! per-request and fleet metrics.
 //!
-//! Run: `cargo run --release --example serve_trace [n_requests] [max_batch]`
+//! Two load models:
+//! - open loop (default): a pre-computed trace with exponential
+//!   inter-arrival gaps — arrivals ignore completions;
+//! - closed loop (`clients > 0`): a bounded population of clients, each
+//!   keeping one request in flight and thinking 2 ms between its completion
+//!   and its next submission.
+//!
+//! Run: `cargo run --release --example serve_trace [n_requests] [max_batch] [clients]`
 
 use tman::coordinator::engine::Engine;
-use tman::coordinator::server::{synthetic_trace, ServeOpts, Server, TraceProfile};
+use tman::coordinator::server::{synthetic_trace, ClosedLoopOpts, ServeOpts, Server, TraceProfile};
 use tman::model::config::ModelConfig;
 use tman::model::weights::random_transformer;
 use tman::npu::config::SocConfig;
@@ -14,19 +21,29 @@ use tman::npu::config::SocConfig;
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(16);
     let max_batch: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let clients: usize = std::env::args().nth(3).and_then(|s| s.parse().ok()).unwrap_or(0);
     let model = random_transformer(&ModelConfig::tiny(), 42);
     let engine = Engine::reference(model, SocConfig::oneplus12(), 16, 4, max_batch + 2)?;
+    let load = if clients > 0 {
+        format!("closed loop, {clients} clients, 2 ms think")
+    } else {
+        "open-loop trace".to_string()
+    };
     println!(
-        "serving {n} synthetic requests on {} (chunk {}, decode batch {}, {} tok max ctx)\n",
+        "serving {n} synthetic requests on {} ({load}, chunk {}, decode batch {}, {} tok max ctx)\n",
         engine.soc.name,
         engine.chunk(),
         max_batch,
         engine.max_seq()
     );
-    let trace = synthetic_trace(n, 1, &TraceProfile::tiny());
     let opts = ServeOpts { verbose: true, max_batch, ..Default::default() };
     let mut server = Server::new(engine, opts);
-    let fleet = server.run(&trace)?;
+    let fleet = if clients > 0 {
+        let cl = ClosedLoopOpts { total: n, concurrency: clients, think_us: 2_000.0, seed: 1 };
+        server.run_closed_loop(&cl, &TraceProfile::tiny())?
+    } else {
+        server.run(&synthetic_trace(n, 1, &TraceProfile::tiny()))?
+    };
     println!("\n{}", fleet.report());
     Ok(())
 }

@@ -22,17 +22,23 @@
 //!   applied to all requests' activation tables) and prices it with the
 //!   kernel's own batched cost model — table-lookup GEMV is weight-traffic
 //!   bound, so one pass over the quantized weights serves every request.
+//!
+//! Since the unified phase-kernel redesign, *both* phases are priced from
+//! one place: the engine holds a [`PlanCosts`] per distinct projection
+//! shape (a single unified-tiling search each) and derives every prefill
+//! chunk from the plan's pipelined three-stage mpGEMM model and every
+//! decode batch from the same plan's batched LUT-GEMV model. The old
+//! ad-hoc prefill-chunk formula (a MACs/TOPS estimate detached from the
+//! kernel's pipeline) is gone.
 
 use crate::coordinator::metrics::{sim_energy_j, PhaseTimer, RequestMetrics};
-use crate::kernels::dequant_gemm::tman_gemm_latency_us;
-use crate::kernels::lut_gemv::{
-    tman_gemv_batched_latency_curve, tman_gemv_batched_latency_us, tman_gemv_latency_us,
-};
+use crate::kernels::plan::PlanCosts;
 use crate::model::sampler;
 use crate::model::tokenizer;
 use crate::model::transformer::Transformer;
 use crate::npu::config::SocConfig;
 use crate::npu::energy::Placement;
+use crate::npu::hmx::{self, HmxPrecision};
 use crate::npu::memory::LoadMethod;
 use crate::quant::formats::{ActDtype, Granularity, QuantFormat, WeightDtype};
 use crate::runtime::backend::{Backend, DecodeStep, ModelShape, ReferenceBackend};
@@ -76,20 +82,42 @@ fn quant_format(bits: u32, block: usize) -> QuantFormat {
     )
 }
 
+/// How the engine routes one prefill slice — the formerly silent remainder
+/// branch of the chunked-prefill path, now an explicit, tested decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SliceRoute {
+    /// Exactly one planned chunk: the HMX matrix path (planned prefill
+    /// GEMM pass), priced by the plan's three-stage pipelined cost.
+    MatrixPath,
+    /// The ragged remainder of a prompt (shorter than the chunk) or a
+    /// deployment without a prefill executable: teacher-forced through the
+    /// decode path, priced per token by the same plan's decode cost.
+    DecodeTail,
+}
+
 /// The serving engine.
 pub struct Engine {
     backend: Backend,
     pub soc: SocConfig,
     pub fmt: QuantFormat,
     shape: ModelShape,
+    /// One plan cost surface per *distinct* per-layer projection shape
+    /// (with how many projections share it) — a single unified-tiling
+    /// search per shape prices both phases at every batch width.
+    proj_costs: Vec<(PlanCosts, usize)>,
+    /// The lm head's plan cost surface (runs once per emitted token: as the
+    /// final GEMV of a prefill chunk and as a lane of every decode batch).
+    head_costs: PlanCosts,
     /// Simulated µs of the projection kernels for one decode batch of
-    /// width `b` (`decode_proj_batch_us[b - 1]`), derived from the batched
-    /// LUT-GEMV cost model (shared weight DMA + per-lane VLUT issue),
-    /// precomputed up to the backend's KV-slot capacity. Entry 0 is the
-    /// solo decode cost.
+    /// width `b` (`decode_proj_batch_us[b - 1]`), derived from the plan
+    /// cost surface's batched LUT-GEMV model (shared weight DMA + per-lane
+    /// VLUT issue), precomputed up to the backend's KV-slot capacity.
+    /// Entry 0 is the solo decode cost.
     decode_proj_batch_us: Vec<f64>,
-    /// Simulated µs per prefill chunk (projection kernels).
-    sim_prefill_chunk_us: f64,
+    /// Simulated µs of the projection kernels for one full prefill chunk:
+    /// the plan cost surface's pipelined mpGEMM total summed over every
+    /// projection, plus one lm-head GEMV for the chunk's last position.
+    prefill_chunk_proj_us: f64,
 }
 
 impl Engine {
@@ -99,7 +127,34 @@ impl Engine {
         let runtime = NpuModelRuntime::load(artifacts)
             .with_context(|| format!("loading artifacts from {}", artifacts.display()))?;
         let shape = ModelShape::from_meta(&runtime.meta);
+        Self::validate_chunk(&soc, &shape)?;
         Ok(Self::assemble(Backend::Pjrt(runtime), soc, shape))
+    }
+
+    /// Chunk-length invariants every constructor enforces, whatever the
+    /// backend: the chunk must fit the context window, and the matrix path
+    /// executes a chunk as padded (HMX-tile × HMX-tile) MMA tiles, so a
+    /// chunk that *straddles* tile boundaries (e.g. 48 on a 32-wide HMX)
+    /// silently wastes a whole padded tile row in every projection of
+    /// every slice and is rejected: use a multiple of the tile, or a
+    /// sub-tile chunk (which occupies exactly one padded tile — the
+    /// documented small-chunk trade-off). Prompts are still allowed to be
+    /// ragged: the remainder slice shorter than the chunk is routed down
+    /// the decode path ([`SliceRoute::DecodeTail`]), never through a
+    /// partial GEMM.
+    fn validate_chunk(soc: &SocConfig, shape: &ModelShape) -> Result<()> {
+        let (chunk, mma) = (shape.chunk, soc.npu.hmx_tile);
+        anyhow::ensure!(
+            chunk <= shape.seq,
+            "prefill chunk {chunk} exceeds max_seq {}",
+            shape.seq
+        );
+        anyhow::ensure!(
+            chunk % mma == 0 || chunk < mma,
+            "prefill chunk {chunk} straddles {mma}-wide HMX tiles: \
+             use a multiple of {mma}, or a chunk below {mma}"
+        );
+        Ok(())
     }
 
     /// Build an engine over the pure-Rust reference backend: `model` runs
@@ -117,6 +172,7 @@ impl Engine {
         anyhow::ensure!(kv_slots > 0, "need at least one KV slot");
         anyhow::ensure!(bits == 2 || bits == 4, "bits must be 2 or 4, got {bits}");
         let shape = ModelShape::from_config(&model.cfg, chunk, bits, 64);
+        Self::validate_chunk(&soc, &shape)?;
         let backend = Backend::Reference(ReferenceBackend::new(model, kv_slots));
         Ok(Self::assemble(backend, soc, shape))
     }
@@ -125,32 +181,50 @@ impl Engine {
         let fmt = quant_format(shape.bits, shape.block);
         let npu = &soc.npu;
         let chunk = shape.chunk.max(1);
-        // Decode projections priced by the batched LUT-GEMV kernel for
-        // every batch width a KV slot could back (entry 0 = solo decode).
-        // The lm head runs once per token like any other projection.
-        let max_batch = backend.kv_slot_capacity().max(1);
-        let mut dec_batch = vec![0.0f64; max_batch];
-        let mut gemv_shapes = shape.proj_shapes();
-        gemv_shapes.push((shape.vocab, shape.d_model));
-        for &(m, k) in &gemv_shapes {
-            // One tiling search per shape covers every batch width.
-            let curve = tman_gemv_batched_latency_curve(npu, m, k, fmt, max_batch);
-            for (acc, us) in dec_batch.iter_mut().zip(curve) {
-                *acc += us;
+        // One plan cost surface per *distinct* projection shape: the
+        // unified tiling is searched once and prices both phases — the
+        // chunked prefill GEMM and every decode-batch width a KV slot
+        // could back.
+        let mut uniq: Vec<((usize, usize), usize)> = Vec::new();
+        for s in shape.proj_shapes() {
+            match uniq.iter_mut().find(|(u, _)| *u == s) {
+                Some((_, count)) => *count += 1,
+                None => uniq.push((s, 1)),
             }
         }
+        let proj_costs: Vec<(PlanCosts, usize)> = uniq
+            .into_iter()
+            .map(|((m, k), count)| (PlanCosts::for_shape(npu, fmt, m, k, chunk), count))
+            .collect();
+        let head_costs = PlanCosts::for_shape(npu, fmt, shape.vocab, shape.d_model, chunk);
+
+        let max_batch = backend.kv_slot_capacity().max(1);
+        let mut dec_batch = vec![0.0f64; max_batch];
         let mut pre = 0.0;
-        for (m, k) in shape.proj_shapes() {
-            pre += tman_gemm_latency_us(npu, chunk, m, k, fmt);
+        for (pc, count) in &proj_costs {
+            let curve = pc.decode_curve(npu, max_batch);
+            for (acc, us) in dec_batch.iter_mut().zip(curve) {
+                *acc += *count as f64 * us;
+            }
+            // Prefill: the plan's pipelined three-stage mpGEMM total.
+            pre += *count as f64 * pc.prefill_us(npu, chunk);
         }
-        pre += tman_gemv_latency_us(npu, shape.vocab, shape.d_model, fmt);
+        // The lm head joins every decode batch as one more planned GEMV,
+        // and closes a prefill chunk as a single-lane GEMV (only the last
+        // position's logits are consumed).
+        for (acc, us) in dec_batch.iter_mut().zip(head_costs.decode_curve(npu, max_batch)) {
+            *acc += us;
+        }
+        pre += head_costs.decode_us(npu, 1);
         Self {
             backend,
             soc,
             fmt,
             shape,
+            proj_costs,
+            head_costs,
             decode_proj_batch_us: dec_batch,
-            sim_prefill_chunk_us: pre,
+            prefill_chunk_proj_us: pre,
         }
     }
 
@@ -179,10 +253,11 @@ impl Engine {
     }
 
     /// Kernel-derived projection cost of one decode batch of width `b`, µs:
-    /// the batched LUT-GEMV cost model summed over every projection (and
-    /// the lm head) — one shared bit-serial weight stream, per-lane table
-    /// precompute and VLUT issues, one kernel launch. Batch widths beyond
-    /// the precomputed KV-slot capacity are priced on demand.
+    /// the plan cost surface's batched LUT-GEMV model summed over every
+    /// projection (and the lm head) — one shared bit-serial weight stream,
+    /// per-lane table precompute and VLUT issues, one kernel launch. Batch
+    /// widths beyond the precomputed KV-slot capacity are priced on demand
+    /// from the same per-shape plans (no extra tiling search).
     pub fn sim_decode_batch_proj_us(&self, b: usize) -> f64 {
         assert!(b > 0, "batch must hold at least one request");
         if let Some(&us) = self.decode_proj_batch_us.get(b - 1) {
@@ -190,10 +265,10 @@ impl Engine {
         }
         let npu = &self.soc.npu;
         let mut total = 0.0;
-        for (m, k) in self.shape.proj_shapes() {
-            total += tman_gemv_batched_latency_us(npu, m, k, self.fmt, b);
+        for (pc, count) in &self.proj_costs {
+            total += *count as f64 * pc.decode_us(npu, b);
         }
-        total + tman_gemv_batched_latency_us(npu, self.shape.vocab, self.shape.d_model, self.fmt, b)
+        total + self.head_costs.decode_us(npu, b)
     }
 
     /// Simulated on-device time for one *batched* decode step over requests
@@ -212,11 +287,18 @@ impl Engine {
         proj + kv
     }
 
-    /// Simulated on-device time for one prefill chunk ending at `ctx`.
-    pub fn sim_prefill_chunk_us(&self, ctx: usize) -> f64 {
-        // Chunk attention ~ chunk x ctx MACs on HMX; small at these sizes.
-        let macs = 2.0 * (self.shape.n_layers * self.shape.chunk * ctx * self.shape.d_model) as f64;
-        self.sim_prefill_chunk_us + macs / (self.soc.npu.hmx_tops_fp16 * 1e6)
+    /// Simulated on-device time for one full prefill chunk ending at `ctx`:
+    /// the plan cost surface's pipelined mpGEMM total over every projection
+    /// (precomputed once per engine), plus the chunk's attention — per
+    /// layer, a (chunk × ctx) score GEMM and its (chunk × ctx) weighted sum
+    /// over the model width, both priced by the HMX matrix-core model
+    /// (tile-padded), not a hand-rolled MACs/TOPS constant.
+    pub fn plan_prefill_chunk_us(&self, ctx: usize) -> f64 {
+        let npu = &self.soc.npu;
+        let (n, d) = (self.shape.chunk, self.shape.d_model);
+        let attn = hmx::hmx_gemm_time_us(npu, n, ctx, d, HmxPrecision::Fp16)
+            + hmx::hmx_gemm_time_us(npu, n, d, ctx, HmxPrecision::Fp16);
+        self.prefill_chunk_proj_us + self.shape.n_layers as f64 * attn
     }
 
     // ---- step-level API (driven by the multi-request serving loop) ----
@@ -247,11 +329,26 @@ impl Engine {
         self.backend.kv_slot_capacity()
     }
 
+    /// Explicit routing decision for a prefill slice of length `len`:
+    /// exactly one planned chunk takes the matrix path; anything else — the
+    /// ragged remainder of a prompt, or a deployment without a prefill
+    /// executable — takes the decode tail. This is the branch
+    /// [`Engine::prefill_slice`] executes and prices; it used to be an
+    /// undocumented `if` buried in the slice runner.
+    pub fn slice_route(&self, len: usize) -> SliceRoute {
+        if len == self.shape.chunk && self.backend.has_prefill() {
+            SliceRoute::MatrixPath
+        } else {
+            SliceRoute::DecodeTail
+        }
+    }
+
     /// Run one prefill slice `[start, start + slice.len())` of request
-    /// `id`. Exactly-`chunk`-sized slices go through the matrix path; the
-    /// ragged tail is teacher-forced through the decode path (same
-    /// numerics, per-token cost). Returns the logits at the last position
-    /// and the simulated on-device µs.
+    /// `id`, down the route [`Engine::slice_route`] picks: the matrix path
+    /// runs the planned chunk pass and is priced by the plan's pipelined
+    /// cost; the decode tail is teacher-forced token by token at the
+    /// decode-path cost (same numerics either way). Returns the logits at
+    /// the last position and the simulated on-device µs.
     pub fn prefill_slice(
         &mut self,
         id: u64,
@@ -260,21 +357,25 @@ impl Engine {
     ) -> Result<(Vec<f32>, f64)> {
         anyhow::ensure!(!slice.is_empty(), "empty prefill slice");
         anyhow::ensure!(start + slice.len() <= self.shape.seq, "prefill past max_seq");
-        if slice.len() == self.shape.chunk && self.backend.has_prefill() {
-            let toks: Vec<i32> = slice.iter().map(|&t| t as i32).collect();
-            let logits = self.backend.prefill_chunk(id, &toks, start as i32)?;
-            let us = self.sim_prefill_chunk_us(start + slice.len());
-            return Ok((logits, us));
+        match self.slice_route(slice.len()) {
+            SliceRoute::MatrixPath => {
+                let toks: Vec<i32> = slice.iter().map(|&t| t as i32).collect();
+                let logits = self.backend.prefill_chunk(id, &toks, start as i32)?;
+                let us = self.plan_prefill_chunk_us(start + slice.len());
+                Ok((logits, us))
+            }
+            SliceRoute::DecodeTail => {
+                let mut us = 0.0;
+                let mut logits = Vec::new();
+                let mut pos = start;
+                for &t in slice {
+                    logits = self.backend.decode_step(id, t as i32, pos as i32)?;
+                    us += self.sim_decode_us(pos + 1);
+                    pos += 1;
+                }
+                Ok((logits, us))
+            }
         }
-        let mut us = 0.0;
-        let mut logits = Vec::new();
-        let mut pos = start;
-        for &t in slice {
-            logits = self.backend.decode_step(id, t as i32, pos as i32)?;
-            us += self.sim_decode_us(pos + 1);
-            pos += 1;
-        }
-        Ok((logits, us))
     }
 
     /// Feed one generated token of request `id` at `pos`; returns the
@@ -529,6 +630,57 @@ mod tests {
         let p2 = batched.sim_decode_batch_proj_us(2);
         assert!(p2 > p1, "extra lanes are not free");
         assert!(p2 < 2.0 * p1, "the weight pass must be shared");
+    }
+
+    #[test]
+    fn slice_routing_is_explicit() {
+        // chunk 16: exactly one chunk takes the matrix path; the ragged
+        // remainder (and anything oversized) takes the decode tail.
+        let eng = engine(3);
+        assert_eq!(eng.slice_route(16), SliceRoute::MatrixPath);
+        assert_eq!(eng.slice_route(5), SliceRoute::DecodeTail);
+        assert_eq!(eng.slice_route(17), SliceRoute::DecodeTail);
+    }
+
+    #[test]
+    fn tile_straddling_chunks_are_rejected() {
+        // 48 straddles the 32-wide HMX tile (1.5 tiles of padding waste in
+        // every projection of every slice): constructing the engine fails.
+        // Whole-tile multiples and sub-tile chunks are both fine.
+        let model = random_transformer(&ModelConfig::tiny(), 1);
+        let soc = SocConfig::oneplus12;
+        assert!(Engine::reference(model.clone(), soc(), 48, 4, 2).is_err());
+        assert!(Engine::reference(model.clone(), soc(), 32, 4, 2).is_ok());
+        assert!(Engine::reference(model.clone(), soc(), 64, 4, 2).is_ok());
+        assert!(Engine::reference(model, soc(), 8, 4, 2).is_ok());
+    }
+
+    #[test]
+    fn prefill_chunk_price_is_plan_derived() {
+        // The engine's chunk price must equal an independent reconstruction
+        // from the plan cost surface: pipelined mpGEMM per projection, one
+        // lm-head GEMV, HMX-priced chunk attention — and nothing else.
+        use crate::kernels::plan::PlanCosts;
+        use crate::npu::hmx::{hmx_gemm_time_us, HmxPrecision};
+        let eng = engine(3);
+        let npu = &eng.soc.npu;
+        let shape = eng.shape().clone();
+        let chunk = shape.chunk;
+        let mut want = 0.0;
+        for (m, k) in shape.proj_shapes() {
+            want += PlanCosts::for_shape(npu, eng.fmt, m, k, chunk).prefill_us(npu, chunk);
+        }
+        want +=
+            PlanCosts::for_shape(npu, eng.fmt, shape.vocab, shape.d_model, chunk).decode_us(npu, 1);
+        for ctx in [chunk, 4 * chunk] {
+            let attn = hmx_gemm_time_us(npu, chunk, ctx, shape.d_model, HmxPrecision::Fp16)
+                + hmx_gemm_time_us(npu, chunk, shape.d_model, ctx, HmxPrecision::Fp16);
+            let total = want + shape.n_layers as f64 * attn;
+            let got = eng.plan_prefill_chunk_us(ctx);
+            assert!((got - total).abs() < 1e-9, "ctx {ctx}: {got} vs {total}");
+        }
+        // Longer context means more attention work, never less.
+        assert!(eng.plan_prefill_chunk_us(128) >= eng.plan_prefill_chunk_us(16));
     }
 
     #[test]

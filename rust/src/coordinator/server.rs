@@ -98,6 +98,32 @@ fn span(rng: &mut Rng, (lo, hi): (usize, usize)) -> usize {
     lo + rng.below(hi.saturating_sub(lo).max(1))
 }
 
+/// Draw one request from the workload mix — the single generator both the
+/// open-loop trace and the closed-loop client population use, so the two
+/// load models sample identical request populations.
+fn profile_request(
+    id: u64,
+    arrival_us: f64,
+    rng: &mut Rng,
+    profile: &TraceProfile,
+) -> TraceRequest {
+    let short = rng.below(4) < profile.short_per_4;
+    let (prompt_range, new_range, priority) = if short {
+        (profile.short_prompt, profile.short_new, 0u8)
+    } else {
+        (profile.long_prompt, profile.long_new, 4u8)
+    };
+    let prompt_len = span(rng, prompt_range);
+    let max_new = span(rng, new_range).max(1);
+    TraceRequest {
+        id,
+        arrival_us,
+        priority,
+        prompt: synthetic_prompt(prompt_len, rng),
+        max_new_tokens: max_new,
+    }
+}
+
 fn synthetic_prompt(len_bytes: usize, rng: &mut Rng) -> String {
     const PHRASES: [&str; 8] = [
         "the lookup table subsumes dequantization and multiplication ",
@@ -120,7 +146,8 @@ fn synthetic_prompt(len_bytes: usize, rng: &mut Rng) -> String {
 
 /// Deterministic synthetic trace: a mix of short interactive requests
 /// (priority 0) and long document requests (priority 4) with exponential
-/// inter-arrival gaps. Same (n, seed, profile) => same trace.
+/// inter-arrival gaps — *open-loop* load (arrivals ignore completions).
+/// Same (n, seed, profile) => same trace.
 pub fn synthetic_trace(n: usize, seed: u64, profile: &TraceProfile) -> Vec<TraceRequest> {
     let mut rng = Rng::new(seed);
     let mut clock = 0.0f64;
@@ -128,23 +155,135 @@ pub fn synthetic_trace(n: usize, seed: u64, profile: &TraceProfile) -> Vec<Trace
     for i in 0..n {
         let u = f64::from(rng.next_f32()).max(1e-6);
         clock += -profile.mean_gap_us * u.ln();
-        let short = rng.below(4) < profile.short_per_4;
-        let (prompt_range, new_range, priority) = if short {
-            (profile.short_prompt, profile.short_new, 0u8)
-        } else {
-            (profile.long_prompt, profile.long_new, 4u8)
-        };
-        let prompt_len = span(&mut rng, prompt_range);
-        let max_new = span(&mut rng, new_range).max(1);
-        out.push(TraceRequest {
-            id: i as u64 + 1,
-            arrival_us: clock,
-            priority,
-            prompt: synthetic_prompt(prompt_len, &mut rng),
-            max_new_tokens: max_new,
-        });
+        out.push(profile_request(i as u64 + 1, clock, &mut rng, profile));
     }
     out
+}
+
+/// A *closed-loop* client population: `concurrency` clients, each running
+/// one request at a time. A client thinks for exactly `think_us` after its
+/// request finishes, then submits the next one, until `total` requests have
+/// been issued overall — so at most `concurrency` requests are ever in
+/// flight, and arrival times depend on completion times (the feedback the
+/// open-loop trace cannot express). Fully deterministic for a fixed
+/// `(total, concurrency, think_us, seed, profile)`.
+#[derive(Debug, Clone)]
+pub struct ClosedLoopOpts {
+    /// Requests to serve across all clients.
+    pub total: usize,
+    /// Bound on simultaneously in-flight requests (number of clients).
+    pub concurrency: usize,
+    /// Deterministic think time between a client's completion and its next
+    /// submission, µs.
+    pub think_us: f64,
+    /// Workload-mix RNG seed.
+    pub seed: u64,
+}
+
+/// Where the serving loop's arrivals come from: a pre-computed open-loop
+/// trace, or a closed-loop client population that schedules each next
+/// arrival when the previous request finishes.
+enum Arrivals {
+    Open {
+        trace: Vec<TraceRequest>,
+        next: usize,
+    },
+    Closed {
+        profile: TraceProfile,
+        rng: Rng,
+        think_us: f64,
+        /// One `(ready_at_us, client)` entry per idle client.
+        idle: Vec<(f64, usize)>,
+        /// Client serving each in-flight request id.
+        owner: HashMap<u64, usize>,
+        issued: usize,
+        total: usize,
+    },
+}
+
+impl Arrivals {
+    fn open(trace: &[TraceRequest]) -> Self {
+        let mut trace = trace.to_vec();
+        trace.sort_by(|a, b| {
+            a.arrival_us.partial_cmp(&b.arrival_us).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        Arrivals::Open { trace, next: 0 }
+    }
+
+    fn closed(opts: &ClosedLoopOpts, profile: &TraceProfile) -> Self {
+        // Every client is ready at t = 0; ties break by client index.
+        Arrivals::Closed {
+            profile: profile.clone(),
+            rng: Rng::new(opts.seed),
+            think_us: opts.think_us,
+            idle: (0..opts.concurrency).map(|c| (0.0, c)).collect(),
+            owner: HashMap::new(),
+            issued: 0,
+            total: opts.total,
+        }
+    }
+
+    /// Remove and return the next request whose arrival is `<= clock_us`.
+    fn pop_ready(&mut self, clock_us: f64) -> Option<TraceRequest> {
+        match self {
+            Arrivals::Open { trace, next } => {
+                if *next < trace.len() && trace[*next].arrival_us <= clock_us {
+                    *next += 1;
+                    Some(trace[*next - 1].clone())
+                } else {
+                    None
+                }
+            }
+            Arrivals::Closed { profile, rng, idle, owner, issued, total, .. } => {
+                if *issued >= *total {
+                    return None;
+                }
+                // Earliest-ready client; ties break by client index.
+                let mut best: Option<usize> = None;
+                for (i, &(at, client)) in idle.iter().enumerate() {
+                    if at > clock_us {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => (at, client) < (idle[b].0, idle[b].1),
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+                let (at, client) = idle.swap_remove(best?);
+                *issued += 1;
+                let id = *issued as u64;
+                owner.insert(id, client);
+                Some(profile_request(id, at, rng, profile))
+            }
+        }
+    }
+
+    /// Earliest pending arrival, if any more will ever come.
+    fn next_arrival_us(&self) -> Option<f64> {
+        match self {
+            Arrivals::Open { trace, next } => trace.get(*next).map(|t| t.arrival_us),
+            Arrivals::Closed { idle, issued, total, .. } => {
+                if *issued >= *total {
+                    return None;
+                }
+                idle.iter().map(|&(at, _)| at).min_by(|a, b| {
+                    a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
+                })
+            }
+        }
+    }
+
+    /// A request finished: a closed-loop client starts thinking.
+    fn on_finish(&mut self, id: u64, clock_us: f64) {
+        if let Arrivals::Closed { idle, owner, think_us, .. } = self {
+            if let Some(client) = owner.remove(&id) {
+                idle.push((clock_us + *think_us, client));
+            }
+        }
+    }
 }
 
 /// Sampling/serving options shared by every request in a run.
@@ -214,15 +353,30 @@ impl Server {
         &self.engine
     }
 
-    /// Serve a trace to completion; returns aggregate fleet metrics with
-    /// one [`RequestCompletion`] per request, in finish order.
+    /// Serve an open-loop trace to completion; returns aggregate fleet
+    /// metrics with one [`RequestCompletion`] per request, in finish order.
     pub fn run(&mut self, trace: &[TraceRequest]) -> Result<FleetMetrics> {
-        let wall = PhaseTimer::start();
-        let mut arrivals: Vec<TraceRequest> = trace.to_vec();
-        arrivals.sort_by(|a, b| {
-            a.arrival_us.partial_cmp(&b.arrival_us).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        self.run_arrivals(Arrivals::open(trace))
+    }
 
+    /// Serve a *closed-loop* client population: at most `opts.concurrency`
+    /// requests in flight, each client thinking for exactly `opts.think_us`
+    /// between its completion and its next submission, drawing requests
+    /// from `profile`'s mix until `opts.total` have been served.
+    pub fn run_closed_loop(
+        &mut self,
+        opts: &ClosedLoopOpts,
+        profile: &TraceProfile,
+    ) -> Result<FleetMetrics> {
+        anyhow::ensure!(opts.total > 0, "closed loop needs at least one request");
+        anyhow::ensure!(opts.concurrency > 0, "closed loop needs at least one client");
+        anyhow::ensure!(opts.think_us >= 0.0, "negative think time");
+        self.run_arrivals(Arrivals::closed(opts, profile))
+    }
+
+    /// The serving loop proper, fed by either arrival model.
+    fn run_arrivals(&mut self, mut source: Arrivals) -> Result<FleetMetrics> {
+        let wall = PhaseTimer::start();
         let seq = self.engine.max_seq();
         // The decode batch cannot outgrow the KV slots backing it.
         let max_batch = self.opts.max_batch.max(1).min(self.engine.kv_slot_capacity());
@@ -233,16 +387,13 @@ impl Server {
         );
         let mut states: HashMap<u64, ReqState> = HashMap::new();
         let mut completions: Vec<RequestCompletion> = Vec::new();
-        let mut next_arrival = 0usize;
         let mut clock_us = 0.0f64;
         let mut decode_batch_sim_us = 0.0f64;
         let mut decode_batches_executed = 0usize;
 
         loop {
             // Admit every request that has arrived by now.
-            while next_arrival < arrivals.len() && arrivals[next_arrival].arrival_us <= clock_us {
-                let t = &arrivals[next_arrival];
-                next_arrival += 1;
+            while let Some(t) = source.pop_ready(clock_us) {
                 let prompt = tokenizer::encode(&t.prompt);
                 anyhow::ensure!(!prompt.is_empty(), "request {} has an empty prompt", t.id);
                 anyhow::ensure!(
@@ -286,12 +437,14 @@ impl Server {
             }
 
             if !sched.has_work() {
-                if next_arrival >= arrivals.len() {
-                    break; // drained
+                match source.next_arrival_us() {
+                    None => break, // drained
+                    // Idle until the next arrival.
+                    Some(at) => {
+                        clock_us = clock_us.max(at);
+                        continue;
+                    }
                 }
-                // Idle until the next arrival.
-                clock_us = clock_us.max(arrivals[next_arrival].arrival_us);
-                continue;
             }
 
             let item = sched.next().context("scheduler had work but yielded none")?;
@@ -402,6 +555,8 @@ impl Server {
                 WorkItem::Finish { id } => {
                     // The single place a KV slot is released.
                     self.engine.end_request(id);
+                    // A closed-loop client starts its think timer now.
+                    source.on_finish(id, clock_us);
                     let st = states.remove(&id).context("unknown request id")?;
                     let pm = &self.engine.soc.power;
                     let total_us = st.sim_prefill_us + st.sim_decode_us;

@@ -24,7 +24,7 @@ use crate::npu::hvx;
 use crate::npu::memory::LoadMethod;
 use crate::quant::bitserial::BitSerialWeights;
 use crate::quant::formats::QuantFormat;
-use crate::quant::lut::{naive_dequant_ops_per_4, TwoLevelDequant};
+use crate::quant::lut::{naive_dequant_ops_per_4, DequantTables};
 use crate::util::f16_round;
 
 /// Weight-preparation strategy (Fig. 16).
@@ -62,26 +62,51 @@ pub struct DequantGemm<'a> {
 }
 
 impl<'a> DequantGemm<'a> {
+    /// Bind the kernel to an externally planned tiling — the primary
+    /// constructor since the unified phase-kernel redesign: a
+    /// [`UnifiedLayerPlan`](crate::kernels::plan::UnifiedLayerPlan) searches
+    /// the tiling once and hands the *same* decision to both phase kernels,
+    /// so prefill and decode cannot drift onto different layouts.
+    pub fn with_tiling(
+        weights: &'a BitSerialWeights,
+        fmt: QuantFormat,
+        tiling: UnifiedTiling,
+        threads: usize,
+    ) -> Self {
+        Self { weights, fmt, tiling, strategy: DequantStrategy::LutDequant, threads }
+    }
+
+    /// Standalone construction with a private tiling search. Kept for
+    /// kernel-level experiments and the Fig. 16/17 harnesses; layer code
+    /// should go through `UnifiedLayerPlan` instead, which shares one
+    /// search between prefill and decode.
     pub fn new(cfg: &NpuConfig, weights: &'a BitSerialWeights, fmt: QuantFormat, n: usize) -> Self {
         let tiling = tiling::search(cfg, fmt, weights.m, weights.k, n);
-        Self {
-            weights,
-            fmt,
-            tiling,
-            strategy: DequantStrategy::LutDequant,
-            threads: cfg.hvx_contexts,
-        }
+        Self::with_tiling(weights, fmt, tiling, cfg.hvx_contexts)
     }
 
     /// Functional execution: fused LUT dequantization (bit-exact against
     /// `quant::lut::TwoLevelDequant`) followed by fp16 GEMM with f32
     /// accumulation. `act` is (n, k) row-major, fp16-rounded internally.
+    /// Builds the two-level tables on the fly; a planned layer passes its
+    /// prebuilt tables to [`DequantGemm::run_with_tables`] instead.
     pub fn run(&self, cfg: &NpuConfig, act: &[f32], n: usize) -> GemmResult {
+        self.run_with_tables(cfg, act, n, &DequantTables::build(self.weights))
+    }
+
+    /// [`DequantGemm::run`] against prebuilt two-level dequant tables (the
+    /// plan-owned artifact) — identical numerics, no table rebuild.
+    pub fn run_with_tables(
+        &self,
+        cfg: &NpuConfig,
+        act: &[f32],
+        n: usize,
+        tables: &DequantTables,
+    ) -> GemmResult {
         let w = self.weights;
         assert_eq!(act.len(), n * w.k);
         // Vector-core stage: dequantize via two-level LUTs.
-        let dq = TwoLevelDequant::new(w);
-        let wdeq = dq.dequant_all(); // fp16-exact values
+        let wdeq = tables.dequant_all(w); // fp16-exact values
         // Matrix-core stage: fp16 GEMM, f32 accumulate.
         let mut a16 = act.to_vec();
         for v in a16.iter_mut() {
@@ -108,65 +133,104 @@ impl<'a> DequantGemm<'a> {
     pub fn cost_sequential(&self, cfg: &NpuConfig, n: usize) -> KernelCost {
         let tile = self.tile_cost(cfg, n);
         let total = tile.scaled(self.num_tiles() as f64);
-        self.finish(cfg, total, n)
+        let w = self.weights;
+        finish_shape(self.strategy, self.fmt, n, w.m, w.k, total)
     }
 
-    /// Whole-GEMM cost under the DMA-Vector-Matrix pipeline (Fig. 9):
-    /// steady state = max stage per tile; fill/drain = one pass of the two
-    /// non-dominant stages.
+    /// Whole-GEMM cost under the DMA-Vector-Matrix pipeline (Fig. 9) — the
+    /// shared shape-only formula [`gemm_pipelined_cost`] applied to this
+    /// kernel's bound tiling.
     pub fn cost(&self, cfg: &NpuConfig, n: usize) -> KernelCost {
-        let tile = self.tile_cost(cfg, n);
-        let tiles = self.num_tiles() as f64;
-        let steady = tile.mem_us.max(tile.dq_us).max(tile.cmp_us) * tiles;
-        let fill = tile.mem_us + tile.dq_us + tile.cmp_us
-            - tile.mem_us.max(tile.dq_us).max(tile.cmp_us);
-        // Report the breakdown scaled so the components still show relative
-        // stage weights; total via `pipelined_total_us`.
-        let mut b = tile.scaled(tiles);
-        b.overhead_us = fill + 5.0; // fill/drain + launch
-        let mut kc = self.finish(cfg, b, n);
-        kc.breakdown = b;
-        kc.label = format!("{} [pipelined steady {steady:.1}us]", kc.label);
-        kc
+        let w = self.weights;
+        gemm_pipelined_cost(cfg, &self.tiling, n, w.m, w.k, self.fmt, self.strategy, self.threads)
     }
 
-    /// Pipeline total latency, µs.
+    /// Pipeline total latency, µs ([`gemm_pipelined_us`] on this tiling).
     pub fn pipelined_total_us(&self, cfg: &NpuConfig, n: usize) -> f64 {
-        let tile = self.tile_cost(cfg, n);
-        let tiles = self.num_tiles() as f64;
-        let steady = tile.mem_us.max(tile.dq_us).max(tile.cmp_us) * tiles;
-        let fill = tile.mem_us + tile.dq_us + tile.cmp_us
-            - tile.mem_us.max(tile.dq_us).max(tile.cmp_us);
-        steady + fill + 5.0
+        let w = self.weights;
+        gemm_pipelined_us(cfg, &self.tiling, n, w.m, w.k, self.fmt, self.strategy, self.threads)
     }
 
     /// Sequential total latency, µs.
     pub fn sequential_total_us(&self, cfg: &NpuConfig, n: usize) -> f64 {
-        self.cost_sequential(cfg, n).breakdown.sequential_us() + 5.0
+        self.cost_sequential(cfg, n).breakdown.sequential_us() + GEMM_LAUNCH_US
     }
+}
 
-    fn finish(&self, _cfg: &NpuConfig, b: Breakdown, n: usize) -> KernelCost {
-        let w = self.weights;
-        let bits = w.dtype.bits() as usize;
-        let mut ops = OpCounts::default();
-        ops.hmx_macs = n * w.m * w.k;
-        ops.ddr_bytes = match self.strategy {
-            DequantStrategy::LoadFull => w.m * w.k * 2,
-            _ => (w.m * w.k * bits).div_ceil(8),
-        };
-        KernelCost {
-            breakdown: b,
-            ops,
-            label: format!(
-                "{} mpGEMM {}x{}x{} {}",
-                self.strategy.name(),
-                n,
-                w.m,
-                w.k,
-                self.fmt
-            ),
-        }
+/// Fixed kernel-launch overhead of one mpGEMM dispatch, µs.
+pub const GEMM_LAUNCH_US: f64 = 5.0;
+
+/// Assemble the [`KernelCost`] for a whole (n × M × K) mpGEMM from its
+/// summed breakdown: MAC and DDR-traffic counters plus the report label.
+fn finish_shape(
+    strategy: DequantStrategy,
+    fmt: QuantFormat,
+    n: usize,
+    m: usize,
+    k: usize,
+    b: Breakdown,
+) -> KernelCost {
+    let bits = fmt.weight.bits() as usize;
+    let ops = OpCounts {
+        hmx_macs: n * m * k,
+        ddr_bytes: match strategy {
+            DequantStrategy::LoadFull => m * k * 2,
+            _ => (m * k * bits).div_ceil(8),
+        },
+        ..OpCounts::default()
+    };
+    KernelCost {
+        breakdown: b,
+        ops,
+        label: format!("{} mpGEMM {n}x{m}x{k} {fmt}", strategy.name()),
     }
+}
+
+/// Shape-only pipelined mpGEMM cost under an already-searched tiling: the
+/// one formula every prefill-cost consumer shares — [`DequantGemm::cost`]
+/// and the plan cost surface ([`crate::kernels::plan::PlanCosts`]) both
+/// route through here, so a planned layer's reported prefill cost cannot
+/// drift from the kernel's.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_pipelined_cost(
+    cfg: &NpuConfig,
+    tiling: &UnifiedTiling,
+    n: usize,
+    m: usize,
+    k: usize,
+    fmt: QuantFormat,
+    strategy: DequantStrategy,
+    threads: usize,
+) -> KernelCost {
+    let tile = tile_cost_shape(cfg, tiling, n, m, k, fmt, strategy, threads);
+    let tiles = num_tiles_shape(tiling, m, k) as f64;
+    let (steady, fill) = tile.pipeline_steady_fill(tiles);
+    // Report the breakdown scaled so the components still show relative
+    // stage weights; total via `gemm_pipelined_us`.
+    let mut b = tile.scaled(tiles);
+    b.overhead_us = fill + GEMM_LAUNCH_US;
+    let mut kc = finish_shape(strategy, fmt, n, m, k, b);
+    kc.label = format!("{} [pipelined steady {steady:.1}us]", kc.label);
+    kc
+}
+
+/// Shape-only pipelined mpGEMM total latency, µs (same formula as
+/// [`gemm_pipelined_cost`], without assembling the full cost record).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_pipelined_us(
+    cfg: &NpuConfig,
+    tiling: &UnifiedTiling,
+    n: usize,
+    m: usize,
+    k: usize,
+    fmt: QuantFormat,
+    strategy: DequantStrategy,
+    threads: usize,
+) -> f64 {
+    let tile = tile_cost_shape(cfg, tiling, n, m, k, fmt, strategy, threads);
+    let tiles = num_tiles_shape(tiling, m, k) as f64;
+    let (steady, fill) = tile.pipeline_steady_fill(tiles);
+    steady + fill + GEMM_LAUNCH_US
 }
 
 /// VLUT16 lookups per issue at 16-bit entries (Table 1).
@@ -241,14 +305,12 @@ pub fn num_tiles_shape(tiling: &UnifiedTiling, m: usize, k: usize) -> usize {
     m.div_ceil(tiling.m_tile()) * k.div_ceil(tiling.k_tile())
 }
 
-/// Shape-only pipelined mpGEMM latency for T-MAN prefill.
+/// Shape-only pipelined mpGEMM latency for T-MAN prefill. Deprecated shim
+/// over the plan cost surface — kept for the paper-shape benchmark sweeps;
+/// layer and serving code holds a [`crate::kernels::plan::PlanCosts`] (or a
+/// full `UnifiedLayerPlan`) and asks it directly.
 pub fn tman_gemm_latency_us(cfg: &NpuConfig, n: usize, m: usize, k: usize, fmt: QuantFormat) -> f64 {
-    let tiling = tiling::search(cfg, fmt, m, k, n);
-    let tile = tile_cost_shape(cfg, &tiling, n, m, k, fmt, DequantStrategy::LutDequant, cfg.hvx_contexts);
-    let tiles = num_tiles_shape(&tiling, m, k) as f64;
-    let steady = tile.mem_us.max(tile.dq_us).max(tile.cmp_us) * tiles;
-    let fill = tile.mem_us + tile.dq_us + tile.cmp_us - tile.mem_us.max(tile.dq_us).max(tile.cmp_us);
-    steady + fill + 5.0
+    crate::kernels::plan::PlanCosts::for_shape(cfg, fmt, m, k, n).prefill_us(cfg, n)
 }
 
 /// Weight-preparation-only latency for a whole (M, K) matrix — the Fig. 16

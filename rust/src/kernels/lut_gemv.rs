@@ -116,16 +116,34 @@ pub struct LutGemv<'a> {
 }
 
 impl<'a> LutGemv<'a> {
-    pub fn new(cfg: &NpuConfig, weights: &'a BitSerialWeights, fmt: QuantFormat) -> Self {
-        let tiling = tiling::search(cfg, fmt, weights.m, weights.k, 1);
+    /// Bind the kernel to an externally planned tiling — the primary
+    /// constructor since the unified phase-kernel redesign: a
+    /// [`UnifiedLayerPlan`](crate::kernels::plan::UnifiedLayerPlan) searches
+    /// the tiling once and hands the *same* decision to both phase kernels,
+    /// so prefill and decode cannot drift onto different layouts.
+    pub fn with_tiling(
+        weights: &'a BitSerialWeights,
+        fmt: QuantFormat,
+        tiling: UnifiedTiling,
+        threads: usize,
+    ) -> Self {
         Self {
             weights,
             fmt,
             tiling,
             variant: VlutVariant::Vlut16,
             spill: SpillPolicy::TcmBuffer,
-            threads: cfg.hvx_contexts,
+            threads,
         }
+    }
+
+    /// Standalone construction with a private decode-shaped tiling search
+    /// (n = 1). Kept for kernel-level experiments and the paper-shape
+    /// sweeps; layer code should go through `UnifiedLayerPlan` instead,
+    /// which shares one search between prefill and decode.
+    pub fn new(cfg: &NpuConfig, weights: &'a BitSerialWeights, fmt: QuantFormat) -> Self {
+        let tiling = tiling::search(cfg, fmt, weights.m, weights.k, 1);
+        Self::with_tiling(weights, fmt, tiling, cfg.hvx_contexts)
     }
 
     /// Execute functionally (bit-exact w.r.t. the table semantics) and
@@ -227,15 +245,23 @@ impl<'a> LutGemv<'a> {
     /// lookups (the decode analogue of the prefill pipeline), so the total
     /// is the max of the two plus precompute + launch.
     pub fn latency_us(&self, cfg: &NpuConfig, k: usize) -> f64 {
-        let c = self.cost(cfg, k);
-        c.breakdown.mem_us.max(c.breakdown.cmp_us) + c.breakdown.dq_us + c.breakdown.overhead_us
+        gemv_overlapped_us(&self.cost(cfg, k).breakdown)
     }
 
     /// Batched decode latency for `batch` lanes (same overlap rule).
     pub fn batched_latency_us(&self, cfg: &NpuConfig, batch: usize) -> f64 {
-        let c = self.batched_cost(cfg, batch);
-        c.breakdown.mem_us.max(c.breakdown.cmp_us) + c.breakdown.dq_us + c.breakdown.overhead_us
+        gemv_overlapped_us(&self.batched_cost(cfg, batch).breakdown)
     }
+}
+
+/// The decode-path overlap rule every GEMV-latency consumer shares: the DMA
+/// weight stream hides under (or hides) the vector-core lookups; table
+/// precompute and the kernel launch do not overlap. [`LutGemv`] and the plan
+/// cost surface ([`crate::kernels::plan::PlanCosts`]) both route through
+/// here, so a planned layer's reported decode latency cannot drift from the
+/// kernel's.
+pub fn gemv_overlapped_us(b: &Breakdown) -> f64 {
+    b.mem_us.max(b.cmp_us) + b.dq_us + b.overhead_us
 }
 
 /// Shape-only cost model for the T-MAN LUT GEMV — shared by the kernel
@@ -380,20 +406,6 @@ pub fn tman_gemv_batched_latency_us(
     batched_latency_with(cfg, m, k, fmt, &tiling, batch)
 }
 
-/// Batched decode latencies for every width `1..=max_batch` of one shape,
-/// sharing a single tiling search (the tiling does not depend on the batch
-/// width) — what the engine uses to precompute its per-width decode cost.
-pub fn tman_gemv_batched_latency_curve(
-    cfg: &NpuConfig,
-    m: usize,
-    k: usize,
-    fmt: QuantFormat,
-    max_batch: usize,
-) -> Vec<f64> {
-    let tiling = tiling::search(cfg, fmt, m, k, 1);
-    (1..=max_batch).map(|batch| batched_latency_with(cfg, m, k, fmt, &tiling, batch)).collect()
-}
-
 /// Decode latency of one batch width under an already-searched tiling
 /// (DMA overlaps lookups, launch paid once).
 fn batched_latency_with(
@@ -415,10 +427,13 @@ fn batched_latency_with(
         cfg.hvx_contexts,
         batch,
     );
-    c.breakdown.mem_us.max(c.breakdown.cmp_us) + c.breakdown.dq_us + c.breakdown.overhead_us
+    gemv_overlapped_us(&c.breakdown)
 }
 
-fn tables_block_len(w: &BitSerialWeights) -> usize {
+/// Canonical activation-table block length for a weight matrix: the quant
+/// block (clamped to K), at least one 4-wide table group. Shared by the
+/// convenience entry points here and by `UnifiedLayerPlan::precompute`.
+pub fn tables_block_len(w: &BitSerialWeights) -> usize {
     w.gran.group_len(w.k).min(w.k).max(4)
 }
 

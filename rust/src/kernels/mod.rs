@@ -1,14 +1,25 @@
 //! Kernel layer: T-MAN's two execution paths (LUT-GEMV decode,
-//! LUT-dequant GEMM prefill), the unified tiling search that binds them to
-//! one weight layout, the baseline frameworks, and the reference oracles.
+//! LUT-dequant GEMM prefill), unified behind one planned artifact.
+//!
+//! The public surface is [`plan::UnifiedLayerPlan`]: built once per linear
+//! shape, it owns the shared bit-serial weight buffer, the two-level
+//! dequantization tables, and the single [`tiling::UnifiedTiling`] both
+//! phases execute under — `prefill(..)` routes through [`DequantGemm`]'s
+//! three-stage pipeline, `decode_batch(..)` through [`LutGemv`]'s batched
+//! table lookup, and [`plan::PlanCosts`] is the one cost surface the
+//! serving engine prices both phases from. The phase kernels remain public
+//! for kernel-level experiments (Fig. 12–17 harnesses) but are constructed
+//! through the plan in layer code.
 
 pub mod baselines;
 pub mod dequant_gemm;
 pub mod lut_gemv;
+pub mod plan;
 pub mod reference;
 pub mod tiling;
 
 pub use baselines::{Framework, Phase};
 pub use dequant_gemm::{DequantGemm, DequantStrategy, GemmResult};
 pub use lut_gemv::{lut_gemv, precompute_tables, ActTables, GemvResult, LutGemv, SpillPolicy};
+pub use plan::{PlanCosts, UnifiedLayerPlan};
 pub use tiling::UnifiedTiling;

@@ -1,0 +1,418 @@
+//! The unified phase-kernel plan: **one** planned artifact per linear
+//! shape that both execution phases run through.
+//!
+//! The paper's core claim (§4.1) is a *unified* table layout and tiling
+//! shared by prefill (HMX mpGEMM with fused two-level LUT dequantization)
+//! and decode (HVX table-lookup GEMV). Before this redesign the repo
+//! mirrored the claim only by convention: `DequantGemm` and `LutGemv` had
+//! unrelated constructors, each ran its own tiling search, and the serving
+//! engine priced prefill chunks from an ad-hoc formula instead of the
+//! kernel's own pipeline model. [`UnifiedLayerPlan`] makes the sharing
+//! structural:
+//!
+//! ```text
+//!           (NpuConfig, QuantFormat, BitSerialWeights)
+//!                            │  one tiling search
+//!                            ▼
+//!                    UnifiedLayerPlan
+//!          ┌──────────────────┼──────────────────────┐
+//!          │ bit-serial       │ two-level             │ UnifiedTiling
+//!          │ weight buffer    │ dequant tables        │ + PlanCosts
+//!          ▼                  ▼                       ▼
+//!   prefill(acts, n) ──────────────────► (out, KernelCost)   [HMX pipeline]
+//!   decode_batch(lanes) ───────────────► (out, KernelCost)   [HVX VLUT]
+//! ```
+//!
+//! Both phase entry points are methods on the *same* object, bound to the
+//! same weight buffer and the same [`UnifiedTiling`] — prefill and decode
+//! cannot drift onto different layouts or tilings by construction. The
+//! shape-only half, [`PlanCosts`], is the single cost surface: the kernels
+//! report their costs through it, and the serving engine prices chunked
+//! prefill and batched decode from it (no hand-rolled MACs/TOPS terms).
+
+use crate::kernels::dequant_gemm::{
+    gemm_pipelined_cost, gemm_pipelined_us, DequantGemm, DequantStrategy,
+};
+use crate::kernels::lut_gemv::{
+    gemv_batched_cost, gemv_overlapped_us, precompute_tables, tables_block_len, ActTables, LutGemv,
+    SpillPolicy,
+};
+use crate::kernels::tiling::{self, UnifiedTiling};
+use crate::npu::config::NpuConfig;
+use crate::npu::cost::KernelCost;
+use crate::npu::hvx::VlutVariant;
+use crate::quant::bitserial::BitSerialWeights;
+use crate::quant::formats::{ActDtype, QuantFormat};
+use crate::quant::lut::DequantTables;
+use crate::quant::qmatrix::QuantizedMatrix;
+
+/// The shape-only half of a [`UnifiedLayerPlan`]: one tiling decision plus
+/// the two phase cost models it binds. This is what the serving engine
+/// holds per projection shape — pricing a prefill chunk and pricing a
+/// decode batch are two methods on the same object, derived from the same
+/// tiling, through the same kernel formulas the functional kernels report.
+#[derive(Debug, Clone)]
+pub struct PlanCosts {
+    pub m: usize,
+    pub k: usize,
+    pub fmt: QuantFormat,
+    /// The one tiling both phases run under.
+    pub tiling: UnifiedTiling,
+    /// HVX thread contexts the tiling was sized for.
+    pub threads: usize,
+    /// Prefill activation rows (chunk length) the tiling was planned for.
+    pub n_plan: usize,
+}
+
+impl PlanCosts {
+    /// Search the unified tiling once for an (M, K) weight shape and bind
+    /// both phase cost models to it. `n_plan` is the prefill chunk length
+    /// the matrix path will run at (clamped to ≥ 1; decode ignores it).
+    pub fn for_shape(cfg: &NpuConfig, fmt: QuantFormat, m: usize, k: usize, n_plan: usize) -> Self {
+        let n_plan = n_plan.max(1);
+        let tiling = tiling::search(cfg, fmt, m, k, n_plan);
+        Self { m, k, fmt, tiling, threads: cfg.hvx_contexts, n_plan }
+    }
+
+    /// Full prefill-phase cost of an (n × M × K) mpGEMM under the
+    /// three-stage DMA–Vector–Matrix pipeline — exactly what
+    /// [`DequantGemm::cost`] reports for a kernel bound to this tiling.
+    pub fn prefill_cost(&self, cfg: &NpuConfig, n: usize) -> KernelCost {
+        gemm_pipelined_cost(
+            cfg,
+            &self.tiling,
+            n,
+            self.m,
+            self.k,
+            self.fmt,
+            DequantStrategy::LutDequant,
+            self.threads,
+        )
+    }
+
+    /// Pipelined prefill latency, µs — exactly
+    /// [`DequantGemm::pipelined_total_us`] for a kernel on this tiling.
+    pub fn prefill_us(&self, cfg: &NpuConfig, n: usize) -> f64 {
+        gemm_pipelined_us(
+            cfg,
+            &self.tiling,
+            n,
+            self.m,
+            self.k,
+            self.fmt,
+            DequantStrategy::LutDequant,
+            self.threads,
+        )
+    }
+
+    /// Full decode-phase cost of one batched table-lookup GEMV (`batch`
+    /// lanes sharing this weight matrix) — exactly [`gemv_batched_cost`]
+    /// under this tiling, which is also what [`LutGemv::run_batched`]
+    /// reports for a kernel bound to it.
+    pub fn decode_cost(&self, cfg: &NpuConfig, batch: usize) -> KernelCost {
+        gemv_batched_cost(
+            cfg,
+            self.m,
+            self.k,
+            self.fmt,
+            &self.tiling,
+            VlutVariant::Vlut16,
+            SpillPolicy::TcmBuffer,
+            self.threads,
+            batch,
+        )
+    }
+
+    /// Batched decode latency, µs (DMA overlaps lookups, launch paid once).
+    pub fn decode_us(&self, cfg: &NpuConfig, batch: usize) -> f64 {
+        gemv_overlapped_us(&self.decode_cost(cfg, batch).breakdown)
+    }
+
+    /// Decode latencies for every batch width `1..=max_batch`, sharing this
+    /// plan's single tiling — what the engine precomputes per shape.
+    pub fn decode_curve(&self, cfg: &NpuConfig, max_batch: usize) -> Vec<f64> {
+        (1..=max_batch).map(|b| self.decode_us(cfg, b)).collect()
+    }
+}
+
+/// The planned weight artifact for one linear layer: the single bit-serial
+/// weight buffer, the two-level dequantization tables built over it, and
+/// the one [`UnifiedTiling`] (inside [`PlanCosts`]) both phases execute
+/// under. Built once per linear shape from
+/// `(NpuConfig, QuantFormat, BitSerialWeights)`; afterwards the layer asks
+/// the *same object* for either phase:
+///
+/// - [`UnifiedLayerPlan::prefill`] — the HMX matrix path with fused LUT
+///   dequantization, priced by the three-stage pipeline model;
+/// - [`UnifiedLayerPlan::decode_batch`] — the HVX table-lookup path over
+///   per-lane activation tables, one shared pass over the weight stream,
+///   priced by the batched GEMV model.
+#[derive(Debug, Clone)]
+pub struct UnifiedLayerPlan {
+    weights: BitSerialWeights,
+    tables: DequantTables,
+    /// Unpacked codes (M × K, one byte each), decoded from the bit planes
+    /// once at plan time: the host-side reference dequantization indexes
+    /// these directly instead of reassembling bits per element inside the
+    /// innermost GEMV loop. Host-only convenience — the on-device
+    /// footprint ([`UnifiedLayerPlan::footprint_bytes`]) is still the
+    /// packed planes + scales.
+    codes: Vec<u8>,
+    costs: PlanCosts,
+}
+
+impl UnifiedLayerPlan {
+    /// Plan a layer: one tiling search, one table build, one weight buffer.
+    /// `fmt` must describe `weights` (same dtype and granularity); `n_plan`
+    /// is the prefill chunk length the matrix path will run at.
+    pub fn new(
+        cfg: &NpuConfig,
+        fmt: QuantFormat,
+        weights: BitSerialWeights,
+        n_plan: usize,
+    ) -> Self {
+        assert_eq!(fmt.weight, weights.dtype, "plan format must match the weight dtype");
+        assert_eq!(fmt.gran, weights.gran, "plan format must match the weight granularity");
+        let costs = PlanCosts::for_shape(cfg, fmt, weights.m, weights.k, n_plan);
+        let tables = DequantTables::build(&weights);
+        let codes = weights.to_codes();
+        Self { weights, tables, codes, costs }
+    }
+
+    /// Plan straight from a canonical quantized matrix (activations `act`,
+    /// fp16 for the T-MAN deployments).
+    pub fn from_qmatrix(
+        cfg: &NpuConfig,
+        q: &QuantizedMatrix,
+        act: ActDtype,
+        n_plan: usize,
+    ) -> Self {
+        let fmt = QuantFormat::new(q.dtype, act, q.gran);
+        Self::new(cfg, fmt, BitSerialWeights::from_qmatrix(q), n_plan)
+    }
+
+    /// Output channels (M).
+    pub fn out_dim(&self) -> usize {
+        self.weights.m
+    }
+
+    /// Input channels (K).
+    pub fn in_dim(&self) -> usize {
+        self.weights.k
+    }
+
+    pub fn fmt(&self) -> QuantFormat {
+        self.costs.fmt
+    }
+
+    pub fn tiling(&self) -> &UnifiedTiling {
+        &self.costs.tiling
+    }
+
+    /// The shared bit-serial weight buffer (the single on-device copy).
+    pub fn weights(&self) -> &BitSerialWeights {
+        &self.weights
+    }
+
+    /// The plan's cost surface — the same object the engine prices from.
+    pub fn costs(&self) -> &PlanCosts {
+        &self.costs
+    }
+
+    /// Packed on-device footprint: bit-serial planes + fp16 scale/zero
+    /// pairs (one 4-byte pair per group).
+    pub fn footprint_bytes(&self) -> usize {
+        self.weights.weight_bytes() + self.weights.scales.len() * 4
+    }
+
+    /// The prefill kernel bound to this plan's weights and tiling.
+    pub fn prefill_kernel(&self) -> DequantGemm<'_> {
+        let c = &self.costs;
+        DequantGemm::with_tiling(&self.weights, c.fmt, c.tiling, c.threads)
+    }
+
+    /// The decode kernel bound to this plan's weights and tiling.
+    pub fn decode_kernel(&self) -> LutGemv<'_> {
+        LutGemv::with_tiling(&self.weights, self.costs.fmt, self.costs.tiling, self.costs.threads)
+    }
+
+    /// **Prefill phase**: run the (n × M × K) mpGEMM through the matrix
+    /// path — fused two-level LUT dequantization on the vector cores, fp16
+    /// HMX matmul with f32 accumulation — against this plan's prebuilt
+    /// tables. `act` is (n, K) row-major. The returned cost is the
+    /// three-stage pipeline model on the plan's tiling (identical to
+    /// [`PlanCosts::prefill_cost`]).
+    pub fn prefill(&self, cfg: &NpuConfig, act: &[f32], n: usize) -> (Vec<f32>, KernelCost) {
+        let r = self.prefill_kernel().run_with_tables(cfg, act, n, &self.tables);
+        (r.c, r.cost)
+    }
+
+    /// Precompute one lane's activation tables for the decode phase (the
+    /// per-token "precomputation kernel" §5 deduplicates across heads).
+    pub fn precompute(&self, act: &[f32]) -> ActTables {
+        precompute_tables(act, tables_block_len(&self.weights))
+    }
+
+    /// **Decode phase**: one batched table-lookup GEMV over `lanes`
+    /// activation vectors — each lane gets its own tables, the bit-serial
+    /// weight stream is read once for the whole batch, per-lane outputs are
+    /// bit-identical to solo calls. The returned cost is the batched GEMV
+    /// model on the plan's tiling (identical to [`PlanCosts::decode_cost`]).
+    pub fn decode_batch(&self, cfg: &NpuConfig, lanes: &[&[f32]]) -> (Vec<Vec<f32>>, KernelCost) {
+        let tables: Vec<ActTables> = lanes.iter().map(|a| self.precompute(a)).collect();
+        let r = self.decode_kernel().run_batched(cfg, &tables);
+        (r.ys, r.cost)
+    }
+
+    /// One-lane decode (a singleton [`UnifiedLayerPlan::decode_batch`]).
+    pub fn decode(&self, cfg: &NpuConfig, act: &[f32]) -> (Vec<f32>, KernelCost) {
+        let (mut ys, cost) = self.decode_batch(cfg, std::slice::from_ref(&act));
+        (ys.pop().expect("one lane in, one output out"), cost)
+    }
+
+    /// Host-side reference dequantization of one weight row — the exact
+    /// `(code − zero) × scale` f32 arithmetic of the canonical
+    /// [`QuantizedMatrix::dequant`], reconstructed from the bit-serial
+    /// planes. The reference transformer's planned `Linear` decodes rows
+    /// through this, so quantized numerics are byte-identical to the
+    /// unpacked-codes path this plan replaced.
+    pub fn dequant_row_into(&self, row: usize, dst: &mut [f32]) {
+        let k = self.weights.k;
+        assert_eq!(dst.len(), k);
+        let codes = &self.codes[row * k..(row + 1) * k];
+        for (col, (d, &code)) in dst.iter_mut().zip(codes).enumerate() {
+            let g = self.weights.group_of(row, col);
+            *d = (f32::from(code) - self.weights.zeros[g]) * self.weights.scales[g];
+        }
+    }
+
+    /// The fp16-exact fused-LUT dequantization of the whole matrix (what
+    /// the prefill path multiplies against) — exposed for oracles/tests.
+    pub fn dequant_all_fused(&self) -> Vec<f32> {
+        self.tables.dequant_all(&self.weights)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::lut_gemv::lut_gemv;
+    use crate::kernels::reference::{ref_gemm, ref_gemv};
+    use crate::quant::formats::{Granularity, WeightDtype};
+    use crate::quant::quantize::rtn;
+    use crate::util::{rel_l2, Rng};
+
+    fn cfg() -> NpuConfig {
+        NpuConfig::sd8gen3()
+    }
+
+    fn plan_of(
+        m: usize,
+        k: usize,
+        dtype: WeightDtype,
+        gran: Granularity,
+        n: usize,
+        seed: u64,
+    ) -> (QuantizedMatrix, UnifiedLayerPlan) {
+        let w = Rng::new(seed).normal_vec(m * k, 0.08);
+        let q = rtn(&w, m, k, dtype, gran);
+        let plan = UnifiedLayerPlan::from_qmatrix(&cfg(), &q, ActDtype::Fp16, n);
+        (q, plan)
+    }
+
+    #[test]
+    fn both_phases_share_one_tiling_and_buffer() {
+        let (_, plan) = plan_of(256, 512, WeightDtype::Int4, Granularity::PerBlock(64), 32, 1);
+        let pre = plan.prefill_kernel();
+        let dec = plan.decode_kernel();
+        assert_eq!(pre.tiling, dec.tiling, "one tiling must bind both phases");
+        assert!(std::ptr::eq(pre.weights, dec.weights), "one weight buffer must serve both");
+    }
+
+    #[test]
+    fn prefill_matches_reference_gemm() {
+        let c = cfg();
+        let (q, plan) = plan_of(64, 128, WeightDtype::Int4, Granularity::PerBlock(64), 8, 2);
+        let n = 8;
+        let act = Rng::new(3).normal_vec(n * 128, 0.5);
+        let (out, cost) = plan.prefill(&c, &act, n);
+        let want = ref_gemm(&q, &act, n);
+        let err = rel_l2(&out, &want);
+        assert!(err < 3e-3, "rel_l2 {err}");
+        assert!(cost.total_us() > 0.0);
+        // The reported cost is the plan cost surface, exactly.
+        assert_eq!(cost.breakdown, plan.costs().prefill_cost(&c, n).breakdown);
+    }
+
+    #[test]
+    fn decode_matches_reference_gemv_and_solo_kernel() {
+        let c = cfg();
+        let (q, plan) = plan_of(48, 192, WeightDtype::Int2, Granularity::PerBlock(64), 16, 4);
+        let act = Rng::new(5).normal_vec(192, 0.5);
+        let (y, cost) = plan.decode(&c, &act);
+        let want = ref_gemv(&q, &act);
+        let err = rel_l2(&y, &want);
+        assert!(err < 2e-3, "rel_l2 {err}");
+        assert_eq!(cost.breakdown, plan.costs().decode_cost(&c, 1).breakdown);
+        // Bit-identical to the standalone convenience kernel on the same
+        // weights (the tables and weight semantics are shared).
+        let solo = lut_gemv(&c, plan.weights(), plan.fmt(), &act);
+        assert_eq!(y, solo.y);
+    }
+
+    #[test]
+    fn decode_batch_lanes_are_bit_identical_to_solo() {
+        let c = cfg();
+        let (_, plan) = plan_of(32, 128, WeightDtype::Int4, Granularity::PerChannel, 16, 6);
+        let mut rng = Rng::new(7);
+        let acts: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(128, 0.5)).collect();
+        let lanes: Vec<&[f32]> = acts.iter().map(|a| a.as_slice()).collect();
+        let (ys, cost) = plan.decode_batch(&c, &lanes);
+        for (lane, a) in lanes.iter().enumerate() {
+            let (solo, _) = plan.decode(&c, a);
+            assert_eq!(ys[lane], solo, "lane {lane}");
+        }
+        assert_eq!(cost.breakdown, plan.costs().decode_cost(&c, 3).breakdown);
+    }
+
+    #[test]
+    fn reference_dequant_row_matches_canonical_matrix() {
+        // The planned layer's host-side row decode must be *byte*-identical
+        // to the unpacked QuantizedMatrix path it replaced.
+        for (dtype, gran) in [
+            (WeightDtype::Int4, Granularity::PerBlock(64)),
+            (WeightDtype::Int2, Granularity::PerTensor),
+            (WeightDtype::Int4, Granularity::PerChannel),
+        ] {
+            let (q, plan) = plan_of(12, 96, dtype, gran, 8, 9);
+            let mut row = vec![0.0f32; 96];
+            for i in 0..12 {
+                plan.dequant_row_into(i, &mut row);
+                for (j, &v) in row.iter().enumerate() {
+                    assert_eq!(v, q.dequant(i, j), "{dtype} {gran} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn footprint_counts_planes_and_scales() {
+        let (q, plan) = plan_of(16, 64, WeightDtype::Int4, Granularity::PerBlock(64), 8, 11);
+        // k = 64 is byte-aligned: planes bytes == packed code bytes.
+        assert_eq!(plan.footprint_bytes(), q.footprint_bytes());
+    }
+
+    #[test]
+    fn cost_surface_is_usable_without_weights() {
+        // The engine's path: shape-only plan costs, no materialized buffer.
+        let c = cfg();
+        let pc = PlanCosts::for_shape(&c, QuantFormat::tman_w4a16(), 4096, 4096, 128);
+        let pre = pc.prefill_us(&c, 128);
+        let curve = pc.decode_curve(&c, 4);
+        assert!(pre > 0.0);
+        assert_eq!(curve.len(), 4);
+        assert!(curve.windows(2).all(|w| w[1] >= w[0]), "decode curve must be monotone");
+        assert!(curve[3] < 4.0 * curve[0], "the shared weight pass must amortize");
+        assert_eq!(pc.decode_us(&c, 1), curve[0]);
+    }
+}

@@ -89,21 +89,27 @@ impl UnifiedTiling {
         N_STAGE * self.n_thread * per_stage + act_tile
     }
 
+    /// The two phase-extent identities (Eqns. 2–3) as a standalone check:
+    /// the prefill (matrix-core) and decode (vector-core) loop nests address
+    /// the *same* thread-tile extents, which is what lets one pre-permuted
+    /// weight buffer serve both phases. [`search`] only admits candidates
+    /// that pass this (via [`UnifiedTiling::satisfies`]), so a
+    /// `UnifiedLayerPlan` built from a searched tiling shares extents by
+    /// construction; sub-tile shapes that fall back to the minimal legal
+    /// tiling trade the identity for legality and are priced accordingly.
+    pub fn phases_share_extents(&self, cfg: &NpuConfig, act_bytes: usize) -> bool {
+        self.m_iter_p * self.mma == self.m_iter_d * self.m_lookups_d
+            && self.k_iter_p * self.mma == self.k_iter_d * self.k_span_of_luts(cfg, act_bytes)
+    }
+
     /// Check all four constraints.
     pub fn satisfies(&self, cfg: &NpuConfig, act_bytes: usize) -> bool {
         // Eqn. 1.
-        if self.k_lut_d >= cfg.n_reg_for_lut + 1 {
-            return false;
-        }
         if self.k_lut_d > cfg.n_reg_for_lut {
             return false;
         }
-        // Eqn. 2.
-        if self.m_iter_p * self.mma != self.m_iter_d * self.m_lookups_d {
-            return false;
-        }
-        // Eqn. 3.
-        if self.k_iter_p * self.mma != self.k_iter_d * self.k_span_of_luts(cfg, act_bytes) {
+        // Eqns. 2–3.
+        if !self.phases_share_extents(cfg, act_bytes) {
             return false;
         }
         // Eqn. 4.

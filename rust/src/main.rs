@@ -5,10 +5,16 @@
 //!            [--model tiny|small|base] [--artifacts DIR]
 //!            [--soc oneplus12|oneplus13t]
 //!   serve    [--trace synthetic] [--requests N] [--seed S] [--verbose]
-//!            [--max-batch B] [--model tiny|small|base] [--chunk C]
-//!            [--kv-slots N] [--bits 2|4] [--temp T] [--artifacts DIR]
-//!            [--soc ...]
+//!            [--max-batch B] [--closed-loop C] [--think-ms T]
+//!            [--model tiny|small|base] [--chunk C] [--kv-slots N]
+//!            [--bits 2|4] [--temp T] [--artifacts DIR] [--soc ...]
+//!   bench    [--json]                 plan-cost snapshot (CI artifact)
 //!   info     [--artifacts DIR]        print artifact manifest + sim config
+//!
+//! `serve --closed-loop C --think-ms T` swaps the open-loop synthetic trace
+//! for a closed-loop population of C clients: each keeps exactly one
+//! request in flight and thinks T ms between completion and resubmission,
+//! until --requests N requests have been served.
 //!
 //! Without the `pjrt` feature (or without built artifacts) the engine runs
 //! the pure-Rust reference backend; trained weights are picked up from
@@ -17,10 +23,12 @@
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 use tman::coordinator::engine::{Engine, GenerateOpts};
-use tman::coordinator::server::{synthetic_trace, ServeOpts, Server, TraceProfile};
+use tman::coordinator::server::{synthetic_trace, ClosedLoopOpts, ServeOpts, Server, TraceProfile};
+use tman::kernels::plan::PlanCosts;
 use tman::model::config::ModelConfig;
 use tman::model::weights;
 use tman::npu::config::SocConfig;
+use tman::quant::formats::QuantFormat;
 
 struct Args {
     cmd: String,
@@ -63,6 +71,58 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 /// Decode-batch width for `serve` (1 = unbatched decode).
 fn max_batch_from(args: &Args) -> Result<usize> {
     Ok(args.flags.get("max-batch").map(|s| s.parse()).transpose()?.unwrap_or(1))
+}
+
+fn json_f(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Machine-readable cost snapshot of the unified plan surface: pipelined
+/// prefill mpGEMM and batched-decode GEMV latencies for the paper's
+/// projection shapes, plus the tiny reference deployment's engine-level
+/// prices. Hand-rolled JSON (no serde offline); one object per line-free
+/// blob so CI can diff trajectories across PRs.
+fn bench_report() -> Result<String> {
+    let soc = SocConfig::oneplus12();
+    let npu = &soc.npu;
+    let shapes = [
+        (4096usize, 4096usize, QuantFormat::tman_w4a16()),
+        (14336, 4096, QuantFormat::tman_w4a16()),
+        (4096, 14336, QuantFormat::tman_w4a16()),
+        (2560, 2560, QuantFormat::tman_w2a16()),
+    ];
+    let mut prefill = Vec::new();
+    let mut decode = Vec::new();
+    for (m, k, fmt) in shapes {
+        let pc = PlanCosts::for_shape(npu, fmt, m, k, 128);
+        prefill.push(format!(
+            "{{\"m\":{m},\"k\":{k},\"fmt\":\"{fmt}\",\"n\":128,\"pipelined_us\":{}}}",
+            json_f(pc.prefill_us(npu, 128))
+        ));
+        let curve: Vec<String> = pc.decode_curve(npu, 8).into_iter().map(json_f).collect();
+        decode.push(format!(
+            "{{\"m\":{m},\"k\":{k},\"fmt\":\"{fmt}\",\"batched_us\":[{}]}}",
+            curve.join(",")
+        ));
+    }
+    // Engine-level prices for the tiny reference deployment the serving
+    // tests and CI smokes run (chunk 16, W4, 8 KV slots).
+    let model = weights::random_transformer(&ModelConfig::tiny(), 0);
+    let engine = Engine::reference(model, SocConfig::oneplus12(), 16, 4, 8)?;
+    let widths: Vec<String> =
+        (1..=8).map(|b| json_f(engine.sim_decode_batch_proj_us(b))).collect();
+    let eng = format!(
+        "{{\"model\":\"tiny\",\"chunk\":16,\"prefill_chunk_us\":{},\"decode_proj_us\":[{}]}}",
+        json_f(engine.plan_prefill_chunk_us(16)),
+        widths.join(",")
+    );
+    Ok(format!(
+        "{{\"schema\":1,\"soc\":\"{}\",\"prefill_gemm\":[{}],\"batched_decode\":[{}],\"engine\":{}}}",
+        soc.name,
+        prefill.join(","),
+        decode.join(","),
+        eng
+    ))
 }
 
 /// Prefer the PJRT artifact engine when the feature is on and artifacts
@@ -147,7 +207,6 @@ fn main() -> Result<()> {
             } else {
                 TraceProfile::standard()
             };
-            let trace = synthetic_trace(n, seed, &profile);
             let max_batch = max_batch_from(&args)?;
             let opts = ServeOpts {
                 temperature: args.flags.get("temp").map(|s| s.parse()).transpose()?.unwrap_or(0.0),
@@ -156,17 +215,50 @@ fn main() -> Result<()> {
                 max_batch,
                 ..Default::default()
             };
-            println!(
-                "serving {n} synthetic requests (chunk {}, {} KV slots, decode batch {}, \
-                 soc {}) ...",
+            let closed_loop: Option<usize> =
+                args.flags.get("closed-loop").map(|s| s.parse()).transpose()?;
+            let think_ms: f64 =
+                args.flags.get("think-ms").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+            let setup = format!(
+                "chunk {}, {} KV slots, decode batch {}, soc {}",
                 engine.chunk(),
                 engine.kv_slot_capacity(),
                 max_batch,
                 engine.soc.name
             );
             let mut server = Server::new(engine, opts);
-            let fleet = server.run(&trace)?;
+            let fleet = match closed_loop {
+                Some(concurrency) => {
+                    println!(
+                        "serving {n} closed-loop requests ({concurrency} clients, think \
+                         {think_ms} ms, {setup}) ..."
+                    );
+                    let cl = ClosedLoopOpts {
+                        total: n,
+                        concurrency,
+                        think_us: think_ms * 1e3,
+                        seed,
+                    };
+                    server.run_closed_loop(&cl, &profile)?
+                }
+                None => {
+                    println!("serving {n} synthetic requests ({setup}) ...");
+                    server.run(&synthetic_trace(n, seed, &profile))?
+                }
+            };
             println!("{}", fleet.report());
+        }
+        "bench" => {
+            // Machine-readable kernel/serving cost snapshot, one run per
+            // CI build: `tman bench --json > bench.json`. Tracks the
+            // prefill-pipeline and batched-decode trajectories per PR.
+            let json = args.flags.contains_key("json");
+            let report = bench_report()?;
+            if json {
+                println!("{report}");
+            } else {
+                println!("bench report (pass --json for the raw artifact):\n{report}");
+            }
         }
         "info" => {
             let meta = tman::runtime::artifacts::ArtifactMeta::load(&artifacts_dir(&args))?;
@@ -192,10 +284,13 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "t-man coordinator\n\
-                 usage: tman <generate|serve|info> [flags]\n\
+                 usage: tman <generate|serve|bench|info> [flags]\n\
                  generate: --prompt S --max-new N --temp T --greedy\n\
                  serve:    --trace synthetic --requests N --seed S --verbose --temp T\n\
                  \x20         --max-batch B (decode-batch width, default 1)\n\
+                 \x20         --closed-loop C (C bounded clients instead of the\n\
+                 \x20         open-loop trace) --think-ms T (client think time)\n\
+                 bench:    --json (machine-readable plan-cost snapshot)\n\
                  shared:   --model tiny|small|base --chunk C --kv-slots N (default\n\
                  \x20         max-batch + 2) --bits 2|4 --artifacts DIR\n\
                  \x20         --soc oneplus12|oneplus13t"

@@ -1,6 +1,13 @@
 //! The embedded tiny corpus (shared with `python/compile/train.py` via
 //! `data/corpus.txt`) and train/validation split helpers.
 //!
+//! The corpus is ~37 KB of deterministic public-domain English prose — the
+//! U.S. founding documents (Declaration of Independence, Gettysburg
+//! Address, Constitution preamble + articles, Bill of Rights and later
+//! amendments), replacing the earlier synthetic phrase loop with natural
+//! text of similar byte size so the byte-level model sees realistic
+//! character statistics.
+//!
 //! The Table 4 substitution (DESIGN.md §1): WikiText2 perplexity on 8B
 //! models becomes tiny-corpus perplexity on the small trained model. The
 //! *direction* of the claim — per-block quantization beats per-channel even

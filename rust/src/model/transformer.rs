@@ -4,35 +4,46 @@
 //! This is the *reference* model used for accuracy experiments (Table 4 PPL)
 //! and as the numeric cross-check for the JAX/PJRT serving path. Every
 //! linear projection goes through [`Linear`], which is either full-precision
-//! or a quantized matrix — flipping a model between FP32, per-block W4/W2
-//! and per-channel W4 is a weight-transformation, not an architecture
-//! change, exactly as on device.
+//! or a **planned** quantized layer — a
+//! [`UnifiedLayerPlan`](crate::kernels::plan::UnifiedLayerPlan) holding the
+//! single bit-serial weight buffer, the two-level dequant tables, and the
+//! unified tiling both on-device phases run under. Flipping a model between
+//! FP32, per-block W4/W2 and per-channel W4 is a weight-transformation, not
+//! an architecture change, exactly as on device; the host-side numerics of
+//! a planned layer are byte-identical to the unpacked-codes representation
+//! it replaced.
 
+use crate::kernels::plan::UnifiedLayerPlan;
 use crate::model::config::ModelConfig;
 use crate::model::kv_cache::KvCache;
-use crate::quant::formats::{Granularity, WeightDtype};
-use crate::quant::qmatrix::QuantizedMatrix;
+use crate::npu::config::NpuConfig;
+use crate::quant::formats::{ActDtype, Granularity, WeightDtype};
 use crate::quant::quantize;
 
-/// A linear projection y = W·x, W stored full-precision or quantized.
+/// Prefill chunk length a quantized layer is planned for when the caller
+/// does not say otherwise (the paper's 128-token chunk).
+pub const DEFAULT_PLAN_CHUNK: usize = 128;
+
+/// A linear projection y = W·x: full-precision weights, or a planned
+/// quantized layer (the unified weight artifact both phases execute).
 #[derive(Debug, Clone)]
 pub enum Linear {
     F32 { w: Vec<f32>, m: usize, k: usize },
-    Quant(QuantizedMatrix),
+    Planned(Box<UnifiedLayerPlan>),
 }
 
 impl Linear {
     pub fn out_dim(&self) -> usize {
         match self {
             Linear::F32 { m, .. } => *m,
-            Linear::Quant(q) => q.m,
+            Linear::Planned(p) => p.out_dim(),
         }
     }
 
     pub fn in_dim(&self) -> usize {
         match self {
             Linear::F32 { k, .. } => *k,
-            Linear::Quant(q) => q.k,
+            Linear::Planned(p) => p.in_dim(),
         }
     }
 
@@ -73,17 +84,17 @@ impl Linear {
                     }
                 }
             }
-            Linear::Quant(q) => {
+            Linear::Planned(p) => {
+                let (m, k) = (p.out_dim(), p.in_dim());
                 for (x, y) in xs.iter().zip(ys.iter_mut()) {
-                    assert_eq!(x.len(), q.k);
-                    assert_eq!(y.len(), q.m);
+                    assert_eq!(x.len(), k);
+                    assert_eq!(y.len(), m);
                 }
-                // Decode each quantized row once, apply it to every lane.
-                let mut row = vec![0.0f32; q.k];
-                for i in 0..q.m {
-                    for (j, r) in row.iter_mut().enumerate() {
-                        *r = q.dequant(i, j);
-                    }
+                // Decode each quantized row once — through the plan's exact
+                // reference dequantization — and apply it to every lane.
+                let mut row = vec![0.0f32; k];
+                for i in 0..m {
+                    p.dequant_row_into(i, &mut row);
                     for (x, y) in xs.iter().zip(ys.iter_mut()) {
                         let mut acc = 0.0f32;
                         for (a, b) in row.iter().zip(x.iter()) {
@@ -96,8 +107,17 @@ impl Linear {
         }
     }
 
-    /// Quantize an F32 linear in place (no-op if already quantized).
-    pub fn quantized(&self, dtype: WeightDtype, gran: Granularity, use_gptq: bool) -> Linear {
+    /// Quantize an F32 linear into a planned layer targeting `cfg` with
+    /// `chunk`-token prefill slices (no-op if already planned). One call =
+    /// one tiling search + one table build + one bit-serial buffer.
+    pub fn planned(
+        &self,
+        cfg: &NpuConfig,
+        chunk: usize,
+        dtype: WeightDtype,
+        gran: Granularity,
+        use_gptq: bool,
+    ) -> Linear {
         match self {
             Linear::F32 { w, m, k } => {
                 let q = if use_gptq {
@@ -105,10 +125,23 @@ impl Linear {
                 } else {
                     quantize::rtn(w, *m, *k, dtype, gran)
                 };
-                Linear::Quant(q)
+                Linear::Planned(Box::new(UnifiedLayerPlan::from_qmatrix(
+                    cfg,
+                    &q,
+                    ActDtype::Fp16,
+                    chunk,
+                )))
             }
             other => other.clone(),
         }
+    }
+
+    /// [`Linear::planned`] against the default deployment target
+    /// (Snapdragon 8 Gen 3, [`DEFAULT_PLAN_CHUNK`]-token chunks) — the
+    /// accuracy experiments only need the numerics, which do not depend on
+    /// the planned tiling.
+    pub fn quantized(&self, dtype: WeightDtype, gran: Granularity, use_gptq: bool) -> Linear {
+        self.planned(&NpuConfig::sd8gen3(), DEFAULT_PLAN_CHUNK, dtype, gran, use_gptq)
     }
 }
 
@@ -171,6 +204,42 @@ fn softmax_inplace(x: &mut [f32]) {
     }
 }
 
+/// One position's causal attention over its cached prefix: scores against
+/// every K row `t <= pos`, softmax, V-weighted sum — per head, with GQA
+/// head-group sharing. This is the *single* implementation of the
+/// attention math; the batched decode step and the planned chunk pass both
+/// call it, so the two execution paths cannot drift numerically.
+fn attend(
+    cache: &KvCache,
+    layer: usize,
+    pos: usize,
+    q: &[f32],
+    out: &mut [f32],
+    cfg: &ModelConfig,
+) {
+    let dh = cfg.d_head();
+    let groups = cfg.n_heads / cfg.n_kv_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    out.fill(0.0);
+    for head in 0..cfg.n_heads {
+        let kvh = head / groups;
+        let qh = &q[head * dh..(head + 1) * dh];
+        let mut scores = vec![0.0f32; pos + 1];
+        for (t, s) in scores.iter_mut().enumerate() {
+            let kt = cache.k(layer, t, kvh, dh);
+            *s = qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale;
+        }
+        softmax_inplace(&mut scores);
+        let o = &mut out[head * dh..(head + 1) * dh];
+        for (t, &s) in scores.iter().enumerate() {
+            let vt = cache.v(layer, t, kvh, dh);
+            for (ov, &vv) in o.iter_mut().zip(vt) {
+                *ov += s * vv;
+            }
+        }
+    }
+}
+
 fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
@@ -206,7 +275,6 @@ impl Transformer {
         let d = c.d_model;
         let dh = c.d_head();
         let dkv = c.d_kv();
-        let groups = c.n_heads / c.n_kv_heads;
         for &(token, pos) in steps {
             assert!(token < c.vocab, "token {token} out of vocab");
             assert!(pos < c.max_seq, "pos {pos} exceeds max_seq");
@@ -241,26 +309,7 @@ impl Transformer {
                     rope(&mut k[lane][kvh * dh..(kvh + 1) * dh], pos, c.rope_theta);
                 }
                 caches[lane].append(li, pos, &k[lane], &v[lane]);
-
-                attn_out[lane].fill(0.0);
-                let scale = 1.0 / (dh as f32).sqrt();
-                for head in 0..c.n_heads {
-                    let kvh = head / groups;
-                    let qh = &q[lane][head * dh..(head + 1) * dh];
-                    let mut scores = vec![0.0f32; pos + 1];
-                    for (t, s) in scores.iter_mut().enumerate() {
-                        let kt = caches[lane].k(li, t, kvh, dh);
-                        *s = qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale;
-                    }
-                    softmax_inplace(&mut scores);
-                    let out = &mut attn_out[lane][head * dh..(head + 1) * dh];
-                    for (t, &s) in scores.iter().enumerate() {
-                        let vt = caches[lane].v(li, t, kvh, dh);
-                        for (o, &vv) in out.iter_mut().zip(vt) {
-                            *o += s * vv;
-                        }
-                    }
-                }
+                attend(&*caches[lane], li, pos, &q[lane], &mut attn_out[lane], c);
             }
             layer.wo.forward_batch(&attn_out, &mut proj);
             for lane in 0..lanes {
@@ -297,6 +346,107 @@ impl Transformer {
         logits
     }
 
+    /// Run one prefill chunk `tokens` at positions
+    /// `pos_base .. pos_base + tokens.len()` against a single request's
+    /// `cache` — the host-side mirror of the planned prefill GEMM. Every
+    /// linear projection streams (and, for planned layers, decodes) its
+    /// weights **once** for the whole chunk: the chunk positions form the
+    /// (n × K) activation block of the matrix path and go through
+    /// [`Linear::forward_batch`] together. K/V rows for all chunk positions
+    /// land in the cache before attention, then each position attends over
+    /// its own causal prefix — so the logits at the last position are
+    /// byte-identical to feeding the chunk through
+    /// [`Transformer::forward_token`] one position at a time.
+    pub fn forward_chunk(
+        &self,
+        tokens: &[usize],
+        pos_base: usize,
+        cache: &mut KvCache,
+    ) -> Vec<f32> {
+        let c = &self.cfg;
+        let n = tokens.len();
+        assert!(n > 0, "empty prefill chunk");
+        let d = c.d_model;
+        let dh = c.d_head();
+        let dkv = c.d_kv();
+        for (off, &token) in tokens.iter().enumerate() {
+            assert!(token < c.vocab, "token {token} out of vocab");
+            assert!(pos_base + off < c.max_seq, "pos {} exceeds max_seq", pos_base + off);
+        }
+
+        let mut h: Vec<Vec<f32>> =
+            tokens.iter().map(|&t| self.embed[t * d..(t + 1) * d].to_vec()).collect();
+        let mut normed = vec![vec![0.0f32; d]; n];
+        let mut q = vec![vec![0.0f32; d]; n];
+        let mut k = vec![vec![0.0f32; dkv]; n];
+        let mut v = vec![vec![0.0f32; dkv]; n];
+        let mut attn_out = vec![vec![0.0f32; d]; n];
+        let mut proj = vec![vec![0.0f32; d]; n];
+        let mut gate = vec![vec![0.0f32; c.d_ff]; n];
+        let mut up = vec![vec![0.0f32; c.d_ff]; n];
+        let mut down = vec![vec![0.0f32; d]; n];
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // --- attention ---
+            for lane in 0..n {
+                rmsnorm(&h[lane], &layer.attn_norm, c.norm_eps, &mut normed[lane]);
+            }
+            // One pass over each projection's weights serves the chunk.
+            layer.wq.forward_batch(&normed, &mut q);
+            layer.wk.forward_batch(&normed, &mut k);
+            layer.wv.forward_batch(&normed, &mut v);
+            // All K/V rows of the chunk are staged before any position
+            // attends: position p only reads t <= p, and those rows do not
+            // depend on any attention output within the layer.
+            for lane in 0..n {
+                let pos = pos_base + lane;
+                for head in 0..c.n_heads {
+                    rope(&mut q[lane][head * dh..(head + 1) * dh], pos, c.rope_theta);
+                }
+                for kvh in 0..c.n_kv_heads {
+                    rope(&mut k[lane][kvh * dh..(kvh + 1) * dh], pos, c.rope_theta);
+                }
+                cache.append(li, pos, &k[lane], &v[lane]);
+            }
+            for lane in 0..n {
+                attend(&*cache, li, pos_base + lane, &q[lane], &mut attn_out[lane], c);
+            }
+            layer.wo.forward_batch(&attn_out, &mut proj);
+            for lane in 0..n {
+                for (hv, p) in h[lane].iter_mut().zip(&proj[lane]) {
+                    *hv += p;
+                }
+            }
+
+            // --- MLP ---
+            for lane in 0..n {
+                rmsnorm(&h[lane], &layer.mlp_norm, c.norm_eps, &mut normed[lane]);
+            }
+            layer.w_gate.forward_batch(&normed, &mut gate);
+            layer.w_up.forward_batch(&normed, &mut up);
+            for lane in 0..n {
+                for (g, u) in gate[lane].iter_mut().zip(&up[lane]) {
+                    *g = silu(*g) * u;
+                }
+            }
+            layer.w_down.forward_batch(&gate, &mut down);
+            for lane in 0..n {
+                for (hv, dn) in h[lane].iter_mut().zip(&down[lane]) {
+                    *hv += dn;
+                }
+            }
+        }
+
+        // Only the last position's logits are ever consumed (the chunk's
+        // other next-token distributions are teacher-forced away).
+        let last = h[n - 1].clone();
+        let mut final_h = vec![0.0f32; d];
+        rmsnorm(&last, &self.final_norm, c.norm_eps, &mut final_h);
+        let mut logits = vec![0.0f32; c.vocab];
+        self.lm_head.forward(&final_h, &mut logits);
+        logits
+    }
+
     /// Teacher-forced logits over a whole sequence: `logits[t]` predicts
     /// `tokens[t+1]`. Used for perplexity.
     pub fn forward_seq(&self, tokens: &[usize]) -> Vec<Vec<f32>> {
@@ -308,27 +458,44 @@ impl Transformer {
             .collect()
     }
 
-    /// Return a copy with every projection quantized (embeddings and norms
-    /// stay fp32, standard practice).
-    pub fn quantized(&self, dtype: WeightDtype, gran: Granularity, use_gptq: bool) -> Transformer {
+    /// Return a copy with every projection planned for `cfg` at
+    /// `chunk`-token prefill slices (embeddings and norms stay fp32,
+    /// standard practice). Each projection gets exactly one
+    /// `UnifiedLayerPlan` — one tiling search, one weight buffer, one set
+    /// of dequant tables serving both phases.
+    pub fn planned_for(
+        &self,
+        cfg: &NpuConfig,
+        chunk: usize,
+        dtype: WeightDtype,
+        gran: Granularity,
+        use_gptq: bool,
+    ) -> Transformer {
         let mut out = self.clone();
         for l in out.layers.iter_mut() {
             for lin in [
                 &mut l.wq, &mut l.wk, &mut l.wv, &mut l.wo, &mut l.w_gate, &mut l.w_up,
                 &mut l.w_down,
             ] {
-                *lin = lin.quantized(dtype, gran, use_gptq);
+                *lin = lin.planned(cfg, chunk, dtype, gran, use_gptq);
             }
         }
-        out.lm_head = out.lm_head.quantized(dtype, gran, use_gptq);
+        out.lm_head = out.lm_head.planned(cfg, chunk, dtype, gran, use_gptq);
         out
+    }
+
+    /// [`Transformer::planned_for`] against the default deployment target —
+    /// the accuracy experiments' entry point (numerics are independent of
+    /// the planned tiling).
+    pub fn quantized(&self, dtype: WeightDtype, gran: Granularity, use_gptq: bool) -> Transformer {
+        self.planned_for(&NpuConfig::sd8gen3(), DEFAULT_PLAN_CHUNK, dtype, gran, use_gptq)
     }
 
     /// Total bytes of projection weights under the current representation.
     pub fn projection_bytes(&self) -> usize {
         let lin_bytes = |l: &Linear| match l {
             Linear::F32 { w, .. } => w.len() * 4,
-            Linear::Quant(q) => q.footprint_bytes(),
+            Linear::Planned(p) => p.footprint_bytes(),
         };
         let mut total = lin_bytes(&self.lm_head);
         for l in &self.layers {
@@ -451,6 +618,31 @@ mod tests {
             for (a, b) in caches.iter().zip(&solo_caches) {
                 assert_eq!(a.len, b.len);
             }
+        }
+    }
+
+    #[test]
+    fn forward_chunk_is_bit_identical_to_stepwise() {
+        // The planned prefill pass must not perturb numerics: chunked
+        // forward (weights streamed once per chunk) lands on byte-identical
+        // logits to token-by-token teacher forcing — fp32 and planned
+        // quantized projections alike, across a ragged chunk boundary.
+        for quantize in [false, true] {
+            let mut model = random_transformer(&ModelConfig::tiny(), 31);
+            if quantize {
+                model = model.quantized(WeightDtype::Int4, Granularity::PerBlock(64), false);
+            }
+            let toks = [1usize, 5, 9, 200, 42, 7];
+            let mut c1 = KvCache::new(&model.cfg, 16);
+            let mut want = Vec::new();
+            for (pos, &t) in toks.iter().enumerate() {
+                want = model.forward_token(t, pos, &mut c1);
+            }
+            let mut c2 = KvCache::new(&model.cfg, 16);
+            model.forward_chunk(&toks[..4], 0, &mut c2);
+            let got = model.forward_chunk(&toks[4..], 4, &mut c2);
+            assert_eq!(got, want, "quantize={quantize}");
+            assert_eq!(c1.len, c2.len);
         }
     }
 

@@ -67,7 +67,7 @@ fn read_f32s<R: Read>(r: &mut R, n: usize) -> std::io::Result<Vec<f32>> {
 fn lin_f32(l: &Linear) -> (&[f32], usize, usize) {
     match l {
         Linear::F32 { w, m, k } => (w, *m, *k),
-        Linear::Quant(_) => panic!("cannot serialize a quantized Linear; save the fp32 master"),
+        Linear::Planned(_) => panic!("cannot serialize a planned Linear; save the fp32 master"),
     }
 }
 

@@ -33,6 +33,19 @@ impl Breakdown {
         self.mem_us.max(self.dq_us).max(self.cmp_us) + fill_us + self.overhead_us
     }
 
+    /// Three-stage pipeline totals over `tiles` identical tiles of this
+    /// per-tile breakdown: `(steady, fill)` where steady state is the
+    /// slowest stage times the tile count (Fig. 9) and fill/drain is one
+    /// pass of the two non-dominant stages. Every prefill-GEMM cost
+    /// consumer — the kernel itself and the plan cost surface — derives
+    /// its pipelined total from this one formula.
+    pub fn pipeline_steady_fill(&self, tiles: f64) -> (f64, f64) {
+        let slowest = self.mem_us.max(self.dq_us).max(self.cmp_us);
+        let steady = slowest * tiles;
+        let fill = self.mem_us + self.dq_us + self.cmp_us - slowest;
+        (steady, fill)
+    }
+
     pub fn scaled(&self, f: f64) -> Breakdown {
         Breakdown {
             mem_us: self.mem_us * f,

@@ -90,17 +90,27 @@ impl BitSerialWeights {
         self.k.div_ceil(4)
     }
 
+    /// Reconstruct the code of element (row, col) from its bit planes —
+    /// exactly the value the canonical [`QuantizedMatrix`] stored. The
+    /// reference (host-side) dequantization path of a planned layer uses
+    /// this so quantized numerics are byte-identical whether the codes live
+    /// packed or unpacked.
+    #[inline]
+    pub fn code(&self, row: usize, col: usize) -> u8 {
+        let mut c = 0u8;
+        for b in 0..self.planes.len() {
+            c |= self.bit(b, row, col) << b;
+        }
+        c
+    }
+
     /// Reconstruct the canonical code matrix (round-trip check; also the
     /// semantic spec the two-level repack LUT must match).
     pub fn to_codes(&self) -> Vec<u8> {
         let mut codes = vec![0u8; self.m * self.k];
         for i in 0..self.m {
             for j in 0..self.k {
-                let mut c = 0u8;
-                for b in 0..self.planes.len() {
-                    c |= self.bit(b, i, j) << b;
-                }
-                codes[i * self.k + j] = c;
+                codes[i * self.k + j] = self.code(i, j);
             }
         }
         codes

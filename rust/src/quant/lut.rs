@@ -106,23 +106,24 @@ impl ConvLut {
     }
 }
 
-/// Fused two-level dequantizer over a bit-serial weight matrix.
+/// The owned pair of two-level dequantization tables for one weight matrix
+/// — the artifact a [`UnifiedLayerPlan`] builds once and keeps for the
+/// lifetime of the layer (the real kernel rebuilds conversion LUTs per tile;
+/// here the whole matrix's tables are prebuilt). Weight-free: the bit-serial
+/// planes are passed in at lookup time, so one owner can hold both the
+/// weights and the tables without self-reference.
 ///
-/// Produces exactly what the naive pipeline (repack → int-to-float → affine)
-/// produces, but with `bits` LUT ops per 4 weights plus one conversion
-/// lookup per weight. Used by the prefill path (vector-core stage of the
-/// DMA-Vector-Matrix pipeline) and by the Fig. 16 ablation.
-#[derive(Debug)]
-pub struct TwoLevelDequant<'a> {
-    pub weights: &'a BitSerialWeights,
+/// [`UnifiedLayerPlan`]: crate::kernels::plan::UnifiedLayerPlan
+#[derive(Debug, Clone)]
+pub struct DequantTables {
     pub repack: RepackLut,
-    /// Conversion LUT per scale group, built lazily per tile in the real
-    /// kernel; prebuilt here for the whole matrix.
+    /// Conversion LUT per scale group.
     pub conv: Vec<ConvLut>,
 }
 
-impl<'a> TwoLevelDequant<'a> {
-    pub fn new(weights: &'a BitSerialWeights) -> Self {
+impl DequantTables {
+    /// Build both table levels for `weights`' scale groups and bit width.
+    pub fn build(weights: &BitSerialWeights) -> Self {
         let bits = weights.dtype.bits() as usize;
         let levels = 1u32 << bits;
         let conv = weights
@@ -131,58 +132,99 @@ impl<'a> TwoLevelDequant<'a> {
             .zip(&weights.zeros)
             .map(|(&s, &z)| ConvLut::new(s, z, levels))
             .collect();
-        Self { weights, repack: RepackLut::new(bits), conv }
+        Self { repack: RepackLut::new(bits), conv }
     }
 
     /// Dequantize K-range `[col0, col0+len)` of `row` into `dst` (fp16-exact
     /// values). `col0` and `len` must be multiples of 4 (the repack group).
-    pub fn dequant_row_range(&self, row: usize, col0: usize, len: usize, dst: &mut [f32]) {
+    pub fn dequant_row_range(
+        &self,
+        weights: &BitSerialWeights,
+        row: usize,
+        col0: usize,
+        len: usize,
+        dst: &mut [f32],
+    ) {
         assert_eq!(col0 % 4, 0, "col0 must be 4-aligned");
         assert_eq!(len % 4, 0, "len must be a multiple of 4");
-        assert!(col0 + len <= self.weights.k.div_ceil(4) * 4);
+        assert!(col0 + len <= weights.k.div_ceil(4) * 4);
         assert_eq!(dst.len(), len);
         let bits = self.repack.bits;
         let mut nibbles = vec![0u8; bits];
         for g in 0..len / 4 {
             let nib_idx = col0 / 4 + g;
             for (b, n) in nibbles.iter_mut().enumerate() {
-                *n = self.weights.nibble(b, row, nib_idx);
+                *n = weights.nibble(b, row, nib_idx);
             }
             let word = self.repack.repack4(&nibbles);
             for w in 0..4 {
                 let col = nib_idx * 4 + w;
-                if col >= self.weights.k {
+                if col >= weights.k {
                     break;
                 }
                 let code = self.repack.code_of(word, w);
-                let grp = self.weights.group_of(row, col);
+                let grp = weights.group_of(row, col);
                 dst[g * 4 + w] = self.conv[grp].lookup(code);
             }
         }
     }
 
     /// Dequantize a full row.
-    pub fn dequant_row(&self, row: usize, dst: &mut [f32]) {
-        let k = self.weights.k;
+    pub fn dequant_row(&self, weights: &BitSerialWeights, row: usize, dst: &mut [f32]) {
+        let k = weights.k;
         if k % 4 == 0 {
-            self.dequant_row_range(row, 0, k, dst);
+            self.dequant_row_range(weights, row, 0, k, dst);
         } else {
             let padded = k.div_ceil(4) * 4;
             let mut tmp = vec![0.0f32; padded];
-            self.dequant_row_range(row, 0, padded, &mut tmp);
+            self.dequant_row_range(weights, row, 0, padded, &mut tmp);
             dst.copy_from_slice(&tmp[..k]);
         }
     }
 
     /// Full dequantized (M, K) matrix.
-    pub fn dequant_all(&self) -> Vec<f32> {
-        let (m, k) = (self.weights.m, self.weights.k);
+    pub fn dequant_all(&self, weights: &BitSerialWeights) -> Vec<f32> {
+        let (m, k) = (weights.m, weights.k);
         let mut out = vec![0.0f32; m * k];
         for i in 0..m {
             let (a, b) = (i * k, (i + 1) * k);
-            self.dequant_row(i, &mut out[a..b]);
+            self.dequant_row(weights, i, &mut out[a..b]);
         }
         out
+    }
+}
+
+/// Fused two-level dequantizer over a bit-serial weight matrix: the borrowed
+/// view binding a weight matrix to its [`DequantTables`].
+///
+/// Produces exactly what the naive pipeline (repack → int-to-float → affine)
+/// produces, but with `bits` LUT ops per 4 weights plus one conversion
+/// lookup per weight. Used by the prefill path (vector-core stage of the
+/// DMA-Vector-Matrix pipeline) and by the Fig. 16 ablation.
+#[derive(Debug)]
+pub struct TwoLevelDequant<'a> {
+    pub weights: &'a BitSerialWeights,
+    pub tables: DequantTables,
+}
+
+impl<'a> TwoLevelDequant<'a> {
+    pub fn new(weights: &'a BitSerialWeights) -> Self {
+        Self { weights, tables: DequantTables::build(weights) }
+    }
+
+    /// Dequantize K-range `[col0, col0+len)` of `row` into `dst`.
+    pub fn dequant_row_range(&self, row: usize, col0: usize, len: usize, dst: &mut [f32]) {
+        self.tables.dequant_row_range(self.weights, row, col0, len, dst);
+    }
+
+    /// Dequantize a full row.
+    pub fn dequant_row(&self, row: usize, dst: &mut [f32]) {
+        self.tables.dequant_row(self.weights, row, dst);
+    }
+
+    /// Full dequantized (M, K) matrix.
+    pub fn dequant_all(&self) -> Vec<f32> {
+        self.tables.dequant_all(self.weights)
     }
 }
 

@@ -15,6 +15,6 @@ pub mod quantize;
 
 pub use bitserial::{BitParallelWeights, BitSerialWeights};
 pub use formats::{ActDtype, Granularity, QuantFormat, WeightDtype};
-pub use lut::{ConvLut, RepackLut, TwoLevelDequant};
+pub use lut::{ConvLut, DequantTables, RepackLut, TwoLevelDequant};
 pub use qmatrix::QuantizedMatrix;
 pub use quantize::{gptq, reconstruction_mse, rtn, ternary_absmean};

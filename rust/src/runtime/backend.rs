@@ -191,15 +191,25 @@ impl ReferenceBackend {
         Ok(self.model.forward_batch(&lanes, &mut caches))
     }
 
+    /// Run one prefill chunk through the *planned* chunk pass
+    /// ([`Transformer::forward_chunk`]): the chunk's positions form one
+    /// (n × K) activation block, every projection streams (and, for planned
+    /// layers, decodes) its weights once for the whole chunk, and the
+    /// returned last-position logits are byte-identical to teacher-forcing
+    /// the chunk through [`ReferenceBackend::decode_step`] one token at a
+    /// time.
     pub fn prefill_chunk(&mut self, id: u64, tokens: &[i32], pos_base: i32) -> Result<Vec<f32>> {
         anyhow::ensure!(!tokens.is_empty(), "empty prefill chunk");
-        let mut logits = Vec::new();
-        let mut pos = pos_base;
+        anyhow::ensure!(pos_base >= 0, "negative position {pos_base}");
+        let vocab = self.model.cfg.vocab;
+        let mut toks = Vec::with_capacity(tokens.len());
         for &t in tokens {
-            logits = self.decode_step(id, t, pos)?;
-            pos += 1;
+            anyhow::ensure!(t >= 0 && (t as usize) < vocab, "token {t} out of vocab");
+            toks.push(t as usize);
         }
-        Ok(logits)
+        let slot = self.slot_for(id)?;
+        let cache = self.pool.get_mut(slot);
+        Ok(self.model.forward_chunk(&toks, pos_base as usize, cache))
     }
 
     pub fn slots_in_use(&self) -> usize {

@@ -6,7 +6,9 @@
 //! the same trace.
 
 use tman::coordinator::engine::Engine;
-use tman::coordinator::server::{synthetic_trace, ServeOpts, Server, TraceProfile, TraceRequest};
+use tman::coordinator::server::{
+    synthetic_trace, ClosedLoopOpts, ServeOpts, Server, TraceProfile, TraceRequest,
+};
 use tman::model::config::ModelConfig;
 use tman::model::kv_cache::KvCache;
 use tman::model::weights::random_transformer;
@@ -312,4 +314,74 @@ fn kv_slots_are_released_after_the_run() {
     let trace = synthetic_trace(6, 1, &TraceProfile::tiny());
     server.run(&trace).expect("serve");
     assert_eq!(server.engine().kv_slots_in_use(), 0, "all KV slots must be released");
+}
+
+#[test]
+fn closed_loop_bounds_the_requests_in_flight() {
+    // A closed-loop population of 2 clients must never have more than 2
+    // requests alive at once — the whole point of the load model — while
+    // still serving the full request budget.
+    let mut server = Server::new(engine_with(16, 4), ServeOpts::default());
+    let opts = ClosedLoopOpts { total: 10, concurrency: 2, think_us: 500.0, seed: 3 };
+    let fleet = server.run_closed_loop(&opts, &TraceProfile::tiny()).expect("serve");
+    assert_eq!(fleet.completions.len(), 10, "every issued request must complete");
+
+    // Sweep [arrival, finish] intervals: the overlap count is the number
+    // of requests in flight, and must never exceed the client count.
+    // (think_us > 0 keeps arrivals strictly after finishes, so tie order
+    // between +1/−1 events cannot matter.)
+    let mut events: Vec<(f64, i32)> = Vec::new();
+    for c in &fleet.completions {
+        assert!(c.finish_us > c.arrival_us);
+        events.push((c.arrival_us, 1));
+        events.push((c.finish_us, -1));
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut in_flight = 0i32;
+    let mut peak = 0i32;
+    for (_, delta) in events {
+        in_flight += delta;
+        peak = peak.max(in_flight);
+    }
+    assert!(peak <= 2, "closed loop exceeded its concurrency bound: {peak}");
+    assert!(peak == 2, "two clients should overlap at least once");
+}
+
+#[test]
+fn single_client_closed_loop_serializes_with_exact_think_time() {
+    let mut server = Server::new(engine_with(16, 3), ServeOpts::default());
+    let opts = ClosedLoopOpts { total: 5, concurrency: 1, think_us: 250.0, seed: 9 };
+    let fleet = server.run_closed_loop(&opts, &TraceProfile::tiny()).expect("serve");
+    assert_eq!(fleet.completions.len(), 5);
+    // One client: each next request arrives exactly think_us after the
+    // previous one finished, and is admitted the moment it arrives.
+    for w in fleet.completions.windows(2) {
+        let want = w[0].finish_us + 250.0;
+        assert!(
+            (w[1].arrival_us - want).abs() < 1e-9,
+            "arrival {} != finish {} + think",
+            w[1].arrival_us,
+            w[0].finish_us
+        );
+    }
+    for c in &fleet.completions {
+        assert!(c.queue_wait_us.abs() < 1e-9, "an idle server must admit instantly");
+    }
+}
+
+#[test]
+fn closed_loop_runs_are_deterministic() {
+    let opts = ClosedLoopOpts { total: 8, concurrency: 3, think_us: 100.0, seed: 7 };
+    let run = || {
+        let mut server = Server::new(engine_with(16, 5), ServeOpts::default());
+        server.run_closed_loop(&opts, &TraceProfile::tiny()).expect("serve")
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.completions.len(), b.completions.len());
+    for (x, y) in a.completions.iter().zip(&b.completions) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.text, y.text);
+        assert_eq!(x.arrival_us, y.arrival_us);
+        assert_eq!(x.finish_us, y.finish_us);
+    }
 }
