@@ -110,15 +110,32 @@ pub struct RequestCompletion {
     pub finish_us: f64,
     pub sim_prefill_us: f64,
     pub sim_decode_us: f64,
-    pub energy_j: f64,
+    /// Kernel-attributed prefill energy: the plan cost surface's stage
+    /// breakdown priced per power rail (DMA streaming vs compute), summed
+    /// over this request's computed prefill slices.
+    pub energy_prefill_j: f64,
+    /// Kernel-attributed decode energy: this request's share of each
+    /// decode batch's kernel energy, attributed proportionally to its
+    /// share of the batch's time.
+    pub energy_decode_j: f64,
     /// Times this request's prefill was preempted (each time it later
     /// resumed in place — preemption never restarts work).
     pub preempted: usize,
-    /// Prompt tokens actually processed by prefill slices over the
-    /// request's lifetime. Equal to `prompt_tokens` when no work was
-    /// redone — the resumable-preemption invariant.
+    /// Prompt tokens actually *computed* by prefill slices over the
+    /// request's lifetime. Equal to `prompt_tokens - cached_tokens` when
+    /// no work was redone — the resumable-preemption invariant.
     pub prefilled_tokens: usize,
+    /// Prompt tokens served from the prefix cache (shared KV blocks) —
+    /// never recomputed.
+    pub cached_tokens: usize,
     pub text: String,
+}
+
+impl RequestCompletion {
+    /// Total kernel-attributed energy for this request.
+    pub fn energy_j(&self) -> f64 {
+        self.energy_prefill_j + self.energy_decode_j
+    }
 }
 
 /// Aggregate metrics for one serving run, in finish order.
@@ -149,6 +166,22 @@ pub struct FleetMetrics {
     /// kernel-derived shared-weight-pass projection cost *plus* each
     /// request's KV-cache transfer, summed over the run.
     pub decode_batch_sim_us: f64,
+    /// Prefix-cache lookups performed at admission (one per request on a
+    /// prefix-cache-enabled engine; 0 with the cache off).
+    pub prefix_lookups: usize,
+    /// Lookups that found a non-empty cached prefix.
+    pub prefix_hits: usize,
+    /// Prompt tokens served from shared KV blocks instead of recomputed.
+    pub prefix_hit_tokens: usize,
+    /// Simulated prefill µs the prefix cache saved: the kernel price of
+    /// every slice (or slice part) skipped because its positions were
+    /// already resident in shared blocks.
+    pub cache_saved_prefill_us: f64,
+    /// KV pool geometry: total blocks × tokens per block.
+    pub kv_capacity_blocks: usize,
+    pub kv_block_tokens: usize,
+    /// Most KV blocks simultaneously resident over the run.
+    pub kv_blocks_high_water: usize,
 }
 
 impl FleetMetrics {
@@ -161,7 +194,7 @@ impl FleetMetrics {
     }
 
     pub fn total_energy_j(&self) -> f64 {
-        self.completions.iter().map(|c| c.energy_j).sum()
+        self.completions.iter().map(|c| c.energy_j()).sum()
     }
 
     /// Sustained throughput: every processed token (prompt + generated)
@@ -226,16 +259,27 @@ impl FleetMetrics {
         self.decode_batch_sim_us / self.decode_batches_executed as f64
     }
 
+    /// Fraction of prefix-cache lookups that hit (0.0 with the cache off
+    /// or an empty run).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_lookups as f64
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests        : {} completed, {} preemption(s), {} resumed\n\
              tokens          : {} prompt + {} generated\n\
              decode batching : {} batches, {:.2} mean occupancy, {} eviction(s), \
              {:.1} µs/batch\n\
+             paged KV        : {}/{} blocks high-water × {} tok/block\n\
+             prefix cache    : {}/{} hits ({:.0}%), {} tok reused, saved {:.3} ms prefill\n\
              sim makespan    : {:.2} ms ({:.1} tok/s sustained, {:.1} decode tok/s)\n\
              TTFT            : p50 {:.3} ms, p99 {:.3} ms\n\
              queue wait      : p50 {:.3} ms, p99 {:.3} ms\n\
-             sim energy      : {:.4} J total ({:.6} J/tok)\n\
+             sim energy      : {:.4} J total ({:.6} J/tok, kernel-attributed)\n\
              host wall-clock : {:.2} s",
             self.completions.len(),
             self.preemptions,
@@ -246,6 +290,14 @@ impl FleetMetrics {
             self.decode_batch_occupancy(),
             self.decode_evictions,
             self.decode_batch_mean_us(),
+            self.kv_blocks_high_water,
+            self.kv_capacity_blocks,
+            self.kv_block_tokens,
+            self.prefix_hits,
+            self.prefix_lookups,
+            100.0 * self.prefix_hit_rate(),
+            self.prefix_hit_tokens,
+            self.cache_saved_prefill_us / 1e3,
             self.makespan_us / 1e3,
             self.throughput_tps(),
             self.decode_throughput_tps(),
@@ -311,9 +363,11 @@ mod tests {
             finish_us: 10_000.0,
             sim_prefill_us: 500.0,
             sim_decode_us: 1_000.0,
-            energy_j: 0.015,
+            energy_prefill_j: 0.005,
+            energy_decode_j: 0.010,
             preempted: 0,
-            prefilled_tokens: 10,
+            prefilled_tokens: 8,
+            cached_tokens: 2,
             text: String::new(),
         }
     }
@@ -331,6 +385,13 @@ mod tests {
             decode_evictions: 2,
             decode_batches_executed: 3,
             decode_batch_sim_us: 1_800.0,
+            prefix_lookups: 2,
+            prefix_hits: 1,
+            prefix_hit_tokens: 4,
+            cache_saved_prefill_us: 250.0,
+            kv_capacity_blocks: 16,
+            kv_block_tokens: 8,
+            kv_blocks_high_water: 5,
         };
         assert_eq!(fleet.prompt_tokens(), 20);
         assert_eq!(fleet.generated_tokens(), 10);
@@ -338,18 +399,25 @@ mod tests {
         assert!((fleet.throughput_tps() - 1000.0).abs() < 1e-6);
         assert!((fleet.ttft_p50_ms() - 1.0).abs() < 1e-9);
         assert!((fleet.ttft_p99_ms() - 3.0).abs() < 1e-9);
+        // Per-request energy is the prefill + decode split summed.
+        assert!((fleet.completions[0].energy_j() - 0.015).abs() < 1e-15);
         assert!((fleet.total_energy_j() - 0.03).abs() < 1e-12);
         // 10 batched steps over 4 batches => 2.5 mean occupancy.
         assert!((fleet.decode_batch_occupancy() - 2.5).abs() < 1e-12);
         // 1800 µs over 3 *executed* batches => 600 µs mean batch cost (the
         // 4th scheduler batch ran no forward and must not dilute the mean).
         assert!((fleet.decode_batch_mean_us() - 600.0).abs() < 1e-12);
+        assert!((fleet.prefix_hit_rate() - 0.5).abs() < 1e-12);
         let r = fleet.report();
         assert!(r.contains("2 completed"));
         assert!(r.contains("1 preemption"));
         assert!(r.contains("2.50 mean occupancy"));
         assert!(r.contains("2 eviction(s)"));
         assert!(r.contains("600.0 µs/batch"));
+        assert!(r.contains("5/16 blocks high-water × 8 tok/block"));
+        assert!(r.contains("1/2 hits (50%)"));
+        assert!(r.contains("4 tok reused"));
+        assert!(r.contains("kernel-attributed"));
     }
 
     #[test]
@@ -365,8 +433,16 @@ mod tests {
             decode_evictions: 0,
             decode_batches_executed: 0,
             decode_batch_sim_us: 0.0,
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            prefix_hit_tokens: 0,
+            cache_saved_prefill_us: 0.0,
+            kv_capacity_blocks: 0,
+            kv_block_tokens: 0,
+            kv_blocks_high_water: 0,
         };
         assert_eq!(fleet.decode_batch_occupancy(), 0.0);
         assert_eq!(fleet.decode_batch_mean_us(), 0.0);
+        assert_eq!(fleet.prefix_hit_rate(), 0.0);
     }
 }

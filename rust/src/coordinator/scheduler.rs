@@ -28,15 +28,35 @@
 //!   fires when a spare slot exists — with `kv_slots == 1` the scheduler
 //!   never preempts. Decode steps are never preempted (token latency SLO).
 //!
-//! The scheduler owns KV-slot *accounting* (the engine's [`KvSlotPool`]
-//! owns the memory): a request occupies a slot from its first prefill slice
-//! until its [`WorkItem::Finish`] is emitted, across preemptions. Admission
-//! is gated on a free slot, so [`Scheduler::slots_held`] always matches the
-//! engine pool's `in_use` — the serving loop cross-checks this.
+//! The scheduler owns KV *accounting* (the engine's [`PagedKvPool`] owns
+//! the memory): a request occupies its KV from its first prefill slice
+//! until its [`WorkItem::Finish`] is emitted, across preemptions.
+//! Admission is a **token-budget reservation over KV blocks**
+//! ([`Scheduler::with_budget`]): each admitted request reserves the
+//! worst-case block count for its whole token footprint
+//! ([`kv_reserve_tokens`] rounded up to blocks), and a request is admitted
+//! only while the reservations fit the pool — so fleet concurrency is
+//! capped by actual token footprint, not by a slot count, and short
+//! interactive requests no longer pay a whole-sequence slot. The
+//! reservation formula is shared with the pool, so
+//! [`Scheduler::blocks_reserved`] always equals the pool's
+//! `reserved_blocks` and [`Scheduler::slots_held`] always matches the
+//! pool's table count — the serving loop cross-checks both. The legacy
+//! constructor [`Scheduler::new`] is the degenerate geometry (one
+//! whole-sequence block per request): byte-identical admission to the old
+//! slot pool.
 //!
-//! [`KvSlotPool`]: crate::model::kv_cache::KvSlotPool
+//! [`PagedKvPool`]: crate::kvpool::PagedKvPool
 
 use std::collections::VecDeque;
+
+/// Total KV positions a request can ever write: its prompt plus its decode
+/// forwards (the last budgeted token is sampled but never fed back, so it
+/// writes no KV). The serving loop passes exactly this to the pool's
+/// reservation, keeping scheduler and pool accounting bit-equal.
+pub fn kv_reserve_tokens(prompt_tokens: usize, max_new_tokens: usize) -> usize {
+    prompt_tokens + max_new_tokens.saturating_sub(1)
+}
 
 /// A queued generation request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -87,11 +107,16 @@ pub struct Scheduler {
     ready: VecDeque<(Request, usize)>,
     /// Decode-phase requests bound to the vector path: (request, generated).
     decoding: Vec<(Request, usize)>,
-    /// Requests whose `Finish` item is pending emission (slot still held).
-    finishing: VecDeque<u64>,
+    /// Requests whose `Finish` item is pending emission (KV still held):
+    /// (id, reserved blocks).
+    finishing: VecDeque<(u64, usize)>,
     chunk: usize,
     max_batch: usize,
-    kv_slots: usize,
+    /// KV block budget admission reserves against.
+    kv_blocks: usize,
+    /// Positions per KV block (`usize::MAX` in the legacy slot geometry:
+    /// every request rounds to exactly one block).
+    block_tokens: usize,
     /// Alternation flag: emit a prefill slice next when both phases have
     /// work.
     prefer_prefill: bool,
@@ -112,10 +137,26 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// Legacy slot geometry: `kv_slots` requests may hold KV at once,
+    /// whatever their length — exactly one block each. Admission behavior
+    /// is byte-identical to the pre-paged scheduler.
     pub fn new(chunk: usize, max_batch: usize, kv_slots: usize) -> Self {
+        Self::with_budget(chunk, max_batch, kv_slots, usize::MAX)
+    }
+
+    /// Token-budget geometry: admission reserves
+    /// `ceil(kv_reserve_tokens / block_tokens)` blocks per request against
+    /// a pool of `kv_blocks`.
+    pub fn with_budget(
+        chunk: usize,
+        max_batch: usize,
+        kv_blocks: usize,
+        block_tokens: usize,
+    ) -> Self {
         assert!(chunk > 0, "prefill chunk must be positive");
         assert!(max_batch > 0, "decode batch must hold at least one request");
-        assert!(kv_slots > 0, "need at least one KV slot");
+        assert!(kv_blocks > 0, "need at least one KV block");
+        assert!(block_tokens > 0, "block must hold at least one token");
         Self {
             queue: VecDeque::new(),
             prefilling: None,
@@ -124,7 +165,8 @@ impl Scheduler {
             finishing: VecDeque::new(),
             chunk,
             max_batch,
-            kv_slots,
+            kv_blocks,
+            block_tokens,
             prefer_prefill: true,
             finished: Vec::new(),
             preemptions: 0,
@@ -133,6 +175,13 @@ impl Scheduler {
             decode_batched_steps: 0,
             decode_evictions: 0,
         }
+    }
+
+    /// Worst-case KV block reservation for one request (min 1 — matches
+    /// the pool's formula exactly).
+    fn reserve_of(&self, r: &Request) -> usize {
+        let tokens = kv_reserve_tokens(r.prompt_tokens, r.max_new_tokens);
+        tokens.div_ceil(self.block_tokens).max(1)
     }
 
     pub fn submit(&mut self, r: Request) {
@@ -171,10 +220,10 @@ impl Scheduler {
             || !self.finishing.is_empty()
     }
 
-    /// KV slots the schedule currently has bound: the active prefill, every
+    /// Requests currently holding KV: the active prefill, every
     /// ready/decoding/finishing request, and preempted requests keeping
-    /// their slot in the queue. Matches the engine pool's `in_use` after
-    /// every emitted work item is applied.
+    /// their blocks in the queue. Matches the engine pool's table count
+    /// after every emitted work item is applied.
     pub fn slots_held(&self) -> usize {
         usize::from(self.prefilling.is_some())
             + self.ready.len()
@@ -183,10 +232,33 @@ impl Scheduler {
             + self.queue.iter().filter(|q| q.done > 0).count()
     }
 
+    /// KV blocks currently reserved by the holders counted in
+    /// [`Scheduler::slots_held`] — the token-budget admission state.
+    /// Matches the engine pool's `reserved_blocks` exactly (same formula,
+    /// same holder set).
+    pub fn blocks_reserved(&self) -> usize {
+        self.prefilling.iter().map(|(r, _)| self.reserve_of(r)).sum::<usize>()
+            + self.ready.iter().map(|(r, _)| self.reserve_of(r)).sum::<usize>()
+            + self.decoding.iter().map(|(r, _)| self.reserve_of(r)).sum::<usize>()
+            + self.finishing.iter().map(|&(_, res)| res).sum::<usize>()
+            + self
+                .queue
+                .iter()
+                .filter(|q| q.done > 0)
+                .map(|q| self.reserve_of(&q.req))
+                .sum::<usize>()
+    }
+
+    /// Whether `r`'s worst-case block reservation fits the remaining
+    /// budget.
+    fn fits_budget(&self, r: &Request) -> bool {
+        self.blocks_reserved() + self.reserve_of(r) <= self.kv_blocks
+    }
+
     /// Whether the queue front could start (or resume) a prefill right now.
     fn can_admit(&self) -> bool {
         match self.queue.front() {
-            Some(front) => front.done > 0 || self.slots_held() < self.kv_slots,
+            Some(front) => front.done > 0 || self.fits_budget(&front.req),
             None => false,
         }
     }
@@ -194,13 +266,14 @@ impl Scheduler {
     /// Whether a queued request should preempt the active prefill at a
     /// slice boundary: strictly higher priority, the active prefill still
     /// early (resuming late prefill wastes the near-finished matrix-path
-    /// work), and a KV slot available for the preemptor.
+    /// work), and block budget available for the preemptor (the preempted
+    /// request keeps its reservation).
     fn should_preempt(&self) -> bool {
         match (&self.prefilling, self.queue.front()) {
             (Some((active, done)), Some(front)) => {
                 front.req.priority < active.priority
                     && *done < active.prompt_tokens / 2
-                    && (front.done > 0 || self.slots_held() < self.kv_slots)
+                    && (front.done > 0 || self.fits_budget(&front.req))
             }
             _ => false,
         }
@@ -261,20 +334,23 @@ impl Scheduler {
     /// call. Returns false (no-op) when `id` is not in an active phase.
     pub fn complete(&mut self, id: u64) -> bool {
         if let Some(i) = self.decoding.iter().position(|(r, _)| r.id == id) {
-            self.decoding.remove(i);
-            self.finishing.push_back(id);
+            let (req, _) = self.decoding.remove(i);
+            let res = self.reserve_of(&req);
+            self.finishing.push_back((id, res));
             return true;
         }
         if let Some((r, _)) = &self.prefilling {
             if r.id == id {
+                let res = self.reserve_of(r);
                 self.prefilling = None;
-                self.finishing.push_back(id);
+                self.finishing.push_back((id, res));
                 return true;
             }
         }
         if let Some(i) = self.ready.iter().position(|(r, _)| r.id == id) {
-            self.ready.remove(i);
-            self.finishing.push_back(id);
+            let (req, _) = self.ready.remove(i).expect("index in range");
+            let res = self.reserve_of(&req);
+            self.finishing.push_back((id, res));
             return true;
         }
         false
@@ -297,7 +373,8 @@ impl Scheduler {
         if complete {
             let (req, _) = self.prefilling.take().expect("still active");
             if req.max_new_tokens == 0 {
-                self.finishing.push_back(req.id);
+                let res = self.reserve_of(&req);
+                self.finishing.push_back((req.id, res));
             } else if self.decoding.len() < self.max_batch {
                 self.decoding.push((req, 0));
             } else {
@@ -318,7 +395,8 @@ impl Scheduler {
             self.decoding[i].1 += 1;
             if self.decoding[i].1 >= self.decoding[i].0.max_new_tokens {
                 let (req, _) = self.decoding.remove(i);
-                self.finishing.push_back(req.id);
+                let res = self.reserve_of(&req);
+                self.finishing.push_back((req.id, res));
             } else {
                 i += 1;
             }
@@ -328,8 +406,8 @@ impl Scheduler {
 
     /// Produce the next unit of work (None when idle).
     pub fn next(&mut self) -> Option<WorkItem> {
-        // Pending finishes drain first: they release KV slots.
-        if let Some(id) = self.finishing.pop_front() {
+        // Pending finishes drain first: they release KV blocks.
+        if let Some((id, _)) = self.finishing.pop_front() {
             self.finished.push(id);
             return Some(WorkItem::Finish { id });
         }
@@ -688,6 +766,76 @@ mod tests {
         assert!(!wrong, "the prio-5 lane must be the evicted one");
         assert_eq!(finish_order(&items).len(), 3);
         assert_eq!(s.slots_held(), 0);
+    }
+
+    #[test]
+    fn token_budget_admits_by_footprint_not_count() {
+        // 4 blocks × 16 tokens. Four short requests (reserve 11 tok → 1
+        // block each) are all resident at once — under the old slot
+        // semantics a 4-slot pool allowed this too, but here it is the
+        // token budget doing the math.
+        let mut s = Scheduler::with_budget(8, 4, 4, 16);
+        for id in 1..=4 {
+            s.submit(req(id, 8, 4, 1));
+        }
+        let mut peak = 0;
+        while s.has_work() {
+            s.next();
+            peak = peak.max(s.slots_held());
+            assert!(s.blocks_reserved() <= 4, "budget exceeded");
+        }
+        assert_eq!(peak, 4, "four 1-block requests must be resident together");
+
+        // The same budget holds only one 4-block request at a time.
+        let mut s = Scheduler::with_budget(8, 4, 4, 16);
+        s.submit(req(1, 49, 8, 1)); // reserve 56 tok → 4 blocks
+        s.submit(req(2, 49, 8, 1));
+        let mut peak = 0;
+        while s.has_work() {
+            s.next();
+            peak = peak.max(s.slots_held());
+            assert!(s.blocks_reserved() <= 4, "budget exceeded");
+        }
+        assert_eq!(peak, 1, "two 4-block requests cannot be resident together");
+        assert_eq!(s.finished, vec![1, 2]);
+    }
+
+    #[test]
+    fn preemption_requires_block_budget_for_the_preemptor() {
+        // Budget 4 blocks × 8 tok; the active prefill reserves 3.
+        // An urgent request reserving 2 blocks does not fit (3 + 2 > 4):
+        // no preemption, it waits for the document to finish.
+        let mut s = Scheduler::with_budget(8, 1, 4, 8);
+        s.submit(req(1, 24, 1, 5));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        s.submit(req(2, 9, 8, 0)); // reserve 16 tok → 2 blocks
+        let items = s.drain();
+        assert!(!items.iter().any(|w| matches!(w, WorkItem::Preempt { .. })));
+        assert_eq!(finish_order(&items), vec![1, 2], "the over-budget urgent request waits");
+
+        // An urgent request reserving 1 block fits (3 + 1 ≤ 4): preempt.
+        let mut s = Scheduler::with_budget(8, 1, 4, 8);
+        s.submit(req(1, 24, 1, 5));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        s.submit(req(2, 8, 1, 0)); // reserve 8 tok → 1 block
+        assert_eq!(s.next(), Some(WorkItem::Preempt { id: 1 }));
+        let items = s.drain();
+        assert_eq!(finish_order(&items), vec![2, 1]);
+    }
+
+    #[test]
+    fn legacy_constructor_reserves_one_block_per_request() {
+        // Scheduler::new is the degenerate geometry: whatever the request
+        // length, it reserves exactly one block, so blocks_reserved ==
+        // slots_held at every step — the old slot accounting.
+        let mut s = Scheduler::new(16, 2, 3);
+        s.submit(req(1, 500, 9, 1));
+        s.submit(req(2, 1, 1, 1));
+        while s.has_work() {
+            s.next();
+            assert_eq!(s.blocks_reserved(), s.slots_held());
+        }
+        assert_eq!(s.finished.len(), 2);
     }
 
     #[test]

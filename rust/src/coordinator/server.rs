@@ -20,21 +20,32 @@
 //!
 //! Preemption is explicit and resumable: the scheduler emits
 //! [`WorkItem::Preempt`] when a higher-priority request takes the prefill
-//! path, the preempted request's KV slot and progress survive (the engine's
-//! `resume_request` re-attaches the slot *without clearing it*), and its
-//! next [`WorkItem::PrefillChunk`] continues at the old position — no
-//! prompt token is ever processed twice. A request owns a slot from its
-//! first prefill slice until its [`WorkItem::Finish`], which is the only
-//! place the loop releases slots; the loop cross-checks the scheduler's
-//! slot accounting against the engine pool after every item.
+//! path, the preempted request's KV and progress survive (the engine's
+//! `resume_request` re-attaches its block table *without clearing it*),
+//! and its next [`WorkItem::PrefillChunk`] continues at the old position —
+//! no prompt token is ever processed twice.
 //!
-//! [`KvSlotPool`]: crate::model::kv_cache::KvSlotPool
+//! KV is **paged**: admission is a token-budget block reservation (the
+//! scheduler's `blocks_reserved` mirrors the pool's), and on a
+//! prefix-cache-enabled engine `begin_request_for` resolves the longest
+//! cached prefix of the prompt. The loop then *skips computing* every
+//! slice position below the hit boundary — those positions are resident in
+//! shared blocks another request computed — charging zero simulated time
+//! and crediting the slice's real kernel price to
+//! [`FleetMetrics::cache_saved_prefill_us`]. A request owns its KV from
+//! its first prefill slice until its [`WorkItem::Finish`], which is the
+//! only place the loop releases it (publishing the prefix into the cache);
+//! the loop cross-checks both the scheduler's request count and its block
+//! reservations against the engine pool after every item.
+//!
+//! Per-request energy is kernel-attributed: prefill slices and decode
+//! batches carry the plan cost surface's stage-breakdown energy (DMA rail
+//! vs compute rail), each request taking its share of the batches it rode.
 
 use crate::coordinator::engine::Engine;
-use crate::coordinator::metrics::{sim_energy_j, FleetMetrics, PhaseTimer, RequestCompletion};
-use crate::coordinator::scheduler::{Request, Scheduler, WorkItem};
+use crate::coordinator::metrics::{FleetMetrics, PhaseTimer, RequestCompletion};
+use crate::coordinator::scheduler::{kv_reserve_tokens, Request, Scheduler, WorkItem};
 use crate::model::{sampler, tokenizer};
-use crate::npu::energy::Placement;
 use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -66,6 +77,10 @@ pub struct TraceProfile {
     pub short_per_4: usize,
     /// Mean inter-arrival gap, µs (exponential gaps — open-loop load).
     pub mean_gap_us: f64,
+    /// Byte length of a fixed system prompt *every* request shares (0 =
+    /// none) — the shared-prefix traffic a prefix cache turns from
+    /// O(N · prompt) into O(prompt).
+    pub shared_prefix: usize,
 }
 
 impl TraceProfile {
@@ -78,6 +93,7 @@ impl TraceProfile {
             long_new: (24, 64),
             short_per_4: 3,
             mean_gap_us: 2_000.0,
+            shared_prefix: 0,
         }
     }
 
@@ -90,7 +106,15 @@ impl TraceProfile {
             long_new: (8, 24),
             short_per_4: 3,
             mean_gap_us: 500.0,
+            shared_prefix: 0,
         }
+    }
+
+    /// Same mix, with every prompt prefixed by `bytes` of one fixed system
+    /// prompt (the shared-prefix serving workload).
+    pub fn with_shared_prefix(mut self, bytes: usize) -> Self {
+        self.shared_prefix = bytes;
+        self
     }
 }
 
@@ -115,13 +139,22 @@ fn profile_request(
     };
     let prompt_len = span(rng, prompt_range);
     let max_new = span(rng, new_range).max(1);
-    TraceRequest {
-        id,
-        arrival_us,
-        priority,
-        prompt: synthetic_prompt(prompt_len, rng),
-        max_new_tokens: max_new,
+    let mut prompt = system_prompt(profile.shared_prefix);
+    prompt.push_str(&synthetic_prompt(prompt_len, rng));
+    TraceRequest { id, arrival_us, priority, prompt, max_new_tokens: max_new }
+}
+
+/// The fixed system prompt shared-prefix workloads prepend to every
+/// request — deterministic, RNG-free, so a zero-length prefix leaves
+/// existing traces byte-identical.
+fn system_prompt(len_bytes: usize) -> String {
+    const SYSTEM: &str = "you are the on device assistant: answer briefly and never leave the npu. ";
+    let mut s = String::with_capacity(len_bytes + SYSTEM.len());
+    while s.len() < len_bytes {
+        s.push_str(SYSTEM);
     }
+    s.truncate(len_bytes);
+    s
 }
 
 fn synthetic_prompt(len_bytes: usize, rng: &mut Rng) -> String {
@@ -321,21 +354,34 @@ struct ReqState {
     rng: Rng,
     logits: Vec<f32>,
     out_tokens: Vec<usize>,
-    /// Prompt tokens prefilled so far (survives preemption — the next
-    /// slice resumes here).
+    /// Prompt tokens covered by emitted prefill slices so far (survives
+    /// preemption — the next slice resumes here). Includes cached
+    /// positions: the schedule still tiles the whole prompt, the loop just
+    /// skips computing the cached part.
     covered: usize,
-    /// Total prompt tokens processed by prefill slices; equals `covered`
-    /// because resumable preemption never redoes work.
+    /// Prompt tokens actually *computed* by prefill slices; equals
+    /// `covered - cached` because resumable preemption never redoes work
+    /// and the prefix cache never recomputes.
     prefilled_total: usize,
+    /// Prompt tokens served from the prefix cache at admission.
+    cached: usize,
+    /// Whether the engine has admitted this request (`begin_request_for`
+    /// ran — happens at the first prefill slice, not at submission).
+    begun: bool,
+    /// Simulated prefill µs the prefix cache saved this request.
+    saved_us: f64,
     /// Times this request's prefill was preempted.
     preempted: usize,
     /// Set by `Preempt`, cleared when the next slice resumes — the resume
-    /// path re-attaches the KV slot instead of clearing it.
+    /// path re-attaches the KV instead of clearing it.
     suspended: bool,
     first_work_us: Option<f64>,
     first_token_us: Option<f64>,
     sim_prefill_us: f64,
     sim_decode_us: f64,
+    /// Kernel-attributed energy by phase.
+    sim_prefill_j: f64,
+    sim_decode_j: f64,
 }
 
 /// The multi-request serving loop.
@@ -378,18 +424,23 @@ impl Server {
     fn run_arrivals(&mut self, mut source: Arrivals) -> Result<FleetMetrics> {
         let wall = PhaseTimer::start();
         let seq = self.engine.max_seq();
-        // The decode batch cannot outgrow the KV slots backing it.
+        // The decode batch cannot outgrow the KV blocks backing it.
         let max_batch = self.opts.max_batch.max(1).min(self.engine.kv_slot_capacity());
-        let mut sched = Scheduler::new(
+        // Token-budget admission over the engine's block pool: the
+        // scheduler reserves with the same formula the pool charges, so
+        // the two stay bit-equal (cross-checked after every item).
+        let mut sched = Scheduler::with_budget(
             self.engine.chunk().max(1),
             max_batch,
             self.engine.kv_slot_capacity(),
+            self.engine.kv_block_tokens(),
         );
         let mut states: HashMap<u64, ReqState> = HashMap::new();
         let mut completions: Vec<RequestCompletion> = Vec::new();
         let mut clock_us = 0.0f64;
         let mut decode_batch_sim_us = 0.0f64;
         let mut decode_batches_executed = 0usize;
+        let mut cache_saved_prefill_us = 0.0f64;
 
         loop {
             // Admit every request that has arrived by now.
@@ -403,6 +454,17 @@ impl Server {
                     prompt.len()
                 );
                 let max_new = t.max_new_tokens.max(1).min(seq - prompt.len());
+                // A request whose worst-case block reservation exceeds the
+                // whole pool could never be admitted — fail loudly instead
+                // of deadlocking the queue.
+                let bt = self.engine.kv_block_tokens().max(1);
+                let reserve = kv_reserve_tokens(prompt.len(), max_new).max(1);
+                anyhow::ensure!(
+                    reserve.div_ceil(bt) <= self.engine.kv_slot_capacity(),
+                    "request {}: {reserve} tokens cannot fit the {}-block KV pool",
+                    t.id,
+                    self.engine.kv_slot_capacity()
+                );
                 anyhow::ensure!(
                     states.insert(
                         t.id,
@@ -416,12 +478,17 @@ impl Server {
                             out_tokens: Vec::new(),
                             covered: 0,
                             prefilled_total: 0,
+                            cached: 0,
+                            begun: false,
+                            saved_us: 0.0,
                             preempted: 0,
                             suspended: false,
                             first_work_us: None,
                             first_token_us: None,
                             sim_prefill_us: 0.0,
                             sim_decode_us: 0.0,
+                            sim_prefill_j: 0.0,
+                            sim_decode_j: 0.0,
                         },
                     )
                     .is_none(),
@@ -456,26 +523,47 @@ impl Server {
                         "non-monotone prefill for request {id}: start {start}, covered {}",
                         st.covered
                     );
-                    if start == 0 {
-                        // First slice of the request: acquire a cleared slot.
-                        self.engine.begin_request(id)?;
+                    if !st.begun {
+                        // First slice of the request: admit it — reserve
+                        // its block budget and resolve the prefix-cache
+                        // hit. Positions below the hit are resident in
+                        // shared blocks and are never computed.
+                        anyhow::ensure!(start == 0, "first slice of {id} must start at 0");
+                        let reserve = kv_reserve_tokens(st.prompt.len(), st.max_new);
+                        st.cached = self.engine.begin_request_for(id, &st.prompt, reserve)?;
+                        st.begun = true;
                     } else if st.suspended {
-                        // Resuming after preemption: re-attach the surviving
-                        // slot — its contents are the prefix already
-                        // prefilled, so no token is processed twice.
+                        // Resuming after preemption: re-attach the
+                        // surviving block table — its contents are the
+                        // prefix already prefilled, so no token is
+                        // processed twice.
                         self.engine.resume_request(id)?;
                         st.suspended = false;
                     }
                     if st.first_work_us.is_none() {
                         st.first_work_us = Some(clock_us);
                     }
-                    let (logits, us) =
-                        self.engine.prefill_slice(id, &st.prompt[start..start + len], start)?;
-                    st.logits = logits;
+                    // Compute only the uncached part of the slice. The
+                    // schedule still tiles the whole prompt; cached
+                    // positions cost zero simulated time and credit the
+                    // slice's real kernel price as cache savings.
+                    let end = start + len;
+                    let from = start.max(st.cached);
+                    let full_price = self.engine.sim_prefill_slice_us(start, len);
+                    let mut paid = 0.0;
+                    if from < end {
+                        let (logits, us) =
+                            self.engine.prefill_slice(id, &st.prompt[from..end], from)?;
+                        st.logits = logits;
+                        st.prefilled_total += end - from;
+                        st.sim_prefill_us += us;
+                        st.sim_prefill_j +=
+                            self.engine.sim_prefill_slice_energy_j(from, end - from);
+                        clock_us += us;
+                        paid = us;
+                    }
+                    st.saved_us += full_price - paid;
                     st.covered += len;
-                    st.prefilled_total += len;
-                    st.sim_prefill_us += us;
-                    clock_us += us;
                 }
                 WorkItem::Preempt { id } => {
                     // Explicit preemption event: the request keeps its KV
@@ -540,27 +628,37 @@ impl Server {
                     }
                     if !forwards.is_empty() {
                         decode_batches_executed += 1;
+                        let ctxs: Vec<usize> =
+                            forwards.iter().map(|&(_, _, pos)| pos + 1).collect();
+                        let batch_j = self.engine.sim_decode_batch_energy_j(&ctxs);
                         let (all_logits, per_us) = self.engine.decode_batch(&forwards)?;
+                        let batch_us: f64 = per_us.iter().sum();
                         for ((&(id, _, _), logits), us) in
                             forwards.iter().zip(all_logits).zip(per_us)
                         {
                             let st = states.get_mut(&id).expect("state exists");
                             st.logits = logits;
                             st.sim_decode_us += us;
+                            // Kernel-attributed energy: this request's
+                            // share of the batch's stage-breakdown energy,
+                            // proportional to its share of the batch time
+                            // (so the attributions sum to the batch total).
+                            if batch_us > 0.0 {
+                                st.sim_decode_j += batch_j * us / batch_us;
+                            }
                             decode_batch_sim_us += us;
                             clock_us += us;
                         }
                     }
                 }
                 WorkItem::Finish { id } => {
-                    // The single place a KV slot is released.
+                    // The single place KV is released (publishing the
+                    // request's prefix into the cache when enabled).
                     self.engine.end_request(id);
                     // A closed-loop client starts its think timer now.
                     source.on_finish(id, clock_us);
                     let st = states.remove(&id).context("unknown request id")?;
-                    let pm = &self.engine.soc.power;
-                    let total_us = st.sim_prefill_us + st.sim_decode_us;
-                    let tokens = st.prompt.len() + st.out_tokens.len();
+                    cache_saved_prefill_us += st.saved_us;
                     let completion = RequestCompletion {
                         id,
                         priority: st.priority,
@@ -572,9 +670,11 @@ impl Server {
                         finish_us: clock_us,
                         sim_prefill_us: st.sim_prefill_us,
                         sim_decode_us: st.sim_decode_us,
-                        energy_j: sim_energy_j(pm, Placement::NpuOnly, total_us / 1e6, tokens),
+                        energy_prefill_j: st.sim_prefill_j,
+                        energy_decode_j: st.sim_decode_j,
                         preempted: st.preempted,
                         prefilled_tokens: st.prefilled_total,
+                        cached_tokens: st.cached,
                         text: tokenizer::decode(&st.out_tokens),
                     };
                     if self.opts.verbose {
@@ -593,17 +693,25 @@ impl Server {
                     completions.push(completion);
                 }
             }
-            // The scheduler's slot accounting and the engine's pool must
-            // agree after every applied work item.
+            // The scheduler's accounting and the engine's pool must agree
+            // after every applied work item — both the requests holding KV
+            // and the block reservations they are charged.
             anyhow::ensure!(
                 sched.slots_held() == self.engine.kv_slots_in_use(),
-                "KV slot accounting diverged: scheduler {} vs engine {}",
+                "KV accounting diverged: scheduler holds {} requests vs engine {}",
                 sched.slots_held(),
                 self.engine.kv_slots_in_use()
+            );
+            anyhow::ensure!(
+                sched.blocks_reserved() == self.engine.kv_reserved_blocks(),
+                "KV block reservations diverged: scheduler {} vs engine {}",
+                sched.blocks_reserved(),
+                self.engine.kv_reserved_blocks()
             );
         }
 
         anyhow::ensure!(states.is_empty(), "{} request(s) never finished", states.len());
+        let kv = self.engine.kv_stats();
         Ok(FleetMetrics {
             completions,
             makespan_us: clock_us,
@@ -615,6 +723,13 @@ impl Server {
             decode_evictions: sched.decode_evictions,
             decode_batches_executed,
             decode_batch_sim_us,
+            prefix_lookups: kv.prefix_lookups,
+            prefix_hits: kv.prefix_hits,
+            prefix_hit_tokens: kv.prefix_hit_tokens,
+            cache_saved_prefill_us,
+            kv_capacity_blocks: kv.capacity_blocks,
+            kv_block_tokens: kv.block_tokens,
+            kv_blocks_high_water: kv.blocks_high_water,
         })
     }
 }

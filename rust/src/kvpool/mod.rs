@@ -1,0 +1,37 @@
+//! Paged KV-cache subsystem: block pool, copy-on-write sharing, and
+//! radix-tree prefix reuse.
+//!
+//! Replaces the fixed per-request `max_seq`-sized KV slots with a single
+//! refcounted pool of fixed-size blocks:
+//!
+//! ```text
+//!                  PagedKvPool (blocks × block_tokens positions)
+//!   request A ──► Table [b0, b1, b2]          refcount  b0:3 b1:3 b2:2
+//!   request B ──► Table [b0, b1, b4]  ◄─ COW'd b2→b4 on divergence
+//!   RadixIndex ─► tokens[0..2bt] → [b0, b1], tokens[..3bt] → [.., b2]
+//! ```
+//!
+//! - **Block pool** ([`PagedKvPool`]): one K/V arena; blocks allocate
+//!   lazily on append and free when their refcount drains. Admission is a
+//!   worst-case *token-budget reservation* (`blocks_for(prompt + decode
+//!   budget)`), so appends can never fail mid-request and the scheduler's
+//!   block accounting mirrors the pool's exactly.
+//! - **Copy-on-write**: tables may share blocks (prefix hits). A write to
+//!   a block with refcount > 1 first copies it; shared blocks are
+//!   immutable while shared.
+//! - **Prefix reuse** ([`RadixIndex`]): on release, a request publishes
+//!   its whole-block token history; a later request whose prompt shares a
+//!   cached prefix acquires those blocks by refcount bump and starts
+//!   prefill at the (block-aligned, `< prompt`) hit boundary. Cache blocks
+//!   are evicted LRU-leaf-first only under allocation pressure.
+//!
+//! Block length is aligned with the planned prefill chunk (the engine
+//! validates `block_tokens % chunk == 0` or vice versa, next to the HMX
+//! tile check), so planned chunks never straddle a block boundary and a
+//! prefix hit always skips whole chunks.
+
+mod pool;
+mod radix;
+
+pub use pool::{KvPoolConfig, KvPoolStats, PagedKvPool, PagedLanes};
+pub use radix::RadixIndex;

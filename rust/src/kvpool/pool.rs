@@ -1,0 +1,813 @@
+//! The paged KV block pool: one arena of fixed-size KV blocks shared by
+//! every admitted request, with per-request block tables, refcounted
+//! sharing, copy-on-write on divergence, and an optional radix prefix
+//! index for cross-request prompt reuse.
+//!
+//! A *block* holds `block_tokens` consecutive positions of K and V for
+//! **all** layers — the unit of allocation, sharing and eviction. A
+//! request owns a [`Table`]: logical block index `pos / block_tokens` →
+//! physical block id. Admission is by *reservation*: [`PagedKvPool::begin`]
+//! reserves the worst-case block count for the request's whole token
+//! budget (counting shared blocks as if private), so the pool can always
+//! honor an append — copy-on-write and radix eviction happen inside the
+//! reserved envelope, never over it.
+//!
+//! Write protocol (the COW rule): a table may only write a block whose
+//! refcount is 1. [`PagedKvPool::append_at`] enforces it — writing a
+//! shared block (refcount > 1: another table and/or the prefix index also
+//! reference it) first copies the block into a fresh private one and
+//! repoints this table. A shared block is therefore immutable for as long
+//! as it is shared.
+//!
+//! The old fixed-slot pool (`KvSlotPool`) reserved `max_seq` tokens per
+//! request by construction; that is exactly [`KvPoolConfig::slots`] —
+//! `block_tokens = max_seq`, one block per request — so slot semantics are
+//! the degenerate case of this pool, not a second code path.
+
+use crate::kvpool::radix::RadixIndex;
+use crate::model::config::ModelConfig;
+use crate::model::kv_cache::KvLanes;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Pool geometry + prefix-cache switch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolConfig {
+    /// Total KV blocks in the pool (the fleet's token budget is
+    /// `blocks * block_tokens`).
+    pub blocks: usize,
+    /// Positions per block (clamped to `max_seq` at pool construction).
+    pub block_tokens: usize,
+    /// Enable the radix prefix index (prompt reuse across requests).
+    pub prefix_cache: bool,
+}
+
+impl KvPoolConfig {
+    /// The legacy fixed-slot geometry: one whole-sequence block per
+    /// request, no prefix reuse — byte-identical admission and numerics to
+    /// the old `KvSlotPool`.
+    pub fn slots(n_slots: usize, max_seq: usize) -> Self {
+        Self { blocks: n_slots, block_tokens: max_seq, prefix_cache: false }
+    }
+
+    /// Paged geometry.
+    pub fn paged(blocks: usize, block_tokens: usize, prefix_cache: bool) -> Self {
+        Self { blocks, block_tokens, prefix_cache }
+    }
+
+    /// Blocks needed to hold `tokens` positions (min 1 — every admitted
+    /// request needs a block for its first append).
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens).max(1)
+    }
+}
+
+/// Pool counters surfaced into fleet metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvPoolStats {
+    pub capacity_blocks: usize,
+    pub block_tokens: usize,
+    pub blocks_in_use: usize,
+    pub blocks_high_water: usize,
+    pub requests_in_use: usize,
+    /// Bytes of *resident* (allocated) blocks — not theoretical capacity.
+    pub resident_bytes: usize,
+    pub prefix_lookups: usize,
+    pub prefix_hits: usize,
+    pub prefix_hit_tokens: usize,
+}
+
+/// One request's view of the pool.
+#[derive(Debug, Clone)]
+struct Table {
+    /// Logical block index → physical block id (contiguous from 0).
+    blocks: Vec<usize>,
+    /// Highest position written + 1 (includes the cached prefix).
+    len: usize,
+    /// Token ids written (or inherited from a prefix hit) at positions
+    /// `0..tokens.len()` — the radix key published on release.
+    tokens: Vec<usize>,
+    /// Worst-case block reservation admission charged for this request.
+    reserved: usize,
+    /// Prompt tokens satisfied from the prefix cache at `begin` time.
+    cached: usize,
+}
+
+/// The refcounted paged KV pool.
+#[derive(Debug, Clone)]
+pub struct PagedKvPool {
+    n_layers: usize,
+    dkv: usize,
+    max_seq: usize,
+    cfg: KvPoolConfig,
+    /// K and V arenas: `blocks × n_layers × block_tokens × dkv` floats.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// References per block: owning tables + (0 or 1 for) the prefix index.
+    refcount: Vec<u32>,
+    /// Free physical blocks (stack; bottom = lowest id for determinism).
+    free: Vec<usize>,
+    tables: Vec<Option<Table>>,
+    index: HashMap<u64, usize>,
+    /// Sum of live tables' worst-case reservations, in blocks.
+    reserved_blocks: usize,
+    prefix: Option<RadixIndex>,
+    blocks_high_water: usize,
+    prefix_lookups: usize,
+    prefix_hits: usize,
+    prefix_hit_tokens: usize,
+}
+
+impl PagedKvPool {
+    pub fn new(model: &ModelConfig, max_seq: usize, cfg: KvPoolConfig) -> Self {
+        assert!(cfg.blocks > 0, "pool needs at least one block");
+        assert!(cfg.block_tokens > 0, "block must hold at least one token");
+        let cfg = KvPoolConfig { block_tokens: cfg.block_tokens.min(max_seq), ..cfg };
+        let dkv = model.d_kv();
+        let floats = cfg.blocks * model.n_layers * cfg.block_tokens * dkv;
+        Self {
+            n_layers: model.n_layers,
+            dkv,
+            max_seq,
+            cfg,
+            k: vec![0.0; floats],
+            v: vec![0.0; floats],
+            refcount: vec![0; cfg.blocks],
+            free: (0..cfg.blocks).rev().collect(),
+            tables: Vec::new(),
+            index: HashMap::new(),
+            reserved_blocks: 0,
+            prefix: cfg.prefix_cache.then(|| RadixIndex::new(cfg.block_tokens)),
+            blocks_high_water: 0,
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            prefix_hit_tokens: 0,
+        }
+    }
+
+    pub fn config(&self) -> KvPoolConfig {
+        self.cfg
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.cfg.block_tokens
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.cfg.blocks
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.cfg.blocks - self.free.len()
+    }
+
+    pub fn blocks_high_water(&self) -> usize {
+        self.blocks_high_water
+    }
+
+    /// Requests currently holding a table.
+    pub fn requests_in_use(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Blocks charged against admission (worst case, shared counted as
+    /// private) — the number the scheduler's token-budget admission mirrors.
+    pub fn reserved_blocks(&self) -> usize {
+        self.reserved_blocks
+    }
+
+    /// Bytes of one block (K + V, fp32 host representation).
+    fn block_bytes(&self) -> usize {
+        2 * self.n_layers * self.cfg.block_tokens * self.dkv * 4
+    }
+
+    /// *Resident* footprint: allocated blocks only.
+    pub fn bytes(&self) -> usize {
+        self.blocks_in_use() * self.block_bytes()
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.cfg.blocks * self.block_bytes()
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        KvPoolStats {
+            capacity_blocks: self.cfg.blocks,
+            block_tokens: self.cfg.block_tokens,
+            blocks_in_use: self.blocks_in_use(),
+            blocks_high_water: self.blocks_high_water,
+            requests_in_use: self.requests_in_use(),
+            resident_bytes: self.bytes(),
+            prefix_lookups: self.prefix_lookups,
+            prefix_hits: self.prefix_hits,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+        }
+    }
+
+    fn table_of(&self, id: u64) -> Option<usize> {
+        self.index.get(&id).copied()
+    }
+
+    /// The request's prompt tokens satisfied from the prefix cache.
+    pub fn cached_of(&self, id: u64) -> Option<usize> {
+        self.table_of(id).map(|ti| self.tables[ti].as_ref().expect("indexed").cached)
+    }
+
+    /// The request's current physical block list (tests/diagnostics).
+    pub fn request_blocks(&self, id: u64) -> Option<Vec<usize>> {
+        self.table_of(id).map(|ti| self.tables[ti].as_ref().expect("indexed").blocks.clone())
+    }
+
+    /// Positions written (or inherited) for `id`.
+    pub fn request_len(&self, id: u64) -> Option<usize> {
+        self.table_of(id).map(|ti| self.tables[ti].as_ref().expect("indexed").len)
+    }
+
+    /// Order-independent fingerprint of one physical block's contents —
+    /// lets tests prove COW never mutated a shared block.
+    pub fn block_fingerprint(&self, phys: usize) -> u64 {
+        let floats = self.n_layers * self.cfg.block_tokens * self.dkv;
+        let base = phys * floats;
+        let mut acc = 0u64;
+        for i in 0..floats {
+            acc = acc
+                .wrapping_mul(0x100_0000_01B3)
+                .wrapping_add(u64::from(self.k[base + i].to_bits()))
+                .wrapping_mul(0x100_0000_01B3)
+                .wrapping_add(u64::from(self.v[base + i].to_bits()));
+        }
+        acc
+    }
+
+    /// Admit `id`: reserve its worst-case block budget for `reserve_tokens`
+    /// total positions, resolve the longest cached prefix of
+    /// `prompt_tokens` (block-aligned, capped at `prompt - 1` so the last
+    /// prompt position is always computed and its logits exist), and bind
+    /// the hit blocks by refcount. Re-admitting an id releases the old
+    /// table first (the fresh-start "acquire clears" semantics). Returns
+    /// the prefix-hit length in tokens.
+    pub fn begin(
+        &mut self,
+        id: u64,
+        prompt_tokens: &[usize],
+        reserve_tokens: usize,
+    ) -> Result<usize> {
+        if self.index.contains_key(&id) {
+            self.release(id);
+        }
+        let reserve_tokens = reserve_tokens.max(1).min(self.max_seq);
+        let needs = self.cfg.blocks_for(reserve_tokens);
+        anyhow::ensure!(
+            self.reserved_blocks + needs <= self.cfg.blocks,
+            "KV pool over budget: {} of {} blocks reserved, request {id} needs {needs} \
+             ({reserve_tokens} tok × {}-token blocks)",
+            self.reserved_blocks,
+            self.cfg.blocks,
+            self.cfg.block_tokens,
+        );
+        let bt = self.cfg.block_tokens;
+        let mut hit = 0usize;
+        let mut hit_blocks: Vec<usize> = Vec::new();
+        if let Some(radix) = &mut self.prefix {
+            self.prefix_lookups += 1;
+            let blocks = radix.lookup(prompt_tokens);
+            hit = (blocks.len() * bt).min(prompt_tokens.len().saturating_sub(1));
+            // Keep exactly the blocks covering [0, hit) — when the cap
+            // lands mid-block, the last kept block stays shared until the
+            // first write COWs it.
+            hit_blocks = blocks[..hit.div_ceil(bt)].to_vec();
+            if hit > 0 {
+                self.prefix_hits += 1;
+                self.prefix_hit_tokens += hit;
+            }
+        }
+        for &b in &hit_blocks {
+            self.refcount[b] += 1;
+        }
+        let table = Table {
+            blocks: hit_blocks,
+            len: hit,
+            tokens: prompt_tokens[..hit].to_vec(),
+            reserved: needs,
+            cached: hit,
+        };
+        let ti = match self.tables.iter().position(|t| t.is_none()) {
+            Some(i) => {
+                self.tables[i] = Some(table);
+                i
+            }
+            None => {
+                self.tables.push(Some(table));
+                self.tables.len() - 1
+            }
+        };
+        self.index.insert(id, ti);
+        self.reserved_blocks += needs;
+        Ok(hit)
+    }
+
+    /// Re-attach a preempted request's table, contents intact. `&mut self`
+    /// on purpose: resumption is part of the mutation protocol (the next
+    /// append writes through this table), unlike the old slot pool's
+    /// `&self` resume.
+    pub fn resume(&mut self, id: u64) -> Result<()> {
+        anyhow::ensure!(self.index.contains_key(&id), "request {id} holds no KV table to resume");
+        Ok(())
+    }
+
+    /// Release `id`'s table: publish its whole-block token history into the
+    /// prefix index (if enabled), then drop one reference per block. Blocks
+    /// that reach refcount 0 return to the free list; blocks adopted by the
+    /// index (or shared with another table) survive. Returns whether a
+    /// table was held.
+    pub fn release(&mut self, id: u64) -> bool {
+        let Some(ti) = self.index.remove(&id) else { return false };
+        let table = self.tables[ti].take().expect("indexed table present");
+        self.reserved_blocks -= table.reserved;
+        let bt = self.cfg.block_tokens;
+        if let Some(radix) = &mut self.prefix {
+            let full = table.tokens.len().min(table.len) / bt;
+            if full > 0 {
+                let newly = radix.insert(&table.tokens[..full * bt], &table.blocks[..full]);
+                for b in newly {
+                    self.refcount[b] += 1;
+                }
+            }
+        }
+        for &b in &table.blocks {
+            self.decref(b);
+        }
+        true
+    }
+
+    fn decref(&mut self, block: usize) {
+        debug_assert!(self.refcount[block] > 0, "refcount underflow on block {block}");
+        self.refcount[block] -= 1;
+        if self.refcount[block] == 0 {
+            self.free.push(block);
+        }
+    }
+
+    /// Pop a free block, reclaiming LRU prefix-cache blocks if the free
+    /// list ran dry. The reservation discipline guarantees success.
+    fn alloc_block(&mut self) -> usize {
+        if self.free.is_empty() {
+            if let Some(radix) = &mut self.prefix {
+                for b in radix.evict(1, &self.refcount) {
+                    self.decref(b);
+                }
+            }
+        }
+        let b = self
+            .free
+            .pop()
+            .expect("block reservation invariant violated: no free block for a reserved append");
+        self.refcount[b] = 1;
+        self.blocks_high_water = self.blocks_high_water.max(self.blocks_in_use());
+        b
+    }
+
+    #[inline]
+    fn offset(&self, phys: usize, layer: usize, off: usize) -> usize {
+        ((phys * self.n_layers + layer) * self.cfg.block_tokens + off) * self.dkv
+    }
+
+    fn copy_block(&mut self, src: usize, dst: usize) {
+        let floats = self.n_layers * self.cfg.block_tokens * self.dkv;
+        self.k.copy_within(src * floats..(src + 1) * floats, dst * floats);
+        self.v.copy_within(src * floats..(src + 1) * floats, dst * floats);
+    }
+
+    /// Record the token ids written at `start..start + toks.len()` for
+    /// `id` — the radix key material. Positions must arrive contiguously
+    /// (prefill slices and decode steps both do).
+    pub fn note_tokens(&mut self, id: u64, start: usize, toks: &[usize]) -> Result<()> {
+        let ti = self
+            .table_of(id)
+            .ok_or_else(|| anyhow::anyhow!("request {id} holds no KV table (begin missing?)"))?;
+        let table = self.tables[ti].as_mut().expect("indexed table present");
+        anyhow::ensure!(
+            start == table.tokens.len(),
+            "request {id}: non-contiguous token record at {start} (have {})",
+            table.tokens.len()
+        );
+        table.tokens.extend_from_slice(toks);
+        Ok(())
+    }
+
+    /// Write one position's K/V rows through table `ti` — allocating the
+    /// tail block on first touch and copy-on-writing a shared block before
+    /// mutating it.
+    fn append_at(&mut self, ti: usize, layer: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        assert!(pos < self.max_seq, "kv pool overflow at pos {pos}");
+        assert_eq!(krow.len(), self.dkv);
+        assert_eq!(vrow.len(), self.dkv);
+        let bt = self.cfg.block_tokens;
+        let (b, off) = (pos / bt, pos % bt);
+        let held = self.tables[ti].as_ref().expect("live table").blocks.len();
+        assert!(b <= held, "append at pos {pos} skips an unallocated block");
+        let phys = if b == held {
+            let nb = self.alloc_block();
+            self.tables[ti].as_mut().expect("live table").blocks.push(nb);
+            nb
+        } else {
+            let cur = self.tables[ti].as_ref().expect("live table").blocks[b];
+            if self.refcount[cur] > 1 {
+                // COW: the block is shared (another table and/or the prefix
+                // index) — copy before the first divergent write. Drop our
+                // reference *before* allocating: if the original is then
+                // only index-held it becomes evictable, so the reservation
+                // envelope always covers the copy's allocation — under full
+                // pressure the evicted original itself is reused as the
+                // copy target (contents survive until overwritten; the
+                // self-copy is a no-op).
+                self.refcount[cur] -= 1;
+                debug_assert!(self.refcount[cur] > 0, "shared block lost its other holders");
+                let nb = self.alloc_block();
+                self.copy_block(cur, nb);
+                self.tables[ti].as_mut().expect("live table").blocks[b] = nb;
+                nb
+            } else {
+                cur
+            }
+        };
+        let i = self.offset(phys, layer, off);
+        self.k[i..i + self.dkv].copy_from_slice(krow);
+        self.v[i..i + self.dkv].copy_from_slice(vrow);
+        let table = self.tables[ti].as_mut().expect("live table");
+        table.len = table.len.max(pos + 1);
+    }
+
+    #[inline]
+    fn k_row(&self, ti: usize, layer: usize, pos: usize, kv_head: usize, d_head: usize) -> &[f32] {
+        let table = self.tables[ti].as_ref().expect("live table");
+        debug_assert!(pos < table.len, "read past the written prefix");
+        let bt = self.cfg.block_tokens;
+        let i = self.offset(table.blocks[pos / bt], layer, pos % bt) + kv_head * d_head;
+        &self.k[i..i + d_head]
+    }
+
+    #[inline]
+    fn v_row(&self, ti: usize, layer: usize, pos: usize, kv_head: usize, d_head: usize) -> &[f32] {
+        let table = self.tables[ti].as_ref().expect("live table");
+        debug_assert!(pos < table.len, "read past the written prefix");
+        let bt = self.cfg.block_tokens;
+        let i = self.offset(table.blocks[pos / bt], layer, pos % bt) + kv_head * d_head;
+        &self.v[i..i + d_head]
+    }
+
+    /// A lane-addressed view over `ids` for the transformer's forward
+    /// passes — the paged analogue of the old pool's `get_disjoint_mut`.
+    /// Rejects unknown and duplicated ids (two lanes over one table would
+    /// corrupt the cache).
+    pub fn lanes(&mut self, ids: &[u64]) -> Result<PagedLanes<'_>> {
+        let mut tables = Vec::with_capacity(ids.len());
+        for (i, &id) in ids.iter().enumerate() {
+            anyhow::ensure!(
+                ids[..i].iter().all(|&prev| prev != id),
+                "request {id} appears twice in one KV lane view"
+            );
+            let ti = self
+                .table_of(id)
+                .ok_or_else(|| anyhow::anyhow!("request {id} holds no KV table"))?;
+            tables.push(ti);
+        }
+        Ok(PagedLanes { pool: self, tables })
+    }
+
+    /// Drop the prefix index's block references (eviction of the whole
+    /// cache). With no live requests this drains the pool to empty.
+    pub fn clear_prefix_index(&mut self) {
+        let blocks = match &mut self.prefix {
+            Some(radix) => radix.take_all_blocks(),
+            None => return,
+        };
+        for b in blocks {
+            self.decref(b);
+        }
+    }
+
+    /// Exhaustive refcount/free-list audit for tests: recompute every
+    /// block's reference count from live tables plus the prefix index and
+    /// compare with the maintained counters.
+    pub fn debug_validate(&self) {
+        let mut want = vec![0u32; self.cfg.blocks];
+        for t in self.tables.iter().flatten() {
+            for &b in &t.blocks {
+                want[b] += 1;
+            }
+        }
+        if let Some(radix) = &self.prefix {
+            radix.for_each_block(&mut |b| want[b] += 1);
+        }
+        assert_eq!(want, self.refcount, "refcounts diverged from table + index ownership");
+        let mut free_sorted = self.free.clone();
+        free_sorted.sort_unstable();
+        let want_free: Vec<usize> =
+            (0..self.cfg.blocks).filter(|&b| self.refcount[b] == 0).collect();
+        assert_eq!(free_sorted, want_free, "free list diverged from refcounts");
+        let reserved: usize =
+            self.tables.iter().flatten().map(|t| t.reserved).sum();
+        assert_eq!(reserved, self.reserved_blocks, "reservation accounting diverged");
+    }
+}
+
+/// Lane-addressed mutable view: lane index → request table, all reads and
+/// writes translated through block tables (with COW on shared-block
+/// writes). This is what [`crate::model::transformer::Transformer`] runs
+/// its forward passes against on the paged backend.
+pub struct PagedLanes<'a> {
+    pool: &'a mut PagedKvPool,
+    tables: Vec<usize>,
+}
+
+impl KvLanes for PagedLanes<'_> {
+    fn lanes(&self) -> usize {
+        self.tables.len()
+    }
+
+    fn append(&mut self, lane: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.pool.append_at(self.tables[lane], layer, pos, k, v);
+    }
+
+    fn k(&self, lane: usize, layer: usize, pos: usize, kv_head: usize, d_head: usize) -> &[f32] {
+        self.pool.k_row(self.tables[lane], layer, pos, kv_head, d_head)
+    }
+
+    fn v(&self, lane: usize, layer: usize, pos: usize, kv_head: usize, d_head: usize) -> &[f32] {
+        self.pool.v_row(self.tables[lane], layer, pos, kv_head, d_head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::util::Rng;
+
+    fn pool(blocks: usize, bt: usize, prefix: bool) -> PagedKvPool {
+        let cfg = ModelConfig::tiny();
+        PagedKvPool::new(&cfg, 64, KvPoolConfig::paged(blocks, bt, prefix))
+    }
+
+    fn dkv() -> usize {
+        ModelConfig::tiny().d_kv()
+    }
+
+    fn fill(p: &mut PagedKvPool, id: u64, positions: std::ops::Range<usize>, tag: f32) {
+        let ti = p.table_of(id).unwrap();
+        let n_layers = p.n_layers;
+        for pos in positions {
+            for layer in 0..n_layers {
+                let row = vec![tag + pos as f32; dkv()];
+                p.append_at(ti, layer, pos, &row, &row);
+            }
+        }
+    }
+
+    #[test]
+    fn begin_append_read_release_lifecycle() {
+        let mut p = pool(4, 8, false);
+        assert_eq!(p.begin(1, &[], 20).unwrap(), 0, "no prefix cache, no hit");
+        assert_eq!(p.reserved_blocks(), 3, "20 tokens over 8-token blocks");
+        assert_eq!(p.blocks_in_use(), 0, "blocks allocate lazily on append");
+        fill(&mut p, 1, 0..9, 0.0);
+        assert_eq!(p.blocks_in_use(), 2, "positions 0..9 span two blocks");
+        assert_eq!(p.request_len(1), Some(9));
+        let ti = p.table_of(1).unwrap();
+        let dh = ModelConfig::tiny().d_head();
+        assert_eq!(p.k_row(ti, 0, 8, 0, dh), &vec![8.0; dh][..]);
+        assert_eq!(p.v_row(ti, 1, 3, 0, dh), &vec![3.0; dh][..]);
+        p.debug_validate();
+        assert!(p.release(1));
+        assert!(!p.release(1), "double release is a no-op");
+        assert_eq!(p.blocks_in_use(), 0, "pool drains after release");
+        assert_eq!(p.reserved_blocks(), 0);
+        assert_eq!(p.blocks_high_water(), 2);
+        p.debug_validate();
+    }
+
+    #[test]
+    fn reservation_gates_admission_and_release_recovers() {
+        let mut p = pool(4, 8, false);
+        p.begin(1, &[], 32).unwrap(); // 4 blocks: the whole pool
+        assert!(p.begin(2, &[], 1).is_err(), "over-budget begin must refuse");
+        assert!(p.release(1));
+        p.begin(2, &[], 1).unwrap();
+        assert_eq!(p.reserved_blocks(), 1);
+    }
+
+    #[test]
+    fn rebegin_clears_the_table() {
+        let mut p = pool(4, 8, false);
+        p.begin(7, &[], 8).unwrap();
+        fill(&mut p, 7, 0..5, 1.0);
+        assert_eq!(p.request_len(7), Some(5));
+        // Same id re-begins: fresh empty table, blocks returned.
+        p.begin(7, &[], 8).unwrap();
+        assert_eq!(p.request_len(7), Some(0));
+        assert_eq!(p.blocks_in_use(), 0);
+        p.debug_validate();
+    }
+
+    #[test]
+    fn resume_requires_a_live_table() {
+        let mut p = pool(2, 8, false);
+        assert!(p.resume(5).is_err(), "never-admitted id cannot resume");
+        p.begin(5, &[], 4).unwrap();
+        assert!(p.resume(5).is_ok());
+        fill(&mut p, 5, 0..3, 2.0);
+        assert!(p.resume(5).is_ok(), "resume keeps contents intact");
+        assert_eq!(p.request_len(5), Some(3));
+        p.release(5);
+        assert!(p.resume(5).is_err(), "released id cannot resume");
+    }
+
+    #[test]
+    fn resident_bytes_track_allocation_not_capacity() {
+        let mut p = pool(8, 8, false);
+        assert_eq!(p.bytes(), 0, "no allocated blocks, no resident bytes");
+        p.begin(1, &[], 20).unwrap();
+        assert_eq!(p.bytes(), 0, "reservation alone allocates nothing");
+        fill(&mut p, 1, 0..9, 0.0);
+        let per_block = p.capacity_bytes() / 8;
+        assert_eq!(p.bytes(), 2 * per_block);
+        assert!(p.capacity_bytes() > p.bytes());
+    }
+
+    #[test]
+    fn prefix_hit_reuses_blocks_and_caps_before_the_last_token() {
+        let mut p = pool(8, 4, true);
+        let prompt: Vec<usize> = (0..12).collect();
+        // Publisher computes everything, then releases (publish-on-finish).
+        assert_eq!(p.begin(1, &prompt, 16).unwrap(), 0, "cold cache");
+        fill(&mut p, 1, 0..12, 3.0);
+        p.note_tokens(1, 0, &prompt).unwrap();
+        let publisher_blocks = p.request_blocks(1).unwrap();
+        p.release(1);
+        assert_eq!(p.blocks_in_use(), 3, "published blocks survive in the index");
+        p.debug_validate();
+
+        // Identical prompt: hit capped at prompt - 1 = 11 (the last prompt
+        // position must be recomputed for its logits).
+        let hit = p.begin(2, &prompt, 16).unwrap();
+        assert_eq!(hit, 11);
+        assert_eq!(p.cached_of(2), Some(11));
+        let shared = p.request_blocks(2).unwrap();
+        assert_eq!(shared, publisher_blocks, "the hit binds the published blocks");
+        assert_eq!(p.request_len(2), Some(11));
+        // Shorter shared prefix: 8-token prompt hits 2 full blocks (cap 7
+        // rounds the hit *down* into the shared prefix, keeping 2 blocks).
+        let hit = p.begin(3, &prompt[..8], 12).unwrap();
+        assert_eq!(hit, 7);
+        assert_eq!(p.request_blocks(3).unwrap(), publisher_blocks[..2].to_vec());
+        p.debug_validate();
+        let stats = p.stats();
+        assert_eq!(stats.prefix_lookups, 3);
+        assert_eq!(stats.prefix_hits, 2);
+        assert_eq!(stats.prefix_hit_tokens, 18);
+    }
+
+    #[test]
+    fn cow_write_never_mutates_the_shared_block() {
+        let mut p = pool(8, 4, true);
+        let prompt: Vec<usize> = (100..108).collect();
+        p.begin(1, &prompt, 8).unwrap();
+        fill(&mut p, 1, 0..8, 4.0);
+        p.note_tokens(1, 0, &prompt).unwrap();
+        p.release(1);
+
+        // Hit = 7 (cap): block 1 is shared with the index and position 7
+        // lands inside it — the first write must COW, not mutate.
+        let hit = p.begin(2, &prompt, 8).unwrap();
+        assert_eq!(hit, 7);
+        let before = p.request_blocks(2).unwrap();
+        let shared_phys = before[1];
+        let fp = p.block_fingerprint(shared_phys);
+        fill(&mut p, 2, 7..8, 9.0); // divergent write at pos 7
+        let after = p.request_blocks(2).unwrap();
+        assert_ne!(after[1], shared_phys, "the write must land in a private copy");
+        assert_eq!(after[0], before[0], "the untouched shared block stays bound");
+        assert_eq!(
+            p.block_fingerprint(shared_phys),
+            fp,
+            "COW must leave the shared block byte-identical"
+        );
+        // The copy carried the shared prefix of the block (positions 4..7).
+        let ti = p.table_of(2).unwrap();
+        let dh = ModelConfig::tiny().d_head();
+        assert_eq!(p.k_row(ti, 0, 5, 0, dh), &vec![4.0 + 5.0; dh][..]);
+        assert_eq!(p.k_row(ti, 0, 7, 0, dh), &vec![9.0 + 7.0; dh][..]);
+        p.debug_validate();
+    }
+
+    #[test]
+    fn cow_under_full_pressure_reuses_the_evicted_original() {
+        // 4 blocks × 4 tokens, prefix cache on: a publisher leaves 2
+        // blocks in the index; reader B binds them (hit 7, reservation 2);
+        // request C takes the last 2 free blocks. B's capped-position
+        // write must COW with an *empty free list* — dropping B's
+        // reference first makes the index-held original evictable, so the
+        // copy lands (in the original itself) instead of panicking on the
+        // reservation invariant.
+        let mut p = pool(4, 4, true);
+        let prompt: Vec<usize> = (0..8).collect();
+        p.begin(1, &prompt, 8).unwrap();
+        fill(&mut p, 1, 0..8, 1.0);
+        p.note_tokens(1, 0, &prompt).unwrap();
+        p.release(1);
+        assert_eq!(p.blocks_in_use(), 2, "published blocks resident");
+
+        let hit = p.begin(2, &prompt, 8).unwrap();
+        assert_eq!(hit, 7);
+        p.begin(3, &[], 8).unwrap();
+        fill(&mut p, 3, 0..8, 2.0);
+        assert_eq!(p.blocks_in_use(), 4, "free list drained");
+        // The COW write under full pressure.
+        fill(&mut p, 2, 7..8, 9.0);
+        let dh = ModelConfig::tiny().d_head();
+        let ti = p.table_of(2).unwrap();
+        assert_eq!(p.k_row(ti, 0, 5, 0, dh), &vec![1.0 + 5.0; dh][..], "prefix survives");
+        assert_eq!(p.k_row(ti, 0, 7, 0, dh), &vec![9.0 + 7.0; dh][..]);
+        p.debug_validate();
+        p.release(2);
+        p.release(3);
+        p.clear_prefix_index();
+        assert_eq!(p.blocks_in_use(), 0);
+        p.debug_validate();
+    }
+
+    #[test]
+    fn lru_eviction_reclaims_index_blocks_under_pressure() {
+        let mut p = pool(4, 4, true);
+        let a: Vec<usize> = (0..8).collect();
+        p.begin(1, &a, 8).unwrap();
+        fill(&mut p, 1, 0..8, 5.0);
+        p.note_tokens(1, 0, &a).unwrap();
+        p.release(1);
+        assert_eq!(p.blocks_in_use(), 2, "two published blocks resident");
+        // A fresh 16-token request needs all 4 blocks: the index's LRU
+        // blocks must be reclaimed on demand.
+        let b: Vec<usize> = (50..66).collect();
+        assert_eq!(p.begin(2, &b, 16).unwrap(), 0, "different prompt, no hit");
+        fill(&mut p, 2, 0..16, 6.0);
+        assert_eq!(p.blocks_in_use(), 4);
+        p.debug_validate();
+        p.release(2);
+        p.clear_prefix_index();
+        assert_eq!(p.blocks_in_use(), 0, "pool drains once the index is cleared");
+        p.debug_validate();
+    }
+
+    #[test]
+    fn lanes_reject_duplicates_and_unknown_ids() {
+        let mut p = pool(4, 8, false);
+        p.begin(1, &[], 8).unwrap();
+        assert!(p.lanes(&[1, 1]).is_err(), "duplicate lanes over one table");
+        assert!(p.lanes(&[2]).is_err(), "unknown id");
+        assert!(p.lanes(&[1]).is_ok());
+    }
+
+    #[test]
+    fn churn_keeps_accounting_exact() {
+        // Randomized begin/append/release churn with the audit run at every
+        // step — the paged analogue of the old slot pool's churn test.
+        let cfg = ModelConfig::tiny();
+        let mut p = PagedKvPool::new(&cfg, 64, KvPoolConfig::paged(6, 8, true));
+        let mut rng = Rng::new(0xC0DE);
+        let mut held: Vec<(u64, usize)> = Vec::new(); // (id, written)
+        for step in 0..400u64 {
+            if !held.is_empty() && rng.below(2) == 0 {
+                let (id, written) = held.remove(rng.below(held.len()));
+                let toks: Vec<usize> = (0..written).map(|i| (id as usize * 7 + i) % 97).collect();
+                if written > 0 {
+                    p.note_tokens(id, 0, &toks).unwrap();
+                }
+                assert!(p.release(id), "step {step}: release of held id {id}");
+            } else {
+                let id = 1000 + step;
+                let want = 1 + rng.below(24);
+                match p.begin(id, &[], want) {
+                    Ok(_) => {
+                        let written = rng.below(want + 1);
+                        fill(&mut p, id, 0..written, step as f32);
+                        held.push((id, written));
+                    }
+                    Err(_) => {
+                        // Over budget is legal under churn; accounting must
+                        // still hold.
+                    }
+                }
+            }
+            assert_eq!(p.requests_in_use(), held.len(), "step {step}");
+            p.debug_validate();
+        }
+        for (id, _) in held {
+            p.release(id);
+        }
+        p.clear_prefix_index();
+        assert_eq!(p.blocks_in_use(), 0);
+        assert_eq!(p.reserved_blocks(), 0);
+        p.debug_validate();
+    }
+}

@@ -1,0 +1,391 @@
+//! Radix (compressed-trie) prefix index over token sequences, at KV-block
+//! granularity — the lookup structure behind prefix reuse.
+//!
+//! Keys are token-id sequences in whole-block units (`block_tokens` tokens
+//! per block); values are the physical block ids holding those tokens' K/V.
+//! Edges carry runs of one or more blocks; a node's children are
+//! distinguished by their first *block* (not first token — two prompts that
+//! diverge mid-block are different children). The index never owns KV
+//! memory: it holds one refcount on each referenced block (the
+//! [`PagedKvPool`](crate::kvpool::PagedKvPool) bumps/drops it around
+//! [`RadixIndex::insert`] / [`RadixIndex::evict`]), so a cached prefix
+//! survives its publisher and is reclaimed LRU-leaf-first only when the
+//! pool runs out of free blocks.
+//!
+//! Determinism: children are kept in insertion order and scanned linearly;
+//! the LRU clock is a plain counter bumped once per touched edge, so every
+//! `last_touch` value is unique and eviction order is reproducible.
+
+/// One edge of the radix tree: `blocks.len()` whole blocks of tokens
+/// (`tokens.len() == blocks.len() * block_tokens`), plus the subtree below.
+#[derive(Debug, Clone)]
+struct Edge {
+    tokens: Vec<usize>,
+    blocks: Vec<usize>,
+    last_touch: u64,
+    children: Vec<Edge>,
+}
+
+/// The prefix index. All methods take/return *physical block ids*; the
+/// caller owns refcounting.
+#[derive(Debug, Clone)]
+pub struct RadixIndex {
+    block_tokens: usize,
+    children: Vec<Edge>,
+    clock: u64,
+}
+
+impl RadixIndex {
+    pub fn new(block_tokens: usize) -> Self {
+        assert!(block_tokens > 0, "block must hold at least one token");
+        Self { block_tokens, children: Vec::new(), clock: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    /// Blocks currently referenced by the index.
+    pub fn block_count(&self) -> usize {
+        fn walk(node: &[Edge]) -> usize {
+            node.iter().map(|e| e.blocks.len() + walk(&e.children)).sum()
+        }
+        walk(&self.children)
+    }
+
+    /// Visit every referenced block (for pool refcount validation).
+    pub fn for_each_block(&self, f: &mut dyn FnMut(usize)) {
+        fn walk(node: &[Edge], f: &mut dyn FnMut(usize)) {
+            for e in node {
+                for &b in &e.blocks {
+                    f(b);
+                }
+                walk(&e.children, f);
+            }
+        }
+        walk(&self.children, f);
+    }
+
+    /// Drop the whole index, returning every block it referenced (the pool
+    /// releases the index's refcount on each).
+    pub fn take_all_blocks(&mut self) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.for_each_block(&mut |b| out.push(b));
+        self.children.clear();
+        out
+    }
+
+    /// Leading whole blocks of `edge_tokens` equal to `query`.
+    fn matched_blocks(bt: usize, edge_tokens: &[usize], query: &[usize]) -> usize {
+        let max = (edge_tokens.len() / bt).min(query.len() / bt);
+        let mut l = 0;
+        while l < max && edge_tokens[l * bt..(l + 1) * bt] == query[l * bt..(l + 1) * bt] {
+            l += 1;
+        }
+        l
+    }
+
+    /// Longest cached whole-block prefix of `query`: the physical blocks
+    /// holding K/V for `query[..result.len() * block_tokens]`, LRU-touched
+    /// along the path.
+    pub fn lookup(&mut self, query: &[usize]) -> Vec<usize> {
+        let bt = self.block_tokens;
+        let mut out = Vec::new();
+        let mut q = 0usize;
+        let mut node = &mut self.children;
+        while query.len() - q >= bt {
+            let cur = node;
+            let mut found = None;
+            for (i, e) in cur.iter().enumerate() {
+                if e.tokens[..bt] == query[q..q + bt] {
+                    found = Some(i);
+                    break;
+                }
+            }
+            let Some(i) = found else { break };
+            self.clock += 1;
+            cur[i].last_touch = self.clock;
+            let l = Self::matched_blocks(bt, &cur[i].tokens, &query[q..]);
+            out.extend_from_slice(&cur[i].blocks[..l]);
+            q += l * bt;
+            if l < cur[i].blocks.len() {
+                break;
+            }
+            node = &mut cur[i].children;
+        }
+        out
+    }
+
+    /// Publish `tokens` (a whole number of blocks) backed by `blocks`.
+    /// Where the index already holds the prefix, the existing blocks are
+    /// kept (the caller's duplicates stay un-referenced); where the walk
+    /// runs out, new edges reference the caller's blocks. Returns the
+    /// blocks *newly* referenced by the index — the caller bumps exactly
+    /// those refcounts.
+    pub fn insert(&mut self, tokens: &[usize], blocks: &[usize]) -> Vec<usize> {
+        assert_eq!(
+            tokens.len(),
+            blocks.len() * self.block_tokens,
+            "radix inserts whole blocks only"
+        );
+        let bt = self.block_tokens;
+        let mut newly = Vec::new();
+        let mut clock = self.clock;
+        Self::insert_into(&mut self.children, bt, &mut clock, tokens, blocks, &mut newly);
+        self.clock = clock;
+        newly
+    }
+
+    fn insert_into(
+        node: &mut Vec<Edge>,
+        bt: usize,
+        clock: &mut u64,
+        tokens: &[usize],
+        blocks: &[usize],
+        newly: &mut Vec<usize>,
+    ) {
+        if blocks.is_empty() {
+            return;
+        }
+        let mut found = None;
+        for (i, e) in node.iter().enumerate() {
+            if e.tokens[..bt] == tokens[..bt] {
+                found = Some(i);
+                break;
+            }
+        }
+        let Some(i) = found else {
+            *clock += 1;
+            newly.extend_from_slice(blocks);
+            node.push(Edge {
+                tokens: tokens.to_vec(),
+                blocks: blocks.to_vec(),
+                last_touch: *clock,
+                children: Vec::new(),
+            });
+            return;
+        };
+        let l = Self::matched_blocks(bt, &node[i].tokens, tokens);
+        debug_assert!(l >= 1, "first block matched, so at least one block matches");
+        if l < node[i].blocks.len() {
+            // Split the edge at the divergence block: the tail (with the
+            // old subtree and the old LRU stamp) becomes a child.
+            let edge = &mut node[i];
+            let tail = Edge {
+                tokens: edge.tokens.split_off(l * bt),
+                blocks: edge.blocks.split_off(l),
+                last_touch: edge.last_touch,
+                children: std::mem::take(&mut edge.children),
+            };
+            edge.children.push(tail);
+        }
+        *clock += 1;
+        node[i].last_touch = *clock;
+        let (rest_tokens, rest_blocks) = (&tokens[l * bt..], &blocks[l..]);
+        Self::insert_into(&mut node[i].children, bt, clock, rest_tokens, rest_blocks, newly);
+    }
+
+    /// Evict up to `want` blocks, LRU leaf first, never touching a block
+    /// whose refcount exceeds 1 (shared with a live request). Returns the
+    /// evicted blocks — the caller drops the index's refcount on each.
+    pub fn evict(&mut self, want: usize, refcount: &[u32]) -> Vec<usize> {
+        let mut freed = Vec::new();
+        while freed.len() < want {
+            let Some(touch) = Self::lru_leaf(&self.children, refcount) else { break };
+            let quota = want - freed.len();
+            let hit = Self::trim(
+                &mut self.children,
+                touch,
+                refcount,
+                quota,
+                self.block_tokens,
+                &mut freed,
+            );
+            debug_assert!(hit, "lru_leaf returned a touch that trim could not find");
+            if !hit {
+                break;
+            }
+        }
+        freed
+    }
+
+    /// `last_touch` of the least-recently-used leaf edge whose *tail* block
+    /// is referenced only by this index (evictable).
+    fn lru_leaf(node: &[Edge], refcount: &[u32]) -> Option<u64> {
+        let mut best: Option<u64> = None;
+        for e in node {
+            let cand = if e.children.is_empty() {
+                let tail = *e.blocks.last().expect("edges are never empty");
+                if refcount[tail] == 1 {
+                    Some(e.last_touch)
+                } else {
+                    None
+                }
+            } else {
+                Self::lru_leaf(&e.children, refcount)
+            };
+            best = match (best, cand) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        best
+    }
+
+    /// Trim up to `quota` evictable tail blocks off the (unique) leaf edge
+    /// stamped `touch`; remove the edge when it empties. Returns whether
+    /// the edge was found.
+    fn trim(
+        node: &mut Vec<Edge>,
+        touch: u64,
+        refcount: &[u32],
+        quota: usize,
+        bt: usize,
+        freed: &mut Vec<usize>,
+    ) -> bool {
+        for i in 0..node.len() {
+            if node[i].children.is_empty() {
+                if node[i].last_touch != touch {
+                    continue;
+                }
+                let e = &mut node[i];
+                let mut n = 0;
+                while n < quota
+                    && !e.blocks.is_empty()
+                    && refcount[*e.blocks.last().expect("non-empty")] == 1
+                {
+                    freed.push(e.blocks.pop().expect("non-empty"));
+                    e.tokens.truncate(e.blocks.len() * bt);
+                    n += 1;
+                }
+                if e.blocks.is_empty() {
+                    node.remove(i);
+                }
+                return true;
+            }
+            if Self::trim(&mut node[i].children, touch, refcount, quota, bt, freed) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(blocks: &[usize], bt: usize) -> Vec<usize> {
+        // Deterministic distinct token run per block id.
+        blocks.iter().flat_map(|&b| (0..bt).map(move |t| 1000 * b + t)).collect()
+    }
+
+    #[test]
+    fn lookup_on_empty_misses() {
+        let mut r = RadixIndex::new(4);
+        assert!(r.lookup(&[1, 2, 3, 4]).is_empty());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn insert_then_lookup_whole_and_partial() {
+        let bt = 4;
+        let mut r = RadixIndex::new(bt);
+        let t = toks(&[10, 11, 12], bt);
+        let newly = r.insert(&t, &[10, 11, 12]);
+        assert_eq!(newly, vec![10, 11, 12]);
+        assert_eq!(r.block_count(), 3);
+        // Full-key hit.
+        assert_eq!(r.lookup(&t), vec![10, 11, 12]);
+        // Longer query still matches the stored prefix.
+        let mut longer = t.clone();
+        longer.extend_from_slice(&toks(&[99], bt));
+        assert_eq!(r.lookup(&longer), vec![10, 11, 12]);
+        // Query shorter than a block matches nothing.
+        assert!(r.lookup(&t[..bt - 1]).is_empty());
+        // Query covering one full block matches one block.
+        assert_eq!(r.lookup(&t[..bt]), vec![10]);
+        // Mid-block divergence is a miss for that block.
+        let mut skew = t.clone();
+        skew[1] = 777;
+        assert!(r.lookup(&skew).is_empty());
+    }
+
+    #[test]
+    fn insert_splits_at_block_divergence_and_dedupes_prefix() {
+        let bt = 2;
+        let mut r = RadixIndex::new(bt);
+        let a = toks(&[1, 2, 3], bt);
+        r.insert(&a, &[1, 2, 3]);
+        // Same first two blocks, new third: split at block 2, keep existing
+        // prefix blocks, reference only the divergent suffix.
+        let mut b = a[..2 * bt].to_vec();
+        b.extend_from_slice(&toks(&[7], bt));
+        let newly = r.insert(&b, &[4, 5, 7]);
+        assert_eq!(newly, vec![7], "shared prefix must reuse existing blocks");
+        assert_eq!(r.block_count(), 4);
+        assert_eq!(r.lookup(&a), vec![1, 2, 3]);
+        assert_eq!(r.lookup(&b), vec![1, 2, 7]);
+        // Re-inserting an existing key references nothing new.
+        assert!(r.insert(&a, &[8, 9, 6]).is_empty());
+    }
+
+    #[test]
+    fn eviction_is_lru_and_respects_refcounts() {
+        let bt = 2;
+        let mut r = RadixIndex::new(bt);
+        let a = toks(&[0, 1], bt);
+        let b = toks(&[2, 3], bt);
+        r.insert(&a, &[0, 1]);
+        r.insert(&b, &[2, 3]);
+        // Touch `a`, making `b` the LRU leaf.
+        r.lookup(&a);
+        let mut rc = vec![1u32; 4];
+        let freed = r.evict(1, &rc);
+        assert_eq!(freed, vec![3], "LRU leaf's tail block goes first");
+        assert_eq!(r.block_count(), 3);
+        // A tail block shared with a live request (refcount 2) is skipped;
+        // eviction falls through to the next evictable leaf.
+        rc[2] = 2;
+        let freed = r.evict(2, &rc);
+        assert_eq!(freed, vec![1, 0], "chain a's blocks evict tail-first");
+        assert_eq!(r.block_count(), 1);
+        assert_eq!(r.evict(1, &rc), Vec::<usize>::new(), "block 2 is pinned");
+        // Unpin and drain.
+        rc[2] = 1;
+        assert_eq!(r.evict(1, &rc), vec![2]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn eviction_exposes_parents_after_leaves() {
+        let bt = 2;
+        let mut r = RadixIndex::new(bt);
+        let a = toks(&[1, 2, 3], bt);
+        let mut b = a[..2 * bt].to_vec();
+        b.extend_from_slice(&toks(&[7], bt));
+        r.insert(&a, &[1, 2, 3]);
+        r.insert(&b, &[1, 2, 7]);
+        let rc = vec![1u32; 8];
+        // 4 referenced blocks; evict everything: leaves (3, 7) first, then
+        // the shared parent chain (2, 1).
+        let freed = r.evict(10, &rc);
+        assert_eq!(freed.len(), 4);
+        assert!(r.is_empty());
+        let mut sorted = freed;
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![1, 2, 3, 7]);
+    }
+
+    #[test]
+    fn take_all_blocks_drains_the_index() {
+        let bt = 2;
+        let mut r = RadixIndex::new(bt);
+        r.insert(&toks(&[4, 5], bt), &[4, 5]);
+        let mut all = r.take_all_blocks();
+        all.sort_unstable();
+        assert_eq!(all, vec![4, 5]);
+        assert!(r.is_empty());
+        assert_eq!(r.block_count(), 0);
+    }
+}

@@ -21,6 +21,7 @@
 pub mod bench;
 pub mod coordinator;
 pub mod kernels;
+pub mod kvpool;
 pub mod model;
 pub mod npu;
 pub mod quant;

@@ -7,6 +7,8 @@
 //!   serve    [--trace synthetic] [--requests N] [--seed S] [--verbose]
 //!            [--max-batch B] [--closed-loop C] [--think-ms T]
 //!            [--model tiny|small|base] [--chunk C] [--kv-slots N]
+//!            [--kv-blocks N] [--block-tokens T] [--prefix-cache]
+//!            [--shared-prefix BYTES] [--require-hits]
 //!            [--bits 2|4] [--temp T] [--artifacts DIR] [--soc ...]
 //!   bench    [--json]                 plan-cost snapshot (CI artifact)
 //!   info     [--artifacts DIR]        print artifact manifest + sim config
@@ -25,6 +27,7 @@ use std::path::PathBuf;
 use tman::coordinator::engine::{Engine, GenerateOpts};
 use tman::coordinator::server::{synthetic_trace, ClosedLoopOpts, ServeOpts, Server, TraceProfile};
 use tman::kernels::plan::PlanCosts;
+use tman::kvpool::KvPoolConfig;
 use tman::model::config::ModelConfig;
 use tman::model::weights;
 use tman::npu::config::SocConfig;
@@ -160,7 +163,27 @@ fn build_engine(args: &Args) -> Result<Engine> {
     } else {
         eprintln!("[engine] reference backend with random weights ({})", cfg.name);
     }
-    Engine::reference(model, soc, chunk, bits, kv_slots)
+    // Paged KV: any of --kv-blocks / --block-tokens / --prefix-cache flips
+    // the engine off the legacy whole-sequence-slot geometry. Defaults:
+    // blocks sized to the same token capacity as the slot pool would have
+    // had, block length = the prefill chunk (never straddles it).
+    let block_tokens: Option<usize> =
+        args.flags.get("block-tokens").map(|s| s.parse()).transpose()?;
+    let kv_blocks: Option<usize> = args.flags.get("kv-blocks").map(|s| s.parse()).transpose()?;
+    let prefix_cache = args.flags.contains_key("prefix-cache");
+    if block_tokens.is_some() || kv_blocks.is_some() || prefix_cache {
+        let bt = block_tokens.unwrap_or_else(|| chunk.max(1)).min(cfg.max_seq).max(1);
+        let per_request = cfg.max_seq.div_ceil(bt);
+        let blocks = kv_blocks.unwrap_or(kv_slots * per_request).max(1);
+        eprintln!(
+            "[engine] paged KV: {blocks} blocks × {bt} tok/block{}",
+            if prefix_cache { ", prefix cache on" } else { "" }
+        );
+        let kv = KvPoolConfig::paged(blocks, bt, prefix_cache);
+        Engine::reference_paged(model, soc, chunk, bits, kv)
+    } else {
+        Engine::reference(model, soc, chunk, bits, kv_slots)
+    }
 }
 
 fn main() -> Result<()> {
@@ -201,12 +224,17 @@ fn main() -> Result<()> {
             let n: usize =
                 args.flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(8);
             let seed: u64 = args.flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
-            // Pick the workload mix the model's context window can hold.
+            // Pick the workload mix the model's context window can hold,
+            // optionally with a fixed shared system prompt on every
+            // request (the prefix-cache workload).
+            let shared_prefix: usize =
+                args.flags.get("shared-prefix").map(|s| s.parse()).transpose()?.unwrap_or(0);
             let profile = if engine.max_seq() <= 512 {
                 TraceProfile::tiny()
             } else {
                 TraceProfile::standard()
-            };
+            }
+            .with_shared_prefix(shared_prefix);
             let max_batch = max_batch_from(&args)?;
             let opts = ServeOpts {
                 temperature: args.flags.get("temp").map(|s| s.parse()).transpose()?.unwrap_or(0.0),
@@ -247,6 +275,22 @@ fn main() -> Result<()> {
                 }
             };
             println!("{}", fleet.report());
+            // CI gate for prefix-cache smokes: a shared-prefix trace on a
+            // cache-enabled engine must actually hit.
+            if args.flags.contains_key("require-hits") {
+                anyhow::ensure!(
+                    fleet.prefix_hits > 0,
+                    "--require-hits: the run recorded no prefix-cache hits \
+                     ({} lookups)",
+                    fleet.prefix_lookups
+                );
+                println!(
+                    "prefix-cache gate: {} hits / {} lookups, {:.3} ms prefill saved",
+                    fleet.prefix_hits,
+                    fleet.prefix_lookups,
+                    fleet.cache_saved_prefill_us / 1e3
+                );
+            }
         }
         "bench" => {
             // Machine-readable kernel/serving cost snapshot, one run per
@@ -290,10 +334,15 @@ fn main() -> Result<()> {
                  \x20         --max-batch B (decode-batch width, default 1)\n\
                  \x20         --closed-loop C (C bounded clients instead of the\n\
                  \x20         open-loop trace) --think-ms T (client think time)\n\
+                 \x20         --shared-prefix BYTES (fixed system prompt on every\n\
+                 \x20         request) --require-hits (fail unless the prefix\n\
+                 \x20         cache hit)\n\
                  bench:    --json (machine-readable plan-cost snapshot)\n\
                  shared:   --model tiny|small|base --chunk C --kv-slots N (default\n\
                  \x20         max-batch + 2) --bits 2|4 --artifacts DIR\n\
-                 \x20         --soc oneplus12|oneplus13t"
+                 \x20         --kv-blocks N --block-tokens T --prefix-cache (paged\n\
+                 \x20         KV; defaults: block = chunk, capacity = kv-slots ×\n\
+                 \x20         max_seq) --soc oneplus12|oneplus13t"
             );
         }
     }

@@ -1,11 +1,14 @@
 //! KV cache for autoregressive decoding: per layer, (seq, kv_heads, d_head)
-//! for K and V — plus [`KvSlotPool`], the fixed-capacity pool of
-//! per-request cache slots the multi-request serving loop allocates from.
-//! Capacity is load-bearing: batched decode binds one slot per decode-phase
-//! request, and a preempted prefill keeps its slot (with its contents)
-//! until the request finishes, so its prefill can resume where it stopped —
-//! [`KvSlotPool::acquire`] starts a request fresh (clears),
-//! [`KvSlotPool::resume`] re-binds the surviving contents.
+//! for K and V — plus [`KvLanes`], the lane-addressed storage abstraction
+//! the transformer's forward passes run against.
+//!
+//! Two implementations exist: [`MonoLanes`] wraps plain per-request
+//! [`KvCache`]s (tests, perplexity, single-shot paths), and
+//! [`PagedLanes`](crate::kvpool::PagedLanes) translates every read/write
+//! through the paged block pool's per-request block tables (the serving
+//! backend). The transformer cannot tell them apart, which is what lets
+//! paged KV with copy-on-write and prefix sharing reuse the exact forward
+//! implementations proven against the monolithic cache.
 
 use crate::model::config::ModelConfig;
 
@@ -75,114 +78,42 @@ impl KvCache {
     }
 }
 
-/// Fixed-capacity pool of per-request KV-cache slots.
-///
-/// Requests own slots by id: [`KvSlotPool::acquire`] binds (or re-binds) a
-/// *cleared* slot, [`KvSlotPool::resume`] returns an owned slot with its
-/// contents intact (resumable preemption), [`KvSlotPool::release`] frees
-/// it. The serving loop owns one slot per admitted request — decode-batch
-/// members, the active prefill, and preempted prefills all hold theirs
-/// until they finish.
-#[derive(Debug, Clone)]
-pub struct KvSlotPool {
-    slots: Vec<KvCache>,
-    owners: Vec<Option<u64>>,
-    high_water: usize,
+/// Lane-addressed KV storage: one logical cache per lane, read and written
+/// by the transformer's forward passes. The contract is positional —
+/// `append(lane, layer, pos, ..)` stores one position's rows, `k`/`v`
+/// read any previously written (or shared-prefix) position — so an
+/// implementation may back lanes with anything from a plain owned buffer
+/// ([`MonoLanes`]) to refcounted block tables with copy-on-write
+/// ([`PagedLanes`](crate::kvpool::PagedLanes)).
+pub trait KvLanes {
+    /// Number of lanes in this view.
+    fn lanes(&self) -> usize;
+    /// Store K/V rows for (lane, layer, pos).
+    fn append(&mut self, lane: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+    /// K vector for (lane, layer, pos, kv_head).
+    fn k(&self, lane: usize, layer: usize, pos: usize, kv_head: usize, d_head: usize) -> &[f32];
+    /// V vector for (lane, layer, pos, kv_head).
+    fn v(&self, lane: usize, layer: usize, pos: usize, kv_head: usize, d_head: usize) -> &[f32];
 }
 
-impl KvSlotPool {
-    pub fn new(cfg: &ModelConfig, max_seq: usize, n_slots: usize) -> Self {
-        assert!(n_slots > 0, "pool needs at least one slot");
-        Self {
-            slots: (0..n_slots).map(|_| KvCache::new(cfg, max_seq)).collect(),
-            owners: vec![None; n_slots],
-            high_water: 0,
-        }
+/// [`KvLanes`] over plain monolithic caches, one per lane.
+pub struct MonoLanes<'a, 'b>(pub &'a mut [&'b mut KvCache]);
+
+impl KvLanes for MonoLanes<'_, '_> {
+    fn lanes(&self) -> usize {
+        self.0.len()
     }
 
-    pub fn capacity(&self) -> usize {
-        self.slots.len()
+    fn append(&mut self, lane: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.0[lane].append(layer, pos, k, v);
     }
 
-    /// Slots currently owned by a request.
-    pub fn in_use(&self) -> usize {
-        self.owners.iter().filter(|o| o.is_some()).count()
+    fn k(&self, lane: usize, layer: usize, pos: usize, kv_head: usize, d_head: usize) -> &[f32] {
+        self.0[lane].k(layer, pos, kv_head, d_head)
     }
 
-    /// Most slots simultaneously owned over the pool's lifetime.
-    pub fn high_water(&self) -> usize {
-        self.high_water
-    }
-
-    pub fn slot_of(&self, id: u64) -> Option<usize> {
-        self.owners.iter().position(|o| *o == Some(id))
-    }
-
-    /// Acquire a cleared slot for `id`. Idempotent: if `id` already owns a
-    /// slot it is cleared and returned. None when every slot is owned by
-    /// another request.
-    pub fn acquire(&mut self, id: u64) -> Option<usize> {
-        if let Some(i) = self.slot_of(id) {
-            self.slots[i].clear();
-            return Some(i);
-        }
-        let free = self.owners.iter().position(|o| o.is_none())?;
-        self.owners[free] = Some(id);
-        self.slots[free].clear();
-        self.high_water = self.high_water.max(self.in_use());
-        Some(free)
-    }
-
-    /// Re-bind `id`'s existing slot *without clearing it* — the resumable
-    /// preemption path: a preempted request's cache survives suspension, so
-    /// its prefill continues from where it stopped. None when `id` holds no
-    /// slot (it was never admitted, or already released).
-    pub fn resume(&self, id: u64) -> Option<usize> {
-        self.slot_of(id)
-    }
-
-    /// Release `id`'s slot. Returns whether a slot was held.
-    pub fn release(&mut self, id: u64) -> bool {
-        match self.slot_of(id) {
-            Some(i) => {
-                self.owners[i] = None;
-                true
-            }
-            None => false,
-        }
-    }
-
-    pub fn get(&self, slot: usize) -> &KvCache {
-        &self.slots[slot]
-    }
-
-    pub fn get_mut(&mut self, slot: usize) -> &mut KvCache {
-        &mut self.slots[slot]
-    }
-
-    /// Mutable references to several *distinct* slots at once, in the order
-    /// requested — what the batched decode path needs to advance every
-    /// request of a batch in one shared-weight-pass forward. Panics on an
-    /// out-of-range or duplicated slot index.
-    pub fn get_disjoint_mut(&mut self, want: &[usize]) -> Vec<&mut KvCache> {
-        let mut order = vec![usize::MAX; self.slots.len()];
-        for (pos, &s) in want.iter().enumerate() {
-            assert!(s < self.slots.len(), "slot {s} out of range");
-            assert_eq!(order[s], usize::MAX, "slot {s} requested twice");
-            order[s] = pos;
-        }
-        let mut out: Vec<Option<&mut KvCache>> = want.iter().map(|_| None).collect();
-        for (i, cache) in self.slots.iter_mut().enumerate() {
-            if order[i] != usize::MAX {
-                out[order[i]] = Some(cache);
-            }
-        }
-        out.into_iter().map(|c| c.expect("every requested slot collected")).collect()
-    }
-
-    /// Total pool footprint in bytes.
-    pub fn bytes(&self) -> usize {
-        self.slots.iter().map(|c| c.bytes()).sum()
+    fn v(&self, lane: usize, layer: usize, pos: usize, kv_head: usize, d_head: usize) -> &[f32] {
+        self.0[lane].v(layer, pos, kv_head, d_head)
     }
 }
 
@@ -228,147 +159,22 @@ mod tests {
     }
 
     #[test]
-    fn pool_acquire_release_lifecycle() {
-        let cfg = ModelConfig::tiny();
-        let mut p = KvSlotPool::new(&cfg, 8, 2);
-        assert_eq!(p.capacity(), 2);
-        assert_eq!(p.in_use(), 0);
-        let a = p.acquire(10).expect("slot for 10");
-        let b = p.acquire(20).expect("slot for 20");
-        assert_ne!(a, b);
-        assert_eq!(p.in_use(), 2);
-        assert_eq!(p.high_water(), 2);
-        assert!(p.acquire(30).is_none(), "pool is full");
-        assert!(p.release(10));
-        assert!(!p.release(10), "double release is a no-op");
-        let c = p.acquire(30).expect("freed slot is reusable");
-        assert_eq!(c, a);
-        assert_eq!(p.slot_of(30), Some(a));
-        assert_eq!(p.high_water(), 2);
-    }
-
-    #[test]
-    fn pool_reacquire_clears_the_slot() {
+    fn mono_lanes_route_by_lane() {
         let cfg = ModelConfig::tiny();
         let dkv = cfg.d_kv();
-        let mut p = KvSlotPool::new(&cfg, 8, 1);
-        let s = p.acquire(1).unwrap();
-        p.get_mut(s).append(0, 0, &vec![1.0; dkv], &vec![1.0; dkv]);
-        assert_eq!(p.get(s).len, 1);
-        // Same id re-acquires the same slot, now cleared.
-        assert_eq!(p.acquire(1), Some(s));
-        assert_eq!(p.get(s).len, 0);
-    }
-
-    #[test]
-    fn pool_resume_keeps_slot_contents() {
-        // A preempted request must get back the *same* slot contents it
-        // left; acquire (fresh start) clears, resume does not.
-        let cfg = ModelConfig::tiny();
-        let dkv = cfg.d_kv();
-        let mut p = KvSlotPool::new(&cfg, 8, 2);
-        let s = p.acquire(1).unwrap();
-        p.get_mut(s).append(0, 0, &vec![3.0; dkv], &vec![-3.0; dkv]);
-        p.get_mut(s).append(0, 1, &vec![5.0; dkv], &vec![-5.0; dkv]);
-        // Another request churns through the pool in between.
-        let other = p.acquire(2).unwrap();
-        assert_ne!(other, s);
-        assert!(p.release(2));
-        // Resume: same slot, contents intact.
-        assert_eq!(p.resume(1), Some(s));
-        assert_eq!(p.get(s).len, 2);
         let dh = cfg.d_head();
-        assert_eq!(p.get(s).k(0, 1, 0, dh), &vec![5.0; dh][..]);
-        assert_eq!(p.get(s).v(0, 0, 0, dh), &vec![-3.0; dh][..]);
-        // A fresh acquire of the same id clears instead.
-        assert_eq!(p.acquire(1), Some(s));
-        assert_eq!(p.get(s).len, 0);
-    }
-
-    #[test]
-    fn pool_resume_requires_ownership() {
-        let cfg = ModelConfig::tiny();
-        let mut p = KvSlotPool::new(&cfg, 8, 1);
-        assert_eq!(p.resume(7), None, "never-admitted id cannot resume");
-        let s = p.acquire(7).unwrap();
-        assert_eq!(p.resume(7), Some(s));
-        assert!(p.release(7));
-        assert_eq!(p.resume(7), None, "released id cannot resume");
-    }
-
-    #[test]
-    fn pool_churn_keeps_accounting_exact() {
-        // Interleaved acquire/release with capacity, in_use and high_water
-        // checked at every step; double-release and acquire-when-full paths
-        // included.
-        let cfg = ModelConfig::tiny();
-        let mut p = KvSlotPool::new(&cfg, 4, 3);
-        let mut held: Vec<u64> = Vec::new();
-        let mut high = 0usize;
-        let mut rng = crate::util::Rng::new(0xC0DE);
-        for step in 0..500u64 {
-            if !held.is_empty() && rng.below(2) == 0 {
-                let id = held.remove(rng.below(held.len()));
-                assert!(p.release(id), "step {step}: release of held id {id}");
-                assert!(!p.release(id), "step {step}: double release must be a no-op");
-            } else {
-                let id = 1000 + step;
-                if held.len() == p.capacity() {
-                    assert!(p.acquire(id).is_none(), "step {step}: full pool must refuse");
-                } else {
-                    let slot = p.acquire(id).expect("free slot");
-                    assert!(slot < p.capacity());
-                    held.push(id);
-                }
-            }
-            high = high.max(held.len());
-            assert_eq!(p.in_use(), held.len(), "step {step}");
-            assert_eq!(p.high_water(), high, "step {step}");
-            for &id in &held {
-                assert!(p.slot_of(id).is_some(), "step {step}: id {id} lost its slot");
-            }
-        }
-        for id in held {
-            assert!(p.release(id));
-        }
-        assert_eq!(p.in_use(), 0);
-    }
-
-    #[test]
-    fn disjoint_mut_returns_requested_order() {
-        let cfg = ModelConfig::tiny();
-        let dkv = cfg.d_kv();
-        let mut p = KvSlotPool::new(&cfg, 8, 3);
-        for id in 0..3u64 {
-            let s = p.acquire(id).unwrap();
-            // Tag each slot with its id so the mapping is observable.
-            p.get_mut(s).append(0, 0, &vec![id as f32; dkv], &vec![0.0; dkv]);
-        }
-        let s2 = p.slot_of(2).unwrap();
-        let s0 = p.slot_of(0).unwrap();
-        let caches = p.get_disjoint_mut(&[s2, s0]);
-        assert_eq!(caches.len(), 2);
-        let dh = cfg.d_head();
-        assert_eq!(caches[0].k(0, 0, 0, dh)[0], 2.0);
-        assert_eq!(caches[1].k(0, 0, 0, dh)[0], 0.0);
-    }
-
-    #[test]
-    #[should_panic(expected = "requested twice")]
-    fn disjoint_mut_rejects_duplicates() {
-        let cfg = ModelConfig::tiny();
-        let mut p = KvSlotPool::new(&cfg, 8, 2);
-        p.acquire(1).unwrap();
-        let s = p.slot_of(1).unwrap();
-        p.get_disjoint_mut(&[s, s]);
-    }
-
-    #[test]
-    fn pool_bytes_scale_with_slots() {
-        let cfg = ModelConfig::tiny();
-        let one = KvSlotPool::new(&cfg, 16, 1).bytes();
-        let four = KvSlotPool::new(&cfg, 16, 4).bytes();
-        assert_eq!(four, 4 * one);
-        assert_eq!(one, KvCache::new(&cfg, 16).bytes());
+        let mut a = KvCache::new(&cfg, 8);
+        let mut b = KvCache::new(&cfg, 8);
+        let mut refs: Vec<&mut KvCache> = vec![&mut a, &mut b];
+        let mut lanes = MonoLanes(&mut refs);
+        assert_eq!(lanes.lanes(), 2);
+        lanes.append(0, 0, 0, &vec![1.0; dkv], &vec![-1.0; dkv]);
+        lanes.append(1, 0, 0, &vec![2.0; dkv], &vec![-2.0; dkv]);
+        assert_eq!(lanes.k(0, 0, 0, 0, dh)[0], 1.0);
+        assert_eq!(lanes.k(1, 0, 0, 0, dh)[0], 2.0);
+        assert_eq!(lanes.v(1, 0, 0, 0, dh)[0], -2.0);
+        drop(lanes);
+        assert_eq!(a.len, 1);
+        assert_eq!(b.len, 1);
     }
 }

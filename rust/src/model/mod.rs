@@ -11,5 +11,5 @@ pub mod transformer;
 pub mod weights;
 
 pub use config::{EvalModel, ModelConfig, ProjShape};
-pub use kv_cache::KvCache;
+pub use kv_cache::{KvCache, KvLanes, MonoLanes};
 pub use transformer::{LayerWeights, Linear, Transformer};

@@ -15,7 +15,7 @@
 
 use crate::kernels::plan::UnifiedLayerPlan;
 use crate::model::config::ModelConfig;
-use crate::model::kv_cache::KvCache;
+use crate::model::kv_cache::{KvCache, KvLanes, MonoLanes};
 use crate::npu::config::NpuConfig;
 use crate::quant::formats::{ActDtype, Granularity, WeightDtype};
 use crate::quant::quantize;
@@ -208,9 +208,11 @@ fn softmax_inplace(x: &mut [f32]) {
 /// every K row `t <= pos`, softmax, V-weighted sum — per head, with GQA
 /// head-group sharing. This is the *single* implementation of the
 /// attention math; the batched decode step and the planned chunk pass both
-/// call it, so the two execution paths cannot drift numerically.
+/// call it (through whichever [`KvLanes`] backs the lane — monolithic or
+/// paged), so the execution paths cannot drift numerically.
 fn attend(
-    cache: &KvCache,
+    kv: &dyn KvLanes,
+    lane: usize,
     layer: usize,
     pos: usize,
     q: &[f32],
@@ -226,13 +228,13 @@ fn attend(
         let qh = &q[head * dh..(head + 1) * dh];
         let mut scores = vec![0.0f32; pos + 1];
         for (t, s) in scores.iter_mut().enumerate() {
-            let kt = cache.k(layer, t, kvh, dh);
+            let kt = kv.k(lane, layer, t, kvh, dh);
             *s = qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * scale;
         }
         softmax_inplace(&mut scores);
         let o = &mut out[head * dh..(head + 1) * dh];
         for (t, &s) in scores.iter().enumerate() {
-            let vt = cache.v(layer, t, kvh, dh);
+            let vt = kv.v(lane, layer, t, kvh, dh);
             for (ov, &vv) in o.iter_mut().zip(vt) {
                 *ov += s * vv;
             }
@@ -255,23 +257,34 @@ impl Transformer {
             .expect("one lane in, one logits vector out")
     }
 
-    /// Forward one decode step for a *batch* of independent requests:
-    /// `steps[lane] = (token, pos)` against `caches[lane]`. Every linear
-    /// projection streams its weights once for the whole batch
-    /// ([`Linear::forward_batch`] — the reference-numerics mirror of the
-    /// batched LUT kernel's shared weight pass); attention and the
-    /// element-wise ops run per lane against that lane's own KV cache.
-    /// Each lane's logits are bit-identical to a solo
-    /// [`Transformer::forward_token`] call.
+    /// Forward one decode step for a *batch* of independent requests
+    /// backed by monolithic caches — a thin wrapper over
+    /// [`Transformer::forward_batch_lanes`].
     pub fn forward_batch(
         &self,
         steps: &[(usize, usize)],
         caches: &mut [&mut KvCache],
     ) -> Vec<Vec<f32>> {
+        self.forward_batch_lanes(steps, &mut MonoLanes(caches))
+    }
+
+    /// Forward one decode step for a *batch* of independent requests:
+    /// `steps[lane] = (token, pos)` against lane `lane` of `kv`. Every
+    /// linear projection streams its weights once for the whole batch
+    /// ([`Linear::forward_batch`] — the reference-numerics mirror of the
+    /// batched LUT kernel's shared weight pass); attention and the
+    /// element-wise ops run per lane against that lane's own KV storage,
+    /// monolithic or paged. Each lane's logits are bit-identical to a solo
+    /// [`Transformer::forward_token`] call.
+    pub fn forward_batch_lanes(
+        &self,
+        steps: &[(usize, usize)],
+        kv: &mut dyn KvLanes,
+    ) -> Vec<Vec<f32>> {
         let c = &self.cfg;
         let lanes = steps.len();
         assert!(lanes > 0, "empty decode batch");
-        assert_eq!(caches.len(), lanes, "one KV cache per batched request");
+        assert_eq!(kv.lanes(), lanes, "one KV lane per batched request");
         let d = c.d_model;
         let dh = c.d_head();
         let dkv = c.d_kv();
@@ -308,8 +321,8 @@ impl Transformer {
                 for kvh in 0..c.n_kv_heads {
                     rope(&mut k[lane][kvh * dh..(kvh + 1) * dh], pos, c.rope_theta);
                 }
-                caches[lane].append(li, pos, &k[lane], &v[lane]);
-                attend(&*caches[lane], li, pos, &q[lane], &mut attn_out[lane], c);
+                kv.append(lane, li, pos, &k[lane], &v[lane]);
+                attend(kv, lane, li, pos, &q[lane], &mut attn_out[lane], c);
             }
             layer.wo.forward_batch(&attn_out, &mut proj);
             for lane in 0..lanes {
@@ -346,23 +359,38 @@ impl Transformer {
         logits
     }
 
-    /// Run one prefill chunk `tokens` at positions
-    /// `pos_base .. pos_base + tokens.len()` against a single request's
-    /// `cache` — the host-side mirror of the planned prefill GEMM. Every
-    /// linear projection streams (and, for planned layers, decodes) its
-    /// weights **once** for the whole chunk: the chunk positions form the
-    /// (n × K) activation block of the matrix path and go through
-    /// [`Linear::forward_batch`] together. K/V rows for all chunk positions
-    /// land in the cache before attention, then each position attends over
-    /// its own causal prefix — so the logits at the last position are
-    /// byte-identical to feeding the chunk through
-    /// [`Transformer::forward_token`] one position at a time.
+    /// [`Transformer::forward_chunk_lanes`] against a single monolithic
+    /// cache.
     pub fn forward_chunk(
         &self,
         tokens: &[usize],
         pos_base: usize,
         cache: &mut KvCache,
     ) -> Vec<f32> {
+        let mut lanes: [&mut KvCache; 1] = [cache];
+        self.forward_chunk_lanes(tokens, pos_base, &mut MonoLanes(&mut lanes))
+    }
+
+    /// Run one prefill chunk `tokens` at positions
+    /// `pos_base .. pos_base + tokens.len()` against a single request's
+    /// KV storage (lane 0 of `kv`) — the host-side mirror of the planned
+    /// prefill GEMM. Every linear projection streams (and, for planned
+    /// layers, decodes) its weights **once** for the whole chunk: the
+    /// chunk positions form the (n × K) activation block of the matrix
+    /// path and go through [`Linear::forward_batch`] together. K/V rows
+    /// for all chunk positions land in the cache before attention, then
+    /// each position attends over its own causal prefix — a prefix that
+    /// may begin with *shared* blocks another request computed (the
+    /// prefix-cache hit path) — so the logits at the last position are
+    /// byte-identical to feeding the chunk through
+    /// [`Transformer::forward_token`] one position at a time.
+    pub fn forward_chunk_lanes(
+        &self,
+        tokens: &[usize],
+        pos_base: usize,
+        kv: &mut dyn KvLanes,
+    ) -> Vec<f32> {
+        assert_eq!(kv.lanes(), 1, "a prefill chunk runs against one request");
         let c = &self.cfg;
         let n = tokens.len();
         assert!(n > 0, "empty prefill chunk");
@@ -406,10 +434,10 @@ impl Transformer {
                 for kvh in 0..c.n_kv_heads {
                     rope(&mut k[lane][kvh * dh..(kvh + 1) * dh], pos, c.rope_theta);
                 }
-                cache.append(li, pos, &k[lane], &v[lane]);
+                kv.append(0, li, pos, &k[lane], &v[lane]);
             }
             for lane in 0..n {
-                attend(&*cache, li, pos_base + lane, &q[lane], &mut attn_out[lane], c);
+                attend(kv, 0, li, pos_base + lane, &q[lane], &mut attn_out[lane], c);
             }
             layer.wo.forward_batch(&attn_out, &mut proj);
             for lane in 0..n {

@@ -194,8 +194,14 @@ impl CpuConfig {
 #[derive(Debug, Clone)]
 pub struct PowerModel {
     /// Whole-SoC power with the NPU active and CPUs idle, W (QNN/T-MAN
-    /// measure 4.7–5.0 W).
+    /// measure 4.7–5.0 W). This is the compute-bound draw: HVX lookups /
+    /// HMX MACs saturated.
     pub npu_active_w: f64,
+    /// Whole-SoC power while the NPU is *memory-bound* — DMA streaming
+    /// weights/KV from DDR with the compute units mostly stalled. Below
+    /// the compute draw: kernel-attributed energy prices each stage of a
+    /// [`crate::npu::cost::Breakdown`] on its own rail.
+    pub npu_mem_w: f64,
     /// Whole-SoC power with big CPU cores busy, W (bitnet.cpp: 8.22 W).
     pub cpu_active_w: f64,
     /// Hybrid NPU+CPU power (llm.npu prefill: 8.89 W — NPU plus the CPU
@@ -207,7 +213,13 @@ pub struct PowerModel {
 
 impl PowerModel {
     pub fn sd8gen3() -> Self {
-        Self { npu_active_w: 4.9, cpu_active_w: 8.2, hybrid_active_w: 8.9, idle_w: 0.8 }
+        Self {
+            npu_active_w: 4.9,
+            npu_mem_w: 3.6,
+            cpu_active_w: 8.2,
+            hybrid_active_w: 8.9,
+            idle_w: 0.8,
+        }
     }
 }
 
@@ -303,6 +315,10 @@ mod tests {
         let p = PowerModel::sd8gen3();
         assert!(p.npu_active_w < p.cpu_active_w);
         assert!(p.cpu_active_w < p.hybrid_active_w);
+        // Memory-bound streaming draws less than saturated compute, more
+        // than idle — the rails kernel-attributed energy prices against.
+        assert!(p.idle_w < p.npu_mem_w);
+        assert!(p.npu_mem_w < p.npu_active_w);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! power × (1 / throughput). T-MAN wins on both factors during decoding.
 
 use crate::npu::config::PowerModel;
+use crate::npu::cost::Breakdown;
 
 /// Which silicon a phase runs on — decides the power state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -100,6 +101,21 @@ pub fn joules_per_token(pm: &PowerModel, placement: Placement, tokens_per_s: f64
     placement.power_w(pm) / tokens_per_s
 }
 
+/// Kernel-attributed energy of one simulated kernel invocation: each stage
+/// of its latency [`Breakdown`] priced on its own power rail — DDR/DMA
+/// streaming on the memory-bound rail, dequantization and compute on the
+/// active-compute rail, launch/sync overhead at the idle floor. Energy is
+/// *work*, so the stage times price straight even when the kernel pipeline
+/// overlaps them in wall-clock (overlap shortens the latency, not the
+/// joules). This is what fleet energy attribution sums per request,
+/// replacing the flat `power × request-time` estimate.
+pub fn breakdown_energy_j(pm: &PowerModel, bd: &Breakdown) -> f64 {
+    1e-6
+        * (pm.npu_mem_w * bd.mem_us
+            + pm.npu_active_w * (bd.dq_us + bd.cmp_us)
+            + pm.idle_w * bd.overhead_us)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,6 +167,20 @@ mod tests {
         let avg = m.avg_power_w(&pm);
         let want = (3.0 * pm.npu_active_w + 1.0 * pm.hybrid_active_w) / 4.0;
         assert!((avg - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_energy_prices_each_stage_on_its_rail() {
+        let pm = PowerModel::sd8gen3();
+        let bd = Breakdown { mem_us: 10.0, dq_us: 2.0, cmp_us: 3.0, overhead_us: 5.0 };
+        let want = 1e-6 * (10.0 * pm.npu_mem_w + 5.0 * pm.npu_active_w + 5.0 * pm.idle_w);
+        assert!((breakdown_energy_j(&pm, &bd) - want).abs() < 1e-15);
+        // A memory-bound kernel costs less energy than the same time spent
+        // compute-bound — the refinement over flat power × time.
+        let mem_bound = Breakdown { mem_us: 10.0, ..Default::default() };
+        let cmp_bound = Breakdown { cmp_us: 10.0, ..Default::default() };
+        assert!(breakdown_energy_j(&pm, &mem_bound) < breakdown_energy_j(&pm, &cmp_bound));
+        assert_eq!(breakdown_energy_j(&pm, &Breakdown::default()), 0.0);
     }
 
     #[test]

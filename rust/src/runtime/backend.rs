@@ -6,25 +6,30 @@
 //! end). Two implementations provide them:
 //!
 //! - [`ReferenceBackend`]: the pure-Rust reference transformer over a
-//!   [`KvSlotPool`] of per-request caches, addressed by request id on every
-//!   call. Always available; this is what the multi-request serving loop
-//!   and the CLI run by default. `decode_batch` is a *real* batched step:
-//!   one shared pass over every projection's weights advances all requests
-//!   of the batch together (`Transformer::forward_batch`), each against its
-//!   own KV slot, with per-request logits bit-identical to sequential
-//!   single steps.
+//!   paged [`PagedKvPool`] of refcounted KV blocks, addressed by request
+//!   id on every call. Always available; this is what the multi-request
+//!   serving loop and the CLI run by default. Admission is a token-budget
+//!   block reservation (not a slot count); `begin_request_for` resolves
+//!   the longest cached prefix of the prompt in the pool's radix index and
+//!   returns the hit length, so prefill starts at the hit boundary.
+//!   `decode_batch` is a *real* batched step: one shared pass over every
+//!   projection's weights advances all requests of the batch together
+//!   (`Transformer::forward_batch_lanes`), each lane reading and writing
+//!   through its own block table, with per-request logits bit-identical to
+//!   sequential single steps.
 //! - `Pjrt` (behind the `pjrt` feature): the AOT artifacts executed through
-//!   PJRT, single device-resident KV cache (batch 1 on device, no resume).
+//!   PJRT, single device-resident KV cache (batch 1 on device, no resume,
+//!   no prefix reuse).
 //!
 //! Latency/energy numbers never come from the backend — the engine applies
 //! the NPU simulator to the model's [`ModelShape`] either way, so swapping
 //! backends changes numerics fidelity, not the performance model.
 
+use crate::kvpool::{KvPoolConfig, KvPoolStats, PagedKvPool};
 use crate::model::config::ModelConfig;
-use crate::model::kv_cache::KvSlotPool;
 use crate::model::transformer::Transformer;
 use crate::runtime::artifacts::ArtifactMeta;
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 /// The architecture/quantization shape the engine's performance model runs
 /// on — the backend-independent subset of [`ArtifactMeta`].
@@ -110,73 +115,95 @@ impl ModelShape {
 /// One decode step of a batch: (request id, input token, position).
 pub type DecodeStep = (u64, i32, i32);
 
-/// Pure-Rust backend: the reference transformer + a pool of per-request
-/// KV-cache slots. Every compute call is addressed by request id — there is
-/// no single "bound" request, which is what lets a decode batch interleave
-/// several requests and a preempted prefill resume against its surviving
-/// slot.
+/// Pure-Rust backend: the reference transformer + the paged KV block pool.
+/// Every compute call is addressed by request id — there is no single
+/// "bound" request, which is what lets a decode batch interleave several
+/// requests, a preempted prefill resume against its surviving block table,
+/// and a prefix hit share another request's blocks by refcount.
 #[derive(Debug, Clone)]
 pub struct ReferenceBackend {
     pub model: Transformer,
-    pool: KvSlotPool,
+    pool: PagedKvPool,
 }
 
 impl ReferenceBackend {
+    /// Legacy fixed-slot geometry: `kv_slots` whole-sequence blocks, no
+    /// prefix cache — admission and numerics byte-identical to the old
+    /// `KvSlotPool` backend.
     pub fn new(model: Transformer, kv_slots: usize) -> Self {
-        let pool = KvSlotPool::new(&model.cfg, model.cfg.max_seq, kv_slots);
+        let kv = KvPoolConfig::slots(kv_slots, model.cfg.max_seq);
+        Self::with_kv(model, kv)
+    }
+
+    /// Paged geometry: a block pool of `kv.blocks` × `kv.block_tokens`
+    /// positions, optionally with the radix prefix cache.
+    pub fn with_kv(model: Transformer, kv: KvPoolConfig) -> Self {
+        let pool = PagedKvPool::new(&model.cfg, model.cfg.max_seq, kv);
         Self { model, pool }
     }
 
-    /// Acquire (or re-acquire) a *cleared* KV slot for `id` — the start of
-    /// a fresh prefill attempt.
+    /// Admit `id` with a whole-sequence reservation and no prompt (the
+    /// single-shot path). Idempotent per id: re-beginning clears.
     pub fn begin_request(&mut self, id: u64) -> Result<()> {
-        self.pool
-            .acquire(id)
-            .with_context(|| format!("KV slot pool exhausted ({} slots)", self.pool.capacity()))?;
-        Ok(())
+        let seq = self.model.cfg.max_seq;
+        self.begin_request_for(id, &[], seq).map(|_| ())
     }
 
-    /// Re-attach `id`'s surviving KV slot after a preemption, contents
-    /// intact. Errors if `id` holds no slot (it was never admitted or was
+    /// Admit `id`: reserve blocks for `reserve_tokens` total positions and
+    /// resolve the longest cached prefix of `prompt`. Returns the
+    /// prefix-hit length — the serving loop starts prefill there, and
+    /// positions below it are served from shared blocks. Errors when the
+    /// reservation exceeds the pool's free budget.
+    pub fn begin_request_for(
+        &mut self,
+        id: u64,
+        prompt: &[usize],
+        reserve_tokens: usize,
+    ) -> Result<usize> {
+        self.pool.begin(id, prompt, reserve_tokens)
+    }
+
+    /// Re-attach `id`'s surviving block table after a preemption, contents
+    /// intact. Errors if `id` holds no table (it was never admitted or was
     /// released — resuming would silently recompute from nothing).
     pub fn resume_request(&mut self, id: u64) -> Result<()> {
-        self.pool
-            .resume(id)
-            .with_context(|| format!("request {id} holds no KV slot to resume"))?;
-        Ok(())
+        self.pool.resume(id)
     }
 
-    /// Release `id`'s KV slot.
+    /// Release `id`'s block table (publishing its prefix into the radix
+    /// index when the prefix cache is on).
     pub fn end_request(&mut self, id: u64) {
         self.pool.release(id);
     }
 
-    fn slot_for(&self, id: u64) -> Result<usize> {
-        self.pool
-            .slot_of(id)
-            .with_context(|| format!("request {id} holds no KV slot (begin_request missing?)"))
+    /// The request's prompt tokens served from the prefix cache at
+    /// admission.
+    pub fn cached_tokens(&self, id: u64) -> usize {
+        self.pool.cached_of(id).unwrap_or(0)
     }
 
     pub fn decode_step(&mut self, id: u64, token: i32, pos: i32) -> Result<Vec<f32>> {
-        let slot = self.slot_for(id)?;
         let vocab = self.model.cfg.vocab;
         anyhow::ensure!(token >= 0 && (token as usize) < vocab, "token {token} out of vocab");
         anyhow::ensure!(pos >= 0, "negative position {pos}");
-        let cache = self.pool.get_mut(slot);
-        Ok(self.model.forward_token(token as usize, pos as usize, cache))
+        self.pool.note_tokens(id, pos as usize, &[token as usize])?;
+        let steps = [(token as usize, pos as usize)];
+        let mut lanes = self.pool.lanes(&[id])?;
+        let mut out = self.model.forward_batch_lanes(&steps, &mut lanes);
+        Ok(out.pop().expect("one lane in, one logits vector out"))
     }
 
     /// One decode step for the whole batch through the *batched* forward:
     /// every linear projection streams its weights once and applies them to
-    /// all requests' activations ([`Transformer::forward_batch`], the
+    /// all requests' activations ([`Transformer::forward_batch_lanes`], the
     /// numerics mirror of the batched LUT kernel), while each request's
-    /// attention runs against its own KV slot. Per-request logits are
+    /// attention runs against its own block table. Per-request logits are
     /// bit-identical to sequential [`ReferenceBackend::decode_step`] calls.
     pub fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<Vec<Vec<f32>>> {
         anyhow::ensure!(!steps.is_empty(), "empty decode batch");
         let vocab = self.model.cfg.vocab;
-        let mut slots = Vec::with_capacity(steps.len());
-        let mut lanes = Vec::with_capacity(steps.len());
+        let mut ids = Vec::with_capacity(steps.len());
+        let mut lanes_in = Vec::with_capacity(steps.len());
         for (i, &(id, token, pos)) in steps.iter().enumerate() {
             anyhow::ensure!(
                 steps[..i].iter().all(|&(prev, _, _)| prev != id),
@@ -184,20 +211,31 @@ impl ReferenceBackend {
             );
             anyhow::ensure!(token >= 0 && (token as usize) < vocab, "token {token} out of vocab");
             anyhow::ensure!(pos >= 0, "negative position {pos}");
-            slots.push(self.slot_for(id)?);
-            lanes.push((token as usize, pos as usize));
+            // Every id must hold a table *before* anything is recorded —
+            // a rejected batch must leave all its valid members usable.
+            anyhow::ensure!(
+                self.pool.request_len(id).is_some(),
+                "request {id} holds no KV table (begin_request missing?)"
+            );
+            ids.push(id);
+            lanes_in.push((token as usize, pos as usize));
         }
-        let mut caches = self.pool.get_disjoint_mut(&slots);
-        Ok(self.model.forward_batch(&lanes, &mut caches))
+        for (&id, &(token, pos)) in ids.iter().zip(&lanes_in) {
+            self.pool.note_tokens(id, pos, &[token])?;
+        }
+        let mut lanes = self.pool.lanes(&ids)?;
+        Ok(self.model.forward_batch_lanes(&lanes_in, &mut lanes))
     }
 
     /// Run one prefill chunk through the *planned* chunk pass
-    /// ([`Transformer::forward_chunk`]): the chunk's positions form one
-    /// (n × K) activation block, every projection streams (and, for planned
-    /// layers, decodes) its weights once for the whole chunk, and the
-    /// returned last-position logits are byte-identical to teacher-forcing
-    /// the chunk through [`ReferenceBackend::decode_step`] one token at a
-    /// time.
+    /// ([`Transformer::forward_chunk_lanes`]): the chunk's positions form
+    /// one (n × K) activation block, every projection streams (and, for
+    /// planned layers, decodes) its weights once for the whole chunk, and
+    /// the returned last-position logits are byte-identical to
+    /// teacher-forcing the chunk through
+    /// [`ReferenceBackend::decode_step`] one token at a time. On a
+    /// prefix-cache hit the serving loop calls this only for the uncached
+    /// suffix — attention reads the shared blocks below `pos_base`.
     pub fn prefill_chunk(&mut self, id: u64, tokens: &[i32], pos_base: i32) -> Result<Vec<f32>> {
         anyhow::ensure!(!tokens.is_empty(), "empty prefill chunk");
         anyhow::ensure!(pos_base >= 0, "negative position {pos_base}");
@@ -207,17 +245,48 @@ impl ReferenceBackend {
             anyhow::ensure!(t >= 0 && (t as usize) < vocab, "token {t} out of vocab");
             toks.push(t as usize);
         }
-        let slot = self.slot_for(id)?;
-        let cache = self.pool.get_mut(slot);
-        Ok(self.model.forward_chunk(&toks, pos_base as usize, cache))
+        self.pool.note_tokens(id, pos_base as usize, &toks)?;
+        let mut lanes = self.pool.lanes(&[id])?;
+        Ok(self.model.forward_chunk_lanes(&toks, pos_base as usize, &mut lanes))
     }
 
-    pub fn slots_in_use(&self) -> usize {
-        self.pool.in_use()
+    /// Requests currently holding a block table.
+    pub fn requests_in_use(&self) -> usize {
+        self.pool.requests_in_use()
     }
 
-    pub fn slot_capacity(&self) -> usize {
-        self.pool.capacity()
+    /// Upper bound on simultaneously admitted requests (each needs at
+    /// least one block). Equals the old slot count under the legacy
+    /// geometry.
+    pub fn max_concurrent(&self) -> usize {
+        self.pool.capacity_blocks()
+    }
+
+    pub fn kv_stats(&self) -> KvPoolStats {
+        self.pool.stats()
+    }
+
+    pub fn kv_block_tokens(&self) -> usize {
+        self.pool.block_tokens()
+    }
+
+    pub fn kv_reserved_blocks(&self) -> usize {
+        self.pool.reserved_blocks()
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.pool.config().prefix_cache
+    }
+
+    /// Drop every prefix-cache block reference (with no live requests
+    /// this drains the pool to empty).
+    pub fn clear_prefix_index(&mut self) {
+        self.pool.clear_prefix_index();
+    }
+
+    /// Test/diagnostic access to the pool.
+    pub fn pool(&self) -> &PagedKvPool {
+        &self.pool
     }
 }
 
@@ -243,6 +312,26 @@ impl Backend {
         }
     }
 
+    /// Admit a request with its prompt and total token budget; returns the
+    /// prefix-cache hit length (0 on the PJRT backend — one device cache,
+    /// no sharing).
+    pub fn begin_request_for(
+        &mut self,
+        id: u64,
+        prompt: &[usize],
+        reserve_tokens: usize,
+    ) -> Result<usize> {
+        match self {
+            Backend::Reference(b) => b.begin_request_for(id, prompt, reserve_tokens),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => {
+                let _ = (id, prompt, reserve_tokens);
+                rt.reset()?;
+                Ok(0)
+            }
+        }
+    }
+
     /// Re-attach a preempted request's KV state without clearing it. The
     /// PJRT backend's single device cache cannot suspend one request while
     /// serving another, so it cannot resume.
@@ -251,8 +340,8 @@ impl Backend {
             Backend::Reference(b) => b.resume_request(id),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => anyhow::bail!(
-                "request {id}: resumable preemption needs per-request KV slots \
-                 (reference backend); the PJRT backend has one device cache"
+                "request {id}: resumable preemption needs per-request KV block \
+                 tables (reference backend); the PJRT backend has one device cache"
             ),
         }
     }
@@ -288,7 +377,7 @@ impl Backend {
     }
 
     /// One *batched* decode step: a single shared weight pass advances
-    /// every `(id, token, pos)` entry, each against its own KV slot.
+    /// every `(id, token, pos)` entry, each against its own block table.
     pub fn decode_batch(&mut self, steps: &[DecodeStep]) -> Result<Vec<Vec<f32>>> {
         match self {
             Backend::Reference(b) => b.decode_batch(steps),
@@ -315,22 +404,56 @@ impl Backend {
         }
     }
 
-    /// KV slots currently owned by admitted requests (1 for the PJRT
-    /// backend's single device cache).
+    /// Requests currently holding KV (1 for the PJRT backend's single
+    /// device cache).
     pub fn kv_slots_in_use(&self) -> usize {
         match self {
-            Backend::Reference(b) => b.slots_in_use(),
+            Backend::Reference(b) => b.requests_in_use(),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => 1,
         }
     }
 
-    /// Total KV slots the backend can bind simultaneously.
+    /// Upper bound on simultaneously admitted requests: the pool's block
+    /// count (every request needs at least one block). Equals the slot
+    /// count under the legacy whole-sequence-block geometry.
     pub fn kv_slot_capacity(&self) -> usize {
         match self {
-            Backend::Reference(b) => b.slot_capacity(),
+            Backend::Reference(b) => b.max_concurrent(),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => 1,
+        }
+    }
+
+    /// Positions per KV block (`max_seq` for the legacy geometry and the
+    /// PJRT backend's single device cache).
+    pub fn kv_block_tokens(&self) -> usize {
+        match self {
+            Backend::Reference(b) => b.kv_block_tokens(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.meta.seq,
+        }
+    }
+
+    /// Blocks charged against admission right now.
+    pub fn kv_reserved_blocks(&self) -> usize {
+        match self {
+            Backend::Reference(b) => b.kv_reserved_blocks(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => 1,
+        }
+    }
+
+    /// Pool counters for fleet metrics (zeroed shell on PJRT).
+    pub fn kv_stats(&self) -> KvPoolStats {
+        match self {
+            Backend::Reference(b) => b.kv_stats(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => KvPoolStats {
+                capacity_blocks: 1,
+                block_tokens: rt.meta.seq,
+                ..Default::default()
+            },
         }
     }
 }
@@ -372,7 +495,7 @@ mod tests {
         assert!(b.begin_request(2).is_err(), "second request must not fit in one slot");
         b.end_request(1);
         b.begin_request(2).unwrap();
-        assert_eq!(b.slots_in_use(), 1);
+        assert_eq!(b.requests_in_use(), 1);
     }
 
     #[test]
@@ -384,7 +507,7 @@ mod tests {
         // Re-begin the same request: positions restart from 0.
         b.begin_request(7).unwrap();
         let a = b.decode_step(7, 65, 0).unwrap();
-        // Fresh request in a fresh slot sees identical logits at pos 0.
+        // Fresh request in a fresh table sees identical logits at pos 0.
         b.begin_request(8).unwrap();
         let c = b.decode_step(8, 65, 0).unwrap();
         assert_eq!(a, c);
@@ -407,7 +530,7 @@ mod tests {
         for (pos, &t) in toks[..3].iter().enumerate() {
             b.decode_step(1, t, pos as i32).unwrap();
         }
-        // Another request churns a different slot while 1 is suspended.
+        // Another request churns different blocks while 1 is suspended.
         b.begin_request(2).unwrap();
         b.decode_step(2, 90, 0).unwrap();
         b.end_request(2);
@@ -421,7 +544,7 @@ mod tests {
     }
 
     #[test]
-    fn resume_without_a_slot_is_an_error() {
+    fn resume_without_a_table_is_an_error() {
         let mut b = backend(1);
         assert!(b.resume_request(5).is_err(), "never-admitted id must not resume");
         b.begin_request(5).unwrap();
@@ -451,13 +574,25 @@ mod tests {
 
     #[test]
     fn decode_batch_rejects_duplicate_ids() {
-        // Two lanes over one KV slot would corrupt the cache; the batched
-        // forward must refuse before touching anything.
+        // Two lanes over one block table would corrupt the cache; the
+        // batched forward must refuse before touching anything.
         let mut b = backend(2);
         b.begin_request(1).unwrap();
         assert!(b.decode_batch(&[(1, 65, 0), (1, 66, 0)]).is_err());
-        // The slot is still usable afterwards.
+        // The table is still usable afterwards.
         assert_eq!(b.decode_batch(&[(1, 65, 0)]).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn rejected_batch_leaves_valid_members_untouched() {
+        // A batch containing a never-admitted id must be refused *before*
+        // anything is recorded: the valid member's token record and KV
+        // stay pristine, so it can be advanced in a retried batch.
+        let mut b = backend(2);
+        b.begin_request(1).unwrap();
+        assert!(b.decode_batch(&[(1, 65, 0), (2, 66, 0)]).is_err());
+        let retried = b.decode_batch(&[(1, 65, 0)]).unwrap();
+        assert_eq!(retried.len(), 1, "request 1 must still advance after the rejected batch");
     }
 
     #[test]
@@ -472,5 +607,54 @@ mod tests {
             step = b.decode_step(2, t, pos as i32).unwrap();
         }
         assert_eq!(chunked, step);
+    }
+
+    #[test]
+    fn paged_pool_matches_slot_numerics() {
+        // The same token sequence through the legacy whole-sequence-block
+        // geometry and a fine-grained paged geometry must produce
+        // byte-identical logits: block translation is invisible to the
+        // numerics.
+        let model = random_transformer(&ModelConfig::tiny(), 11);
+        let mut slots = ReferenceBackend::new(model.clone(), 2);
+        let paged_cfg = KvPoolConfig::paged(2 * 256 / 8, 8, false);
+        let mut paged = ReferenceBackend::with_kv(model, paged_cfg);
+        slots.begin_request(1).unwrap();
+        paged.begin_request_for(1, &[], 40).unwrap();
+        let toks = [72i32, 101, 108, 108, 111, 32, 116, 109, 97, 110];
+        let a = slots.prefill_chunk(1, &toks, 0).unwrap();
+        let b = paged.prefill_chunk(1, &toks, 0).unwrap();
+        assert_eq!(a, b, "chunk logits diverged across KV geometries");
+        for pos in 0..4 {
+            let x = slots.decode_step(1, 65 + pos, 10 + pos).unwrap();
+            let y = paged.decode_step(1, 65 + pos, 10 + pos).unwrap();
+            assert_eq!(x, y, "decode step {pos} diverged across KV geometries");
+        }
+    }
+
+    #[test]
+    fn prefix_hit_starts_prefill_at_the_boundary() {
+        // Publisher computes a prompt, finishes; an identical prompt hits
+        // the cache and its suffix-only prefill lands on byte-identical
+        // logits to a cold full prefill.
+        let model = random_transformer(&ModelConfig::tiny(), 11);
+        let kv = KvPoolConfig::paged(16, 4, true);
+        let mut b = ReferenceBackend::with_kv(model.clone(), kv);
+        let toks_i32: Vec<i32> = vec![104, 101, 108, 108, 111, 32, 119, 111, 114, 108];
+        let prompt: Vec<usize> = toks_i32.iter().map(|&t| t as usize).collect();
+
+        assert_eq!(b.begin_request_for(1, &prompt, 12).unwrap(), 0, "cold cache");
+        let cold = b.prefill_chunk(1, &toks_i32, 0).unwrap();
+        b.end_request(1);
+
+        let hit = b.begin_request_for(2, &prompt, 12).unwrap();
+        assert_eq!(hit, 8, "two full 4-token blocks cached (cap keeps it < prompt)");
+        assert_eq!(b.cached_tokens(2), 8);
+        // Prefill only the uncached suffix; logits must match the cold run.
+        let warm = b.prefill_chunk(2, &toks_i32[hit..], hit as i32).unwrap();
+        assert_eq!(warm, cold, "suffix-only prefill diverged from the cold run");
+        b.end_request(2);
+        assert_eq!(b.kv_stats().prefix_hits, 1);
+        assert_eq!(b.kv_stats().prefix_hit_tokens, 8);
     }
 }

@@ -1,0 +1,171 @@
+//! Property suite for the paged KV-cache subsystem: randomized
+//! shared-prefix traces (seeds × branch points × release churn) proving
+//! that logits are byte-identical with the prefix cache on vs off, that
+//! refcounts never leak (the pool drains to empty once every request has
+//! finished and the index is dropped), and that copy-on-write divergence
+//! never corrupts a shared block.
+
+use tman::kvpool::KvPoolConfig;
+use tman::model::config::ModelConfig;
+use tman::model::weights::random_transformer;
+use tman::runtime::backend::ReferenceBackend;
+use tman::util::Rng;
+
+/// Prefill `toks` starting at `start` in randomly sized chunks (the chunk
+/// boundaries are irrelevant to the numerics — the forward-chunk
+/// invariant), returning the last position's logits.
+fn prefill_in_chunks(
+    b: &mut ReferenceBackend,
+    id: u64,
+    toks: &[i32],
+    start: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let mut pos = start;
+    let mut logits = Vec::new();
+    let mut rem = toks;
+    while !rem.is_empty() {
+        let n = (1 + rng.below(16)).min(rem.len());
+        logits = b.prefill_chunk(id, &rem[..n], pos as i32).expect("prefill chunk");
+        pos += n;
+        rem = &rem[n..];
+    }
+    logits
+}
+
+/// Property: over random seeds, block sizes, branch points and release
+/// churn, a prefix-cached backend produces logits byte-identical to a
+/// cache-off backend — for the suffix-only prefill after a hit *and* for
+/// every subsequent decode step — while its refcount audit holds at every
+/// round and the pool drains to empty at the end.
+#[test]
+fn prop_prefix_cache_parity_and_refcount_drain() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(0xCAFE_0000 ^ seed);
+        let model = random_transformer(&ModelConfig::tiny(), 21 + seed);
+        let vocab = model.cfg.vocab;
+        let bt = [4usize, 8, 16][rng.below(3)];
+        let mut cached =
+            ReferenceBackend::with_kv(model.clone(), KvPoolConfig::paged(96, bt, true));
+        let mut plain = ReferenceBackend::with_kv(model, KvPoolConfig::paged(96, bt, false));
+
+        // A family of prompts sharing a base prefix, branching at random
+        // (block-aligned and unaligned) points.
+        let base: Vec<usize> = (0..64).map(|_| rng.below(vocab)).collect();
+        let mut alive: Vec<u64> = Vec::new();
+        for round in 0..10u64 {
+            // Bound concurrent reservations so `begin` never over-budgets.
+            while alive.len() >= 3 {
+                let gone = alive.remove(rng.below(alive.len()));
+                cached.end_request(gone);
+                plain.end_request(gone);
+            }
+            let id = 100 * (seed + 1) + round;
+            let branch = 1 + rng.below(base.len() - 1);
+            let mut prompt = base[..branch].to_vec();
+            for _ in 0..1 + rng.below(12) {
+                prompt.push(rng.below(vocab));
+            }
+            let budget = prompt.len() + 4;
+            let hit = cached.begin_request_for(id, &prompt, budget).expect("begin cached");
+            assert!(hit < prompt.len(), "seed {seed}: a hit must leave the last token");
+            assert!(
+                hit % bt == 0 || hit == prompt.len() - 1,
+                "seed {seed}: hit {hit} neither block-aligned nor the cap"
+            );
+            plain.begin_request_for(id, &prompt, budget).expect("begin plain");
+
+            let toks: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+            let warm = prefill_in_chunks(&mut cached, id, &toks[hit..], hit, &mut rng);
+            let cold = prefill_in_chunks(&mut plain, id, &toks, 0, &mut rng);
+            assert_eq!(warm, cold, "seed {seed} round {round}: suffix prefill diverged");
+
+            let mut pos = prompt.len();
+            for step in 0..3 {
+                let t = rng.below(vocab) as i32;
+                let a = cached.decode_step(id, t, pos as i32).expect("decode cached");
+                let b = plain.decode_step(id, t, pos as i32).expect("decode plain");
+                assert_eq!(a, b, "seed {seed} round {round} step {step}: decode diverged");
+                pos += 1;
+            }
+            alive.push(id);
+            // Release churn: finished requests publish their prefixes,
+            // growing (and deduplicating) the radix index mid-trace.
+            if rng.below(2) == 0 {
+                let gone = alive.remove(rng.below(alive.len()));
+                cached.end_request(gone);
+                plain.end_request(gone);
+            }
+            cached.pool().debug_validate();
+            plain.pool().debug_validate();
+        }
+        for id in alive {
+            cached.end_request(id);
+            plain.end_request(id);
+        }
+        // Deterministic hit check: publish the full base prompt, then read
+        // it straight back — the republished prefix must hit.
+        let base_toks: Vec<i32> = base.iter().map(|&t| t as i32).collect();
+        let pub_id = 9_000 + seed;
+        let h = cached.begin_request_for(pub_id, &base, base.len() + 2).expect("publisher");
+        prefill_in_chunks(&mut cached, pub_id, &base_toks[h..], h, &mut rng);
+        cached.end_request(pub_id);
+        let h = cached.begin_request_for(pub_id + 100, &base, base.len() + 2).expect("reader");
+        assert!(h >= bt, "seed {seed}: republished base must hit at least one block, got {h}");
+        cached.end_request(pub_id + 100);
+
+        // Refcounts never leak: with every request finished only the
+        // prefix index holds blocks, and dropping it drains the pool.
+        assert_eq!(cached.requests_in_use(), 0, "seed {seed}");
+        assert_eq!(plain.pool().blocks_in_use(), 0, "seed {seed}: cache-off pool must drain");
+        cached.clear_prefix_index();
+        assert_eq!(cached.pool().blocks_in_use(), 0, "seed {seed}: pool must drain to empty");
+        cached.pool().debug_validate();
+        let stats = cached.kv_stats();
+        assert_eq!(stats.prefix_lookups, 12, "seed {seed}: one lookup per request");
+        assert!(stats.prefix_hits > 0, "seed {seed}: the republished base must have hit");
+    }
+}
+
+/// COW: a reader that diverges inside a shared (published) block must
+/// write a private copy — later readers of the same prefix, and a cold
+/// cache-off run, still see the pristine bytes.
+#[test]
+fn cow_divergence_never_corrupts_the_published_prefix() {
+    let model = random_transformer(&ModelConfig::tiny(), 33);
+    let mut b = ReferenceBackend::with_kv(model.clone(), KvPoolConfig::paged(64, 8, true));
+    let mut cold = ReferenceBackend::with_kv(model, KvPoolConfig::paged(64, 8, false));
+    let prompt: Vec<usize> = (0..16).map(|i| 40 + i).collect();
+    let toks: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+
+    // Publisher: compute the whole prompt, release (publishes 2 blocks).
+    b.begin_request_for(1, &prompt, 24).unwrap();
+    let v1 = b.prefill_chunk(1, &toks, 0).unwrap();
+    b.end_request(1);
+
+    // Reader A: hit capped at 15 — position 15 lands inside the shared
+    // tail block, so its first write copy-on-writes. A then decodes a
+    // divergent continuation into its private blocks.
+    let hit = b.begin_request_for(2, &prompt, 24).unwrap();
+    assert_eq!(hit, 15, "16-token prompt over 8-token blocks caps at 15");
+    let v2 = b.prefill_chunk(2, &toks[15..], 15).unwrap();
+    assert_eq!(v2, v1, "reader A's capped prefill must match the publisher");
+    for (i, t) in [9i32, 8, 7].iter().enumerate() {
+        b.decode_step(2, *t, (16 + i) as i32).unwrap();
+    }
+
+    // Reader B (publisher still shared, A still alive and diverged): the
+    // prefix must be pristine.
+    let hit = b.begin_request_for(3, &prompt, 24).unwrap();
+    assert_eq!(hit, 15);
+    let v3 = b.prefill_chunk(3, &toks[15..], 15).unwrap();
+    cold.begin_request_for(4, &prompt, 24).unwrap();
+    let vc = cold.prefill_chunk(4, &toks, 0).unwrap();
+    assert_eq!(v3, vc, "reader A's divergent writes leaked into the shared prefix");
+    b.pool().debug_validate();
+
+    b.end_request(2);
+    b.end_request(3);
+    b.clear_prefix_index();
+    assert_eq!(b.pool().blocks_in_use(), 0);
+}

@@ -9,6 +9,7 @@ use tman::coordinator::engine::Engine;
 use tman::coordinator::server::{
     synthetic_trace, ClosedLoopOpts, ServeOpts, Server, TraceProfile, TraceRequest,
 };
+use tman::kvpool::KvPoolConfig;
 use tman::model::config::ModelConfig;
 use tman::model::kv_cache::KvCache;
 use tman::model::weights::random_transformer;
@@ -20,6 +21,16 @@ const MODEL_SEED: u64 = 42;
 fn engine_with(chunk: usize, kv_slots: usize) -> Engine {
     let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
     Engine::reference(model, SocConfig::oneplus12(), chunk, 4, kv_slots).expect("engine")
+}
+
+/// A paged engine with the same token capacity as `kv_slots` whole-sequence
+/// slots, at `block_tokens`-granular blocks.
+fn paged_engine(chunk: usize, kv_slots: usize, block_tokens: usize, prefix: bool) -> Engine {
+    let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
+    let max_seq = model.cfg.max_seq;
+    let blocks = kv_slots * max_seq.div_ceil(block_tokens);
+    let kv = KvPoolConfig::paged(blocks, block_tokens, prefix);
+    Engine::reference_paged(model, SocConfig::oneplus12(), chunk, 4, kv).expect("engine")
 }
 
 fn tiny_engine(chunk: usize) -> Engine {
@@ -65,17 +76,20 @@ fn mixed_trace_completes_every_request() {
         let submitted = trace.iter().find(|t| t.id == c.id).unwrap();
         assert_eq!(c.prompt_tokens, submitted.prompt.len());
         assert_eq!(
-            c.prefilled_tokens, c.prompt_tokens,
+            c.prefilled_tokens + c.cached_tokens,
+            c.prompt_tokens,
             "req {}: prefill work must equal the prompt exactly (no redo, no skip)",
             c.id
         );
+        assert_eq!(c.cached_tokens, 0, "req {}: no prefix cache on this engine", c.id);
         assert!(c.generated_tokens > 0, "req {} generated nothing", c.id);
         assert!(c.generated_tokens <= submitted.max_new_tokens);
         assert!(c.queue_wait_us >= 0.0);
         assert!(c.ttft_us >= c.queue_wait_us);
         assert!(c.finish_us >= c.arrival_us);
         assert!(c.sim_prefill_us > 0.0 && c.sim_decode_us > 0.0);
-        assert!(c.energy_j > 0.0);
+        assert!(c.energy_j() > 0.0, "kernel-attributed energy must be positive");
+        assert!(c.energy_prefill_j > 0.0 && c.energy_decode_j > 0.0);
     }
     assert!(fleet.makespan_us > 0.0);
     assert!(fleet.throughput_tps() > 0.0);
@@ -274,6 +288,107 @@ fn decode_batches_report_kernel_derived_cost() {
         wide.decode_batch_sim_us,
         narrow.decode_batch_sim_us
     );
+}
+
+#[test]
+fn paged_engine_matches_slot_engine_byte_for_byte() {
+    // Equal token capacity: 4 whole-sequence slots vs 64 × 16-token
+    // blocks, prefix cache off. Token-budget admission may reorder work
+    // (more short requests resident at once), but every request's output
+    // must be byte-identical — block translation is invisible to the
+    // numerics.
+    let trace = synthetic_trace(16, 11, &TraceProfile::tiny());
+    let slots = Server::new(engine_with(16, 4), ServeOpts { max_batch: 4, ..Default::default() })
+        .run(&trace)
+        .expect("slot run");
+    let paged = Server::new(
+        paged_engine(16, 4, 16, false),
+        ServeOpts { max_batch: 4, ..Default::default() },
+    )
+    .run(&trace)
+    .expect("paged run");
+    assert_eq!(slots.completions.len(), paged.completions.len());
+    for c in &paged.completions {
+        let s = slots.completions.iter().find(|s| s.id == c.id).expect("same ids");
+        assert_eq!(c.text, s.text, "req {}: paged output diverged", c.id);
+        assert_eq!(c.generated_tokens, s.generated_tokens);
+        assert_eq!(c.cached_tokens, 0);
+    }
+    assert_eq!(paged.prefix_lookups, 0, "cache off: no lookups");
+    assert!(paged.kv_blocks_high_water > 0);
+    assert!(paged.kv_blocks_high_water <= paged.kv_capacity_blocks);
+    assert_eq!(paged.kv_block_tokens, 16);
+}
+
+#[test]
+fn prefix_cache_reuses_shared_system_prompts() {
+    // A shared-system-prompt trace on a prefix-cached engine: outputs
+    // byte-identical to cache-off, nonzero hit rate, measured prefill µs
+    // reduced, savings accounted — the acceptance shape of the paged-KV
+    // subsystem.
+    let profile = TraceProfile::tiny().with_shared_prefix(48);
+    let trace = synthetic_trace(16, 5, &profile);
+    let opts = || ServeOpts { max_batch: 4, ..Default::default() };
+    let off = Server::new(paged_engine(16, 6, 16, false), opts()).run(&trace).expect("off");
+    let on = Server::new(paged_engine(16, 6, 16, true), opts()).run(&trace).expect("on");
+    assert_eq!(off.completions.len(), on.completions.len());
+    for c in &on.completions {
+        let s = off.completions.iter().find(|s| s.id == c.id).expect("same ids");
+        assert_eq!(c.text, s.text, "req {}: the prefix cache changed an output", c.id);
+        assert_eq!(c.prefilled_tokens + c.cached_tokens, c.prompt_tokens, "req {}", c.id);
+    }
+    assert_eq!(on.prefix_lookups, 16, "one lookup per request");
+    assert!(on.prefix_hits > 0, "the shared system prompt must hit");
+    assert!(on.prefix_hit_tokens >= 16, "hits are whole blocks");
+    assert!(on.completions.iter().any(|c| c.cached_tokens > 0));
+    assert!(on.cache_saved_prefill_us > 0.0, "skipped slices must be credited");
+    let on_prefill: f64 = on.completions.iter().map(|c| c.sim_prefill_us).sum();
+    let off_prefill: f64 = off.completions.iter().map(|c| c.sim_prefill_us).sum();
+    assert!(
+        on_prefill < off_prefill,
+        "the cache must reduce measured prefill time: {on_prefill} !< {off_prefill}"
+    );
+    assert_eq!(off.prefix_hits, 0);
+    assert!((off.cache_saved_prefill_us).abs() < 1e-9, "cache off saves nothing");
+}
+
+#[test]
+fn prefix_cache_survives_preemption_and_reruns_identically() {
+    // The canonical preemption shape (long low-priority document + urgent
+    // short prompt), both sharing a system prompt, served twice on one
+    // prefix-cached engine: the second run hits the published prefix,
+    // outputs stay byte-identical, and no KV leaks.
+    let shared = "the shared system prompt that every request carries. ";
+    let mk = || {
+        vec![
+            TraceRequest {
+                id: 1,
+                arrival_us: 0.0,
+                priority: 4,
+                prompt: format!("{shared}{}", "x".repeat(60)),
+                max_new_tokens: 4,
+            },
+            TraceRequest {
+                id: 2,
+                arrival_us: 1e-6,
+                priority: 0,
+                prompt: format!("{shared}hi"),
+                max_new_tokens: 4,
+            },
+        ]
+    };
+    let mut server = Server::new(paged_engine(16, 4, 16, true), ServeOpts::default());
+    let a = server.run(&mk()).expect("first run");
+    assert!(a.preemptions >= 1, "the document must still be preempted");
+    assert_eq!(a.prefix_hits, 0, "cold cache on the first run");
+    let b = server.run(&mk()).expect("second run");
+    assert!(b.prefix_hits > 0, "the second run must hit the published prefix");
+    assert!(b.cache_saved_prefill_us > 0.0);
+    for c in &b.completions {
+        let first = a.completions.iter().find(|f| f.id == c.id).expect("same ids");
+        assert_eq!(c.text, first.text, "req {}: cache hits changed the output", c.id);
+    }
+    assert_eq!(server.engine().kv_slots_in_use(), 0, "no KV may leak across runs");
 }
 
 #[test]
