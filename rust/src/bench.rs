@@ -3,8 +3,21 @@
 //!
 //! Provides wall-clock measurement with warmup and a fixed-width table
 //! printer so every bench regenerates its paper table/figure as aligned
-//! rows on stdout (captured into bench_output.txt by `make bench`).
+//! rows on stdout (captured into bench_output.txt by `make bench`), plus
+//! the machine-readable side of the CI perf trajectory: the versioned
+//! `tman bench --json` cost report ([`plan_cost_report`]), the flat
+//! one-key-per-line JSON documents `BENCH_serving.json` uses
+//! ([`FlatJson`] / [`parse_flat_json`]), and the perf-regression gate
+//! that compares a current document against a committed baseline
+//! ([`compare_benchmarks`]).
 
+use crate::coordinator::engine::Engine;
+use crate::kernels::plan::PlanCosts;
+use crate::model::config::ModelConfig;
+use crate::model::weights;
+use crate::npu::config::SocConfig;
+use crate::quant::formats::QuantFormat;
+use anyhow::{bail, Result};
 use std::time::Instant;
 
 /// Measure `f`'s median wall time over `iters` runs after `warmup` runs, µs.
@@ -67,6 +80,263 @@ pub fn banner(title: &str) {
     println!("\n=== {title} ===");
 }
 
+fn json_f(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Machine-readable cost snapshot of the unified plan surface (`tman bench
+/// --json`): pipelined prefill mpGEMM and batched-decode GEMV latencies
+/// for the paper's projection shapes, plus the tiny reference deployment's
+/// engine-level prices. Hand-rolled JSON (no serde offline).
+///
+/// Schema 2 contract: key order and row order are part of the format —
+/// the document is byte-stable for a given build, so CI can diff cost
+/// trajectories across commits without a JSON-aware differ. Rows appear
+/// in the fixed shape order below; every float is printed with three
+/// decimals.
+pub fn plan_cost_report() -> Result<String> {
+    let soc = SocConfig::oneplus12();
+    let npu = &soc.npu;
+    let shapes = [
+        (4096usize, 4096usize, QuantFormat::tman_w4a16()),
+        (14336, 4096, QuantFormat::tman_w4a16()),
+        (4096, 14336, QuantFormat::tman_w4a16()),
+        (2560, 2560, QuantFormat::tman_w2a16()),
+    ];
+    let mut prefill = Vec::new();
+    let mut decode = Vec::new();
+    for (m, k, fmt) in shapes {
+        let pc = PlanCosts::for_shape(npu, fmt, m, k, 128);
+        prefill.push(format!(
+            "{{\"m\":{m},\"k\":{k},\"fmt\":\"{fmt}\",\"n\":128,\"pipelined_us\":{}}}",
+            json_f(pc.prefill_us(npu, 128))
+        ));
+        let curve: Vec<String> = pc.decode_curve(npu, 8).into_iter().map(json_f).collect();
+        decode.push(format!(
+            "{{\"m\":{m},\"k\":{k},\"fmt\":\"{fmt}\",\"batched_us\":[{}]}}",
+            curve.join(",")
+        ));
+    }
+    // Engine-level prices for the tiny reference deployment the serving
+    // tests and CI smokes run (chunk 16, W4, 8 KV slots).
+    let model = weights::random_transformer(&ModelConfig::tiny(), 0);
+    let engine = Engine::reference(model, SocConfig::oneplus12(), 16, 4, 8)?;
+    let widths: Vec<String> =
+        (1..=8).map(|b| json_f(engine.sim_decode_batch_proj_us(b))).collect();
+    let eng = format!(
+        "{{\"model\":\"tiny\",\"chunk\":16,\"prefill_chunk_us\":{},\"decode_proj_us\":[{}]}}",
+        json_f(engine.plan_prefill_chunk_us(16)),
+        widths.join(",")
+    );
+    Ok(format!(
+        "{{\"schema\":2,\"soc\":\"{}\",\"prefill_gemm\":[{}],\"batched_decode\":[{}],\"engine\":{}}}",
+        soc.name,
+        prefill.join(","),
+        decode.join(","),
+        eng
+    ))
+}
+
+/// Builder for the flat one-key-per-line JSON documents the serving
+/// snapshot emits (`BENCH_serving.json`). Keys are dotted paths
+/// (`"flash_shed.p0.ttft_p99_ms"`), values are numbers only, and key
+/// order is exactly insertion order — so the document both diffs cleanly
+/// line-by-line and round-trips through the deliberately minimal
+/// [`parse_flat_json`] without a real JSON library.
+pub struct FlatJson {
+    lines: Vec<String>,
+}
+
+impl FlatJson {
+    /// Start a document; `schema` becomes its first key.
+    pub fn new(schema: usize) -> Self {
+        let mut doc = Self { lines: Vec::new() };
+        doc.count("schema", schema);
+        doc
+    }
+
+    fn check_key(key: &str) {
+        assert!(
+            !key.is_empty()
+                && key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.'),
+            "flat JSON keys are dotted [A-Za-z0-9_] paths, got {key:?}"
+        );
+    }
+
+    /// Append a float metric (6 decimals — enough for µs-scale latencies).
+    pub fn num(&mut self, key: &str, v: f64) {
+        Self::check_key(key);
+        assert!(v.is_finite(), "non-finite value for {key}");
+        self.lines.push(format!("\"{key}\": {v:.6}"));
+    }
+
+    /// Append an integer count.
+    pub fn count(&mut self, key: &str, v: usize) {
+        Self::check_key(key);
+        self.lines.push(format!("\"{key}\": {v}"));
+    }
+
+    pub fn finish(self) -> String {
+        format!("{{\n{}\n}}", self.lines.join(",\n"))
+    }
+}
+
+/// Parse a flat JSON document ([`FlatJson`] output): one `{...}` object,
+/// quoted dotted keys, numeric values, no nesting. Returns key/value
+/// pairs in document order; rejects duplicates and anything non-flat.
+pub fn parse_flat_json(doc: &str) -> Result<Vec<(String, f64)>> {
+    let s = doc.trim();
+    let Some(body) = s.strip_prefix('{').and_then(|t| t.strip_suffix('}')) else {
+        bail!("flat JSON must be a single {{...}} object");
+    };
+    let mut out: Vec<(String, f64)> = Vec::new();
+    for part in body.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = part.split_once(':') else {
+            bail!("malformed flat JSON entry {part:?}");
+        };
+        let k = k.trim();
+        let Some(key) = k.strip_prefix('"').and_then(|t| t.strip_suffix('"')) else {
+            bail!("flat JSON key must be quoted, got {k:?}");
+        };
+        if out.iter().any(|(seen, _)| seen == key) {
+            bail!("duplicate flat JSON key {key:?}");
+        }
+        let val: f64 = v
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("non-numeric value for {key:?}: {v:?}"))?;
+        out.push((key.to_string(), val));
+    }
+    Ok(out)
+}
+
+/// Which way a serving metric gets *worse*, keyed on its flat-JSON name.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Direction {
+    HigherWorse,
+    LowerWorse,
+    /// Tracked for the record but never gated: raw counts, the schema tag,
+    /// and the whole `flash_noshed.*` scenario — it exists to *diverge*
+    /// (it is the no-admission-control control arm), so gating it would
+    /// punish exactly the contrast the snapshot demonstrates.
+    Info,
+}
+
+fn direction_of(key: &str) -> Direction {
+    if key == "schema" || key == "bootstrap" || key.starts_with("flash_noshed.") {
+        Direction::Info
+    } else if key.contains("ttft")
+        || key.ends_with("_ms")
+        || key.ends_with(".shed_rate")
+        || key.ends_with(".deadline_misses")
+    {
+        Direction::HigherWorse
+    } else if key.contains("goodput")
+        || key.contains("throughput")
+        || key.contains("occupancy")
+        || key.contains("hit_rate")
+    {
+        Direction::LowerWorse
+    } else {
+        Direction::Info
+    }
+}
+
+/// Perf-regression gate: compare a current serving snapshot against the
+/// committed baseline, both in flat-JSON form. A gated metric fails when
+/// it moves more than `tolerance` (relative) in its worse direction; a
+/// zero baseline on a higher-is-worse metric (e.g. `deadline_misses`)
+/// demands an exact zero now. Baselines carrying a truthy `bootstrap`
+/// key pass with a notice — they mark a placeholder committed before the
+/// first real CI run, to be replaced by the refresh command in ci.yml.
+///
+/// Returns the human-readable comparison report; `Err` lists every
+/// violated metric (the CI job's failure output).
+pub fn compare_benchmarks(baseline: &str, current: &str, tolerance: f64) -> Result<String> {
+    let base = parse_flat_json(baseline)?;
+    let cur = parse_flat_json(current)?;
+    let get = |doc: &[(String, f64)], key: &str| {
+        doc.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    };
+
+    if get(&base, "bootstrap").is_some_and(|v| v != 0.0) {
+        return Ok(format!(
+            "baseline is a bootstrap placeholder — gate passes with notice; refresh it \
+             from a real run ({} current metric(s) recorded)",
+            cur.len()
+        ));
+    }
+    let (bs, cs) = (get(&base, "schema"), get(&cur, "schema"));
+    if bs != cs {
+        bail!("schema mismatch: baseline {bs:?} vs current {cs:?}");
+    }
+
+    let mut report = String::new();
+    let mut violations: Vec<String> = Vec::new();
+    let mut gated = 0usize;
+    for (key, b) in &base {
+        let dir = direction_of(key);
+        if dir == Direction::Info {
+            continue;
+        }
+        let Some(c) = get(&cur, key) else {
+            violations.push(format!("{key}: present in baseline but missing from current"));
+            continue;
+        };
+        gated += 1;
+        let worse = if b.abs() < 1e-9 {
+            // Can't take a relative delta off zero: higher-is-worse
+            // metrics must stay at zero, lower-is-worse can't regress.
+            dir == Direction::HigherWorse && c > 1e-9
+        } else {
+            let rel = (c - b) / b.abs();
+            match dir {
+                Direction::HigherWorse => rel > tolerance,
+                Direction::LowerWorse => rel < -tolerance,
+                Direction::Info => false,
+            }
+        };
+        let pct = if b.abs() < 1e-9 {
+            f64::NAN
+        } else {
+            (c - b) / b.abs() * 100.0
+        };
+        let arrow = match dir {
+            Direction::HigherWorse => "<=",
+            _ => ">=",
+        };
+        let line = format!(
+            "{verdict} {key}: baseline {b:.6} -> current {c:.6} ({pct:+.1}%, want {arrow} {tol:.0}% drift)",
+            verdict = if worse { "FAIL" } else { "ok  " },
+            tol = tolerance * 100.0,
+        );
+        report.push_str(&line);
+        report.push('\n');
+        if worse {
+            violations.push(line);
+        }
+    }
+    if gated == 0 {
+        bail!("no gated metrics in baseline — wrong file?");
+    }
+    if !violations.is_empty() {
+        bail!(
+            "perf regression gate failed ({}/{gated} metric(s)):\n{}",
+            violations.len(),
+            violations.join("\n")
+        );
+    }
+    report.push_str(&format!(
+        "perf gate passed: {gated} metric(s) within {:.0}%\n",
+        tolerance * 100.0
+    ));
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +359,124 @@ mod tests {
     fn table_width_checked() {
         let mut t = Table::new(&["a"]);
         t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn plan_cost_report_is_versioned_and_deterministic() {
+        let a = plan_cost_report().expect("report");
+        let b = plan_cost_report().expect("report");
+        assert_eq!(a, b, "two calls must produce byte-identical documents");
+        assert!(a.starts_with("{\"schema\":2,"), "schema tag leads the document: {a}");
+        for key in ["\"prefill_gemm\":[", "\"batched_decode\":[", "\"engine\":{"] {
+            assert!(a.contains(key), "missing section {key}");
+        }
+        // Row order is the documented shape order: W4 4096², 14336×4096,
+        // 4096×14336, then the W2 2560² row.
+        let pos = |needle: &str| a.find(needle).unwrap_or_else(|| panic!("missing {needle}"));
+        assert!(pos("\"m\":4096,\"k\":4096") < pos("\"m\":14336"));
+        assert!(pos("\"m\":14336") < pos("\"m\":4096,\"k\":14336"));
+        assert!(pos("\"m\":4096,\"k\":14336") < pos("\"m\":2560"));
+    }
+
+    #[test]
+    fn flat_json_round_trips_in_order() {
+        let mut doc = FlatJson::new(1);
+        doc.num("steady.ttft_p50_ms", 1.25);
+        doc.count("steady.submitted", 48);
+        doc.num("flash_shed.p0.ttft_p99_ms", 0.5);
+        let text = doc.finish();
+        let pairs = parse_flat_json(&text).expect("round trip");
+        assert_eq!(
+            pairs,
+            vec![
+                ("schema".to_string(), 1.0),
+                ("steady.ttft_p50_ms".to_string(), 1.25),
+                ("steady.submitted".to_string(), 48.0),
+                ("flash_shed.p0.ttft_p99_ms".to_string(), 0.5),
+            ]
+        );
+    }
+
+    #[test]
+    fn flat_json_parser_rejects_malformed_documents() {
+        for bad in [
+            "not json",
+            "{\"a\": 1",
+            "{\"a\": \"str\"}",
+            "{a: 1}",
+            "{\"a\": 1, \"a\": 2}",
+        ] {
+            assert!(parse_flat_json(bad).is_err(), "must reject {bad:?}");
+        }
+        assert_eq!(parse_flat_json("{}").expect("empty object"), vec![]);
+    }
+
+    fn doc(pairs: &[(&str, f64)]) -> String {
+        let mut d = FlatJson::new(1);
+        for (k, v) in pairs {
+            d.num(k, *v);
+        }
+        d.finish()
+    }
+
+    #[test]
+    fn gate_passes_identical_documents_and_reports_each_metric() {
+        let d = doc(&[("steady.p0.ttft_p99_ms", 2.0), ("steady.goodput_tps", 100.0)]);
+        let report = compare_benchmarks(&d, &d, 0.15).expect("identical must pass");
+        assert!(report.contains("perf gate passed: 2 metric(s)"), "{report}");
+    }
+
+    #[test]
+    fn gate_fails_on_latency_regression_but_not_improvement() {
+        let base = doc(&[("steady.p0.ttft_p99_ms", 2.0), ("steady.goodput_tps", 100.0)]);
+        let slow = doc(&[("steady.p0.ttft_p99_ms", 2.4), ("steady.goodput_tps", 100.0)]);
+        let err = compare_benchmarks(&base, &slow, 0.15).expect_err("20% p99 regression");
+        assert!(err.to_string().contains("steady.p0.ttft_p99_ms"), "{err}");
+        let fast = doc(&[("steady.p0.ttft_p99_ms", 1.0), ("steady.goodput_tps", 130.0)]);
+        compare_benchmarks(&base, &fast, 0.15).expect("improvements pass");
+    }
+
+    #[test]
+    fn gate_fails_on_goodput_drop_and_missing_metric() {
+        let base = doc(&[("flash_shed.goodput_tps", 100.0), ("flash_shed.shed_rate", 0.25)]);
+        let slow = doc(&[("flash_shed.goodput_tps", 80.0), ("flash_shed.shed_rate", 0.25)]);
+        assert!(compare_benchmarks(&base, &slow, 0.15).is_err(), "20% goodput drop");
+        let missing = doc(&[("flash_shed.goodput_tps", 100.0)]);
+        let err = compare_benchmarks(&base, &missing, 0.15).expect_err("missing metric");
+        assert!(err.to_string().contains("missing from current"), "{err}");
+    }
+
+    #[test]
+    fn gate_holds_zero_baselines_exactly_and_skips_the_control_arm() {
+        let base = doc(&[
+            ("flash_shed.deadline_misses", 0.0),
+            ("flash_noshed.p0.ttft_p99_ms", 5.0),
+            ("flash_shed.goodput_tps", 50.0),
+        ]);
+        let regressed = doc(&[
+            ("flash_shed.deadline_misses", 1.0),
+            ("flash_noshed.p0.ttft_p99_ms", 5.0),
+            ("flash_shed.goodput_tps", 50.0),
+        ]);
+        let err = compare_benchmarks(&base, &regressed, 0.15).expect_err("a miss appeared");
+        assert!(err.to_string().contains("deadline_misses"), "{err}");
+        // The no-shed control arm may diverge arbitrarily without tripping
+        // the gate — it is the contrast, not the contract.
+        let control_moved = doc(&[
+            ("flash_shed.deadline_misses", 0.0),
+            ("flash_noshed.p0.ttft_p99_ms", 500.0),
+            ("flash_shed.goodput_tps", 50.0),
+        ]);
+        compare_benchmarks(&base, &control_moved, 0.15).expect("control arm is ungated");
+    }
+
+    #[test]
+    fn gate_passes_bootstrap_baselines_with_a_notice() {
+        let mut b = FlatJson::new(1);
+        b.count("bootstrap", 1);
+        b.num("steady.p0.ttft_p99_ms", 999.0);
+        let cur = doc(&[("steady.p0.ttft_p99_ms", 2.0)]);
+        let report = compare_benchmarks(&b.finish(), &cur, 0.15).expect("bootstrap passes");
+        assert!(report.contains("bootstrap placeholder"), "{report}");
     }
 }

@@ -128,6 +128,10 @@ pub struct RequestCompletion {
     /// Prompt tokens served from the prefix cache (shared KV blocks) —
     /// never recomputed.
     pub cached_tokens: usize,
+    /// TTFT service-level objective (µs of slack from arrival to first
+    /// token), when this request's class carries one. None = best-effort
+    /// batch work with no latency deadline.
+    pub ttft_slo_us: Option<f64>,
     pub text: String,
 }
 
@@ -136,6 +140,26 @@ impl RequestCompletion {
     pub fn energy_j(&self) -> f64 {
         self.energy_prefill_j + self.energy_decode_j
     }
+
+    /// Whether this request carried a TTFT SLO and blew it. A request
+    /// without an SLO never misses.
+    pub fn missed_deadline(&self) -> bool {
+        self.ttft_slo_us.is_some_and(|slo| self.ttft_us > slo)
+    }
+}
+
+/// Per-priority-class latency breakdown of a serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassStats {
+    /// Priority value (smaller = more urgent).
+    pub priority: u8,
+    /// Requests of this class that completed.
+    pub completed: usize,
+    pub generated_tokens: usize,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// Completed requests of this class that blew their TTFT SLO.
+    pub deadline_misses: usize,
 }
 
 /// Aggregate metrics for one serving run, in finish order.
@@ -182,6 +206,19 @@ pub struct FleetMetrics {
     pub kv_block_tokens: usize,
     /// Most KV blocks simultaneously resident over the run.
     pub kv_blocks_high_water: usize,
+    /// Requests offered to the serving loop (arrivals), whatever became of
+    /// them. The admission invariant the loop cross-checks:
+    /// `completions.len() + shed + rejected == submitted`.
+    pub submitted: usize,
+    /// Requests turned away at enqueue time (bounded admission queue full
+    /// and nothing displaceable, or deadline already blown on arrival).
+    pub rejected: usize,
+    /// Admitted-then-dropped requests: shed at schedule time because their
+    /// TTFT deadline expired before (or while) they reached the NPU, or
+    /// displaced from the queue by a more urgent arrival.
+    pub shed: usize,
+    /// Shed counts broken down by priority class, ascending priority value.
+    pub shed_by_priority: Vec<(u8, usize)>,
 }
 
 impl FleetMetrics {
@@ -268,8 +305,68 @@ impl FleetMetrics {
         self.prefix_hits as f64 / self.prefix_lookups as f64
     }
 
+    /// Requests the loop accepted and ran to completion:
+    /// `submitted - shed - rejected`. Equals `completions.len()` on a
+    /// drained run — the serving loop asserts exactly that.
+    pub fn admitted(&self) -> usize {
+        self.submitted - self.shed - self.rejected
+    }
+
+    /// Fraction of submitted requests shed (0.0 for an empty run).
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            return 0.0;
+        }
+        self.shed as f64 / self.submitted as f64
+    }
+
+    /// Completed requests that carried a TTFT SLO and blew it.
+    pub fn deadline_misses(&self) -> usize {
+        self.completions.iter().filter(|c| c.missed_deadline()).count()
+    }
+
+    /// Goodput: SLO-attained generated tokens over the simulated makespan.
+    /// A completion without an SLO always counts (best-effort work has no
+    /// deadline to miss); one that missed its deadline contributes nothing
+    /// — late tokens are waste, which is exactly what no-shed overload
+    /// maximizes.
+    pub fn goodput_tps(&self) -> f64 {
+        let good: usize = self
+            .completions
+            .iter()
+            .filter(|c| !c.missed_deadline())
+            .map(|c| c.generated_tokens)
+            .sum();
+        good as f64 / (self.makespan_us / 1e6).max(1e-12)
+    }
+
+    /// Per-priority-class breakdown over the completions, ascending
+    /// priority value (most urgent class first). Deterministic: class
+    /// order and every figure derive only from the completion list.
+    pub fn class_stats(&self) -> Vec<ClassStats> {
+        let mut classes: Vec<u8> = self.completions.iter().map(|c| c.priority).collect();
+        classes.sort_unstable();
+        classes.dedup();
+        classes
+            .into_iter()
+            .map(|p| {
+                let of_class: Vec<&RequestCompletion> =
+                    self.completions.iter().filter(|c| c.priority == p).collect();
+                let ttft: Vec<f64> = of_class.iter().map(|c| c.ttft_us).collect();
+                ClassStats {
+                    priority: p,
+                    completed: of_class.len(),
+                    generated_tokens: of_class.iter().map(|c| c.generated_tokens).sum(),
+                    ttft_p50_ms: percentile(&ttft, 50.0) / 1e3,
+                    ttft_p99_ms: percentile(&ttft, 99.0) / 1e3,
+                    deadline_misses: of_class.iter().filter(|c| c.missed_deadline()).count(),
+                }
+            })
+            .collect()
+    }
+
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests        : {} completed, {} preemption(s), {} resumed\n\
              tokens          : {} prompt + {} generated\n\
              decode batching : {} batches, {:.2} mean occupancy, {} eviction(s), \
@@ -307,7 +404,31 @@ impl FleetMetrics {
             self.queue_wait_p99_ms(),
             self.total_energy_j(),
             self.energy_per_token_j(),
-        )
+        );
+        if self.submitted > 0 {
+            out.push_str(&format!(
+                "\nadmission       : {} submitted = {} served + {} shed + {} rejected \
+                 ({:.0}% shed)\n\
+                 SLO             : {} deadline miss(es), goodput {:.1} tok/s",
+                self.submitted,
+                self.completions.len(),
+                self.shed,
+                self.rejected,
+                100.0 * self.shed_rate(),
+                self.deadline_misses(),
+                self.goodput_tps(),
+            ));
+            for (p, n) in &self.shed_by_priority {
+                out.push_str(&format!("\n  shed class p{p}  : {n} request(s)"));
+            }
+        }
+        for cs in self.class_stats() {
+            out.push_str(&format!(
+                "\nclass p{}        : {} done, TTFT p50 {:.3} ms / p99 {:.3} ms, {} miss(es)",
+                cs.priority, cs.completed, cs.ttft_p50_ms, cs.ttft_p99_ms, cs.deadline_misses,
+            ));
+        }
+        out
     }
 }
 
@@ -351,6 +472,26 @@ mod tests {
         assert_eq!(percentile(&[7.5], 99.0), 7.5);
     }
 
+    #[test]
+    fn percentile_edge_cases() {
+        // Empty sample: every quantile is the 0.0 sentinel.
+        for q in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[], q), 0.0);
+        }
+        // Single sample: every quantile is that sample.
+        for q in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[42.5], q), 42.5);
+        }
+        // All-equal sample: every quantile is the common value.
+        let same = [9.0; 17];
+        for q in [0.0, 25.0, 50.0, 75.0, 99.0, 100.0] {
+            assert_eq!(percentile(&same, q), 9.0);
+        }
+        // Two samples: nearest-rank p50 is the lower, p51+ the upper.
+        assert_eq!(percentile(&[1.0, 2.0], 50.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 51.0), 2.0);
+    }
+
     fn completion(id: u64, ttft_us: f64) -> RequestCompletion {
         RequestCompletion {
             id,
@@ -368,6 +509,7 @@ mod tests {
             preempted: 0,
             prefilled_tokens: 8,
             cached_tokens: 2,
+            ttft_slo_us: None,
             text: String::new(),
         }
     }
@@ -392,6 +534,10 @@ mod tests {
             kv_capacity_blocks: 16,
             kv_block_tokens: 8,
             kv_blocks_high_water: 5,
+            submitted: 2,
+            rejected: 0,
+            shed: 0,
+            shed_by_priority: vec![],
         };
         assert_eq!(fleet.prompt_tokens(), 20);
         assert_eq!(fleet.generated_tokens(), 10);
@@ -440,9 +586,110 @@ mod tests {
             kv_capacity_blocks: 0,
             kv_block_tokens: 0,
             kv_blocks_high_water: 0,
+            submitted: 0,
+            rejected: 0,
+            shed: 0,
+            shed_by_priority: vec![],
         };
         assert_eq!(fleet.decode_batch_occupancy(), 0.0);
         assert_eq!(fleet.decode_batch_mean_us(), 0.0);
         assert_eq!(fleet.prefix_hit_rate(), 0.0);
+        assert_eq!(fleet.shed_rate(), 0.0);
+        assert_eq!(fleet.admitted(), 0);
+        assert!(fleet.class_stats().is_empty());
+        assert!(!fleet.report().contains("admission"), "empty run omits admission lines");
+    }
+
+    #[test]
+    fn deadline_misses_and_goodput_split_on_the_slo() {
+        // Three completions: no SLO (always good), SLO met, SLO missed.
+        let mut fleet = FleetMetrics {
+            completions: vec![completion(1, 5_000.0), completion(2, 1_000.0), completion(3, 4_000.0)],
+            makespan_us: 1_000_000.0,
+            wall_s: 0.1,
+            preemptions: 0,
+            resumed: 0,
+            decode_batches: 0,
+            decode_batched_steps: 0,
+            decode_evictions: 0,
+            decode_batches_executed: 0,
+            decode_batch_sim_us: 0.0,
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            prefix_hit_tokens: 0,
+            cache_saved_prefill_us: 0.0,
+            kv_capacity_blocks: 4,
+            kv_block_tokens: 8,
+            kv_blocks_high_water: 1,
+            submitted: 5,
+            rejected: 1,
+            shed: 1,
+            shed_by_priority: vec![(4, 1)],
+        };
+        fleet.completions[1].ttft_slo_us = Some(2_000.0); // met (1000 ≤ 2000)
+        fleet.completions[2].ttft_slo_us = Some(2_000.0); // missed (4000 > 2000)
+        assert!(!fleet.completions[0].missed_deadline(), "no SLO never misses");
+        assert!(!fleet.completions[1].missed_deadline());
+        assert!(fleet.completions[2].missed_deadline());
+        assert_eq!(fleet.deadline_misses(), 1);
+        assert_eq!(fleet.admitted(), 3);
+        assert!((fleet.shed_rate() - 0.2).abs() < 1e-12);
+        // Goodput: 5 tok × 2 attained completions over 1 s; throughput
+        // counts the late one too.
+        assert!((fleet.goodput_tps() - 10.0).abs() < 1e-9);
+        assert!((fleet.decode_throughput_tps() - 15.0).abs() < 1e-9);
+        let r = fleet.report();
+        assert!(r.contains("5 submitted = 3 served + 1 shed + 1 rejected (20% shed)"));
+        assert!(r.contains("1 deadline miss(es), goodput 10.0 tok/s"));
+        assert!(r.contains("shed class p4  : 1 request(s)"));
+    }
+
+    #[test]
+    fn class_stats_break_down_by_priority_in_order() {
+        let mut a = completion(1, 1_000.0);
+        a.priority = 4;
+        a.generated_tokens = 7;
+        let mut b = completion(2, 3_000.0);
+        b.priority = 0;
+        b.ttft_slo_us = Some(2_000.0); // missed
+        let mut c = completion(3, 1_500.0);
+        c.priority = 0;
+        c.ttft_slo_us = Some(2_000.0); // met
+        let fleet = FleetMetrics {
+            completions: vec![a, b, c],
+            makespan_us: 10_000.0,
+            wall_s: 0.0,
+            preemptions: 0,
+            resumed: 0,
+            decode_batches: 0,
+            decode_batched_steps: 0,
+            decode_evictions: 0,
+            decode_batches_executed: 0,
+            decode_batch_sim_us: 0.0,
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            prefix_hit_tokens: 0,
+            cache_saved_prefill_us: 0.0,
+            kv_capacity_blocks: 4,
+            kv_block_tokens: 8,
+            kv_blocks_high_water: 1,
+            submitted: 3,
+            rejected: 0,
+            shed: 0,
+            shed_by_priority: vec![],
+        };
+        let stats = fleet.class_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].priority, 0, "most urgent class first");
+        assert_eq!(stats[0].completed, 2);
+        assert_eq!(stats[0].deadline_misses, 1);
+        assert!((stats[0].ttft_p50_ms - 1.5).abs() < 1e-12);
+        assert!((stats[0].ttft_p99_ms - 3.0).abs() < 1e-12);
+        assert_eq!(stats[1].priority, 4);
+        assert_eq!(stats[1].completed, 1);
+        assert_eq!(stats[1].generated_tokens, 7);
+        assert_eq!(stats[1].deadline_misses, 0);
+        assert!(fleet.report().contains("class p0"));
+        assert!(fleet.report().contains("class p4"));
     }
 }

@@ -328,10 +328,51 @@ impl Scheduler {
         }
     }
 
-    /// Finish a request early — e.g. the serving loop's sampler hit a stop
-    /// byte mid-decode. The request leaves its phase immediately and a
+    /// Waiting requests that have not run any prefill yet (hold no KV) —
+    /// the population a bounded admission queue counts against. Preempted
+    /// requests parked in the queue with progress are *not* counted: they
+    /// were already admitted and hold blocks.
+    pub fn queued_unstarted(&self) -> usize {
+        self.queue.iter().filter(|q| q.done == 0).count()
+    }
+
+    /// Remove a queued request that never started a prefill slice
+    /// (`done == 0`, so it holds no KV). Returns false when `id` is not an
+    /// unstarted queued request — started requests must drain through
+    /// [`Scheduler::complete`] so their KV is released via `Finish`.
+    pub fn cancel_queued(&mut self, id: u64) -> bool {
+        if let Some(i) = self.queue.iter().position(|q| q.req.id == id && q.done == 0) {
+            self.queue.remove(i);
+            return true;
+        }
+        false
+    }
+
+    /// Priority-aware displacement for a bounded admission queue: remove
+    /// and return the *worst* unstarted queued request strictly outranked
+    /// by `priority` (largest priority value; youngest within a class —
+    /// its older same-class peers keep their place). Returns None when no
+    /// unstarted request is strictly below `priority`, in which case the
+    /// arriving request is the one that must be turned away.
+    pub fn displace_unstarted(&mut self, priority: u8) -> Option<u64> {
+        let idx = self
+            .queue
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| q.done == 0 && q.req.priority > priority)
+            .max_by_key(|(i, q)| (q.req.priority, *i))
+            .map(|(i, _)| i)?;
+        self.queue.remove(idx).map(|q| q.req.id)
+    }
+
+    /// Finish a request early — the serving loop's sampler hit a stop
+    /// byte mid-decode, or overload shedding dropped a request that
+    /// already holds KV. The request leaves its phase immediately and a
     /// [`WorkItem::Finish`] is emitted on the next [`Scheduler::next`]
-    /// call. Returns false (no-op) when `id` is not in an active phase.
+    /// call (the single place KV is released). Handles requests in any
+    /// KV-holding phase: decoding, prefilling, ready, or parked in the
+    /// queue with preempted-prefill progress. Returns false (no-op) when
+    /// `id` is not in any of those.
     pub fn complete(&mut self, id: u64) -> bool {
         if let Some(i) = self.decoding.iter().position(|(r, _)| r.id == id) {
             let (req, _) = self.decoding.remove(i);
@@ -350,6 +391,12 @@ impl Scheduler {
         if let Some(i) = self.ready.iter().position(|(r, _)| r.id == id) {
             let (req, _) = self.ready.remove(i).expect("index in range");
             let res = self.reserve_of(&req);
+            self.finishing.push_back((id, res));
+            return true;
+        }
+        if let Some(i) = self.queue.iter().position(|q| q.req.id == id && q.done > 0) {
+            let q = self.queue.remove(i).expect("index in range");
+            let res = self.reserve_of(&q.req);
             self.finishing.push_back((id, res));
             return true;
         }
@@ -836,6 +883,79 @@ mod tests {
             assert_eq!(s.blocks_reserved(), s.slots_held());
         }
         assert_eq!(s.finished.len(), 2);
+    }
+
+    #[test]
+    fn cancel_queued_removes_only_unstarted_requests() {
+        let mut s = Scheduler::new(64, 1, 2);
+        s.submit(req(1, 640, 1, 5));
+        s.submit(req(2, 64, 1, 3));
+        assert_eq!(s.queued_unstarted(), 2);
+        assert!(s.cancel_queued(2), "unstarted request must cancel");
+        assert_eq!(s.queued_unstarted(), 1);
+        assert!(!s.cancel_queued(2), "already gone");
+        // Start request 1's prefill, then preempt it: it parks in the queue
+        // with done > 0 and must NOT be cancellable (it holds KV).
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        s.submit(req(3, 64, 1, 0));
+        assert_eq!(s.next(), Some(WorkItem::Preempt { id: 1 }));
+        assert_eq!(s.queued_unstarted(), 1, "preempted request is not unstarted");
+        assert!(!s.cancel_queued(1), "a KV-holding request must drain via complete");
+        let items = s.drain();
+        assert_eq!(finish_order(&items), vec![3, 1]);
+        assert_eq!(s.slots_held(), 0);
+    }
+
+    #[test]
+    fn complete_drains_a_preempted_queue_entry_through_finish() {
+        let mut s = Scheduler::new(64, 1, 2);
+        s.submit(req(1, 640, 1, 5));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        s.submit(req(2, 64, 1, 0));
+        assert_eq!(s.next(), Some(WorkItem::Preempt { id: 1 }));
+        assert_eq!(s.slots_held(), 1, "only the preempted request holds KV");
+        // Shed the preempted request: it must leave through Finish so its
+        // KV is released, and its resumed prefill must never appear.
+        assert!(s.complete(1));
+        let items = s.drain();
+        assert_eq!(finish_order(&items), vec![1, 2]);
+        assert!(
+            !items.iter().any(|w| matches!(w, WorkItem::PrefillChunk { id: 1, .. })),
+            "a shed request must not run more prefill"
+        );
+        assert_eq!(s.slots_held(), 0);
+        assert_eq!(s.blocks_reserved(), 0);
+    }
+
+    #[test]
+    fn displace_unstarted_picks_worst_class_youngest_entry() {
+        let mut s = Scheduler::new(64, 1, 8);
+        s.submit(req(1, 64, 1, 4));
+        s.submit(req(2, 64, 1, 4));
+        s.submit(req(3, 64, 1, 2));
+        // An arriving prio-0 request displaces the *youngest* of the worst
+        // class (id 2, prio 4): older peers keep their place.
+        assert_eq!(s.displace_unstarted(0), Some(2));
+        // Next displacement takes the remaining prio-4 entry.
+        assert_eq!(s.displace_unstarted(0), Some(1));
+        // prio 2 is not strictly below prio 2 — nothing to displace.
+        assert_eq!(s.displace_unstarted(2), None);
+        assert_eq!(s.displace_unstarted(1), Some(3));
+        assert_eq!(s.displace_unstarted(0), None, "queue empty");
+    }
+
+    #[test]
+    fn displace_unstarted_never_touches_kv_holders() {
+        let mut s = Scheduler::new(64, 1, 2);
+        s.submit(req(1, 640, 1, 5));
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        s.submit(req(2, 64, 1, 0));
+        assert_eq!(s.next(), Some(WorkItem::Preempt { id: 1 }));
+        // Request 1 (prio 5) sits in the queue with prefill progress: it is
+        // admitted work holding KV, so displacement must skip it.
+        assert_eq!(s.displace_unstarted(0), None);
+        let items = s.drain();
+        assert_eq!(finish_order(&items), vec![2, 1]);
     }
 
     #[test]

@@ -60,6 +60,10 @@ pub struct TraceRequest {
     pub priority: u8,
     pub prompt: String,
     pub max_new_tokens: usize,
+    /// TTFT service-level objective: µs of slack from arrival to first
+    /// token. None = best-effort work with no latency deadline. Only
+    /// enforced when the run's [`OverloadPolicy`] sheds.
+    pub ttft_deadline_us: Option<f64>,
 }
 
 /// Knobs for the synthetic mixed-workload trace generator.
@@ -81,6 +85,10 @@ pub struct TraceProfile {
     /// none) — the shared-prefix traffic a prefix cache turns from
     /// O(N · prompt) into O(prompt).
     pub shared_prefix: usize,
+    /// TTFT deadline (µs of slack) stamped on every *interactive*
+    /// (priority 0) request the mix draws; batch requests never carry one.
+    /// None (the default) leaves every trace byte-identical to before.
+    pub interactive_slo_us: Option<f64>,
 }
 
 impl TraceProfile {
@@ -94,6 +102,7 @@ impl TraceProfile {
             short_per_4: 3,
             mean_gap_us: 2_000.0,
             shared_prefix: 0,
+            interactive_slo_us: None,
         }
     }
 
@@ -107,6 +116,7 @@ impl TraceProfile {
             short_per_4: 3,
             mean_gap_us: 500.0,
             shared_prefix: 0,
+            interactive_slo_us: None,
         }
     }
 
@@ -116,16 +126,24 @@ impl TraceProfile {
         self.shared_prefix = bytes;
         self
     }
+
+    /// Same mix, with a TTFT deadline of `us` µs on every interactive
+    /// request.
+    pub fn with_interactive_slo(mut self, us: f64) -> Self {
+        self.interactive_slo_us = Some(us);
+        self
+    }
 }
 
 fn span(rng: &mut Rng, (lo, hi): (usize, usize)) -> usize {
     lo + rng.below(hi.saturating_sub(lo).max(1))
 }
 
-/// Draw one request from the workload mix — the single generator both the
-/// open-loop trace and the closed-loop client population use, so the two
-/// load models sample identical request populations.
-fn profile_request(
+/// Draw one request from the workload mix — the single generator the
+/// open-loop trace, the closed-loop client population, and the load
+/// harness's [`crate::load::LoadSpec`] all use, so every load model
+/// samples identical request populations.
+pub(crate) fn profile_request(
     id: u64,
     arrival_us: f64,
     rng: &mut Rng,
@@ -141,7 +159,15 @@ fn profile_request(
     let max_new = span(rng, new_range).max(1);
     let mut prompt = system_prompt(profile.shared_prefix);
     prompt.push_str(&synthetic_prompt(prompt_len, rng));
-    TraceRequest { id, arrival_us, priority, prompt, max_new_tokens: max_new }
+    let deadline = if priority == 0 { profile.interactive_slo_us } else { None };
+    TraceRequest {
+        id,
+        arrival_us,
+        priority,
+        prompt,
+        max_new_tokens: max_new,
+        ttft_deadline_us: deadline,
+    }
 }
 
 /// The fixed system prompt shared-prefix workloads prepend to every
@@ -319,6 +345,31 @@ impl Arrivals {
     }
 }
 
+/// How the serving loop behaves past saturation. The default (unbounded
+/// queue, no shedding) is the pre-overload-aware loop, byte-identical.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OverloadPolicy {
+    /// Bound on *unstarted* queued requests (requests holding KV are never
+    /// counted — they were already admitted). When full, an arriving
+    /// request displaces the youngest strictly-lower-priority unstarted
+    /// entry (which is shed), or is itself rejected. None = unbounded.
+    pub queue_cap: Option<usize>,
+    /// Enforce TTFT deadlines: reject a request whose deadline is already
+    /// blown when it arrives, and shed any admitted request whose deadline
+    /// expires before its first token is sampled. With this on, an
+    /// admitted request that carries a deadline can *never* miss it — the
+    /// shed pass runs at the same simulated clock the next token batch
+    /// samples at, so every first token is sampled at or before its
+    /// deadline (the structural guarantee `--require-shed` gates on).
+    pub shed: bool,
+}
+
+impl OverloadPolicy {
+    fn active(&self) -> bool {
+        self.shed || self.queue_cap.is_some()
+    }
+}
+
 /// Sampling/serving options shared by every request in a run.
 #[derive(Debug, Clone)]
 pub struct ServeOpts {
@@ -335,11 +386,21 @@ pub struct ServeOpts {
     pub max_batch: usize,
     /// Print a line per completed request while running.
     pub verbose: bool,
+    /// Admission-control / shedding behavior past saturation.
+    pub policy: OverloadPolicy,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        Self { temperature: 0.0, top_k: 40, seed: 0, stop_byte: None, max_batch: 1, verbose: false }
+        Self {
+            temperature: 0.0,
+            top_k: 40,
+            seed: 0,
+            stop_byte: None,
+            max_batch: 1,
+            verbose: false,
+            policy: OverloadPolicy::default(),
+        }
     }
 }
 
@@ -375,6 +436,14 @@ struct ReqState {
     /// Set by `Preempt`, cleared when the next slice resumes — the resume
     /// path re-attaches the KV instead of clearing it.
     suspended: bool,
+    /// Absolute simulated clock by which the first token must be sampled
+    /// (arrival + SLO slack), when the request carries a deadline.
+    deadline_at_us: Option<f64>,
+    /// Relative TTFT SLO slack, surfaced on the completion.
+    slo_us: Option<f64>,
+    /// Shed by the overload policy: its pending `Finish` releases KV but
+    /// produces no completion.
+    shed: bool,
     first_work_us: Option<f64>,
     first_token_us: Option<f64>,
     sim_prefill_us: f64,
@@ -435,16 +504,26 @@ impl Server {
             self.engine.kv_slot_capacity(),
             self.engine.kv_block_tokens(),
         );
+        let policy = self.opts.policy.clone();
         let mut states: HashMap<u64, ReqState> = HashMap::new();
         let mut completions: Vec<RequestCompletion> = Vec::new();
         let mut clock_us = 0.0f64;
         let mut decode_batch_sim_us = 0.0f64;
         let mut decode_batches_executed = 0usize;
         let mut cache_saved_prefill_us = 0.0f64;
+        // Admission accounting: every popped arrival ends in exactly one
+        // terminal state — completed, shed, or rejected. The loop
+        // cross-checks the invariant after every work item.
+        let mut submitted = 0usize;
+        let mut rejected = 0usize;
+        let mut shed = 0usize;
+        let mut shed_by_priority: std::collections::BTreeMap<u8, usize> =
+            std::collections::BTreeMap::new();
 
         loop {
             // Admit every request that has arrived by now.
             while let Some(t) = source.pop_ready(clock_us) {
+                submitted += 1;
                 let prompt = tokenizer::encode(&t.prompt);
                 anyhow::ensure!(!prompt.is_empty(), "request {} has an empty prompt", t.id);
                 anyhow::ensure!(
@@ -454,6 +533,36 @@ impl Server {
                     prompt.len()
                 );
                 let max_new = t.max_new_tokens.max(1).min(seq - prompt.len());
+                let deadline_at = t.ttft_deadline_us.map(|d| t.arrival_us + d);
+                // Enqueue-time deadline rejection: a request whose TTFT
+                // deadline is already blown when the loop first sees it
+                // would only burn prefill to produce a guaranteed miss.
+                if policy.shed && deadline_at.is_some_and(|at| clock_us > at) {
+                    rejected += 1;
+                    source.on_finish(t.id, clock_us);
+                    continue;
+                }
+                // Bounded admission queue over *unstarted* requests: when
+                // full, displace the youngest strictly-lower-priority
+                // unstarted entry (it is shed — admitted, then dropped),
+                // else turn the arrival itself away.
+                if let Some(cap) = policy.queue_cap {
+                    if sched.queued_unstarted() >= cap.max(1) {
+                        match sched.displace_unstarted(t.priority) {
+                            Some(victim) => {
+                                let vs = states.remove(&victim).context("displaced unknown id")?;
+                                shed += 1;
+                                *shed_by_priority.entry(vs.priority).or_insert(0) += 1;
+                                source.on_finish(victim, clock_us);
+                            }
+                            None => {
+                                rejected += 1;
+                                source.on_finish(t.id, clock_us);
+                                continue;
+                            }
+                        }
+                    }
+                }
                 // A request whose worst-case block reservation exceeds the
                 // whole pool could never be admitted — fail loudly instead
                 // of deadlocking the queue.
@@ -483,6 +592,9 @@ impl Server {
                             saved_us: 0.0,
                             preempted: 0,
                             suspended: false,
+                            deadline_at_us: deadline_at,
+                            slo_us: t.ttft_deadline_us,
+                            shed: false,
                             first_work_us: None,
                             first_token_us: None,
                             sim_prefill_us: 0.0,
@@ -501,6 +613,45 @@ impl Server {
                     max_new_tokens: max_new,
                     priority: t.priority,
                 });
+            }
+
+            // Schedule-time shedding: drop every pre-first-token request
+            // whose deadline has expired. This pass runs at the same
+            // simulated clock the next decode batch samples at, so with
+            // shedding on no admitted request ever records a miss: either
+            // its first token is sampled at `clock_us <= deadline`, or it
+            // is shed here first. Ids are visited in sorted order so runs
+            // are deterministic (HashMap iteration is not).
+            if policy.shed {
+                let mut expired: Vec<u64> = states
+                    .iter()
+                    .filter(|(_, st)| {
+                        !st.shed
+                            && st.first_token_us.is_none()
+                            && st.deadline_at_us.is_some_and(|at| clock_us > at)
+                    })
+                    .map(|(&id, _)| id)
+                    .collect();
+                expired.sort_unstable();
+                for id in expired {
+                    if sched.cancel_queued(id) {
+                        // Never started: holds no KV, leaves immediately.
+                        let st = states.remove(&id).context("shed unknown id")?;
+                        shed += 1;
+                        *shed_by_priority.entry(st.priority).or_insert(0) += 1;
+                        source.on_finish(id, clock_us);
+                    } else if sched.complete(id) {
+                        // Holds KV (prefilling/ready/decoding/preempted):
+                        // drains through `Finish`, which releases its
+                        // blocks but produces no completion.
+                        let st = states.get_mut(&id).context("shed unknown id")?;
+                        st.shed = true;
+                        shed += 1;
+                        *shed_by_priority.entry(st.priority).or_insert(0) += 1;
+                    }
+                    // else: already in `finishing` (e.g. a stop byte cut
+                    // it this very clock) — it completes normally.
+                }
             }
 
             if !sched.has_work() {
@@ -603,6 +754,17 @@ impl Server {
                             self.opts.top_k,
                             &mut st.rng,
                         );
+                        if st.first_token_us.is_none() {
+                            // The token exists the moment it is sampled from
+                            // the previous logits; the batch forward below
+                            // computes the *next* token, so TTFT excludes
+                            // its cost. Stamped before the stop-byte check:
+                            // a first-sample stop byte is still the moment
+                            // the request first responded, and the shed
+                            // pass's zero-miss guarantee relies on every
+                            // first-token stamp being the sampling clock.
+                            st.first_token_us = Some(clock_us);
+                        }
                         // Token-space comparison: vocabularies larger than
                         // 256 must not alias onto a stop byte.
                         if self.opts.stop_byte.map(usize::from) == Some(next) {
@@ -610,13 +772,6 @@ impl Server {
                             // and the scheduler cuts the remaining budget.
                             sched.complete(id);
                             continue;
-                        }
-                        if st.first_token_us.is_none() {
-                            // The token exists the moment it is sampled from
-                            // the previous logits; the batch forward below
-                            // computes the *next* token, so TTFT excludes
-                            // its cost.
-                            st.first_token_us = Some(clock_us);
                         }
                         st.out_tokens.push(next);
                         // The last budgeted token needs no further forward:
@@ -659,38 +814,43 @@ impl Server {
                     source.on_finish(id, clock_us);
                     let st = states.remove(&id).context("unknown request id")?;
                     cache_saved_prefill_us += st.saved_us;
-                    let completion = RequestCompletion {
-                        id,
-                        priority: st.priority,
-                        prompt_tokens: st.prompt.len(),
-                        generated_tokens: st.out_tokens.len(),
-                        arrival_us: st.arrival_us,
-                        queue_wait_us: st.first_work_us.unwrap_or(clock_us) - st.arrival_us,
-                        ttft_us: st.first_token_us.unwrap_or(clock_us) - st.arrival_us,
-                        finish_us: clock_us,
-                        sim_prefill_us: st.sim_prefill_us,
-                        sim_decode_us: st.sim_decode_us,
-                        energy_prefill_j: st.sim_prefill_j,
-                        energy_decode_j: st.sim_decode_j,
-                        preempted: st.preempted,
-                        prefilled_tokens: st.prefilled_total,
-                        cached_tokens: st.cached,
-                        text: tokenizer::decode(&st.out_tokens),
-                    };
-                    if self.opts.verbose {
-                        eprintln!(
-                            "[req {:>3}] prio {} | {:>4} prompt + {:>3} gen tok | \
-                             wait {:>9.3} ms | ttft {:>9.3} ms | preempted {}x",
-                            completion.id,
-                            completion.priority,
-                            completion.prompt_tokens,
-                            completion.generated_tokens,
-                            completion.queue_wait_us / 1e3,
-                            completion.ttft_us / 1e3,
-                            completion.preempted,
-                        );
+                    // A shed request's Finish only drains its KV — it was
+                    // already counted and produces no completion.
+                    if !st.shed {
+                        let completion = RequestCompletion {
+                            id,
+                            priority: st.priority,
+                            prompt_tokens: st.prompt.len(),
+                            generated_tokens: st.out_tokens.len(),
+                            arrival_us: st.arrival_us,
+                            queue_wait_us: st.first_work_us.unwrap_or(clock_us) - st.arrival_us,
+                            ttft_us: st.first_token_us.unwrap_or(clock_us) - st.arrival_us,
+                            finish_us: clock_us,
+                            sim_prefill_us: st.sim_prefill_us,
+                            sim_decode_us: st.sim_decode_us,
+                            energy_prefill_j: st.sim_prefill_j,
+                            energy_decode_j: st.sim_decode_j,
+                            preempted: st.preempted,
+                            prefilled_tokens: st.prefilled_total,
+                            cached_tokens: st.cached,
+                            ttft_slo_us: st.slo_us,
+                            text: tokenizer::decode(&st.out_tokens),
+                        };
+                        if self.opts.verbose {
+                            eprintln!(
+                                "[req {:>3}] prio {} | {:>4} prompt + {:>3} gen tok | \
+                                 wait {:>9.3} ms | ttft {:>9.3} ms | preempted {}x",
+                                completion.id,
+                                completion.priority,
+                                completion.prompt_tokens,
+                                completion.generated_tokens,
+                                completion.queue_wait_us / 1e3,
+                                completion.ttft_us / 1e3,
+                                completion.preempted,
+                            );
+                        }
+                        completions.push(completion);
                     }
-                    completions.push(completion);
                 }
             }
             // The scheduler's accounting and the engine's pool must agree
@@ -708,9 +868,28 @@ impl Server {
                 sched.blocks_reserved(),
                 self.engine.kv_reserved_blocks()
             );
+            // Admission accounting invariant, cross-checked after every
+            // work item: every submitted request is completed, shed,
+            // rejected, or still live (a shed-marked state is awaiting its
+            // Finish and is already counted in `shed`).
+            if policy.active() {
+                let live = states.values().filter(|s| !s.shed).count();
+                anyhow::ensure!(
+                    completions.len() + shed + rejected + live == submitted,
+                    "admission accounting diverged: {} completed + {shed} shed + \
+                     {rejected} rejected + {live} live != {submitted} submitted",
+                    completions.len()
+                );
+            }
         }
 
         anyhow::ensure!(states.is_empty(), "{} request(s) never finished", states.len());
+        anyhow::ensure!(
+            completions.len() + shed + rejected == submitted,
+            "admission accounting diverged at drain: {} completed + {shed} shed + \
+             {rejected} rejected != {submitted} submitted",
+            completions.len()
+        );
         let kv = self.engine.kv_stats();
         Ok(FleetMetrics {
             completions,
@@ -730,6 +909,10 @@ impl Server {
             kv_capacity_blocks: kv.capacity_blocks,
             kv_block_tokens: kv.block_tokens,
             kv_blocks_high_water: kv.blocks_high_water,
+            submitted,
+            rejected,
+            shed,
+            shed_by_priority: shed_by_priority.into_iter().collect(),
         })
     }
 }

@@ -1,0 +1,253 @@
+//! Arrival processes: *when* requests show up, independent of *what* they
+//! ask for (the workload mix) and *how fast* they must be answered (the
+//! SLO). Each process turns a seeded [`Rng`] into a strictly increasing
+//! sequence of simulated-clock arrival times, so a [`super::LoadSpec`] can
+//! compose any process with any mix deterministically.
+
+use crate::util::Rng;
+
+/// One exponential inter-arrival gap with the given mean — the same draw
+/// `synthetic_trace` has always used, so a [`ArrivalProcess::Poisson`]
+/// process with the same seed and mean reproduces its gap sequence.
+fn exp_gap(rng: &mut Rng, mean_us: f64) -> f64 {
+    let u = f64::from(rng.next_f32()).max(1e-6);
+    -mean_us * u.ln()
+}
+
+/// When requests arrive, as a point process on the simulated clock.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless steady load: exponential gaps with one mean.
+    Poisson { mean_gap_us: f64 },
+    /// On/off square-wave load: Poisson arrivals at `mean_gap_us` during
+    /// each `on_us` window, silence for `off_us` between windows — the
+    /// bursty foreground/background pattern of a device screen turning on.
+    Bursty { on_us: f64, off_us: f64, mean_gap_us: f64 },
+    /// Slow sinusoidal intensity: the mean gap sweeps from `peak_gap_us`
+    /// (t = 0, busiest) to `trough_gap_us` (half a period later, quietest)
+    /// and back, with period `period_us` — a compressed day/night cycle.
+    Diurnal { period_us: f64, peak_gap_us: f64, trough_gap_us: f64 },
+    /// Steady Poisson background at `base_gap_us`, plus a crowd that all
+    /// arrives in a tight burst starting at `at_us` with `crowd_gap_us`
+    /// gaps. Out of every 4 requests, `crowd_per_4` belong to the crowd —
+    /// the overload spike admission control exists for.
+    FlashCrowd { base_gap_us: f64, at_us: f64, crowd_per_4: usize, crowd_gap_us: f64 },
+}
+
+impl ArrivalProcess {
+    /// Bursty defaults: 8 mean-gaps of load, then 24 mean-gaps of silence.
+    pub fn bursty(mean_gap_us: f64) -> Self {
+        ArrivalProcess::Bursty {
+            on_us: 8.0 * mean_gap_us,
+            off_us: 24.0 * mean_gap_us,
+            mean_gap_us,
+        }
+    }
+
+    /// Diurnal defaults: a 64-mean-gap period swinging between half and
+    /// four times the nominal gap.
+    pub fn diurnal(mean_gap_us: f64) -> Self {
+        ArrivalProcess::Diurnal {
+            period_us: 64.0 * mean_gap_us,
+            peak_gap_us: mean_gap_us / 2.0,
+            trough_gap_us: 4.0 * mean_gap_us,
+        }
+    }
+
+    /// Flash-crowd defaults: 3 of every 4 requests arrive in a burst 64×
+    /// denser than the background, starting 8 mean-gaps in.
+    pub fn flash_crowd(mean_gap_us: f64) -> Self {
+        ArrivalProcess::FlashCrowd {
+            base_gap_us: mean_gap_us,
+            at_us: 8.0 * mean_gap_us,
+            crowd_per_4: 3,
+            crowd_gap_us: mean_gap_us / 64.0,
+        }
+    }
+
+    /// CLI name → process with its default shape at `mean_gap_us`.
+    pub fn from_name(name: &str, mean_gap_us: f64) -> Option<Self> {
+        match name {
+            "poisson" => Some(ArrivalProcess::Poisson { mean_gap_us }),
+            "bursty" => Some(Self::bursty(mean_gap_us)),
+            "diurnal" => Some(Self::diurnal(mean_gap_us)),
+            "flash-crowd" | "flash_crowd" => Some(Self::flash_crowd(mean_gap_us)),
+            _ => None,
+        }
+    }
+
+    /// Draw `n` arrival times. Strictly increasing, all positive, and a
+    /// pure function of `(self, n, rng state)` — same seed, same times.
+    pub fn times(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Poisson { mean_gap_us } => {
+                assert!(mean_gap_us > 0.0, "poisson gap must be positive");
+                let mut clock = 0.0f64;
+                for _ in 0..n {
+                    clock += exp_gap(rng, mean_gap_us);
+                    out.push(clock);
+                }
+            }
+            ArrivalProcess::Bursty { on_us, off_us, mean_gap_us } => {
+                assert!(on_us > 0.0 && off_us >= 0.0, "bad burst window");
+                assert!(mean_gap_us > 0.0, "burst gap must be positive");
+                // Poisson on *active* time, mapped onto the on-windows of
+                // the square wave: active time k·on + r lands at wall time
+                // k·(on + off) + r. The map is strictly monotone, so the
+                // output inherits the draw's strict increase.
+                let mut active = 0.0f64;
+                for _ in 0..n {
+                    active += exp_gap(rng, mean_gap_us);
+                    let k = (active / on_us).floor();
+                    out.push(k * (on_us + off_us) + (active - k * on_us));
+                }
+            }
+            ArrivalProcess::Diurnal { period_us, peak_gap_us, trough_gap_us } => {
+                assert!(period_us > 0.0, "diurnal period must be positive");
+                assert!(peak_gap_us > 0.0 && trough_gap_us > 0.0, "gaps must be positive");
+                let mut clock = 0.0f64;
+                for _ in 0..n {
+                    // Cosine-modulated mean gap: peak intensity (smallest
+                    // gap) at phase 0, trough half a period later.
+                    let phase = (clock / period_us) * std::f64::consts::TAU;
+                    let mean =
+                        peak_gap_us + (trough_gap_us - peak_gap_us) * (1.0 - phase.cos()) / 2.0;
+                    clock += exp_gap(rng, mean);
+                    out.push(clock);
+                }
+            }
+            ArrivalProcess::FlashCrowd { base_gap_us, at_us, crowd_per_4, crowd_gap_us } => {
+                assert!(base_gap_us > 0.0 && crowd_gap_us > 0.0, "gaps must be positive");
+                assert!(at_us >= 0.0, "the crowd cannot arrive before t = 0");
+                let crowd = (n * crowd_per_4.min(4)) / 4;
+                let mut clock = 0.0f64;
+                for _ in 0..(n - crowd) {
+                    clock += exp_gap(rng, base_gap_us);
+                    out.push(clock);
+                }
+                let mut c = at_us;
+                for _ in 0..crowd {
+                    c += exp_gap(rng, crowd_gap_us);
+                    out.push(c);
+                }
+                out.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            }
+        }
+        // Strictly increasing even across merged streams: nudge any tie
+        // forward by a nanosecond-scale epsilon.
+        for i in 1..out.len() {
+            if out[i] <= out[i - 1] {
+                out[i] = out[i - 1] + 1e-9;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strictly_increasing(xs: &[f64]) -> bool {
+        xs.windows(2).all(|w| w[0] < w[1])
+    }
+
+    #[test]
+    fn every_process_is_deterministic_and_strictly_increasing() {
+        let procs = [
+            ArrivalProcess::Poisson { mean_gap_us: 300.0 },
+            ArrivalProcess::bursty(300.0),
+            ArrivalProcess::diurnal(300.0),
+            ArrivalProcess::flash_crowd(300.0),
+        ];
+        for p in procs {
+            let a = p.times(64, &mut Rng::new(9));
+            let b = p.times(64, &mut Rng::new(9));
+            assert_eq!(a, b, "{p:?} must be deterministic");
+            assert_eq!(a.len(), 64);
+            assert!(a[0] > 0.0, "{p:?} first arrival must be positive");
+            assert!(strictly_increasing(&a), "{p:?} must be strictly increasing");
+            let c = p.times(64, &mut Rng::new(10));
+            assert_ne!(a, c, "{p:?} must vary with the seed");
+        }
+    }
+
+    #[test]
+    fn poisson_matches_the_legacy_trace_gap_draw() {
+        // The Poisson process is the exact draw synthetic_trace has always
+        // used, so loads specified either way line up.
+        let times = ArrivalProcess::Poisson { mean_gap_us: 500.0 }.times(16, &mut Rng::new(7));
+        let mut rng = Rng::new(7);
+        let mut clock = 0.0;
+        for t in times {
+            let u = f64::from(rng.next_f32()).max(1e-6);
+            clock += -500.0 * u.ln();
+            assert_eq!(t, clock);
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_land_inside_on_windows() {
+        let (on, off) = (1_000.0, 3_000.0);
+        let p = ArrivalProcess::Bursty { on_us: on, off_us: off, mean_gap_us: 100.0 };
+        let times = p.times(256, &mut Rng::new(3));
+        for t in &times {
+            let phase = t % (on + off);
+            assert!(phase <= on + 1e-6, "arrival at {t} lands {phase} into an off-window");
+        }
+        // The sequence must span several windows.
+        assert!(times.last().unwrap() > &(on + off), "load must cross a window boundary");
+    }
+
+    #[test]
+    fn diurnal_peak_is_denser_than_trough() {
+        // Count arrivals in the first quarter-period (around the peak)
+        // vs the third quarter (around the trough).
+        let period = 64_000.0;
+        let p = ArrivalProcess::Diurnal {
+            period_us: period,
+            peak_gap_us: 100.0,
+            trough_gap_us: 1_000.0,
+        };
+        let times = p.times(512, &mut Rng::new(5));
+        let in_band = |lo: f64, hi: f64| {
+            times.iter().filter(|&&t| (t % period) >= lo && (t % period) < hi).count()
+        };
+        let peak_band = in_band(0.0, period / 8.0) + in_band(7.0 * period / 8.0, period);
+        let trough_band = in_band(3.0 * period / 8.0, 5.0 * period / 8.0);
+        assert!(
+            peak_band > 2 * trough_band,
+            "peak band {peak_band} must be much denser than trough band {trough_band}"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_clusters_most_arrivals_in_a_tight_burst() {
+        let p = ArrivalProcess::flash_crowd(1_000.0);
+        let n = 64;
+        let times = p.times(n, &mut Rng::new(1));
+        assert!(strictly_increasing(&times));
+        // 3/4 of arrivals belong to the crowd: the densest window of
+        // crowd-size consecutive arrivals must be far tighter than the
+        // full span.
+        let crowd = (n * 3) / 4;
+        let tightest = times
+            .windows(crowd)
+            .map(|w| w[crowd - 1] - w[0])
+            .fold(f64::INFINITY, f64::min);
+        let span = times[n - 1] - times[0];
+        assert!(
+            tightest < span / 4.0,
+            "crowd window {tightest} must be much tighter than the span {span}"
+        );
+    }
+
+    #[test]
+    fn from_name_resolves_every_cli_spelling() {
+        for name in ["poisson", "bursty", "diurnal", "flash-crowd", "flash_crowd"] {
+            assert!(ArrivalProcess::from_name(name, 500.0).is_some(), "{name}");
+        }
+        assert!(ArrivalProcess::from_name("steady", 500.0).is_none());
+    }
+}

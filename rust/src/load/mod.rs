@@ -1,0 +1,172 @@
+//! Load-generation harness: composable synthetic serving load.
+//!
+//! A load is the product of three independent axes:
+//!
+//! - an [`ArrivalProcess`] — *when* requests arrive (steady Poisson,
+//!   on/off bursts, a diurnal cycle, or a flash crowd);
+//! - a [`TraceProfile`] — *what* they ask for (prompt/output length
+//!   mixes, shared system prefixes, interactive-vs-batch class split);
+//! - a per-class SLO and fan-out — *how* they must be served
+//!   (TTFT deadlines on the interactive class, TTC-style sibling
+//!   requests sharing one prompt).
+//!
+//! [`LoadSpec`] glues the axes together and emits an open-loop
+//! [`TraceRequest`] trace, deterministic under its seed, that feeds the
+//! same [`crate::coordinator::server::Server`] entry points the legacy
+//! synthetic trace does. [`serving_snapshot`] runs a pinned set of these
+//! loads and prints the flat `BENCH_serving.json` document CI tracks.
+
+mod arrivals;
+mod snapshot;
+
+pub use arrivals::ArrivalProcess;
+pub use snapshot::serving_snapshot;
+
+use crate::coordinator::server::{profile_request, TraceProfile, TraceRequest};
+use crate::util::Rng;
+
+/// A complete load model: arrival process × workload mix × SLO × fan-out.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// When request groups arrive.
+    pub process: ArrivalProcess,
+    /// What each request asks for.
+    pub profile: TraceProfile,
+    /// TTFT slack (µs) stamped on every interactive request; overrides
+    /// the profile's own setting when `Some`.
+    pub interactive_slo_us: Option<f64>,
+    /// Requests per arrival: each arrival spawns `fanout` sibling
+    /// requests sharing one prompt, class, and deadline (test-time-compute
+    /// style sampling fan-out; 1 = plain serving).
+    pub fanout: usize,
+}
+
+impl LoadSpec {
+    pub fn new(process: ArrivalProcess, profile: TraceProfile) -> Self {
+        Self { process, profile, interactive_slo_us: None, fanout: 1 }
+    }
+
+    /// Stamp a TTFT deadline of `us` µs of slack on interactive requests.
+    pub fn with_slo(mut self, us: f64) -> Self {
+        self.interactive_slo_us = Some(us);
+        self
+    }
+
+    /// Spawn `k` sibling requests per arrival.
+    pub fn with_fanout(mut self, k: usize) -> Self {
+        self.fanout = k.max(1);
+        self
+    }
+
+    /// Generate exactly `n` requests, deterministically under `seed`.
+    ///
+    /// Arrivals are drawn per *group* of `fanout` siblings; siblings share
+    /// the group's prompt, priority, budget, and deadline, staggered 1 ns
+    /// apart so arrival order stays strict. Ids are 1-based and dense.
+    pub fn trace(&self, n: usize, seed: u64) -> Vec<TraceRequest> {
+        let mut profile = self.profile.clone();
+        if self.interactive_slo_us.is_some() {
+            profile.interactive_slo_us = self.interactive_slo_us;
+        }
+        let k = self.fanout.max(1);
+        let groups = n.div_ceil(k);
+        let mut rng = Rng::new(seed);
+        let times = self.process.times(groups, &mut rng);
+        let mut out: Vec<TraceRequest> = Vec::with_capacity(n);
+        for (g, &t) in times.iter().enumerate() {
+            let base = profile_request(g as u64, t, &mut rng, &profile);
+            for s in 0..k {
+                if out.len() == n {
+                    break;
+                }
+                out.push(TraceRequest {
+                    id: out.len() as u64 + 1,
+                    arrival_us: t + s as f64 * 1e-3,
+                    priority: base.priority,
+                    prompt: base.prompt.clone(),
+                    max_new_tokens: base.max_new_tokens,
+                    ttft_deadline_us: base.ttft_deadline_us,
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_and_exactly_sized() {
+        let spec = LoadSpec::new(ArrivalProcess::bursty(400.0), TraceProfile::tiny());
+        for n in [1, 7, 32] {
+            let a = spec.trace(n, 42);
+            let b = spec.trace(n, 42);
+            assert_eq!(a, b, "same seed must reproduce the trace");
+            assert_eq!(a.len(), n);
+            let ids: Vec<u64> = a.iter().map(|r| r.id).collect();
+            assert_eq!(ids, (1..=n as u64).collect::<Vec<_>>(), "ids dense and 1-based");
+            assert!(
+                a.windows(2).all(|w| w[0].arrival_us < w[1].arrival_us),
+                "arrivals strictly increasing"
+            );
+        }
+        assert_ne!(spec.trace(16, 42), spec.trace(16, 43), "seed must matter");
+    }
+
+    #[test]
+    fn fanout_siblings_share_prompt_class_and_deadline() {
+        let spec = LoadSpec::new(
+            ArrivalProcess::Poisson { mean_gap_us: 800.0 },
+            TraceProfile::tiny(),
+        )
+        .with_slo(5_000.0)
+        .with_fanout(4);
+        let trace = spec.trace(24, 9);
+        assert_eq!(trace.len(), 24);
+        for group in trace.chunks(4) {
+            let first = &group[0];
+            for (s, r) in group.iter().enumerate() {
+                assert_eq!(r.prompt, first.prompt, "siblings share the prompt");
+                assert_eq!(r.priority, first.priority, "siblings share the class");
+                assert_eq!(r.max_new_tokens, first.max_new_tokens);
+                assert_eq!(r.ttft_deadline_us, first.ttft_deadline_us);
+                let stagger = r.arrival_us - first.arrival_us;
+                assert!(
+                    (stagger - s as f64 * 1e-3).abs() < 1e-12,
+                    "siblings staggered 1 ns apart"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slo_override_stamps_interactive_requests_only() {
+        let spec = LoadSpec::new(
+            ArrivalProcess::Poisson { mean_gap_us: 500.0 },
+            TraceProfile::tiny(),
+        )
+        .with_slo(3_000.0);
+        let trace = spec.trace(64, 4);
+        let (interactive, batch): (Vec<_>, Vec<_>) =
+            trace.iter().partition(|r| r.priority == 0);
+        assert!(!interactive.is_empty() && !batch.is_empty(), "mix draws both classes");
+        assert!(interactive.iter().all(|r| r.ttft_deadline_us == Some(3_000.0)));
+        assert!(batch.iter().all(|r| r.ttft_deadline_us.is_none()));
+
+        // Stamping the SLO changes deadlines only: prompts, classes, and
+        // arrivals are byte-identical to the unstamped trace.
+        let plain = LoadSpec::new(
+            ArrivalProcess::Poisson { mean_gap_us: 500.0 },
+            TraceProfile::tiny(),
+        )
+        .trace(64, 4);
+        for (a, b) in trace.iter().zip(&plain) {
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.priority, b.priority);
+            assert_eq!(a.arrival_us, b.arrival_us);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! The pinned serving snapshot behind `BENCH_serving.json`.
+//!
+//! Four scenarios on the tiny reference deployment, all on the simulated
+//! clock (no wall-clock numbers, so the document is reproducible on any
+//! machine):
+//!
+//! - `steady` — Poisson arrivals over the standard tiny mix: the baseline
+//!   latency/throughput operating point.
+//! - `flash_noshed` — a flash crowd of interactive requests served with
+//!   no admission control: the control arm whose tail latency is
+//!   *expected* to diverge (ungated by the CI perf gate).
+//! - `flash_shed` — the same crowd, same deadlines, with shedding on:
+//!   admitted-request TTFT stays bounded and `deadline_misses` is
+//!   structurally zero.
+//! - `prefix` — shared-prefix fan-out traffic on the paged prefix-cache
+//!   engine: tracks the prefix hit rate and cached-prefill throughput.
+//!
+//! The flash deadline is *self-calibrating*: slack is set to 1/4 of the
+//! no-shed run's p99 TTFT, so the scenario stays an overload (and the
+//! shed arm provably sheds) even as kernel costs drift across commits.
+
+use crate::bench::FlatJson;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::{percentile, FleetMetrics};
+use crate::coordinator::server::{OverloadPolicy, ServeOpts, Server, TraceProfile, TraceRequest};
+use crate::kvpool::KvPoolConfig;
+use crate::load::{ArrivalProcess, LoadSpec};
+use crate::model::config::ModelConfig;
+use crate::model::weights::random_transformer;
+use crate::npu::config::SocConfig;
+use anyhow::{ensure, Result};
+
+const MODEL_SEED: u64 = 7;
+const CHUNK: usize = 16;
+const MAX_BATCH: usize = 4;
+const KV_SLOTS: usize = 6;
+
+fn engine() -> Result<Engine> {
+    let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
+    Engine::reference(model, SocConfig::oneplus12(), CHUNK, 4, KV_SLOTS)
+}
+
+fn prefix_engine() -> Result<Engine> {
+    let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
+    let block_tokens = 16;
+    let blocks = KV_SLOTS * model.cfg.max_seq.div_ceil(block_tokens);
+    let kv = KvPoolConfig::paged(blocks, block_tokens, true);
+    Engine::reference_paged(model, SocConfig::oneplus12(), CHUNK, 4, kv)
+}
+
+fn run(engine: Engine, trace: &[TraceRequest], policy: OverloadPolicy) -> Result<FleetMetrics> {
+    let opts = ServeOpts { max_batch: MAX_BATCH, policy, ..Default::default() };
+    Server::new(engine, opts).run(trace)
+}
+
+/// Append one scenario's gated metric set under the `scen.` key prefix.
+fn emit_fleet(out: &mut FlatJson, scen: &str, fleet: &FleetMetrics) {
+    out.count(&format!("{scen}.submitted"), fleet.submitted);
+    out.count(&format!("{scen}.completed"), fleet.completions.len());
+    out.num(&format!("{scen}.shed_rate"), fleet.shed_rate());
+    out.count(&format!("{scen}.deadline_misses"), fleet.deadline_misses());
+    out.num(&format!("{scen}.goodput_tps"), fleet.goodput_tps());
+    out.num(&format!("{scen}.throughput_tps"), fleet.throughput_tps());
+    out.num(&format!("{scen}.decode_occupancy"), fleet.decode_batch_occupancy());
+    out.num(&format!("{scen}.prefix_hit_rate"), fleet.prefix_hit_rate());
+    for cs in fleet.class_stats() {
+        out.num(&format!("{scen}.p{}.ttft_p50_ms", cs.priority), cs.ttft_p50_ms);
+        out.num(&format!("{scen}.p{}.ttft_p99_ms", cs.priority), cs.ttft_p99_ms);
+    }
+}
+
+/// Run the pinned scenarios and return the `BENCH_serving.json` document.
+/// Deterministic for a given build: fixed model/trace seeds, simulated
+/// clock throughout, and [`FlatJson`]'s insertion-ordered keys.
+pub fn serving_snapshot() -> Result<String> {
+    let mut out = FlatJson::new(1);
+
+    // Steady state: the baseline operating point.
+    let steady_spec = LoadSpec::new(
+        ArrivalProcess::Poisson { mean_gap_us: 500.0 },
+        TraceProfile::tiny(),
+    );
+    let steady = run(engine()?, &steady_spec.trace(48, 11), OverloadPolicy::default())?;
+    emit_fleet(&mut out, "steady", &steady);
+
+    // Flash crowd: all-interactive traffic, deadline self-calibrated off
+    // the no-control run so the scenario stays an overload as costs drift.
+    let crowd_profile = TraceProfile { short_per_4: 4, ..TraceProfile::tiny() };
+    let crowd_spec =
+        LoadSpec::new(ArrivalProcess::flash_crowd(500.0), crowd_profile);
+    let calibration = run(engine()?, &crowd_spec.trace(64, 13), OverloadPolicy::default())?;
+    let p99_us = percentile(&calibration.ttft_us(), 99.0);
+    ensure!(p99_us > 0.0, "calibration run produced no TTFT tail");
+    let slack_us = p99_us / 4.0;
+    let crowd_trace = crowd_spec.clone().with_slo(slack_us).trace(64, 13);
+
+    let noshed = run(engine()?, &crowd_trace, OverloadPolicy::default())?;
+    emit_fleet(&mut out, "flash_noshed", &noshed);
+    let shed = run(
+        engine()?,
+        &crowd_trace,
+        OverloadPolicy { queue_cap: None, shed: true },
+    )?;
+    emit_fleet(&mut out, "flash_shed", &shed);
+    out.num("flash_shed.slo_slack_ms", slack_us / 1e3);
+    ensure!(
+        shed.deadline_misses() == 0,
+        "shedding must make admitted deadlines unmissable"
+    );
+    ensure!(
+        shed.shed + shed.rejected > 0,
+        "an overload with deadlines below the no-shed tail must drop work"
+    );
+
+    // Shared-prefix fan-out on the prefix-cache paged engine.
+    let prefix_spec = LoadSpec::new(
+        ArrivalProcess::Poisson { mean_gap_us: 500.0 },
+        TraceProfile::tiny().with_shared_prefix(48),
+    )
+    .with_fanout(2);
+    let prefix = run(prefix_engine()?, &prefix_spec.trace(32, 5), OverloadPolicy::default())?;
+    emit_fleet(&mut out, "prefix", &prefix);
+    ensure!(prefix.prefix_hit_rate() > 0.0, "shared-prefix load must hit the prefix cache");
+
+    Ok(out.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::parse_flat_json;
+
+    #[test]
+    fn snapshot_is_flat_json_with_the_gated_key_set() {
+        let doc = serving_snapshot().expect("snapshot");
+        let pairs = parse_flat_json(&doc).expect("snapshot must parse as flat JSON");
+        assert_eq!(pairs[0], ("schema".to_string(), 1.0));
+        let get = |key: &str| {
+            pairs
+                .iter()
+                .find(|(k, _)| k == key)
+                .unwrap_or_else(|| panic!("missing key {key}"))
+                .1
+        };
+        for scen in ["steady", "flash_noshed", "flash_shed", "prefix"] {
+            for metric in
+                ["submitted", "completed", "shed_rate", "deadline_misses", "goodput_tps"]
+            {
+                let _ = get(&format!("{scen}.{metric}"));
+            }
+        }
+        // The contrast the snapshot exists to demonstrate: same crowd,
+        // same deadlines — control arm misses, shed arm cannot.
+        assert!(get("flash_noshed.deadline_misses") >= 1.0);
+        assert_eq!(get("flash_shed.deadline_misses"), 0.0);
+        assert!(get("flash_shed.shed_rate") >= 0.0);
+        assert!(get("prefix.prefix_hit_rate") > 0.0);
+        assert!(get("steady.goodput_tps") > 0.0);
+    }
+}

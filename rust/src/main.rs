@@ -9,8 +9,12 @@
 //!            [--model tiny|small|base] [--chunk C] [--kv-slots N]
 //!            [--kv-blocks N] [--block-tokens T] [--prefix-cache]
 //!            [--shared-prefix BYTES] [--require-hits]
+//!            [--arrivals poisson|bursty|diurnal|flash-crowd] [--fanout K]
+//!            [--slo-ttft-ms X] [--queue-cap N] [--shed] [--require-shed]
 //!            [--bits 2|4] [--temp T] [--artifacts DIR] [--soc ...]
 //!   bench    [--json]                 plan-cost snapshot (CI artifact)
+//!   bench-serving [--out FILE]        serving perf snapshot (BENCH_serving.json)
+//!   bench-check --baseline F --current F [--tolerance T]   perf-regression gate
 //!   info     [--artifacts DIR]        print artifact manifest + sim config
 //!
 //! `serve --closed-loop C --think-ms T` swaps the open-loop synthetic trace
@@ -24,14 +28,16 @@
 
 use anyhow::{bail, Result};
 use std::path::PathBuf;
+use tman::bench::{compare_benchmarks, plan_cost_report};
 use tman::coordinator::engine::{Engine, GenerateOpts};
-use tman::coordinator::server::{synthetic_trace, ClosedLoopOpts, ServeOpts, Server, TraceProfile};
-use tman::kernels::plan::PlanCosts;
+use tman::coordinator::server::{
+    synthetic_trace, ClosedLoopOpts, OverloadPolicy, ServeOpts, Server, TraceProfile,
+};
 use tman::kvpool::KvPoolConfig;
+use tman::load::{serving_snapshot, ArrivalProcess, LoadSpec};
 use tman::model::config::ModelConfig;
 use tman::model::weights;
 use tman::npu::config::SocConfig;
-use tman::quant::formats::QuantFormat;
 
 struct Args {
     cmd: String,
@@ -74,58 +80,6 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 /// Decode-batch width for `serve` (1 = unbatched decode).
 fn max_batch_from(args: &Args) -> Result<usize> {
     Ok(args.flags.get("max-batch").map(|s| s.parse()).transpose()?.unwrap_or(1))
-}
-
-fn json_f(x: f64) -> String {
-    format!("{x:.3}")
-}
-
-/// Machine-readable cost snapshot of the unified plan surface: pipelined
-/// prefill mpGEMM and batched-decode GEMV latencies for the paper's
-/// projection shapes, plus the tiny reference deployment's engine-level
-/// prices. Hand-rolled JSON (no serde offline); one object per line-free
-/// blob so CI can diff trajectories across PRs.
-fn bench_report() -> Result<String> {
-    let soc = SocConfig::oneplus12();
-    let npu = &soc.npu;
-    let shapes = [
-        (4096usize, 4096usize, QuantFormat::tman_w4a16()),
-        (14336, 4096, QuantFormat::tman_w4a16()),
-        (4096, 14336, QuantFormat::tman_w4a16()),
-        (2560, 2560, QuantFormat::tman_w2a16()),
-    ];
-    let mut prefill = Vec::new();
-    let mut decode = Vec::new();
-    for (m, k, fmt) in shapes {
-        let pc = PlanCosts::for_shape(npu, fmt, m, k, 128);
-        prefill.push(format!(
-            "{{\"m\":{m},\"k\":{k},\"fmt\":\"{fmt}\",\"n\":128,\"pipelined_us\":{}}}",
-            json_f(pc.prefill_us(npu, 128))
-        ));
-        let curve: Vec<String> = pc.decode_curve(npu, 8).into_iter().map(json_f).collect();
-        decode.push(format!(
-            "{{\"m\":{m},\"k\":{k},\"fmt\":\"{fmt}\",\"batched_us\":[{}]}}",
-            curve.join(",")
-        ));
-    }
-    // Engine-level prices for the tiny reference deployment the serving
-    // tests and CI smokes run (chunk 16, W4, 8 KV slots).
-    let model = weights::random_transformer(&ModelConfig::tiny(), 0);
-    let engine = Engine::reference(model, SocConfig::oneplus12(), 16, 4, 8)?;
-    let widths: Vec<String> =
-        (1..=8).map(|b| json_f(engine.sim_decode_batch_proj_us(b))).collect();
-    let eng = format!(
-        "{{\"model\":\"tiny\",\"chunk\":16,\"prefill_chunk_us\":{},\"decode_proj_us\":[{}]}}",
-        json_f(engine.plan_prefill_chunk_us(16)),
-        widths.join(",")
-    );
-    Ok(format!(
-        "{{\"schema\":1,\"soc\":\"{}\",\"prefill_gemm\":[{}],\"batched_decode\":[{}],\"engine\":{}}}",
-        soc.name,
-        prefill.join(","),
-        decode.join(","),
-        eng
-    ))
 }
 
 /// Prefer the PJRT artifact engine when the feature is on and artifacts
@@ -229,18 +183,31 @@ fn main() -> Result<()> {
             // request (the prefix-cache workload).
             let shared_prefix: usize =
                 args.flags.get("shared-prefix").map(|s| s.parse()).transpose()?.unwrap_or(0);
-            let profile = if engine.max_seq() <= 512 {
+            let mut profile = if engine.max_seq() <= 512 {
                 TraceProfile::tiny()
             } else {
                 TraceProfile::standard()
             }
             .with_shared_prefix(shared_prefix);
+            // TTFT SLO (ms of slack) on interactive requests. Only enforced
+            // when --shed is on; without the flag deadlines are recorded as
+            // misses in the report but nothing is dropped.
+            let slo_ms: Option<f64> =
+                args.flags.get("slo-ttft-ms").map(|s| s.parse()).transpose()?;
+            if let Some(ms) = slo_ms {
+                profile = profile.with_interactive_slo(ms * 1e3);
+            }
+            let policy = OverloadPolicy {
+                queue_cap: args.flags.get("queue-cap").map(|s| s.parse()).transpose()?,
+                shed: args.flags.contains_key("shed"),
+            };
             let max_batch = max_batch_from(&args)?;
             let opts = ServeOpts {
                 temperature: args.flags.get("temp").map(|s| s.parse()).transpose()?.unwrap_or(0.0),
                 verbose: args.flags.contains_key("verbose"),
                 seed,
                 max_batch,
+                policy,
                 ..Default::default()
             };
             let closed_loop: Option<usize> =
@@ -254,9 +221,17 @@ fn main() -> Result<()> {
                 max_batch,
                 engine.soc.name
             );
+            // Arrival model: the legacy Poisson synthetic trace by default,
+            // or a load-harness process (--arrivals) over the same mix.
+            let arrivals = args.flags.get("arrivals").cloned();
+            let fanout: usize =
+                args.flags.get("fanout").map(|s| s.parse()).transpose()?.unwrap_or(1);
             let mut server = Server::new(engine, opts);
-            let fleet = match closed_loop {
-                Some(concurrency) => {
+            let fleet = match (closed_loop, arrivals) {
+                (Some(_), Some(_)) => {
+                    bail!("--arrivals shapes open-loop load; it cannot combine with --closed-loop")
+                }
+                (Some(concurrency), None) => {
                     println!(
                         "serving {n} closed-loop requests ({concurrency} clients, think \
                          {think_ms} ms, {setup}) ..."
@@ -269,7 +244,19 @@ fn main() -> Result<()> {
                     };
                     server.run_closed_loop(&cl, &profile)?
                 }
-                None => {
+                (None, Some(name)) => {
+                    let Some(process) = ArrivalProcess::from_name(&name, profile.mean_gap_us)
+                    else {
+                        bail!(
+                            "unknown arrival process {name} (poisson | bursty | diurnal | \
+                             flash-crowd)"
+                        )
+                    };
+                    println!("serving {n} {name} requests (fanout {fanout}, {setup}) ...");
+                    let spec = LoadSpec::new(process, profile.clone()).with_fanout(fanout);
+                    server.run(&spec.trace(n, seed))?
+                }
+                (None, None) => {
                     println!("serving {n} synthetic requests ({setup}) ...");
                     server.run(&synthetic_trace(n, seed, &profile))?
                 }
@@ -291,18 +278,70 @@ fn main() -> Result<()> {
                     fleet.cache_saved_prefill_us / 1e3
                 );
             }
+            // CI gate for overload smokes: the run must have dropped work
+            // (admission control engaged) AND no admitted request may have
+            // missed its TTFT deadline — the structural guarantee --shed
+            // provides.
+            if args.flags.contains_key("require-shed") {
+                anyhow::ensure!(
+                    fleet.shed + fleet.rejected > 0,
+                    "--require-shed: nothing was shed or rejected ({} submitted — the load \
+                     never saturated the policy)",
+                    fleet.submitted
+                );
+                anyhow::ensure!(
+                    fleet.deadline_misses() == 0,
+                    "--require-shed: {} admitted request(s) missed their TTFT deadline",
+                    fleet.deadline_misses()
+                );
+                println!(
+                    "overload gate: {} shed + {} rejected of {} submitted, 0 admitted \
+                     deadline misses",
+                    fleet.shed, fleet.rejected, fleet.submitted
+                );
+            }
         }
         "bench" => {
             // Machine-readable kernel/serving cost snapshot, one run per
             // CI build: `tman bench --json > bench.json`. Tracks the
             // prefill-pipeline and batched-decode trajectories per PR.
             let json = args.flags.contains_key("json");
-            let report = bench_report()?;
+            let report = plan_cost_report()?;
             if json {
                 println!("{report}");
             } else {
                 println!("bench report (pass --json for the raw artifact):\n{report}");
             }
+        }
+        "bench-serving" => {
+            // Serving perf snapshot on pinned seeds: the BENCH_serving.json
+            // document CI uploads and gates against BENCH_baseline.json.
+            let doc = serving_snapshot()?;
+            match args.flags.get("out") {
+                Some(path) => {
+                    std::fs::write(path, format!("{doc}\n"))?;
+                    eprintln!("[bench-serving] wrote {path}");
+                }
+                None => println!("{doc}"),
+            }
+        }
+        "bench-check" => {
+            // Perf-regression gate: exits nonzero (via Err) when a gated
+            // metric drifts past tolerance in its worse direction.
+            let baseline_path = args
+                .flags
+                .get("baseline")
+                .ok_or_else(|| anyhow::anyhow!("bench-check needs --baseline FILE"))?;
+            let current_path = args
+                .flags
+                .get("current")
+                .ok_or_else(|| anyhow::anyhow!("bench-check needs --current FILE"))?;
+            let tolerance: f64 =
+                args.flags.get("tolerance").map(|s| s.parse()).transpose()?.unwrap_or(0.15);
+            let baseline = std::fs::read_to_string(baseline_path)?;
+            let current = std::fs::read_to_string(current_path)?;
+            let report = compare_benchmarks(&baseline, &current, tolerance)?;
+            print!("{report}");
         }
         "info" => {
             let meta = tman::runtime::artifacts::ArtifactMeta::load(&artifacts_dir(&args))?;
@@ -328,7 +367,7 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "t-man coordinator\n\
-                 usage: tman <generate|serve|bench|info> [flags]\n\
+                 usage: tman <generate|serve|bench|bench-serving|bench-check|info> [flags]\n\
                  generate: --prompt S --max-new N --temp T --greedy\n\
                  serve:    --trace synthetic --requests N --seed S --verbose --temp T\n\
                  \x20         --max-batch B (decode-batch width, default 1)\n\
@@ -337,7 +376,17 @@ fn main() -> Result<()> {
                  \x20         --shared-prefix BYTES (fixed system prompt on every\n\
                  \x20         request) --require-hits (fail unless the prefix\n\
                  \x20         cache hit)\n\
+                 \x20         --arrivals poisson|bursty|diurnal|flash-crowd (load-\n\
+                 \x20         harness arrival process) --fanout K (siblings per\n\
+                 \x20         arrival) --slo-ttft-ms X (TTFT slack on interactive\n\
+                 \x20         requests) --queue-cap N (bounded admission queue)\n\
+                 \x20         --shed (reject/shed past deadlines) --require-shed\n\
+                 \x20         (fail unless work was dropped and no admitted\n\
+                 \x20         request missed its deadline)\n\
                  bench:    --json (machine-readable plan-cost snapshot)\n\
+                 bench-serving: [--out FILE] (BENCH_serving.json snapshot)\n\
+                 bench-check:   --baseline FILE --current FILE [--tolerance 0.15]\n\
+                 \x20         (perf-regression gate vs the committed baseline)\n\
                  shared:   --model tiny|small|base --chunk C --kv-slots N (default\n\
                  \x20         max-batch + 2) --bits 2|4 --artifacts DIR\n\
                  \x20         --kv-blocks N --block-tokens T --prefix-cache (paged\n\

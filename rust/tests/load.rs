@@ -1,0 +1,147 @@
+//! Load-harness integration properties: every arrival process × overload
+//! policy combination must keep the serving loop's terminal-state
+//! accounting exact, its KV pool clean, and (with shedding on) its
+//! admitted deadlines unmissable — under the preemption churn a
+//! contended tiny engine produces.
+
+use tman::coordinator::engine::Engine;
+use tman::coordinator::server::{OverloadPolicy, ServeOpts, Server, TraceProfile};
+use tman::kvpool::KvPoolConfig;
+use tman::load::{ArrivalProcess, LoadSpec};
+use tman::model::config::ModelConfig;
+use tman::model::weights::random_transformer;
+use tman::npu::config::SocConfig;
+
+const MODEL_SEED: u64 = 1;
+
+/// A deliberately contended engine: small chunk (long prompts preempt and
+/// resume across many slices) and few KV slots (decode lanes evict).
+fn contended_engine() -> Engine {
+    let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
+    Engine::reference(model, SocConfig::oneplus12(), 16, 4, 3).expect("engine")
+}
+
+fn prefix_engine() -> Engine {
+    let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
+    let blocks = 3 * model.cfg.max_seq.div_ceil(16);
+    let kv = KvPoolConfig::paged(blocks, 16, true);
+    Engine::reference_paged(model, SocConfig::oneplus12(), 16, 4, kv).expect("engine")
+}
+
+fn serve(
+    spec: &LoadSpec,
+    n: usize,
+    seed: u64,
+    policy: OverloadPolicy,
+    engine: Engine,
+) -> tman::coordinator::metrics::FleetMetrics {
+    let opts = ServeOpts { max_batch: 2, policy, ..Default::default() };
+    let mut server = Server::new(engine, opts);
+    let fleet = server.run(&spec.trace(n, seed)).expect("serve");
+    assert_eq!(
+        server.engine().kv_slots_in_use(),
+        0,
+        "every terminal path must release its KV"
+    );
+    fleet
+}
+
+fn all_processes() -> Vec<ArrivalProcess> {
+    vec![
+        ArrivalProcess::Poisson { mean_gap_us: 300.0 },
+        ArrivalProcess::bursty(300.0),
+        ArrivalProcess::diurnal(300.0),
+        ArrivalProcess::flash_crowd(300.0),
+    ]
+}
+
+#[test]
+fn accounting_invariant_holds_under_randomized_overload() {
+    // Every submitted request must end in exactly one terminal state —
+    // completed, shed, or rejected — for every arrival shape and policy,
+    // across seeds. The serving loop also cross-checks this after every
+    // work item; this test pins the external contract.
+    let n = 16;
+    let policy = OverloadPolicy { queue_cap: Some(2), shed: true };
+    for process in all_processes() {
+        for seed in [1u64, 2] {
+            let spec = LoadSpec::new(process.clone(), TraceProfile::tiny()).with_slo(1_500.0);
+            let fleet = serve(&spec, n, seed, policy.clone(), contended_engine());
+            assert_eq!(fleet.submitted, n, "open-loop load submits every request");
+            assert_eq!(
+                fleet.completions.len() + fleet.shed + fleet.rejected,
+                fleet.submitted,
+                "{process:?} seed {seed}: terminal states must partition submissions"
+            );
+            assert_eq!(fleet.admitted(), fleet.completions.len());
+            let by_class: usize = fleet.shed_by_priority.iter().map(|&(_, c)| c).sum();
+            assert_eq!(by_class, fleet.shed, "per-class shed counts must sum to the total");
+            assert_eq!(
+                fleet.deadline_misses(),
+                0,
+                "{process:?} seed {seed}: shedding makes admitted deadlines unmissable"
+            );
+        }
+    }
+}
+
+#[test]
+fn each_policy_knob_alone_keeps_the_books() {
+    let spec = LoadSpec::new(ArrivalProcess::flash_crowd(300.0), TraceProfile::tiny())
+        .with_slo(1_000.0);
+    // Queue bound only: displacement and rejection, no deadline shedding.
+    let capped = serve(
+        &spec,
+        16,
+        3,
+        OverloadPolicy { queue_cap: Some(1), shed: false },
+        contended_engine(),
+    );
+    assert_eq!(capped.completions.len() + capped.shed + capped.rejected, capped.submitted);
+    assert!(
+        capped.shed + capped.rejected > 0,
+        "a flash crowd against a 1-deep queue must drop work"
+    );
+    // Shedding only: unbounded queue, deadline enforcement.
+    let shed = serve(
+        &spec,
+        16,
+        3,
+        OverloadPolicy { queue_cap: None, shed: true },
+        contended_engine(),
+    );
+    assert_eq!(shed.completions.len() + shed.shed + shed.rejected, shed.submitted);
+    assert_eq!(shed.deadline_misses(), 0);
+}
+
+#[test]
+fn serving_a_load_spec_is_deterministic_end_to_end() {
+    let spec = LoadSpec::new(ArrivalProcess::bursty(300.0), TraceProfile::tiny())
+        .with_slo(2_000.0)
+        .with_fanout(2);
+    let policy = OverloadPolicy { queue_cap: Some(3), shed: true };
+    let a = serve(&spec, 12, 9, policy.clone(), contended_engine());
+    let b = serve(&spec, 12, 9, policy, contended_engine());
+    assert_eq!(a.report(), b.report(), "same spec + seed must replay exactly");
+    assert_eq!(a.ttft_us(), b.ttft_us());
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.rejected, b.rejected);
+}
+
+#[test]
+fn fanout_siblings_hit_the_prefix_cache() {
+    // TTC-style fan-out shares the whole prompt across siblings, so a
+    // prefix-cache engine must convert the duplicates into cache hits.
+    let spec = LoadSpec::new(
+        ArrivalProcess::Poisson { mean_gap_us: 800.0 },
+        TraceProfile::tiny().with_shared_prefix(48),
+    )
+    .with_fanout(4);
+    let fleet = serve(&spec, 16, 6, OverloadPolicy::default(), prefix_engine());
+    assert_eq!(fleet.completions.len(), 16, "no policy active: everything completes");
+    assert!(
+        fleet.prefix_hits > 0,
+        "sibling prompts must hit the prefix cache ({} lookups)",
+        fleet.prefix_lookups
+    );
+}

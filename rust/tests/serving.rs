@@ -7,7 +7,7 @@
 
 use tman::coordinator::engine::Engine;
 use tman::coordinator::server::{
-    synthetic_trace, ClosedLoopOpts, ServeOpts, Server, TraceProfile, TraceRequest,
+    synthetic_trace, ClosedLoopOpts, OverloadPolicy, ServeOpts, Server, TraceProfile, TraceRequest,
 };
 use tman::kvpool::KvPoolConfig;
 use tman::model::config::ModelConfig;
@@ -47,6 +47,7 @@ fn preemption_trace() -> Vec<TraceRequest> {
             priority: 4,
             prompt: "x".repeat(96),
             max_new_tokens: 4,
+            ttft_deadline_us: None,
         },
         TraceRequest {
             id: 2,
@@ -54,6 +55,7 @@ fn preemption_trace() -> Vec<TraceRequest> {
             priority: 0,
             prompt: "hi there".to_string(),
             max_new_tokens: 4,
+            ttft_deadline_us: None,
         },
     ]
 }
@@ -189,6 +191,7 @@ fn saturated_decode_batches_report_occupancy_above_one() {
             priority: 0,
             prompt: "a short interactive prompt".to_string(),
             max_new_tokens: 12,
+            ttft_deadline_us: None,
         })
         .collect();
     let opts = ServeOpts { max_batch: 4, ..Default::default() };
@@ -218,6 +221,7 @@ fn urgent_request_evicts_a_low_priority_decode_lane() {
             priority: 4,
             prompt: "the lookup table".to_string(),
             max_new_tokens: 12,
+            ttft_deadline_us: None,
         },
         TraceRequest {
             id: 2,
@@ -225,6 +229,7 @@ fn urgent_request_evicts_a_low_priority_decode_lane() {
             priority: 0,
             prompt: "hi there".to_string(),
             max_new_tokens: 3,
+            ttft_deadline_us: None,
         },
     ];
     let mut server = Server::new(engine_with(16, 3), ServeOpts::default());
@@ -262,6 +267,7 @@ fn decode_batches_report_kernel_derived_cost() {
             priority: 0,
             prompt: "a short interactive prompt".to_string(),
             max_new_tokens: 12,
+            ttft_deadline_us: None,
         })
         .collect();
     let wide = Server::new(engine_with(16, 6), ServeOpts { max_batch: 4, ..Default::default() })
@@ -367,6 +373,7 @@ fn prefix_cache_survives_preemption_and_reruns_identically() {
                 priority: 4,
                 prompt: format!("{shared}{}", "x".repeat(60)),
                 max_new_tokens: 4,
+                ttft_deadline_us: None,
             },
             TraceRequest {
                 id: 2,
@@ -374,6 +381,7 @@ fn prefix_cache_survives_preemption_and_reruns_identically() {
                 priority: 0,
                 prompt: format!("{shared}hi"),
                 max_new_tokens: 4,
+                ttft_deadline_us: None,
             },
         ]
     };
@@ -411,6 +419,7 @@ fn stop_byte_finishes_a_request_early_without_leaking() {
         priority: 0,
         prompt: "hello world".to_string(),
         max_new_tokens: 8,
+        ttft_deadline_us: None,
     }];
     let opts = ServeOpts { stop_byte: Some(first as u8), ..Default::default() };
     let fleet = Server::new(tiny_engine(16), opts).run(&trace).expect("serve");
@@ -482,6 +491,127 @@ fn single_client_closed_loop_serializes_with_exact_think_time() {
     for c in &fleet.completions {
         assert!(c.queue_wait_us.abs() < 1e-9, "an idle server must admit instantly");
     }
+}
+
+/// A flash-crowd burst of interactive requests arriving at once, each
+/// carrying `slack_us` of TTFT slack (None = best-effort).
+fn overload_trace(n: usize, slack_us: Option<f64>) -> Vec<TraceRequest> {
+    (0..n)
+        .map(|i| TraceRequest {
+            id: i as u64 + 1,
+            arrival_us: i as f64 * 1e-3,
+            priority: 0,
+            prompt: "an urgent interactive prompt".to_string(),
+            max_new_tokens: 4,
+            ttft_deadline_us: slack_us,
+        })
+        .collect()
+}
+
+#[test]
+fn default_policy_keeps_accounting_trivial() {
+    // No cap, no shedding: every submitted request completes, and the new
+    // counters stay inert.
+    let trace = synthetic_trace(8, 3, &TraceProfile::tiny());
+    let fleet = Server::new(tiny_engine(16), ServeOpts::default()).run(&trace).expect("serve");
+    assert_eq!(fleet.submitted, 8);
+    assert_eq!(fleet.shed, 0);
+    assert_eq!(fleet.rejected, 0);
+    assert_eq!(fleet.admitted(), 8);
+    assert_eq!(fleet.completions.len(), 8);
+    assert!(fleet.shed_by_priority.is_empty());
+}
+
+#[test]
+fn shedding_makes_admitted_deadlines_unmissable() {
+    // Self-calibrating overload test: measure the burst's no-policy TTFT
+    // tail, set the deadline to a quarter of it, and re-serve. Without
+    // shedding the tail blows the deadline; with shedding, an admitted
+    // request can never miss (the shed pass runs at the clock the next
+    // token batch samples at), so the only possible outcomes for the tail
+    // are "shed" or "rejected" — and at least one must occur, because a
+    // shed-free, rejection-free run would replay the no-policy schedule
+    // whose tail misses.
+    let opts = |shed: bool| ServeOpts {
+        max_batch: 2,
+        policy: OverloadPolicy { queue_cap: None, shed },
+        ..Default::default()
+    };
+    let base = Server::new(engine_with(16, 4), opts(false))
+        .run(&overload_trace(12, None))
+        .expect("calibration run");
+    let worst = base.completions.iter().map(|c| c.ttft_us).fold(0.0, f64::max);
+    assert!(worst > 0.0);
+    let slack = worst / 4.0;
+
+    let noshed = Server::new(engine_with(16, 4), opts(false))
+        .run(&overload_trace(12, Some(slack)))
+        .expect("no-shed run");
+    assert_eq!(noshed.shed, 0);
+    assert_eq!(noshed.rejected, 0);
+    assert!(noshed.deadline_misses() >= 1, "the no-shed tail must blow the deadline");
+
+    let mut server = Server::new(engine_with(16, 4), opts(true));
+    let shed = server.run(&overload_trace(12, Some(slack))).expect("shed run");
+    assert_eq!(shed.deadline_misses(), 0, "an admitted request must never miss");
+    assert!(shed.shed + shed.rejected >= 1, "overload must drop something");
+    assert_eq!(shed.completions.len() + shed.shed + shed.rejected, shed.submitted);
+    assert_eq!(shed.submitted, 12);
+    let dropped: usize = shed.shed_by_priority.iter().map(|&(_, n)| n).sum();
+    assert_eq!(dropped, shed.shed, "per-class shed counts must sum to the total");
+    assert_eq!(server.engine().kv_slots_in_use(), 0, "shedding must not leak KV");
+}
+
+#[test]
+fn bounded_queue_displaces_low_priority_and_rejects_overflow() {
+    // Eight simultaneous arrivals — four batch documents first, then four
+    // interactive requests — against a 2-deep unstarted queue. The batch
+    // overflow is rejected outright; the interactive arrivals displace the
+    // queued batch requests (youngest first) and the interactive overflow
+    // is rejected once only peers remain.
+    let mut trace = Vec::new();
+    for i in 0..8u64 {
+        trace.push(TraceRequest {
+            id: i + 1,
+            arrival_us: 0.0,
+            priority: if i < 4 { 4 } else { 0 },
+            prompt: "a queued request".to_string(),
+            max_new_tokens: 2,
+            ttft_deadline_us: None,
+        });
+    }
+    let serve = ServeOpts {
+        policy: OverloadPolicy { queue_cap: Some(2), shed: false },
+        ..Default::default()
+    };
+    let mut server = Server::new(engine_with(16, 4), serve);
+    let fleet = server.run(&trace).expect("serve");
+    assert_eq!(fleet.submitted, 8);
+    assert_eq!(fleet.rejected, 4, "batch overflow (2) + interactive overflow (2)");
+    assert_eq!(fleet.shed, 2, "both queued batch requests are displaced");
+    assert_eq!(fleet.shed_by_priority, vec![(4, 2)]);
+    let mut ids: Vec<u64> = fleet.completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![5, 6], "the first two interactive arrivals win the queue");
+    assert_eq!(server.engine().kv_slots_in_use(), 0);
+}
+
+#[test]
+fn closed_loop_clients_return_after_rejection() {
+    // A 1-deep queue under 3 clients: some submissions are turned away.
+    // The rejected client must re-enter its think loop (the run would
+    // deadlock otherwise) and the accounting must balance at the budget.
+    let opts = ClosedLoopOpts { total: 12, concurrency: 3, think_us: 100.0, seed: 5 };
+    let serve = ServeOpts {
+        policy: OverloadPolicy { queue_cap: Some(1), shed: false },
+        ..Default::default()
+    };
+    let fleet = Server::new(engine_with(16, 4), serve)
+        .run_closed_loop(&opts, &TraceProfile::tiny())
+        .expect("serve");
+    assert_eq!(fleet.submitted, 12, "every issued request must be accounted");
+    assert_eq!(fleet.completions.len() + fleet.shed + fleet.rejected, 12);
+    assert!(!fleet.completions.is_empty(), "the bounded queue must still serve work");
 }
 
 #[test]
