@@ -233,6 +233,7 @@ fn direction_of(key: &str) -> Direction {
         || key.ends_with("_ms")
         || key.ends_with(".shed_rate")
         || key.ends_with(".deadline_misses")
+        || key.ends_with(".load_imbalance")
     {
         Direction::HigherWorse
     } else if key.contains("goodput")
@@ -265,8 +266,9 @@ pub fn compare_benchmarks(baseline: &str, current: &str, tolerance: f64) -> Resu
 
     if get(&base, "bootstrap").is_some_and(|v| v != 0.0) {
         return Ok(format!(
-            "baseline is a bootstrap placeholder — gate passes with notice; refresh it \
-             from a real run ({} current metric(s) recorded)",
+            "WARNING: baseline is a bootstrap placeholder — NOTHING was gated this run.\n\
+             Refresh it from a real run (`tman bench-serving --out BENCH_baseline.json`)\n\
+             and commit the result; until then {} current metric(s) go unchecked.",
             cur.len()
         ));
     }
@@ -468,6 +470,15 @@ mod tests {
             ("flash_shed.goodput_tps", 50.0),
         ]);
         compare_benchmarks(&base, &control_moved, 0.15).expect("control arm is ungated");
+    }
+
+    #[test]
+    fn gate_treats_load_imbalance_as_higher_worse() {
+        let base = doc(&[("fleet_ca.load_imbalance", 1.2), ("fleet_ca.goodput_tps", 100.0)]);
+        let skewed = doc(&[("fleet_ca.load_imbalance", 2.0), ("fleet_ca.goodput_tps", 100.0)]);
+        let err = compare_benchmarks(&base, &skewed, 0.15).expect_err("imbalance regressed");
+        assert!(err.to_string().contains("load_imbalance"), "{err}");
+        compare_benchmarks(&base, &base, 0.15).expect("flat imbalance passes");
     }
 
     #[test]

@@ -1,0 +1,630 @@
+//! Multi-replica fleet serving: N engine replicas (simulated NPU devices,
+//! each its own [`Engine`] + paged KV pool) behind an admission router.
+//!
+//! The router walks the arrival trace in time order and places every
+//! request on one replica *before* simulation, using a virtual-clock load
+//! model (single-server approximation priced off the engine's own cost
+//! surface) plus a prefix-affinity map keyed by the KV pool's
+//! block-aligned prefix keys ([`prefix_block_keys`] — the same whole-block
+//! token runs the radix index caches). Each replica then serves its
+//! assigned sub-trace with the unmodified [`Server`] loop — per-replica
+//! overload policy, shedding, paged KV and all — and the per-replica
+//! [`FleetMetrics`] merge into one fleet-level view
+//! ([`FleetMetrics::merged`]: counters sum, makespan is the parallel max).
+//!
+//! Routing policies:
+//!
+//! - [`RoutingPolicy::RoundRobin`] — arrival `i` lands on replica
+//!   `i % n`. The affinity-blind baseline.
+//! - [`RoutingPolicy::LeastLoaded`] — the replica with the least virtual
+//!   backlog (µs of estimated unfinished work) wins; ties break on the
+//!   lowest index.
+//! - [`RoutingPolicy::CacheAware`] — replicas are scored
+//!   `load(k) − saved(k) − sticky(k)`:
+//!   `saved(k)` is the prefill time the replica's resident prefix blocks
+//!   would skip (matched leading keys × tokens/block × prefill price), and
+//!   `sticky(k)` is a one-prefix-prefill investment bonus for the
+//!   request's *home* replica — rendezvous (highest-random-weight) hash of
+//!   its deepest block key (the keys are a running hash, so the last one
+//!   covers the whole block-aligned prefix and separates requests that
+//!   merely share a system prompt) — so same-prefix traffic consolidates
+//!   deterministically before any replica holds the prefix. The smallest
+//!   score wins; as the home replica's backlog grows past the prefix's
+//!   worth, the load term hands the traffic to another replica, which then
+//!   builds its own resident copy.
+//!
+//! **Work stealing:** when an assignment leaves a replica's virtual queue
+//! of unstarted requests more than [`STEAL_DEPTH_MARGIN`] deeper than the
+//! shallowest replica's (or past its admission cap), the router re-routes
+//! one *unstarted* queued request — preferring one with no prefix affinity
+//! to the hot replica — to the shallowest replica. Started work never
+//! moves: its KV lives on the replica that prefilled it.
+//!
+//! **Overload:** the per-replica [`Server`] applies the run's
+//! `OverloadPolicy` unchanged (bounded queue, displacement, deadline
+//! shedding). On top, when every replica's virtual unstarted queue is at
+//! the admission cap, the router rejects the arrival outright —
+//! fleet-level back-pressure when the whole fleet is full — and those
+//! rejections are folded into the merged `submitted`/`rejected` counters,
+//! so terminal accounting (`completed + shed + rejected == submitted`)
+//! holds fleet-wide.
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::FleetMetrics;
+use crate::coordinator::server::{ServeOpts, Server, TraceRequest};
+use crate::kvpool::prefix_block_keys;
+use crate::model::tokenizer;
+use anyhow::{ensure, Result};
+use std::collections::HashSet;
+
+/// How the fleet router places arrivals across replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Arrival `i` lands on replica `i % n` — the affinity-blind baseline.
+    RoundRobin,
+    /// Least virtual backlog wins; ties break on the lowest index.
+    LeastLoaded,
+    /// Load *and* prefix affinity: `load − saved − sticky` scoring with a
+    /// rendezvous-hashed home replica per prefix (see module docs).
+    CacheAware,
+}
+
+impl RoutingPolicy {
+    /// CLI name → policy.
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "round-robin" | "round_robin" | "rr" => Some(RoutingPolicy::RoundRobin),
+            "least-loaded" | "least_loaded" => Some(RoutingPolicy::LeastLoaded),
+            "cache-aware" | "cache_aware" => Some(RoutingPolicy::CacheAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::LeastLoaded => "least-loaded",
+            RoutingPolicy::CacheAware => "cache-aware",
+        }
+    }
+}
+
+/// A replica's virtual queue can run this much deeper than the shallowest
+/// replica's before the router steals from it (when no admission cap sets
+/// a tighter bound).
+const STEAL_DEPTH_MARGIN: usize = 2;
+
+/// splitmix64 — the mixer behind the rendezvous hash and the prefix-key
+/// spread. Deterministic across runs and machines.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Rendezvous (highest-random-weight) hash: the home replica for a prefix
+/// key. Consistent — adding or removing a replica only moves the keys
+/// whose maximum weight changed.
+fn home_replica(key: u64, replicas: usize) -> usize {
+    let mut best = 0usize;
+    let mut best_w = 0u64;
+    for k in 0..replicas {
+        let w = mix64(key ^ mix64(k as u64 + 1));
+        if k == 0 || w > best_w {
+            best = k;
+            best_w = w;
+        }
+    }
+    best
+}
+
+/// One request the router has assigned but whose replica (by the virtual
+/// clock) has not started it yet — the unit work stealing moves.
+#[derive(Debug, Clone)]
+struct QueuedEst {
+    trace_idx: usize,
+    est_start_us: f64,
+    est_us: f64,
+    /// Whether the assignment was made for prefix affinity (sticky or
+    /// resident match) — stealing prefers to move non-affine work.
+    affine: bool,
+}
+
+/// Router-side virtual state for one replica.
+struct ReplicaState {
+    /// Virtual clock: when this replica's backlog drains under the
+    /// single-server cost estimate.
+    busy_until_us: f64,
+    /// Assigned-and-virtually-unstarted requests, oldest first.
+    queued: Vec<QueuedEst>,
+    /// Block-aligned prefix keys estimated resident in this replica's KV
+    /// (bounded FIFO — the pool cannot hold more than its block count).
+    resident: HashSet<u64>,
+    resident_order: Vec<u64>,
+    resident_cap: usize,
+    routed: usize,
+    stolen_in: usize,
+    stolen_out: usize,
+}
+
+impl ReplicaState {
+    fn new(resident_cap: usize) -> Self {
+        Self {
+            busy_until_us: 0.0,
+            queued: Vec::new(),
+            resident: HashSet::new(),
+            resident_order: Vec::new(),
+            resident_cap: resident_cap.max(1),
+            routed: 0,
+            stolen_in: 0,
+            stolen_out: 0,
+        }
+    }
+
+    /// µs of estimated backlog at simulated time `now`.
+    fn load_us(&self, now_us: f64) -> f64 {
+        (self.busy_until_us - now_us).max(0.0)
+    }
+
+    /// Requests assigned but (virtually) not yet started at `now`.
+    fn unstarted_depth(&self, now_us: f64) -> usize {
+        self.queued.iter().filter(|q| q.est_start_us > now_us).count()
+    }
+
+    /// Leading keys of `keys` resident here — whole shared prefix blocks.
+    fn matched_keys(&self, keys: &[u64]) -> usize {
+        keys.iter().take_while(|k| self.resident.contains(k)).count()
+    }
+
+    fn note_resident(&mut self, keys: &[u64]) {
+        for &k in keys {
+            if self.resident.insert(k) {
+                self.resident_order.push(k);
+            }
+        }
+        while self.resident_order.len() > self.resident_cap {
+            let old = self.resident_order.remove(0);
+            self.resident.remove(&old);
+        }
+    }
+
+    fn enqueue(&mut self, now_us: f64, entry_idx: usize, est_us: f64, affine: bool) {
+        let start = self.busy_until_us.max(now_us);
+        self.busy_until_us = start + est_us;
+        self.queued.push(QueuedEst {
+            trace_idx: entry_idx,
+            est_start_us: start,
+            est_us,
+            affine,
+        });
+    }
+
+    /// Drop entries the virtual clock has started — they can no longer be
+    /// stolen and only slow the depth scans.
+    fn prune_started(&mut self, now_us: f64) {
+        self.queued.retain(|q| q.est_start_us > now_us);
+    }
+}
+
+/// Per-replica slice of a fleet run.
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    /// Requests the router finally assigned here (after stealing).
+    pub routed: usize,
+    /// Requests stolen *into* this replica from a saturated one.
+    pub stolen_in: usize,
+    /// Requests stolen *out of* this replica's virtual queue.
+    pub stolen_out: usize,
+    /// The replica's own serving-run metrics.
+    pub metrics: FleetMetrics,
+}
+
+/// The outcome of a fleet run: the merged fleet-level view plus the
+/// per-replica breakdown the router-quality metrics derive from.
+#[derive(Debug, Clone)]
+pub struct FleetRun {
+    pub routing: RoutingPolicy,
+    /// Fleet-level merged metrics ([`FleetMetrics::merged`] of the
+    /// replicas, with router-level rejections folded into
+    /// `submitted`/`rejected`).
+    pub merged: FleetMetrics,
+    pub replicas: Vec<ReplicaStats>,
+    /// Requests the router re-routed off a saturated replica before they
+    /// started.
+    pub steals: usize,
+    /// Arrivals turned away at the router because every replica's virtual
+    /// admission queue was full.
+    pub router_rejected: usize,
+}
+
+impl FleetRun {
+    /// Processed-token load imbalance: the busiest replica's share over
+    /// the mean (1.0 = perfectly balanced; n = everything on one replica).
+    pub fn load_imbalance(&self) -> f64 {
+        let tokens: Vec<f64> = self
+            .replicas
+            .iter()
+            .map(|r| (r.metrics.prompt_tokens() + r.metrics.generated_tokens()) as f64)
+            .collect();
+        let mean = tokens.iter().sum::<f64>() / tokens.len().max(1) as f64;
+        if mean <= 0.0 {
+            return 1.0;
+        }
+        tokens.iter().fold(0.0f64, |a, &b| a.max(b)) / mean
+    }
+
+    /// Fleet-wide prefix hit rate across every replica's cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        self.merged.prefix_hit_rate()
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "fleet           : {} replica(s), {} routing, {} steal(s), \
+             {} router-rejected\n\
+             balance         : {:.2}x token imbalance (1.0 = even), \
+             {:.0}% fleet prefix hit rate",
+            self.replicas.len(),
+            self.routing.name(),
+            self.steals,
+            self.router_rejected,
+            self.load_imbalance(),
+            100.0 * self.prefix_hit_rate(),
+        );
+        for (i, r) in self.replicas.iter().enumerate() {
+            out.push_str(&format!(
+                "\n  replica {i}     : {} routed (+{} stolen in / -{} out), \
+                 {} done, {} shed, {} rejected, {:.2} ms busy",
+                r.routed,
+                r.stolen_in,
+                r.stolen_out,
+                r.metrics.completions.len(),
+                r.metrics.shed,
+                r.metrics.rejected,
+                r.metrics.makespan_us / 1e3,
+            ));
+        }
+        out.push('\n');
+        out.push_str(&self.merged.report());
+        out
+    }
+}
+
+/// N engine replicas behind the admission router.
+pub struct Fleet {
+    replicas: Vec<Server>,
+    routing: RoutingPolicy,
+    opts: ServeOpts,
+    /// Prefill µs per prompt token and decode µs per generated token, off
+    /// the replicas' (shared) cost surface — the router's load estimate.
+    prefill_us_per_tok: f64,
+    decode_us_per_tok: f64,
+    block_tokens: usize,
+    resident_cap: usize,
+}
+
+impl Fleet {
+    /// Build a fleet over `engines` (one replica each). Replicas must
+    /// share chunk and KV block geometry so prefix keys and cost
+    /// estimates mean the same thing everywhere.
+    pub fn new(engines: Vec<Engine>, routing: RoutingPolicy, opts: ServeOpts) -> Result<Self> {
+        ensure!(!engines.is_empty(), "a fleet needs at least one replica");
+        let chunk = engines[0].chunk().max(1);
+        let block_tokens = engines[0].kv_block_tokens().max(1);
+        let resident_cap = engines[0].kv_slot_capacity().max(1);
+        for (i, e) in engines.iter().enumerate() {
+            ensure!(
+                e.chunk() == engines[0].chunk() && e.kv_block_tokens() == block_tokens,
+                "replica {i} geometry diverges (chunk {} / {} tok/block; replica 0 \
+                 has {} / {block_tokens})",
+                e.chunk(),
+                e.kv_block_tokens(),
+                engines[0].chunk(),
+            );
+        }
+        let prefill_us_per_tok = engines[0].sim_prefill_slice_us(0, chunk) / chunk as f64;
+        let mid_ctx = (engines[0].max_seq() / 2).max(1);
+        let decode_us_per_tok = engines[0].sim_decode_us(mid_ctx);
+        let replicas =
+            engines.into_iter().map(|e| Server::new(e, opts.clone())).collect();
+        Ok(Self {
+            replicas,
+            routing,
+            opts,
+            prefill_us_per_tok,
+            decode_us_per_tok,
+            block_tokens,
+            resident_cap,
+        })
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn routing(&self) -> RoutingPolicy {
+        self.routing
+    }
+
+    /// Estimated service time for a request with `uncached` prompt tokens
+    /// left to prefill and `max_new` tokens to decode.
+    fn est_us(&self, uncached_tokens: usize, max_new: usize) -> f64 {
+        uncached_tokens as f64 * self.prefill_us_per_tok
+            + max_new.max(1) as f64 * self.decode_us_per_tok
+    }
+
+    /// Serve an open-loop trace across the fleet: route every arrival,
+    /// run each replica's serving loop on its assigned sub-trace, merge.
+    pub fn run(&mut self, trace: &[TraceRequest]) -> Result<FleetRun> {
+        let n = self.replicas.len();
+        let mut ordered: Vec<TraceRequest> = trace.to_vec();
+        ordered.sort_by(|a, b| {
+            a.arrival_us.partial_cmp(&b.arrival_us).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut assignment: Vec<Option<usize>> = vec![None; ordered.len()];
+        let mut state: Vec<ReplicaState> =
+            (0..n).map(|_| ReplicaState::new(self.resident_cap)).collect();
+        let mut steals = 0usize;
+        let mut router_rejected = 0usize;
+        let mut rr_next = 0usize;
+
+        for (idx, t) in ordered.iter().enumerate() {
+            let now = t.arrival_us;
+            for s in state.iter_mut() {
+                s.prune_started(now);
+            }
+            let prompt = tokenizer::encode(&t.prompt);
+            let keys = prefix_block_keys(&prompt, self.block_tokens);
+
+            // Fleet-level back-pressure: with an admission cap configured,
+            // an arrival that would find every replica's unstarted queue
+            // full is rejected at the router, before any replica sees it.
+            if let Some(cap) = self.opts.policy.queue_cap {
+                let cap = cap.max(1);
+                if state.iter().all(|s| s.unstarted_depth(now) >= cap) {
+                    router_rejected += 1;
+                    continue;
+                }
+            }
+
+            let matched: Vec<usize> = state.iter().map(|s| s.matched_keys(&keys)).collect();
+            let chosen = match self.routing {
+                RoutingPolicy::RoundRobin => {
+                    let k = rr_next % n;
+                    rr_next += 1;
+                    k
+                }
+                RoutingPolicy::LeastLoaded => argmin_load(&state, now),
+                RoutingPolicy::CacheAware => {
+                    // Key the home off the *deepest* block hash: the keys
+                    // are a running FNV chain, so the last one identifies
+                    // the full block-aligned prefix — fan-out siblings
+                    // share it, while requests that only share the system
+                    // prompt do not, and so spread across the fleet.
+                    let home = keys.last().map(|&kl| home_replica(kl, n));
+                    let prefix_us =
+                        (keys.len() * self.block_tokens) as f64 * self.prefill_us_per_tok;
+                    let mut best = 0usize;
+                    let mut best_score = f64::INFINITY;
+                    for (k, s) in state.iter().enumerate() {
+                        let saved_us = (matched[k] * self.block_tokens) as f64
+                            * self.prefill_us_per_tok;
+                        let sticky_us = if home == Some(k) { prefix_us } else { 0.0 };
+                        let score = s.load_us(now) - saved_us - sticky_us;
+                        if score < best_score {
+                            best = k;
+                            best_score = score;
+                        }
+                    }
+                    best
+                }
+            };
+
+            // The estimate the virtual clock charges: cached leading
+            // blocks prefill for free on the chosen replica.
+            let cached = (matched[chosen] * self.block_tokens).min(prompt.len());
+            let est = self.est_us(prompt.len() - cached, t.max_new_tokens);
+            let affine = matched[chosen] > 0
+                || keys.last().is_some_and(|&kl| home_replica(kl, n) == chosen);
+            assignment[idx] = Some(chosen);
+            state[chosen].routed += 1;
+            state[chosen].enqueue(now, idx, est, affine);
+            state[chosen].note_resident(&keys);
+
+            // Work stealing: the assignment may have left `chosen` far
+            // deeper than the shallowest replica — move one unstarted,
+            // preferably non-affine request over (never the one just
+            // placed: the router chose its replica on purpose).
+            let depth = state[chosen].unstarted_depth(now);
+            let threshold = self
+                .opts
+                .policy
+                .queue_cap
+                .map_or(STEAL_DEPTH_MARGIN + 1, |c| c.max(1));
+            if depth >= threshold {
+                let target = argmin_depth(&state, now);
+                if target != chosen
+                    && state[target].unstarted_depth(now) + STEAL_DEPTH_MARGIN < depth
+                {
+                    let victim = pick_victim(&state[chosen].queued, now, idx);
+                    if let Some(v) = victim {
+                        let q = state[chosen].queued.remove(v);
+                        state[chosen].busy_until_us =
+                            (state[chosen].busy_until_us - q.est_us).max(now);
+                        state[chosen].routed -= 1;
+                        state[chosen].stolen_out += 1;
+                        assignment[q.trace_idx] = Some(target);
+                        state[target].routed += 1;
+                        state[target].stolen_in += 1;
+                        state[target].enqueue(now, q.trace_idx, q.est_us, false);
+                        steals += 1;
+                    }
+                }
+            }
+        }
+
+        // Split the trace by final assignment (arrival order preserved)
+        // and run every replica's serving loop on its share.
+        let mut subtraces: Vec<Vec<TraceRequest>> = vec![Vec::new(); n];
+        for (idx, t) in ordered.iter().enumerate() {
+            if let Some(k) = assignment[idx] {
+                subtraces[k].push(t.clone());
+            }
+        }
+        let mut replicas = Vec::with_capacity(n);
+        for (k, (server, sub)) in self.replicas.iter_mut().zip(&subtraces).enumerate() {
+            let metrics = server.run(sub)?;
+            replicas.push(ReplicaStats {
+                routed: state[k].routed,
+                stolen_in: state[k].stolen_in,
+                stolen_out: state[k].stolen_out,
+                metrics,
+            });
+        }
+        let mut merged = FleetMetrics::merged(replicas.iter().map(|r| &r.metrics));
+        // Router rejections are fleet-level terminal states: fold them in
+        // so `completed + shed + rejected == submitted` holds for the
+        // merged view too.
+        merged.submitted += router_rejected;
+        merged.rejected += router_rejected;
+        Ok(FleetRun {
+            routing: self.routing,
+            merged,
+            replicas,
+            steals,
+            router_rejected,
+        })
+    }
+}
+
+/// Replica with the least virtual backlog; ties break on the lowest index.
+fn argmin_load(state: &[ReplicaState], now_us: f64) -> usize {
+    let mut best = 0usize;
+    let mut best_load = f64::INFINITY;
+    for (k, s) in state.iter().enumerate() {
+        let load = s.load_us(now_us);
+        if load < best_load {
+            best = k;
+            best_load = load;
+        }
+    }
+    best
+}
+
+/// Replica with the shallowest virtual unstarted queue; lowest index wins
+/// ties.
+fn argmin_depth(state: &[ReplicaState], now_us: f64) -> usize {
+    let mut best = 0usize;
+    let mut best_d = usize::MAX;
+    for (k, s) in state.iter().enumerate() {
+        let d = s.unstarted_depth(now_us);
+        if d < best_d {
+            best = k;
+            best_d = d;
+        }
+    }
+    best
+}
+
+/// The queued entry stealing moves: the youngest unstarted non-affine
+/// request, falling back to the youngest unstarted one — never the entry
+/// for `just_placed` (the router chose its replica this very arrival).
+fn pick_victim(queued: &[QueuedEst], now_us: f64, just_placed: usize) -> Option<usize> {
+    let unstarted = |q: &QueuedEst| q.est_start_us > now_us && q.trace_idx != just_placed;
+    queued
+        .iter()
+        .rposition(|q| unstarted(q) && !q.affine)
+        .or_else(|| queued.iter().rposition(unstarted))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_policy_names_round_trip() {
+        for p in [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::CacheAware,
+        ] {
+            assert_eq!(RoutingPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(RoutingPolicy::from_name("rr"), Some(RoutingPolicy::RoundRobin));
+        assert_eq!(RoutingPolicy::from_name("cache_aware"), Some(RoutingPolicy::CacheAware));
+        assert!(RoutingPolicy::from_name("random").is_none());
+    }
+
+    #[test]
+    fn rendezvous_hash_is_stable_and_spreads() {
+        // Deterministic per (key, n)...
+        for key in [0u64, 1, 0xDEAD_BEEF, u64::MAX] {
+            assert_eq!(home_replica(key, 4), home_replica(key, 4));
+            assert!(home_replica(key, 4) < 4);
+            assert_eq!(home_replica(key, 1), 0);
+        }
+        // ...consistent: growing the fleet moves a key only onto the new
+        // replica, never between old ones.
+        for key in 0..256u64 {
+            let before = home_replica(key, 3);
+            let after = home_replica(key, 4);
+            assert!(after == before || after == 3, "key {key} reshuffled {before}->{after}");
+        }
+        // ...and spread: 256 keys over 4 replicas must touch every replica.
+        let mut seen = [false; 4];
+        for key in 0..256u64 {
+            seen[home_replica(key, 4)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "rendezvous hash must use every replica");
+    }
+
+    #[test]
+    fn replica_state_tracks_backlog_and_residency() {
+        let mut s = ReplicaState::new(3);
+        assert_eq!(s.load_us(10.0), 0.0);
+        s.enqueue(10.0, 0, 5.0, false);
+        s.enqueue(10.0, 1, 5.0, false);
+        assert_eq!(s.busy_until_us, 20.0);
+        assert_eq!(s.load_us(10.0), 10.0);
+        // Entry 0 starts at 10 (not after now=10), entry 1 at 15.
+        assert_eq!(s.unstarted_depth(10.0), 1);
+        assert_eq!(s.unstarted_depth(16.0), 0);
+        s.prune_started(16.0);
+        assert!(s.queued.is_empty());
+        // Residency is FIFO-bounded.
+        s.note_resident(&[1, 2, 3]);
+        assert_eq!(s.matched_keys(&[1, 2, 3]), 3);
+        s.note_resident(&[4]);
+        assert_eq!(s.matched_keys(&[1, 2]), 0, "oldest key evicted at cap");
+        assert_eq!(s.matched_keys(&[2, 3, 4]), 3);
+        // Matching stops at the first missing leading key.
+        assert_eq!(s.matched_keys(&[9, 2, 3]), 0);
+    }
+
+    #[test]
+    fn victim_prefers_young_non_affine_unstarted_work() {
+        let q = |idx: usize, start: f64, affine: bool| QueuedEst {
+            trace_idx: idx,
+            est_start_us: start,
+            est_us: 1.0,
+            affine,
+        };
+        // Started (idx 0), affine (idx 1), two non-affine (2, 3), and the
+        // just-placed arrival (4): steal the youngest non-affine, 3.
+        let queued = vec![
+            q(0, 5.0, false),
+            q(1, 20.0, true),
+            q(2, 30.0, false),
+            q(3, 40.0, false),
+            q(4, 50.0, false),
+        ];
+        assert_eq!(pick_victim(&queued, 10.0, 4), Some(3));
+        // Only affine unstarted work left: steal it anyway.
+        let queued = vec![q(0, 5.0, false), q(1, 20.0, true), q(4, 50.0, false)];
+        assert_eq!(pick_victim(&queued, 10.0, 4), Some(1));
+        // Nothing unstarted but the just-placed arrival: no steal.
+        let queued = vec![q(0, 5.0, false), q(4, 50.0, false)];
+        assert_eq!(pick_victim(&queued, 10.0, 4), None);
+    }
+}

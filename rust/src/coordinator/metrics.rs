@@ -82,15 +82,33 @@ pub fn sim_energy_j(pm: &PowerModel, placement: Placement, sim_seconds: f64, tok
 }
 
 /// Nearest-rank percentile (`q` in [0, 100]) over an unsorted sample.
-/// Returns 0.0 for an empty sample.
+/// Returns 0.0 for an empty sample. Clones and sorts per call — when you
+/// need several quantiles of one sample, sort once and use
+/// [`percentile_sorted`] for each rank instead.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+    let mut s = xs.to_vec();
+    sort_sample(&mut s);
+    percentile_sorted(&s, q)
+}
+
+/// Sort a sample ascending (NaN-tolerant total order) for
+/// [`percentile_sorted`].
+pub fn sort_sample(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+}
+
+/// Nearest-rank percentile over an *already sorted* sample — the
+/// allocation-free path for taking several quantiles of one sort.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
         return 0.0;
     }
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let rank = ((q / 100.0) * s.len() as f64).ceil() as usize;
-    s[rank.clamp(1, s.len()) - 1]
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "percentile_sorted needs an ascending sample"
+    );
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
 /// One completed request in a multi-request serving run. All `_us` fields
@@ -254,20 +272,36 @@ impl FleetMetrics {
         self.completions.iter().map(|c| c.queue_wait_us).collect()
     }
 
+    /// TTFT (p50, p99) in ms from one sort of the sample — the reporting
+    /// path takes both ranks off a single sorted copy instead of
+    /// re-collecting and re-sorting per quantile.
+    pub fn ttft_percentiles_ms(&self) -> (f64, f64) {
+        let mut s = self.ttft_us();
+        sort_sample(&mut s);
+        (percentile_sorted(&s, 50.0) / 1e3, percentile_sorted(&s, 99.0) / 1e3)
+    }
+
+    /// Queue-wait (p50, p99) in ms from one sort of the sample.
+    pub fn queue_wait_percentiles_ms(&self) -> (f64, f64) {
+        let mut s = self.queue_wait_us();
+        sort_sample(&mut s);
+        (percentile_sorted(&s, 50.0) / 1e3, percentile_sorted(&s, 99.0) / 1e3)
+    }
+
     pub fn ttft_p50_ms(&self) -> f64 {
-        percentile(&self.ttft_us(), 50.0) / 1e3
+        self.ttft_percentiles_ms().0
     }
 
     pub fn ttft_p99_ms(&self) -> f64 {
-        percentile(&self.ttft_us(), 99.0) / 1e3
+        self.ttft_percentiles_ms().1
     }
 
     pub fn queue_wait_p50_ms(&self) -> f64 {
-        percentile(&self.queue_wait_us(), 50.0) / 1e3
+        self.queue_wait_percentiles_ms().0
     }
 
     pub fn queue_wait_p99_ms(&self) -> f64 {
-        percentile(&self.queue_wait_us(), 99.0) / 1e3
+        self.queue_wait_percentiles_ms().1
     }
 
     pub fn energy_per_token_j(&self) -> f64 {
@@ -307,9 +341,20 @@ impl FleetMetrics {
 
     /// Requests the loop accepted and ran to completion:
     /// `submitted - shed - rejected`. Equals `completions.len()` on a
-    /// drained run — the serving loop asserts exactly that.
+    /// drained run — the serving loop asserts exactly that. Saturating:
+    /// a partially-merged fleet view (per-replica counters summed while a
+    /// router still holds rejections) may transiently drop more than it
+    /// submitted, which must read as 0 admitted, not a panic.
     pub fn admitted(&self) -> usize {
-        self.submitted - self.shed - self.rejected
+        let dropped = self.shed + self.rejected;
+        debug_assert!(
+            dropped <= self.submitted,
+            "admission counters diverged: {} shed + {} rejected > {} submitted",
+            self.shed,
+            self.rejected,
+            self.submitted
+        );
+        self.submitted.saturating_sub(dropped)
     }
 
     /// Fraction of submitted requests shed (0.0 for an empty run).
@@ -352,20 +397,100 @@ impl FleetMetrics {
             .map(|p| {
                 let of_class: Vec<&RequestCompletion> =
                     self.completions.iter().filter(|c| c.priority == p).collect();
-                let ttft: Vec<f64> = of_class.iter().map(|c| c.ttft_us).collect();
+                let mut ttft: Vec<f64> = of_class.iter().map(|c| c.ttft_us).collect();
+                sort_sample(&mut ttft);
                 ClassStats {
                     priority: p,
                     completed: of_class.len(),
                     generated_tokens: of_class.iter().map(|c| c.generated_tokens).sum(),
-                    ttft_p50_ms: percentile(&ttft, 50.0) / 1e3,
-                    ttft_p99_ms: percentile(&ttft, 99.0) / 1e3,
+                    ttft_p50_ms: percentile_sorted(&ttft, 50.0) / 1e3,
+                    ttft_p99_ms: percentile_sorted(&ttft, 99.0) / 1e3,
                     deadline_misses: of_class.iter().filter(|c| c.missed_deadline()).count(),
                 }
             })
             .collect()
     }
 
+    /// Merge per-replica serving runs into one fleet-level view.
+    ///
+    /// Replicas are independent simulated devices running in parallel, so
+    /// the merged makespan is the *max* over replicas (throughput and
+    /// goodput divide by the fleet's wall, not the sum of device-times),
+    /// while every counter sums. Host wall-clock sums — this process ran
+    /// the replicas sequentially. Completions are re-ordered by
+    /// `(finish_us, id)` so the merged view is deterministic whatever
+    /// order the replicas ran in. KV geometry: capacity and high-water sum
+    /// (aggregate fleet memory); `kv_block_tokens` must agree across
+    /// replicas and carries over.
+    pub fn merged<'a, I: IntoIterator<Item = &'a FleetMetrics>>(parts: I) -> FleetMetrics {
+        let mut out = FleetMetrics {
+            completions: Vec::new(),
+            makespan_us: 0.0,
+            wall_s: 0.0,
+            preemptions: 0,
+            resumed: 0,
+            decode_batches: 0,
+            decode_batched_steps: 0,
+            decode_evictions: 0,
+            decode_batches_executed: 0,
+            decode_batch_sim_us: 0.0,
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            prefix_hit_tokens: 0,
+            cache_saved_prefill_us: 0.0,
+            kv_capacity_blocks: 0,
+            kv_block_tokens: 0,
+            kv_blocks_high_water: 0,
+            submitted: 0,
+            rejected: 0,
+            shed: 0,
+            shed_by_priority: Vec::new(),
+        };
+        let mut shed_by: std::collections::BTreeMap<u8, usize> = std::collections::BTreeMap::new();
+        for m in parts {
+            out.completions.extend(m.completions.iter().cloned());
+            out.makespan_us = out.makespan_us.max(m.makespan_us);
+            out.wall_s += m.wall_s;
+            out.preemptions += m.preemptions;
+            out.resumed += m.resumed;
+            out.decode_batches += m.decode_batches;
+            out.decode_batched_steps += m.decode_batched_steps;
+            out.decode_evictions += m.decode_evictions;
+            out.decode_batches_executed += m.decode_batches_executed;
+            out.decode_batch_sim_us += m.decode_batch_sim_us;
+            out.prefix_lookups += m.prefix_lookups;
+            out.prefix_hits += m.prefix_hits;
+            out.prefix_hit_tokens += m.prefix_hit_tokens;
+            out.cache_saved_prefill_us += m.cache_saved_prefill_us;
+            out.kv_capacity_blocks += m.kv_capacity_blocks;
+            debug_assert!(
+                out.kv_block_tokens == 0 || out.kv_block_tokens == m.kv_block_tokens,
+                "merging replicas with different block geometries ({} vs {} tok/block)",
+                out.kv_block_tokens,
+                m.kv_block_tokens
+            );
+            out.kv_block_tokens = out.kv_block_tokens.max(m.kv_block_tokens);
+            out.kv_blocks_high_water += m.kv_blocks_high_water;
+            out.submitted += m.submitted;
+            out.rejected += m.rejected;
+            out.shed += m.shed;
+            for &(p, n) in &m.shed_by_priority {
+                *shed_by.entry(p).or_insert(0) += n;
+            }
+        }
+        out.completions.sort_by(|a, b| {
+            a.finish_us
+                .partial_cmp(&b.finish_us)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        out.shed_by_priority = shed_by.into_iter().collect();
+        out
+    }
+
     pub fn report(&self) -> String {
+        let (ttft_p50, ttft_p99) = self.ttft_percentiles_ms();
+        let (wait_p50, wait_p99) = self.queue_wait_percentiles_ms();
         let mut out = format!(
             "requests        : {} completed, {} preemption(s), {} resumed\n\
              tokens          : {} prompt + {} generated\n\
@@ -398,10 +523,10 @@ impl FleetMetrics {
             self.makespan_us / 1e3,
             self.throughput_tps(),
             self.decode_throughput_tps(),
-            self.ttft_p50_ms(),
-            self.ttft_p99_ms(),
-            self.queue_wait_p50_ms(),
-            self.queue_wait_p99_ms(),
+            ttft_p50,
+            ttft_p99,
+            wait_p50,
+            wait_p99,
             self.total_energy_j(),
             self.energy_per_token_j(),
         );
@@ -642,6 +767,110 @@ mod tests {
         assert!(r.contains("5 submitted = 3 served + 1 shed + 1 rejected (20% shed)"));
         assert!(r.contains("1 deadline miss(es), goodput 10.0 tok/s"));
         assert!(r.contains("shed class p4  : 1 request(s)"));
+    }
+
+    #[test]
+    fn percentile_sorted_matches_the_cloning_path() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        let mut s = xs.to_vec();
+        sort_sample(&mut s);
+        for q in [0.0, 25.0, 50.0, 75.0, 99.0, 100.0] {
+            assert_eq!(percentile_sorted(&s, q), percentile(&xs, q));
+        }
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_pairs_match_the_single_quantile_calls() {
+        let fleet = FleetMetrics {
+            completions: vec![completion(1, 1_000.0), completion(2, 3_000.0), completion(3, 2_000.0)],
+            makespan_us: 30_000.0,
+            wall_s: 0.0,
+            preemptions: 0,
+            resumed: 0,
+            decode_batches: 0,
+            decode_batched_steps: 0,
+            decode_evictions: 0,
+            decode_batches_executed: 0,
+            decode_batch_sim_us: 0.0,
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            prefix_hit_tokens: 0,
+            cache_saved_prefill_us: 0.0,
+            kv_capacity_blocks: 0,
+            kv_block_tokens: 0,
+            kv_blocks_high_water: 0,
+            submitted: 3,
+            rejected: 0,
+            shed: 0,
+            shed_by_priority: vec![],
+        };
+        assert_eq!(
+            fleet.ttft_percentiles_ms(),
+            (fleet.ttft_p50_ms(), fleet.ttft_p99_ms())
+        );
+        assert_eq!(
+            fleet.queue_wait_percentiles_ms(),
+            (fleet.queue_wait_p50_ms(), fleet.queue_wait_p99_ms())
+        );
+    }
+
+    #[test]
+    fn merged_fleet_view_sums_counters_and_takes_the_parallel_makespan() {
+        let mut a = FleetMetrics {
+            completions: vec![completion(3, 1_000.0)],
+            makespan_us: 20_000.0,
+            wall_s: 0.1,
+            preemptions: 1,
+            resumed: 1,
+            decode_batches: 3,
+            decode_batched_steps: 5,
+            decode_evictions: 0,
+            decode_batches_executed: 2,
+            decode_batch_sim_us: 100.0,
+            prefix_lookups: 2,
+            prefix_hits: 1,
+            prefix_hit_tokens: 8,
+            cache_saved_prefill_us: 40.0,
+            kv_capacity_blocks: 8,
+            kv_block_tokens: 16,
+            kv_blocks_high_water: 4,
+            submitted: 3,
+            rejected: 1,
+            shed: 1,
+            shed_by_priority: vec![(0, 1)],
+        };
+        a.completions[0].finish_us = 9_000.0;
+        let mut b = a.clone();
+        b.completions = vec![completion(1, 2_000.0), completion(2, 1_500.0)];
+        b.completions[0].finish_us = 5_000.0;
+        b.completions[1].finish_us = 9_000.0;
+        b.makespan_us = 32_000.0;
+        b.submitted = 2;
+        b.rejected = 0;
+        b.shed = 0;
+        b.shed_by_priority = vec![];
+        let m = FleetMetrics::merged([&a, &b]);
+        // Parallel devices: the fleet finishes when the slowest replica does.
+        assert_eq!(m.makespan_us, 32_000.0);
+        assert_eq!(m.submitted, 5);
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.admitted(), 3);
+        assert_eq!(m.completions.len(), 3);
+        // Finish order, ids breaking the 9 ms tie.
+        let order: Vec<u64> = m.completions.iter().map(|c| c.id).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+        assert_eq!(m.kv_capacity_blocks, 16, "aggregate fleet KV memory");
+        assert_eq!(m.kv_block_tokens, 16);
+        assert_eq!(m.prefix_lookups, 4);
+        assert_eq!(m.prefix_hits, 2);
+        assert_eq!(m.shed_by_priority, vec![(0, 1)]);
+        assert_eq!(
+            m.completions.len() + m.shed + m.rejected,
+            m.submitted,
+            "terminal accounting survives merging"
+        );
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //!   `Preempt`, never mid-decode) and KV-slot accounting.
 //! - [`server`] — the multi-request serving loop: drives the scheduler
 //!   against the engine's step API under a simulated on-device clock.
+//! - [`fleet`] — N engine replicas behind an admission router: load- and
+//!   prefix-affinity-aware placement, work stealing, merged fleet metrics.
 //! - [`graph`] — the §5 graph-optimization pass (precompute dedup).
 //! - [`pipeline`] — the §4.2 DMA–Vector–Matrix pipeline simulation.
 //! - [`perf`] — end-to-end phase performance/energy model (Figs. 14–15,
@@ -14,6 +16,7 @@
 //! - [`metrics`] — per-request and fleet metrics, energy accounting.
 
 pub mod engine;
+pub mod fleet;
 pub mod graph;
 pub mod metrics;
 pub mod perf;
@@ -22,6 +25,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use engine::{Engine, GenerateOpts};
+pub use fleet::{Fleet, FleetRun, ReplicaStats, RoutingPolicy};
 pub use graph::{build_block_graph, Graph, OpKind};
 pub use metrics::{FleetMetrics, RequestCompletion, RequestMetrics};
 pub use pipeline::{run_pipelined, run_sequential, PipelineRun};

@@ -34,4 +34,4 @@ mod pool;
 mod radix;
 
 pub use pool::{KvPoolConfig, KvPoolStats, PagedKvPool, PagedLanes};
-pub use radix::RadixIndex;
+pub use radix::{prefix_block_keys, RadixIndex};

@@ -16,6 +16,32 @@
 //! the LRU clock is a plain counter bumped once per touched edge, so every
 //! `last_touch` value is unique and eviction order is reproducible.
 
+/// Block-aligned prefix keys for a token sequence — the router-facing
+/// form of this index's key scheme. Key `i` identifies the whole-block
+/// token run `tokens[..(i + 1) * block_tokens]`; the hash is cumulative
+/// (each key covers every earlier block), so two prompts carry the same
+/// key `i` exactly when the radix index could share their first `i + 1`
+/// cached blocks. Trailing tokens short of a whole block contribute no
+/// key, mirroring [`RadixIndex::lookup`]'s whole-block matching. FNV-1a
+/// over the token ids: deterministic across runs and machines.
+pub fn prefix_block_keys(tokens: &[usize], block_tokens: usize) -> Vec<u64> {
+    assert!(block_tokens > 0, "block must hold at least one token");
+    let mut keys = Vec::with_capacity(tokens.len() / block_tokens);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for (i, &t) in tokens.iter().enumerate() {
+        let mut v = t as u64;
+        for _ in 0..8 {
+            h ^= v & 0xff;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+            v >>= 8;
+        }
+        if (i + 1) % block_tokens == 0 {
+            keys.push(h);
+        }
+    }
+    keys
+}
+
 /// One edge of the radix tree: `blocks.len()` whole blocks of tokens
 /// (`tokens.len() == blocks.len() * block_tokens`), plus the subtree below.
 #[derive(Debug, Clone)]
@@ -278,6 +304,33 @@ mod tests {
     fn toks(blocks: &[usize], bt: usize) -> Vec<usize> {
         // Deterministic distinct token run per block id.
         blocks.iter().flat_map(|&b| (0..bt).map(move |t| 1000 * b + t)).collect()
+    }
+
+    #[test]
+    fn prefix_keys_are_cumulative_block_runs() {
+        let bt = 4;
+        let a = toks(&[10, 11, 12], bt);
+        let keys = prefix_block_keys(&a, bt);
+        assert_eq!(keys.len(), 3, "one key per whole block");
+        // Deterministic and shared-prefix aligned: a prompt sharing the
+        // first two blocks shares the first two keys, then diverges.
+        let mut b = a[..2 * bt].to_vec();
+        b.extend_from_slice(&toks(&[99], bt));
+        let kb = prefix_block_keys(&b, bt);
+        assert_eq!(keys[..2], kb[..2]);
+        assert_ne!(keys[2], kb[2]);
+        // Mid-block divergence changes the key of that block.
+        let mut skew = a.clone();
+        skew[1] = 777;
+        assert_ne!(prefix_block_keys(&skew, bt)[0], keys[0]);
+        // Trailing partial blocks contribute no key.
+        assert_eq!(prefix_block_keys(&a[..bt + 1], bt), keys[..1]);
+        assert!(prefix_block_keys(&a[..bt - 1], bt).is_empty());
+        // Cumulative: the same block content after a different first block
+        // hashes differently (keys identify whole prefixes, not blocks).
+        let swapped = toks(&[11, 10], bt);
+        let ks = prefix_block_keys(&swapped, bt);
+        assert_ne!(ks[1], prefix_block_keys(&toks(&[10, 11], bt), bt)[1]);
     }
 
     #[test]

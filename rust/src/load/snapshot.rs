@@ -14,6 +14,12 @@
 //!   structurally zero.
 //! - `prefix` — shared-prefix fan-out traffic on the paged prefix-cache
 //!   engine: tracks the prefix hit rate and cached-prefill throughput.
+//! - `fleet_rr` / `fleet_ca` — prefix-family traffic (prompts from the
+//!   workload's 8-phrase dictionary, i.e. per-tenant system prompts)
+//!   routed across three prefix-cache replicas (equal aggregate KV
+//!   memory) under round-robin vs cache-aware routing: the sweep that
+//!   must show cache-aware winning on prefix hit rate without losing
+//!   goodput.
 //!
 //! The flash deadline is *self-calibrating*: slack is set to 1/4 of the
 //! no-shed run's p99 TTFT, so the scenario stays an overload (and the
@@ -21,6 +27,7 @@
 
 use crate::bench::FlatJson;
 use crate::coordinator::engine::Engine;
+use crate::coordinator::fleet::{Fleet, FleetRun, RoutingPolicy};
 use crate::coordinator::metrics::{percentile, FleetMetrics};
 use crate::coordinator::server::{OverloadPolicy, ServeOpts, Server, TraceProfile, TraceRequest};
 use crate::kvpool::KvPoolConfig;
@@ -122,7 +129,42 @@ pub fn serving_snapshot() -> Result<String> {
     emit_fleet(&mut out, "prefix", &prefix);
     ensure!(prefix.prefix_hit_rate() > 0.0, "shared-prefix load must hit the prefix cache");
 
+    // Fleet routing sweep: prompts drawn from the workload's 8 prefix
+    // families (per-tenant system prompts) across three prefix-cache
+    // replicas. Both arms see the identical trace and identical aggregate
+    // KV memory; only the routing policy differs. (A prefix shared by
+    // every request cannot separate the arms — it goes resident on all
+    // replicas within a few releases however traffic is routed, which is
+    // why this trace partitions into families instead.)
+    let fleet_process = ArrivalProcess::Poisson { mean_gap_us: 250.0 };
+    let fleet_trace = LoadSpec::new(fleet_process, TraceProfile::tiny()).trace(48, 9);
+    let rr = run_fleet(RoutingPolicy::RoundRobin, &fleet_trace)?;
+    emit_fleet_run(&mut out, "fleet_rr", &rr);
+    let ca = run_fleet(RoutingPolicy::CacheAware, &fleet_trace)?;
+    emit_fleet_run(&mut out, "fleet_ca", &ca);
+    ensure!(
+        ca.prefix_hit_rate() >= rr.prefix_hit_rate(),
+        "cache-aware routing must not lose prefix hits to round-robin \
+         (ca {:.3} < rr {:.3})",
+        ca.prefix_hit_rate(),
+        rr.prefix_hit_rate()
+    );
+
     Ok(out.finish())
+}
+
+/// Route one pinned trace across three prefix-cache replicas.
+fn run_fleet(routing: RoutingPolicy, trace: &[TraceRequest]) -> Result<FleetRun> {
+    let engines = (0..3).map(|_| prefix_engine()).collect::<Result<Vec<_>>>()?;
+    let opts = ServeOpts { max_batch: MAX_BATCH, ..Default::default() };
+    Fleet::new(engines, routing, opts)?.run(trace)
+}
+
+/// Fleet-scenario keys: the merged metric set plus routing diagnostics.
+fn emit_fleet_run(out: &mut FlatJson, scen: &str, run: &FleetRun) {
+    emit_fleet(out, scen, &run.merged);
+    out.num(&format!("{scen}.load_imbalance"), run.load_imbalance());
+    out.count(&format!("{scen}.steals"), run.steals);
 }
 
 #[cfg(test)]
@@ -142,7 +184,7 @@ mod tests {
                 .unwrap_or_else(|| panic!("missing key {key}"))
                 .1
         };
-        for scen in ["steady", "flash_noshed", "flash_shed", "prefix"] {
+        for scen in ["steady", "flash_noshed", "flash_shed", "prefix", "fleet_rr", "fleet_ca"] {
             for metric in
                 ["submitted", "completed", "shed_rate", "deadline_misses", "goodput_tps"]
             {
@@ -156,5 +198,10 @@ mod tests {
         assert!(get("flash_shed.shed_rate") >= 0.0);
         assert!(get("prefix.prefix_hit_rate") > 0.0);
         assert!(get("steady.goodput_tps") > 0.0);
+        // The routing sweep: same trace, same aggregate KV — cache-aware
+        // routing must win the cross-replica prefix hit rate.
+        assert!(get("fleet_ca.prefix_hit_rate") >= get("fleet_rr.prefix_hit_rate"));
+        assert!(get("fleet_ca.load_imbalance") >= 1.0);
+        assert!(get("fleet_rr.load_imbalance") >= 1.0);
     }
 }

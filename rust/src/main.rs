@@ -11,6 +11,7 @@
 //!            [--shared-prefix BYTES] [--require-hits]
 //!            [--arrivals poisson|bursty|diurnal|flash-crowd] [--fanout K]
 //!            [--slo-ttft-ms X] [--queue-cap N] [--shed] [--require-shed]
+//!            [--replicas N] [--routing round-robin|least-loaded|cache-aware]
 //!            [--bits 2|4] [--temp T] [--artifacts DIR] [--soc ...]
 //!   bench    [--json]                 plan-cost snapshot (CI artifact)
 //!   bench-serving [--out FILE]        serving perf snapshot (BENCH_serving.json)
@@ -30,6 +31,7 @@ use anyhow::{bail, Result};
 use std::path::PathBuf;
 use tman::bench::{compare_benchmarks, plan_cost_report};
 use tman::coordinator::engine::{Engine, GenerateOpts};
+use tman::coordinator::fleet::{Fleet, RoutingPolicy};
 use tman::coordinator::server::{
     synthetic_trace, ClosedLoopOpts, OverloadPolicy, ServeOpts, Server, TraceProfile,
 };
@@ -226,42 +228,94 @@ fn main() -> Result<()> {
             let arrivals = args.flags.get("arrivals").cloned();
             let fanout: usize =
                 args.flags.get("fanout").map(|s| s.parse()).transpose()?.unwrap_or(1);
-            let mut server = Server::new(engine, opts);
-            let fleet = match (closed_loop, arrivals) {
-                (Some(_), Some(_)) => {
-                    bail!("--arrivals shapes open-loop load; it cannot combine with --closed-loop")
-                }
-                (Some(concurrency), None) => {
-                    println!(
-                        "serving {n} closed-loop requests ({concurrency} clients, think \
-                         {think_ms} ms, {setup}) ..."
-                    );
-                    let cl = ClosedLoopOpts {
-                        total: n,
-                        concurrency,
-                        think_us: think_ms * 1e3,
-                        seed,
-                    };
-                    server.run_closed_loop(&cl, &profile)?
-                }
-                (None, Some(name)) => {
-                    let Some(process) = ArrivalProcess::from_name(&name, profile.mean_gap_us)
-                    else {
-                        bail!(
-                            "unknown arrival process {name} (poisson | bursty | diurnal | \
-                             flash-crowd)"
+            // Multi-replica fleet: --replicas N (and/or --routing R) routes
+            // the open-loop trace across N independent engine replicas.
+            let replicas: usize =
+                args.flags.get("replicas").map(|s| s.parse()).transpose()?.unwrap_or(1);
+            let routing_flag = args.flags.get("routing").cloned();
+            let fleet = if replicas > 1 || routing_flag.is_some() {
+                anyhow::ensure!(replicas >= 1, "--replicas must be at least 1");
+                anyhow::ensure!(
+                    closed_loop.is_none(),
+                    "--replicas routes open-loop traces; it cannot combine with --closed-loop"
+                );
+                let routing = match routing_flag.as_deref() {
+                    None => RoutingPolicy::CacheAware,
+                    Some(name) => RoutingPolicy::from_name(name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown routing policy {name} (round-robin | least-loaded | \
+                             cache-aware)"
                         )
-                    };
-                    println!("serving {n} {name} requests (fanout {fanout}, {setup}) ...");
-                    let spec = LoadSpec::new(process, profile.clone()).with_fanout(fanout);
-                    server.run(&spec.trace(n, seed))?
+                    })?,
+                };
+                let mut engines = vec![engine];
+                for _ in 1..replicas {
+                    engines.push(build_engine(&args)?);
                 }
-                (None, None) => {
-                    println!("serving {n} synthetic requests ({setup}) ...");
-                    server.run(&synthetic_trace(n, seed, &profile))?
-                }
+                let trace = match arrivals.as_deref() {
+                    Some(name) => {
+                        let Some(process) = ArrivalProcess::from_name(name, profile.mean_gap_us)
+                        else {
+                            bail!(
+                                "unknown arrival process {name} (poisson | bursty | diurnal | \
+                                 flash-crowd)"
+                            )
+                        };
+                        LoadSpec::new(process, profile.clone()).with_fanout(fanout).trace(n, seed)
+                    }
+                    None => synthetic_trace(n, seed, &profile),
+                };
+                println!(
+                    "serving {n} requests across {} replicas ({} routing, {setup}) ...",
+                    engines.len(),
+                    routing.name()
+                );
+                let mut host = Fleet::new(engines, routing, opts)?;
+                let run = host.run(&trace)?;
+                println!("{}", run.report());
+                run.merged
+            } else {
+                let mut server = Server::new(engine, opts);
+                let fleet = match (closed_loop, arrivals) {
+                    (Some(_), Some(_)) => {
+                        bail!(
+                            "--arrivals shapes open-loop load; it cannot combine with \
+                             --closed-loop"
+                        )
+                    }
+                    (Some(concurrency), None) => {
+                        println!(
+                            "serving {n} closed-loop requests ({concurrency} clients, think \
+                             {think_ms} ms, {setup}) ..."
+                        );
+                        let cl = ClosedLoopOpts {
+                            total: n,
+                            concurrency,
+                            think_us: think_ms * 1e3,
+                            seed,
+                        };
+                        server.run_closed_loop(&cl, &profile)?
+                    }
+                    (None, Some(name)) => {
+                        let Some(process) = ArrivalProcess::from_name(&name, profile.mean_gap_us)
+                        else {
+                            bail!(
+                                "unknown arrival process {name} (poisson | bursty | diurnal | \
+                                 flash-crowd)"
+                            )
+                        };
+                        println!("serving {n} {name} requests (fanout {fanout}, {setup}) ...");
+                        let spec = LoadSpec::new(process, profile.clone()).with_fanout(fanout);
+                        server.run(&spec.trace(n, seed))?
+                    }
+                    (None, None) => {
+                        println!("serving {n} synthetic requests ({setup}) ...");
+                        server.run(&synthetic_trace(n, seed, &profile))?
+                    }
+                };
+                println!("{}", fleet.report());
+                fleet
             };
-            println!("{}", fleet.report());
             // CI gate for prefix-cache smokes: a shared-prefix trace on a
             // cache-enabled engine must actually hit.
             if args.flags.contains_key("require-hits") {
@@ -383,6 +437,9 @@ fn main() -> Result<()> {
                  \x20         --shed (reject/shed past deadlines) --require-shed\n\
                  \x20         (fail unless work was dropped and no admitted\n\
                  \x20         request missed its deadline)\n\
+                 \x20         --replicas N (route across N engine replicas)\n\
+                 \x20         --routing round-robin|least-loaded|cache-aware\n\
+                 \x20         (replica admission policy, default cache-aware)\n\
                  bench:    --json (machine-readable plan-cost snapshot)\n\
                  bench-serving: [--out FILE] (BENCH_serving.json snapshot)\n\
                  bench-check:   --baseline FILE --current FILE [--tolerance 0.15]\n\

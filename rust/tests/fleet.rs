@@ -1,0 +1,155 @@
+//! Fleet-level integration tests: terminal accounting across every
+//! arrival process and routing policy, bit-for-bit determinism of the
+//! fleet snapshot, and the cache-affinity contrast the cache-aware router
+//! exists to provide.
+
+use tman::coordinator::engine::Engine;
+use tman::coordinator::fleet::{Fleet, FleetRun, RoutingPolicy};
+use tman::coordinator::server::{OverloadPolicy, ServeOpts, TraceProfile, TraceRequest};
+use tman::kvpool::KvPoolConfig;
+use tman::load::{ArrivalProcess, LoadSpec};
+use tman::model::config::ModelConfig;
+use tman::model::weights::random_transformer;
+use tman::npu::config::SocConfig;
+
+const MODEL_SEED: u64 = 1;
+
+/// Three deliberately tight replicas (3 KV slots each) so overload paths
+/// — displacement, shedding, stealing, router rejection — actually fire.
+fn contended_engines() -> Vec<Engine> {
+    (0..3)
+        .map(|_| {
+            let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
+            Engine::reference(model, SocConfig::oneplus12(), 16, 4, 3).expect("engine")
+        })
+        .collect()
+}
+
+/// Three paged prefix-cache replicas at equal per-replica KV memory.
+fn prefix_engines() -> Vec<Engine> {
+    (0..3)
+        .map(|_| {
+            let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
+            let blocks = 2 * ModelConfig::tiny().max_seq / 16;
+            let kv = KvPoolConfig::paged(blocks, 16, true);
+            Engine::reference_paged(model, SocConfig::oneplus12(), 16, 4, kv).expect("engine")
+        })
+        .collect()
+}
+
+fn run_fleet(
+    engines: Vec<Engine>,
+    routing: RoutingPolicy,
+    policy: OverloadPolicy,
+    trace: &[TraceRequest],
+) -> FleetRun {
+    let opts = ServeOpts { max_batch: 2, policy, ..Default::default() };
+    let mut fleet = Fleet::new(engines, routing, opts).expect("fleet");
+    fleet.run(trace).expect("fleet run")
+}
+
+fn all_policies() -> [RoutingPolicy; 3] {
+    [RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded, RoutingPolicy::CacheAware]
+}
+
+fn all_processes() -> [ArrivalProcess; 4] {
+    [
+        ArrivalProcess::Poisson { mean_gap_us: 300.0 },
+        ArrivalProcess::bursty(300.0),
+        ArrivalProcess::diurnal(300.0),
+        ArrivalProcess::flash_crowd(300.0),
+    ]
+}
+
+/// The fleet-wide invariant: every submitted request reaches exactly one
+/// terminal state, on every arrival process, under every routing policy,
+/// with stealing and per-replica overload control both live.
+#[test]
+fn terminal_accounting_holds_across_processes_and_policies() {
+    for process in all_processes() {
+        for routing in all_policies() {
+            for seed in [1u64, 2] {
+                let trace =
+                    LoadSpec::new(process.clone(), TraceProfile::tiny()).trace(16, seed);
+                let policy = OverloadPolicy { queue_cap: Some(2), shed: true };
+                let run = run_fleet(contended_engines(), routing, policy, &trace);
+                let m = &run.merged;
+                let ctx = format!("{process:?} / {} / seed {seed}", routing.name());
+                assert_eq!(m.submitted, trace.len(), "all arrivals counted ({ctx})");
+                assert_eq!(
+                    m.completions.len() + m.shed + m.rejected,
+                    m.submitted,
+                    "fleet terminal accounting ({ctx})"
+                );
+                let replica_submitted: usize =
+                    run.replicas.iter().map(|r| r.metrics.submitted).sum();
+                assert_eq!(
+                    replica_submitted + run.router_rejected,
+                    m.submitted,
+                    "router splits the trace without loss ({ctx})"
+                );
+                for (i, r) in run.replicas.iter().enumerate() {
+                    assert_eq!(
+                        r.metrics.completions.len() + r.metrics.shed + r.metrics.rejected,
+                        r.metrics.submitted,
+                        "replica {i} terminal accounting ({ctx})"
+                    );
+                    assert_eq!(
+                        r.routed, r.metrics.submitted,
+                        "replica {i} served exactly its routed share ({ctx})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Same seed, same policy, same replicas ⇒ the full fleet snapshot —
+/// routing decisions, steal counts, per-replica metrics, merged report —
+/// is byte-identical.
+#[test]
+fn same_seed_and_policy_reproduce_the_fleet_snapshot() {
+    for routing in all_policies() {
+        let trace = LoadSpec::new(
+            ArrivalProcess::bursty(300.0),
+            TraceProfile::tiny().with_shared_prefix(32),
+        )
+        .trace(24, 7);
+        let a = run_fleet(prefix_engines(), routing, OverloadPolicy::default(), &trace);
+        let b = run_fleet(prefix_engines(), routing, OverloadPolicy::default(), &trace);
+        assert_eq!(a.steals, b.steals, "{}", routing.name());
+        assert_eq!(a.router_rejected, b.router_rejected, "{}", routing.name());
+        assert_eq!(a.report(), b.report(), "{} snapshot must reproduce", routing.name());
+    }
+}
+
+/// The router's reason to exist: on traffic whose prompts fall into a
+/// handful of distinct prefix families (the workload's phrase dictionary
+/// — think per-tenant system prompts), prefix-affinity routing keeps each
+/// family's blocks hot on its home replica, while round-robin spreads a
+/// family across the fleet and re-prefills it everywhere. Note a prefix
+/// shared by *every* request cannot show this contrast: it goes resident
+/// on all replicas within a few releases no matter how traffic is routed.
+#[test]
+fn cache_aware_routing_beats_round_robin_on_prefix_family_traffic() {
+    let process = ArrivalProcess::Poisson { mean_gap_us: 250.0 };
+    let trace = LoadSpec::new(process, TraceProfile::tiny()).trace(48, 9);
+    let rr =
+        run_fleet(prefix_engines(), RoutingPolicy::RoundRobin, OverloadPolicy::default(), &trace);
+    let ca =
+        run_fleet(prefix_engines(), RoutingPolicy::CacheAware, OverloadPolicy::default(), &trace);
+    assert_eq!(rr.merged.completions.len(), trace.len(), "round-robin serves everything");
+    assert_eq!(ca.merged.completions.len(), trace.len(), "cache-aware serves everything");
+    assert!(
+        ca.prefix_hit_rate() > rr.prefix_hit_rate(),
+        "cache-aware must beat round-robin on the fleet prefix hit rate: {:.3} !> {:.3}",
+        ca.prefix_hit_rate(),
+        rr.prefix_hit_rate()
+    );
+    assert!(
+        ca.merged.prefix_hit_tokens > rr.merged.prefix_hit_tokens,
+        "cache-aware must reuse more cached tokens: {} !> {}",
+        ca.merged.prefix_hit_tokens,
+        rr.merged.prefix_hit_tokens
+    );
+}
