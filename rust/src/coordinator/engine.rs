@@ -33,13 +33,14 @@
 
 use crate::coordinator::metrics::{PhaseTimer, RequestMetrics};
 use crate::coordinator::scheduler::kv_reserve_tokens;
+use crate::kernels::cpu_lut::CpuLutCosts;
 use crate::kernels::plan::PlanCosts;
 use crate::kvpool::{KvPoolConfig, KvPoolStats};
 use crate::model::sampler;
 use crate::model::tokenizer;
 use crate::model::transformer::Transformer;
 use crate::npu::config::SocConfig;
-use crate::npu::energy::breakdown_energy_j;
+use crate::npu::energy::{breakdown_energy_j, cpu_breakdown_energy_j};
 use crate::npu::hmx::{self, HmxPrecision};
 use crate::npu::memory::LoadMethod;
 use crate::quant::formats::{ActDtype, Granularity, QuantFormat, WeightDtype};
@@ -97,6 +98,95 @@ pub enum SliceRoute {
     DecodeTail,
 }
 
+/// Which processor a work item runs on — the two sides of the
+/// heterogeneous cost surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Processor {
+    Npu,
+    Cpu,
+}
+
+impl Processor {
+    pub fn name(self) -> &'static str {
+        match self {
+            Processor::Npu => "npu",
+            Processor::Cpu => "cpu",
+        }
+    }
+}
+
+/// Dispatch policy for the serving loop: pin every work item to one
+/// processor, or price each item on both surfaces and route it to the
+/// cheaper quote. `NpuOnly` reproduces the legacy single-processor prices
+/// exactly (the NPU quote under zero queued launches is the base price).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchMode {
+    #[default]
+    NpuOnly,
+    CpuOnly,
+    Auto,
+}
+
+impl DispatchMode {
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "npu-only" | "npu_only" | "npu" => Some(DispatchMode::NpuOnly),
+            "cpu-only" | "cpu_only" | "cpu" => Some(DispatchMode::CpuOnly),
+            "auto" => Some(DispatchMode::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchMode::NpuOnly => "npu-only",
+            DispatchMode::CpuOnly => "cpu-only",
+            DispatchMode::Auto => "auto",
+        }
+    }
+}
+
+/// µs added to the NPU quote per kernel launch already sitting in the NPU
+/// queue ahead of this work item — one launch overhead each (the
+/// [`gemv_batched_cost`](crate::kernels::lut_gemv::gemv_batched_cost)
+/// doorbell constant).
+pub const NPU_QUEUE_DEBIT_US: f64 = 2.0;
+
+/// µs added to the CPU quote per in-flight request: every live request
+/// steals big-core time for tokenization, sampling and bookkeeping, so the
+/// CPU's headroom for kernel work shrinks as concurrency grows.
+pub const CPU_INFLIGHT_DEBIT_US: f64 = 0.5;
+
+/// The contention state a work item is quoted under. The serving loop
+/// retires launches synchronously on its simulated clock, so it passes
+/// `queued_launches: 0` — the NPU debit is exercised by schedulers that
+/// pipeline launches (and by the dispatch property suite).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Contention {
+    /// Requests currently being served (admitted, not finished).
+    pub inflight: usize,
+    /// Kernel launches queued on the NPU ahead of this item.
+    pub queued_launches: usize,
+}
+
+impl Contention {
+    /// No contention on either side: quotes reduce to base prices.
+    pub fn idle() -> Self {
+        Self::default()
+    }
+}
+
+/// One routed work item: where it runs and what it costs there. The µs is
+/// the contention-debited quote of the chosen processor; the energy is
+/// that processor's kernel-attributed joules (debits model queueing delay,
+/// which burns time, not work).
+#[derive(Debug, Clone, Copy)]
+pub struct Dispatch {
+    pub processor: Processor,
+    pub us: f64,
+    pub energy_j: f64,
+}
+
 /// The serving engine.
 pub struct Engine {
     backend: Backend,
@@ -130,6 +220,28 @@ pub struct Engine {
     /// Kernel-attributed energy (J) of one full prefill chunk's projection
     /// kernels, same per-rail pricing over the plan's GEMM breakdown.
     prefill_chunk_proj_j: f64,
+    /// CPU-side cost surface per distinct projection shape — the same
+    /// shapes as `proj_costs`, priced by the T-MAC LUT model on the big
+    /// cores ([`CpuLutCosts`]). The second side of every quote.
+    cpu_proj_costs: Vec<(CpuLutCosts, usize)>,
+    /// The lm head's CPU cost surface.
+    cpu_head_costs: CpuLutCosts,
+    /// CPU projection µs / J per decode-batch width (mirrors the NPU
+    /// curves, same indexing).
+    cpu_decode_proj_batch_us: Vec<f64>,
+    cpu_decode_proj_batch_j: Vec<f64>,
+    /// CPU projection µs / J of one full prefill chunk.
+    cpu_prefill_chunk_proj_us: f64,
+    cpu_prefill_chunk_proj_j: f64,
+    /// Per-position decode-tail surfaces, precomputed once per shape
+    /// (`decode_tail_us[p]` = one decode step at context `p + 1`): the
+    /// ragged-remainder price is a slice sum instead of re-deriving the
+    /// per-step cost inside the slice loop. Same values, same summation
+    /// order — slice totals are bit-identical to the on-demand loop.
+    decode_tail_us: Vec<f64>,
+    decode_tail_j: Vec<f64>,
+    cpu_decode_tail_us: Vec<f64>,
+    cpu_decode_tail_j: Vec<f64>,
 }
 
 impl Engine {
@@ -295,7 +407,41 @@ impl Engine {
         }
         pre += head_costs.decode_us(npu, 1);
         pre_j += breakdown_energy_j(pm, &head_costs.decode_cost(npu, 1).breakdown);
-        Self {
+
+        // The CPU side of the two-sided surface: the same projection
+        // shapes priced by the T-MAC LUT model on the big cores, same
+        // aggregation (batch curves + one chunk total + the lm head).
+        let cpu = &soc.cpu;
+        let cpu_proj_costs: Vec<(CpuLutCosts, usize)> = proj_costs
+            .iter()
+            .map(|(pc, count)| (CpuLutCosts::for_shape(fmt, pc.m, pc.k), *count))
+            .collect();
+        let cpu_head_costs = CpuLutCosts::for_shape(fmt, shape.vocab, shape.d_model);
+        let mut cpu_dec_batch = vec![0.0f64; max_batch];
+        let mut cpu_dec_batch_j = vec![0.0f64; max_batch];
+        let mut cpu_pre = 0.0;
+        let mut cpu_pre_j = 0.0;
+        for (cc, count) in &cpu_proj_costs {
+            for (b, acc) in cpu_dec_batch.iter_mut().enumerate() {
+                *acc += *count as f64 * cc.decode_us(cpu, b + 1);
+            }
+            for (b, acc) in cpu_dec_batch_j.iter_mut().enumerate() {
+                let bd = cc.decode_cost(cpu, b + 1);
+                *acc += *count as f64 * cpu_breakdown_energy_j(pm, &bd);
+            }
+            cpu_pre += *count as f64 * cc.prefill_us(cpu, chunk);
+            cpu_pre_j += *count as f64 * cpu_breakdown_energy_j(pm, &cc.prefill_cost(cpu, chunk));
+        }
+        for (b, acc) in cpu_dec_batch.iter_mut().enumerate() {
+            *acc += cpu_head_costs.decode_us(cpu, b + 1);
+        }
+        for (b, acc) in cpu_dec_batch_j.iter_mut().enumerate() {
+            *acc += cpu_breakdown_energy_j(pm, &cpu_head_costs.decode_cost(cpu, b + 1));
+        }
+        cpu_pre += cpu_head_costs.decode_us(cpu, 1);
+        cpu_pre_j += cpu_breakdown_energy_j(pm, &cpu_head_costs.decode_cost(cpu, 1));
+
+        let mut eng = Self {
             backend,
             soc,
             fmt,
@@ -306,7 +452,29 @@ impl Engine {
             prefill_chunk_proj_us: pre,
             decode_proj_batch_j: dec_batch_j,
             prefill_chunk_proj_j: pre_j,
-        }
+            cpu_proj_costs,
+            cpu_head_costs,
+            cpu_decode_proj_batch_us: cpu_dec_batch,
+            cpu_decode_proj_batch_j: cpu_dec_batch_j,
+            cpu_prefill_chunk_proj_us: cpu_pre,
+            cpu_prefill_chunk_proj_j: cpu_pre_j,
+            decode_tail_us: Vec::new(),
+            decode_tail_j: Vec::new(),
+            cpu_decode_tail_us: Vec::new(),
+            cpu_decode_tail_j: Vec::new(),
+        };
+        // Per-position decode-tail surfaces, from the same per-step
+        // formulas the on-demand path uses (bit-identical slice totals).
+        let seq = eng.shape.seq;
+        let tail_us: Vec<f64> = (1..=seq).map(|c| eng.sim_decode_us(c)).collect();
+        let tail_j: Vec<f64> = (1..=seq).map(|c| eng.sim_decode_energy_j(c)).collect();
+        let cpu_tail_us: Vec<f64> = (1..=seq).map(|c| eng.sim_cpu_decode_us(c)).collect();
+        let cpu_tail_j: Vec<f64> = (1..=seq).map(|c| eng.sim_cpu_decode_energy_j(c)).collect();
+        eng.decode_tail_us = tail_us;
+        eng.decode_tail_j = tail_j;
+        eng.cpu_decode_tail_us = cpu_tail_us;
+        eng.cpu_decode_tail_j = cpu_tail_j;
+        eng
     }
 
     pub fn shape(&self) -> &ModelShape {
@@ -518,7 +686,10 @@ impl Engine {
     pub fn sim_prefill_slice_us(&self, start: usize, len: usize) -> f64 {
         match self.slice_route(len) {
             SliceRoute::MatrixPath => self.plan_prefill_chunk_us(start + len),
-            SliceRoute::DecodeTail => (start..start + len).map(|p| self.sim_decode_us(p + 1)).sum(),
+            // Positions `start..start + len` at contexts `p + 1`: a sum
+            // over the precomputed per-position surface (same values,
+            // same order as pricing each step on demand).
+            SliceRoute::DecodeTail => self.decode_tail_us[start..start + len].iter().sum(),
         }
     }
 
@@ -526,10 +697,223 @@ impl Engine {
     pub fn sim_prefill_slice_energy_j(&self, start: usize, len: usize) -> f64 {
         match self.slice_route(len) {
             SliceRoute::MatrixPath => self.plan_prefill_chunk_energy_j(start + len),
-            SliceRoute::DecodeTail => {
-                (start..start + len).map(|p| self.sim_decode_energy_j(p + 1)).sum()
+            SliceRoute::DecodeTail => self.decode_tail_j[start..start + len].iter().sum(),
+        }
+    }
+
+    // ---- the CPU side of the two-sided cost surface ----
+
+    /// Time for the big cores to stream one request's KV at context `ctx`:
+    /// same bytes as the NPU's DMA path, at the CPU's DDR bandwidth, with
+    /// no descriptor setup.
+    fn cpu_kv_transfer_us(&self, ctx: usize) -> f64 {
+        let kv_bytes = 2 * self.shape.n_layers * ctx * self.shape.d_kv() * 2;
+        kv_bytes as f64 / (self.soc.cpu.mem_gbps * 1e3)
+    }
+
+    /// Energy of that stream — CPU-routed traffic rides the CPU rail
+    /// (a core stalled on DRAM still sits in the active cluster).
+    fn cpu_kv_transfer_j(&self, ctx: usize) -> f64 {
+        self.cpu_kv_transfer_us(ctx) * self.soc.power.cpu_active_w * 1e-6
+    }
+
+    /// CPU time for one decode step at context `ctx`.
+    pub fn sim_cpu_decode_us(&self, ctx: usize) -> f64 {
+        self.cpu_decode_proj_batch_us[0] + self.cpu_kv_transfer_us(ctx)
+    }
+
+    /// CPU energy of one decode step at context `ctx`.
+    pub fn sim_cpu_decode_energy_j(&self, ctx: usize) -> f64 {
+        self.cpu_decode_proj_batch_j[0] + self.cpu_kv_transfer_j(ctx)
+    }
+
+    /// CPU projection cost of one decode batch of width `b` (precomputed
+    /// up to the KV capacity; on demand beyond, like the NPU curve).
+    fn sim_cpu_decode_batch_proj_us(&self, b: usize) -> f64 {
+        assert!(b > 0, "batch must hold at least one request");
+        if let Some(&us) = self.cpu_decode_proj_batch_us.get(b - 1) {
+            return us;
+        }
+        let cpu = &self.soc.cpu;
+        let mut total = 0.0;
+        for (cc, count) in &self.cpu_proj_costs {
+            total += *count as f64 * cc.decode_us(cpu, b);
+        }
+        total + self.cpu_head_costs.decode_us(cpu, b)
+    }
+
+    fn sim_cpu_decode_batch_proj_j(&self, b: usize) -> f64 {
+        assert!(b > 0, "batch must hold at least one request");
+        if let Some(&j) = self.cpu_decode_proj_batch_j.get(b - 1) {
+            return j;
+        }
+        let cpu = &self.soc.cpu;
+        let pm = &self.soc.power;
+        let mut total = 0.0;
+        for (cc, count) in &self.cpu_proj_costs {
+            total += *count as f64 * cpu_breakdown_energy_j(pm, &cc.decode_cost(cpu, b));
+        }
+        total + cpu_breakdown_energy_j(pm, &self.cpu_head_costs.decode_cost(cpu, b))
+    }
+
+    /// CPU time for one batched decode step: one pass over the weight
+    /// stream shared by the batch, per-lane tables/lookups, per-lane KV
+    /// traffic — the CPU mirror of [`Engine::sim_decode_batch_us`].
+    pub fn sim_cpu_decode_batch_us(&self, ctxs: &[usize]) -> f64 {
+        if ctxs.is_empty() {
+            return 0.0;
+        }
+        let proj = self.sim_cpu_decode_batch_proj_us(ctxs.len());
+        let kv: f64 = ctxs.iter().map(|&c| self.cpu_kv_transfer_us(c)).sum();
+        proj + kv
+    }
+
+    /// CPU energy of one batched decode step, all on the CPU rail.
+    pub fn sim_cpu_decode_batch_energy_j(&self, ctxs: &[usize]) -> f64 {
+        if ctxs.is_empty() {
+            return 0.0;
+        }
+        let proj = self.sim_cpu_decode_batch_proj_j(ctxs.len());
+        let kv: f64 = ctxs.iter().map(|&c| self.cpu_kv_transfer_j(c)).sum();
+        proj + kv
+    }
+
+    /// CPU time for one full prefill chunk ending at `ctx`: the per-shape
+    /// CPU mpGEMM total plus the chunk's attention GEMMs at the CPU's
+    /// dense throughput.
+    pub fn cpu_prefill_chunk_us(&self, ctx: usize) -> f64 {
+        self.cpu_prefill_chunk_proj_us + self.shape.n_layers as f64 * self.cpu_chunk_attn_us(ctx)
+    }
+
+    /// CPU energy of that chunk (attention on the CPU rail).
+    pub fn cpu_prefill_chunk_energy_j(&self, ctx: usize) -> f64 {
+        self.cpu_prefill_chunk_proj_j
+            + self.shape.n_layers as f64
+                * self.cpu_chunk_attn_us(ctx)
+                * self.soc.power.cpu_active_w
+                * 1e-6
+    }
+
+    /// Per-layer chunk attention on the CPU: the (chunk × ctx) score GEMM
+    /// and its weighted sum over the model width, at `gemm_gops`.
+    fn cpu_chunk_attn_us(&self, ctx: usize) -> f64 {
+        let (n, d) = (self.shape.chunk, self.shape.d_model);
+        let ops = 2.0 * 2.0 * (n * ctx * d) as f64;
+        ops / (self.soc.cpu.gemm_gops * 1e3)
+    }
+
+    /// CPU price of a prefill slice, same routing as the NPU price: a full
+    /// chunk is a CPU mpGEMM pass, the ragged remainder is teacher-forced
+    /// through the CPU decode path.
+    pub fn sim_cpu_prefill_slice_us(&self, start: usize, len: usize) -> f64 {
+        match self.slice_route(len) {
+            SliceRoute::MatrixPath => self.cpu_prefill_chunk_us(start + len),
+            SliceRoute::DecodeTail => self.cpu_decode_tail_us[start..start + len].iter().sum(),
+        }
+    }
+
+    /// CPU energy of that slice.
+    pub fn sim_cpu_prefill_slice_energy_j(&self, start: usize, len: usize) -> f64 {
+        match self.slice_route(len) {
+            SliceRoute::MatrixPath => self.cpu_prefill_chunk_energy_j(start + len),
+            SliceRoute::DecodeTail => self.cpu_decode_tail_j[start..start + len].iter().sum(),
+        }
+    }
+
+    // ---- per-work-item dispatch: quote both sides, route to the cheaper ----
+
+    /// The contention-debited quote for a prefill slice on one processor.
+    /// The NPU pays one launch overhead per launch already queued ahead of
+    /// it; the CPU pays the serving runtime's per-request tokenization and
+    /// sampling overhead. Base prices are the undebited kernel surfaces,
+    /// so `quote(…, Contention::idle())` is the legacy price on the NPU.
+    pub fn quote_prefill_slice(
+        &self,
+        start: usize,
+        len: usize,
+        processor: Processor,
+        con: Contention,
+    ) -> f64 {
+        match processor {
+            Processor::Npu => {
+                self.sim_prefill_slice_us(start, len)
+                    + con.queued_launches as f64 * NPU_QUEUE_DEBIT_US
+            }
+            Processor::Cpu => {
+                self.sim_cpu_prefill_slice_us(start, len)
+                    + con.inflight as f64 * CPU_INFLIGHT_DEBIT_US
             }
         }
+    }
+
+    /// The contention-debited quote for a batched decode step.
+    pub fn quote_decode_batch(&self, ctxs: &[usize], processor: Processor, con: Contention) -> f64 {
+        match processor {
+            Processor::Npu => {
+                self.sim_decode_batch_us(ctxs) + con.queued_launches as f64 * NPU_QUEUE_DEBIT_US
+            }
+            Processor::Cpu => {
+                self.sim_cpu_decode_batch_us(ctxs) + con.inflight as f64 * CPU_INFLIGHT_DEBIT_US
+            }
+        }
+    }
+
+    fn route(mode: DispatchMode, npu: (f64, f64), cpu: (f64, f64)) -> Dispatch {
+        let pick_npu = match mode {
+            DispatchMode::NpuOnly => true,
+            DispatchMode::CpuOnly => false,
+            // Ties go to the NPU: deterministic, and byte-stable with the
+            // single-processor arm when the CPU offers no saving.
+            DispatchMode::Auto => npu.0 <= cpu.0,
+        };
+        if pick_npu {
+            Dispatch { processor: Processor::Npu, us: npu.0, energy_j: npu.1 }
+        } else {
+            Dispatch { processor: Processor::Cpu, us: cpu.0, energy_j: cpu.1 }
+        }
+    }
+
+    /// Route one prefill slice: quote it on both processors under `con`
+    /// and return the chosen side's debited µs and kernel energy. Under
+    /// `Auto` the returned price is `min(cpu, npu)` by construction.
+    pub fn dispatch_prefill_slice(
+        &self,
+        start: usize,
+        len: usize,
+        mode: DispatchMode,
+        con: Contention,
+    ) -> Dispatch {
+        Self::route(
+            mode,
+            (
+                self.quote_prefill_slice(start, len, Processor::Npu, con),
+                self.sim_prefill_slice_energy_j(start, len),
+            ),
+            (
+                self.quote_prefill_slice(start, len, Processor::Cpu, con),
+                self.sim_cpu_prefill_slice_energy_j(start, len),
+            ),
+        )
+    }
+
+    /// Route one batched decode step, same contract.
+    pub fn dispatch_decode_batch(
+        &self,
+        ctxs: &[usize],
+        mode: DispatchMode,
+        con: Contention,
+    ) -> Dispatch {
+        Self::route(
+            mode,
+            (
+                self.quote_decode_batch(ctxs, Processor::Npu, con),
+                self.sim_decode_batch_energy_j(ctxs),
+            ),
+            (
+                self.quote_decode_batch(ctxs, Processor::Cpu, con),
+                self.sim_cpu_decode_batch_energy_j(ctxs),
+            ),
+        )
     }
 
     /// Run one prefill slice `[start, start + slice.len())` of request
@@ -953,5 +1337,115 @@ mod tests {
             assert!(us < b as f64 * solo, "width {b} lost the shared pass");
             prev = us;
         }
+    }
+
+    #[test]
+    fn decode_tail_slices_price_identically_to_per_step_sums() {
+        // The per-position tail surface is a precompute of the same
+        // per-step formula the slice loop used to re-derive per position:
+        // slice totals must pin bit-identical, in µs and J, on both sides.
+        let eng = engine(3);
+        for (start, len) in [(0usize, 5usize), (7, 9), (40, 1), (100, 15)] {
+            assert_eq!(eng.slice_route(len), SliceRoute::DecodeTail);
+            let want_us: f64 = (start..start + len).map(|p| eng.sim_decode_us(p + 1)).sum();
+            let want_j: f64 = (start..start + len).map(|p| eng.sim_decode_energy_j(p + 1)).sum();
+            assert_eq!(eng.sim_prefill_slice_us(start, len), want_us, "({start},{len}) µs");
+            assert_eq!(eng.sim_prefill_slice_energy_j(start, len), want_j, "({start},{len}) J");
+            let cpu_us: f64 = (start..start + len).map(|p| eng.sim_cpu_decode_us(p + 1)).sum();
+            assert_eq!(eng.sim_cpu_prefill_slice_us(start, len), cpu_us, "({start},{len}) cpu");
+        }
+    }
+
+    #[test]
+    fn dispatch_quotes_are_two_sided_and_auto_takes_the_min() {
+        let eng = engine(3);
+        let con = Contention { inflight: 3, queued_launches: 2 };
+        for (start, len) in [(0usize, 5usize), (0, 16), (16, 16), (32, 7)] {
+            let npu = eng.quote_prefill_slice(start, len, Processor::Npu, con);
+            let cpu = eng.quote_prefill_slice(start, len, Processor::Cpu, con);
+            let auto = eng.dispatch_prefill_slice(start, len, DispatchMode::Auto, con);
+            assert_eq!(auto.us, npu.min(cpu), "auto must quote min(cpu, npu)");
+            let pinned = eng.dispatch_prefill_slice(start, len, DispatchMode::NpuOnly, con);
+            assert_eq!(pinned.processor, Processor::Npu);
+            assert_eq!(pinned.us, npu);
+            let pinned = eng.dispatch_prefill_slice(start, len, DispatchMode::CpuOnly, con);
+            assert_eq!(pinned.processor, Processor::Cpu);
+            assert_eq!(pinned.us, cpu);
+        }
+        // Idle NPU quotes are the legacy single-processor prices exactly —
+        // npu-only serving is byte-stable against the pre-dispatch engine.
+        let d = eng.dispatch_prefill_slice(0, 16, DispatchMode::NpuOnly, Contention::idle());
+        assert_eq!(d.us, eng.sim_prefill_slice_us(0, 16));
+        assert_eq!(d.energy_j, eng.sim_prefill_slice_energy_j(0, 16));
+        let ctxs = [4usize, 9];
+        let d = eng.dispatch_decode_batch(&ctxs, DispatchMode::NpuOnly, Contention::idle());
+        assert_eq!(d.us, eng.sim_decode_batch_us(&ctxs));
+        assert_eq!(d.energy_j, eng.sim_decode_batch_energy_j(&ctxs));
+    }
+
+    #[test]
+    fn contention_debits_shift_the_quotes_linearly() {
+        let eng = engine(3);
+        let ctxs = [8usize; 2];
+        let base_npu = eng.quote_decode_batch(&ctxs, Processor::Npu, Contention::idle());
+        let base_cpu = eng.quote_decode_batch(&ctxs, Processor::Cpu, Contention::idle());
+        for q in [1usize, 3, 10] {
+            let con = Contention { inflight: 0, queued_launches: q };
+            let npu = eng.quote_decode_batch(&ctxs, Processor::Npu, con);
+            assert!((npu - base_npu - q as f64 * NPU_QUEUE_DEBIT_US).abs() < 1e-12);
+            // Queued launches do not debit the CPU side.
+            assert_eq!(eng.quote_decode_batch(&ctxs, Processor::Cpu, con), base_cpu);
+        }
+        for i in [1usize, 4, 16] {
+            let con = Contention { inflight: i, queued_launches: 0 };
+            let cpu = eng.quote_decode_batch(&ctxs, Processor::Cpu, con);
+            assert!((cpu - base_cpu - i as f64 * CPU_INFLIGHT_DEBIT_US).abs() < 1e-12);
+            assert_eq!(eng.quote_decode_batch(&ctxs, Processor::Npu, con), base_npu);
+        }
+        // Enough queued launches push auto off the NPU (and vice versa):
+        // the contention model can flip the routing decision.
+        let mut flipped = false;
+        for q in 0..200usize {
+            let con = Contention { inflight: 0, queued_launches: q };
+            let d = eng.dispatch_decode_batch(&ctxs, DispatchMode::Auto, con);
+            if d.processor == Processor::Cpu {
+                flipped = true;
+                break;
+            }
+        }
+        assert!(flipped, "a long NPU queue must eventually push work to the CPU");
+    }
+
+    #[test]
+    fn cpu_wins_the_narrow_decode_tail_and_npu_wins_wide_batches() {
+        // The crossover the dispatcher exists for ("When NPUs Are Not
+        // Always Faster"): at width 1 the NPU pays a kernel launch per
+        // projection while the CPU pays a function call, so the CPU wins
+        // the decode tail; per extra lane the NPU adds cheap VLUT issues
+        // and a faster KV stream, so wide batches flip back to the NPU.
+        let eng = engine(3);
+        assert!(
+            eng.sim_cpu_decode_us(32) < eng.sim_decode_us(32),
+            "the CPU must win a solo decode step at tiny shapes: cpu {} vs npu {}",
+            eng.sim_cpu_decode_us(32),
+            eng.sim_decode_us(32)
+        );
+        let wide = [128usize; 32];
+        assert!(
+            eng.sim_cpu_decode_batch_us(&wide) > eng.sim_decode_batch_us(&wide),
+            "the NPU must win wide decode batches: cpu {} vs npu {}",
+            eng.sim_cpu_decode_batch_us(&wide),
+            eng.sim_decode_batch_us(&wide)
+        );
+        // So a crossover width exists: below it the CPU quote wins.
+        let crossover = (1..=32usize).find(|&b| {
+            let ctxs = vec![128usize; b];
+            eng.sim_cpu_decode_batch_us(&ctxs) > eng.sim_decode_batch_us(&ctxs)
+        });
+        assert!(crossover.is_some(), "widening the batch must eventually favor the NPU");
+        assert!(crossover.unwrap() > 1, "the CPU must win at width 1");
+        // The planned chunk stays NPU territory: the matrix path amortizes
+        // its launches over the whole chunk.
+        assert!(eng.cpu_prefill_chunk_us(16) > eng.plan_prefill_chunk_us(16));
     }
 }

@@ -4,6 +4,7 @@
 //! serving run (queue wait, TTFT percentiles, sustained throughput,
 //! simulated energy).
 
+use crate::coordinator::engine::{Dispatch, Processor};
 use crate::npu::config::PowerModel;
 use crate::npu::energy::{EnergyMeter, Placement};
 use std::time::Instant;
@@ -166,6 +167,101 @@ impl RequestCompletion {
     }
 }
 
+/// Per-processor work-item accounting from the heterogeneous dispatcher:
+/// how many prefill slices and decode batches each processor executed, and
+/// the simulated µs / kernel-attributed J charged on each side. Fleet
+/// merges sum these per replica, and the `--require-mixed` dispatch smoke
+/// gates on [`DispatchStats::mixed`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DispatchStats {
+    /// Prefill slices executed on each processor.
+    pub prefill_npu: usize,
+    pub prefill_cpu: usize,
+    /// Decode batches executed on each processor.
+    pub decode_npu: usize,
+    pub decode_cpu: usize,
+    /// Simulated µs charged on each processor.
+    pub npu_us: f64,
+    pub cpu_us: f64,
+    /// Kernel-attributed energy per processor rail, J.
+    pub npu_j: f64,
+    pub cpu_j: f64,
+}
+
+impl DispatchStats {
+    fn record(&mut self, d: &Dispatch, prefill: bool) {
+        match d.processor {
+            Processor::Npu => {
+                if prefill {
+                    self.prefill_npu += 1;
+                } else {
+                    self.decode_npu += 1;
+                }
+                self.npu_us += d.us;
+                self.npu_j += d.energy_j;
+            }
+            Processor::Cpu => {
+                if prefill {
+                    self.prefill_cpu += 1;
+                } else {
+                    self.decode_cpu += 1;
+                }
+                self.cpu_us += d.us;
+                self.cpu_j += d.energy_j;
+            }
+        }
+    }
+
+    /// Count one routed-and-executed prefill slice.
+    pub fn record_prefill(&mut self, d: &Dispatch) {
+        self.record(d, true);
+    }
+
+    /// Count one routed-and-executed decode batch.
+    pub fn record_decode(&mut self, d: &Dispatch) {
+        self.record(d, false);
+    }
+
+    pub fn npu_items(&self) -> usize {
+        self.prefill_npu + self.decode_npu
+    }
+
+    pub fn cpu_items(&self) -> usize {
+        self.prefill_cpu + self.decode_cpu
+    }
+
+    /// Work items executed across both processors.
+    pub fn total_items(&self) -> usize {
+        self.npu_items() + self.cpu_items()
+    }
+
+    /// Fraction of work items routed to the CPU (0.0 for an empty run).
+    pub fn cpu_share(&self) -> f64 {
+        if self.total_items() == 0 {
+            return 0.0;
+        }
+        self.cpu_items() as f64 / self.total_items() as f64
+    }
+
+    /// Whether both processors executed at least one work item — the
+    /// structural property the `--require-mixed` smoke gates on.
+    pub fn mixed(&self) -> bool {
+        self.npu_items() > 0 && self.cpu_items() > 0
+    }
+
+    /// Sum another run's counters into this one (fleet merge).
+    pub fn merge(&mut self, other: &DispatchStats) {
+        self.prefill_npu += other.prefill_npu;
+        self.prefill_cpu += other.prefill_cpu;
+        self.decode_npu += other.decode_npu;
+        self.decode_cpu += other.decode_cpu;
+        self.npu_us += other.npu_us;
+        self.cpu_us += other.cpu_us;
+        self.npu_j += other.npu_j;
+        self.cpu_j += other.cpu_j;
+    }
+}
+
 /// Per-priority-class latency breakdown of a serving run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClassStats {
@@ -237,6 +333,9 @@ pub struct FleetMetrics {
     pub shed: usize,
     /// Shed counts broken down by priority class, ascending priority value.
     pub shed_by_priority: Vec<(u8, usize)>,
+    /// Per-processor work-item routing from the heterogeneous dispatcher
+    /// (all-NPU under the default `npu-only` mode).
+    pub dispatch: DispatchStats,
 }
 
 impl FleetMetrics {
@@ -445,6 +544,7 @@ impl FleetMetrics {
             rejected: 0,
             shed: 0,
             shed_by_priority: Vec::new(),
+            dispatch: DispatchStats::default(),
         };
         let mut shed_by: std::collections::BTreeMap<u8, usize> = std::collections::BTreeMap::new();
         for m in parts {
@@ -474,6 +574,7 @@ impl FleetMetrics {
             out.submitted += m.submitted;
             out.rejected += m.rejected;
             out.shed += m.shed;
+            out.dispatch.merge(&m.dispatch);
             for &(p, n) in &m.shed_by_priority {
                 *shed_by.entry(p).or_insert(0) += n;
             }
@@ -546,6 +647,20 @@ impl FleetMetrics {
             for (p, n) in &self.shed_by_priority {
                 out.push_str(&format!("\n  shed class p{p}  : {n} request(s)"));
             }
+        }
+        if self.dispatch.total_items() > 0 {
+            let d = &self.dispatch;
+            out.push_str(&format!(
+                "\ndispatch        : npu {} item(s) ({:.3} ms, {:.4} J), \
+                 cpu {} item(s) ({:.3} ms, {:.4} J) — {:.0}% cpu",
+                d.npu_items(),
+                d.npu_us / 1e3,
+                d.npu_j,
+                d.cpu_items(),
+                d.cpu_us / 1e3,
+                d.cpu_j,
+                100.0 * d.cpu_share(),
+            ));
         }
         for cs in self.class_stats() {
             out.push_str(&format!(
@@ -663,6 +778,7 @@ mod tests {
             rejected: 0,
             shed: 0,
             shed_by_priority: vec![],
+            dispatch: DispatchStats::default(),
         };
         assert_eq!(fleet.prompt_tokens(), 20);
         assert_eq!(fleet.generated_tokens(), 10);
@@ -715,6 +831,7 @@ mod tests {
             rejected: 0,
             shed: 0,
             shed_by_priority: vec![],
+            dispatch: DispatchStats::default(),
         };
         assert_eq!(fleet.decode_batch_occupancy(), 0.0);
         assert_eq!(fleet.decode_batch_mean_us(), 0.0);
@@ -750,6 +867,7 @@ mod tests {
             rejected: 1,
             shed: 1,
             shed_by_priority: vec![(4, 1)],
+            dispatch: DispatchStats::default(),
         };
         fleet.completions[1].ttft_slo_us = Some(2_000.0); // met (1000 ≤ 2000)
         fleet.completions[2].ttft_slo_us = Some(2_000.0); // missed (4000 > 2000)
@@ -804,6 +922,7 @@ mod tests {
             rejected: 0,
             shed: 0,
             shed_by_priority: vec![],
+            dispatch: DispatchStats::default(),
         };
         assert_eq!(
             fleet.ttft_percentiles_ms(),
@@ -839,6 +958,7 @@ mod tests {
             rejected: 1,
             shed: 1,
             shed_by_priority: vec![(0, 1)],
+            dispatch: DispatchStats::default(),
         };
         a.completions[0].finish_us = 9_000.0;
         let mut b = a.clone();
@@ -850,6 +970,10 @@ mod tests {
         b.rejected = 0;
         b.shed = 0;
         b.shed_by_priority = vec![];
+        let npu_item = Dispatch { processor: Processor::Npu, us: 10.0, energy_j: 0.1 };
+        let cpu_item = Dispatch { processor: Processor::Cpu, us: 5.0, energy_j: 0.2 };
+        a.dispatch.record_decode(&npu_item);
+        b.dispatch.record_prefill(&cpu_item);
         let m = FleetMetrics::merged([&a, &b]);
         // Parallel devices: the fleet finishes when the slowest replica does.
         assert_eq!(m.makespan_us, 32_000.0);
@@ -866,11 +990,41 @@ mod tests {
         assert_eq!(m.prefix_lookups, 4);
         assert_eq!(m.prefix_hits, 2);
         assert_eq!(m.shed_by_priority, vec![(0, 1)]);
+        // Dispatch counters sum across replicas: one NPU decode batch from
+        // `a`, one CPU prefill slice from `b` — the merged view is mixed.
+        assert!(m.dispatch.mixed());
+        assert_eq!(m.dispatch.total_items(), 2);
+        assert!((m.dispatch.npu_us - 10.0).abs() < 1e-12);
+        assert!((m.dispatch.cpu_j - 0.2).abs() < 1e-12);
         assert_eq!(
             m.completions.len() + m.shed + m.rejected,
             m.submitted,
             "terminal accounting survives merging"
         );
+    }
+
+    #[test]
+    fn dispatch_stats_record_share_and_merge() {
+        let mut d = DispatchStats::default();
+        assert_eq!(d.cpu_share(), 0.0, "empty run has no CPU share");
+        assert!(!d.mixed());
+        d.record_prefill(&Dispatch { processor: Processor::Npu, us: 10.0, energy_j: 0.5 });
+        d.record_decode(&Dispatch { processor: Processor::Cpu, us: 4.0, energy_j: 0.25 });
+        d.record_decode(&Dispatch { processor: Processor::Npu, us: 6.0, energy_j: 0.5 });
+        assert_eq!(d.prefill_npu, 1);
+        assert_eq!(d.decode_cpu, 1);
+        assert_eq!(d.npu_items(), 2);
+        assert_eq!(d.cpu_items(), 1);
+        assert!(d.mixed());
+        assert!((d.cpu_share() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((d.npu_us - 16.0).abs() < 1e-12);
+        assert!((d.npu_j - 1.0).abs() < 1e-12);
+        assert!((d.cpu_us - 4.0).abs() < 1e-12);
+        let mut m = d.clone();
+        m.merge(&d);
+        assert_eq!(m.total_items(), 6);
+        assert!((m.cpu_us - 8.0).abs() < 1e-12);
+        assert!((m.cpu_share() - d.cpu_share()).abs() < 1e-12, "share is scale-free");
     }
 
     #[test]
@@ -906,6 +1060,7 @@ mod tests {
             rejected: 0,
             shed: 0,
             shed_by_priority: vec![],
+            dispatch: DispatchStats::default(),
         };
         let stats = fleet.class_stats();
         assert_eq!(stats.len(), 2);

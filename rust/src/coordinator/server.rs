@@ -41,9 +41,17 @@
 //! Per-request energy is kernel-attributed: prefill slices and decode
 //! batches carry the plan cost surface's stage-breakdown energy (DMA rail
 //! vs compute rail), each request taking its share of the batches it rode.
+//!
+//! Pricing is **two-sided**: every prefill slice and decode batch is
+//! quoted on both the NPU plan surface and the CPU LUT surface under the
+//! loop's contention snapshot, and [`DispatchMode`] decides which quote
+//! the clock advances by — `npu-only` (the default) reproduces the
+//! single-processor loop byte-for-byte, `auto` routes each work item to
+//! the cheaper side. [`FleetMetrics::dispatch`] reports the resulting
+//! per-processor work-item, time, and energy mix.
 
-use crate::coordinator::engine::Engine;
-use crate::coordinator::metrics::{FleetMetrics, PhaseTimer, RequestCompletion};
+use crate::coordinator::engine::{Contention, DispatchMode, Engine};
+use crate::coordinator::metrics::{DispatchStats, FleetMetrics, PhaseTimer, RequestCompletion};
 use crate::coordinator::scheduler::{kv_reserve_tokens, Request, Scheduler, WorkItem};
 use crate::model::{sampler, tokenizer};
 use crate::util::Rng;
@@ -388,6 +396,10 @@ pub struct ServeOpts {
     pub verbose: bool,
     /// Admission-control / shedding behavior past saturation.
     pub policy: OverloadPolicy,
+    /// Which processor(s) work items are priced on. The default
+    /// (`npu-only`) keeps every run byte-identical to the pre-dispatch
+    /// loop; `auto` routes each work item to the cheaper quote.
+    pub dispatch: DispatchMode,
 }
 
 impl Default for ServeOpts {
@@ -400,6 +412,7 @@ impl Default for ServeOpts {
             max_batch: 1,
             verbose: false,
             policy: OverloadPolicy::default(),
+            dispatch: DispatchMode::default(),
         }
     }
 }
@@ -505,6 +518,8 @@ impl Server {
             self.engine.kv_block_tokens(),
         );
         let policy = self.opts.policy.clone();
+        let mode = self.opts.dispatch;
+        let mut dispatch = DispatchStats::default();
         let mut states: HashMap<u64, ReqState> = HashMap::new();
         let mut completions: Vec<RequestCompletion> = Vec::new();
         let mut clock_us = 0.0f64;
@@ -665,6 +680,14 @@ impl Server {
                 }
             }
 
+            // Contention snapshot for this work item's two-sided quote:
+            // every admitted in-flight request debits the CPU (its
+            // tokenization and sampling ride the big cores whichever side
+            // runs the kernels), while the serial simulation retires each
+            // NPU launch before issuing the next, so the launch queue is
+            // always drained between work items — which keeps `npu-only`
+            // quotes bit-equal to the undebited sim prices.
+            let con = Contention { inflight: states.len(), queued_launches: 0 };
             let item = sched.next().context("scheduler had work but yielded none")?;
             match item {
                 WorkItem::PrefillChunk { id, start, len } => {
@@ -700,18 +723,24 @@ impl Server {
                     // slice's real kernel price as cache savings.
                     let end = start + len;
                     let from = start.max(st.cached);
-                    let full_price = self.engine.sim_prefill_slice_us(start, len);
+                    // Two-sided price: the slice is quoted on both
+                    // processors under the contention snapshot and charged
+                    // at the routed side's debited price. With `npu-only`
+                    // and a drained launch queue this is bit-equal to the
+                    // legacy NPU sim price.
+                    let full_price = self.engine.dispatch_prefill_slice(start, len, mode, con).us;
                     let mut paid = 0.0;
                     if from < end {
-                        let (logits, us) =
+                        let d = self.engine.dispatch_prefill_slice(from, end - from, mode, con);
+                        let (logits, _) =
                             self.engine.prefill_slice(id, &st.prompt[from..end], from)?;
                         st.logits = logits;
                         st.prefilled_total += end - from;
-                        st.sim_prefill_us += us;
-                        st.sim_prefill_j +=
-                            self.engine.sim_prefill_slice_energy_j(from, end - from);
-                        clock_us += us;
-                        paid = us;
+                        st.sim_prefill_us += d.us;
+                        st.sim_prefill_j += d.energy_j;
+                        clock_us += d.us;
+                        paid = d.us;
+                        dispatch.record_prefill(&d);
                     }
                     st.saved_us += full_price - paid;
                     st.covered += len;
@@ -785,7 +814,17 @@ impl Server {
                         decode_batches_executed += 1;
                         let ctxs: Vec<usize> =
                             forwards.iter().map(|&(_, _, pos)| pos + 1).collect();
-                        let batch_j = self.engine.sim_decode_batch_energy_j(&ctxs);
+                        // The whole batch routes to one processor (its
+                        // lanes share a single weight pass and cannot
+                        // split), then the legacy per-lane NPU attribution
+                        // is rescaled onto the routed price. Under
+                        // `npu-only` the quote *is* the NPU sim total, so
+                        // the scale is exactly 1.0 and every per-lane
+                        // charge stays bit-identical to the old loop.
+                        let d = self.engine.dispatch_decode_batch(&ctxs, mode, con);
+                        let npu_us = self.engine.sim_decode_batch_us(&ctxs);
+                        let scale = if npu_us > 0.0 { d.us / npu_us } else { 1.0 };
+                        dispatch.record_decode(&d);
                         let (all_logits, per_us) = self.engine.decode_batch(&forwards)?;
                         let batch_us: f64 = per_us.iter().sum();
                         for ((&(id, _, _), logits), us) in
@@ -793,16 +832,17 @@ impl Server {
                         {
                             let st = states.get_mut(&id).expect("state exists");
                             st.logits = logits;
-                            st.sim_decode_us += us;
+                            let lane_us = us * scale;
+                            st.sim_decode_us += lane_us;
                             // Kernel-attributed energy: this request's
                             // share of the batch's stage-breakdown energy,
                             // proportional to its share of the batch time
                             // (so the attributions sum to the batch total).
                             if batch_us > 0.0 {
-                                st.sim_decode_j += batch_j * us / batch_us;
+                                st.sim_decode_j += d.energy_j * us / batch_us;
                             }
-                            decode_batch_sim_us += us;
-                            clock_us += us;
+                            decode_batch_sim_us += lane_us;
+                            clock_us += lane_us;
                         }
                     }
                 }
@@ -913,6 +953,7 @@ impl Server {
             rejected,
             shed,
             shed_by_priority: shed_by_priority.into_iter().collect(),
+            dispatch,
         })
     }
 }

@@ -1,0 +1,224 @@
+//! CPU-side T-MAC-style LUT mpGEMM/GEMV cost surface — the second half of
+//! the two-sided price every work item is quoted on.
+//!
+//! T-MAN maps both phases onto the NPU, but "When NPUs Are Not Always
+//! Faster" (PAPERS.md) shows the winning processor flips per stage:
+//! small-batch decode tails and sub-tile remainder slices are CPU
+//! territory because the CPU pays no kernel-launch doorbell and no DMA
+//! descriptor setup per call. This module prices the T-MAC CPU execution
+//! of the same bit-serial weights [`PlanCosts`](crate::kernels::plan::PlanCosts)
+//! prices for the NPU:
+//!
+//! - **Decode (LUT GEMV)** — per-lane activation tables built on the
+//!   scalar/NEON units, one pass over the packed weight stream shared by
+//!   the whole batch, one TBL lookup per 4-weight group per bit plane.
+//!   Memory-bandwidth-bound: the weight stream runs at the CPU's DDR
+//!   bandwidth (`mem_gbps`, well below the NPU's DMA path) but the fixed
+//!   per-call cost is a function call, not a kernel launch.
+//! - **Prefill (mpGEMM)** — the cheaper of the LUT path (per-row tables +
+//!   lookups, wins at small n) and the dense path (one-shot weight
+//!   dequantization + fp GEMM at `gemm_gops`, wins once n amortizes the
+//!   dequant pass).
+//!
+//! The surface is shape-only (no weights materialize) and returns the same
+//! [`Breakdown`] the NPU kernels report, so `npu::energy` can price it on
+//! the CPU power rail and the engine can compare the two sides directly.
+
+use crate::npu::config::CpuConfig;
+use crate::npu::cost::Breakdown;
+use crate::quant::formats::QuantFormat;
+
+/// Fixed cost of one CPU GEMV call: a thread-pool dispatch and a cache
+/// warm-up, not an NPU doorbell + descriptor setup. This asymmetry is why
+/// the CPU wins narrow decode work items.
+pub const CPU_GEMV_CALL_US: f64 = 1.0;
+
+/// Fixed cost of one CPU GEMM call: the prefill path forks across every
+/// big core and pays fork/join synchronization, cross-core cache traffic,
+/// and tail imbalance (the slowest shard gates the join) per call, so it
+/// carries a much larger fixed cost than the single-core GEMV dispatch.
+pub const CPU_GEMM_CALL_US: f64 = 6.0;
+
+/// Weights per TBL lookup: a 4-element group along K indexes one 16-entry
+/// table per bit plane (the T-MAC layout).
+const LOOKUP_GROUP: usize = 4;
+
+/// Issue-rate advantage of the serving-path kernel over the T-MAC
+/// baseline figure in [`CpuConfig::tbl_glookups`]: the baseline rate
+/// charges the horizontal accumulate on the same issue port as the TBL;
+/// our layout keeps four independent per-plane accumulators so the adds
+/// dual-issue with the lookups, recovering one slot in four.
+const CPU_TBL_ISSUE_FACTOR: f64 = 4.0 / 3.0;
+
+/// CPU latency rule: the hardware prefetcher streams the weight buffer
+/// while the ALUs look up / multiply, so memory and compute overlap; the
+/// table build is a serial prologue and the call overhead is fixed.
+/// Mirrors [`gemv_overlapped_us`](crate::kernels::lut_gemv::gemv_overlapped_us).
+pub fn cpu_overlapped_us(b: &Breakdown) -> f64 {
+    b.mem_us.max(b.cmp_us) + b.dq_us + b.overhead_us
+}
+
+/// The shape-only CPU cost surface for one (M, K) linear layer — the CPU
+/// counterpart of [`PlanCosts`](crate::kernels::plan::PlanCosts). No tiling
+/// search: the CPU path streams the packed weights linearly.
+#[derive(Debug, Clone)]
+pub struct CpuLutCosts {
+    pub m: usize,
+    pub k: usize,
+    pub fmt: QuantFormat,
+}
+
+impl CpuLutCosts {
+    pub fn for_shape(fmt: QuantFormat, m: usize, k: usize) -> Self {
+        Self { m, k, fmt }
+    }
+
+    /// Packed weight bytes streamed per pass (bit planes + scales).
+    pub fn weight_bytes(&self) -> usize {
+        self.fmt.weight_footprint(self.m, self.k)
+    }
+
+    /// TBL lookups per lane: one per 4-weight group per bit plane.
+    fn lookups_per_lane(&self) -> usize {
+        self.m * self.k.div_ceil(LOOKUP_GROUP) * self.fmt.weight.bits() as usize
+    }
+
+    /// Activation-table entries per lane: 16 partial sums per 4-element
+    /// group along K, shared across bit planes.
+    fn table_entries_per_lane(&self) -> usize {
+        self.k.div_ceil(LOOKUP_GROUP) * 16
+    }
+
+    /// Batched LUT GEMV: `batch` lanes share one pass over the weight
+    /// stream; tables and lookups are per lane.
+    pub fn decode_cost(&self, cpu: &CpuConfig, batch: usize) -> Breakdown {
+        let batch = batch.max(1) as f64;
+        Breakdown {
+            mem_us: self.weight_bytes() as f64 / (cpu.mem_gbps * 1e3),
+            dq_us: batch * self.table_entries_per_lane() as f64 / (cpu.dequant_gops * 1e3),
+            cmp_us: batch * self.lookups_per_lane() as f64
+                / (cpu.tbl_glookups * CPU_TBL_ISSUE_FACTOR * 1e3),
+            overhead_us: CPU_GEMV_CALL_US,
+        }
+    }
+
+    /// Batched decode latency, µs (prefetch overlaps lookups, call paid
+    /// once per batch).
+    pub fn decode_us(&self, cpu: &CpuConfig, batch: usize) -> f64 {
+        cpu_overlapped_us(&self.decode_cost(cpu, batch))
+    }
+
+    /// Decode latencies for every batch width `1..=max_batch` — what the
+    /// engine precomputes per shape, mirroring the NPU curve.
+    pub fn decode_curve(&self, cpu: &CpuConfig, max_batch: usize) -> Vec<f64> {
+        (1..=max_batch).map(|b| self.decode_us(cpu, b)).collect()
+    }
+
+    /// LUT-path prefill: n independent lanes of the decode kernel sharing
+    /// one weight pass (T-MAC's mpGEMM for small n).
+    fn prefill_lut_cost(&self, cpu: &CpuConfig, n: usize) -> Breakdown {
+        Breakdown { overhead_us: CPU_GEMM_CALL_US, ..self.decode_cost(cpu, n) }
+    }
+
+    /// Dense-path prefill: dequantize the whole matrix once, then fp GEMM
+    /// at the CPU's dense throughput (wins once n amortizes the dequant).
+    fn prefill_dense_cost(&self, cpu: &CpuConfig, n: usize) -> Breakdown {
+        let act_bytes = 2 * n * (self.k + self.m); // fp16 in + out
+        Breakdown {
+            mem_us: (self.weight_bytes() + act_bytes) as f64 / (cpu.mem_gbps * 1e3),
+            dq_us: (self.m * self.k) as f64 / (cpu.dequant_gops * 1e3),
+            cmp_us: (2 * n * self.m * self.k) as f64 / (cpu.gemm_gops * 1e3),
+            overhead_us: CPU_GEMM_CALL_US,
+        }
+    }
+
+    /// Prefill cost of an (n × M × K) mpGEMM: the cheaper of the LUT and
+    /// dense paths (the runtime picks per shape, exactly like T-MAC).
+    pub fn prefill_cost(&self, cpu: &CpuConfig, n: usize) -> Breakdown {
+        let lut = self.prefill_lut_cost(cpu, n);
+        let dense = self.prefill_dense_cost(cpu, n);
+        if cpu_overlapped_us(&lut) <= cpu_overlapped_us(&dense) {
+            lut
+        } else {
+            dense
+        }
+    }
+
+    /// Prefill latency, µs.
+    pub fn prefill_us(&self, cpu: &CpuConfig, n: usize) -> f64 {
+        cpu_overlapped_us(&self.prefill_cost(cpu, n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn surface() -> CpuLutCosts {
+        CpuLutCosts::for_shape(QuantFormat::tman_w4a16(), 4096, 4096)
+    }
+
+    fn cpu() -> CpuConfig {
+        CpuConfig::sd8gen3_cpu()
+    }
+
+    #[test]
+    fn decode_is_monotone_in_width_and_amortizes_the_weight_pass() {
+        let s = surface();
+        let c = cpu();
+        let curve = s.decode_curve(&c, 8);
+        assert_eq!(curve.len(), 8);
+        assert!(curve.windows(2).all(|w| w[1] >= w[0]), "decode curve must be monotone");
+        // One shared weight stream: 8 lanes must cost less than 8 solos.
+        assert!(curve[7] < 8.0 * curve[0], "the shared weight pass must amortize");
+        assert_eq!(s.decode_us(&c, 1), curve[0]);
+    }
+
+    #[test]
+    fn prefill_is_monotone_in_tokens_and_picks_the_cheaper_path() {
+        let s = surface();
+        let c = cpu();
+        let mut last = 0.0;
+        for n in [1, 4, 16, 64, 256] {
+            let us = s.prefill_us(&c, n);
+            assert!(us >= last, "prefill cost must be monotone in tokens (n={n})");
+            last = us;
+            let lut = cpu_overlapped_us(&s.prefill_lut_cost(&c, n));
+            let dense = cpu_overlapped_us(&s.prefill_dense_cost(&c, n));
+            assert!(us <= lut && us <= dense, "prefill must take the cheaper path");
+        }
+        // At large n the dense path must win: lookups scale per lane while
+        // the dequant pass is paid once.
+        let n = 512;
+        let lut = cpu_overlapped_us(&s.prefill_lut_cost(&c, n));
+        let dense = cpu_overlapped_us(&s.prefill_dense_cost(&c, n));
+        assert!(dense < lut, "dense prefill must win at large n");
+    }
+
+    #[test]
+    fn costs_grow_with_shape() {
+        let c = cpu();
+        let small = CpuLutCosts::for_shape(QuantFormat::tman_w4a16(), 1024, 1024);
+        let big = surface();
+        assert!(big.decode_us(&c, 1) > small.decode_us(&c, 1));
+        assert!(big.prefill_us(&c, 16) > small.prefill_us(&c, 16));
+        // 2-bit weights stream half the bytes of 4-bit.
+        let w2 = CpuLutCosts::for_shape(QuantFormat::tman_w2a16(), 4096, 4096);
+        assert!(w2.weight_bytes() < big.weight_bytes());
+    }
+
+    #[test]
+    fn decode_is_memory_bound_at_realistic_shape() {
+        // The paper's premise for the decode phase holds on the CPU side
+        // too: at 4096² the weight stream dominates the per-lane lookups.
+        let b = surface().decode_cost(&cpu(), 1);
+        assert!(b.mem_us > b.cmp_us);
+        assert!(b.mem_us > b.dq_us);
+    }
+
+    #[test]
+    fn overlap_rule_is_never_slower_than_sequential() {
+        let b = surface().decode_cost(&cpu(), 4);
+        assert!(cpu_overlapped_us(&b) <= b.sequential_us());
+    }
+}

@@ -12,6 +12,7 @@
 //! through the plan in layer code.
 
 pub mod baselines;
+pub mod cpu_lut;
 pub mod dequant_gemm;
 pub mod lut_gemv;
 pub mod plan;
@@ -19,6 +20,7 @@ pub mod reference;
 pub mod tiling;
 
 pub use baselines::{Framework, Phase};
+pub use cpu_lut::CpuLutCosts;
 pub use dequant_gemm::{DequantGemm, DequantStrategy, GemmResult};
 pub use lut_gemv::{lut_gemv, precompute_tables, ActTables, GemvResult, LutGemv, SpillPolicy};
 pub use plan::{PlanCosts, UnifiedLayerPlan};

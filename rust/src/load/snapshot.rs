@@ -20,13 +20,18 @@
 //!   memory) under round-robin vs cache-aware routing: the sweep that
 //!   must show cache-aware winning on prefix hit rate without losing
 //!   goodput.
+//! - `dispatch_npu` / `dispatch_cpu` / `dispatch_auto` — one pinned mixed
+//!   trace priced under the three dispatch modes: the heterogeneous
+//!   dispatcher's two-sided quote must pay off end-to-end, with the auto
+//!   arm beating both single-processor arms on makespan while routing
+//!   work items to both processors.
 //!
 //! The flash deadline is *self-calibrating*: slack is set to 1/4 of the
 //! no-shed run's p99 TTFT, so the scenario stays an overload (and the
 //! shed arm provably sheds) even as kernel costs drift across commits.
 
 use crate::bench::FlatJson;
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{DispatchMode, Engine};
 use crate::coordinator::fleet::{Fleet, FleetRun, RoutingPolicy};
 use crate::coordinator::metrics::{percentile, FleetMetrics};
 use crate::coordinator::server::{OverloadPolicy, ServeOpts, Server, TraceProfile, TraceRequest};
@@ -150,7 +155,51 @@ pub fn serving_snapshot() -> Result<String> {
         rr.prefix_hit_rate()
     );
 
+    // Heterogeneous dispatch sweep: the identical mixed trace priced under
+    // npu-only / cpu-only / auto. The auto arm must strictly beat both
+    // single-processor arms on makespan (the two-sided quote pays off
+    // end-to-end) and must genuinely route work to both processors — the
+    // same structural property the `--require-mixed` CI smoke gates.
+    let dispatch_trace =
+        LoadSpec::new(ArrivalProcess::Poisson { mean_gap_us: 500.0 }, TraceProfile::tiny())
+            .trace(48, 17);
+    let npu_arm = run_dispatch(DispatchMode::NpuOnly, &dispatch_trace)?;
+    emit_dispatch(&mut out, "dispatch_npu", &npu_arm);
+    let cpu_arm = run_dispatch(DispatchMode::CpuOnly, &dispatch_trace)?;
+    emit_dispatch(&mut out, "dispatch_cpu", &cpu_arm);
+    let auto_arm = run_dispatch(DispatchMode::Auto, &dispatch_trace)?;
+    emit_dispatch(&mut out, "dispatch_auto", &auto_arm);
+    out.num("dispatch_auto.cpu_share", auto_arm.dispatch.cpu_share());
+    ensure!(
+        auto_arm.makespan_us < npu_arm.makespan_us && auto_arm.makespan_us < cpu_arm.makespan_us,
+        "auto dispatch must beat both single-processor arms on makespan \
+         (auto {:.1} vs npu {:.1} / cpu {:.1} µs)",
+        auto_arm.makespan_us,
+        npu_arm.makespan_us,
+        cpu_arm.makespan_us
+    );
+    ensure!(
+        auto_arm.dispatch.mixed(),
+        "auto dispatch routed every work item to one processor \
+         ({} npu / {} cpu)",
+        auto_arm.dispatch.npu_items(),
+        auto_arm.dispatch.cpu_items()
+    );
+
     Ok(out.finish())
+}
+
+/// One dispatch arm: the pinned mixed trace under one dispatch mode.
+fn run_dispatch(mode: DispatchMode, trace: &[TraceRequest]) -> Result<FleetMetrics> {
+    let opts = ServeOpts { max_batch: MAX_BATCH, dispatch: mode, ..Default::default() };
+    Server::new(engine()?, opts).run(trace)
+}
+
+/// Dispatch-scenario keys: the standard metric set plus the gated
+/// end-to-end makespan the three arms are compared on.
+fn emit_dispatch(out: &mut FlatJson, scen: &str, fleet: &FleetMetrics) {
+    emit_fleet(out, scen, fleet);
+    out.num(&format!("{scen}.makespan_ms"), fleet.makespan_us / 1e3);
 }
 
 /// Route one pinned trace across three prefix-cache replicas.
@@ -184,7 +233,18 @@ mod tests {
                 .unwrap_or_else(|| panic!("missing key {key}"))
                 .1
         };
-        for scen in ["steady", "flash_noshed", "flash_shed", "prefix", "fleet_rr", "fleet_ca"] {
+        let scenarios = [
+            "steady",
+            "flash_noshed",
+            "flash_shed",
+            "prefix",
+            "fleet_rr",
+            "fleet_ca",
+            "dispatch_npu",
+            "dispatch_cpu",
+            "dispatch_auto",
+        ];
+        for scen in scenarios {
             for metric in
                 ["submitted", "completed", "shed_rate", "deadline_misses", "goodput_tps"]
             {
@@ -203,5 +263,12 @@ mod tests {
         assert!(get("fleet_ca.prefix_hit_rate") >= get("fleet_rr.prefix_hit_rate"));
         assert!(get("fleet_ca.load_imbalance") >= 1.0);
         assert!(get("fleet_rr.load_imbalance") >= 1.0);
+        // The dispatch sweep: same trace, three pricing modes — auto wins
+        // the makespan against both single-processor arms and routes a
+        // non-trivial share of the work to each side.
+        assert!(get("dispatch_auto.makespan_ms") < get("dispatch_npu.makespan_ms"));
+        assert!(get("dispatch_auto.makespan_ms") < get("dispatch_cpu.makespan_ms"));
+        let share = get("dispatch_auto.cpu_share");
+        assert!(share > 0.0 && share < 1.0, "auto must mix processors (cpu_share {share})");
     }
 }

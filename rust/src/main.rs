@@ -12,6 +12,7 @@
 //!            [--arrivals poisson|bursty|diurnal|flash-crowd] [--fanout K]
 //!            [--slo-ttft-ms X] [--queue-cap N] [--shed] [--require-shed]
 //!            [--replicas N] [--routing round-robin|least-loaded|cache-aware]
+//!            [--dispatch npu-only|cpu-only|auto] [--require-mixed]
 //!            [--bits 2|4] [--temp T] [--artifacts DIR] [--soc ...]
 //!   bench    [--json]                 plan-cost snapshot (CI artifact)
 //!   bench-serving [--out FILE]        serving perf snapshot (BENCH_serving.json)
@@ -30,7 +31,7 @@
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 use tman::bench::{compare_benchmarks, plan_cost_report};
-use tman::coordinator::engine::{Engine, GenerateOpts};
+use tman::coordinator::engine::{DispatchMode, Engine, GenerateOpts};
 use tman::coordinator::fleet::{Fleet, RoutingPolicy};
 use tman::coordinator::server::{
     synthetic_trace, ClosedLoopOpts, OverloadPolicy, ServeOpts, Server, TraceProfile,
@@ -204,12 +205,21 @@ fn main() -> Result<()> {
                 shed: args.flags.contains_key("shed"),
             };
             let max_batch = max_batch_from(&args)?;
+            // Heterogeneous dispatch mode: which processor(s) work items
+            // are priced on. npu-only (the default) is the legacy loop.
+            let dispatch = match args.flags.get("dispatch").map(|s| s.as_str()) {
+                None => DispatchMode::default(),
+                Some(name) => DispatchMode::from_name(name).ok_or_else(|| {
+                    anyhow::anyhow!("unknown dispatch mode {name} (npu-only | cpu-only | auto)")
+                })?,
+            };
             let opts = ServeOpts {
                 temperature: args.flags.get("temp").map(|s| s.parse()).transpose()?.unwrap_or(0.0),
                 verbose: args.flags.contains_key("verbose"),
                 seed,
                 max_batch,
                 policy,
+                dispatch,
                 ..Default::default()
             };
             let closed_loop: Option<usize> =
@@ -217,10 +227,11 @@ fn main() -> Result<()> {
             let think_ms: f64 =
                 args.flags.get("think-ms").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
             let setup = format!(
-                "chunk {}, {} KV slots, decode batch {}, soc {}",
+                "chunk {}, {} KV slots, decode batch {}, dispatch {}, soc {}",
                 engine.chunk(),
                 engine.kv_slot_capacity(),
                 max_batch,
+                dispatch.name(),
                 engine.soc.name
             );
             // Arrival model: the legacy Poisson synthetic trace by default,
@@ -354,6 +365,29 @@ fn main() -> Result<()> {
                     fleet.shed, fleet.rejected, fleet.submitted
                 );
             }
+            // CI gate for dispatch smokes: under --dispatch auto the mixed
+            // trace must genuinely exercise both processors — a run where
+            // one side takes 100% of the work items means the two-sided
+            // pricing collapsed to a single-processor loop.
+            if args.flags.contains_key("require-mixed") {
+                anyhow::ensure!(
+                    fleet.dispatch.mixed(),
+                    "--require-mixed: one processor handled all {} work item(s) \
+                     ({} npu / {} cpu)",
+                    fleet.dispatch.total_items(),
+                    fleet.dispatch.npu_items(),
+                    fleet.dispatch.cpu_items()
+                );
+                println!(
+                    "dispatch gate: {} npu + {} cpu work items ({:.0}% cpu), \
+                     npu {:.3} ms / cpu {:.3} ms",
+                    fleet.dispatch.npu_items(),
+                    fleet.dispatch.cpu_items(),
+                    100.0 * fleet.dispatch.cpu_share(),
+                    fleet.dispatch.npu_us / 1e3,
+                    fleet.dispatch.cpu_us / 1e3
+                );
+            }
         }
         "bench" => {
             // Machine-readable kernel/serving cost snapshot, one run per
@@ -440,6 +474,10 @@ fn main() -> Result<()> {
                  \x20         --replicas N (route across N engine replicas)\n\
                  \x20         --routing round-robin|least-loaded|cache-aware\n\
                  \x20         (replica admission policy, default cache-aware)\n\
+                 \x20         --dispatch npu-only|cpu-only|auto (two-sided\n\
+                 \x20         work-item pricing, default npu-only)\n\
+                 \x20         --require-mixed (fail unless auto dispatch routed\n\
+                 \x20         work items to both processors)\n\
                  bench:    --json (machine-readable plan-cost snapshot)\n\
                  bench-serving: [--out FILE] (BENCH_serving.json snapshot)\n\
                  bench-check:   --baseline FILE --current FILE [--tolerance 0.15]\n\

@@ -116,6 +116,18 @@ pub fn breakdown_energy_j(pm: &PowerModel, bd: &Breakdown) -> f64 {
             + pm.idle_w * bd.overhead_us)
 }
 
+/// CPU-rail counterpart of [`breakdown_energy_j`] for work items the
+/// heterogeneous dispatcher routes to the CPU: the big-core cluster drives
+/// both the DDR stream and the ALU work (a core stalled on DRAM still sits
+/// in the active cluster — there is no separate CPU memory rail), so the
+/// mem/dq/cmp stages all price at `cpu_active_w`; only the fixed call
+/// overhead sits at the idle floor. By construction this never touches the
+/// NPU rails, which is what lets the metrics report a per-processor energy
+/// mix.
+pub fn cpu_breakdown_energy_j(pm: &PowerModel, bd: &Breakdown) -> f64 {
+    1e-6 * (pm.cpu_active_w * (bd.mem_us + bd.dq_us + bd.cmp_us) + pm.idle_w * bd.overhead_us)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,6 +193,22 @@ mod tests {
         let cmp_bound = Breakdown { cmp_us: 10.0, ..Default::default() };
         assert!(breakdown_energy_j(&pm, &mem_bound) < breakdown_energy_j(&pm, &cmp_bound));
         assert_eq!(breakdown_energy_j(&pm, &Breakdown::default()), 0.0);
+    }
+
+    #[test]
+    fn cpu_rail_energy_never_touches_the_npu_rails() {
+        let pm = PowerModel::sd8gen3();
+        let bd = Breakdown { mem_us: 10.0, dq_us: 2.0, cmp_us: 3.0, overhead_us: 5.0 };
+        let want = 1e-6 * (15.0 * pm.cpu_active_w + 5.0 * pm.idle_w);
+        assert!((cpu_breakdown_energy_j(&pm, &bd) - want).abs() < 1e-15);
+        // Zeroing the NPU rails must not change the CPU-rail price.
+        let zeroed = PowerModel { npu_active_w: 0.0, npu_mem_w: 0.0, ..pm.clone() };
+        assert_eq!(cpu_breakdown_energy_j(&pm, &bd), cpu_breakdown_energy_j(&zeroed, &bd));
+        // The CPU cluster draws more than the NPU at equal stage times
+        // (Table 3: 8.2 W vs 4.9 W active), so CPU-routed work is the
+        // latency-for-energy trade the dispatch metrics surface.
+        assert!(cpu_breakdown_energy_j(&pm, &bd) > breakdown_energy_j(&pm, &bd));
+        assert_eq!(cpu_breakdown_energy_j(&pm, &Breakdown::default()), 0.0);
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! Dispatch-optimality property suite for the heterogeneous CPU+NPU
+//! dispatcher: fuzzed work items (prefill slices × decode batch widths ×
+//! contention states) must prove that `auto` always takes the cheaper
+//! quote, that routing is deterministic for a fixed seed, that the chosen
+//! processor changes *prices only* — host numerics stay byte-identical
+//! across `npu-only` / `cpu-only` / `auto` — and that terminal accounting
+//! (`completed + shed + rejected == submitted`) survives auto dispatch
+//! under a bounded queue with deadline shedding.
+
+use tman::coordinator::engine::{Contention, DispatchMode, Engine, Processor};
+use tman::coordinator::metrics::FleetMetrics;
+use tman::coordinator::server::{
+    synthetic_trace, OverloadPolicy, ServeOpts, Server, TraceProfile, TraceRequest,
+};
+use tman::model::config::ModelConfig;
+use tman::model::weights::random_transformer;
+use tman::npu::config::SocConfig;
+use tman::util::Rng;
+
+fn engine_seeded(model_seed: u64, chunk: usize, max_batch: usize, kv_slots: usize) -> Engine {
+    let model = random_transformer(&ModelConfig::tiny(), model_seed);
+    Engine::reference(model, SocConfig::oneplus12(), chunk, max_batch, kv_slots).expect("engine")
+}
+
+fn serve(mode: DispatchMode, trace: &[TraceRequest]) -> FleetMetrics {
+    let opts = ServeOpts { max_batch: 4, dispatch: mode, ..Default::default() };
+    Server::new(engine_seeded(42, 16, 4, 6), opts).run(trace).expect("serve")
+}
+
+/// Property (a): for every fuzzed work item and contention state, the
+/// `auto` quote equals `min(cpu, npu)` *exactly* (it is one of the two
+/// pinned quotes, never a third price), the routed processor is the argmin
+/// (ties to the NPU), and each pinned mode quotes its own side verbatim.
+/// 6 seeds × 200 cases × (slice + batch) ≫ the shape space that matters
+/// for a 256-position tiny model; failures print the seed and case.
+#[test]
+fn prop_auto_quotes_the_cheaper_processor_exactly() {
+    let max_seq = ModelConfig::tiny().max_seq;
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(0xD15_7000 ^ seed);
+        let chunk = [4usize, 8, 16, 32][rng.below(4)];
+        let eng = engine_seeded(20 + seed, chunk, 8, 4);
+        for case in 0..200 {
+            let con = Contention { inflight: rng.below(9), queued_launches: rng.below(7) };
+
+            // A prefill slice anywhere in the sequence, up to one chunk.
+            let len = 1 + rng.below(chunk.min(max_seq - 1));
+            let start = rng.below(max_seq - len);
+            let npu = eng.quote_prefill_slice(start, len, Processor::Npu, con);
+            let cpu = eng.quote_prefill_slice(start, len, Processor::Cpu, con);
+            let auto = eng.dispatch_prefill_slice(start, len, DispatchMode::Auto, con);
+            assert_eq!(
+                auto.us,
+                npu.min(cpu),
+                "seed {seed} case {case}: auto prefill quote above min(cpu, npu)"
+            );
+            let argmin = if npu <= cpu { Processor::Npu } else { Processor::Cpu };
+            assert_eq!(auto.processor, argmin, "seed {seed} case {case}: prefill routed off-min");
+            let pin_n = eng.dispatch_prefill_slice(start, len, DispatchMode::NpuOnly, con);
+            let pin_c = eng.dispatch_prefill_slice(start, len, DispatchMode::CpuOnly, con);
+            assert_eq!((pin_n.processor, pin_n.us), (Processor::Npu, npu), "seed {seed}");
+            assert_eq!((pin_c.processor, pin_c.us), (Processor::Cpu, cpu), "seed {seed}");
+
+            // A decode batch of fuzzed width and per-lane context lengths.
+            let width = 1 + rng.below(8);
+            let ctxs: Vec<usize> = (0..width).map(|_| 1 + rng.below(max_seq - 1)).collect();
+            let npu = eng.quote_decode_batch(&ctxs, Processor::Npu, con);
+            let cpu = eng.quote_decode_batch(&ctxs, Processor::Cpu, con);
+            let auto = eng.dispatch_decode_batch(&ctxs, DispatchMode::Auto, con);
+            assert_eq!(
+                auto.us,
+                npu.min(cpu),
+                "seed {seed} case {case}: auto decode quote above min(cpu, npu)"
+            );
+            let argmin = if npu <= cpu { Processor::Npu } else { Processor::Cpu };
+            assert_eq!(auto.processor, argmin, "seed {seed} case {case}: decode routed off-min");
+            assert!(auto.energy_j > 0.0, "seed {seed} case {case}: unpriced energy");
+        }
+    }
+}
+
+/// Property (b): the whole served schedule — completions, prices, and the
+/// per-processor dispatch ledger — is reproducible bit-for-bit when the
+/// trace and seed are fixed, under every dispatch mode.
+#[test]
+fn routing_is_deterministic_for_a_fixed_seed() {
+    let trace = synthetic_trace(16, 11, &TraceProfile::tiny());
+    for mode in [DispatchMode::NpuOnly, DispatchMode::CpuOnly, DispatchMode::Auto] {
+        let a = serve(mode, &trace);
+        let b = serve(mode, &trace);
+        assert_eq!(a.completions.len(), b.completions.len(), "{}", mode.name());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(x.id, y.id, "{}", mode.name());
+            assert_eq!(x.text, y.text, "{}", mode.name());
+            assert_eq!(x.finish_us, y.finish_us, "{} req {}", mode.name(), x.id);
+            assert_eq!(x.sim_prefill_us, y.sim_prefill_us, "{} req {}", mode.name(), x.id);
+            assert_eq!(x.sim_decode_us, y.sim_decode_us, "{} req {}", mode.name(), x.id);
+        }
+        assert_eq!(a.dispatch.prefill_npu, b.dispatch.prefill_npu, "{}", mode.name());
+        assert_eq!(a.dispatch.prefill_cpu, b.dispatch.prefill_cpu, "{}", mode.name());
+        assert_eq!(a.dispatch.decode_npu, b.dispatch.decode_npu, "{}", mode.name());
+        assert_eq!(a.dispatch.decode_cpu, b.dispatch.decode_cpu, "{}", mode.name());
+        assert_eq!(a.dispatch.npu_us, b.dispatch.npu_us, "{}", mode.name());
+        assert_eq!(a.dispatch.cpu_us, b.dispatch.cpu_us, "{}", mode.name());
+        assert_eq!(a.dispatch.npu_j, b.dispatch.npu_j, "{}", mode.name());
+        assert_eq!(a.dispatch.cpu_j, b.dispatch.cpu_j, "{}", mode.name());
+        assert!(a.dispatch.total_items() > 0, "{}: nothing was dispatched", mode.name());
+    }
+}
+
+/// Property (c): dispatch changes *prices*, never logits. The same trace
+/// served under `npu-only`, `cpu-only`, and `auto` must produce
+/// byte-identical per-request outputs and token counts — only the µs/J
+/// ledgers (and therefore the clock and completion order) may differ.
+#[test]
+fn dispatch_changes_prices_never_logits() {
+    let trace = synthetic_trace(14, 9, &TraceProfile::tiny());
+    let npu = serve(DispatchMode::NpuOnly, &trace);
+    let cpu = serve(DispatchMode::CpuOnly, &trace);
+    let auto = serve(DispatchMode::Auto, &trace);
+
+    assert_eq!(npu.completions.len(), 14);
+    for reference in &npu.completions {
+        for (arm, fleet) in [("cpu-only", &cpu), ("auto", &auto)] {
+            let c = fleet.completions.iter().find(|c| c.id == reference.id).expect("same ids");
+            assert_eq!(c.text, reference.text, "{arm} req {}: output diverged", c.id);
+            assert_eq!(c.generated_tokens, reference.generated_tokens, "{arm} req {}", c.id);
+            assert_eq!(c.prefilled_tokens, reference.prefilled_tokens, "{arm} req {}", c.id);
+        }
+    }
+
+    // The pinned arms charge their own rail exclusively; auto mixes.
+    assert_eq!(npu.dispatch.cpu_items(), 0, "npu-only must never touch the CPU");
+    assert_eq!(npu.dispatch.cpu_us, 0.0);
+    assert_eq!(npu.dispatch.cpu_j, 0.0);
+    assert_eq!(cpu.dispatch.npu_items(), 0, "cpu-only must never touch the NPU");
+    assert_eq!(cpu.dispatch.npu_us, 0.0);
+    assert_eq!(cpu.dispatch.npu_j, 0.0);
+    assert!(npu.dispatch.total_items() > 0 && cpu.dispatch.total_items() > 0);
+    assert!(auto.dispatch.total_items() > 0);
+    // Whatever auto routed, its ledger is internally consistent: items on
+    // a rail carry that rail's time and energy, and only that rail's.
+    if auto.dispatch.npu_items() == 0 {
+        assert_eq!(auto.dispatch.npu_us, 0.0);
+        assert_eq!(auto.dispatch.npu_j, 0.0);
+    }
+    if auto.dispatch.cpu_items() == 0 {
+        assert_eq!(auto.dispatch.cpu_us, 0.0);
+        assert_eq!(auto.dispatch.cpu_j, 0.0);
+    }
+}
+
+/// Property (d): terminal accounting holds under auto dispatch with a
+/// bounded queue and deadline shedding — every submitted request ends in
+/// exactly one of {completed, shed, rejected}, and no KV slot leaks.
+/// Fuzzed over burst sizes, queue caps, and deadline slacks.
+#[test]
+fn prop_auto_with_queue_cap_and_shedding_balances_the_ledger() {
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(0xACC7 ^ seed);
+        let n = 8 + rng.below(12);
+        let cap = 1 + rng.below(3);
+        let slack = [50.0f64, 200.0, 1000.0][rng.below(3)];
+        let trace: Vec<TraceRequest> = (0..n)
+            .map(|i| TraceRequest {
+                id: i as u64 + 1,
+                arrival_us: i as f64 * 1e-3,
+                priority: (i % 3) as u8,
+                prompt: "an urgent interactive prompt".to_string(),
+                max_new_tokens: 4,
+                ttft_deadline_us: Some(slack),
+            })
+            .collect();
+        let opts = ServeOpts {
+            max_batch: 2,
+            dispatch: DispatchMode::Auto,
+            policy: OverloadPolicy { queue_cap: Some(cap), shed: true },
+            ..Default::default()
+        };
+        let mut server = Server::new(engine_seeded(42, 16, 2, 4), opts);
+        let fleet = server.run(&trace).expect("serve");
+        assert_eq!(fleet.submitted, n, "seed {seed}: submissions lost");
+        assert_eq!(
+            fleet.completions.len() + fleet.shed + fleet.rejected,
+            fleet.submitted,
+            "seed {seed}: the terminal ledger must balance (cap {cap}, slack {slack})"
+        );
+        assert!(
+            fleet.shed + fleet.rejected >= 1,
+            "seed {seed}: a {n}-deep burst against a {cap}-deep queue must drop work"
+        );
+        assert_eq!(fleet.deadline_misses(), 0, "seed {seed}: an admitted request missed");
+        assert_eq!(server.engine().kv_slots_in_use(), 0, "seed {seed}: KV slot leaked");
+    }
+}
