@@ -167,6 +167,80 @@ fn main() {
     t.print();
 
     banner(
+        "spill-tier sweep — equal tight hot arena (2 × max_seq tokens), shared \
+         64-byte system prompt: evict-and-drop (cold) vs 10× DDR/flash warm \
+         tier (restores priced as DMA on the memory rail)",
+    );
+    // Both arms get the SAME hot arena — the tier adds warm capacity
+    // behind it, never hot blocks — and the identical trace. The cold arm
+    // re-prefills every evicted prefix; the warm arm faults it back as a
+    // block copy, so its measured prefill time (restore DMA included) must
+    // land strictly below.
+    let tier_trace =
+        synthetic_trace(requests, 0xBEEF, &TraceProfile::tiny().with_shared_prefix(64));
+    let hot_blocks = 2 * max_seq / 16;
+    let tier_engine = |warm: bool| {
+        let model = random_transformer(&ModelConfig::tiny(), 7);
+        let mut kv = KvPoolConfig::paged(hot_blocks, 16, true);
+        if warm {
+            kv = kv.with_tier(10 * hot_blocks);
+        }
+        Engine::reference_paged(model, SocConfig::oneplus12(), 16, 4, kv).expect("engine")
+    };
+    let mut t = Table::new(&[
+        "config",
+        "tok/s",
+        "hit%",
+        "spills",
+        "restores",
+        "restore ms",
+        "GC",
+        "prefill ms",
+    ]);
+    let mut tier_prefill_ms = [0.0f64; 2];
+    let mut tier_texts: Vec<Vec<String>> = Vec::new();
+    for (i, (name, warm)) in [("cold (evict = drop)", false), ("warm (10x tier)", true)]
+        .into_iter()
+        .enumerate()
+    {
+        let opts = ServeOpts { max_batch: 4, ..Default::default() };
+        let fleet = Server::new(tier_engine(warm), opts).run(&tier_trace).expect("serve");
+        assert_eq!(fleet.completions.len(), requests, "every request must complete");
+        let total_prefill: f64 = fleet.completions.iter().map(|c| c.sim_prefill_us).sum();
+        tier_prefill_ms[i] = total_prefill / 1e3;
+        tier_texts.push(fleet.completions.iter().map(|c| c.text.clone()).collect());
+        t.row(&[
+            name.to_string(),
+            format!("{:.0}", fleet.throughput_tps()),
+            format!("{:.0}", 100.0 * fleet.prefix_hit_rate()),
+            format!("{}", fleet.tier_spills),
+            format!("{}", fleet.tier_restores),
+            format!("{:.3}", fleet.tier_restore_us / 1e3),
+            format!("{}", fleet.tier_gc_reclaimed),
+            format!("{:.3}", total_prefill / 1e3),
+        ]);
+        if warm {
+            assert!(fleet.tier_spills > 0, "the tight arena must spill under this trace");
+            assert!(fleet.tier_restores > 0, "spilled prefixes must fault back on reuse");
+        } else {
+            assert_eq!(fleet.tier_spills, 0, "the cold arm has no tier to spill into");
+        }
+    }
+    t.print();
+    assert_eq!(
+        tier_texts[0], tier_texts[1],
+        "the tier moves blocks, never logits: cold and warm outputs must be \
+         byte-identical"
+    );
+    assert!(
+        tier_prefill_ms[1] < tier_prefill_ms[0],
+        "at equal hot memory the warm tier must reduce measured prefill time: \
+         {} !< {}",
+        tier_prefill_ms[1],
+        tier_prefill_ms[0]
+    );
+
+    banner(
         "overload sweep — flash crowd of interactive requests, TTFT SLO = \
          no-control p99 / 4: deadline shedding vs no admission control",
     );
@@ -200,7 +274,7 @@ fn main() {
     ]);
     let arms: [(&str, OverloadPolicy); 2] = [
         ("no control", OverloadPolicy::default()),
-        ("shed", OverloadPolicy { queue_cap: None, shed: true }),
+        ("shed", OverloadPolicy { queue_cap: None, class_caps: vec![], shed: true }),
     ];
     for (name, policy) in arms {
         let opts = ServeOpts { max_batch: 4, policy: policy.clone(), ..Default::default() };

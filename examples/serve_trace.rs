@@ -39,7 +39,13 @@ fn main() -> anyhow::Result<()> {
     let opts = ServeOpts { verbose: true, max_batch, ..Default::default() };
     let mut server = Server::new(engine, opts);
     let fleet = if clients > 0 {
-        let cl = ClosedLoopOpts { total: n, concurrency: clients, think_us: 2_000.0, seed: 1 };
+        let cl = ClosedLoopOpts {
+            total: n,
+            concurrency: clients,
+            think_us: 2_000.0,
+            seed: 1,
+            think_process: None,
+        };
         server.run_closed_loop(&cl, &TraceProfile::tiny())?
     } else {
         server.run(&synthetic_trace(n, 1, &TraceProfile::tiny()))?

@@ -346,6 +346,11 @@ impl Engine {
              and degrades the remainder to the decode tail",
             shape.chunk
         );
+        anyhow::ensure!(
+            kv.tier_blocks.is_none() || kv.prefix_cache,
+            "the KV spill tier rides radix eviction and prefix fault-back: \
+             --kv-tier requires the prefix cache"
+        );
         Ok(())
     }
 
@@ -623,6 +628,41 @@ impl Engine {
         reserve_tokens: usize,
     ) -> Result<usize> {
         self.backend.begin_request_for(id, prompt, reserve_tokens)
+    }
+
+    /// [`Engine::begin_request_for`] plus spill-tier restore pricing:
+    /// blocks the prefix lookup faulted back from the DDR/flash tier are
+    /// charged as DMA transfers on the memory power rail. Returns
+    /// `(prefix_hit_tokens, restore_us, restore_j)` — the restore price is
+    /// zero whenever no tier is configured or the lookup stayed hot.
+    pub fn begin_request_priced(
+        &mut self,
+        id: u64,
+        prompt: &[usize],
+        reserve_tokens: usize,
+    ) -> Result<(usize, f64, f64)> {
+        let before = self.kv_stats().tier;
+        let hit = self.backend.begin_request_for(id, prompt, reserve_tokens)?;
+        let after = self.kv_stats().tier;
+        let restored = after.restores - before.restores;
+        if restored == 0 {
+            return Ok((hit, 0.0, 0.0));
+        }
+        let bytes = after.restored_bytes - before.restored_bytes;
+        // Each faulted block is one DMA descriptor: per-block setup plus
+        // the streaming time for its K+V payload.
+        let us = restored as f64
+            * LoadMethod::Dma.transfer_us(&self.soc.npu, bytes / restored, 1);
+        let j = crate::npu::energy::dma_restore_energy_j(&self.soc.power, us);
+        Ok((hit, us, j))
+    }
+
+    /// Publish `id`'s prompt blocks into the prefix cache *now* (at
+    /// prefill-complete), so concurrent forks of the same prompt hit them
+    /// without waiting for this request to finish. No-op without the
+    /// prefix cache (and on backends without a pool).
+    pub fn publish_request_prefix(&mut self, id: u64) -> Result<usize> {
+        self.backend.publish_request_prefix(id)
     }
 
     /// Re-attach a preempted request's KV, contents intact, so its

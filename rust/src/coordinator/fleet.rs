@@ -51,7 +51,7 @@
 
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::FleetMetrics;
-use crate::coordinator::server::{ServeOpts, Server, TraceRequest};
+use crate::coordinator::server::{ClosedLoopOpts, ServeOpts, Server, TraceProfile, TraceRequest};
 use crate::kvpool::prefix_block_keys;
 use crate::model::tokenizer;
 use anyhow::{ensure, Result};
@@ -494,6 +494,55 @@ impl Fleet {
             replicas,
             steals,
             router_rejected,
+        })
+    }
+
+    /// Serve a *closed-loop* client population across the fleet. Closed-loop
+    /// clients are sticky: each next request depends on the client's
+    /// previous completion, which lives on one replica — so instead of
+    /// routing per arrival, the router partitions the client population
+    /// (and the request budget) statically across replicas, runs each
+    /// replica's own closed loop on its share (think-time shaping and all),
+    /// and merges the per-replica metrics exactly like the open-loop path.
+    /// Replicas beyond the client count serve an empty trace.
+    pub fn run_closed_loop(
+        &mut self,
+        opts: &ClosedLoopOpts,
+        profile: &TraceProfile,
+    ) -> Result<FleetRun> {
+        ensure!(opts.total > 0, "closed loop needs at least one request");
+        ensure!(opts.concurrency > 0, "closed loop needs at least one client");
+        let n = self.replicas.len();
+        // Every active replica must get at least one client and one request.
+        let active = n.min(opts.concurrency).min(opts.total);
+        let mut replicas = Vec::with_capacity(n);
+        for (k, server) in self.replicas.iter_mut().enumerate() {
+            let metrics = if k < active {
+                let share = |x: usize| x / active + usize::from(k < x % active);
+                let sub = ClosedLoopOpts {
+                    total: share(opts.total),
+                    concurrency: share(opts.concurrency),
+                    think_us: opts.think_us,
+                    // Distinct workload stream per replica, deterministic
+                    // in (seed, k) — mix64 decorrelates the streams even
+                    // for adjacent base seeds.
+                    seed: opts.seed ^ mix64(k as u64 + 1),
+                    think_process: opts.think_process.clone(),
+                };
+                server.run_closed_loop(&sub, profile)?
+            } else {
+                server.run(&[])?
+            };
+            let routed = metrics.submitted;
+            replicas.push(ReplicaStats { routed, stolen_in: 0, stolen_out: 0, metrics });
+        }
+        let merged = FleetMetrics::merged(replicas.iter().map(|r| &r.metrics));
+        Ok(FleetRun {
+            routing: self.routing,
+            merged,
+            replicas,
+            steals: 0,
+            router_rejected: 0,
         })
     }
 }

@@ -333,6 +333,24 @@ pub struct FleetMetrics {
     pub shed: usize,
     /// Shed counts broken down by priority class, ascending priority value.
     pub shed_by_priority: Vec<(u8, usize)>,
+    /// Rejection counts broken down by priority class, ascending priority
+    /// value — covers deadline-on-arrival, per-class queue caps, and the
+    /// global queue cap.
+    pub rejected_by_priority: Vec<(u8, usize)>,
+    /// KV spill-tier geometry: warm-tier capacity in blocks (0 = no tier).
+    pub tier_capacity_blocks: usize,
+    /// Cold blocks evicted from the hot arena into the warm tier.
+    pub tier_spills: usize,
+    /// Tier blocks faulted back into the hot arena on a prefix-cache hit.
+    pub tier_restores: usize,
+    /// KV bytes moved hot-ward by those restores.
+    pub tier_restored_bytes: usize,
+    /// Simulated DMA µs the run spent restoring tier blocks (already
+    /// folded into the affected requests' prefill time and the makespan).
+    pub tier_restore_us: f64,
+    /// Tier entries reclaimed by GC because their content re-entered the
+    /// hot radix index.
+    pub tier_gc_reclaimed: usize,
     /// Per-processor work-item routing from the heterogeneous dispatcher
     /// (all-NPU under the default `npu-only` mode).
     pub dispatch: DispatchStats,
@@ -544,9 +562,18 @@ impl FleetMetrics {
             rejected: 0,
             shed: 0,
             shed_by_priority: Vec::new(),
+            rejected_by_priority: Vec::new(),
+            tier_capacity_blocks: 0,
+            tier_spills: 0,
+            tier_restores: 0,
+            tier_restored_bytes: 0,
+            tier_restore_us: 0.0,
+            tier_gc_reclaimed: 0,
             dispatch: DispatchStats::default(),
         };
         let mut shed_by: std::collections::BTreeMap<u8, usize> = std::collections::BTreeMap::new();
+        let mut rejected_by: std::collections::BTreeMap<u8, usize> =
+            std::collections::BTreeMap::new();
         for m in parts {
             out.completions.extend(m.completions.iter().cloned());
             out.makespan_us = out.makespan_us.max(m.makespan_us);
@@ -574,9 +601,18 @@ impl FleetMetrics {
             out.submitted += m.submitted;
             out.rejected += m.rejected;
             out.shed += m.shed;
+            out.tier_capacity_blocks += m.tier_capacity_blocks;
+            out.tier_spills += m.tier_spills;
+            out.tier_restores += m.tier_restores;
+            out.tier_restored_bytes += m.tier_restored_bytes;
+            out.tier_restore_us += m.tier_restore_us;
+            out.tier_gc_reclaimed += m.tier_gc_reclaimed;
             out.dispatch.merge(&m.dispatch);
             for &(p, n) in &m.shed_by_priority {
                 *shed_by.entry(p).or_insert(0) += n;
+            }
+            for &(p, n) in &m.rejected_by_priority {
+                *rejected_by.entry(p).or_insert(0) += n;
             }
         }
         out.completions.sort_by(|a, b| {
@@ -586,6 +622,7 @@ impl FleetMetrics {
                 .then(a.id.cmp(&b.id))
         });
         out.shed_by_priority = shed_by.into_iter().collect();
+        out.rejected_by_priority = rejected_by.into_iter().collect();
         out
     }
 
@@ -647,6 +684,21 @@ impl FleetMetrics {
             for (p, n) in &self.shed_by_priority {
                 out.push_str(&format!("\n  shed class p{p}  : {n} request(s)"));
             }
+            for (p, n) in &self.rejected_by_priority {
+                out.push_str(&format!("\n  rejected p{p}    : {n} request(s)"));
+            }
+        }
+        if self.tier_capacity_blocks > 0 {
+            out.push_str(&format!(
+                "\nKV spill tier   : {} blocks warm capacity, {} spill(s), \
+                 {} restore(s) ({} B, {:.3} ms DMA), {} GC-reclaimed",
+                self.tier_capacity_blocks,
+                self.tier_spills,
+                self.tier_restores,
+                self.tier_restored_bytes,
+                self.tier_restore_us / 1e3,
+                self.tier_gc_reclaimed,
+            ));
         }
         if self.dispatch.total_items() > 0 {
             let d = &self.dispatch;
@@ -778,6 +830,13 @@ mod tests {
             rejected: 0,
             shed: 0,
             shed_by_priority: vec![],
+            rejected_by_priority: vec![],
+            tier_capacity_blocks: 0,
+            tier_spills: 0,
+            tier_restores: 0,
+            tier_restored_bytes: 0,
+            tier_restore_us: 0.0,
+            tier_gc_reclaimed: 0,
             dispatch: DispatchStats::default(),
         };
         assert_eq!(fleet.prompt_tokens(), 20);
@@ -831,6 +890,13 @@ mod tests {
             rejected: 0,
             shed: 0,
             shed_by_priority: vec![],
+            rejected_by_priority: vec![],
+            tier_capacity_blocks: 0,
+            tier_spills: 0,
+            tier_restores: 0,
+            tier_restored_bytes: 0,
+            tier_restore_us: 0.0,
+            tier_gc_reclaimed: 0,
             dispatch: DispatchStats::default(),
         };
         assert_eq!(fleet.decode_batch_occupancy(), 0.0);
@@ -867,6 +933,13 @@ mod tests {
             rejected: 1,
             shed: 1,
             shed_by_priority: vec![(4, 1)],
+            rejected_by_priority: vec![(0, 1)],
+            tier_capacity_blocks: 0,
+            tier_spills: 0,
+            tier_restores: 0,
+            tier_restored_bytes: 0,
+            tier_restore_us: 0.0,
+            tier_gc_reclaimed: 0,
             dispatch: DispatchStats::default(),
         };
         fleet.completions[1].ttft_slo_us = Some(2_000.0); // met (1000 ≤ 2000)
@@ -885,6 +958,8 @@ mod tests {
         assert!(r.contains("5 submitted = 3 served + 1 shed + 1 rejected (20% shed)"));
         assert!(r.contains("1 deadline miss(es), goodput 10.0 tok/s"));
         assert!(r.contains("shed class p4  : 1 request(s)"));
+        assert!(r.contains("rejected p0    : 1 request(s)"));
+        assert!(!r.contains("KV spill tier"), "tierless run omits the tier line");
     }
 
     #[test]
@@ -922,6 +997,13 @@ mod tests {
             rejected: 0,
             shed: 0,
             shed_by_priority: vec![],
+            rejected_by_priority: vec![],
+            tier_capacity_blocks: 0,
+            tier_spills: 0,
+            tier_restores: 0,
+            tier_restored_bytes: 0,
+            tier_restore_us: 0.0,
+            tier_gc_reclaimed: 0,
             dispatch: DispatchStats::default(),
         };
         assert_eq!(
@@ -958,6 +1040,13 @@ mod tests {
             rejected: 1,
             shed: 1,
             shed_by_priority: vec![(0, 1)],
+            rejected_by_priority: vec![(2, 1)],
+            tier_capacity_blocks: 6,
+            tier_spills: 3,
+            tier_restores: 2,
+            tier_restored_bytes: 4_096,
+            tier_restore_us: 120.0,
+            tier_gc_reclaimed: 1,
             dispatch: DispatchStats::default(),
         };
         a.completions[0].finish_us = 9_000.0;
@@ -970,6 +1059,7 @@ mod tests {
         b.rejected = 0;
         b.shed = 0;
         b.shed_by_priority = vec![];
+        b.rejected_by_priority = vec![];
         let npu_item = Dispatch { processor: Processor::Npu, us: 10.0, energy_j: 0.1 };
         let cpu_item = Dispatch { processor: Processor::Cpu, us: 5.0, energy_j: 0.2 };
         a.dispatch.record_decode(&npu_item);
@@ -990,6 +1080,16 @@ mod tests {
         assert_eq!(m.prefix_lookups, 4);
         assert_eq!(m.prefix_hits, 2);
         assert_eq!(m.shed_by_priority, vec![(0, 1)]);
+        // Per-class rejections merge like shed: summed per priority value.
+        assert_eq!(m.rejected_by_priority, vec![(2, 1)]);
+        // Tier counters sum — aggregate warm-tier capacity and traffic.
+        assert_eq!(m.tier_capacity_blocks, 12);
+        assert_eq!(m.tier_spills, 6);
+        assert_eq!(m.tier_restores, 4);
+        assert_eq!(m.tier_restored_bytes, 8_192);
+        assert!((m.tier_restore_us - 240.0).abs() < 1e-12);
+        assert_eq!(m.tier_gc_reclaimed, 2);
+        assert!(m.report().contains("KV spill tier   : 12 blocks warm capacity"));
         // Dispatch counters sum across replicas: one NPU decode batch from
         // `a`, one CPU prefill slice from `b` — the merged view is mixed.
         assert!(m.dispatch.mixed());
@@ -1060,6 +1160,13 @@ mod tests {
             rejected: 0,
             shed: 0,
             shed_by_priority: vec![],
+            rejected_by_priority: vec![],
+            tier_capacity_blocks: 0,
+            tier_spills: 0,
+            tier_restores: 0,
+            tier_restored_bytes: 0,
+            tier_restore_us: 0.0,
+            tier_gc_reclaimed: 0,
             dispatch: DispatchStats::default(),
         };
         let stats = fleet.class_stats();

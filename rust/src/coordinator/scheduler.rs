@@ -336,6 +336,12 @@ impl Scheduler {
         self.queue.iter().filter(|q| q.done == 0).count()
     }
 
+    /// [`Scheduler::queued_unstarted`] restricted to one priority class —
+    /// the population a per-class queue cap counts against.
+    pub fn queued_unstarted_of(&self, priority: u8) -> usize {
+        self.queue.iter().filter(|q| q.done == 0 && q.req.priority == priority).count()
+    }
+
     /// Remove a queued request that never started a prefill slice
     /// (`done == 0`, so it holds no KV). Returns false when `id` is not an
     /// unstarted queued request — started requests must drain through
@@ -883,6 +889,23 @@ mod tests {
             assert_eq!(s.blocks_reserved(), s.slots_held());
         }
         assert_eq!(s.finished.len(), 2);
+    }
+
+    #[test]
+    fn queued_unstarted_of_filters_by_priority_class() {
+        let mut s = Scheduler::new(64, 1, 4);
+        s.submit(req(1, 640, 1, 0));
+        s.submit(req(2, 64, 1, 3));
+        s.submit(req(3, 64, 1, 3));
+        assert_eq!(s.queued_unstarted(), 3);
+        assert_eq!(s.queued_unstarted_of(0), 1);
+        assert_eq!(s.queued_unstarted_of(3), 2);
+        assert_eq!(s.queued_unstarted_of(7), 0, "absent class counts zero");
+        // Once a request starts its prefill it leaves the unstarted
+        // population for its class too.
+        assert!(matches!(s.next(), Some(WorkItem::PrefillChunk { id: 1, .. })));
+        assert_eq!(s.queued_unstarted_of(0), 0);
+        assert_eq!(s.queued_unstarted_of(3), 2);
     }
 
     #[test]

@@ -240,11 +240,16 @@ pub struct ClosedLoopOpts {
     pub total: usize,
     /// Bound on simultaneously in-flight requests (number of clients).
     pub concurrency: usize,
-    /// Deterministic think time between a client's completion and its next
-    /// submission, µs.
+    /// Think time between a client's completion and its next submission,
+    /// µs — exact when `think_process` is `None`, otherwise the mean of
+    /// the shaped draw.
     pub think_us: f64,
     /// Workload-mix RNG seed.
     pub seed: u64,
+    /// Optional think-time shaping: draw each client's think gap from this
+    /// arrival process (mean `think_us`) instead of the deterministic
+    /// constant. `None` keeps runs byte-identical to the unshaped loop.
+    pub think_process: Option<crate::load::ArrivalProcess>,
 }
 
 /// Where the serving loop's arrivals come from: a pre-computed open-loop
@@ -259,6 +264,10 @@ enum Arrivals {
         profile: TraceProfile,
         rng: Rng,
         think_us: f64,
+        /// Think-time shaping (`None` = the deterministic constant), with
+        /// its own RNG so enabling it never perturbs the workload mix.
+        think_process: Option<crate::load::ArrivalProcess>,
+        think_rng: Rng,
         /// One `(ready_at_us, client)` entry per idle client.
         idle: Vec<(f64, usize)>,
         /// Client serving each in-flight request id.
@@ -283,6 +292,8 @@ impl Arrivals {
             profile: profile.clone(),
             rng: Rng::new(opts.seed),
             think_us: opts.think_us,
+            think_process: opts.think_process.clone(),
+            think_rng: Rng::new(opts.seed ^ 0x7448_494E_4B54_494D), // salt: think-time stream
             idle: (0..opts.concurrency).map(|c| (0.0, c)).collect(),
             owner: HashMap::new(),
             issued: 0,
@@ -343,11 +354,16 @@ impl Arrivals {
         }
     }
 
-    /// A request finished: a closed-loop client starts thinking.
+    /// A request finished: a closed-loop client starts thinking — for a
+    /// deterministic `think_us`, or a shaped draw around that mean.
     fn on_finish(&mut self, id: u64, clock_us: f64) {
-        if let Arrivals::Closed { idle, owner, think_us, .. } = self {
+        if let Arrivals::Closed { idle, owner, think_us, think_process, think_rng, .. } = self {
             if let Some(client) = owner.remove(&id) {
-                idle.push((clock_us + *think_us, client));
+                let think = match think_process {
+                    Some(p) => p.gap_us(*think_us, think_rng),
+                    None => *think_us,
+                };
+                idle.push((clock_us + think, client));
             }
         }
     }
@@ -362,6 +378,13 @@ pub struct OverloadPolicy {
     /// request displaces the youngest strictly-lower-priority unstarted
     /// entry (which is shed), or is itself rejected. None = unbounded.
     pub queue_cap: Option<usize>,
+    /// Per-priority-class bounds on unstarted queued requests,
+    /// `(priority, cap)` pairs. A class at its cap rejects further
+    /// arrivals of that class outright (no cross-class displacement —
+    /// the caps exist so background fan-out cannot displace interactive
+    /// admission). Classes without an entry are only bound by
+    /// `queue_cap`. Empty = no per-class bounds.
+    pub class_caps: Vec<(u8, usize)>,
     /// Enforce TTFT deadlines: reject a request whose deadline is already
     /// blown when it arrives, and shed any admitted request whose deadline
     /// expires before its first token is sampled. With this on, an
@@ -374,7 +397,12 @@ pub struct OverloadPolicy {
 
 impl OverloadPolicy {
     fn active(&self) -> bool {
-        self.shed || self.queue_cap.is_some()
+        self.shed || self.queue_cap.is_some() || !self.class_caps.is_empty()
+    }
+
+    /// The unstarted-queue cap for `priority`, if one was configured.
+    fn class_cap(&self, priority: u8) -> Option<usize> {
+        self.class_caps.iter().find(|&&(p, _)| p == priority).map(|&(_, cap)| cap)
     }
 }
 
@@ -534,6 +562,12 @@ impl Server {
         let mut shed = 0usize;
         let mut shed_by_priority: std::collections::BTreeMap<u8, usize> =
             std::collections::BTreeMap::new();
+        let mut rejected_by_priority: std::collections::BTreeMap<u8, usize> =
+            std::collections::BTreeMap::new();
+        // Simulated µs spent faulting KV blocks back from the spill tier
+        // (already folded into each request's prefill time; surfaced
+        // separately so tier traffic is visible in the metrics).
+        let mut tier_restore_us = 0.0f64;
 
         loop {
             // Admit every request that has arrived by now.
@@ -554,8 +588,20 @@ impl Server {
                 // would only burn prefill to produce a guaranteed miss.
                 if policy.shed && deadline_at.is_some_and(|at| clock_us > at) {
                     rejected += 1;
+                    *rejected_by_priority.entry(t.priority).or_insert(0) += 1;
                     source.on_finish(t.id, clock_us);
                     continue;
+                }
+                // Per-class cap first: a class at its bound rejects its own
+                // arrivals outright — background fan-out cannot displace
+                // (or be displaced into) another class's budget.
+                if let Some(cap) = policy.class_cap(t.priority) {
+                    if sched.queued_unstarted_of(t.priority) >= cap.max(1) {
+                        rejected += 1;
+                        *rejected_by_priority.entry(t.priority).or_insert(0) += 1;
+                        source.on_finish(t.id, clock_us);
+                        continue;
+                    }
                 }
                 // Bounded admission queue over *unstarted* requests: when
                 // full, displace the youngest strictly-lower-priority
@@ -572,6 +618,7 @@ impl Server {
                             }
                             None => {
                                 rejected += 1;
+                                *rejected_by_priority.entry(t.priority).or_insert(0) += 1;
                                 source.on_finish(t.id, clock_us);
                                 continue;
                             }
@@ -704,7 +751,20 @@ impl Server {
                         // shared blocks and are never computed.
                         anyhow::ensure!(start == 0, "first slice of {id} must start at 0");
                         let reserve = kv_reserve_tokens(st.prompt.len(), st.max_new);
-                        st.cached = self.engine.begin_request_for(id, &st.prompt, reserve)?;
+                        // Tier-priced admission: blocks the prefix lookup
+                        // faulted back from the spill tier charge DMA time
+                        // and memory-rail energy against this request's
+                        // prefill — a warm-tier hit costs a block copy,
+                        // not a re-prefill.
+                        let (cached, restore_us, restore_j) =
+                            self.engine.begin_request_priced(id, &st.prompt, reserve)?;
+                        st.cached = cached;
+                        if restore_us > 0.0 {
+                            st.sim_prefill_us += restore_us;
+                            st.sim_prefill_j += restore_j;
+                            tier_restore_us += restore_us;
+                            clock_us += restore_us;
+                        }
                         st.begun = true;
                     } else if st.suspended {
                         // Resuming after preemption: re-attach the
@@ -744,6 +804,14 @@ impl Server {
                     }
                     st.saved_us += full_price - paid;
                     st.covered += len;
+                    if st.covered == st.prompt.len() {
+                        // Mid-flight publish: the prompt's whole blocks
+                        // enter the prefix cache at prefill-complete, so
+                        // forks of this prompt (the TTC fan-out pattern)
+                        // hit them while this request is still decoding —
+                        // not only after its Finish.
+                        self.engine.publish_request_prefix(id)?;
+                    }
                 }
                 WorkItem::Preempt { id } => {
                     // Explicit preemption event: the request keeps its KV
@@ -949,10 +1017,17 @@ impl Server {
             kv_capacity_blocks: kv.capacity_blocks,
             kv_block_tokens: kv.block_tokens,
             kv_blocks_high_water: kv.blocks_high_water,
+            tier_capacity_blocks: kv.tier.capacity_blocks,
+            tier_spills: kv.tier.spills,
+            tier_restores: kv.tier.restores,
+            tier_restored_bytes: kv.tier.restored_bytes,
+            tier_restore_us,
+            tier_gc_reclaimed: kv.tier.gc_reclaimed,
             submitted,
             rejected,
             shed,
             shed_by_priority: shed_by_priority.into_iter().collect(),
+            rejected_by_priority: rejected_by_priority.into_iter().collect(),
             dispatch,
         })
     }

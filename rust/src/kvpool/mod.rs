@@ -29,6 +29,15 @@
 //! validates `block_tokens % chunk == 0` or vice versa, next to the HMX
 //! tile check), so planned chunks never straddle a block boundary and a
 //! prefix hit always skips whole chunks.
+//!
+//! With a spill tier configured ([`KvPoolConfig::with_tier`]), radix
+//! eviction *spills* cold blocks into a simulated DDR/flash tier
+//! ([`crate::kvtier`]) instead of dropping them, and prefix lookups
+//! transparently fault spilled blocks back (bit-identical, priced as DMA
+//! by the engine) before binding. [`PagedKvPool::publish_prefix`] also
+//! lets the serving loop publish a request's prompt blocks at
+//! prefill-complete — mid-flight — so test-time-compute forks of one
+//! prompt share blocks instead of re-prefilling.
 
 mod pool;
 mod radix;

@@ -24,11 +24,12 @@
 //! `block_tokens = max_seq`, one block per request — so slot semantics are
 //! the degenerate case of this pool, not a second code path.
 
-use crate::kvpool::radix::RadixIndex;
+use crate::kvpool::radix::{prefix_block_keys, RadixIndex};
+use crate::kvtier::{SpillTier, TierStats};
 use crate::model::config::ModelConfig;
 use crate::model::kv_cache::KvLanes;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Pool geometry + prefix-cache switch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,6 +41,10 @@ pub struct KvPoolConfig {
     pub block_tokens: usize,
     /// Enable the radix prefix index (prompt reuse across requests).
     pub prefix_cache: bool,
+    /// Capacity of the DDR/flash spill tier in blocks (`None` = evictions
+    /// drop block contents, the pre-tier behaviour). Requires
+    /// `prefix_cache`: the tier rides radix eviction and fault-back.
+    pub tier_blocks: Option<usize>,
 }
 
 impl KvPoolConfig {
@@ -47,12 +52,19 @@ impl KvPoolConfig {
     /// request, no prefix reuse — byte-identical admission and numerics to
     /// the old `KvSlotPool`.
     pub fn slots(n_slots: usize, max_seq: usize) -> Self {
-        Self { blocks: n_slots, block_tokens: max_seq, prefix_cache: false }
+        Self { blocks: n_slots, block_tokens: max_seq, prefix_cache: false, tier_blocks: None }
     }
 
     /// Paged geometry.
     pub fn paged(blocks: usize, block_tokens: usize, prefix_cache: bool) -> Self {
-        Self { blocks, block_tokens, prefix_cache }
+        Self { blocks, block_tokens, prefix_cache, tier_blocks: None }
+    }
+
+    /// Attach a spill tier of `blocks` capacity (builder form).
+    #[must_use]
+    pub fn with_tier(mut self, blocks: usize) -> Self {
+        self.tier_blocks = Some(blocks);
+        self
     }
 
     /// Blocks needed to hold `tokens` positions (min 1 — every admitted
@@ -75,6 +87,8 @@ pub struct KvPoolStats {
     pub prefix_lookups: usize,
     pub prefix_hits: usize,
     pub prefix_hit_tokens: usize,
+    /// Spill-tier counters (all zero when no tier is configured).
+    pub tier: TierStats,
 }
 
 /// One request's view of the pool.
@@ -112,6 +126,9 @@ pub struct PagedKvPool {
     /// Sum of live tables' worst-case reservations, in blocks.
     reserved_blocks: usize,
     prefix: Option<RadixIndex>,
+    /// DDR/flash spill tier: evicted index blocks move here instead of
+    /// being dropped, keyed by cumulative token-prefix hash.
+    tier: Option<SpillTier>,
     blocks_high_water: usize,
     prefix_lookups: usize,
     prefix_hits: usize,
@@ -122,6 +139,10 @@ impl PagedKvPool {
     pub fn new(model: &ModelConfig, max_seq: usize, cfg: KvPoolConfig) -> Self {
         assert!(cfg.blocks > 0, "pool needs at least one block");
         assert!(cfg.block_tokens > 0, "block must hold at least one token");
+        assert!(
+            cfg.tier_blocks.is_none() || cfg.prefix_cache,
+            "the spill tier rides radix eviction: tier_blocks requires prefix_cache"
+        );
         let cfg = KvPoolConfig { block_tokens: cfg.block_tokens.min(max_seq), ..cfg };
         let dkv = model.d_kv();
         let floats = cfg.blocks * model.n_layers * cfg.block_tokens * dkv;
@@ -138,6 +159,7 @@ impl PagedKvPool {
             index: HashMap::new(),
             reserved_blocks: 0,
             prefix: cfg.prefix_cache.then(|| RadixIndex::new(cfg.block_tokens)),
+            tier: cfg.tier_blocks.map(SpillTier::new),
             blocks_high_water: 0,
             prefix_lookups: 0,
             prefix_hits: 0,
@@ -201,6 +223,7 @@ impl PagedKvPool {
             prefix_lookups: self.prefix_lookups,
             prefix_hits: self.prefix_hits,
             prefix_hit_tokens: self.prefix_hit_tokens,
+            tier: self.tier.as_ref().map(SpillTier::stats).unwrap_or_default(),
         }
     }
 
@@ -270,19 +293,25 @@ impl PagedKvPool {
         let mut hit_blocks: Vec<usize> = Vec::new();
         if let Some(radix) = &mut self.prefix {
             self.prefix_lookups += 1;
-            let blocks = radix.lookup(prompt_tokens);
-            hit = (blocks.len() * bt).min(prompt_tokens.len().saturating_sub(1));
+            hit_blocks = radix.lookup(prompt_tokens);
+            // Pin the resident hit path *before* any tier fault-back: the
+            // restore loop allocates hot blocks, and allocation may evict —
+            // pinned blocks (refcount ≥ 2) are never eviction candidates.
+            for &b in &hit_blocks {
+                self.refcount[b] += 1;
+            }
+            self.fault_from_tier(prompt_tokens, &mut hit_blocks);
+            hit = (hit_blocks.len() * bt).min(prompt_tokens.len().saturating_sub(1));
             // Keep exactly the blocks covering [0, hit) — when the cap
             // lands mid-block, the last kept block stays shared until the
-            // first write COWs it.
-            hit_blocks = blocks[..hit.div_ceil(bt)].to_vec();
+            // first write COWs it. The lookup returns whole blocks strictly
+            // inside the prompt, so the cap can only trim within the last
+            // block, never drop one.
+            debug_assert_eq!(hit_blocks.len(), hit.div_ceil(bt));
             if hit > 0 {
                 self.prefix_hits += 1;
                 self.prefix_hit_tokens += hit;
             }
-        }
-        for &b in &hit_blocks {
-            self.refcount[b] += 1;
         }
         let table = Table {
             blocks: hit_blocks,
@@ -337,7 +366,53 @@ impl PagedKvPool {
         for &b in &table.blocks {
             self.decref(b);
         }
+        self.tier_gc();
         true
+    }
+
+    /// Publish `id`'s whole-block token history into the prefix index *now*
+    /// — mid-flight, without releasing the table. Called at
+    /// prefill-complete so sibling requests (the test-time-compute fork
+    /// pattern) can hit the shared prompt while this request is still
+    /// decoding. Idempotent: re-inserting already-published blocks
+    /// references nothing new. Returns the number of blocks newly adopted
+    /// by the index.
+    pub fn publish_prefix(&mut self, id: u64) -> Result<usize> {
+        let ti = self
+            .table_of(id)
+            .ok_or_else(|| anyhow::anyhow!("request {id} holds no KV table to publish"))?;
+        let bt = self.cfg.block_tokens;
+        let mut adopted = 0usize;
+        if let Some(radix) = &mut self.prefix {
+            let table = self.tables[ti].as_ref().expect("indexed table present");
+            let full = table.tokens.len().min(table.len) / bt;
+            if full > 0 {
+                let newly = radix.insert(&table.tokens[..full * bt], &table.blocks[..full]);
+                adopted = newly.len();
+                for b in newly {
+                    self.refcount[b] += 1;
+                }
+            }
+        }
+        self.tier_gc();
+        Ok(adopted)
+    }
+
+    /// Reclaim tier entries whose prefix went hot again (publish or
+    /// recompute made the tier copy dead) — keeps the tier and the radix
+    /// index disjoint at every publish point.
+    fn tier_gc(&mut self) {
+        let Some(tier) = &mut self.tier else { return };
+        if tier.resident_blocks() == 0 {
+            return;
+        }
+        let mut hot: HashSet<u64> = HashSet::new();
+        if let Some(radix) = &self.prefix {
+            radix.for_each_key_block(&mut |key, _| {
+                hot.insert(key);
+            });
+        }
+        tier.gc(&hot);
     }
 
     fn decref(&mut self, block: usize) {
@@ -349,13 +424,23 @@ impl PagedKvPool {
     }
 
     /// Pop a free block, reclaiming LRU prefix-cache blocks if the free
-    /// list ran dry. The reservation discipline guarantees success.
+    /// list ran dry — spilling their contents into the tier (when
+    /// configured) before the arena slot is reused. The reservation
+    /// discipline guarantees success.
     fn alloc_block(&mut self) -> usize {
         if self.free.is_empty() {
-            if let Some(radix) = &mut self.prefix {
-                for b in radix.evict(1, &self.refcount) {
-                    self.decref(b);
-                }
+            // Collect the eviction set first: `evict_runs` borrows the
+            // radix mutably, while spilling needs the whole pool.
+            let evicted = match &mut self.prefix {
+                Some(radix) => radix.evict_runs(1, &self.refcount),
+                None => Vec::new(),
+            };
+            for (b, run) in evicted {
+                // Snapshot contents *now*: under full pressure the freed
+                // block may be reused (even as a COW copy target)
+                // immediately after this decref.
+                self.spill_block(b, &run);
+                self.decref(b);
             }
         }
         let b = self
@@ -365,6 +450,73 @@ impl PagedKvPool {
         self.refcount[b] = 1;
         self.blocks_high_water = self.blocks_high_water.max(self.blocks_in_use());
         b
+    }
+
+    /// Copy the evicted block `phys` (whose cumulative token run is `run`,
+    /// whole blocks ending in `phys`'s own) into the spill tier.
+    fn spill_block(&mut self, phys: usize, run: &[usize]) {
+        if self.tier.is_none() {
+            return;
+        }
+        let bt = self.cfg.block_tokens;
+        debug_assert!(!run.is_empty() && run.len() % bt == 0, "eviction run must be whole blocks");
+        let floats = self.n_layers * bt * self.dkv;
+        let base = phys * floats;
+        let k = self.k[base..base + floats].to_vec();
+        let v = self.v[base..base + floats].to_vec();
+        let fingerprint = self.block_fingerprint(phys);
+        let bytes = self.block_bytes();
+        let keys = prefix_block_keys(run, bt);
+        let key = *keys.last().expect("non-empty run has a key");
+        let parent = keys.len().checked_sub(2).map(|i| keys[i]);
+        let tokens = run[run.len() - bt..].to_vec();
+        let tier = self.tier.as_mut().expect("checked above");
+        tier.spill(key, parent, tokens, k, v, fingerprint, bytes);
+    }
+
+    /// Extend a prefix lookup's resident hit path with blocks faulted back
+    /// from the spill tier: for each missing whole block of the prompt (in
+    /// order — a restore chain must be gapless), move the entry out of the
+    /// tier into a freshly allocated hot block, re-publish it into the
+    /// radix index, and pin it for the caller like any other hit block.
+    fn fault_from_tier(&mut self, prompt_tokens: &[usize], blocks: &mut Vec<usize>) {
+        if self.tier.is_none() {
+            return;
+        }
+        let bt = self.cfg.block_tokens;
+        // Whole blocks strictly inside the prompt: the last prompt position
+        // is always recomputed, so a block covering it is useless here.
+        let usable = prompt_tokens.len().saturating_sub(1) / bt;
+        let keys = prefix_block_keys(&prompt_tokens[..usable * bt], bt);
+        while blocks.len() < keys.len() {
+            let j = blocks.len();
+            let want = &prompt_tokens[j * bt..(j + 1) * bt];
+            // Move the entry out before allocating: allocation cannot fail
+            // (reservation envelope) and eviction during it cannot touch
+            // this key (it is not hot until re-published below).
+            let Some((tk, tv, fp)) =
+                self.tier.as_mut().expect("checked above").restore(keys[j], want)
+            else {
+                break;
+            };
+            let nb = self.alloc_block();
+            let floats = self.n_layers * bt * self.dkv;
+            let base = nb * floats;
+            self.k[base..base + floats].copy_from_slice(&tk);
+            self.v[base..base + floats].copy_from_slice(&tv);
+            debug_assert_eq!(
+                self.block_fingerprint(nb),
+                fp,
+                "tier restore must reproduce the spilled block bit-identically"
+            );
+            blocks.push(nb);
+            let radix = self.prefix.as_mut().expect("tier requires the prefix index");
+            let newly = radix.insert(&prompt_tokens[..(j + 1) * bt], blocks);
+            debug_assert_eq!(newly, vec![nb], "restored block re-enters the index");
+            // alloc_block's refcount of 1 becomes the index's reference;
+            // pin for the caller's table on top, like the resident path.
+            self.refcount[nb] += 1;
+        }
     }
 
     #[inline]
@@ -475,9 +627,13 @@ impl PagedKvPool {
         Ok(PagedLanes { pool: self, tables })
     }
 
-    /// Drop the prefix index's block references (eviction of the whole
-    /// cache). With no live requests this drains the pool to empty.
+    /// Drop the prefix index's block references and the spill tier's
+    /// entries (eviction of the whole cache). With no live requests this
+    /// drains pool and tier to empty.
     pub fn clear_prefix_index(&mut self) {
+        if let Some(tier) = &mut self.tier {
+            tier.clear();
+        }
         let blocks = match &mut self.prefix {
             Some(radix) => radix.take_all_blocks(),
             None => return,
@@ -509,6 +665,29 @@ impl PagedKvPool {
         let reserved: usize =
             self.tables.iter().flatten().map(|t| t.reserved).sum();
         assert_eq!(reserved, self.reserved_blocks, "reservation accounting diverged");
+        if let Some(tier) = &self.tier {
+            tier.audit();
+            // Tier and hot index stay disjoint: every publish point runs
+            // tier GC, so a key is never resident in both tiers at once.
+            if let Some(radix) = &self.prefix {
+                let mut clash = false;
+                radix.for_each_key_block(&mut |key, _| {
+                    clash |= tier.contains_key(key);
+                });
+                assert!(!clash, "spill tier holds a key that is hot in the radix index");
+            }
+        }
+    }
+
+    /// The spill tier's counters (tests/diagnostics) — zeroed default when
+    /// no tier is configured.
+    pub fn tier_stats(&self) -> TierStats {
+        self.tier.as_ref().map(SpillTier::stats).unwrap_or_default()
+    }
+
+    /// The spill tier's manifest length (tests) — 0 when no tier.
+    pub fn tier_manifest_len(&self) -> usize {
+        self.tier.as_ref().map_or(0, |t| t.manifest().len())
     }
 }
 
@@ -766,6 +945,120 @@ mod tests {
         assert!(p.lanes(&[1, 1]).is_err(), "duplicate lanes over one table");
         assert!(p.lanes(&[2]).is_err(), "unknown id");
         assert!(p.lanes(&[1]).is_ok());
+    }
+
+    fn tier_pool(blocks: usize, bt: usize, tier: usize) -> PagedKvPool {
+        let cfg = ModelConfig::tiny();
+        PagedKvPool::new(&cfg, 64, KvPoolConfig::paged(blocks, bt, true).with_tier(tier))
+    }
+
+    #[test]
+    fn eviction_spills_and_lookup_faults_back_bit_identical() {
+        let mut p = tier_pool(4, 4, 4);
+        let a: Vec<usize> = (0..8).collect();
+        p.begin(1, &a, 8).unwrap();
+        fill(&mut p, 1, 0..8, 5.0);
+        p.note_tokens(1, 0, &a).unwrap();
+        p.release(1);
+        let published = {
+            // Recover the published physical blocks through a fresh hit.
+            let hit = p.begin(9, &a, 8).unwrap();
+            assert_eq!(hit, 7);
+            let blocks = p.request_blocks(9).unwrap();
+            p.release(9);
+            blocks
+        };
+        let fp_a0 = p.block_fingerprint(published[0]);
+
+        // A 16-token stranger needs the whole arena: both published blocks
+        // are evicted — and with a tier, spilled instead of dropped.
+        let b: Vec<usize> = (50..66).collect();
+        assert_eq!(p.begin(2, &b, 16).unwrap(), 0);
+        fill(&mut p, 2, 0..16, 6.0);
+        assert_eq!(p.tier_stats().spills, 2, "both evicted blocks spilled");
+        assert_eq!(p.tier_stats().resident_blocks, 2);
+        p.debug_validate();
+        p.note_tokens(2, 0, &b).unwrap();
+        p.release(2);
+
+        // Re-begin the first prompt: the radix misses (evicted) but the
+        // tier faults the first block back, bit-identical.
+        let hit = p.begin(3, &a, 8).unwrap();
+        assert_eq!(hit, 4, "one whole block restored from the tier");
+        let stats = p.tier_stats();
+        assert_eq!(stats.restores, 1);
+        assert!(stats.restored_bytes > 0);
+        let restored = p.request_blocks(3).unwrap();
+        assert_eq!(
+            p.block_fingerprint(restored[0]),
+            fp_a0,
+            "restored block must be bit-identical to the spilled original"
+        );
+        p.debug_validate();
+        p.release(3);
+        p.clear_prefix_index();
+        assert_eq!(p.blocks_in_use(), 0, "pool drains");
+        assert_eq!(p.tier_stats().resident_blocks, 0, "tier drains");
+        p.debug_validate();
+    }
+
+    #[test]
+    fn publish_prefix_shares_blocks_mid_flight() {
+        let mut p = pool(8, 4, true);
+        let prompt: Vec<usize> = (0..8).collect();
+        p.begin(1, &prompt, 12).unwrap();
+        fill(&mut p, 1, 0..8, 3.0);
+        p.note_tokens(1, 0, &prompt).unwrap();
+        // Publish at prefill-complete: request 1 still live and decoding.
+        assert_eq!(p.publish_prefix(1).unwrap(), 2, "two whole blocks adopted");
+        assert_eq!(p.publish_prefix(1).unwrap(), 0, "re-publish is idempotent");
+        p.debug_validate();
+
+        // A fork of the same prompt hits the published blocks while the
+        // publisher is still running.
+        let hit = p.begin(2, &prompt, 12).unwrap();
+        assert_eq!(hit, 7);
+        let publisher = p.request_blocks(1).unwrap();
+        assert_eq!(p.request_blocks(2).unwrap(), publisher, "fork binds the publisher's blocks");
+        let fp = p.block_fingerprint(publisher[1]);
+        fill(&mut p, 2, 7..8, 9.0); // divergent write → COW
+        assert_ne!(p.request_blocks(2).unwrap()[1], publisher[1]);
+        assert_eq!(p.block_fingerprint(publisher[1]), fp, "publisher's block untouched");
+        assert_eq!(p.request_blocks(1).unwrap(), publisher, "publisher table unchanged");
+        p.debug_validate();
+        p.release(1);
+        p.release(2);
+        p.clear_prefix_index();
+        assert_eq!(p.blocks_in_use(), 0);
+        p.debug_validate();
+    }
+
+    #[test]
+    fn tier_gc_reclaims_republished_prefixes() {
+        let mut p = tier_pool(4, 4, 8);
+        let a: Vec<usize> = (0..8).collect();
+        p.begin(1, &a, 8).unwrap();
+        fill(&mut p, 1, 0..8, 1.0);
+        p.note_tokens(1, 0, &a).unwrap();
+        p.release(1);
+        // Evict both published blocks into the tier.
+        let b: Vec<usize> = (50..66).collect();
+        p.begin(2, &b, 16).unwrap();
+        fill(&mut p, 2, 0..16, 2.0);
+        assert_eq!(p.tier_stats().resident_blocks, 2);
+        p.release(2);
+        // Re-begin the first prompt: block 0 faults back; block 1 stays in
+        // the tier (the hit is capped below the last prompt token). The
+        // release then republishes both blocks — the tier's copy of block 1
+        // is now dead and GC reclaims it.
+        let hit = p.begin(3, &a, 8).unwrap();
+        assert_eq!(hit, 4, "first block restored from the tier");
+        assert_eq!(p.tier_stats().restores, 1);
+        fill(&mut p, 3, hit..8, 1.0);
+        p.note_tokens(3, hit, &a[hit..]).unwrap();
+        p.release(3);
+        assert_eq!(p.tier_stats().gc_reclaimed, 1, "republished block leaves the tier via GC");
+        p.debug_validate();
     }
 
     #[test]

@@ -27,19 +27,29 @@
 pub fn prefix_block_keys(tokens: &[usize], block_tokens: usize) -> Vec<u64> {
     assert!(block_tokens > 0, "block must hold at least one token");
     let mut keys = Vec::with_capacity(tokens.len() / block_tokens);
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h = FNV_SEED;
     for (i, &t) in tokens.iter().enumerate() {
-        let mut v = t as u64;
-        for _ in 0..8 {
-            h ^= v & 0xff;
-            h = h.wrapping_mul(0x0100_0000_01b3);
-            v >>= 8;
-        }
+        h = fnv_fold_token(h, t);
         if (i + 1) % block_tokens == 0 {
             keys.push(h);
         }
     }
     keys
+}
+
+const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold one token id (8 bytes, little-endian) into the running FNV-1a
+/// state — the single hash step behind [`prefix_block_keys`] and the
+/// index's incremental key walker.
+fn fnv_fold_token(mut h: u64, t: usize) -> u64 {
+    let mut v = t as u64;
+    for _ in 0..8 {
+        h ^= v & 0xff;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+        v >>= 8;
+    }
+    h
 }
 
 /// One edge of the radix tree: `blocks.len()` whole blocks of tokens
@@ -90,6 +100,28 @@ impl RadixIndex {
             }
         }
         walk(&self.children, f);
+    }
+
+    /// Visit every referenced block together with the cumulative prefix
+    /// key of the whole-block token run it closes — the same keys
+    /// [`prefix_block_keys`] produces for that run, computed incrementally
+    /// down the trie (edges carry whole blocks, so key boundaries align
+    /// with edge block boundaries). This is how the pool learns which
+    /// prefixes are *hot* when it garbage-collects the spill tier.
+    pub fn for_each_key_block(&self, f: &mut dyn FnMut(u64, usize)) {
+        fn walk(node: &[Edge], bt: usize, h0: u64, f: &mut dyn FnMut(u64, usize)) {
+            for e in node {
+                let mut h = h0;
+                for (j, chunk) in e.tokens.chunks(bt).enumerate() {
+                    for &t in chunk {
+                        h = fnv_fold_token(h, t);
+                    }
+                    f(h, e.blocks[j]);
+                }
+                walk(&e.children, bt, h, f);
+            }
+        }
+        walk(&self.children, self.block_tokens, FNV_SEED, f);
     }
 
     /// Drop the whole index, returning every block it referenced (the pool
@@ -215,16 +247,28 @@ impl RadixIndex {
     /// whose refcount exceeds 1 (shared with a live request). Returns the
     /// evicted blocks — the caller drops the index's refcount on each.
     pub fn evict(&mut self, want: usize, refcount: &[u32]) -> Vec<usize> {
+        self.evict_runs(want, refcount).into_iter().map(|(b, _)| b).collect()
+    }
+
+    /// [`RadixIndex::evict`] that also reports, for each evicted block,
+    /// the *full* whole-block token run it closed (root through the
+    /// block) — the identity a spill tier needs to key the block by its
+    /// cumulative prefix so a later lookup of the same prefix can fault
+    /// it back.
+    pub fn evict_runs(&mut self, want: usize, refcount: &[u32]) -> Vec<(usize, Vec<usize>)> {
         let mut freed = Vec::new();
+        let mut path = Vec::new();
         while freed.len() < want {
             let Some(touch) = Self::lru_leaf(&self.children, refcount) else { break };
             let quota = want - freed.len();
+            path.clear();
             let hit = Self::trim(
                 &mut self.children,
                 touch,
                 refcount,
                 quota,
                 self.block_tokens,
+                &mut path,
                 &mut freed,
             );
             debug_assert!(hit, "lru_leaf returned a touch that trim could not find");
@@ -259,7 +303,10 @@ impl RadixIndex {
     }
 
     /// Trim up to `quota` evictable tail blocks off the (unique) leaf edge
-    /// stamped `touch`; remove the edge when it empties. Returns whether
+    /// stamped `touch`; remove the edge when it empties. `path` carries
+    /// the token run from the root down to (excluding) the current node,
+    /// so each freed block is reported with its full whole-block token
+    /// run, snapshotted *before* the edge truncates it. Returns whether
     /// the edge was found.
     fn trim(
         node: &mut Vec<Edge>,
@@ -267,7 +314,8 @@ impl RadixIndex {
         refcount: &[u32],
         quota: usize,
         bt: usize,
-        freed: &mut Vec<usize>,
+        path: &mut Vec<usize>,
+        freed: &mut Vec<(usize, Vec<usize>)>,
     ) -> bool {
         for i in 0..node.len() {
             if node[i].children.is_empty() {
@@ -280,8 +328,14 @@ impl RadixIndex {
                     && !e.blocks.is_empty()
                     && refcount[*e.blocks.last().expect("non-empty")] == 1
                 {
-                    freed.push(e.blocks.pop().expect("non-empty"));
+                    let b = e.blocks.pop().expect("non-empty");
+                    // The run covering this tail block: the path to this
+                    // edge plus the edge's tokens up to and including the
+                    // popped block (still present before the truncate).
+                    let mut run = path.clone();
+                    run.extend_from_slice(&e.tokens);
                     e.tokens.truncate(e.blocks.len() * bt);
+                    freed.push((b, run));
                     n += 1;
                 }
                 if e.blocks.is_empty() {
@@ -289,7 +343,11 @@ impl RadixIndex {
                 }
                 return true;
             }
-            if Self::trim(&mut node[i].children, touch, refcount, quota, bt, freed) {
+            let e = &mut node[i];
+            path.extend_from_slice(&e.tokens);
+            let hit = Self::trim(&mut e.children, touch, refcount, quota, bt, path, freed);
+            path.truncate(path.len() - e.tokens.len());
+            if hit {
                 return true;
             }
         }
@@ -428,6 +486,55 @@ mod tests {
         let mut sorted = freed;
         sorted.sort_unstable();
         assert_eq!(sorted, vec![1, 2, 3, 7]);
+    }
+
+    #[test]
+    fn evict_runs_report_the_full_prefix_run() {
+        let bt = 2;
+        let mut r = RadixIndex::new(bt);
+        let a = toks(&[1, 2, 3], bt);
+        let mut b = a[..2 * bt].to_vec();
+        b.extend_from_slice(&toks(&[7], bt));
+        r.insert(&a, &[1, 2, 3]);
+        r.insert(&b, &[1, 2, 7]); // splits: edge [1,2] with children [3], [7]
+        let rc = vec![1u32; 8];
+        let freed = r.evict_runs(10, &rc);
+        assert_eq!(freed.len(), 4);
+        for (block, run) in &freed {
+            // Every reported run ends on a whole block and identifies the
+            // block's cumulative prefix exactly.
+            assert_eq!(run.len() % bt, 0);
+            let keys = prefix_block_keys(run, bt);
+            assert_eq!(keys.len(), run.len() / bt);
+            match *block {
+                3 => assert_eq!(run, &a),
+                7 => assert_eq!(run, &b),
+                2 => assert_eq!(run, &a[..2 * bt]),
+                1 => assert_eq!(run, &a[..bt]),
+                other => panic!("unexpected block {other}"),
+            }
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn key_walker_matches_prefix_block_keys() {
+        let bt = 2;
+        let mut r = RadixIndex::new(bt);
+        let a = toks(&[1, 2, 3], bt);
+        let mut b = a[..2 * bt].to_vec();
+        b.extend_from_slice(&toks(&[7], bt));
+        r.insert(&a, &[1, 2, 3]);
+        r.insert(&b, &[1, 2, 7]);
+        let mut got: Vec<(u64, usize)> = Vec::new();
+        r.for_each_key_block(&mut |key, block| got.push((key, block)));
+        assert_eq!(got.len(), 4, "one (key, block) pair per referenced block");
+        let ka = prefix_block_keys(&a, bt);
+        let kb = prefix_block_keys(&b, bt);
+        let want = [(ka[0], 1), (ka[1], 2), (ka[2], 3), (kb[2], 7)];
+        for pair in want {
+            assert!(got.contains(&pair), "missing {pair:?} in {got:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,368 @@
+//! Simulated DDR/flash spill tier behind the paged KV pool.
+//!
+//! The hot arena ([`crate::kvpool::PagedKvPool`]) holds the blocks the NPU
+//! computes against; this module models the *second* tier of the device
+//! memory hierarchy — the DDR/flash capacity a radix eviction can spill a
+//! cold block into instead of dropping it. A later prefix-cache lookup
+//! that reaches a spilled block faults it back: the pool copies the saved
+//! K/V into a freshly allocated hot block, bit-identical to the original
+//! (fingerprint-checked), and the engine prices the fault as a DMA
+//! transfer on the memory power rail — a warm-tier hit costs a copy, not
+//! a re-prefill.
+//!
+//! Lifecycle discipline (wal3-style manifest + GC):
+//!
+//! ```text
+//!   hot (radix)  --evict-->  SPILLED  --lookup fault-->  hot (radix)
+//!        ^                     |  |
+//!        |                     |  +--capacity LRU--> DROPPED
+//!        +------publish--------+----------GC-------> RECLAIMED
+//! ```
+//!
+//! Every transition appends a [`ManifestRecord`] to an append-only,
+//! sequence-numbered log keyed by the block's *cumulative prefix key*
+//! ([`crate::kvpool::prefix_block_keys`]) with its parent key as lineage —
+//! replaying the log reproduces the live entry set exactly, which is what
+//! [`SpillTier::audit`] asserts. A GC pass reclaims entries whose key went
+//! hot again (a request recomputed or republished the same prefix, so the
+//! tier copy is dead) and compacts the manifest down to the latest spill
+//! record per live key, bounding the log the way wal3's collector bounds
+//! its WAL.
+//!
+//! The tier is a *simulation* of capacity, not of a storage device: spill
+//! and restore move bytes synchronously and only the restore is priced
+//! (on the DMA/memory rail — spills ride the same eviction the pool
+//! already performed). Numerics are untouched by construction: a restored
+//! block's contents are the spilled block's contents, so tier-on/off
+//! logits stay byte-identical.
+
+use std::collections::{HashMap, HashSet};
+
+/// Default warm-tier capacity as a multiple of the hot arena
+/// (`tier_blocks = DEFAULT_TIER_FACTOR × hot blocks`): DDR/flash is an
+/// order of magnitude larger than the NPU-reachable arena.
+pub const DEFAULT_TIER_FACTOR: usize = 10;
+
+/// One manifest transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierOp {
+    /// A cold block entered the tier (radix eviction).
+    Spill,
+    /// A prefix lookup faulted the block back into the hot arena.
+    Restore,
+    /// Capacity pressure dropped the oldest entry, or a whole-cache clear
+    /// dropped everything (the lossy paths).
+    Drop,
+    /// GC reclaimed an entry whose prefix went hot again.
+    Gc,
+}
+
+/// Append-only log record: `seq` orders the log, `key` is the block's
+/// cumulative prefix key, `parent` its predecessor block's key (lineage —
+/// `None` for a prompt's first block), `bytes` the block's K+V payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ManifestRecord {
+    pub seq: u64,
+    pub op: TierOp,
+    pub key: u64,
+    pub parent: Option<u64>,
+    pub bytes: usize,
+}
+
+/// One spilled block: the tokens of its own (last) block run, its K/V
+/// payload, and a content fingerprint the pool re-checks on restore.
+#[derive(Debug, Clone)]
+struct TierEntry {
+    tokens: Vec<usize>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    fingerprint: u64,
+    parent: Option<u64>,
+    /// Manifest seq of the spill that wrote this entry — the tier's LRU
+    /// order under capacity pressure.
+    spill_seq: u64,
+    bytes: usize,
+}
+
+/// Tier counters surfaced through [`crate::kvpool::KvPoolStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    pub capacity_blocks: usize,
+    pub resident_blocks: usize,
+    pub spills: usize,
+    pub restores: usize,
+    pub restored_bytes: usize,
+    pub dropped: usize,
+    pub gc_reclaimed: usize,
+}
+
+/// The simulated DDR/flash tier: a capacity-bounded map from cumulative
+/// prefix key to spilled block, plus the manifest log.
+#[derive(Debug, Clone)]
+pub struct SpillTier {
+    capacity_blocks: usize,
+    entries: HashMap<u64, TierEntry>,
+    manifest: Vec<ManifestRecord>,
+    seq: u64,
+    stats: TierStats,
+}
+
+impl SpillTier {
+    pub fn new(capacity_blocks: usize) -> Self {
+        assert!(capacity_blocks > 0, "tier needs at least one block of capacity");
+        Self {
+            capacity_blocks,
+            entries: HashMap::new(),
+            manifest: Vec::new(),
+            seq: 0,
+            stats: TierStats { capacity_blocks, ..Default::default() },
+        }
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity_blocks
+    }
+
+    pub fn resident_blocks(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn stats(&self) -> TierStats {
+        TierStats { resident_blocks: self.entries.len(), ..self.stats }
+    }
+
+    /// The manifest log (diagnostics/tests).
+    pub fn manifest(&self) -> &[ManifestRecord] {
+        &self.manifest
+    }
+
+    fn record(&mut self, op: TierOp, key: u64, parent: Option<u64>, bytes: usize) {
+        self.seq += 1;
+        self.manifest.push(ManifestRecord { seq: self.seq, op, key, parent, bytes });
+    }
+
+    /// Whether the tier holds any entry under `key` (disjointness audits).
+    pub fn contains_key(&self, key: u64) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    /// Whether the tier holds `key` with exactly these block tokens — the
+    /// pre-restore check a prefix fault performs before allocating a hot
+    /// block (a content mismatch under a colliding key is a miss, never a
+    /// wrong restore).
+    pub fn contains_tokens(&self, key: u64, tokens: &[usize]) -> bool {
+        self.entries.get(&key).is_some_and(|e| e.tokens == tokens)
+    }
+
+    /// Spill one evicted block into the tier. A re-spill of the same key
+    /// supersedes the old entry (same prefix, freshest contents); capacity
+    /// pressure drops the oldest entry by spill order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spill(
+        &mut self,
+        key: u64,
+        parent: Option<u64>,
+        tokens: Vec<usize>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        fingerprint: u64,
+        bytes: usize,
+    ) {
+        if !self.entries.contains_key(&key) && self.entries.len() >= self.capacity_blocks {
+            // Oldest spill goes first — the tier's own LRU.
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.spill_seq)
+                .map(|(&vk, _)| vk)
+                .expect("non-empty tier at capacity");
+            let dropped = self.entries.remove(&victim).expect("victim resident");
+            self.record(TierOp::Drop, victim, dropped.parent, dropped.bytes);
+            self.stats.dropped += 1;
+        }
+        self.record(TierOp::Spill, key, parent, bytes);
+        let spill_seq = self.seq;
+        self.entries.insert(key, TierEntry { tokens, k, v, fingerprint, parent, spill_seq, bytes });
+        self.stats.spills += 1;
+    }
+
+    /// Fault `key` back out of the tier (move semantics: the entry leaves
+    /// the tier — the hot arena owns the block again). Returns the K/V
+    /// payload and its fingerprint, or `None` when the tier does not hold
+    /// exactly these tokens under `key`.
+    pub fn restore(&mut self, key: u64, tokens: &[usize]) -> Option<(Vec<f32>, Vec<f32>, u64)> {
+        if !self.contains_tokens(key, tokens) {
+            return None;
+        }
+        let e = self.entries.remove(&key).expect("checked resident");
+        self.record(TierOp::Restore, key, e.parent, e.bytes);
+        self.stats.restores += 1;
+        self.stats.restored_bytes += e.bytes;
+        Some((e.k, e.v, e.fingerprint))
+    }
+
+    /// Drop every entry (whole-cache clear — the tier analogue of
+    /// [`crate::kvpool::PagedKvPool::clear_prefix_index`]).
+    pub fn clear(&mut self) {
+        let mut keys: Vec<u64> = self.entries.keys().copied().collect();
+        keys.sort_unstable();
+        for key in keys {
+            let e = self.entries.remove(&key).expect("listed key resident");
+            self.record(TierOp::Drop, key, e.parent, e.bytes);
+            self.stats.dropped += 1;
+        }
+    }
+
+    /// Reclaim every entry whose prefix key is hot again (`hot` holds the
+    /// radix index's current cumulative keys): the hot copy is canonical,
+    /// so the tier copy is dead. Then compact the manifest to the latest
+    /// spill record per surviving key — replay stays exact while the log
+    /// stops growing with history.
+    pub fn gc(&mut self, hot: &HashSet<u64>) {
+        let dead: Vec<u64> = self.entries.keys().filter(|k| hot.contains(k)).copied().collect();
+        for key in dead {
+            let e = self.entries.remove(&key).expect("dead key resident");
+            self.record(TierOp::Gc, key, e.parent, e.bytes);
+            self.stats.gc_reclaimed += 1;
+        }
+        // Compaction: one Spill record per live entry (its latest), in seq
+        // order. Replaying the compacted log yields the same live set.
+        let mut compact: Vec<ManifestRecord> = self
+            .entries
+            .iter()
+            .map(|(&key, e)| ManifestRecord {
+                seq: e.spill_seq,
+                op: TierOp::Spill,
+                key,
+                parent: e.parent,
+                bytes: e.bytes,
+            })
+            .collect();
+        compact.sort_unstable_by_key(|r| r.seq);
+        self.manifest = compact;
+    }
+
+    /// Replay the manifest and assert the reconstructed live set matches
+    /// the resident entries — the tier's analogue of the pool's refcount
+    /// audit. Panics on divergence (test/debug invariant).
+    pub fn audit(&self) {
+        let mut live: HashMap<u64, u64> = HashMap::new(); // key -> spill seq
+        let mut last_seq = 0u64;
+        for r in &self.manifest {
+            assert!(r.seq > last_seq, "manifest seq must be strictly increasing");
+            last_seq = r.seq;
+            match r.op {
+                TierOp::Spill => {
+                    live.insert(r.key, r.seq);
+                }
+                TierOp::Restore | TierOp::Drop | TierOp::Gc => {
+                    assert!(
+                        live.remove(&r.key).is_some(),
+                        "manifest removes key {:#x} that was never live",
+                        r.key
+                    );
+                }
+            }
+        }
+        assert_eq!(live.len(), self.entries.len(), "manifest replay diverged from entries");
+        for (key, e) in &self.entries {
+            assert_eq!(
+                live.get(key),
+                Some(&e.spill_seq),
+                "entry {key:#x} missing from (or stale in) the manifest replay"
+            );
+        }
+        assert!(self.entries.len() <= self.capacity_blocks, "tier over capacity");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(tag: f32, n: usize) -> (Vec<f32>, Vec<f32>) {
+        ((0..n).map(|i| tag + i as f32).collect(), (0..n).map(|i| -tag - i as f32).collect())
+    }
+
+    #[test]
+    fn spill_restore_round_trip_is_exact() {
+        let mut t = SpillTier::new(4);
+        let (k, v) = payload(1.0, 8);
+        t.spill(0xA, None, vec![1, 2], k.clone(), v.clone(), 77, 64);
+        assert_eq!(t.resident_blocks(), 1);
+        assert!(t.contains_tokens(0xA, &[1, 2]));
+        assert!(!t.contains_tokens(0xA, &[1, 3]), "token mismatch is a miss");
+        assert!(t.restore(0xA, &[1, 3]).is_none(), "mismatched restore must refuse");
+        let (rk, rv, fp) = t.restore(0xA, &[1, 2]).expect("hit");
+        assert_eq!((rk, rv, fp), (k, v, 77));
+        assert_eq!(t.resident_blocks(), 0, "restore moves the entry out");
+        let s = t.stats();
+        assert_eq!((s.spills, s.restores, s.restored_bytes), (1, 1, 64));
+        t.audit();
+    }
+
+    #[test]
+    fn capacity_pressure_drops_oldest_spill_first() {
+        let mut t = SpillTier::new(2);
+        for (i, key) in [0x1u64, 0x2, 0x3].into_iter().enumerate() {
+            let (k, v) = payload(i as f32, 4);
+            t.spill(key, None, vec![i], k, v, i as u64, 32);
+        }
+        assert_eq!(t.resident_blocks(), 2);
+        assert!(!t.contains_tokens(0x1, &[0]), "oldest entry dropped");
+        assert!(t.contains_tokens(0x2, &[1]));
+        assert!(t.contains_tokens(0x3, &[2]));
+        assert_eq!(t.stats().dropped, 1);
+        t.audit();
+    }
+
+    #[test]
+    fn respill_supersedes_without_dropping() {
+        let mut t = SpillTier::new(1);
+        let (k, v) = payload(0.0, 4);
+        t.spill(0x9, None, vec![5], k, v, 1, 32);
+        let (k2, v2) = payload(9.0, 4);
+        t.spill(0x9, None, vec![5], k2.clone(), v2.clone(), 2, 32);
+        assert_eq!(t.resident_blocks(), 1);
+        assert_eq!(t.stats().dropped, 0, "same-key re-spill is a supersede, not a drop");
+        let (rk, rv, fp) = t.restore(0x9, &[5]).expect("hit");
+        assert_eq!((rk, rv, fp), (k2, v2, 2), "freshest contents win");
+        t.audit();
+    }
+
+    #[test]
+    fn gc_reclaims_hot_keys_and_compacts_the_manifest() {
+        let mut t = SpillTier::new(4);
+        for key in [0x1u64, 0x2, 0x3] {
+            let (k, v) = payload(key as f32, 4);
+            t.spill(key, Some(key - 1), vec![key as usize], k, v, key, 32);
+        }
+        let hot: HashSet<u64> = [0x2u64].into_iter().collect();
+        t.gc(&hot);
+        assert!(!t.contains_tokens(0x2, &[2]), "hot key reclaimed");
+        assert_eq!(t.stats().gc_reclaimed, 1);
+        assert_eq!(t.resident_blocks(), 2);
+        assert_eq!(t.manifest().len(), 2, "compacted to one spill record per live entry");
+        assert!(t.manifest().iter().all(|r| r.op == TierOp::Spill));
+        t.audit();
+        // GC with nothing hot is a no-op beyond compaction.
+        t.gc(&HashSet::new());
+        assert_eq!(t.resident_blocks(), 2);
+        t.audit();
+    }
+
+    #[test]
+    fn manifest_replay_tracks_every_transition() {
+        let mut t = SpillTier::new(2);
+        let (k, v) = payload(0.0, 4);
+        t.spill(0xA, None, vec![1], k.clone(), v.clone(), 0, 32);
+        t.spill(0xB, Some(0xA), vec![2], k.clone(), v.clone(), 0, 32);
+        t.audit();
+        t.restore(0xA, &[1]).expect("hit");
+        t.audit();
+        t.spill(0xC, Some(0xB), vec![3], k.clone(), v, 0, 32);
+        t.spill(0xD, Some(0xC), vec![4], k.clone(), k, 0, 32); // drops 0xB (oldest)
+        assert_eq!(t.stats().dropped, 1);
+        t.audit();
+    }
+}

@@ -22,6 +22,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod kernels;
 pub mod kvpool;
+pub mod kvtier;
 pub mod load;
 pub mod model;
 pub mod npu;

@@ -76,6 +76,64 @@ impl ArrivalProcess {
         }
     }
 
+    /// Draw **one** inter-event gap with mean `mean_us`, shaped like this
+    /// process — the think-time form of the point process, used by the
+    /// closed-loop client model (`--closed-loop` composed with
+    /// `--arrivals`). Each variant keeps the long-run mean at `mean_us`
+    /// exactly while inheriting the process's character:
+    ///
+    /// - `Poisson`: one exponential gap (memoryless thinker).
+    /// - `Bursty`: a two-mode mixture at the square wave's duty cycle —
+    ///   mostly quick follow-ups, occasionally an off-window-scale pause.
+    /// - `Diurnal`: an exponential gap whose mean is drawn from the
+    ///   sinusoid at a uniform random phase (stationary view of the cycle).
+    /// - `FlashCrowd`: `crowd_per_4` of every 4 draws use the crowd's
+    ///   tight gap ratio, the rest the background's.
+    ///
+    /// Deterministic for a fixed `(self, mean_us, rng state)`.
+    pub fn gap_us(&self, mean_us: f64, rng: &mut Rng) -> f64 {
+        assert!(mean_us >= 0.0, "think-time mean must be non-negative");
+        if mean_us == 0.0 {
+            return 0.0;
+        }
+        match *self {
+            ArrivalProcess::Poisson { .. } => exp_gap(rng, mean_us),
+            ArrivalProcess::Bursty { on_us, off_us, .. } => {
+                if off_us <= 0.0 {
+                    return exp_gap(rng, mean_us);
+                }
+                // Duty-cycle mixture: with probability d (the on-fraction)
+                // a short gap of mean `s`, else a long pause whose mean is
+                // solved so the mixture's mean is exactly `mean_us`.
+                let d = (on_us / (on_us + off_us)).clamp(1e-6, 1.0 - 1e-6);
+                let s = mean_us * 0.5;
+                let l = (mean_us - d * s) / (1.0 - d);
+                let short = f64::from(rng.next_f32()) < d;
+                exp_gap(rng, if short { s } else { l })
+            }
+            ArrivalProcess::Diurnal { peak_gap_us, trough_gap_us, .. } => {
+                // Stationary phase draw: the sinusoid's mean-gap profile at
+                // a uniform phase, rescaled so the phase-average is
+                // `mean_us` ((peak + trough) / 2 is the profile's average).
+                let phase = f64::from(rng.next_f32()) * std::f64::consts::TAU;
+                let profile =
+                    peak_gap_us + (trough_gap_us - peak_gap_us) * (1.0 - phase.cos()) / 2.0;
+                let avg = (peak_gap_us + trough_gap_us) / 2.0;
+                exp_gap(rng, mean_us * profile / avg.max(1e-12))
+            }
+            ArrivalProcess::FlashCrowd { base_gap_us, crowd_per_4, crowd_gap_us, .. } => {
+                // Crowd-ratio mixture: q of the draws think at the crowd's
+                // gap ratio r, the rest at the background's; the base mean
+                // is solved so the mixture's mean is exactly `mean_us`.
+                let q = (crowd_per_4.min(4) as f64) / 4.0;
+                let r = crowd_gap_us / base_gap_us.max(1e-12);
+                let base = mean_us / (q * r + (1.0 - q)).max(1e-12);
+                let in_crowd = f64::from(rng.next_f32()) < q;
+                exp_gap(rng, if in_crowd { r * base } else { base })
+            }
+        }
+    }
+
     /// Draw `n` arrival times. Strictly increasing, all positive, and a
     /// pure function of `(self, n, rng state)` — same seed, same times.
     pub fn times(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
@@ -241,6 +299,31 @@ mod tests {
             tightest < span / 4.0,
             "crowd window {tightest} must be much tighter than the span {span}"
         );
+    }
+
+    #[test]
+    fn think_gaps_are_deterministic_positive_and_mean_preserving() {
+        let procs = [
+            ArrivalProcess::Poisson { mean_gap_us: 300.0 },
+            ArrivalProcess::bursty(300.0),
+            ArrivalProcess::diurnal(300.0),
+            ArrivalProcess::flash_crowd(300.0),
+        ];
+        for p in procs {
+            let mean = 2_000.0;
+            let mut a_rng = Rng::new(11);
+            let mut b_rng = Rng::new(11);
+            let a: Vec<f64> = (0..4096).map(|_| p.gap_us(mean, &mut a_rng)).collect();
+            let b: Vec<f64> = (0..4096).map(|_| p.gap_us(mean, &mut b_rng)).collect();
+            assert_eq!(a, b, "{p:?} think gaps must be deterministic");
+            assert!(a.iter().all(|&g| g > 0.0), "{p:?} gaps must be positive");
+            let avg = a.iter().sum::<f64>() / a.len() as f64;
+            assert!(
+                (avg - mean).abs() < mean * 0.15,
+                "{p:?} sample mean {avg} strays from requested mean {mean}"
+            );
+            assert_eq!(p.gap_us(0.0, &mut Rng::new(1)), 0.0, "zero mean short-circuits");
+        }
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //!   memory) under round-robin vs cache-aware routing: the sweep that
 //!   must show cache-aware winning on prefix hit rate without losing
 //!   goodput.
+//! - `tier_cold` / `tier_warm` — one shared-prefix trace against a
+//!   deliberately tight hot arena, with eviction-as-drop vs a 10×
+//!   DDR/flash spill tier behind the same arena: at equal hot memory the
+//!   warm arm must spill, fault blocks back, produce byte-identical
+//!   output, and strictly reduce restore-inclusive prefill time.
+//! - `ttc` — best-of-4 test-time-compute fan-out on the warm tiered
+//!   engine: sibling prompts fork copy-on-write through the prefix cache.
 //! - `dispatch_npu` / `dispatch_cpu` / `dispatch_auto` — one pinned mixed
 //!   trace priced under the three dispatch modes: the heterogeneous
 //!   dispatcher's two-sided quote must pay off end-to-end, with the auto
@@ -58,6 +65,26 @@ fn prefix_engine() -> Result<Engine> {
     let blocks = KV_SLOTS * model.cfg.max_seq.div_ceil(block_tokens);
     let kv = KvPoolConfig::paged(blocks, block_tokens, true);
     Engine::reference_paged(model, SocConfig::oneplus12(), CHUNK, 4, kv)
+}
+
+/// A deliberately tight hot arena (2 × max_seq tokens of paged KV) with an
+/// optional 10× DDR/flash spill tier behind it — the tier-contrast rig.
+fn tier_engine(warm: bool) -> Result<Engine> {
+    let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
+    let block_tokens = 16;
+    let hot_blocks = 2 * model.cfg.max_seq.div_ceil(block_tokens);
+    let mut kv = KvPoolConfig::paged(hot_blocks, block_tokens, true);
+    if warm {
+        kv = kv.with_tier(crate::kvtier::DEFAULT_TIER_FACTOR * hot_blocks);
+    }
+    Engine::reference_paged(model, SocConfig::oneplus12(), CHUNK, 4, kv)
+}
+
+/// Completion-attributed prefill time — the cost surface the tier contrast
+/// is judged on (warm-arm restores land here as DMA time, so the contrast
+/// is restore-inclusive).
+fn total_prefill_ms(fleet: &FleetMetrics) -> f64 {
+    fleet.completions.iter().map(|c| c.sim_prefill_us).sum::<f64>() / 1e3
 }
 
 fn run(engine: Engine, trace: &[TraceRequest], policy: OverloadPolicy) -> Result<FleetMetrics> {
@@ -111,7 +138,7 @@ pub fn serving_snapshot() -> Result<String> {
     let shed = run(
         engine()?,
         &crowd_trace,
-        OverloadPolicy { queue_cap: None, shed: true },
+        OverloadPolicy { queue_cap: None, class_caps: vec![], shed: true },
     )?;
     emit_fleet(&mut out, "flash_shed", &shed);
     out.num("flash_shed.slo_slack_ms", slack_us / 1e3);
@@ -123,6 +150,20 @@ pub fn serving_snapshot() -> Result<String> {
         shed.shed + shed.rejected > 0,
         "an overload with deadlines below the no-shed tail must drop work"
     );
+    // The goodput contrast admission control exists to win: by dropping
+    // work that would miss its deadline, the shed arm serves MORE useful
+    // tokens per second than the control arm keeps — not fewer. Gated as
+    // a ratio so the perf gate fails if shedding stops paying for itself.
+    ensure!(
+        noshed.goodput_tps() > 0.0,
+        "the control arm must retain some goodput to contrast against"
+    );
+    let goodput_gain = shed.goodput_tps() / noshed.goodput_tps();
+    out.num("flash_shed.goodput_gain", goodput_gain);
+    ensure!(
+        goodput_gain > 1.0,
+        "shedding must raise goodput over the no-control arm (gain {goodput_gain:.3})"
+    );
 
     // Shared-prefix fan-out on the prefix-cache paged engine.
     let prefix_spec = LoadSpec::new(
@@ -133,6 +174,56 @@ pub fn serving_snapshot() -> Result<String> {
     let prefix = run(prefix_engine()?, &prefix_spec.trace(32, 5), OverloadPolicy::default())?;
     emit_fleet(&mut out, "prefix", &prefix);
     ensure!(prefix.prefix_hit_rate() > 0.0, "shared-prefix load must hit the prefix cache");
+
+    // Tiered-KV contrast: one trace (shared 64-byte system prompt) against
+    // a deliberately tight hot arena (2 × max_seq tokens), served with
+    // eviction-as-drop (cold) vs a 10× DDR/flash spill tier behind the
+    // same arena (warm). Identical hot memory, identical logits — the
+    // warm arm converts re-prefills of evicted prefixes into DMA
+    // fault-backs, so its measured prefill time (restore DMA included)
+    // must land strictly below the cold arm's.
+    let tier_trace = LoadSpec::new(
+        ArrivalProcess::Poisson { mean_gap_us: 500.0 },
+        TraceProfile::tiny().with_shared_prefix(64),
+    )
+    .trace(48, 23);
+    let cold = run(tier_engine(false)?, &tier_trace, OverloadPolicy::default())?;
+    emit_tier(&mut out, "tier_cold", &cold);
+    let warm = run(tier_engine(true)?, &tier_trace, OverloadPolicy::default())?;
+    emit_tier(&mut out, "tier_warm", &warm);
+    ensure!(cold.tier_spills == 0, "the cold arm has no tier to spill into");
+    ensure!(warm.tier_spills > 0, "the tight arena must spill under the tier trace");
+    ensure!(warm.tier_restores > 0, "spilled prefixes must fault back on reuse");
+    let texts = |m: &FleetMetrics| {
+        let mut t: Vec<(u64, String)> =
+            m.completions.iter().map(|c| (c.id, c.text.clone())).collect();
+        t.sort();
+        t
+    };
+    ensure!(
+        texts(&cold) == texts(&warm),
+        "the tier moves blocks, never logits: cold and warm outputs must be byte-identical"
+    );
+    ensure!(
+        total_prefill_ms(&warm) < total_prefill_ms(&cold),
+        "at equal hot memory the warm tier must reduce measured prefill \
+         ({:.3} !< {:.3} ms)",
+        total_prefill_ms(&warm),
+        total_prefill_ms(&cold)
+    );
+
+    // Test-time compute: best-of-4 forks per arrival on the warm tiered
+    // engine. Siblings share the whole prompt, so the prefix cache (with
+    // the tier faulting evicted prefixes back) serves their duplicate
+    // prefills as O(1) copy-on-write forks.
+    let ttc_spec = LoadSpec::new(
+        ArrivalProcess::Poisson { mean_gap_us: 500.0 },
+        TraceProfile::tiny().with_shared_prefix(64),
+    )
+    .with_fanout(4);
+    let ttc = run(tier_engine(true)?, &ttc_spec.trace(32, 29), OverloadPolicy::default())?;
+    emit_tier(&mut out, "ttc", &ttc);
+    ensure!(ttc.prefix_hit_rate() > 0.0, "TTC siblings must hit the prefix cache");
 
     // Fleet routing sweep: prompts drawn from the workload's 8 prefix
     // families (per-tenant system prompts) across three prefix-cache
@@ -202,6 +293,15 @@ fn emit_dispatch(out: &mut FlatJson, scen: &str, fleet: &FleetMetrics) {
     out.num(&format!("{scen}.makespan_ms"), fleet.makespan_us / 1e3);
 }
 
+/// Tier-scenario keys: the standard metric set plus the gated
+/// restore-inclusive prefill time and the (ungated, tracked) tier flow.
+fn emit_tier(out: &mut FlatJson, scen: &str, fleet: &FleetMetrics) {
+    emit_fleet(out, scen, fleet);
+    out.num(&format!("{scen}.prefill_ms"), total_prefill_ms(fleet));
+    out.count(&format!("{scen}.tier_spills"), fleet.tier_spills);
+    out.count(&format!("{scen}.tier_restores"), fleet.tier_restores);
+}
+
 /// Route one pinned trace across three prefix-cache replicas.
 fn run_fleet(routing: RoutingPolicy, trace: &[TraceRequest]) -> Result<FleetRun> {
     let engines = (0..3).map(|_| prefix_engine()).collect::<Result<Vec<_>>>()?;
@@ -238,6 +338,9 @@ mod tests {
             "flash_noshed",
             "flash_shed",
             "prefix",
+            "tier_cold",
+            "tier_warm",
+            "ttc",
             "fleet_rr",
             "fleet_ca",
             "dispatch_npu",
@@ -256,8 +359,20 @@ mod tests {
         assert!(get("flash_noshed.deadline_misses") >= 1.0);
         assert_eq!(get("flash_shed.deadline_misses"), 0.0);
         assert!(get("flash_shed.shed_rate") >= 0.0);
+        assert!(
+            get("flash_shed.goodput_gain") > 1.0,
+            "shedding must out-goodput the control arm"
+        );
         assert!(get("prefix.prefix_hit_rate") > 0.0);
         assert!(get("steady.goodput_tps") > 0.0);
+        // The tier sweep: same trace, same tight hot arena — the warm arm
+        // spills and restores where the cold arm cannot, and wins the
+        // restore-inclusive prefill-time contrast.
+        assert_eq!(get("tier_cold.tier_spills"), 0.0);
+        assert!(get("tier_warm.tier_spills") > 0.0);
+        assert!(get("tier_warm.tier_restores") > 0.0);
+        assert!(get("tier_warm.prefill_ms") < get("tier_cold.prefill_ms"));
+        assert!(get("ttc.prefix_hit_rate") > 0.0, "TTC forks must hit the cache");
         // The routing sweep: same trace, same aggregate KV — cache-aware
         // routing must win the cross-replica prefix hit rate.
         assert!(get("fleet_ca.prefix_hit_rate") >= get("fleet_rr.prefix_hit_rate"));

@@ -8,9 +8,10 @@
 //!            [--max-batch B] [--closed-loop C] [--think-ms T]
 //!            [--model tiny|small|base] [--chunk C] [--kv-slots N]
 //!            [--kv-blocks N] [--block-tokens T] [--prefix-cache]
-//!            [--shared-prefix BYTES] [--require-hits]
+//!            [--kv-tier] [--kv-tier-blocks N] [--require-restores]
+//!            [--shared-prefix BYTES] [--require-hits] [--ttc N]
 //!            [--arrivals poisson|bursty|diurnal|flash-crowd] [--fanout K]
-//!            [--slo-ttft-ms X] [--queue-cap N] [--shed] [--require-shed]
+//!            [--slo-ttft-ms X] [--queue-cap SPEC] [--shed] [--require-shed]
 //!            [--replicas N] [--routing round-robin|least-loaded|cache-aware]
 //!            [--dispatch npu-only|cpu-only|auto] [--require-mixed]
 //!            [--bits 2|4] [--temp T] [--artifacts DIR] [--soc ...]
@@ -22,7 +23,17 @@
 //! `serve --closed-loop C --think-ms T` swaps the open-loop synthetic trace
 //! for a closed-loop population of C clients: each keeps exactly one
 //! request in flight and thinks T ms between completion and resubmission,
-//! until --requests N requests have been served.
+//! until --requests N requests have been served. Adding `--arrivals P`
+//! shapes the think-time draws with process P at the same mean; adding
+//! `--replicas N` partitions the client population statically across N
+//! replicas.
+//!
+//! `serve --kv-tier` attaches a simulated DDR/flash spill tier behind the
+//! paged pool (requires --prefix-cache): radix eviction spills cold blocks
+//! instead of dropping them, and prefix lookups fault them back, priced as
+//! DMA on the memory rail. `serve --ttc N` runs a best-of-N test-time-
+//! compute workload: every arrival forks into N siblings sharing the whole
+//! prompt, which the prefix cache serves as O(1) copy-on-write forks.
 //!
 //! Without the `pjrt` feature (or without built artifacts) the engine runs
 //! the pure-Rust reference backend; trained weights are picked up from
@@ -85,6 +96,31 @@ fn max_batch_from(args: &Args) -> Result<usize> {
     Ok(args.flags.get("max-batch").map(|s| s.parse()).transpose()?.unwrap_or(1))
 }
 
+/// Parse `--queue-cap`'s comma list: a bare number is the global unstarted-
+/// queue cap, a `PRIO=CAP` entry bounds one priority class. Examples:
+/// `--queue-cap 8` (global only), `--queue-cap 8,4=1` (global 8, class 4
+/// capped at 1), `--queue-cap 0=2,4=1` (class caps only).
+fn parse_queue_caps(spec: &str) -> Result<(Option<usize>, Vec<(u8, usize)>)> {
+    let mut global: Option<usize> = None;
+    let mut class_caps: Vec<(u8, usize)> = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        if let Some((prio, cap)) = part.split_once('=') {
+            let p: u8 = prio.trim().parse()?;
+            let c: usize = cap.trim().parse()?;
+            if class_caps.iter().any(|&(q, _)| q == p) {
+                bail!("--queue-cap lists class {p} twice");
+            }
+            class_caps.push((p, c));
+        } else {
+            if global.is_some() {
+                bail!("--queue-cap lists more than one global cap");
+            }
+            global = Some(part.parse()?);
+        }
+    }
+    Ok((global, class_caps))
+}
+
 /// Prefer the PJRT artifact engine when the feature is on and artifacts
 /// exist; otherwise run the pure-Rust reference backend.
 fn build_engine(args: &Args) -> Result<Engine> {
@@ -128,15 +164,27 @@ fn build_engine(args: &Args) -> Result<Engine> {
         args.flags.get("block-tokens").map(|s| s.parse()).transpose()?;
     let kv_blocks: Option<usize> = args.flags.get("kv-blocks").map(|s| s.parse()).transpose()?;
     let prefix_cache = args.flags.contains_key("prefix-cache");
-    if block_tokens.is_some() || kv_blocks.is_some() || prefix_cache {
+    // Tiered KV: --kv-tier attaches a DDR/flash spill tier behind the hot
+    // arena (default capacity 10× the hot block count, override with
+    // --kv-tier-blocks). The tier needs the paged pool, so it implies it.
+    let kv_tier = args.flags.contains_key("kv-tier") || args.flags.contains_key("kv-tier-blocks");
+    let tier_blocks: Option<usize> =
+        args.flags.get("kv-tier-blocks").map(|s| s.parse()).transpose()?;
+    if block_tokens.is_some() || kv_blocks.is_some() || prefix_cache || kv_tier {
         let bt = block_tokens.unwrap_or_else(|| chunk.max(1)).min(cfg.max_seq).max(1);
         let per_request = cfg.max_seq.div_ceil(bt);
         let blocks = kv_blocks.unwrap_or(kv_slots * per_request).max(1);
+        let mut kv = KvPoolConfig::paged(blocks, bt, prefix_cache);
+        let mut tier_note = String::new();
+        if kv_tier {
+            let warm = tier_blocks.unwrap_or(tman::kvtier::DEFAULT_TIER_FACTOR * blocks).max(1);
+            kv = kv.with_tier(warm);
+            tier_note = format!(", {warm}-block spill tier");
+        }
         eprintln!(
-            "[engine] paged KV: {blocks} blocks × {bt} tok/block{}",
+            "[engine] paged KV: {blocks} blocks × {bt} tok/block{}{tier_note}",
             if prefix_cache { ", prefix cache on" } else { "" }
         );
-        let kv = KvPoolConfig::paged(blocks, bt, prefix_cache);
         Engine::reference_paged(model, soc, chunk, bits, kv)
     } else {
         Engine::reference(model, soc, chunk, bits, kv_slots)
@@ -200,8 +248,13 @@ fn main() -> Result<()> {
             if let Some(ms) = slo_ms {
                 profile = profile.with_interactive_slo(ms * 1e3);
             }
+            let (queue_cap, class_caps) = match args.flags.get("queue-cap") {
+                Some(spec) => parse_queue_caps(spec)?,
+                None => (None, vec![]),
+            };
             let policy = OverloadPolicy {
-                queue_cap: args.flags.get("queue-cap").map(|s| s.parse()).transpose()?,
+                queue_cap,
+                class_caps,
                 shed: args.flags.contains_key("shed"),
             };
             let max_batch = max_batch_from(&args)?;
@@ -236,20 +289,48 @@ fn main() -> Result<()> {
             );
             // Arrival model: the legacy Poisson synthetic trace by default,
             // or a load-harness process (--arrivals) over the same mix.
-            let arrivals = args.flags.get("arrivals").cloned();
-            let fanout: usize =
-                args.flags.get("fanout").map(|s| s.parse()).transpose()?.unwrap_or(1);
+            let mut arrivals = args.flags.get("arrivals").cloned();
+            // Test-time compute: --ttc N forks every arrival into N
+            // best-of-N siblings sharing the whole prompt — the prefix
+            // cache turns the duplicate prefills into O(1) COW forks. It
+            // rides the load-harness fanout, so it implies --arrivals
+            // (poisson unless one was named).
+            let ttc: Option<usize> = args.flags.get("ttc").map(|s| s.parse()).transpose()?;
+            let fanout: usize = match ttc {
+                Some(k) => {
+                    anyhow::ensure!(k >= 1, "--ttc needs at least one sibling per arrival");
+                    if arrivals.is_none() {
+                        arrivals = Some("poisson".to_string());
+                    }
+                    k
+                }
+                None => args.flags.get("fanout").map(|s| s.parse()).transpose()?.unwrap_or(1),
+            };
+            // With --closed-loop, --arrivals names the think-time shape
+            // instead of an open-loop gap process: each client's think
+            // time is drawn from that process at the --think-ms mean.
+            let think_process = match (closed_loop, arrivals.as_deref()) {
+                (Some(_), Some(name)) => {
+                    Some(ArrivalProcess::from_name(name, think_ms * 1e3).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown arrival process {name} (poisson | bursty | diurnal | \
+                             flash-crowd)"
+                        )
+                    })?)
+                }
+                _ => None,
+            };
             // Multi-replica fleet: --replicas N (and/or --routing R) routes
             // the open-loop trace across N independent engine replicas.
             let replicas: usize =
                 args.flags.get("replicas").map(|s| s.parse()).transpose()?.unwrap_or(1);
             let routing_flag = args.flags.get("routing").cloned();
+            let think_shape = match (closed_loop, arrivals.as_deref()) {
+                (Some(_), Some(name)) => format!(", {name}-shaped think time"),
+                _ => String::new(),
+            };
             let fleet = if replicas > 1 || routing_flag.is_some() {
                 anyhow::ensure!(replicas >= 1, "--replicas must be at least 1");
-                anyhow::ensure!(
-                    closed_loop.is_none(),
-                    "--replicas routes open-loop traces; it cannot combine with --closed-loop"
-                );
                 let routing = match routing_flag.as_deref() {
                     None => RoutingPolicy::CacheAware,
                     Some(name) => RoutingPolicy::from_name(name).ok_or_else(|| {
@@ -263,47 +344,63 @@ fn main() -> Result<()> {
                 for _ in 1..replicas {
                     engines.push(build_engine(&args)?);
                 }
-                let trace = match arrivals.as_deref() {
-                    Some(name) => {
-                        let Some(process) = ArrivalProcess::from_name(name, profile.mean_gap_us)
-                        else {
-                            bail!(
-                                "unknown arrival process {name} (poisson | bursty | diurnal | \
-                                 flash-crowd)"
-                            )
-                        };
-                        LoadSpec::new(process, profile.clone()).with_fanout(fanout).trace(n, seed)
-                    }
-                    None => synthetic_trace(n, seed, &profile),
-                };
-                println!(
-                    "serving {n} requests across {} replicas ({} routing, {setup}) ...",
-                    engines.len(),
-                    routing.name()
-                );
                 let mut host = Fleet::new(engines, routing, opts)?;
-                let run = host.run(&trace)?;
+                let run = if let Some(concurrency) = closed_loop {
+                    // Closed-loop fleet: the client population is split
+                    // statically across replicas (clients are sticky),
+                    // so no router runs and nothing is stolen.
+                    println!(
+                        "serving {n} closed-loop requests across {replicas} replicas \
+                         ({concurrency} clients, think {think_ms} ms{think_shape}, {setup}) ..."
+                    );
+                    let cl = ClosedLoopOpts {
+                        total: n,
+                        concurrency,
+                        think_us: think_ms * 1e3,
+                        seed,
+                        think_process,
+                    };
+                    host.run_closed_loop(&cl, &profile)?
+                } else {
+                    let trace = match arrivals.as_deref() {
+                        Some(name) => {
+                            let Some(process) =
+                                ArrivalProcess::from_name(name, profile.mean_gap_us)
+                            else {
+                                bail!(
+                                    "unknown arrival process {name} (poisson | bursty | diurnal \
+                                     | flash-crowd)"
+                                )
+                            };
+                            LoadSpec::new(process, profile.clone())
+                                .with_fanout(fanout)
+                                .trace(n, seed)
+                        }
+                        None => synthetic_trace(n, seed, &profile),
+                    };
+                    println!(
+                        "serving {n} requests across {replicas} replicas ({} routing, {setup}) \
+                         ...",
+                        routing.name()
+                    );
+                    host.run(&trace)?
+                };
                 println!("{}", run.report());
                 run.merged
             } else {
                 let mut server = Server::new(engine, opts);
                 let fleet = match (closed_loop, arrivals) {
-                    (Some(_), Some(_)) => {
-                        bail!(
-                            "--arrivals shapes open-loop load; it cannot combine with \
-                             --closed-loop"
-                        )
-                    }
-                    (Some(concurrency), None) => {
+                    (Some(concurrency), _) => {
                         println!(
                             "serving {n} closed-loop requests ({concurrency} clients, think \
-                             {think_ms} ms, {setup}) ..."
+                             {think_ms} ms{think_shape}, {setup}) ..."
                         );
                         let cl = ClosedLoopOpts {
                             total: n,
                             concurrency,
                             think_us: think_ms * 1e3,
                             seed,
+                            think_process,
                         };
                         server.run_closed_loop(&cl, &profile)?
                     }
@@ -363,6 +460,36 @@ fn main() -> Result<()> {
                     "overload gate: {} shed + {} rejected of {} submitted, 0 admitted \
                      deadline misses",
                     fleet.shed, fleet.rejected, fleet.submitted
+                );
+            }
+            // CI gate for tier smokes: a run on a tiered pool under real
+            // memory pressure must actually spill cold blocks AND fault
+            // some of them back — a tier that never restores is dead
+            // weight, and one that never spills saw no pressure.
+            if args.flags.contains_key("require-restores") {
+                anyhow::ensure!(
+                    fleet.tier_capacity_blocks > 0,
+                    "--require-restores needs a spill tier (--kv-tier)"
+                );
+                anyhow::ensure!(
+                    fleet.tier_spills > 0,
+                    "--require-restores: nothing was spilled — the hot arena never filled \
+                     ({} warm blocks idle)",
+                    fleet.tier_capacity_blocks
+                );
+                anyhow::ensure!(
+                    fleet.tier_restores > 0,
+                    "--require-restores: {} spill(s) but no block was ever faulted back",
+                    fleet.tier_spills
+                );
+                println!(
+                    "tier gate: {} spill(s), {} restore(s) ({} B over {:.3} ms DMA), {} \
+                     GC-reclaimed",
+                    fleet.tier_spills,
+                    fleet.tier_restores,
+                    fleet.tier_restored_bytes,
+                    fleet.tier_restore_us / 1e3,
+                    fleet.tier_gc_reclaimed
                 );
             }
             // CI gate for dispatch smokes: under --dispatch auto the mixed
@@ -465,9 +592,14 @@ fn main() -> Result<()> {
                  \x20         request) --require-hits (fail unless the prefix\n\
                  \x20         cache hit)\n\
                  \x20         --arrivals poisson|bursty|diurnal|flash-crowd (load-\n\
-                 \x20         harness arrival process) --fanout K (siblings per\n\
-                 \x20         arrival) --slo-ttft-ms X (TTFT slack on interactive\n\
-                 \x20         requests) --queue-cap N (bounded admission queue)\n\
+                 \x20         harness arrival process; with --closed-loop it\n\
+                 \x20         shapes the think-time draws instead) --fanout K\n\
+                 \x20         (siblings per arrival) --ttc N (best-of-N test-time-\n\
+                 \x20         compute forks per arrival; implies --arrivals)\n\
+                 \x20         --slo-ttft-ms X (TTFT slack on interactive\n\
+                 \x20         requests) --queue-cap SPEC (bounded admission queue;\n\
+                 \x20         SPEC = N for a global cap and/or PRIO=CAP per-class\n\
+                 \x20         entries, comma-separated: 8,4=1)\n\
                  \x20         --shed (reject/shed past deadlines) --require-shed\n\
                  \x20         (fail unless work was dropped and no admitted\n\
                  \x20         request missed its deadline)\n\
@@ -486,7 +618,11 @@ fn main() -> Result<()> {
                  \x20         max-batch + 2) --bits 2|4 --artifacts DIR\n\
                  \x20         --kv-blocks N --block-tokens T --prefix-cache (paged\n\
                  \x20         KV; defaults: block = chunk, capacity = kv-slots ×\n\
-                 \x20         max_seq) --soc oneplus12|oneplus13t"
+                 \x20         max_seq) --kv-tier (DDR/flash spill tier behind the\n\
+                 \x20         paged pool; needs --prefix-cache) --kv-tier-blocks N\n\
+                 \x20         (tier capacity, default 10x the hot arena)\n\
+                 \x20         --require-restores (fail unless the tier spilled and\n\
+                 \x20         faulted blocks back) --soc oneplus12|oneplus13t"
             );
         }
     }

@@ -128,6 +128,15 @@ pub fn cpu_breakdown_energy_j(pm: &PowerModel, bd: &Breakdown) -> f64 {
     1e-6 * (pm.cpu_active_w * (bd.mem_us + bd.dq_us + bd.cmp_us) + pm.idle_w * bd.overhead_us)
 }
 
+/// Energy of a KV spill-tier restore: pure DMA traffic on the memory
+/// power rail for `us` microseconds — no dequantization, no compute. This
+/// is the price of converting a warm-tier capacity miss into a block copy
+/// instead of a re-prefill; the engine adds it to the request's prefill
+/// energy alongside the restore's clock time.
+pub fn dma_restore_energy_j(pm: &PowerModel, us: f64) -> f64 {
+    1e-6 * us * pm.npu_mem_w
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,6 +218,18 @@ mod tests {
         // latency-for-energy trade the dispatch metrics surface.
         assert!(cpu_breakdown_energy_j(&pm, &bd) > breakdown_energy_j(&pm, &bd));
         assert_eq!(cpu_breakdown_energy_j(&pm, &Breakdown::default()), 0.0);
+    }
+
+    #[test]
+    fn dma_restore_prices_on_the_memory_rail_only() {
+        let pm = PowerModel::sd8gen3();
+        let want = 1e-6 * 40.0 * pm.npu_mem_w;
+        assert!((dma_restore_energy_j(&pm, 40.0) - want).abs() < 1e-15);
+        // A restore is strictly cheaper than the same microseconds of
+        // active compute — the whole point of the warm tier.
+        let cmp = Breakdown { cmp_us: 40.0, ..Default::default() };
+        assert!(dma_restore_energy_j(&pm, 40.0) < breakdown_energy_j(&pm, &cmp));
+        assert_eq!(dma_restore_energy_j(&pm, 0.0), 0.0);
     }
 
     #[test]

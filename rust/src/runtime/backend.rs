@@ -176,6 +176,14 @@ impl ReferenceBackend {
         self.pool.release(id);
     }
 
+    /// Publish `id`'s whole-block prompt history into the prefix cache
+    /// mid-flight (at prefill-complete) without releasing its table.
+    /// Returns the number of blocks newly adopted by the index (0 with the
+    /// cache off — the pool treats it as a no-op).
+    pub fn publish_prefix(&mut self, id: u64) -> Result<usize> {
+        self.pool.publish_prefix(id)
+    }
+
     /// The request's prompt tokens served from the prefix cache at
     /// admission.
     pub fn cached_tokens(&self, id: u64) -> usize {
@@ -352,6 +360,20 @@ impl Backend {
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => {
                 let _ = id;
+            }
+        }
+    }
+
+    /// Publish a request's prompt blocks into the prefix cache at
+    /// prefill-complete (no-op on the PJRT backend — one device cache, no
+    /// sharing).
+    pub fn publish_request_prefix(&mut self, id: u64) -> Result<usize> {
+        match self {
+            Backend::Reference(b) => b.publish_prefix(id),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => {
+                let _ = id;
+                Ok(0)
             }
         }
     }

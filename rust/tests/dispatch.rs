@@ -174,7 +174,7 @@ fn prop_auto_with_queue_cap_and_shedding_balances_the_ledger() {
         let opts = ServeOpts {
             max_batch: 2,
             dispatch: DispatchMode::Auto,
-            policy: OverloadPolicy { queue_cap: Some(cap), shed: true },
+            policy: OverloadPolicy { queue_cap: Some(cap), class_caps: vec![], shed: true },
             ..Default::default()
         };
         let mut server = Server::new(engine_seeded(42, 16, 2, 4), opts);

@@ -71,7 +71,7 @@ fn terminal_accounting_holds_across_processes_and_policies() {
             for seed in [1u64, 2] {
                 let trace =
                     LoadSpec::new(process.clone(), TraceProfile::tiny()).trace(16, seed);
-                let policy = OverloadPolicy { queue_cap: Some(2), shed: true };
+                let policy = OverloadPolicy { queue_cap: Some(2), class_caps: vec![], shed: true };
                 let run = run_fleet(contended_engines(), routing, policy, &trace);
                 let m = &run.merged;
                 let ctx = format!("{process:?} / {} / seed {seed}", routing.name());
@@ -121,6 +121,39 @@ fn same_seed_and_policy_reproduce_the_fleet_snapshot() {
         assert_eq!(a.router_rejected, b.router_rejected, "{}", routing.name());
         assert_eq!(a.report(), b.report(), "{} snapshot must reproduce", routing.name());
     }
+}
+
+/// Closed-loop fleet serving: the client population and request budget
+/// are partitioned statically across replicas (closed-loop clients are
+/// sticky to the replica that serves them), every replica drains its
+/// share, and the merged view accounts for the whole budget — the
+/// restriction the router used to place on `--closed-loop` is gone.
+#[test]
+fn closed_loop_fleet_partitions_clients_and_serves_the_budget() {
+    use tman::coordinator::server::ClosedLoopOpts;
+    let opts = ClosedLoopOpts {
+        total: 12,
+        concurrency: 4,
+        think_us: 200.0,
+        seed: 5,
+        think_process: None,
+    };
+    let serve = ServeOpts { max_batch: 2, ..Default::default() };
+    let run = || {
+        Fleet::new(contended_engines(), RoutingPolicy::RoundRobin, serve.clone())
+            .expect("fleet")
+            .run_closed_loop(&opts, &TraceProfile::tiny())
+            .expect("closed-loop fleet run")
+    };
+    let a = run();
+    assert_eq!(a.merged.submitted, 12, "the full budget is issued");
+    assert_eq!(a.merged.completions.len(), 12, "no policy active: everything completes");
+    let per_replica: Vec<usize> = a.replicas.iter().map(|r| r.metrics.submitted).collect();
+    assert_eq!(per_replica, vec![4, 4, 4], "the budget splits evenly over 3 replicas");
+    assert_eq!(a.steals, 0, "closed-loop clients are sticky — nothing to steal");
+    assert_eq!(a.router_rejected, 0);
+    let b = run();
+    assert_eq!(a.report(), b.report(), "closed-loop fleet runs must reproduce");
 }
 
 /// The router's reason to exist: on traffic whose prompts fall into a

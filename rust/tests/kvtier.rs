@@ -1,0 +1,310 @@
+//! Tiered-KV property suite: the DDR/flash spill tier behind the paged
+//! pool must move blocks without ever touching numerics. Covers the
+//! manifest/audit discipline under fuzzed op sequences, bit-identical
+//! spill → fault-back round trips through the pool, the test-time-compute
+//! fork pattern (mid-flight publish + refcount sharing + COW divergence),
+//! whole-deployment drain, and the end-to-end tier-on/off / cache-on/off
+//! output-identity contract through the serving loop.
+
+use std::collections::HashSet;
+
+use tman::coordinator::engine::Engine;
+use tman::coordinator::server::{synthetic_trace, ServeOpts, Server, TraceProfile};
+use tman::kvpool::{prefix_block_keys, KvPoolConfig, PagedKvPool};
+use tman::kvtier::{SpillTier, TierOp, DEFAULT_TIER_FACTOR};
+use tman::load::{ArrivalProcess, LoadSpec};
+use tman::model::config::ModelConfig;
+use tman::model::KvLanes;
+use tman::model::weights::random_transformer;
+use tman::npu::config::SocConfig;
+use tman::util::Rng;
+
+const BT: usize = 16;
+const POOL_SEQ: usize = 64;
+
+fn tiny_pool(hot_blocks: usize, tier_blocks: Option<usize>) -> PagedKvPool {
+    let cfg = ModelConfig::tiny();
+    let mut kv = KvPoolConfig::paged(hot_blocks, BT, true);
+    if let Some(t) = tier_blocks {
+        kv = kv.with_tier(t);
+    }
+    PagedKvPool::new(&cfg, POOL_SEQ, kv)
+}
+
+/// Deterministic prompt tokens inside the tiny vocab.
+fn prompt(tag: usize, len: usize) -> Vec<usize> {
+    (0..len).map(|i| (tag * 97 + i * 7 + 13) % 251).collect()
+}
+
+/// Write positions `start..toks.len()` of `id` through the lane view with
+/// rows that are a pure function of (token, layer, position) — so any COW
+/// slip or restore corruption changes a fingerprint.
+fn write_positions(pool: &mut PagedKvPool, id: u64, toks: &[usize], start: usize) {
+    let cfg = ModelConfig::tiny();
+    let (n_layers, dkv) = (cfg.n_layers, cfg.d_kv());
+    pool.note_tokens(id, start, &toks[start..]).expect("contiguous token record");
+    for pos in start..toks.len() {
+        let mut lanes = pool.lanes(&[id]).expect("lane view");
+        for layer in 0..n_layers {
+            let krow: Vec<f32> =
+                (0..dkv).map(|i| (toks[pos] * 31 + pos * 7 + layer * 3 + i) as f32).collect();
+            let vrow: Vec<f32> = krow.iter().map(|x| -x).collect();
+            lanes.append(0, layer, pos, &krow, &vrow);
+        }
+    }
+}
+
+/// Fuzzed tier op sequences: random spills, restores, GC passes against a
+/// random hot set, and whole-tier clears — with the manifest replay audit
+/// re-run after every single op, across seeds.
+#[test]
+fn fuzzed_tier_ops_keep_the_manifest_replayable() {
+    for seed in [1u64, 2, 3] {
+        let mut rng = Rng::new(0x7137 ^ seed);
+        let capacity = 2 + rng.below(6);
+        let mut t = SpillTier::new(capacity);
+        for step in 0..200 {
+            let key = 1 + rng.below(12) as u64;
+            match rng.below(10) {
+                0..=5 => {
+                    let toks = vec![rng.below(251), rng.below(251)];
+                    let payload: Vec<f32> = (0..4).map(|i| (step * 4 + i) as f32).collect();
+                    t.spill(key, Some(key + 100), toks, payload.clone(), payload, step as u64, 64);
+                }
+                6..=7 => {
+                    // Restores may miss (wrong key or tokens) — a miss must
+                    // leave the tier untouched.
+                    let before = t.stats();
+                    let hit = t.restore(key, &[rng.below(251), rng.below(251)]);
+                    if hit.is_none() {
+                        assert_eq!(t.stats(), before, "a missed restore must be a no-op");
+                    }
+                }
+                8 => {
+                    let hot: HashSet<u64> =
+                        (0..rng.below(4)).map(|_| 1 + rng.below(12) as u64).collect();
+                    t.gc(&hot);
+                }
+                _ => t.clear(),
+            }
+            assert!(t.resident_blocks() <= capacity, "seed {seed} step {step}: over capacity");
+            t.audit();
+        }
+        // Replay sanity on the final manifest: a full replay (a re-spill
+        // supersedes, every removal op kills exactly one live key) must
+        // reconstruct the resident set.
+        let mut live: HashSet<u64> = HashSet::new();
+        for r in t.manifest() {
+            match r.op {
+                TierOp::Spill => {
+                    live.insert(r.key);
+                }
+                TierOp::Restore | TierOp::Drop | TierOp::Gc => {
+                    assert!(live.remove(&r.key), "seed {seed}: removal of a never-live key");
+                }
+            }
+        }
+        assert_eq!(live.len(), t.resident_blocks(), "seed {seed}: manifest vs residency");
+    }
+}
+
+/// The tier round trip through the pool: evicting a published prefix
+/// spills it, a later lookup faults it back into a fresh hot block with a
+/// bit-identical fingerprint, and the prefix hit resumes at the restored
+/// boundary.
+#[test]
+fn evicted_prefix_faults_back_bit_identical() {
+    // 4 hot blocks so a second 3-block prompt forces radix eviction.
+    let mut pool = tiny_pool(4, Some(4 * DEFAULT_TIER_FACTOR));
+    let a = prompt(1, 48);
+    pool.begin(1, &a, 48).expect("admit a");
+    write_positions(&mut pool, 1, &a, 0);
+    let a_blocks = pool.request_blocks(1).expect("a holds blocks");
+    let fp_a1 = pool.block_fingerprint(a_blocks[1]);
+    pool.release(1);
+    pool.debug_validate();
+    assert_eq!(pool.tier_stats().spills, 0, "no pressure yet: nothing spilled");
+
+    // A disjoint prompt overflows the arena: the radix evicts a's cold
+    // blocks leaf-first and the tier catches them.
+    let b = prompt(2, 48);
+    pool.begin(2, &b, 48).expect("admit b");
+    write_positions(&mut pool, 2, &b, 0);
+    pool.release(2);
+    pool.debug_validate();
+    let spilled = pool.tier_stats();
+    assert!(spilled.spills >= 2, "eviction under pressure must spill ({spilled:?})");
+    assert!(spilled.resident_blocks > 0);
+
+    // Re-admitting a's prompt faults the spilled chain back: the hit
+    // extends past the still-resident root, and the restored block's
+    // contents fingerprint-match the original exactly.
+    let hit = pool.begin(3, &a, 48).expect("re-admit a");
+    pool.debug_validate();
+    let restored = pool.tier_stats();
+    assert!(restored.restores >= 1, "the lookup must fault spilled blocks back");
+    assert!(restored.restored_bytes > 0);
+    assert!(hit >= 2 * BT, "restore must extend the hit past the resident root (hit {hit})");
+    let a_again = pool.request_blocks(3).expect("a holds blocks again");
+    assert_eq!(
+        pool.block_fingerprint(a_again[1]),
+        fp_a1,
+        "a restored block must be bit-identical to the spilled original"
+    );
+    // Restore is MOVE semantics: the faulted entries left the tier (the
+    // fault itself may spill a victim to make room, so residency nets out
+    // rather than shrinking — but the manifest shows the movement).
+    assert!(
+        pool.tier_manifest_len() > spilled.spills,
+        "the restore and its eviction must extend the manifest"
+    );
+    assert_eq!(prefix_block_keys(&a[..2 * BT], BT).len(), 2, "two whole-block keys cover the hit");
+
+    // Drain everything: releasing the request and clearing the prefix
+    // index must empty the arena AND the tier.
+    pool.release(3);
+    pool.clear_prefix_index();
+    pool.debug_validate();
+    assert_eq!(pool.blocks_in_use(), 0, "arena must drain to empty");
+    assert_eq!(pool.requests_in_use(), 0);
+    assert_eq!(pool.tier_stats().resident_blocks, 0, "tier must drain to empty");
+}
+
+/// The test-time-compute fork pattern at the pool level: a parent
+/// publishes its prompt mid-flight (before release), N forks admit the
+/// same prompt and share the parent's physical blocks by refcount, and
+/// each fork diverges only through COW — the shared blocks' fingerprints
+/// never change.
+#[test]
+fn ttc_forks_share_prefork_blocks_and_diverge_by_cow() {
+    let mut pool = tiny_pool(32, Some(32 * DEFAULT_TIER_FACTOR));
+    let shared = prompt(7, 48);
+    pool.begin(1, &shared, 56).expect("admit parent");
+    write_positions(&mut pool, 1, &shared, 0);
+    // Mid-flight publish at prefill-complete: the parent keeps its table
+    // (it is still "decoding") while its whole prompt blocks go shareable.
+    let adopted = pool.publish_prefix(1).expect("publish");
+    assert_eq!(adopted, 48 / BT, "every whole prompt block goes into the index");
+    assert_eq!(pool.publish_prefix(1).expect("republish"), 0, "publish is idempotent");
+    pool.debug_validate();
+
+    let parent_blocks = pool.request_blocks(1).expect("parent holds blocks");
+    let parent_fps: Vec<u64> =
+        parent_blocks.iter().map(|&b| pool.block_fingerprint(b)).collect();
+
+    // Three forks: O(1) admission against the published prompt.
+    for fork in 2u64..=4 {
+        let hit = pool.begin(fork, &shared, 56).expect("admit fork");
+        assert_eq!(hit, 47, "forks hit all but the recomputed last position");
+        assert_eq!(pool.cached_of(fork), Some(47));
+        let fb = pool.request_blocks(fork).expect("fork holds blocks");
+        assert_eq!(fb, parent_blocks, "pre-divergence forks share every physical block");
+    }
+    pool.debug_validate();
+
+    // Each fork writes its own continuation from the hit boundary: the
+    // first write lands in the shared tail block, which must COW.
+    for fork in 2u64..=4 {
+        let cont: Vec<usize> = (47..52).map(|i| (fork as usize * 31 + i * 11) % 251).collect();
+        let mut toks = shared[..47].to_vec();
+        toks.extend_from_slice(&cont);
+        write_positions(&mut pool, fork, &toks, 47);
+    }
+    pool.debug_validate();
+    let after: Vec<Vec<usize>> =
+        (2u64..=4).map(|f| pool.request_blocks(f).expect("fork blocks")).collect();
+    for (i, fb) in after.iter().enumerate() {
+        assert_eq!(&fb[..2], &parent_blocks[..2], "fork {i}: pre-fork blocks stay shared");
+        assert_ne!(fb[2], parent_blocks[2], "fork {i}: the divergent block must be a COW copy");
+    }
+    assert_ne!(after[0][2], after[1][2], "forks diverge into distinct copies");
+    assert_ne!(after[1][2], after[2][2], "forks diverge into distinct copies");
+    assert_eq!(
+        parent_fps,
+        parent_blocks.iter().map(|&b| pool.block_fingerprint(b)).collect::<Vec<_>>(),
+        "COW must never mutate the parent's (shared) blocks"
+    );
+
+    // Full drain: every table out, index cleared — arena and tier empty.
+    for id in 1u64..=4 {
+        pool.release(id);
+    }
+    pool.clear_prefix_index();
+    pool.debug_validate();
+    assert_eq!(pool.blocks_in_use(), 0);
+    assert_eq!(pool.tier_stats().resident_blocks, 0);
+}
+
+fn serving_engine(prefix_cache: bool, tier: bool, hot_blocks: usize) -> Engine {
+    let model = random_transformer(&ModelConfig::tiny(), 7);
+    let mut kv = KvPoolConfig::paged(hot_blocks, 16, prefix_cache);
+    if tier {
+        kv = kv.with_tier(DEFAULT_TIER_FACTOR * hot_blocks);
+    }
+    Engine::reference_paged(model, SocConfig::oneplus12(), 16, 4, kv).expect("engine")
+}
+
+/// The end-to-end identity contract: the same trace must produce
+/// byte-identical completions whether the deployment runs without a
+/// prefix cache (generous memory), with the cache on a tight arena, or
+/// with the cache plus the spill tier — caching and tiering change
+/// placement and pricing, never logits.
+#[test]
+fn tier_on_off_and_cache_on_off_outputs_are_byte_identical() {
+    let max_seq = ModelConfig::tiny().max_seq;
+    let trace = synthetic_trace(48, 0xBEEF, &TraceProfile::tiny().with_shared_prefix(64));
+    let tight = 2 * max_seq / 16;
+    let arms = [
+        (false, false, 6 * max_seq / 16), // no cache, generous arena
+        (true, false, tight),             // cache, tight arena, evict = drop
+        (true, true, tight),              // cache + spill tier, same arena
+    ];
+    let mut texts: Vec<Vec<(u64, String)>> = Vec::new();
+    for (prefix_cache, tier, blocks) in arms {
+        let opts = ServeOpts { max_batch: 4, ..Default::default() };
+        let mut server = Server::new(serving_engine(prefix_cache, tier, blocks), opts);
+        let fleet = server.run(&trace).expect("serve");
+        assert_eq!(fleet.completions.len(), trace.len(), "everything completes");
+        assert_eq!(server.engine().kv_slots_in_use(), 0, "every terminal path releases KV");
+        if tier {
+            assert!(fleet.tier_spills > 0, "the tight arena must spill under this trace");
+            assert!(fleet.tier_restores > 0, "spilled prefixes must fault back");
+            assert!(fleet.tier_restore_us > 0.0, "restores are priced as DMA time");
+        } else {
+            assert_eq!(fleet.tier_spills, 0);
+            assert_eq!(fleet.tier_restore_us, 0.0);
+        }
+        let mut t: Vec<(u64, String)> =
+            fleet.completions.iter().map(|c| (c.id, c.text.clone())).collect();
+        t.sort();
+        texts.push(t);
+    }
+    assert_eq!(texts[0], texts[1], "prefix caching must not change any output");
+    assert_eq!(texts[1], texts[2], "the spill tier must not change any output");
+}
+
+/// The `--ttc` workload through the serving loop on a warm tiered engine:
+/// best-of-N siblings of every arrival hit the (mid-flight published)
+/// shared prompt, the run completes, and the tier line shows up in the
+/// fleet report.
+#[test]
+fn ttc_fanout_serves_on_the_tiered_engine() {
+    let max_seq = ModelConfig::tiny().max_seq;
+    let spec = LoadSpec::new(
+        ArrivalProcess::Poisson { mean_gap_us: 500.0 },
+        TraceProfile::tiny().with_shared_prefix(64),
+    )
+    .with_fanout(4);
+    let opts = ServeOpts { max_batch: 4, ..Default::default() };
+    let mut server = Server::new(serving_engine(true, true, 2 * max_seq / 16), opts);
+    let fleet = server.run(&spec.trace(32, 6)).expect("serve");
+    assert_eq!(fleet.completions.len(), 32, "no policy active: everything completes");
+    assert_eq!(server.engine().kv_slots_in_use(), 0);
+    assert!(
+        fleet.prefix_hits > 0,
+        "TTC siblings must hit the shared prompt ({} lookups)",
+        fleet.prefix_lookups
+    );
+    assert!(fleet.tier_capacity_blocks > 0);
+    assert!(fleet.report().contains("KV spill tier"), "the report must surface the tier");
+}

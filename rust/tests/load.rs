@@ -62,7 +62,7 @@ fn accounting_invariant_holds_under_randomized_overload() {
     // across seeds. The serving loop also cross-checks this after every
     // work item; this test pins the external contract.
     let n = 16;
-    let policy = OverloadPolicy { queue_cap: Some(2), shed: true };
+    let policy = OverloadPolicy { queue_cap: Some(2), class_caps: vec![], shed: true };
     for process in all_processes() {
         for seed in [1u64, 2] {
             let spec = LoadSpec::new(process.clone(), TraceProfile::tiny()).with_slo(1_500.0);
@@ -94,7 +94,7 @@ fn each_policy_knob_alone_keeps_the_books() {
         &spec,
         16,
         3,
-        OverloadPolicy { queue_cap: Some(1), shed: false },
+        OverloadPolicy { queue_cap: Some(1), class_caps: vec![], shed: false },
         contended_engine(),
     );
     assert_eq!(capped.completions.len() + capped.shed + capped.rejected, capped.submitted);
@@ -107,7 +107,7 @@ fn each_policy_knob_alone_keeps_the_books() {
         &spec,
         16,
         3,
-        OverloadPolicy { queue_cap: None, shed: true },
+        OverloadPolicy { queue_cap: None, class_caps: vec![], shed: true },
         contended_engine(),
     );
     assert_eq!(shed.completions.len() + shed.shed + shed.rejected, shed.submitted);
@@ -115,11 +115,37 @@ fn each_policy_knob_alone_keeps_the_books() {
 }
 
 #[test]
+fn per_class_queue_caps_reject_only_the_capped_class() {
+    // A class cap bounds one priority's unstarted queue depth without
+    // touching the others, and every class-cap rejection lands in the
+    // per-class rejection ledger.
+    let spec = LoadSpec::new(ArrivalProcess::flash_crowd(250.0), TraceProfile::tiny());
+    let uncapped = serve(&spec, 24, 4, OverloadPolicy::default(), contended_engine());
+    assert_eq!(uncapped.rejected, 0, "no caps: nothing is rejected");
+    // Cap the batch class (priority 4, the long-document requests) at one
+    // queued request; leave the interactive class unbounded.
+    let policy =
+        OverloadPolicy { queue_cap: None, class_caps: vec![(4, 1)], shed: false };
+    let capped = serve(&spec, 24, 4, policy, contended_engine());
+    assert_eq!(
+        capped.completions.len() + capped.shed + capped.rejected,
+        capped.submitted,
+        "terminal accounting survives class caps"
+    );
+    assert!(capped.rejected > 0, "a flash crowd must overflow a 1-deep class queue");
+    let ledger: usize = capped.rejected_by_priority.iter().map(|&(_, c)| c).sum();
+    assert_eq!(ledger, capped.rejected, "per-class rejections must sum to the total");
+    for &(p, c) in &capped.rejected_by_priority {
+        assert_eq!(p, 4, "only the capped class may be rejected, saw p{p} x{c}");
+    }
+}
+
+#[test]
 fn serving_a_load_spec_is_deterministic_end_to_end() {
     let spec = LoadSpec::new(ArrivalProcess::bursty(300.0), TraceProfile::tiny())
         .with_slo(2_000.0)
         .with_fanout(2);
-    let policy = OverloadPolicy { queue_cap: Some(3), shed: true };
+    let policy = OverloadPolicy { queue_cap: Some(3), class_caps: vec![], shed: true };
     let a = serve(&spec, 12, 9, policy.clone(), contended_engine());
     let b = serve(&spec, 12, 9, policy, contended_engine());
     assert_eq!(a.report(), b.report(), "same spec + seed must replay exactly");

@@ -446,7 +446,8 @@ fn closed_loop_bounds_the_requests_in_flight() {
     // requests alive at once — the whole point of the load model — while
     // still serving the full request budget.
     let mut server = Server::new(engine_with(16, 4), ServeOpts::default());
-    let opts = ClosedLoopOpts { total: 10, concurrency: 2, think_us: 500.0, seed: 3 };
+    let opts =
+        ClosedLoopOpts { total: 10, concurrency: 2, think_us: 500.0, seed: 3, think_process: None };
     let fleet = server.run_closed_loop(&opts, &TraceProfile::tiny()).expect("serve");
     assert_eq!(fleet.completions.len(), 10, "every issued request must complete");
 
@@ -474,7 +475,8 @@ fn closed_loop_bounds_the_requests_in_flight() {
 #[test]
 fn single_client_closed_loop_serializes_with_exact_think_time() {
     let mut server = Server::new(engine_with(16, 3), ServeOpts::default());
-    let opts = ClosedLoopOpts { total: 5, concurrency: 1, think_us: 250.0, seed: 9 };
+    let opts =
+        ClosedLoopOpts { total: 5, concurrency: 1, think_us: 250.0, seed: 9, think_process: None };
     let fleet = server.run_closed_loop(&opts, &TraceProfile::tiny()).expect("serve");
     assert_eq!(fleet.completions.len(), 5);
     // One client: each next request arrives exactly think_us after the
@@ -534,7 +536,7 @@ fn shedding_makes_admitted_deadlines_unmissable() {
     // whose tail misses.
     let opts = |shed: bool| ServeOpts {
         max_batch: 2,
-        policy: OverloadPolicy { queue_cap: None, shed },
+        policy: OverloadPolicy { queue_cap: None, class_caps: vec![], shed },
         ..Default::default()
     };
     let base = Server::new(engine_with(16, 4), opts(false))
@@ -581,7 +583,7 @@ fn bounded_queue_displaces_low_priority_and_rejects_overflow() {
         });
     }
     let serve = ServeOpts {
-        policy: OverloadPolicy { queue_cap: Some(2), shed: false },
+        policy: OverloadPolicy { queue_cap: Some(2), class_caps: vec![], shed: false },
         ..Default::default()
     };
     let mut server = Server::new(engine_with(16, 4), serve);
@@ -601,9 +603,10 @@ fn closed_loop_clients_return_after_rejection() {
     // A 1-deep queue under 3 clients: some submissions are turned away.
     // The rejected client must re-enter its think loop (the run would
     // deadlock otherwise) and the accounting must balance at the budget.
-    let opts = ClosedLoopOpts { total: 12, concurrency: 3, think_us: 100.0, seed: 5 };
+    let opts =
+        ClosedLoopOpts { total: 12, concurrency: 3, think_us: 100.0, seed: 5, think_process: None };
     let serve = ServeOpts {
-        policy: OverloadPolicy { queue_cap: Some(1), shed: false },
+        policy: OverloadPolicy { queue_cap: Some(1), class_caps: vec![], shed: false },
         ..Default::default()
     };
     let fleet = Server::new(engine_with(16, 4), serve)
@@ -615,8 +618,47 @@ fn closed_loop_clients_return_after_rejection() {
 }
 
 #[test]
+fn shaped_think_time_composes_with_the_closed_loop() {
+    // `think_process` draws each client's think gap from an arrival
+    // process instead of the deterministic constant. The shaped loop must
+    // still serve the full budget, replay exactly under its seed, and
+    // actually perturb the schedule relative to the unshaped loop —
+    // while `None` keeps the legacy constant-think behavior.
+    use tman::load::ArrivalProcess;
+    let mk = |p: Option<ArrivalProcess>| ClosedLoopOpts {
+        total: 8,
+        concurrency: 2,
+        think_us: 400.0,
+        seed: 11,
+        think_process: p,
+    };
+    let run = |p: Option<ArrivalProcess>| {
+        Server::new(engine_with(16, 4), ServeOpts::default())
+            .run_closed_loop(&mk(p), &TraceProfile::tiny())
+            .expect("serve")
+    };
+    let plain = run(None);
+    let shaped = run(Some(ArrivalProcess::bursty(400.0)));
+    let replay = run(Some(ArrivalProcess::bursty(400.0)));
+    assert_eq!(plain.completions.len(), 8);
+    assert_eq!(shaped.completions.len(), 8, "shaping must not lose requests");
+    for (x, y) in shaped.completions.iter().zip(&replay.completions) {
+        assert_eq!(x.id, y.id, "shaped runs must replay under their seed");
+        assert_eq!(x.text, y.text);
+        assert_eq!(x.arrival_us, y.arrival_us);
+    }
+    assert!(
+        shaped.completions.iter().zip(&plain.completions).any(|(s, p)| {
+            s.arrival_us != p.arrival_us
+        }),
+        "bursty think gaps must perturb the constant-think schedule"
+    );
+}
+
+#[test]
 fn closed_loop_runs_are_deterministic() {
-    let opts = ClosedLoopOpts { total: 8, concurrency: 3, think_us: 100.0, seed: 7 };
+    let opts =
+        ClosedLoopOpts { total: 8, concurrency: 3, think_us: 100.0, seed: 7, think_process: None };
     let run = || {
         let mut server = Server::new(engine_with(16, 5), ServeOpts::default());
         server.run_closed_loop(&opts, &TraceProfile::tiny()).expect("serve")
