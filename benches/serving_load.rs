@@ -22,6 +22,7 @@ use tman::load::{ArrivalProcess, LoadSpec};
 use tman::model::config::ModelConfig;
 use tman::model::weights::random_transformer;
 use tman::npu::config::SocConfig;
+use tman::trace::{self, Tracer};
 
 fn main() {
     let requests = 48usize;
@@ -328,6 +329,40 @@ fn main() {
          crowd's tail.",
         slack_us / 1e3
     );
+
+    banner(
+        "trace audit — the shed arm re-run with the tracer on: the auditor must \
+         re-derive every headline metric from events bit-for-bit, and tracing \
+         must not perturb the schedule, logits or report",
+    );
+    let shed_opts = || ServeOpts {
+        max_batch: 4,
+        policy: OverloadPolicy { queue_cap: None, class_caps: vec![], shed: true },
+        ..Default::default()
+    };
+    let untraced = Server::new(crowd_engine(), shed_opts()).run(&crowd_trace).expect("serve");
+    let mut tracer = Tracer::bounded(trace::DEFAULT_TRACE_CAP);
+    let traced = Server::new(crowd_engine(), shed_opts())
+        .run_traced(&crowd_trace, &mut tracer)
+        .expect("traced serve");
+    assert_eq!(
+        untraced.report(),
+        traced.report(),
+        "the tracer is a pure observer: reports must be byte-identical"
+    );
+    assert_eq!(
+        untraced.completions.iter().map(|c| c.text.as_str()).collect::<Vec<_>>(),
+        traced.completions.iter().map(|c| c.text.as_str()).collect::<Vec<_>>(),
+        "the tracer is a pure observer: decoded texts must be byte-identical"
+    );
+    let audit =
+        trace::audit::verify(&tracer, &traced).expect("auditor must match live counters");
+    println!("{}", audit.headline());
+    println!("{}", trace::summary(&tracer, 3));
+    let json = trace::perfetto::export(&tracer);
+    let checked = trace::perfetto::check(&json).expect("exported trace must validate");
+    assert!(checked.events > 0, "the shed arm must export a non-empty trace");
+    assert!(checked.tracks >= 2, "lifecycle and at least one rail track expected");
 
     banner(
         "fleet routing sweep — 3 prefix-cache replicas at equal aggregate KV \

@@ -704,6 +704,16 @@ impl Engine {
         self.backend.kv_stats()
     }
 
+    /// Toggle the KV pool's event journal (tracing only; off by default).
+    pub fn set_kv_journal(&mut self, on: bool) {
+        self.backend.set_kv_journal(on);
+    }
+
+    /// Take all KV events journaled since the last drain.
+    pub fn drain_kv_journal(&mut self) -> Vec<crate::trace::KvEvent> {
+        self.backend.drain_kv_journal()
+    }
+
     /// Explicit routing decision for a prefill slice of length `len`:
     /// exactly one planned chunk takes the matrix path; anything else — the
     /// ragged remainder of a prompt, or a deployment without a prefill

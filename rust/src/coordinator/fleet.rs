@@ -54,6 +54,7 @@ use crate::coordinator::metrics::FleetMetrics;
 use crate::coordinator::server::{ClosedLoopOpts, ServeOpts, Server, TraceProfile, TraceRequest};
 use crate::kvpool::prefix_block_keys;
 use crate::model::tokenizer;
+use crate::trace::{TraceEvent, Tracer};
 use anyhow::{ensure, Result};
 use std::collections::HashSet;
 
@@ -357,6 +358,14 @@ impl Fleet {
     /// Serve an open-loop trace across the fleet: route every arrival,
     /// run each replica's serving loop on its assigned sub-trace, merge.
     pub fn run(&mut self, trace: &[TraceRequest]) -> Result<FleetRun> {
+        self.run_traced(trace, &mut Tracer::off())
+    }
+
+    /// [`Fleet::run`] with a [`Tracer`]: router decisions (score
+    /// breakdown, steals, fleet-level rejections) land on each replica's
+    /// router track, and every replica's serving loop records into a
+    /// child tracer absorbed back in replica order.
+    pub fn run_traced(&mut self, trace: &[TraceRequest], tracer: &mut Tracer) -> Result<FleetRun> {
         let n = self.replicas.len();
         let mut ordered: Vec<TraceRequest> = trace.to_vec();
         ordered.sort_by(|a, b| {
@@ -384,6 +393,9 @@ impl Fleet {
                 let cap = cap.max(1);
                 if state.iter().all(|s| s.unstarted_depth(now) >= cap) {
                     router_rejected += 1;
+                    if tracer.on() {
+                        tracer.record_at(0, TraceEvent::RouterReject { id: t.id, at_us: now });
+                    }
                     continue;
                 }
             }
@@ -427,6 +439,30 @@ impl Fleet {
             let est = self.est_us(prompt.len() - cached, t.max_new_tokens);
             let affine = matched[chosen] > 0
                 || keys.last().is_some_and(|&kl| home_replica(kl, n) == chosen);
+            if tracer.on() {
+                // The chosen replica's score breakdown (CacheAware's
+                // `load − saved − sticky`; the same terms are still
+                // meaningful diagnostics under the other policies).
+                // Captured before `enqueue` moves the virtual clock.
+                let saved_us =
+                    (matched[chosen] * self.block_tokens) as f64 * self.prefill_us_per_tok;
+                let sticky_us = if keys.last().is_some_and(|&kl| home_replica(kl, n) == chosen) {
+                    (keys.len() * self.block_tokens) as f64 * self.prefill_us_per_tok
+                } else {
+                    0.0
+                };
+                tracer.record_at(
+                    chosen,
+                    TraceEvent::Route {
+                        id: t.id,
+                        replica: chosen,
+                        at_us: now,
+                        load_us: state[chosen].load_us(now),
+                        saved_us,
+                        sticky_us,
+                    },
+                );
+            }
             assignment[idx] = Some(chosen);
             state[chosen].routed += 1;
             state[chosen].enqueue(now, idx, est, affine);
@@ -459,6 +495,17 @@ impl Fleet {
                         state[target].stolen_in += 1;
                         state[target].enqueue(now, q.trace_idx, q.est_us, false);
                         steals += 1;
+                        if tracer.on() {
+                            tracer.record_at(
+                                target,
+                                TraceEvent::Steal {
+                                    id: ordered[q.trace_idx].id,
+                                    from: chosen,
+                                    to: target,
+                                    at_us: now,
+                                },
+                            );
+                        }
                     }
                 }
             }
@@ -474,7 +521,12 @@ impl Fleet {
         }
         let mut replicas = Vec::with_capacity(n);
         for (k, (server, sub)) in self.replicas.iter_mut().zip(&subtraces).enumerate() {
-            let metrics = server.run(sub)?;
+            // Each replica records into its own child tracer; absorbing in
+            // replica order re-tags every event with the replica index, so
+            // the merged stream stays deterministic.
+            let mut child = tracer.child();
+            let metrics = server.run_traced(sub, &mut child)?;
+            tracer.absorb(child, k);
             replicas.push(ReplicaStats {
                 routed: state[k].routed,
                 stolen_in: state[k].stolen_in,
@@ -510,6 +562,18 @@ impl Fleet {
         opts: &ClosedLoopOpts,
         profile: &TraceProfile,
     ) -> Result<FleetRun> {
+        self.run_closed_loop_traced(opts, profile, &mut Tracer::off())
+    }
+
+    /// [`Fleet::run_closed_loop`] with a [`Tracer`] — the static client
+    /// partition makes no router decisions, so the trace is purely the
+    /// per-replica serving streams, absorbed in replica order.
+    pub fn run_closed_loop_traced(
+        &mut self,
+        opts: &ClosedLoopOpts,
+        profile: &TraceProfile,
+        tracer: &mut Tracer,
+    ) -> Result<FleetRun> {
         ensure!(opts.total > 0, "closed loop needs at least one request");
         ensure!(opts.concurrency > 0, "closed loop needs at least one client");
         let n = self.replicas.len();
@@ -517,6 +581,7 @@ impl Fleet {
         let active = n.min(opts.concurrency).min(opts.total);
         let mut replicas = Vec::with_capacity(n);
         for (k, server) in self.replicas.iter_mut().enumerate() {
+            let mut child = tracer.child();
             let metrics = if k < active {
                 let share = |x: usize| x / active + usize::from(k < x % active);
                 let sub = ClosedLoopOpts {
@@ -529,10 +594,11 @@ impl Fleet {
                     seed: opts.seed ^ mix64(k as u64 + 1),
                     think_process: opts.think_process.clone(),
                 };
-                server.run_closed_loop(&sub, profile)?
+                server.run_closed_loop_traced(&sub, profile, &mut child)?
             } else {
-                server.run(&[])?
+                server.run_traced(&[], &mut child)?
             };
+            tracer.absorb(child, k);
             let routed = metrics.submitted;
             replicas.push(ReplicaStats { routed, stolen_in: 0, stolen_out: 0, metrics });
         }

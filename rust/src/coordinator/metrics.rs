@@ -421,6 +421,32 @@ impl FleetMetrics {
         self.queue_wait_percentiles_ms().1
     }
 
+    /// Fraction of the simulated makespan the NPU rail spent busy on
+    /// dispatched work items (0.0 for an empty run). With `npu-only`
+    /// dispatch and no idle gaps this approaches 1.0; the shortfall is
+    /// arrival idle plus time the clock advanced on the other rail. On a
+    /// merged fleet view the numerator sums rail time across parallel
+    /// replicas while the makespan stays the parallel one, so the value
+    /// can exceed 1.0 (up to the replica count) — read it as aggregate
+    /// rail load, like a load average.
+    pub fn util_npu(&self) -> f64 {
+        if self.makespan_us > 0.0 {
+            self.dispatch.npu_us / self.makespan_us
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of the simulated makespan the CPU rail spent busy on
+    /// dispatched work items (0.0 for an empty run).
+    pub fn util_cpu(&self) -> f64 {
+        if self.makespan_us > 0.0 {
+            self.dispatch.cpu_us / self.makespan_us
+        } else {
+            0.0
+        }
+    }
+
     pub fn energy_per_token_j(&self) -> f64 {
         let tokens = self.prompt_tokens() + self.generated_tokens();
         self.total_energy_j() / tokens.max(1) as f64
@@ -627,8 +653,18 @@ impl FleetMetrics {
     }
 
     pub fn report(&self) -> String {
-        let (ttft_p50, ttft_p99) = self.ttft_percentiles_ms();
-        let (wait_p50, wait_p99) = self.queue_wait_percentiles_ms();
+        // An empty percentile sample has no p50/p99 — print `—` instead of
+        // a misleading 0.000 ms (a zero-completion overload run is exactly
+        // when someone reads these lines).
+        let pctls = |(p50, p99): (f64, f64)| -> String {
+            if self.completions.is_empty() {
+                "p50 —, p99 —".to_string()
+            } else {
+                format!("p50 {p50:.3} ms, p99 {p99:.3} ms")
+            }
+        };
+        let ttft_line = pctls(self.ttft_percentiles_ms());
+        let wait_line = pctls(self.queue_wait_percentiles_ms());
         let mut out = format!(
             "requests        : {} completed, {} preemption(s), {} resumed\n\
              tokens          : {} prompt + {} generated\n\
@@ -637,8 +673,8 @@ impl FleetMetrics {
              paged KV        : {}/{} blocks high-water × {} tok/block\n\
              prefix cache    : {}/{} hits ({:.0}%), {} tok reused, saved {:.3} ms prefill\n\
              sim makespan    : {:.2} ms ({:.1} tok/s sustained, {:.1} decode tok/s)\n\
-             TTFT            : p50 {:.3} ms, p99 {:.3} ms\n\
-             queue wait      : p50 {:.3} ms, p99 {:.3} ms\n\
+             TTFT            : {}\n\
+             queue wait      : {}\n\
              sim energy      : {:.4} J total ({:.6} J/tok, kernel-attributed)\n\
              host wall-clock : {:.2} s",
             self.completions.len(),
@@ -661,10 +697,8 @@ impl FleetMetrics {
             self.makespan_us / 1e3,
             self.throughput_tps(),
             self.decode_throughput_tps(),
-            ttft_p50,
-            ttft_p99,
-            wait_p50,
-            wait_p99,
+            ttft_line,
+            wait_line,
             self.total_energy_j(),
             self.energy_per_token_j(),
         );
@@ -704,7 +738,8 @@ impl FleetMetrics {
             let d = &self.dispatch;
             out.push_str(&format!(
                 "\ndispatch        : npu {} item(s) ({:.3} ms, {:.4} J), \
-                 cpu {} item(s) ({:.3} ms, {:.4} J) — {:.0}% cpu",
+                 cpu {} item(s) ({:.3} ms, {:.4} J) — {:.0}% cpu\n\
+                 rail busy       : npu {:.1}% / cpu {:.1}% of makespan",
                 d.npu_items(),
                 d.npu_us / 1e3,
                 d.npu_j,
@@ -712,6 +747,8 @@ impl FleetMetrics {
                 d.cpu_us / 1e3,
                 d.cpu_j,
                 100.0 * d.cpu_share(),
+                100.0 * self.util_npu(),
+                100.0 * self.util_cpu(),
             ));
         }
         for cs in self.class_stats() {

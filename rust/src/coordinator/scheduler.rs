@@ -134,6 +134,10 @@ pub struct Scheduler {
     /// Decode lanes evicted from a full batch by a higher-priority request
     /// (each kept its slot and progress, and resumed later).
     pub decode_evictions: usize,
+    /// Request ids evicted from the decode batch by the most recent
+    /// [`Scheduler::next`] call (observability log — never consulted by
+    /// scheduling decisions). Cleared at the top of every `next()`.
+    pub last_evicted: Vec<u64>,
 }
 
 impl Scheduler {
@@ -174,6 +178,7 @@ impl Scheduler {
             decode_batches: 0,
             decode_batched_steps: 0,
             decode_evictions: 0,
+            last_evicted: Vec::new(),
         }
     }
 
@@ -322,6 +327,7 @@ impl Scheduler {
                 .iter()
                 .position(|(r, _)| r.priority >= evicted.0.priority)
                 .unwrap_or(self.ready.len());
+            self.last_evicted.push(evicted.0.id);
             self.ready.insert(idx, evicted);
             self.decoding.push(promoted);
             self.decode_evictions += 1;
@@ -459,6 +465,7 @@ impl Scheduler {
 
     /// Produce the next unit of work (None when idle).
     pub fn next(&mut self) -> Option<WorkItem> {
+        self.last_evicted.clear();
         // Pending finishes drain first: they release KV blocks.
         if let Some((id, _)) = self.finishing.pop_front() {
             self.finished.push(id);

@@ -50,10 +50,11 @@
 //! the cheaper side. [`FleetMetrics::dispatch`] reports the resulting
 //! per-processor work-item, time, and energy mix.
 
-use crate::coordinator::engine::{Contention, DispatchMode, Engine};
+use crate::coordinator::engine::{Contention, DispatchMode, Engine, Processor};
 use crate::coordinator::metrics::{DispatchStats, FleetMetrics, PhaseTimer, RequestCompletion};
 use crate::coordinator::scheduler::{kv_reserve_tokens, Request, Scheduler, WorkItem};
 use crate::model::{sampler, tokenizer};
+use crate::trace::{RejectReason, ShedReason, TraceEvent, Tracer};
 use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -512,7 +513,19 @@ impl Server {
     /// Serve an open-loop trace to completion; returns aggregate fleet
     /// metrics with one [`RequestCompletion`] per request, in finish order.
     pub fn run(&mut self, trace: &[TraceRequest]) -> Result<FleetMetrics> {
-        self.run_arrivals(Arrivals::open(trace))
+        self.run_arrivals(Arrivals::open(trace), &mut Tracer::off())
+    }
+
+    /// [`Server::run`] with a [`Tracer`] capturing the run's sim-clock
+    /// event stream. With tracing off (or a `Tracer::off()`) the schedule,
+    /// logits, and metrics are byte-identical to the untraced loop — every
+    /// emission is gated, and the extra two-sided quotes are pure reads.
+    pub fn run_traced(
+        &mut self,
+        trace: &[TraceRequest],
+        tracer: &mut Tracer,
+    ) -> Result<FleetMetrics> {
+        self.run_arrivals(Arrivals::open(trace), tracer)
     }
 
     /// Serve a *closed-loop* client population: at most `opts.concurrency`
@@ -524,15 +537,32 @@ impl Server {
         opts: &ClosedLoopOpts,
         profile: &TraceProfile,
     ) -> Result<FleetMetrics> {
+        self.run_closed_loop_traced(opts, profile, &mut Tracer::off())
+    }
+
+    /// [`Server::run_closed_loop`] with a [`Tracer`] capturing the run's
+    /// sim-clock event stream.
+    pub fn run_closed_loop_traced(
+        &mut self,
+        opts: &ClosedLoopOpts,
+        profile: &TraceProfile,
+        tracer: &mut Tracer,
+    ) -> Result<FleetMetrics> {
         anyhow::ensure!(opts.total > 0, "closed loop needs at least one request");
         anyhow::ensure!(opts.concurrency > 0, "closed loop needs at least one client");
         anyhow::ensure!(opts.think_us >= 0.0, "negative think time");
-        self.run_arrivals(Arrivals::closed(opts, profile))
+        self.run_arrivals(Arrivals::closed(opts, profile), tracer)
     }
 
     /// The serving loop proper, fed by either arrival model.
-    fn run_arrivals(&mut self, mut source: Arrivals) -> Result<FleetMetrics> {
+    fn run_arrivals(&mut self, mut source: Arrivals, tracer: &mut Tracer) -> Result<FleetMetrics> {
         let wall = PhaseTimer::start();
+        // KV pool events are journaled only while a trace is recording;
+        // the journal is a flag-gated log the pool never consults, so an
+        // untraced run's pool behavior is untouched.
+        if tracer.on() {
+            self.engine.set_kv_journal(true);
+        }
         let seq = self.engine.max_seq();
         // The decode batch cannot outgrow the KV blocks backing it.
         let max_batch = self.opts.max_batch.max(1).min(self.engine.kv_slot_capacity());
@@ -583,12 +613,31 @@ impl Server {
                 );
                 let max_new = t.max_new_tokens.max(1).min(seq - prompt.len());
                 let deadline_at = t.ttft_deadline_us.map(|d| t.arrival_us + d);
+                if tracer.on() {
+                    tracer.record(TraceEvent::Submit {
+                        id: t.id,
+                        priority: t.priority,
+                        arrival_us: t.arrival_us,
+                        at_us: clock_us,
+                        prompt_tokens: prompt.len(),
+                        max_new_tokens: max_new,
+                        deadline_at_us: deadline_at,
+                    });
+                }
                 // Enqueue-time deadline rejection: a request whose TTFT
                 // deadline is already blown when the loop first sees it
                 // would only burn prefill to produce a guaranteed miss.
                 if policy.shed && deadline_at.is_some_and(|at| clock_us > at) {
                     rejected += 1;
                     *rejected_by_priority.entry(t.priority).or_insert(0) += 1;
+                    if tracer.on() {
+                        tracer.record(TraceEvent::Reject {
+                            id: t.id,
+                            priority: t.priority,
+                            at_us: clock_us,
+                            reason: RejectReason::DeadlineOnArrival,
+                        });
+                    }
                     source.on_finish(t.id, clock_us);
                     continue;
                 }
@@ -599,6 +648,14 @@ impl Server {
                     if sched.queued_unstarted_of(t.priority) >= cap.max(1) {
                         rejected += 1;
                         *rejected_by_priority.entry(t.priority).or_insert(0) += 1;
+                        if tracer.on() {
+                            tracer.record(TraceEvent::Reject {
+                                id: t.id,
+                                priority: t.priority,
+                                at_us: clock_us,
+                                reason: RejectReason::ClassCap,
+                            });
+                        }
                         source.on_finish(t.id, clock_us);
                         continue;
                     }
@@ -614,11 +671,27 @@ impl Server {
                                 let vs = states.remove(&victim).context("displaced unknown id")?;
                                 shed += 1;
                                 *shed_by_priority.entry(vs.priority).or_insert(0) += 1;
+                                if tracer.on() {
+                                    tracer.record(TraceEvent::Shed {
+                                        id: victim,
+                                        priority: vs.priority,
+                                        at_us: clock_us,
+                                        reason: ShedReason::Displaced,
+                                    });
+                                }
                                 source.on_finish(victim, clock_us);
                             }
                             None => {
                                 rejected += 1;
                                 *rejected_by_priority.entry(t.priority).or_insert(0) += 1;
+                                if tracer.on() {
+                                    tracer.record(TraceEvent::Reject {
+                                        id: t.id,
+                                        priority: t.priority,
+                                        at_us: clock_us,
+                                        reason: RejectReason::QueueFull,
+                                    });
+                                }
                                 source.on_finish(t.id, clock_us);
                                 continue;
                             }
@@ -701,6 +774,14 @@ impl Server {
                         let st = states.remove(&id).context("shed unknown id")?;
                         shed += 1;
                         *shed_by_priority.entry(st.priority).or_insert(0) += 1;
+                        if tracer.on() {
+                            tracer.record(TraceEvent::Shed {
+                                id,
+                                priority: st.priority,
+                                at_us: clock_us,
+                                reason: ShedReason::DeadlineQueued,
+                            });
+                        }
                         source.on_finish(id, clock_us);
                     } else if sched.complete(id) {
                         // Holds KV (prefilling/ready/decoding/preempted):
@@ -710,6 +791,14 @@ impl Server {
                         st.shed = true;
                         shed += 1;
                         *shed_by_priority.entry(st.priority).or_insert(0) += 1;
+                        if tracer.on() {
+                            tracer.record(TraceEvent::Shed {
+                                id,
+                                priority: st.priority,
+                                at_us: clock_us,
+                                reason: ShedReason::DeadlineRunning,
+                            });
+                        }
                     }
                     // else: already in `finishing` (e.g. a stop byte cut
                     // it this very clock) — it completes normally.
@@ -736,6 +825,14 @@ impl Server {
             // quotes bit-equal to the undebited sim prices.
             let con = Contention { inflight: states.len(), queued_launches: 0 };
             let item = sched.next().context("scheduler had work but yielded none")?;
+            if tracer.on() {
+                // Decode-batch evictions happen inside `next()` at the
+                // batch boundary; the scheduler logs the victims so the
+                // trace can show which lanes were parked.
+                for &eid in &sched.last_evicted {
+                    tracer.record(TraceEvent::Evict { id: eid, at_us: clock_us });
+                }
+            }
             match item {
                 WorkItem::PrefillChunk { id, start, len } => {
                     let st = states.get_mut(&id).context("unknown request id")?;
@@ -760,10 +857,20 @@ impl Server {
                             self.engine.begin_request_priced(id, &st.prompt, reserve)?;
                         st.cached = cached;
                         if restore_us > 0.0 {
+                            let begin_us = clock_us;
                             st.sim_prefill_us += restore_us;
                             st.sim_prefill_j += restore_j;
                             tier_restore_us += restore_us;
                             clock_us += restore_us;
+                            if tracer.on() {
+                                tracer.record(TraceEvent::RestoreSpan {
+                                    id,
+                                    begin_us,
+                                    end_us: clock_us,
+                                    us: restore_us,
+                                    energy_j: restore_j,
+                                });
+                            }
                         }
                         st.begun = true;
                     } else if st.suspended {
@@ -773,6 +880,9 @@ impl Server {
                         // processed twice.
                         self.engine.resume_request(id)?;
                         st.suspended = false;
+                        if tracer.on() {
+                            tracer.record(TraceEvent::Resume { id, at_us: clock_us });
+                        }
                     }
                     if st.first_work_us.is_none() {
                         st.first_work_us = Some(clock_us);
@@ -798,9 +908,45 @@ impl Server {
                         st.prefilled_total += end - from;
                         st.sim_prefill_us += d.us;
                         st.sim_prefill_j += d.energy_j;
+                        let begin_us = clock_us;
                         clock_us += d.us;
                         paid = d.us;
                         dispatch.record_prefill(&d);
+                        if tracer.on() {
+                            // The quote fields carry *both* sides' prices so
+                            // the trace shows the dispatch decision, not
+                            // just its outcome. Quotes are pure reads.
+                            tracer.record(TraceEvent::PrefillSpan {
+                                id,
+                                sched_start: start,
+                                sched_len: len,
+                                computed: end - from,
+                                begin_us,
+                                end_us: clock_us,
+                                processor: d.processor,
+                                us: d.us,
+                                energy_j: d.energy_j,
+                                npu_quote_us: self
+                                    .engine
+                                    .quote_prefill_slice(from, end - from, Processor::Npu, con),
+                                cpu_quote_us: self
+                                    .engine
+                                    .quote_prefill_slice(from, end - from, Processor::Cpu, con),
+                                inflight: con.inflight,
+                                queued_launches: con.queued_launches,
+                                saved_us: full_price - paid,
+                            });
+                        }
+                    } else if tracer.on() {
+                        // Every position in the slice was served from the
+                        // prefix cache: zero simulated time, full price
+                        // credited as savings.
+                        tracer.record(TraceEvent::CachedSlice {
+                            id,
+                            at_us: clock_us,
+                            tokens: len,
+                            saved_us: full_price,
+                        });
                     }
                     st.saved_us += full_price - paid;
                     st.covered += len;
@@ -810,7 +956,10 @@ impl Server {
                         // forks of this prompt (the TTC fan-out pattern)
                         // hit them while this request is still decoding —
                         // not only after its Finish.
-                        self.engine.publish_request_prefix(id)?;
+                        let blocks = self.engine.publish_request_prefix(id)?;
+                        if tracer.on() {
+                            tracer.record(TraceEvent::Publish { id, at_us: clock_us, blocks });
+                        }
                     }
                 }
                 WorkItem::Preempt { id } => {
@@ -828,6 +977,9 @@ impl Server {
                     );
                     st.suspended = true;
                     st.preempted += 1;
+                    if tracer.on() {
+                        tracer.record(TraceEvent::Preempt { id, at_us: clock_us });
+                    }
                 }
                 WorkItem::DecodeBatch { ids } => {
                     anyhow::ensure!(
@@ -861,6 +1013,9 @@ impl Server {
                             // pass's zero-miss guarantee relies on every
                             // first-token stamp being the sampling clock.
                             st.first_token_us = Some(clock_us);
+                            if tracer.on() {
+                                tracer.record(TraceEvent::FirstToken { id, at_us: clock_us });
+                            }
                         }
                         // Token-space comparison: vocabularies larger than
                         // 256 must not alias onto a stop byte.
@@ -895,6 +1050,7 @@ impl Server {
                         dispatch.record_decode(&d);
                         let (all_logits, per_us) = self.engine.decode_batch(&forwards)?;
                         let batch_us: f64 = per_us.iter().sum();
+                        let begin_us = clock_us;
                         for ((&(id, _, _), logits), us) in
                             forwards.iter().zip(all_logits).zip(per_us)
                         {
@@ -911,6 +1067,29 @@ impl Server {
                             }
                             decode_batch_sim_us += lane_us;
                             clock_us += lane_us;
+                        }
+                        if tracer.on() {
+                            // The clock advanced by the rescaled per-lane
+                            // sum, which is not bit-equal to `d.us` — so the
+                            // span carries both: `end_us - begin_us` is the
+                            // timeline width, `us` the price the dispatch
+                            // rail was charged.
+                            tracer.record(TraceEvent::DecodeSpan {
+                                lanes: forwards.len(),
+                                begin_us,
+                                end_us: clock_us,
+                                processor: d.processor,
+                                us: d.us,
+                                energy_j: d.energy_j,
+                                npu_quote_us: self
+                                    .engine
+                                    .quote_decode_batch(&ctxs, Processor::Npu, con),
+                                cpu_quote_us: self
+                                    .engine
+                                    .quote_decode_batch(&ctxs, Processor::Cpu, con),
+                                inflight: con.inflight,
+                                queued_launches: con.queued_launches,
+                            });
                         }
                     }
                 }
@@ -944,6 +1123,19 @@ impl Server {
                             ttft_slo_us: st.slo_us,
                             text: tokenizer::decode(&st.out_tokens),
                         };
+                        if tracer.on() {
+                            tracer.record(TraceEvent::Finish {
+                                id,
+                                priority: completion.priority,
+                                at_us: clock_us,
+                                generated_tokens: completion.generated_tokens,
+                                ttft_us: completion.ttft_us,
+                                queue_wait_us: completion.queue_wait_us,
+                                energy_prefill_j: completion.energy_prefill_j,
+                                energy_decode_j: completion.energy_decode_j,
+                                ttft_slo_us: completion.ttft_slo_us,
+                            });
+                        }
                         if self.opts.verbose {
                             eprintln!(
                                 "[req {:>3}] prio {} | {:>4} prompt + {:>3} gen tok | \
@@ -959,6 +1151,14 @@ impl Server {
                         }
                         completions.push(completion);
                     }
+                }
+            }
+            if tracer.on() {
+                // Drain the pool's KV journal once per applied work item,
+                // stamped at the item's end clock — the pool has no notion
+                // of simulated time, only the loop does.
+                for ev in self.engine.drain_kv_journal() {
+                    tracer.record(TraceEvent::Kv { at_us: clock_us, ev });
                 }
             }
             // The scheduler's accounting and the engine's pool must agree
@@ -991,6 +1191,14 @@ impl Server {
             }
         }
 
+        if tracer.on() {
+            // Catch any journal entries the final work item left behind,
+            // then switch the journal back off.
+            for ev in self.engine.drain_kv_journal() {
+                tracer.record(TraceEvent::Kv { at_us: clock_us, ev });
+            }
+            self.engine.set_kv_journal(false);
+        }
         anyhow::ensure!(states.is_empty(), "{} request(s) never finished", states.len());
         anyhow::ensure!(
             completions.len() + shed + rejected == submitted,

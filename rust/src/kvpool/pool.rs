@@ -28,6 +28,7 @@ use crate::kvpool::radix::{prefix_block_keys, RadixIndex};
 use crate::kvtier::{SpillTier, TierStats};
 use crate::model::config::ModelConfig;
 use crate::model::kv_cache::KvLanes;
+use crate::trace::KvEvent;
 use anyhow::Result;
 use std::collections::{HashMap, HashSet};
 
@@ -133,6 +134,12 @@ pub struct PagedKvPool {
     prefix_lookups: usize,
     prefix_hits: usize,
     prefix_hit_tokens: usize,
+    /// Trace journal: when a traced run is live the pool appends typed
+    /// [`KvEvent`]s here (prefix hit, COW, spill, restore, GC) and the
+    /// serving loop drains them after each work item, stamping the sim
+    /// clock. `None` (the default) records nothing — pool behavior is
+    /// identical either way; the journal only *observes*.
+    journal: Option<Vec<KvEvent>>,
 }
 
 impl PagedKvPool {
@@ -164,6 +171,28 @@ impl PagedKvPool {
             prefix_lookups: 0,
             prefix_hits: 0,
             prefix_hit_tokens: 0,
+            journal: None,
+        }
+    }
+
+    /// Enable (or disable and clear) the trace journal.
+    pub fn set_journal(&mut self, on: bool) {
+        self.journal = on.then(Vec::new);
+    }
+
+    /// Take the journaled events accumulated since the last drain
+    /// (empty when the journal is off).
+    pub fn drain_journal(&mut self) -> Vec<KvEvent> {
+        match &mut self.journal {
+            Some(j) => std::mem::take(j),
+            None => Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn jot(&mut self, ev: KvEvent) {
+        if let Some(j) = &mut self.journal {
+            j.push(ev);
         }
     }
 
@@ -311,6 +340,7 @@ impl PagedKvPool {
             if hit > 0 {
                 self.prefix_hits += 1;
                 self.prefix_hit_tokens += hit;
+                self.jot(KvEvent::PrefixHit { id, tokens: hit });
             }
         }
         let table = Table {
@@ -402,17 +432,24 @@ impl PagedKvPool {
     /// recompute made the tier copy dead) — keeps the tier and the radix
     /// index disjoint at every publish point.
     fn tier_gc(&mut self) {
-        let Some(tier) = &mut self.tier else { return };
-        if tier.resident_blocks() == 0 {
-            return;
+        let reclaimed = {
+            let Some(tier) = &mut self.tier else { return };
+            if tier.resident_blocks() == 0 {
+                return;
+            }
+            let mut hot: HashSet<u64> = HashSet::new();
+            if let Some(radix) = &self.prefix {
+                radix.for_each_key_block(&mut |key, _| {
+                    hot.insert(key);
+                });
+            }
+            let before = tier.stats().gc_reclaimed;
+            tier.gc(&hot);
+            tier.stats().gc_reclaimed - before
+        };
+        if reclaimed > 0 {
+            self.jot(KvEvent::Gc { reclaimed });
         }
-        let mut hot: HashSet<u64> = HashSet::new();
-        if let Some(radix) = &self.prefix {
-            radix.for_each_key_block(&mut |key, _| {
-                hot.insert(key);
-            });
-        }
-        tier.gc(&hot);
     }
 
     fn decref(&mut self, block: usize) {
@@ -472,6 +509,7 @@ impl PagedKvPool {
         let tokens = run[run.len() - bt..].to_vec();
         let tier = self.tier.as_mut().expect("checked above");
         tier.spill(key, parent, tokens, k, v, fingerprint, bytes);
+        self.jot(KvEvent::Spill { key, bytes });
     }
 
     /// Extend a prefix lookup's resident hit path with blocks faulted back
@@ -516,6 +554,7 @@ impl PagedKvPool {
             // alloc_block's refcount of 1 becomes the index's reference;
             // pin for the caller's table on top, like the resident path.
             self.refcount[nb] += 1;
+            self.jot(KvEvent::Restore { key: keys[j], bytes: self.block_bytes() });
         }
     }
 
@@ -578,6 +617,7 @@ impl PagedKvPool {
                 let nb = self.alloc_block();
                 self.copy_block(cur, nb);
                 self.tables[ti].as_mut().expect("live table").blocks[b] = nb;
+                self.jot(KvEvent::Cow { block: cur });
                 nb
             } else {
                 cur

@@ -27,5 +27,6 @@ pub mod load;
 pub mod model;
 pub mod npu;
 pub mod quant;
+pub mod trace;
 pub mod util;
 pub mod runtime;

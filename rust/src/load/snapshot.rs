@@ -101,6 +101,8 @@ fn emit_fleet(out: &mut FlatJson, scen: &str, fleet: &FleetMetrics) {
     out.num(&format!("{scen}.goodput_tps"), fleet.goodput_tps());
     out.num(&format!("{scen}.throughput_tps"), fleet.throughput_tps());
     out.num(&format!("{scen}.decode_occupancy"), fleet.decode_batch_occupancy());
+    out.num(&format!("{scen}.util_npu"), fleet.util_npu());
+    out.num(&format!("{scen}.util_cpu"), fleet.util_cpu());
     out.num(&format!("{scen}.prefix_hit_rate"), fleet.prefix_hit_rate());
     for cs in fleet.class_stats() {
         out.num(&format!("{scen}.p{}.ttft_p50_ms", cs.priority), cs.ttft_p50_ms);
@@ -365,6 +367,17 @@ mod tests {
         );
         assert!(get("prefix.prefix_hit_rate") > 0.0);
         assert!(get("steady.goodput_tps") > 0.0);
+        // Rail-busy fractions are bounded by the rail count sharing the
+        // makespan: 1.0 for single-server arms, replica count for the
+        // merged fleet arms (rail time sums across parallel replicas).
+        for scen in scenarios {
+            let bound = if scen.starts_with("fleet_") { 3.0 } else { 1.0 };
+            for rail in ["util_npu", "util_cpu"] {
+                let u = get(&format!("{scen}.{rail}"));
+                assert!((0.0..=bound).contains(&u), "{scen}.{rail} out of range: {u}");
+            }
+        }
+        assert!(get("steady.util_npu") > 0.0, "steady arm must keep the NPU rail busy");
         // The tier sweep: same trace, same tight hot arena — the warm arm
         // spills and restores where the cold arm cannot, and wins the
         // restore-inclusive prefill-time contrast.

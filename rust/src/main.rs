@@ -14,10 +14,12 @@
 //!            [--slo-ttft-ms X] [--queue-cap SPEC] [--shed] [--require-shed]
 //!            [--replicas N] [--routing round-robin|least-loaded|cache-aware]
 //!            [--dispatch npu-only|cpu-only|auto] [--require-mixed]
+//!            [--trace-out FILE] [--trace-summary] [--trace-cap N]
 //!            [--bits 2|4] [--temp T] [--artifacts DIR] [--soc ...]
 //!   bench    [--json]                 plan-cost snapshot (CI artifact)
 //!   bench-serving [--out FILE]        serving perf snapshot (BENCH_serving.json)
 //!   bench-check --baseline F --current F [--tolerance T]   perf-regression gate
+//!   trace-check <trace.json>          replay a saved trace through the auditor
 //!   info     [--artifacts DIR]        print artifact manifest + sim config
 //!
 //! `serve --closed-loop C --think-ms T` swaps the open-loop synthetic trace
@@ -56,12 +58,16 @@ use tman::npu::config::SocConfig;
 struct Args {
     cmd: String,
     flags: std::collections::HashMap<String, String>,
+    /// Bare (non-flag) operands after the subcommand, in order — e.g. the
+    /// file in `tman trace-check trace.json`.
+    positional: Vec<String>,
 }
 
 fn parse_args() -> Args {
     let mut it = std::env::args().skip(1);
     let cmd = it.next().unwrap_or_else(|| "help".to_string());
     let mut flags = std::collections::HashMap::new();
+    let mut positional = Vec::new();
     let mut key: Option<String> = None;
     for a in it {
         if let Some(stripped) = a.strip_prefix("--") {
@@ -71,12 +77,14 @@ fn parse_args() -> Args {
             key = Some(stripped.to_string());
         } else if let Some(k) = key.take() {
             flags.insert(k, a);
+        } else {
+            positional.push(a);
         }
     }
     if let Some(k) = key.take() {
         flags.insert(k, "true".to_string());
     }
-    Args { cmd, flags }
+    Args { cmd, flags, positional }
 }
 
 fn soc_from(args: &Args) -> Result<SocConfig> {
@@ -320,6 +328,24 @@ fn main() -> Result<()> {
                 }
                 _ => None,
             };
+            // Sim-clock event tracing: --trace-out FILE exports a
+            // Chrome-trace/Perfetto JSON timeline, --trace-summary prints
+            // the widest spans per rail. Either one records; every traced
+            // run self-checks through the trace auditor before reporting.
+            let trace_out = args.flags.get("trace-out").cloned();
+            let trace_summary = args.flags.contains_key("trace-summary");
+            let trace_cap: usize = args
+                .flags
+                .get("trace-cap")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(tman::trace::DEFAULT_TRACE_CAP);
+            let tracing = trace_out.is_some() || trace_summary;
+            let mut tracer = if tracing {
+                tman::trace::Tracer::bounded(trace_cap)
+            } else {
+                tman::trace::Tracer::off()
+            };
             // Multi-replica fleet: --replicas N (and/or --routing R) routes
             // the open-loop trace across N independent engine replicas.
             let replicas: usize =
@@ -360,7 +386,7 @@ fn main() -> Result<()> {
                         seed,
                         think_process,
                     };
-                    host.run_closed_loop(&cl, &profile)?
+                    host.run_closed_loop_traced(&cl, &profile, &mut tracer)?
                 } else {
                     let trace = match arrivals.as_deref() {
                         Some(name) => {
@@ -383,7 +409,7 @@ fn main() -> Result<()> {
                          ...",
                         routing.name()
                     );
-                    host.run(&trace)?
+                    host.run_traced(&trace, &mut tracer)?
                 };
                 println!("{}", run.report());
                 run.merged
@@ -402,7 +428,7 @@ fn main() -> Result<()> {
                             seed,
                             think_process,
                         };
-                        server.run_closed_loop(&cl, &profile)?
+                        server.run_closed_loop_traced(&cl, &profile, &mut tracer)?
                     }
                     (None, Some(name)) => {
                         let Some(process) = ArrivalProcess::from_name(&name, profile.mean_gap_us)
@@ -414,16 +440,36 @@ fn main() -> Result<()> {
                         };
                         println!("serving {n} {name} requests (fanout {fanout}, {setup}) ...");
                         let spec = LoadSpec::new(process, profile.clone()).with_fanout(fanout);
-                        server.run(&spec.trace(n, seed))?
+                        server.run_traced(&spec.trace(n, seed), &mut tracer)?
                     }
                     (None, None) => {
                         println!("serving {n} synthetic requests ({setup}) ...");
-                        server.run(&synthetic_trace(n, seed, &profile))?
+                        server.run_traced(&synthetic_trace(n, seed, &profile), &mut tracer)?
                     }
                 };
                 println!("{}", fleet.report());
                 fleet
             };
+            if tracing {
+                // Self-check: the trace must re-derive the live headline
+                // metrics bit-for-bit before anyone trusts the timeline.
+                let rep = anyhow::Context::context(
+                    tman::trace::audit::verify(&tracer, &fleet),
+                    "trace auditor diverged from live metrics",
+                )?;
+                println!("{}", rep.headline());
+                if trace_summary {
+                    println!("{}", tman::trace::summary(&tracer, 5));
+                }
+                if let Some(path) = &trace_out {
+                    std::fs::write(path, tman::trace::perfetto::export(&tracer))?;
+                    println!(
+                        "trace           : {} event(s) -> {path} (chrome://tracing / \
+                         ui.perfetto.dev)",
+                        tracer.len()
+                    );
+                }
+            }
             // CI gate for prefix-cache smokes: a shared-prefix trace on a
             // cache-enabled engine must actually hit.
             if args.flags.contains_key("require-hits") {
@@ -558,6 +604,27 @@ fn main() -> Result<()> {
             let report = compare_benchmarks(&baseline, &current, tolerance)?;
             print!("{report}");
         }
+        "trace-check" => {
+            // Replay a saved Perfetto trace through the auditor: validate
+            // the JSON, check per-track timestamp monotonicity, rebuild
+            // the event stream, and cross-check every summary figure the
+            // exporter embedded. Schema-version gated.
+            let path = args
+                .positional
+                .first()
+                .or_else(|| args.flags.get("file"))
+                .ok_or_else(|| anyhow::anyhow!("usage: tman trace-check <trace.json>"))?;
+            let text = std::fs::read_to_string(path)?;
+            let checked = tman::trace::perfetto::check(&text)?;
+            println!(
+                "trace-check     : {path} OK — {} event(s) over {} track(s), \
+                 schema v{}",
+                checked.events,
+                checked.tracks,
+                tman::trace::TRACE_SCHEMA_VERSION
+            );
+            println!("{}", checked.report.headline());
+        }
         "info" => {
             let meta = tman::runtime::artifacts::ArtifactMeta::load(&artifacts_dir(&args))?;
             println!(
@@ -582,7 +649,8 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "t-man coordinator\n\
-                 usage: tman <generate|serve|bench|bench-serving|bench-check|info> [flags]\n\
+                 usage: tman <generate|serve|bench|bench-serving|bench-check|trace-check|info> \
+                 [flags]\n\
                  generate: --prompt S --max-new N --temp T --greedy\n\
                  serve:    --trace synthetic --requests N --seed S --verbose --temp T\n\
                  \x20         --max-batch B (decode-batch width, default 1)\n\
@@ -610,10 +678,16 @@ fn main() -> Result<()> {
                  \x20         work-item pricing, default npu-only)\n\
                  \x20         --require-mixed (fail unless auto dispatch routed\n\
                  \x20         work items to both processors)\n\
+                 \x20         --trace-out FILE (export the run's sim-clock event\n\
+                 \x20         timeline as Chrome-trace/Perfetto JSON)\n\
+                 \x20         --trace-summary (print the widest spans per rail)\n\
+                 \x20         --trace-cap N (event ring capacity, default 1M)\n\
                  bench:    --json (machine-readable plan-cost snapshot)\n\
                  bench-serving: [--out FILE] (BENCH_serving.json snapshot)\n\
                  bench-check:   --baseline FILE --current FILE [--tolerance 0.15]\n\
                  \x20         (perf-regression gate vs the committed baseline)\n\
+                 trace-check:   <trace.json> (replay a saved trace through the\n\
+                 \x20         auditor: JSON + monotone timestamps + figures)\n\
                  shared:   --model tiny|small|base --chunk C --kv-slots N (default\n\
                  \x20         max-batch + 2) --bits 2|4 --artifacts DIR\n\
                  \x20         --kv-blocks N --block-tokens T --prefix-cache (paged\n\

@@ -296,6 +296,16 @@ impl ReferenceBackend {
     pub fn pool(&self) -> &PagedKvPool {
         &self.pool
     }
+
+    /// Toggle the pool's KV event journal (tracing only; off by default).
+    pub fn set_kv_journal(&mut self, on: bool) {
+        self.pool.set_journal(on);
+    }
+
+    /// Take all KV events journaled since the last drain.
+    pub fn drain_kv_journal(&mut self) -> Vec<crate::trace::KvEvent> {
+        self.pool.drain_journal()
+    }
 }
 
 /// The engine's execution backend.
@@ -476,6 +486,27 @@ impl Backend {
                 block_tokens: rt.meta.seq,
                 ..Default::default()
             },
+        }
+    }
+
+    /// Toggle the KV event journal (no-op on PJRT — one device cache, no
+    /// paged pool to observe).
+    pub fn set_kv_journal(&mut self, on: bool) {
+        match self {
+            Backend::Reference(b) => b.set_kv_journal(on),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => {
+                let _ = on;
+            }
+        }
+    }
+
+    /// Take all KV events journaled since the last drain (empty on PJRT).
+    pub fn drain_kv_journal(&mut self) -> Vec<crate::trace::KvEvent> {
+        match self {
+            Backend::Reference(b) => b.drain_kv_journal(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => Vec::new(),
         }
     }
 }

@@ -1,0 +1,314 @@
+//! Trace-derived metrics auditor.
+//!
+//! [`audit`] re-derives the headline serving metrics — makespan,
+//! per-rail work/energy, the terminal-state partition, per-class TTFT
+//! percentiles, tier traffic — *purely* from a run's event stream, and
+//! [`AuditReport::check_against`] cross-checks every one of them
+//! bit-for-bit against the live
+//! [`crate::coordinator::metrics::FleetMetrics`]. The point is not a
+//! second opinion on arithmetic: it proves the trace is *complete and
+//! faithful* (every charged µs/J is witnessed by exactly one span,
+//! every terminal outcome by exactly one lifecycle event), which is
+//! what makes the exported timeline trustworthy evidence for the
+//! scheduler follow-ups.
+//!
+//! Bit-equality is achievable because the auditor replays the same
+//! float accumulations in the same order the serving loop performed
+//! them: rail sums accumulate per replica in event order and then fold
+//! in ascending replica order — exactly how
+//! [`DispatchStats::merge`](crate::coordinator::metrics::DispatchStats::merge)
+//! builds the merged fleet view — and percentiles go through the very
+//! same public [`sort_sample`]/[`percentile_sorted`] helpers the live
+//! report uses.
+//!
+//! The contract assumes a complete stream: a ring that dropped events,
+//! or an engine whose KV pool carried counters from a previous run,
+//! voids it (the serving paths that matter — `serve`, the pinned bench
+//! scenarios, the test suites — all build a fresh engine per run).
+
+use super::{peak_inflight, restore_stall_us, KvEvent, Recorded, TraceEvent, Tracer};
+use crate::coordinator::metrics::{
+    percentile_sorted, sort_sample, ClassStats, DispatchStats, FleetMetrics,
+};
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+
+/// Everything [`audit`] can re-derive from an event stream.
+#[derive(Debug, Clone, Default)]
+pub struct AuditReport {
+    /// Events the source ring discarded (nonzero voids the contract).
+    pub dropped: usize,
+    /// Max sim timestamp witnessed by any event.
+    pub makespan_us: f64,
+    /// Per-rail work items, µs and J, re-accumulated from kernel spans.
+    pub dispatch: DispatchStats,
+    pub submitted: usize,
+    pub rejected: usize,
+    pub shed: usize,
+    pub completed: usize,
+    pub preemptions: usize,
+    pub resumed: usize,
+    pub decode_evictions: usize,
+    pub decode_batches_executed: usize,
+    pub prefix_hits: usize,
+    pub prefix_hit_tokens: usize,
+    pub tier_spills: usize,
+    pub tier_restores: usize,
+    pub tier_restored_bytes: usize,
+    pub tier_gc_reclaimed: usize,
+    pub tier_restore_us: f64,
+    /// Per-class completion/TTFT breakdown, same shape as
+    /// [`FleetMetrics::class_stats`].
+    pub class_stats: Vec<ClassStats>,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// Derived timeline metrics (not cross-checked — there is no live
+    /// counterpart; they exist *because* only the trace can see them).
+    pub util_npu: f64,
+    pub util_cpu: f64,
+    pub peak_inflight: usize,
+    pub restore_stall_us: f64,
+}
+
+/// Re-derive an [`AuditReport`] from an event stream (`dropped` is the
+/// source ring's drop count). See [`audit_tracer`] for the common case.
+pub fn audit<'a, I>(events: I, dropped: usize) -> AuditReport
+where
+    I: IntoIterator<Item = &'a Recorded>,
+{
+    let mut rep = AuditReport { dropped, ..AuditReport::default() };
+    // Rail accumulators: per replica in event order, folded in ascending
+    // replica order below — the exact accumulation order of a live run
+    // and of `FleetMetrics::merged`.
+    let mut rails: BTreeMap<usize, DispatchStats> = BTreeMap::new();
+    let mut restore_us: BTreeMap<usize, f64> = BTreeMap::new();
+    // (priority, ttft_us, generated_tokens, slo) per completion.
+    let mut finishes: Vec<(u8, f64, usize, Option<f64>)> = Vec::new();
+    for r in events {
+        // Router events are stamped on the router's *virtual* clock
+        // (arrival times) — a fleet-rejected tail arrival can postdate
+        // every replica's actual final clock. The fleet makespan is the
+        // max over replica sim clocks, so only replica-stream events
+        // witness it.
+        let router_side = matches!(
+            r.ev,
+            TraceEvent::Route { .. } | TraceEvent::Steal { .. } | TraceEvent::RouterReject { .. }
+        );
+        if !router_side {
+            rep.makespan_us = rep.makespan_us.max(r.ev.stamp());
+        }
+        match &r.ev {
+            TraceEvent::Submit { .. } => rep.submitted += 1,
+            TraceEvent::Reject { .. } => rep.rejected += 1,
+            TraceEvent::Shed { .. } => rep.shed += 1,
+            TraceEvent::RouterReject { .. } => {
+                // The merged fleet ledger folds router rejections into
+                // both sides of the partition.
+                rep.submitted += 1;
+                rep.rejected += 1;
+            }
+            TraceEvent::Finish { priority, ttft_us, generated_tokens, ttft_slo_us, .. } => {
+                rep.completed += 1;
+                finishes.push((*priority, *ttft_us, *generated_tokens, *ttft_slo_us));
+            }
+            TraceEvent::PrefillSpan { processor, us, energy_j, .. } => {
+                rails.entry(r.replica).or_default().record_prefill(
+                    &crate::coordinator::engine::Dispatch {
+                        processor: *processor,
+                        us: *us,
+                        energy_j: *energy_j,
+                    },
+                );
+            }
+            TraceEvent::DecodeSpan { processor, us, energy_j, .. } => {
+                rep.decode_batches_executed += 1;
+                rails.entry(r.replica).or_default().record_decode(
+                    &crate::coordinator::engine::Dispatch {
+                        processor: *processor,
+                        us: *us,
+                        energy_j: *energy_j,
+                    },
+                );
+            }
+            TraceEvent::RestoreSpan { us, .. } => {
+                *restore_us.entry(r.replica).or_insert(0.0) += us;
+            }
+            TraceEvent::Preempt { .. } => rep.preemptions += 1,
+            TraceEvent::Resume { .. } => rep.resumed += 1,
+            TraceEvent::Evict { .. } => rep.decode_evictions += 1,
+            TraceEvent::Kv { ev, .. } => match ev {
+                KvEvent::PrefixHit { tokens, .. } => {
+                    rep.prefix_hits += 1;
+                    rep.prefix_hit_tokens += tokens;
+                }
+                KvEvent::Spill { .. } => rep.tier_spills += 1,
+                KvEvent::Restore { bytes, .. } => {
+                    rep.tier_restores += 1;
+                    rep.tier_restored_bytes += bytes;
+                }
+                KvEvent::Gc { reclaimed } => rep.tier_gc_reclaimed += reclaimed,
+                KvEvent::Cow { .. } => {}
+            },
+            TraceEvent::CachedSlice { .. }
+            | TraceEvent::FirstToken { .. }
+            | TraceEvent::Publish { .. }
+            | TraceEvent::Route { .. }
+            | TraceEvent::Steal { .. } => {}
+        }
+    }
+    for d in rails.values() {
+        rep.dispatch.merge(d);
+    }
+    for us in restore_us.values() {
+        rep.tier_restore_us += us;
+    }
+    // Per-class breakdown, mirroring `FleetMetrics::class_stats` op for
+    // op (the sample multiset is order-insensitive once sorted).
+    let mut classes: Vec<u8> = finishes.iter().map(|f| f.0).collect();
+    classes.sort_unstable();
+    classes.dedup();
+    rep.class_stats = classes
+        .into_iter()
+        .map(|p| {
+            let of_class: Vec<&(u8, f64, usize, Option<f64>)> =
+                finishes.iter().filter(|f| f.0 == p).collect();
+            let mut ttft: Vec<f64> = of_class.iter().map(|f| f.1).collect();
+            sort_sample(&mut ttft);
+            ClassStats {
+                priority: p,
+                completed: of_class.len(),
+                generated_tokens: of_class.iter().map(|f| f.2).sum(),
+                ttft_p50_ms: percentile_sorted(&ttft, 50.0) / 1e3,
+                ttft_p99_ms: percentile_sorted(&ttft, 99.0) / 1e3,
+                deadline_misses: of_class
+                    .iter()
+                    .filter(|f| f.3.is_some_and(|slo| f.1 > slo))
+                    .count(),
+            }
+        })
+        .collect();
+    let mut all_ttft: Vec<f64> = finishes.iter().map(|f| f.1).collect();
+    sort_sample(&mut all_ttft);
+    rep.ttft_p50_ms = percentile_sorted(&all_ttft, 50.0) / 1e3;
+    rep.ttft_p99_ms = percentile_sorted(&all_ttft, 99.0) / 1e3;
+    if rep.makespan_us > 0.0 {
+        rep.util_npu = rep.dispatch.npu_us / rep.makespan_us;
+        rep.util_cpu = rep.dispatch.cpu_us / rep.makespan_us;
+    }
+    rep
+}
+
+/// [`audit`] over a live [`Tracer`].
+pub fn audit_tracer(t: &Tracer) -> AuditReport {
+    audit(t.events(), t.dropped())
+}
+
+/// Exact float comparison: the auditor's claims are bit-level, not
+/// within-epsilon (same ops in the same order must give the same bits).
+fn feq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits()
+}
+
+macro_rules! check_eq {
+    ($what:expr, $a:expr, $b:expr) => {
+        ensure!($a == $b, "trace audit: {} diverged (trace {:?} vs live {:?})", $what, $a, $b)
+    };
+}
+
+macro_rules! check_feq {
+    ($what:expr, $a:expr, $b:expr) => {
+        ensure!(
+            feq($a, $b),
+            "trace audit: {} diverged (trace {:?} vs live {:?})",
+            $what,
+            $a,
+            $b
+        )
+    };
+}
+
+impl AuditReport {
+    /// Cross-check this trace-derived view against the live counters.
+    /// Every comparison is exact (integer or bit-level float equality).
+    pub fn check_against(&self, m: &FleetMetrics) -> Result<()> {
+        ensure!(
+            self.dropped == 0,
+            "trace audit: ring dropped {} event(s) — stream incomplete, raise the trace capacity",
+            self.dropped
+        );
+        check_feq!("makespan_us", self.makespan_us, m.makespan_us);
+        check_eq!("submitted", self.submitted, m.submitted);
+        check_eq!("rejected", self.rejected, m.rejected);
+        check_eq!("shed", self.shed, m.shed);
+        check_eq!("completed", self.completed, m.completions.len());
+        check_eq!("preemptions", self.preemptions, m.preemptions);
+        check_eq!("resumed", self.resumed, m.resumed);
+        check_eq!("decode_evictions", self.decode_evictions, m.decode_evictions);
+        check_eq!(
+            "decode_batches_executed",
+            self.decode_batches_executed,
+            m.decode_batches_executed
+        );
+        check_eq!("prefill_npu", self.dispatch.prefill_npu, m.dispatch.prefill_npu);
+        check_eq!("prefill_cpu", self.dispatch.prefill_cpu, m.dispatch.prefill_cpu);
+        check_eq!("decode_npu", self.dispatch.decode_npu, m.dispatch.decode_npu);
+        check_eq!("decode_cpu", self.dispatch.decode_cpu, m.dispatch.decode_cpu);
+        check_feq!("npu_us", self.dispatch.npu_us, m.dispatch.npu_us);
+        check_feq!("cpu_us", self.dispatch.cpu_us, m.dispatch.cpu_us);
+        check_feq!("npu_j", self.dispatch.npu_j, m.dispatch.npu_j);
+        check_feq!("cpu_j", self.dispatch.cpu_j, m.dispatch.cpu_j);
+        check_eq!("prefix_hits", self.prefix_hits, m.prefix_hits);
+        check_eq!("prefix_hit_tokens", self.prefix_hit_tokens, m.prefix_hit_tokens);
+        check_eq!("tier_spills", self.tier_spills, m.tier_spills);
+        check_eq!("tier_restores", self.tier_restores, m.tier_restores);
+        check_eq!("tier_restored_bytes", self.tier_restored_bytes, m.tier_restored_bytes);
+        check_eq!("tier_gc_reclaimed", self.tier_gc_reclaimed, m.tier_gc_reclaimed);
+        check_feq!("tier_restore_us", self.tier_restore_us, m.tier_restore_us);
+        let (p50, p99) = m.ttft_percentiles_ms();
+        check_feq!("ttft_p50_ms", self.ttft_p50_ms, p50);
+        check_feq!("ttft_p99_ms", self.ttft_p99_ms, p99);
+        let live = m.class_stats();
+        check_eq!("class count", self.class_stats.len(), live.len());
+        for (a, b) in self.class_stats.iter().zip(live.iter()) {
+            check_eq!("class priority", a.priority, b.priority);
+            check_eq!("class completed", a.completed, b.completed);
+            check_eq!("class generated_tokens", a.generated_tokens, b.generated_tokens);
+            check_feq!("class ttft_p50_ms", a.ttft_p50_ms, b.ttft_p50_ms);
+            check_feq!("class ttft_p99_ms", a.ttft_p99_ms, b.ttft_p99_ms);
+            check_eq!("class deadline_misses", a.deadline_misses, b.deadline_misses);
+        }
+        check_feq!("util_npu", self.util_npu, m.util_npu());
+        check_feq!("util_cpu", self.util_cpu, m.util_cpu());
+        Ok(())
+    }
+
+    /// One-line audit verdict for logs.
+    pub fn headline(&self) -> String {
+        format!(
+            "audit: makespan {:.2} ms, {} submitted = {} done + {} shed + {} rejected, \
+             npu {:.2} ms ({:.0}% busy), cpu {:.2} ms ({:.0}% busy), \
+             {} spill(s) / {} restore(s)",
+            self.makespan_us / 1e3,
+            self.submitted,
+            self.completed,
+            self.shed,
+            self.rejected,
+            self.dispatch.npu_us / 1e3,
+            100.0 * self.util_npu,
+            self.dispatch.cpu_us / 1e3,
+            100.0 * self.util_cpu,
+            self.tier_spills,
+            self.tier_restores,
+        )
+    }
+}
+
+/// Audit a tracer and cross-check it against live metrics in one call —
+/// the self-check every traced `serve` run performs before reporting.
+pub fn verify(t: &Tracer, m: &FleetMetrics) -> Result<AuditReport> {
+    let mut rep = audit_tracer(t);
+    rep.peak_inflight = peak_inflight(t);
+    rep.restore_stall_us = restore_stall_us(t);
+    rep.check_against(m)?;
+    Ok(rep)
+}

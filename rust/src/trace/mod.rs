@@ -1,0 +1,521 @@
+//! Sim-clock event tracing for the serving stack.
+//!
+//! A [`Tracer`] is a bounded ring buffer of typed [`TraceEvent`]s stamped
+//! on the *simulated* clock: request lifecycle edges (submit → admit /
+//! reject → prefill slices → decode-batch lanes → finish / shed, with
+//! preempt / resume / evict transitions), per-work-item kernel spans
+//! carrying the full dispatch quote (both processor prices, the
+//! contention snapshot, the chosen rail, kernel energy), KV-pool events
+//! (prefix hit, copy-on-write, tier spill / restore, GC), and fleet
+//! routing events (score breakdown, steals, router rejection).
+//!
+//! Tracing is strictly *passive*: the serving loop only ever reads state
+//! it already computed, so a traced run and an untraced run produce
+//! byte-identical schedules, logits, and ledgers (the observer-effect
+//! property `rust/tests/trace.rs` fuzzes). `Tracer::off()` records
+//! nothing and every emission site is gated on [`Tracer::on`], so the
+//! disabled path costs one branch per site.
+//!
+//! Two consumers sit on the stream: [`perfetto`] exports Chrome-trace /
+//! Perfetto JSON (one track per replica × processor rail plus
+//! per-request async spans), and [`audit`] re-derives the headline
+//! [`crate::coordinator::metrics::FleetMetrics`] purely from the events
+//! and cross-checks them bit-for-bit against the live counters — the
+//! trace is a correctness oracle, not just a log.
+
+pub mod audit;
+pub mod perfetto;
+
+use crate::coordinator::engine::Processor;
+use std::collections::VecDeque;
+
+/// Version stamp embedded in exported traces. `trace-check` refuses a
+/// file whose stamp differs — an old trace fails loudly instead of
+/// mis-deriving metrics under a newer schema.
+pub const TRACE_SCHEMA_VERSION: u32 = 1;
+
+/// Default ring-buffer capacity (events) for `--trace-out` /
+/// `--trace-summary` runs. At roughly one span per work item plus a few
+/// instants per request, this holds runs hundreds of times larger than
+/// the CI scenarios before the ring starts dropping its oldest events.
+pub const DEFAULT_TRACE_CAP: usize = 1 << 20;
+
+/// KV-pool event, journaled by [`crate::kvpool::PagedKvPool`] while a
+/// traced run is live and drained by the serving loop after each work
+/// item (the pool has no sim clock; the loop stamps the drain time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvEvent {
+    /// Prefix-cache lookup at admission found `tokens` cached positions.
+    PrefixHit { id: u64, tokens: usize },
+    /// Copy-on-write: a shared block was duplicated before a divergent
+    /// write (one event per logical fork, at the first divergent write).
+    Cow { block: usize },
+    /// A cold prefix block was evicted from the hot arena into the
+    /// spill tier.
+    Spill { key: u64, bytes: usize },
+    /// A tier block was faulted back into the hot arena by a prefix
+    /// lookup that walked off the resident path.
+    Restore { key: u64, bytes: usize },
+    /// Tier GC reclaimed `reclaimed` entries whose content re-entered
+    /// the hot radix index.
+    Gc { reclaimed: usize },
+}
+
+/// Why an arrival was turned away at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Its TTFT deadline had already expired when it reached the queue.
+    DeadlineOnArrival,
+    /// Its priority class's admission-queue cap was full.
+    ClassCap,
+    /// The global admission queue was full and nothing was displaceable.
+    QueueFull,
+}
+
+/// Why an admitted request was dropped before completing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Displaced from the bounded queue by a more urgent arrival.
+    Displaced,
+    /// TTFT deadline expired while still queued (held no KV; cancelled
+    /// outright).
+    DeadlineQueued,
+    /// TTFT deadline expired mid-flight (held KV; drained through a
+    /// normal `Finish` to release it, but counts as shed).
+    DeadlineRunning,
+}
+
+/// One typed trace event. Spans carry `begin_us`/`end_us` on the sim
+/// clock; instants carry a single `at_us`. The µs/J figures on kernel
+/// spans are exactly the values the serving loop charged to its own
+/// counters — the auditor's bit-equality contract depends on that.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// An arrival was offered to the serving loop (counted `submitted`
+    /// whatever becomes of it next).
+    Submit {
+        id: u64,
+        priority: u8,
+        arrival_us: f64,
+        at_us: f64,
+        prompt_tokens: usize,
+        max_new_tokens: usize,
+        deadline_at_us: Option<f64>,
+    },
+    /// Turned away at admission (terminal: counts `rejected`).
+    Reject { id: u64, priority: u8, at_us: f64, reason: RejectReason },
+    /// Admitted then dropped (terminal: counts `shed`).
+    Shed { id: u64, priority: u8, at_us: f64, reason: ShedReason },
+    /// One *executed* prefill slice: the scheduled slice was
+    /// `[sched_start, sched_start + sched_len)`, of which `computed`
+    /// trailing positions actually ran a kernel (the rest were served
+    /// from the prefix cache). `us`/`energy_j` are the dispatched price
+    /// charged to the chosen rail; `npu_quote_us`/`cpu_quote_us` are
+    /// both sides' contention-debited quotes at decision time.
+    PrefillSpan {
+        id: u64,
+        sched_start: usize,
+        sched_len: usize,
+        computed: usize,
+        begin_us: f64,
+        end_us: f64,
+        processor: Processor,
+        us: f64,
+        energy_j: f64,
+        npu_quote_us: f64,
+        cpu_quote_us: f64,
+        inflight: usize,
+        queued_launches: usize,
+        /// Simulated µs the prefix cache saved on this slice
+        /// (full undispatched price minus what was paid).
+        saved_us: f64,
+    },
+    /// A scheduled prefill slice that was *entirely* served from the
+    /// prefix cache — no kernel ran, no clock advanced.
+    CachedSlice { id: u64, at_us: f64, tokens: usize, saved_us: f64 },
+    /// Spill-tier restore serialized before a request's first prefill
+    /// slice: DMA time on the memory rail (`us` is the exact stall the
+    /// loop charged — the time the tier follow-up work wants to overlap
+    /// with compute).
+    RestoreSpan { id: u64, begin_us: f64, end_us: f64, us: f64, energy_j: f64 },
+    /// One *executed* decode batch (`lanes` forwards ran). Same quote
+    /// contract as [`TraceEvent::PrefillSpan`].
+    DecodeSpan {
+        lanes: usize,
+        begin_us: f64,
+        end_us: f64,
+        processor: Processor,
+        us: f64,
+        energy_j: f64,
+        npu_quote_us: f64,
+        cpu_quote_us: f64,
+        inflight: usize,
+        queued_launches: usize,
+    },
+    /// A request sampled its first token (TTFT stops here).
+    FirstToken { id: u64, at_us: f64 },
+    /// A request's prefill was preempted (progress kept).
+    Preempt { id: u64, at_us: f64 },
+    /// A preempted request's prefill resumed where it stopped.
+    Resume { id: u64, at_us: f64 },
+    /// A request's prompt blocks were published into the prefix cache at
+    /// prefill-complete (`blocks` newly published).
+    Publish { id: u64, at_us: f64, blocks: usize },
+    /// A decode lane was evicted from a full batch by a higher-priority
+    /// request (kept its KV and progress; resumes later).
+    Evict { id: u64, at_us: f64 },
+    /// A request completed (terminal: counts `completed`). Shed
+    /// requests never emit `Finish` — their terminal event is
+    /// [`TraceEvent::Shed`].
+    Finish {
+        id: u64,
+        priority: u8,
+        at_us: f64,
+        generated_tokens: usize,
+        ttft_us: f64,
+        queue_wait_us: f64,
+        energy_prefill_j: f64,
+        energy_decode_j: f64,
+        ttft_slo_us: Option<f64>,
+    },
+    /// A KV-pool event, stamped with the sim clock at drain time.
+    Kv { at_us: f64, ev: KvEvent },
+    /// Fleet router placed a request on `replica`. For cache-aware
+    /// routing the score breakdown is `load_us − saved_us − sticky_us`;
+    /// other policies report the chosen replica's load with zero
+    /// cache / stickiness terms.
+    Route { id: u64, replica: usize, at_us: f64, load_us: f64, saved_us: f64, sticky_us: f64 },
+    /// Work stealing moved a queued request between replicas.
+    Steal { id: u64, from: usize, to: usize, at_us: f64 },
+    /// The router turned an arrival away with the whole fleet at its
+    /// queue cap (terminal: counts both `submitted` and `rejected` in
+    /// the merged fleet view).
+    RouterReject { id: u64, at_us: f64 },
+}
+
+impl TraceEvent {
+    /// The latest sim timestamp this event witnesses (span end, or the
+    /// instant itself). The maximum over a run's events *is* its
+    /// makespan — every clock advance in the serving loop is witnessed
+    /// by at least one event.
+    pub fn stamp(&self) -> f64 {
+        match *self {
+            TraceEvent::Submit { at_us, .. }
+            | TraceEvent::Reject { at_us, .. }
+            | TraceEvent::Shed { at_us, .. }
+            | TraceEvent::CachedSlice { at_us, .. }
+            | TraceEvent::FirstToken { at_us, .. }
+            | TraceEvent::Preempt { at_us, .. }
+            | TraceEvent::Resume { at_us, .. }
+            | TraceEvent::Publish { at_us, .. }
+            | TraceEvent::Evict { at_us, .. }
+            | TraceEvent::Finish { at_us, .. }
+            | TraceEvent::Kv { at_us, .. }
+            | TraceEvent::Route { at_us, .. }
+            | TraceEvent::Steal { at_us, .. }
+            | TraceEvent::RouterReject { at_us, .. } => at_us,
+            TraceEvent::PrefillSpan { end_us, .. }
+            | TraceEvent::RestoreSpan { end_us, .. }
+            | TraceEvent::DecodeSpan { end_us, .. } => end_us,
+        }
+    }
+}
+
+/// A recorded event plus the replica (simulated device) it happened on.
+/// Single-server runs record replica 0; [`Tracer::absorb`] re-tags a
+/// child tracer's events with its fleet index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recorded {
+    pub replica: usize,
+    pub ev: TraceEvent,
+}
+
+/// Bounded ring-buffer event sink. [`Tracer::off`] is the zero-cost
+/// no-op sink: `record` returns after one branch and emission sites gate
+/// any extra work (e.g. pricing the rail *not* chosen) on
+/// [`Tracer::on`].
+#[derive(Debug)]
+pub struct Tracer {
+    on: bool,
+    cap: usize,
+    dropped: usize,
+    events: VecDeque<Recorded>,
+}
+
+impl Tracer {
+    /// The disabled sink: records nothing, costs nothing.
+    pub fn off() -> Tracer {
+        Tracer { on: false, cap: 0, dropped: 0, events: VecDeque::new() }
+    }
+
+    /// An enabled sink holding at most `cap` events; at capacity the
+    /// *oldest* event is dropped (and counted) so the tail of a long
+    /// run — the part a timeline debug usually needs — survives.
+    pub fn bounded(cap: usize) -> Tracer {
+        Tracer { on: true, cap: cap.max(1), dropped: 0, events: VecDeque::new() }
+    }
+
+    /// Whether this sink records. Emission sites use this to skip
+    /// computing event payloads (extra quotes, etc.) entirely when off.
+    pub fn on(&self) -> bool {
+        self.on
+    }
+
+    /// A sink of the same capacity and enablement, for running one
+    /// fleet replica; [`Tracer::absorb`] folds it back.
+    pub fn child(&self) -> Tracer {
+        if self.on {
+            Tracer::bounded(self.cap)
+        } else {
+            Tracer::off()
+        }
+    }
+
+    /// Record one event on replica 0 (the single-server path).
+    pub fn record(&mut self, ev: TraceEvent) {
+        self.record_at(0, ev);
+    }
+
+    /// Record one event on an explicit replica (fleet router events).
+    pub fn record_at(&mut self, replica: usize, ev: TraceEvent) {
+        if !self.on {
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(Recorded { replica, ev });
+    }
+
+    /// Fold a replica's tracer into this one, re-tagging its events
+    /// with `replica`. Order is preserved: a fleet trace is the router
+    /// events followed by each replica's events in replica order, which
+    /// is exactly the accumulation order the merged live counters used.
+    pub fn absorb(&mut self, child: Tracer, replica: usize) {
+        if !self.on {
+            return;
+        }
+        self.dropped += child.dropped;
+        for mut r in child.events {
+            r.replica = replica;
+            if self.events.len() == self.cap {
+                self.events.pop_front();
+                self.dropped += 1;
+            }
+            self.events.push_back(r);
+        }
+    }
+
+    /// The recorded events, oldest first.
+    pub fn events(&self) -> &VecDeque<Recorded> {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events the ring discarded to stay within capacity. A nonzero
+    /// count voids the auditor's bit-equality contract (the stream is
+    /// no longer complete), so consumers check it first.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+}
+
+/// One kernel span flattened for summaries: which replica and rail ran
+/// it, what it was, and when.
+struct FlatSpan {
+    replica: usize,
+    rail: &'static str,
+    label: String,
+    begin_us: f64,
+    dur_us: f64,
+}
+
+fn flat_spans(t: &Tracer) -> Vec<FlatSpan> {
+    let mut out = Vec::new();
+    for r in t.events() {
+        match &r.ev {
+            TraceEvent::PrefillSpan { id, sched_start, computed, begin_us, processor, us, .. } => {
+                out.push(FlatSpan {
+                    replica: r.replica,
+                    rail: processor.name(),
+                    label: format!("prefill id={id} [{}..{})", sched_start, sched_start + computed),
+                    begin_us: *begin_us,
+                    dur_us: *us,
+                });
+            }
+            TraceEvent::DecodeSpan { lanes, begin_us, processor, us, .. } => {
+                out.push(FlatSpan {
+                    replica: r.replica,
+                    rail: processor.name(),
+                    label: format!("decode b={lanes}"),
+                    begin_us: *begin_us,
+                    dur_us: *us,
+                });
+            }
+            TraceEvent::RestoreSpan { id, begin_us, us, .. } => {
+                out.push(FlatSpan {
+                    replica: r.replica,
+                    rail: "mem",
+                    label: format!("tier-restore id={id}"),
+                    begin_us: *begin_us,
+                    dur_us: *us,
+                });
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Peak number of requests simultaneously inside the system (submitted
+/// but not yet finished / shed / rejected), derived from the lifecycle
+/// instants. A queue-depth-over-time curve folded to its maximum.
+pub fn peak_inflight(t: &Tracer) -> usize {
+    let mut depth: isize = 0;
+    let mut peak: isize = 0;
+    for r in t.events() {
+        match r.ev {
+            TraceEvent::Submit { .. } => {
+                depth += 1;
+                peak = peak.max(depth);
+            }
+            TraceEvent::Reject { .. } | TraceEvent::Shed { .. } | TraceEvent::Finish { .. } => {
+                depth -= 1;
+            }
+            _ => {}
+        }
+    }
+    peak.max(0) as usize
+}
+
+/// Total µs of tier-restore stall (restores serialize before the first
+/// prefill slice today — the number the restore/compute-overlap
+/// follow-up will drive down).
+pub fn restore_stall_us(t: &Tracer) -> f64 {
+    t.events()
+        .iter()
+        .map(|r| match r.ev {
+            TraceEvent::RestoreSpan { us, .. } => us,
+            _ => 0.0,
+        })
+        .sum()
+}
+
+/// Poor-man's flamegraph for `serve --trace-summary`: per replica ×
+/// rail, the `top_n` widest kernel spans plus rail busy totals — enough
+/// to triage a CI log without opening Perfetto.
+pub fn summary(t: &Tracer, top_n: usize) -> String {
+    use std::collections::BTreeMap;
+    let spans = flat_spans(t);
+    let mut by_rail: BTreeMap<(usize, &'static str), Vec<&FlatSpan>> = BTreeMap::new();
+    for s in &spans {
+        by_rail.entry((s.replica, s.rail)).or_default().push(s);
+    }
+    let makespan = t.events().iter().map(|r| r.ev.stamp()).fold(0.0f64, f64::max);
+    let mut out = format!(
+        "trace summary   : {} event(s), {} dropped, {} span(s), makespan {:.2} ms, \
+         peak {} in flight",
+        t.len(),
+        t.dropped(),
+        spans.len(),
+        makespan / 1e3,
+        peak_inflight(t),
+    );
+    let stall = restore_stall_us(t);
+    if stall > 0.0 {
+        out.push_str(&format!(", restore stall {:.3} ms", stall / 1e3));
+    }
+    for ((replica, rail), mut group) in by_rail {
+        group.sort_by(|a, b| {
+            b.dur_us.partial_cmp(&a.dur_us).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let busy: f64 = group.iter().map(|s| s.dur_us).sum();
+        let frac = if makespan > 0.0 { 100.0 * busy / makespan } else { 0.0 };
+        out.push_str(&format!(
+            "\nreplica {replica} {rail:<4}  : {} span(s), busy {:.2} ms ({frac:.1}% of makespan)",
+            group.len(),
+            busy / 1e3,
+        ));
+        for s in group.iter().take(top_n) {
+            out.push_str(&format!(
+                "\n  {:>10.1} µs  @{:>10.1} µs  {}",
+                s.dur_us, s.begin_us, s.label
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_records_nothing() {
+        let mut t = Tracer::off();
+        t.record(TraceEvent::FirstToken { id: 1, at_us: 10.0 });
+        assert!(!t.on());
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_drops_oldest() {
+        let mut t = Tracer::bounded(2);
+        for i in 0..5 {
+            t.record(TraceEvent::FirstToken { id: i, at_us: i as f64 });
+        }
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 3);
+        let ids: Vec<u64> = t
+            .events()
+            .iter()
+            .map(|r| match r.ev {
+                TraceEvent::FirstToken { id, .. } => id,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![3, 4], "the tail must survive");
+    }
+
+    #[test]
+    fn absorb_retags_replicas() {
+        let mut parent = Tracer::bounded(16);
+        let mut child = parent.child();
+        child.record(TraceEvent::FirstToken { id: 7, at_us: 1.0 });
+        parent.absorb(child, 3);
+        assert_eq!(parent.events()[0].replica, 3);
+    }
+
+    #[test]
+    fn peak_inflight_counts_lifecycle() {
+        let mut t = Tracer::bounded(16);
+        let sub = |id: u64, at: f64| TraceEvent::Submit {
+            id,
+            priority: 0,
+            arrival_us: at,
+            at_us: at,
+            prompt_tokens: 1,
+            max_new_tokens: 1,
+            deadline_at_us: None,
+        };
+        t.record(sub(1, 0.0));
+        t.record(sub(2, 1.0));
+        t.record(sub(3, 2.0));
+        t.record(TraceEvent::Reject {
+            id: 3,
+            priority: 0,
+            at_us: 2.0,
+            reason: RejectReason::QueueFull,
+        });
+        assert_eq!(peak_inflight(&t), 3);
+    }
+}

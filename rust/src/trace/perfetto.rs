@@ -1,0 +1,928 @@
+//! Chrome-trace-event / Perfetto JSON export and standalone replay.
+//!
+//! [`export`] renders a [`Tracer`] as Chrome trace-event JSON (the
+//! format `ui.perfetto.dev` and `chrome://tracing` load directly): one
+//! track per replica × rail (`npu` / `cpu` kernel spans, `mem` for tier
+//! DMA and KV instants, `lifecycle` for request edges, `router` for
+//! fleet decisions) plus per-request async spans from submit to the
+//! terminal edge. Timestamps are the sim clock in µs — the unit the
+//! trace-event format expects.
+//!
+//! The export is *lossless* for the auditor: every event's exact
+//! payload rides in `args` (floats via Rust's shortest-roundtrip
+//! `Display`, 64-bit keys as strings), and the file embeds the
+//! export-time [`audit`](super::audit) summary under `otherData`,
+//! schema-version stamped. [`check`] replays a saved file: full JSON
+//! syntax validation, per-track timestamp monotonicity, event
+//! reconstruction, a fresh audit, and a field-by-field cross-check
+//! against the embedded summary — so `tman trace-check` can vouch for
+//! a trace long after the run that produced it is gone.
+
+use super::audit::{audit, AuditReport};
+use super::{
+    peak_inflight, restore_stall_us, KvEvent, Recorded, RejectReason, ShedReason, TraceEvent,
+    Tracer, TRACE_SCHEMA_VERSION,
+};
+use crate::coordinator::engine::Processor;
+use anyhow::{bail, ensure, Context, Result};
+use std::fmt::Write as _;
+
+/// Thread (track) ids within one replica's process group.
+const TID_NPU: u64 = 1;
+const TID_CPU: u64 = 2;
+const TID_MEM: u64 = 3;
+const TID_LIFE: u64 = 4;
+const TID_ROUTER: u64 = 5;
+
+fn tid_of(p: Processor) -> u64 {
+    match p {
+        Processor::Npu => TID_NPU,
+        Processor::Cpu => TID_CPU,
+    }
+}
+
+fn reject_name(r: RejectReason) -> &'static str {
+    match r {
+        RejectReason::DeadlineOnArrival => "deadline",
+        RejectReason::ClassCap => "class-cap",
+        RejectReason::QueueFull => "queue-full",
+    }
+}
+
+fn reject_of(name: &str) -> Option<RejectReason> {
+    match name {
+        "deadline" => Some(RejectReason::DeadlineOnArrival),
+        "class-cap" => Some(RejectReason::ClassCap),
+        "queue-full" => Some(RejectReason::QueueFull),
+        _ => None,
+    }
+}
+
+fn shed_name(r: ShedReason) -> &'static str {
+    match r {
+        ShedReason::Displaced => "displaced",
+        ShedReason::DeadlineQueued => "deadline-queued",
+        ShedReason::DeadlineRunning => "deadline-running",
+    }
+}
+
+fn shed_of(name: &str) -> Option<ShedReason> {
+    match name {
+        "displaced" => Some(ShedReason::Displaced),
+        "deadline-queued" => Some(ShedReason::DeadlineQueued),
+        "deadline-running" => Some(ShedReason::DeadlineRunning),
+        _ => None,
+    }
+}
+
+/// One complete ("X") kernel span line.
+fn span_line(out: &mut String, pid: usize, tid: u64, name: &str, ts: f64, dur: f64, args: &str) {
+    let _ = write!(
+        out,
+        "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\"ts\":{ts},\"dur\":{dur},\
+         \"name\":\"{name}\",\"cat\":\"kernel\",\"args\":{{{args}}}}}"
+    );
+}
+
+/// One instant ("i") line.
+fn instant_line(out: &mut String, pid: usize, tid: u64, name: &str, ts: f64, args: &str) {
+    let _ = write!(
+        out,
+        "{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{tid},\"ts\":{ts},\"s\":\"t\",\
+         \"name\":\"{name}\",\"cat\":\"event\",\"args\":{{{args}}}}}"
+    );
+}
+
+/// One async begin/end line pairing a request's lifetime span.
+fn async_line(out: &mut String, ph: char, pid: usize, id: u64, ts: f64) {
+    let _ = write!(
+        out,
+        "{{\"ph\":\"{ph}\",\"pid\":{pid},\"tid\":{TID_LIFE},\"ts\":{ts},\
+         \"id\":\"{id}\",\"name\":\"request\",\"cat\":\"request\",\"args\":{{}}}}"
+    );
+}
+
+fn opt_num(key: &str, v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!(",\"{key}\":{x}"),
+        None => String::new(),
+    }
+}
+
+/// The embedded summary: the export-time audit flattened to string
+/// values (Chrome's `otherData` convention), which [`check`] re-derives
+/// and compares verbatim. Class stats pack into one
+/// `prio:completed:generated:p50:p99:misses;…` string.
+fn summary_pairs(rep: &AuditReport, events: usize) -> Vec<(String, String)> {
+    let d = &rep.dispatch;
+    let mut classes = String::new();
+    for c in &rep.class_stats {
+        let _ = write!(
+            classes,
+            "{}:{}:{}:{}:{}:{};",
+            c.priority, c.completed, c.generated_tokens, c.ttft_p50_ms, c.ttft_p99_ms,
+            c.deadline_misses
+        );
+    }
+    vec![
+        ("schema_version".into(), TRACE_SCHEMA_VERSION.to_string()),
+        ("events".into(), events.to_string()),
+        ("dropped".into(), rep.dropped.to_string()),
+        ("makespan_us".into(), rep.makespan_us.to_string()),
+        ("npu_us".into(), d.npu_us.to_string()),
+        ("cpu_us".into(), d.cpu_us.to_string()),
+        ("npu_j".into(), d.npu_j.to_string()),
+        ("cpu_j".into(), d.cpu_j.to_string()),
+        ("prefill_npu".into(), d.prefill_npu.to_string()),
+        ("prefill_cpu".into(), d.prefill_cpu.to_string()),
+        ("decode_npu".into(), d.decode_npu.to_string()),
+        ("decode_cpu".into(), d.decode_cpu.to_string()),
+        ("submitted".into(), rep.submitted.to_string()),
+        ("rejected".into(), rep.rejected.to_string()),
+        ("shed".into(), rep.shed.to_string()),
+        ("completed".into(), rep.completed.to_string()),
+        ("preemptions".into(), rep.preemptions.to_string()),
+        ("resumed".into(), rep.resumed.to_string()),
+        ("decode_evictions".into(), rep.decode_evictions.to_string()),
+        ("decode_batches_executed".into(), rep.decode_batches_executed.to_string()),
+        ("prefix_hits".into(), rep.prefix_hits.to_string()),
+        ("prefix_hit_tokens".into(), rep.prefix_hit_tokens.to_string()),
+        ("tier_spills".into(), rep.tier_spills.to_string()),
+        ("tier_restores".into(), rep.tier_restores.to_string()),
+        ("tier_restored_bytes".into(), rep.tier_restored_bytes.to_string()),
+        ("tier_gc_reclaimed".into(), rep.tier_gc_reclaimed.to_string()),
+        ("tier_restore_us".into(), rep.tier_restore_us.to_string()),
+        ("ttft_p50_ms".into(), rep.ttft_p50_ms.to_string()),
+        ("ttft_p99_ms".into(), rep.ttft_p99_ms.to_string()),
+        ("util_npu".into(), rep.util_npu.to_string()),
+        ("util_cpu".into(), rep.util_cpu.to_string()),
+        ("peak_inflight".into(), rep.peak_inflight.to_string()),
+        ("restore_stall_us".into(), rep.restore_stall_us.to_string()),
+        ("classes".into(), classes),
+    ]
+}
+
+/// Render one recorded event as a single trace-event line (plus, for
+/// lifecycle edges, the async begin/end line that draws the request's
+/// lifetime bar). Metadata lines are emitted separately by [`export`].
+fn event_lines(lines: &mut Vec<String>, r: &Recorded) {
+    let pid = r.replica;
+    let mut s = String::new();
+    match &r.ev {
+        TraceEvent::Submit {
+            id,
+            priority,
+            arrival_us,
+            at_us,
+            prompt_tokens,
+            max_new_tokens,
+            deadline_at_us,
+        } => {
+            instant_line(
+                &mut s,
+                pid,
+                TID_LIFE,
+                "submit",
+                *at_us,
+                &format!(
+                    "\"id\":{id},\"prio\":{priority},\"arrival\":{arrival_us},\
+                     \"prompt\":{prompt_tokens},\"max_new\":{max_new_tokens}{}",
+                    opt_num("deadline", *deadline_at_us)
+                ),
+            );
+            lines.push(std::mem::take(&mut s));
+            async_line(&mut s, 'b', pid, *id, *at_us);
+        }
+        TraceEvent::Reject { id, priority, at_us, reason } => {
+            instant_line(
+                &mut s,
+                pid,
+                TID_LIFE,
+                "reject",
+                *at_us,
+                &format!("\"id\":{id},\"prio\":{priority},\"reason\":\"{}\"", reject_name(*reason)),
+            );
+            lines.push(std::mem::take(&mut s));
+            async_line(&mut s, 'e', pid, *id, *at_us);
+        }
+        TraceEvent::Shed { id, priority, at_us, reason } => {
+            instant_line(
+                &mut s,
+                pid,
+                TID_LIFE,
+                "shed",
+                *at_us,
+                &format!("\"id\":{id},\"prio\":{priority},\"reason\":\"{}\"", shed_name(*reason)),
+            );
+            lines.push(std::mem::take(&mut s));
+            async_line(&mut s, 'e', pid, *id, *at_us);
+        }
+        TraceEvent::PrefillSpan {
+            id,
+            sched_start,
+            sched_len,
+            computed,
+            begin_us,
+            end_us,
+            processor,
+            us,
+            energy_j,
+            npu_quote_us,
+            cpu_quote_us,
+            inflight,
+            queued_launches,
+            saved_us,
+        } => span_line(
+            &mut s,
+            pid,
+            tid_of(*processor),
+            "prefill",
+            *begin_us,
+            end_us - begin_us,
+            &format!(
+                "\"id\":{id},\"start\":{sched_start},\"sched_len\":{sched_len},\
+                 \"computed\":{computed},\"us\":{us},\"j\":{energy_j},\
+                 \"npu_q\":{npu_quote_us},\"cpu_q\":{cpu_quote_us},\
+                 \"inflight\":{inflight},\"queued\":{queued_launches},\
+                 \"saved_us\":{saved_us},\"end_ts\":{end_us}"
+            ),
+        ),
+        TraceEvent::CachedSlice { id, at_us, tokens, saved_us } => instant_line(
+            &mut s,
+            pid,
+            TID_LIFE,
+            "cached-slice",
+            *at_us,
+            &format!("\"id\":{id},\"tokens\":{tokens},\"saved_us\":{saved_us}"),
+        ),
+        TraceEvent::RestoreSpan { id, begin_us, end_us, us, energy_j } => span_line(
+            &mut s,
+            pid,
+            TID_MEM,
+            "tier-restore",
+            *begin_us,
+            end_us - begin_us,
+            &format!("\"id\":{id},\"us\":{us},\"j\":{energy_j},\"end_ts\":{end_us}"),
+        ),
+        TraceEvent::DecodeSpan {
+            lanes,
+            begin_us,
+            end_us,
+            processor,
+            us,
+            energy_j,
+            npu_quote_us,
+            cpu_quote_us,
+            inflight,
+            queued_launches,
+        } => span_line(
+            &mut s,
+            pid,
+            tid_of(*processor),
+            "decode",
+            *begin_us,
+            end_us - begin_us,
+            &format!(
+                "\"lanes\":{lanes},\"us\":{us},\"j\":{energy_j},\
+                 \"npu_q\":{npu_quote_us},\"cpu_q\":{cpu_quote_us},\
+                 \"inflight\":{inflight},\"queued\":{queued_launches},\"end_ts\":{end_us}"
+            ),
+        ),
+        TraceEvent::FirstToken { id, at_us } => {
+            instant_line(&mut s, pid, TID_LIFE, "first-token", *at_us, &format!("\"id\":{id}"))
+        }
+        TraceEvent::Preempt { id, at_us } => {
+            instant_line(&mut s, pid, TID_LIFE, "preempt", *at_us, &format!("\"id\":{id}"))
+        }
+        TraceEvent::Resume { id, at_us } => {
+            instant_line(&mut s, pid, TID_LIFE, "resume", *at_us, &format!("\"id\":{id}"))
+        }
+        TraceEvent::Publish { id, at_us, blocks } => instant_line(
+            &mut s,
+            pid,
+            TID_LIFE,
+            "publish",
+            *at_us,
+            &format!("\"id\":{id},\"blocks\":{blocks}"),
+        ),
+        TraceEvent::Evict { id, at_us } => {
+            instant_line(&mut s, pid, TID_LIFE, "evict", *at_us, &format!("\"id\":{id}"))
+        }
+        TraceEvent::Finish {
+            id,
+            priority,
+            at_us,
+            generated_tokens,
+            ttft_us,
+            queue_wait_us,
+            energy_prefill_j,
+            energy_decode_j,
+            ttft_slo_us,
+        } => {
+            instant_line(
+                &mut s,
+                pid,
+                TID_LIFE,
+                "finish",
+                *at_us,
+                &format!(
+                    "\"id\":{id},\"prio\":{priority},\"gen\":{generated_tokens},\
+                     \"ttft_us\":{ttft_us},\"wait_us\":{queue_wait_us},\
+                     \"pj\":{energy_prefill_j},\"dj\":{energy_decode_j}{}",
+                    opt_num("slo", *ttft_slo_us)
+                ),
+            );
+            lines.push(std::mem::take(&mut s));
+            async_line(&mut s, 'e', pid, *id, *at_us);
+        }
+        TraceEvent::Kv { at_us, ev } => match ev {
+            KvEvent::PrefixHit { id, tokens } => instant_line(
+                &mut s,
+                pid,
+                TID_MEM,
+                "kv-hit",
+                *at_us,
+                &format!("\"id\":{id},\"tokens\":{tokens}"),
+            ),
+            KvEvent::Cow { block } => {
+                instant_line(&mut s, pid, TID_MEM, "kv-cow", *at_us, &format!("\"block\":{block}"))
+            }
+            KvEvent::Spill { key, bytes } => instant_line(
+                &mut s,
+                pid,
+                TID_MEM,
+                "kv-spill",
+                *at_us,
+                &format!("\"key\":\"{key}\",\"bytes\":{bytes}"),
+            ),
+            KvEvent::Restore { key, bytes } => instant_line(
+                &mut s,
+                pid,
+                TID_MEM,
+                "kv-restore",
+                *at_us,
+                &format!("\"key\":\"{key}\",\"bytes\":{bytes}"),
+            ),
+            KvEvent::Gc { reclaimed } => instant_line(
+                &mut s,
+                pid,
+                TID_MEM,
+                "kv-gc",
+                *at_us,
+                &format!("\"reclaimed\":{reclaimed}"),
+            ),
+        },
+        TraceEvent::Route { id, replica, at_us, load_us, saved_us, sticky_us } => instant_line(
+            &mut s,
+            *replica,
+            TID_ROUTER,
+            "route",
+            *at_us,
+            &format!(
+                "\"id\":{id},\"load_us\":{load_us},\"saved_us\":{saved_us},\
+                 \"sticky_us\":{sticky_us}"
+            ),
+        ),
+        TraceEvent::Steal { id, from, to, at_us } => instant_line(
+            &mut s,
+            *to,
+            TID_ROUTER,
+            "steal",
+            *at_us,
+            &format!("\"id\":{id},\"from\":{from},\"to\":{to}"),
+        ),
+        TraceEvent::RouterReject { id, at_us } => {
+            instant_line(&mut s, pid, TID_ROUTER, "router-reject", *at_us, &format!("\"id\":{id}"))
+        }
+    }
+    lines.push(s);
+}
+
+/// Export a tracer as Chrome-trace / Perfetto JSON. One event per line
+/// inside `traceEvents`, summary embedded under `otherData`.
+pub fn export(t: &Tracer) -> String {
+    let mut rep = audit(t.events(), t.dropped());
+    rep.peak_inflight = peak_inflight(t);
+    rep.restore_stall_us = restore_stall_us(t);
+    let mut lines: Vec<String> = Vec::with_capacity(t.len() + 16);
+    // Name the process/track grid up front so Perfetto renders labeled
+    // rails even for replicas whose first event comes late.
+    let mut replicas: Vec<usize> = t.events().iter().map(|r| r.replica).collect();
+    replicas.sort_unstable();
+    replicas.dedup();
+    for &pid in &replicas {
+        lines.push(format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"name\":\"process_name\",\
+             \"args\":{{\"name\":\"replica {pid}\"}}}}"
+        ));
+        for (tid, name) in [
+            (TID_NPU, "npu"),
+            (TID_CPU, "cpu"),
+            (TID_MEM, "mem"),
+            (TID_LIFE, "lifecycle"),
+            (TID_ROUTER, "router"),
+        ] {
+            lines.push(format!(
+                "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"{name}\"}}}}"
+            ));
+        }
+    }
+    for r in t.events() {
+        event_lines(&mut lines, r);
+    }
+    let mut out = String::with_capacity(lines.iter().map(|l| l.len() + 2).sum::<usize>() + 2048);
+    out.push_str("{\n\"displayTimeUnit\": \"ms\",\n\"otherData\": {");
+    for (i, (k, v)) in summary_pairs(&rep, t.len()).iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "\"{k}\":\"{v}\"");
+    }
+    out.push_str("},\n\"traceEvents\": [\n");
+    for (i, l) in lines.iter().enumerate() {
+        out.push_str(l);
+        if i + 1 < lines.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]}\n");
+    out
+}
+
+// ---- minimal JSON syntax validator (no deps, recursion depth is the
+// document's nesting depth — bounded at 4 for our own exports) ----
+
+struct Json<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Json<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        ensure!(self.peek() == Some(c), "expected '{}' at byte {}", c as char, self.i);
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<()> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string(),
+            Some(b't') => self.lit("true"),
+            Some(b'f') => self.lit("false"),
+            Some(b'n') => self.lit("null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.i),
+        }
+    }
+
+    fn lit(&mut self, s: &str) -> Result<()> {
+        ensure!(self.b[self.i..].starts_with(s.as_bytes()), "bad literal at byte {}", self.i);
+        self.i += s.len();
+        Ok(())
+    }
+
+    fn string(&mut self) -> Result<()> {
+        self.eat(b'"')?;
+        while let Some(c) = self.peek() {
+            self.i += 1;
+            match c {
+                b'"' => return Ok(()),
+                b'\\' => {
+                    ensure!(self.peek().is_some(), "truncated escape at byte {}", self.i);
+                    self.i += 1;
+                }
+                _ => {}
+            }
+        }
+        bail!("unterminated string");
+    }
+
+    fn number(&mut self) -> Result<()> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        ensure!(self.i > start, "empty number at byte {start}");
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .with_context(|| format!("malformed number at byte {start}"))?;
+        Ok(())
+    }
+
+    fn object(&mut self) -> Result<()> {
+        self.eat(b'{')?;
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<()> {
+        self.eat(b'[')?;
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.i),
+            }
+        }
+    }
+}
+
+/// Full-syntax JSON validation of `text` (value + trailing whitespace).
+pub fn validate_json(text: &str) -> Result<()> {
+    let mut p = Json { b: text.as_bytes(), i: 0 };
+    p.value()?;
+    p.ws();
+    ensure!(p.i == p.b.len(), "trailing garbage at byte {}", p.i);
+    Ok(())
+}
+
+// ---- line-field extraction for the replay parser (exports write one
+// event per line with fixed, non-escaped key names) ----
+
+fn num_field(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = &line[at..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E')))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn str_field(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":\"");
+    let at = line.find(&pat)? + pat.len();
+    let rest = &line[at..];
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+fn u_field(line: &str, key: &str) -> Option<usize> {
+    num_field(line, key).map(|x| x as usize)
+}
+
+fn id_field(line: &str, key: &str) -> Option<u64> {
+    num_field(line, key).map(|x| x as u64)
+}
+
+/// What [`check`] verified, for the CLI to print.
+#[derive(Debug)]
+pub struct CheckReport {
+    pub events: usize,
+    pub tracks: usize,
+    pub report: AuditReport,
+}
+
+fn rebuild_event(line: &str, name: &str, tid: u64, ts: f64) -> Result<TraceEvent> {
+    let want = |k: &str| -> Result<f64> {
+        num_field(line, k).with_context(|| format!("event '{name}' missing arg '{k}'"))
+    };
+    let wantu = |k: &str| -> Result<usize> { Ok(want(k)? as usize) };
+    let wantid = |k: &str| -> Result<u64> { Ok(want(k)? as u64) };
+    let wantkey = |k: &str| -> Result<u64> {
+        str_field(line, k)
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("event '{name}' missing key arg '{k}'"))
+    };
+    let proc_of = |tid: u64| -> Result<Processor> {
+        match tid {
+            TID_NPU => Ok(Processor::Npu),
+            TID_CPU => Ok(Processor::Cpu),
+            other => bail!("kernel span on non-rail track tid={other}"),
+        }
+    };
+    Ok(match name {
+        "submit" => TraceEvent::Submit {
+            id: wantid("id")?,
+            priority: want("prio")? as u8,
+            arrival_us: want("arrival")?,
+            at_us: ts,
+            prompt_tokens: wantu("prompt")?,
+            max_new_tokens: wantu("max_new")?,
+            deadline_at_us: num_field(line, "deadline"),
+        },
+        "reject" => TraceEvent::Reject {
+            id: wantid("id")?,
+            priority: want("prio")? as u8,
+            at_us: ts,
+            reason: str_field(line, "reason")
+                .as_deref()
+                .and_then(reject_of)
+                .context("bad reject reason")?,
+        },
+        "shed" => TraceEvent::Shed {
+            id: wantid("id")?,
+            priority: want("prio")? as u8,
+            at_us: ts,
+            reason: str_field(line, "reason")
+                .as_deref()
+                .and_then(shed_of)
+                .context("bad shed reason")?,
+        },
+        "prefill" => TraceEvent::PrefillSpan {
+            id: wantid("id")?,
+            sched_start: wantu("start")?,
+            sched_len: wantu("sched_len")?,
+            computed: wantu("computed")?,
+            begin_us: ts,
+            end_us: want("end_ts")?,
+            processor: proc_of(tid)?,
+            us: want("us")?,
+            energy_j: want("j")?,
+            npu_quote_us: want("npu_q")?,
+            cpu_quote_us: want("cpu_q")?,
+            inflight: wantu("inflight")?,
+            queued_launches: wantu("queued")?,
+            saved_us: want("saved_us")?,
+        },
+        "cached-slice" => TraceEvent::CachedSlice {
+            id: wantid("id")?,
+            at_us: ts,
+            tokens: wantu("tokens")?,
+            saved_us: want("saved_us")?,
+        },
+        "tier-restore" => TraceEvent::RestoreSpan {
+            id: wantid("id")?,
+            begin_us: ts,
+            end_us: want("end_ts")?,
+            us: want("us")?,
+            energy_j: want("j")?,
+        },
+        "decode" => TraceEvent::DecodeSpan {
+            lanes: wantu("lanes")?,
+            begin_us: ts,
+            end_us: want("end_ts")?,
+            processor: proc_of(tid)?,
+            us: want("us")?,
+            energy_j: want("j")?,
+            npu_quote_us: want("npu_q")?,
+            cpu_quote_us: want("cpu_q")?,
+            inflight: wantu("inflight")?,
+            queued_launches: wantu("queued")?,
+        },
+        "first-token" => TraceEvent::FirstToken { id: wantid("id")?, at_us: ts },
+        "preempt" => TraceEvent::Preempt { id: wantid("id")?, at_us: ts },
+        "resume" => TraceEvent::Resume { id: wantid("id")?, at_us: ts },
+        "publish" => {
+            TraceEvent::Publish { id: wantid("id")?, at_us: ts, blocks: wantu("blocks")? }
+        }
+        "evict" => TraceEvent::Evict { id: wantid("id")?, at_us: ts },
+        "finish" => TraceEvent::Finish {
+            id: wantid("id")?,
+            priority: want("prio")? as u8,
+            at_us: ts,
+            generated_tokens: wantu("gen")?,
+            ttft_us: want("ttft_us")?,
+            queue_wait_us: want("wait_us")?,
+            energy_prefill_j: want("pj")?,
+            energy_decode_j: want("dj")?,
+            ttft_slo_us: num_field(line, "slo"),
+        },
+        "kv-hit" => TraceEvent::Kv {
+            at_us: ts,
+            ev: KvEvent::PrefixHit { id: wantid("id")?, tokens: wantu("tokens")? },
+        },
+        "kv-cow" => TraceEvent::Kv { at_us: ts, ev: KvEvent::Cow { block: wantu("block")? } },
+        "kv-spill" => TraceEvent::Kv {
+            at_us: ts,
+            ev: KvEvent::Spill { key: wantkey("key")?, bytes: wantu("bytes")? },
+        },
+        "kv-restore" => TraceEvent::Kv {
+            at_us: ts,
+            ev: KvEvent::Restore { key: wantkey("key")?, bytes: wantu("bytes")? },
+        },
+        "kv-gc" => TraceEvent::Kv { at_us: ts, ev: KvEvent::Gc { reclaimed: wantu("reclaimed")? } },
+        "route" => TraceEvent::Route {
+            id: wantid("id")?,
+            replica: 0, // re-tagged from pid by the caller
+            at_us: ts,
+            load_us: want("load_us")?,
+            saved_us: want("saved_us")?,
+            sticky_us: want("sticky_us")?,
+        },
+        "steal" => TraceEvent::Steal {
+            id: wantid("id")?,
+            from: wantu("from")?,
+            to: wantu("to")?,
+            at_us: ts,
+        },
+        "router-reject" => TraceEvent::RouterReject { id: wantid("id")?, at_us: ts },
+        other => bail!("unknown event name '{other}' — schema drift?"),
+    })
+}
+
+/// Replay a saved trace file: validate the JSON, check per-track
+/// timestamp monotonicity, rebuild the event stream, audit it afresh,
+/// and cross-check every summary figure the exporter embedded.
+/// Schema-version gated: a stamp other than [`TRACE_SCHEMA_VERSION`]
+/// (or a missing one) fails loudly instead of mis-deriving.
+pub fn check(text: &str) -> Result<CheckReport> {
+    validate_json(text).context("trace file is not valid JSON")?;
+    let version = str_field(text, "schema_version")
+        .context("trace has no otherData.schema_version stamp — not a tman trace?")?;
+    ensure!(
+        version == TRACE_SCHEMA_VERSION.to_string(),
+        "trace schema version {version} != supported {TRACE_SCHEMA_VERSION} — \
+         re-export with this build instead of replaying a stale file"
+    );
+    let body = text
+        .split_once("\"traceEvents\": [")
+        .context("no traceEvents array")?
+        .1;
+    let mut events: Vec<Recorded> = Vec::new();
+    let mut last_ts: std::collections::HashMap<(usize, u64), f64> =
+        std::collections::HashMap::new();
+    let mut tracks = std::collections::HashSet::new();
+    for line in body.lines() {
+        let line = line.trim_end_matches(',');
+        if !line.starts_with('{') {
+            continue;
+        }
+        let ph = str_field(line, "ph").context("event without ph")?;
+        if ph == "M" || ph == "b" || ph == "e" {
+            continue; // metadata + async lifetime bars: presentation only
+        }
+        ensure!(ph == "X" || ph == "i", "unexpected event phase '{ph}'");
+        let pid = u_field(line, "pid").context("event without pid")?;
+        let tid = id_field(line, "tid").context("event without tid")?;
+        let ts = num_field(line, "ts").context("event without ts")?;
+        let name = str_field(line, "name").context("event without name")?;
+        tracks.insert((pid, tid));
+        if let Some(&prev) = last_ts.get(&(pid, tid)) {
+            ensure!(
+                ts >= prev,
+                "track (replica {pid}, tid {tid}): timestamp {ts} < predecessor {prev} — \
+                 non-monotone trace"
+            );
+        }
+        last_ts.insert((pid, tid), ts);
+        let mut ev = rebuild_event(line, &name, tid, ts)
+            .with_context(|| format!("rebuilding '{name}' from: {line}"))?;
+        if let TraceEvent::Route { replica, .. } = &mut ev {
+            *replica = pid;
+        }
+        events.push(Recorded { replica: pid, ev });
+    }
+    let declared: usize = str_field(text, "events")
+        .and_then(|s| s.parse().ok())
+        .context("otherData.events missing")?;
+    ensure!(
+        declared == events.len(),
+        "otherData.events says {declared} but {} event(s) parsed",
+        events.len()
+    );
+    let dropped = str_field(text, "dropped")
+        .and_then(|s| s.parse().ok())
+        .context("otherData.dropped missing")?;
+    let mut rep = audit(events.iter(), dropped);
+    // Derived metrics need the stream, not a tracer; recompute inline.
+    let mut t = Tracer::bounded(events.len().max(1));
+    for r in &events {
+        t.record_at(r.replica, r.ev.clone());
+    }
+    rep.peak_inflight = peak_inflight(&t);
+    rep.restore_stall_us = restore_stall_us(&t);
+    // Cross-check: re-render the summary from the replayed audit and
+    // compare each field verbatim against what the exporter embedded
+    // (float Display round-trips, so string equality is bit equality).
+    for (k, v) in summary_pairs(&rep, events.len()) {
+        let embedded = str_field(text, &k)
+            .with_context(|| format!("otherData.{k} missing from trace"))?;
+        ensure!(
+            embedded == v,
+            "replayed audit diverges from embedded summary at '{k}': \
+             file says {embedded}, replay derives {v}"
+        );
+    }
+    Ok(CheckReport { events: events.len(), tracks: tracks.len(), report: rep })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validator_accepts_and_rejects() {
+        assert!(validate_json("{\"a\": [1, 2.5, -3e-2], \"b\": {\"c\": \"x\"}}").is_ok());
+        assert!(validate_json("[true, false, null]").is_ok());
+        assert!(validate_json("{\"a\": }").is_err());
+        assert!(validate_json("{\"a\": 1} trailing").is_err());
+        assert!(validate_json("{\"a\": 1,}").is_err());
+    }
+
+    #[test]
+    fn export_roundtrips_through_check() {
+        let mut t = Tracer::bounded(64);
+        t.record(TraceEvent::Submit {
+            id: 1,
+            priority: 0,
+            arrival_us: 0.0,
+            at_us: 0.0,
+            prompt_tokens: 8,
+            max_new_tokens: 4,
+            deadline_at_us: Some(1500.0),
+        });
+        t.record(TraceEvent::PrefillSpan {
+            id: 1,
+            sched_start: 0,
+            sched_len: 8,
+            computed: 8,
+            begin_us: 0.0,
+            end_us: 103.25,
+            processor: Processor::Npu,
+            us: 103.25,
+            energy_j: 0.001953125,
+            npu_quote_us: 103.25,
+            cpu_quote_us: 250.5,
+            inflight: 1,
+            queued_launches: 0,
+            saved_us: 0.0,
+        });
+        t.record(TraceEvent::FirstToken { id: 1, at_us: 103.25 });
+        t.record(TraceEvent::Finish {
+            id: 1,
+            priority: 0,
+            at_us: 150.0,
+            generated_tokens: 4,
+            ttft_us: 103.25,
+            queue_wait_us: 0.0,
+            energy_prefill_j: 0.001953125,
+            energy_decode_j: 0.0005,
+            ttft_slo_us: None,
+        });
+        let json = export(&t);
+        let rep = check(&json).expect("round trip");
+        assert_eq!(rep.events, 4);
+        assert_eq!(rep.report.completed, 1);
+        assert_eq!(rep.report.submitted, 1);
+        assert_eq!(rep.report.makespan_us.to_bits(), 150.0f64.to_bits());
+    }
+
+    #[test]
+    fn check_rejects_wrong_schema_version() {
+        let t = Tracer::bounded(4);
+        let json = export(&t).replace("\"schema_version\":\"1\"", "\"schema_version\":\"0\"");
+        let err = check(&json).unwrap_err().to_string();
+        assert!(err.contains("schema version"), "got: {err}");
+    }
+
+    #[test]
+    fn check_rejects_non_monotone_tracks() {
+        let mut t = Tracer::bounded(8);
+        t.record(TraceEvent::FirstToken { id: 1, at_us: 100.0 });
+        t.record(TraceEvent::FirstToken { id: 2, at_us: 50.0 });
+        let json = export(&t);
+        let err = check(&json).unwrap_err().to_string();
+        assert!(err.contains("non-monotone"), "got: {err}");
+    }
+}

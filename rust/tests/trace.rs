@@ -1,0 +1,272 @@
+//! Property suite for the sim-clock tracer: across fuzzed overload, tier,
+//! dispatch, fleet and closed-loop scenarios, (a) the trace auditor must
+//! re-derive every headline metric bit-for-bit from the event stream
+//! alone, (b) tracing must be a *pure observer* — a traced run and an
+//! untraced run of the same scenario produce byte-identical reports,
+//! decoded texts and ledgers — and (c) the Perfetto export must survive a
+//! check round trip (valid JSON, schema stamp, per-track monotone
+//! timestamps, embedded metrics matching the re-derived ones).
+
+use tman::coordinator::engine::{DispatchMode, Engine};
+use tman::coordinator::fleet::{Fleet, RoutingPolicy};
+use tman::coordinator::server::{
+    synthetic_trace, ClosedLoopOpts, OverloadPolicy, ServeOpts, Server, TraceProfile, TraceRequest,
+};
+use tman::kvpool::KvPoolConfig;
+use tman::load::{ArrivalProcess, LoadSpec};
+use tman::model::config::ModelConfig;
+use tman::model::weights::random_transformer;
+use tman::npu::config::SocConfig;
+use tman::trace::{audit, perfetto, Tracer, DEFAULT_TRACE_CAP};
+
+const MODEL_SEED: u64 = 7;
+const REQUESTS: usize = 24;
+
+fn plain_engine(kv_slots: usize) -> Engine {
+    let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
+    Engine::reference(model, SocConfig::oneplus12(), 16, 4, kv_slots).expect("engine")
+}
+
+/// Paged + prefix-cached engine with a tight hot arena backed by a 10×
+/// spill tier — the geometry that forces spills, restores and GC.
+fn tiered_engine() -> Engine {
+    let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
+    let hot_blocks = 2 * model.cfg.max_seq / 16;
+    let kv = KvPoolConfig::paged(hot_blocks, 16, true).with_tier(10 * hot_blocks);
+    Engine::reference_paged(model, SocConfig::oneplus12(), 16, 4, kv).expect("engine")
+}
+
+fn prefix_engines(n: usize) -> Vec<Engine> {
+    (0..n)
+        .map(|_| {
+            let model = random_transformer(&ModelConfig::tiny(), MODEL_SEED);
+            let max_seq = model.cfg.max_seq;
+            let kv = KvPoolConfig::paged(2 * max_seq / 16, 16, true);
+            Engine::reference_paged(model, SocConfig::oneplus12(), 16, 4, kv).expect("engine")
+        })
+        .collect()
+}
+
+/// One fuzzed single-server scenario: a name, an engine factory (called
+/// once per arm so both arms start from identical state), a trace, opts.
+struct Scenario {
+    name: &'static str,
+    engine: fn() -> Engine,
+    trace: Vec<TraceRequest>,
+    opts: ServeOpts,
+}
+
+fn scenarios(seed: u64) -> Vec<Scenario> {
+    let shed_policy = OverloadPolicy {
+        queue_cap: Some(3),
+        class_caps: vec![(4, 2)],
+        shed: true,
+    };
+    // A flash crowd of interactive requests under a tight SLO with a
+    // bounded, class-capped queue: rejects (all three reasons reachable),
+    // displacement sheds, deadline sheds, decode evictions.
+    let crowd_profile = TraceProfile { short_per_4: 4, ..TraceProfile::tiny() };
+    let crowd = LoadSpec::new(ArrivalProcess::flash_crowd(300.0), crowd_profile)
+        .with_slo(4_000.0)
+        .trace(REQUESTS, seed);
+    // Bursty arrivals over a shared 64-byte system prompt on the tiered
+    // engine: prefix hits, cached slices, publishes, COW, spills,
+    // restores (serialized restore spans) and tier GC.
+    let tier = LoadSpec::new(
+        ArrivalProcess::bursty(200.0),
+        TraceProfile::tiny().with_shared_prefix(64),
+    )
+    .trace(REQUESTS, seed ^ 0xA5A5);
+    // A plain mixed trace priced on both rails: every span carries both
+    // quotes and the chosen processor varies work item by work item.
+    let mixed = synthetic_trace(REQUESTS, seed ^ 0x5A5A, &TraceProfile::tiny());
+    vec![
+        Scenario {
+            name: "overload-shed",
+            engine: || plain_engine(6),
+            trace: crowd,
+            opts: ServeOpts { max_batch: 4, policy: shed_policy, ..Default::default() },
+        },
+        Scenario {
+            name: "tier-warm",
+            engine: tiered_engine,
+            trace: tier,
+            opts: ServeOpts { max_batch: 4, ..Default::default() },
+        },
+        Scenario {
+            name: "dispatch-auto",
+            engine: || plain_engine(6),
+            trace: mixed,
+            opts: ServeOpts { max_batch: 4, dispatch: DispatchMode::Auto, ..Default::default() },
+        },
+    ]
+}
+
+/// The three properties every traced run must satisfy, given the traced
+/// metrics, the untraced control arm, and the tracer.
+fn assert_trace_properties(
+    name: &str,
+    untraced: &tman::coordinator::metrics::FleetMetrics,
+    traced: &tman::coordinator::metrics::FleetMetrics,
+    tracer: &Tracer,
+) {
+    // (b) pure observer: byte-identical report, texts, ledger.
+    assert_eq!(
+        untraced.report(),
+        traced.report(),
+        "[{name}] tracing perturbed the run: reports differ"
+    );
+    let texts = |m: &tman::coordinator::metrics::FleetMetrics| {
+        m.completions.iter().map(|c| (c.id, c.text.clone())).collect::<Vec<_>>()
+    };
+    assert_eq!(texts(untraced), texts(traced), "[{name}] tracing perturbed decoded texts");
+
+    // (a) the auditor re-derives the live counters bit-for-bit.
+    let rep = audit::verify(tracer, traced)
+        .unwrap_or_else(|e| panic!("[{name}] trace audit diverged: {e:#}"));
+    assert!(!rep.headline().is_empty());
+
+    // (c) export → check round trip: valid JSON, monotone tracks, and the
+    // checker's re-derived report prints the same headline.
+    let json = perfetto::export(tracer);
+    perfetto::validate_json(&json)
+        .unwrap_or_else(|e| panic!("[{name}] export is not valid JSON: {e:#}"));
+    let checked = perfetto::check(&json)
+        .unwrap_or_else(|e| panic!("[{name}] exported trace failed its own check: {e:#}"));
+    assert!(checked.events > 0, "[{name}] traced run exported no events");
+    assert_eq!(
+        checked.report.headline(),
+        rep.headline(),
+        "[{name}] metrics re-derived from the JSON diverge from the live-audited ones"
+    );
+}
+
+#[test]
+fn fuzzed_single_server_scenarios_audit_bit_equal_and_observe_purely() {
+    for seed in [1u64, 9, 0xBEEF] {
+        for sc in scenarios(seed) {
+            let untraced = Server::new((sc.engine)(), sc.opts.clone())
+                .run(&sc.trace)
+                .unwrap_or_else(|e| panic!("[{}] untraced serve: {e:#}", sc.name));
+            let mut tracer = Tracer::bounded(DEFAULT_TRACE_CAP);
+            let traced = Server::new((sc.engine)(), sc.opts.clone())
+                .run_traced(&sc.trace, &mut tracer)
+                .unwrap_or_else(|e| panic!("[{}] traced serve: {e:#}", sc.name));
+            assert!(
+                !tracer.is_empty(),
+                "[{}] a non-empty trace must record events",
+                sc.name
+            );
+            assert_trace_properties(sc.name, &untraced, &traced, &tracer);
+        }
+    }
+}
+
+#[test]
+fn fuzzed_fleet_scenarios_audit_bit_equal_and_observe_purely() {
+    for seed in [2u64, 0xF00D] {
+        // Small per-replica queues under a flash crowd: router rejections
+        // and steals land on the router track alongside routed placements.
+        let trace = LoadSpec::new(ArrivalProcess::flash_crowd(250.0), TraceProfile::tiny())
+            .trace(REQUESTS, seed);
+        let opts = ServeOpts {
+            max_batch: 4,
+            policy: OverloadPolicy { queue_cap: Some(2), class_caps: vec![], shed: false },
+            ..Default::default()
+        };
+        for routing in [RoutingPolicy::RoundRobin, RoutingPolicy::CacheAware] {
+            let untraced = Fleet::new(prefix_engines(3), routing, opts.clone())
+                .expect("fleet")
+                .run(&trace)
+                .expect("untraced fleet run");
+            let mut tracer = Tracer::bounded(DEFAULT_TRACE_CAP);
+            let traced = Fleet::new(prefix_engines(3), routing, opts.clone())
+                .expect("fleet")
+                .run_traced(&trace, &mut tracer)
+                .expect("traced fleet run");
+            assert_eq!(untraced.steals, traced.steals, "tracing perturbed stealing");
+            assert_eq!(
+                untraced.router_rejected, traced.router_rejected,
+                "tracing perturbed router admission"
+            );
+            assert_trace_properties(
+                routing.name(),
+                &untraced.merged,
+                &traced.merged,
+                &tracer,
+            );
+        }
+    }
+}
+
+#[test]
+fn closed_loop_traced_audits_bit_equal() {
+    let profile = TraceProfile::tiny();
+    let opts = ClosedLoopOpts {
+        total: 16,
+        concurrency: 4,
+        think_us: 500.0,
+        seed: 11,
+        think_process: None,
+    };
+    let serve = ServeOpts { max_batch: 4, ..Default::default() };
+
+    let untraced = Server::new(plain_engine(6), serve.clone())
+        .run_closed_loop(&opts, &profile)
+        .expect("untraced closed loop");
+    let mut tracer = Tracer::bounded(DEFAULT_TRACE_CAP);
+    let traced = Server::new(plain_engine(6), serve.clone())
+        .run_closed_loop_traced(&opts, &profile, &mut tracer)
+        .expect("traced closed loop");
+    assert_trace_properties("closed-loop", &untraced, &traced, &tracer);
+
+    // And across a fleet: the static client partition traces purely as
+    // per-replica serving streams — no router events, same contract.
+    let untraced = Fleet::new(prefix_engines(3), RoutingPolicy::CacheAware, serve.clone())
+        .expect("fleet")
+        .run_closed_loop(&opts, &profile)
+        .expect("untraced fleet closed loop");
+    let mut tracer = Tracer::bounded(DEFAULT_TRACE_CAP);
+    let traced = Fleet::new(prefix_engines(3), RoutingPolicy::CacheAware, serve)
+        .expect("fleet")
+        .run_closed_loop_traced(&opts, &profile, &mut tracer)
+        .expect("traced fleet closed loop");
+    assert_trace_properties("fleet-closed-loop", &untraced.merged, &traced.merged, &tracer);
+}
+
+#[test]
+fn trace_summary_names_rails_and_widest_spans() {
+    let mut tracer = Tracer::bounded(DEFAULT_TRACE_CAP);
+    let trace = synthetic_trace(8, 3, &TraceProfile::tiny());
+    Server::new(plain_engine(4), ServeOpts { max_batch: 2, ..Default::default() })
+        .run_traced(&trace, &mut tracer)
+        .expect("serve");
+    let s = tman::trace::summary(&tracer, 3);
+    assert!(s.contains("trace summary"), "summary header missing:\n{s}");
+    assert!(s.contains("replica 0 npu"), "NPU rail line missing:\n{s}");
+    assert!(s.contains("decode b="), "widest-span labels missing:\n{s}");
+}
+
+#[test]
+fn a_saturated_ring_voids_the_audit_contract() {
+    let mut tracer = Tracer::bounded(8);
+    let trace = synthetic_trace(12, 5, &TraceProfile::tiny());
+    let metrics = Server::new(plain_engine(4), ServeOpts::default())
+        .run_traced(&trace, &mut tracer)
+        .expect("serve");
+    assert!(tracer.dropped() > 0, "a 12-request run must overflow an 8-event ring");
+    let err = audit::verify(&tracer, &metrics)
+        .expect_err("an incomplete stream must fail the audit, not silently mis-derive");
+    assert!(err.to_string().contains("dropped"), "unexpected error: {err:#}");
+}
+
+#[test]
+fn empty_run_reports_em_dash_percentiles() {
+    let metrics =
+        Server::new(plain_engine(2), ServeOpts::default()).run(&[]).expect("empty serve");
+    let report = metrics.report();
+    assert!(
+        report.contains("p50 —, p99 —"),
+        "empty percentile samples must print — placeholders:\n{report}"
+    );
+}
